@@ -1,0 +1,58 @@
+//! Quickstart — the Listing-1 flow end to end on a live local stack.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Boots the cloud service, deploys a local endpoint (agent → manager →
+//! workers), registers a function, runs it, and fetches the result —
+//! exactly the `FuncXClient` flow from the paper's Listing 1.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use funcx::common::config::{EndpointConfig, ServiceConfig};
+use funcx::common::task::Payload;
+use funcx::endpoint::{link, EndpointBuilder};
+use funcx::sdk::FuncXClient;
+use funcx::serialize::Value;
+use funcx::service::FuncXService;
+
+fn main() {
+    // --- the cloud-hosted service + an authenticated client -------------
+    let svc = Arc::new(FuncXService::new(ServiceConfig::default()));
+    let (_user, token) = svc.bootstrap_user("you@example.org");
+    let fc = FuncXClient::new(svc.clone(), token);
+
+    // --- deploy an endpoint (the funcX agent) on "this laptop" ----------
+    let endpoint_id = fc.register_endpoint("laptop", "my dev box").unwrap();
+    let (forwarder_side, agent_side) = link();
+    let agent = EndpointBuilder::new()
+        .config(EndpointConfig { min_nodes: 1, workers_per_node: 4, ..Default::default() })
+        .heartbeat_period(0.1)
+        .start(agent_side);
+    let forwarder = svc.connect_endpoint(endpoint_id, forwarder_side).unwrap();
+    println!("endpoint {endpoint_id} online");
+
+    // --- register + run a function (Listing 1) --------------------------
+    let func_id = fc.register_function("process_stills", Payload::Echo).unwrap();
+    let input_data = Value::map([
+        ("inputs", Value::Str("image_0001.h5".into())),
+        ("phil", Value::Str("params.phil".into())),
+    ]);
+    let task_id = fc.run(func_id, endpoint_id, &input_data).unwrap();
+    let res = fc.get_result(task_id, Duration::from_secs(10)).unwrap();
+    println!("result: {res:?}");
+    assert_eq!(res, input_data);
+
+    // --- batch submission (§4.6) ----------------------------------------
+    let inputs: Vec<Value> = (0..32).map(Value::Int).collect();
+    let tasks = fc.run_batch(func_id, endpoint_id, &inputs).unwrap();
+    let results = fc.get_batch_results(&tasks, Duration::from_secs(30)).unwrap();
+    assert_eq!(results, inputs);
+    println!("batch of {} tasks OK", results.len());
+
+    forwarder.shutdown();
+    agent.join();
+    println!("quickstart OK");
+}

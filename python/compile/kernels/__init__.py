@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels for the funcX compute payloads.
+
+Each kernel is authored TPU-style (VMEM-sized blocks, MXU-shaped matmul
+tiles, BlockSpec HBM<->VMEM schedules) but lowered with ``interpret=True``
+so the resulting HLO runs on the CPU PJRT plugin that the Rust runtime
+loads. ``ref.py`` holds the pure-jnp oracles used by pytest.
+"""
+
+from .matmul import mlp_block, tiled_matmul  # noqa: F401
+from .reduce import segment_sum  # noqa: F401
+from .stencil import peak_detect  # noqa: F401

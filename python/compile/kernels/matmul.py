@@ -1,0 +1,89 @@
+"""Tiled matmul (+bias +GELU) Pallas kernel — the AlphaFold-as-a-service
+surrogate's compute hot-spot.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid walks (M/bm,
+N/bn, K/bk); for each (i, j) output tile the K dimension is streamed in
+bk-sized slabs so the three resident blocks (x, w, out) fit comfortably in
+VMEM (3 x 128x128 f32 = 192 KiB of ~16 MB/core). Block shapes default to
+128x128 — the MXU systolic array's native tile — so a real-TPU lowering
+would hit full MXU occupancy; on CPU we run interpret=True, which executes
+the same schedule with numpy.
+
+The output block index map ignores k, so the same (i, j) block stays
+resident across the K loop and accumulates in place — the canonical
+Pallas K-streaming pattern (no scratch buffer needed).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-native tile.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, n_k: int):
+    """Grid = (M/bm, N/bn, K/bk); accumulate K slabs into the output tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def tiled_matmul(x, w, *, bm: int = BLOCK_M, bn: int = BLOCK_N, bk: int = BLOCK_K):
+    """``x @ w`` via a K-streaming tiled Pallas kernel.
+
+    Shapes must be multiples of the block sizes; the L2 model pads to
+    these boundaries at trace time so the AOT artifact sees aligned shapes.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} != {k2}"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shapes ({m},{k})x({k2},{n}) not aligned to blocks ({bm},{bn},{bk})"
+    )
+    n_k = k // bk
+    kernel = functools.partial(_matmul_kernel, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def _gelu(x):
+    """tanh-approximation GELU (matches ref.py exactly)."""
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+
+
+def mlp_block(x, w1, b1, w2, b2):
+    """Two-layer MLP head: gelu(x@w1 + b1) @ w2 + b2, both matmuls Pallas.
+
+    Block schedule (perf pass, see EXPERIMENTS.md §Perf): at these layer
+    sizes the full operands fit VMEM (layer 1 resident set: 128x256 +
+    256x512 + 128x512 f32 ~ 0.9 MB of ~16 MB), so full-width blocks give
+    a single-trip grid — 2.7x faster than 128^3 tiling under the XLA CPU
+    lowering and the correct TPU schedule as well (no K-loop overhead,
+    MXU-aligned 128-multiples).
+    """
+    m, k1 = x.shape
+    n1 = w1.shape[1]
+    h = tiled_matmul(x, w1, bm=m, bn=n1, bk=k1) + b1[None, :]
+    h = _gelu(h)
+    k2, n2 = w2.shape
+    return tiled_matmul(h, w2, bm=m, bn=n2, bk=k2) + b2[None, :]

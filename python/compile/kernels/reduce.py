@@ -1,0 +1,65 @@
+"""Segment-sum Pallas kernel — the MapReduce shuffle-aggregation stand-in.
+
+WordCount/Sort reducers (paper §7.3.1) aggregate keyed chunks. We model the
+reducer's hot loop as a segment sum: values[i] accumulates into
+out[segment_ids[i]]. The grid streams the value array through VMEM in
+1-D blocks; each block scatters into the (num_segments,) output, which
+stays resident across the whole grid (block index map is constant) — the
+same revisit-accumulate schedule as the matmul kernel's K loop.
+
+On TPU the scatter is a one-hot matmul (segment one-hot [bs, S] x values
+[bs] on the MXU); we keep that formulation so the interpret-mode HLO and a
+real Mosaic lowering share structure.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+
+
+def _segsum_kernel(ids_ref, vals_ref, o_ref, *, num_segments: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ids = ids_ref[...]
+    vals = vals_ref[...]
+    # One-hot scatter-add: [S, bs] @ [bs] -> [S]; MXU-friendly on TPU.
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, (num_segments, ids.shape[0]), 0)
+        == ids[None, :]
+    ).astype(jnp.float32)
+    o_ref[...] += onehot @ vals
+
+
+def segment_sum(segment_ids, values, num_segments: int, *, block: int = BLOCK):
+    """Sum ``values`` into ``num_segments`` buckets keyed by ``segment_ids``.
+
+    Args:
+      segment_ids: i32[N] in [0, num_segments); N % block == 0.
+      values: f32[N].
+
+    Returns:
+      f32[num_segments].
+    """
+    (n,) = values.shape
+    assert segment_ids.shape == (n,)
+    assert n % block == 0, f"N={n} not aligned to block={block}"
+    kernel = functools.partial(_segsum_kernel, num_segments=num_segments)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((num_segments,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((num_segments,), jnp.float32),
+        interpret=True,
+    )(segment_ids, values)

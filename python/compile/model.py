@@ -1,0 +1,94 @@
+"""Layer-2 JAX compute graphs for the funcX payload functions.
+
+Each graph wraps an L1 Pallas kernel with the padding / post-processing the
+scientific function needs, and is what ``aot.py`` lowers to an HLO-text
+artifact. The Rust workers execute these artifacts via PJRT; Python is
+never on the request path.
+
+Artifacts (shapes are fixed at AOT time — the Rust side owns batching):
+
+  surrogate.hlo.txt   — AlphaFold-aaS stand-in: 2-layer MLP inference.
+                        in:  x f32[128, 256] (batch of embeddings)
+                        params: w1 f32[256, 512], b1 f32[512],
+                                w2 f32[512, 128], b2 f32[128]
+                        out: logits f32[128, 128]
+  stills.hlo.txt      — SSX process_stills stand-in: Bragg-peak detection.
+                        in:  img f32[512, 512], thresh f32[1]
+                        out: counts f32[2, 2], background f32[2, 2],
+                             total f32[] (summed peak count)
+  reducer.hlo.txt     — MapReduce reducer stand-in: segment sum.
+                        in:  ids i32[4096], vals f32[4096]
+                        out: sums f32[256]
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mlp_block, peak_detect, segment_sum
+
+# ---------------------------------------------------------------------------
+# AOT-time shape contract, shared with aot.py and the Rust runtime
+# (rust/src/runtime/artifacts.rs mirrors these constants).
+# ---------------------------------------------------------------------------
+SURROGATE_BATCH = 128
+SURROGATE_D_IN = 256
+SURROGATE_D_HID = 512
+SURROGATE_D_OUT = 128
+
+STILLS_H = 512
+STILLS_W = 512
+STILLS_BH = 256
+STILLS_BW = 256
+
+REDUCER_N = 4096
+REDUCER_SEGMENTS = 256
+
+
+def surrogate_infer(x, w1, b1, w2, b2):
+    """MLP surrogate inference (AlphaFold-as-a-service §8). Both matmuls run
+    the Pallas tiled kernel; XLA fuses the bias+GELU epilogue."""
+    return (mlp_block(x, w1, b1, w2, b2),)
+
+
+def stills_process(img, thresh):
+    """SSX stills analysis (§2, Listing 1): tile-wise peak detection plus a
+    detector-level total, background-corrected per tile."""
+    counts, bg = peak_detect(img, thresh, bh=STILLS_BH, bw=STILLS_BW)
+    total = jnp.sum(counts)
+    return counts, bg, total
+
+
+def reduce_shuffle(ids, vals):
+    """MapReduce reduce-side aggregation (§7.3.1): keyed segment sum."""
+    return (segment_sum(ids, vals, REDUCER_SEGMENTS),)
+
+
+def surrogate_example_args():
+    return (
+        jax.ShapeDtypeStruct((SURROGATE_BATCH, SURROGATE_D_IN), jnp.float32),
+        jax.ShapeDtypeStruct((SURROGATE_D_IN, SURROGATE_D_HID), jnp.float32),
+        jax.ShapeDtypeStruct((SURROGATE_D_HID,), jnp.float32),
+        jax.ShapeDtypeStruct((SURROGATE_D_HID, SURROGATE_D_OUT), jnp.float32),
+        jax.ShapeDtypeStruct((SURROGATE_D_OUT,), jnp.float32),
+    )
+
+
+def stills_example_args():
+    return (
+        jax.ShapeDtypeStruct((STILLS_H, STILLS_W), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.float32),
+    )
+
+
+def reducer_example_args():
+    return (
+        jax.ShapeDtypeStruct((REDUCER_N,), jnp.int32),
+        jax.ShapeDtypeStruct((REDUCER_N,), jnp.float32),
+    )
+
+
+ARTIFACTS = {
+    "surrogate": (surrogate_infer, surrogate_example_args),
+    "stills": (stills_process, stills_example_args),
+    "reducer": (reduce_shuffle, reducer_example_args),
+}

@@ -1,0 +1,167 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, with
+hypothesis sweeping shapes/seeds. These run under interpret=True on CPU."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import mlp_block, peak_detect, segment_sum, tiled_matmul
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=12, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# tiled_matmul
+# ---------------------------------------------------------------------------
+@given(
+    mi=st.integers(1, 3),
+    ni=st.integers(1, 3),
+    ki=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(mi, ni, ki, seed):
+    bm = bn = bk = 128
+    m, n, k = mi * bm, ni * bn, ki * bk
+    r = rng(seed)
+    x = r.standard_normal((m, k), dtype=np.float32)
+    w = r.standard_normal((k, n), dtype=np.float32)
+    got = tiled_matmul(jnp.asarray(x), jnp.asarray(w))
+    want = ref.matmul_ref(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@given(
+    bm=st.sampled_from([32, 64, 128]),
+    bk=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_block_shape_invariance(bm, bk, seed):
+    """Different tilings of the same problem give the same numbers."""
+    m, n, k = 128, 128, 128
+    r = rng(seed)
+    x = jnp.asarray(r.standard_normal((m, k), dtype=np.float32))
+    w = jnp.asarray(r.standard_normal((k, n), dtype=np.float32))
+    a = tiled_matmul(x, w, bm=bm, bn=128, bk=bk)
+    b = tiled_matmul(x, w)  # default 128^3 tiling
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_rejects_unaligned():
+    x = jnp.zeros((100, 128), jnp.float32)
+    w = jnp.zeros((128, 128), jnp.float32)
+    with pytest.raises(AssertionError):
+        tiled_matmul(x, w)
+
+
+def test_matmul_identity():
+    x = jnp.asarray(rng(0).standard_normal((128, 128), dtype=np.float32))
+    eye = jnp.eye(128, dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(tiled_matmul(x, eye)), np.asarray(x), rtol=1e-5, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# mlp_block (the surrogate's full head)
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(0, 2**31 - 1))
+def test_mlp_block_matches_ref(seed):
+    r = rng(seed)
+    x = jnp.asarray(r.standard_normal((128, 256), dtype=np.float32) * 0.1)
+    w1 = jnp.asarray(r.standard_normal((256, 512), dtype=np.float32) * 0.05)
+    b1 = jnp.asarray(r.standard_normal(512, dtype=np.float32) * 0.05)
+    w2 = jnp.asarray(r.standard_normal((512, 128), dtype=np.float32) * 0.05)
+    b2 = jnp.asarray(r.standard_normal(128, dtype=np.float32) * 0.05)
+    got = mlp_block(x, w1, b1, w2, b2)
+    want = ref.mlp_block_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# peak_detect
+# ---------------------------------------------------------------------------
+@given(
+    gh=st.integers(1, 2),
+    gw=st.integers(1, 2),
+    bh=st.sampled_from([64, 128]),
+    thresh=st.floats(0.5, 3.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_peak_detect_matches_ref(gh, gw, bh, thresh, seed):
+    bw = bh
+    h, w = gh * bh, gw * bw
+    r = rng(seed)
+    img = r.standard_normal((h, w)).astype(np.float32)
+    # Plant a few unambiguous peaks.
+    for _ in range(5):
+        y, x = r.integers(1, h - 1), r.integers(1, w - 1)
+        img[y, x] = 50.0 + r.random()
+    t = np.array([thresh], dtype=np.float32)
+    got_c, got_b = peak_detect(jnp.asarray(img), jnp.asarray(t), bh=bh, bw=bw)
+    want_c, want_b = ref.peak_detect_ref(jnp.asarray(img), jnp.asarray(t), bh, bw)
+    np.testing.assert_allclose(np.asarray(got_c), np.asarray(want_c), atol=0)
+    np.testing.assert_allclose(np.asarray(got_b), np.asarray(want_b), rtol=1e-5, atol=1e-5)
+
+
+def test_peak_detect_counts_planted_peaks():
+    """Isolated bright pixels in tile interiors are counted exactly."""
+    img = np.zeros((256, 256), np.float32)
+    spots = [(10, 10), (50, 200), (130, 130), (200, 60)]
+    for y, x in spots:
+        img[y, x] = 100.0
+    counts, bg = peak_detect(jnp.asarray(img), jnp.asarray([1.0], np.float32), bh=256, bw=256)
+    assert float(counts[0, 0]) == len(spots)
+    assert float(bg[0, 0]) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_peak_detect_threshold_excludes():
+    img = np.zeros((128, 128), np.float32)
+    img[5, 5] = 0.5  # below threshold
+    counts, _ = peak_detect(jnp.asarray(img), jnp.asarray([1.0], np.float32), bh=128, bw=128)
+    assert float(counts[0, 0]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# segment_sum
+# ---------------------------------------------------------------------------
+@given(
+    blocks=st.integers(1, 4),
+    num_segments=st.sampled_from([16, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_segment_sum_matches_ref(blocks, num_segments, seed):
+    n = blocks * 1024
+    r = rng(seed)
+    ids = r.integers(0, num_segments, size=n).astype(np.int32)
+    vals = r.standard_normal(n).astype(np.float32)
+    got = segment_sum(jnp.asarray(ids), jnp.asarray(vals), num_segments)
+    want = ref.segment_sum_ref(jnp.asarray(ids), jnp.asarray(vals), num_segments)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_segment_sum_conservation():
+    """Total mass is conserved across buckets."""
+    r = rng(7)
+    ids = r.integers(0, 256, size=4096).astype(np.int32)
+    vals = r.random(4096).astype(np.float32)
+    got = segment_sum(jnp.asarray(ids), jnp.asarray(vals), 256)
+    assert float(jnp.sum(got)) == pytest.approx(float(vals.sum()), rel=1e-4)
+
+
+def test_segment_sum_single_bucket():
+    ids = np.zeros(1024, np.int32)
+    vals = np.ones(1024, np.float32)
+    got = segment_sum(jnp.asarray(ids), jnp.asarray(vals), 4)
+    np.testing.assert_allclose(np.asarray(got), [1024.0, 0.0, 0.0, 0.0])

@@ -1,0 +1,50 @@
+//! E11 / §7.5 — internal batching ablation: 10 000 no-ops on 4 Theta
+//! nodes with manager bulk task requests on vs off, plus the live
+//! user-facing batch API.
+
+mod harness;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use funcx::common::config::{EndpointConfig, ServiceConfig};
+use funcx::common::task::Payload;
+use funcx::endpoint::{link, EndpointBuilder};
+use funcx::experiments as exp;
+use funcx::sdk::FuncXClient;
+use funcx::serialize::Value;
+use funcx::service::FuncXService;
+
+fn main() {
+    harness::section("§7.5 — internal batching ablation (simulated, paper setup)");
+    let r = exp::batching_ablation();
+    println!("batching ON : {:>8.1} s   (paper: 6.7 s)", r.batched_s);
+    println!("batching OFF: {:>8.1} s   (paper: 118 s)", r.unbatched_s);
+    println!("speedup     : {:>8.1}x  (paper: 17.6x)", r.unbatched_s / r.batched_s);
+
+    harness::section("live user-facing batch API vs singleton submits");
+    let svc = Arc::new(FuncXService::new(ServiceConfig::default()));
+    let (_u, tok) = svc.bootstrap_user("bench");
+    let fc = FuncXClient::new(svc.clone(), tok);
+    let ep = fc.register_endpoint("local", "").unwrap();
+    let (fwd, agent_side) = link();
+    let agent = EndpointBuilder::new()
+        .config(EndpointConfig { min_nodes: 2, workers_per_node: 4, ..Default::default() })
+        .heartbeat_period(0.05)
+        .start(agent_side);
+    let fh = svc.connect_endpoint(ep, fwd).unwrap();
+    let f = fc.register_function("noop", Payload::Noop).unwrap();
+
+    harness::bench("500 no-ops via run_batch", 3, || {
+        let inputs: Vec<Value> = (0..500).map(|_| Value::Null).collect();
+        let tasks = fc.run_batch(f, ep, &inputs).unwrap();
+        fc.get_batch_results(&tasks, Duration::from_secs(60)).unwrap();
+    });
+    harness::bench("500 no-ops via singleton run()", 3, || {
+        let tasks: Vec<_> = (0..500).map(|_| fc.run(f, ep, &Value::Null).unwrap()).collect();
+        fc.get_batch_results(&tasks, Duration::from_secs(60)).unwrap();
+    });
+
+    fh.shutdown();
+    agent.join();
+}

@@ -1,0 +1,47 @@
+//! E7 / Table 2 — Colmena's four communication stages (1000 tasks, 1 MB
+//! in / 1 MB out): paper-scale model plus real channel measurements.
+
+mod harness;
+
+use funcx::data::{DataChannel, InMemoryChannel, SharedFsChannel};
+use funcx::experiments as exp;
+
+fn main() {
+    harness::section("Table 2 — Colmena stage model (1 MB payloads, 100 workers)");
+    println!(
+        "{:<12} {:>12} {:>12} {:>13} {:>12}",
+        "transport", "input-write", "input-read", "result-write", "result-read"
+    );
+    for r in exp::table2_colmena() {
+        println!(
+            "{:<12} {:>10.2}ms {:>10.2}ms {:>11.2}ms {:>10.2}ms",
+            r.transport.name(),
+            1e3 * r.stages.input_write_s,
+            1e3 * r.stages.input_read_s,
+            1e3 * r.stages.result_write_s,
+            1e3 * r.stages.result_read_s
+        );
+    }
+    println!("(paper: Redis 7.15/0.70/18.04/0.11; SharedFS 32.31/11.36/244.72/3.50)");
+
+    harness::section("real 1 MB task-payload round trips (live channels)");
+    let payload = vec![0x42u8; 1 << 20];
+    let mem = InMemoryChannel::default();
+    harness::bench("in-memory 100x (write in, read in, write out, read out)", 5, || {
+        for i in 0..100 {
+            mem.put(&format!("in{i}"), &payload).unwrap();
+            let x = mem.get(&format!("in{i}")).unwrap();
+            mem.put(&format!("out{i}"), &x).unwrap();
+            mem.get(&format!("out{i}")).unwrap();
+        }
+    });
+    let fs = SharedFsChannel::temp().unwrap();
+    harness::bench("shared-fs 100x (write in, read in, write out, read out)", 5, || {
+        for i in 0..100 {
+            fs.put(&format!("in{i}"), &payload).unwrap();
+            let x = fs.get(&format!("in{i}")).unwrap();
+            fs.put(&format!("out{i}"), &x).unwrap();
+            fs.get(&format!("out{i}")).unwrap();
+        }
+    });
+}

@@ -1,0 +1,41 @@
+//! E8 / Table 3 — cold container instantiation across (system, tech)
+//! pairs, plus live warm-pool micro-benches.
+
+mod harness;
+
+use funcx::common::ids::ContainerId;
+use funcx::common::rng::Rng;
+use funcx::containers::WarmPool;
+use funcx::experiments as exp;
+
+fn main() {
+    harness::section("Table 3 — cold instantiation samples (10k per model)");
+    println!("{:<8} {:<12} {:>8} {:>8} {:>8}", "system", "container", "min", "max", "mean");
+    for r in exp::table3_containers(10_000, 42) {
+        println!(
+            "{:<8} {:<12} {:>8.2} {:>8.2} {:>8.2}",
+            r.system, r.container, r.min_s, r.max_s, r.mean_s
+        );
+    }
+    println!("(paper: 9.83/14.06/10.40, 7.25/31.26/8.49, 1.74/1.88/1.79, 1.19/1.26/1.22)");
+
+    harness::section("warm-pool operations (hot path of every dispatch)");
+    let types: Vec<ContainerId> = (1..=16).map(ContainerId::from_bits).collect();
+    harness::bench("1M acquire/release on a 64-slot pool", 3, || {
+        let mut pool = WarmPool::new(64, 600.0);
+        let mut rng = Rng::new(1);
+        let mut held: Vec<usize> = Vec::new();
+        for i in 0..1_000_000u64 {
+            if held.len() >= 64 || (i % 3 == 0 && !held.is_empty()) {
+                let slot = held.swap_remove(rng.below(held.len()));
+                pool.release(slot, i as f64 * 1e-6);
+            } else {
+                let c = types[rng.below(types.len())];
+                if let Some(s) = pool.acquire(c, i as f64 * 1e-6) {
+                    held.push(s);
+                }
+            }
+        }
+        std::hint::black_box(pool.cold_starts());
+    });
+}

@@ -1,0 +1,59 @@
+//! E5 / Fig. 5 — the four intra-endpoint transfer approaches across
+//! point-to-point, broadcast(20), and all-to-all(20) patterns, 1 kB–1 GB.
+//! Also times the two *real* data channels on live I/O.
+
+mod harness;
+
+use funcx::data::{CommPattern, DataChannel, InMemoryChannel, SharedFsChannel, Transport};
+use funcx::experiments as exp;
+
+fn main() {
+    harness::section("Fig. 5 — transport models (Theta parameterisation)");
+    let sizes: Vec<usize> = (0..=10).map(|i| 1024usize << (2 * i)).collect();
+    let pts = exp::fig5_transfer(&sizes);
+    for pattern in [
+        CommPattern::PointToPoint,
+        CommPattern::Broadcast { nodes: 20 },
+        CommPattern::AllToAll { nodes: 20 },
+    ] {
+        println!("{pattern:?}:");
+        print!("  {:>12}", "size(B)");
+        for t in Transport::ALL {
+            print!(" {:>12}", t.name());
+        }
+        println!();
+        for &size in &sizes {
+            print!("  {size:>12}");
+            for t in Transport::ALL {
+                let p = pts
+                    .iter()
+                    .find(|p| p.transport == t && p.pattern == pattern && p.size_bytes == size)
+                    .unwrap();
+                print!(" {:>12.6}", p.time_s);
+            }
+            println!();
+        }
+    }
+    println!("(paper: MPI best, ZMQ/Redis close, sharedFS worst; all converge at large sizes)");
+
+    harness::section("real data channels (live I/O, 64 MB in 1 MB chunks)");
+    let chunk = vec![0xA5u8; 1 << 20];
+    let mem = InMemoryChannel::default();
+    harness::bench("in-memory put+get 64x1MB", 5, || {
+        for i in 0..64 {
+            mem.put(&format!("k{i}"), &chunk).unwrap();
+        }
+        for i in 0..64 {
+            mem.get(&format!("k{i}")).unwrap();
+        }
+    });
+    let fs = SharedFsChannel::temp().unwrap();
+    harness::bench("shared-fs put+get 64x1MB", 5, || {
+        for i in 0..64 {
+            fs.put(&format!("k{i}"), &chunk).unwrap();
+        }
+        for i in 0..64 {
+            fs.get(&format!("k{i}")).unwrap();
+        }
+    });
+}

@@ -1,0 +1,28 @@
+//! Minimal bench harness shared by every bench target (criterion is
+//! unavailable offline). Times closures over several iterations and
+//! prints mean/min wall-clock alongside the experiment tables.
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+/// Time `f` `iters` times; print mean/min and return the mean seconds.
+pub fn bench(name: &str, iters: usize, mut f: impl FnMut()) -> f64 {
+    // Warm-up run (not timed).
+    f();
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!("bench {name:<40} mean {:>10.4} s   min {:>10.4} s", mean, min);
+    mean
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

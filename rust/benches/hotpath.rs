@@ -1,0 +1,111 @@
+//! Whole-stack hot-path micro-benches (the §Perf targets): per-task
+//! dispatch cost through the live stack, serialization facade, store
+//! queue ops, and PJRT artifact execution throughput.
+
+mod harness;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use funcx::common::config::{EndpointConfig, ServiceConfig};
+use funcx::common::task::Payload;
+use funcx::endpoint::{link, EndpointBuilder};
+use funcx::runtime::{PjrtRuntime, TensorArg};
+use funcx::sdk::FuncXClient;
+use funcx::serialize::{pack, unpack, Value};
+use funcx::service::FuncXService;
+use funcx::store::KvStore;
+
+fn main() {
+    harness::section("serialization facade (§4.5)");
+    let v = Value::map([
+        ("inputs", Value::Str("image_000.h5".into())),
+        ("pixels", Value::F32s(vec![1.5; 4096])),
+        ("meta", Value::List(vec![Value::Int(1), Value::Bool(true)])),
+    ]);
+    harness::bench("pack+unpack 10k medium values", 5, || {
+        for _ in 0..10_000 {
+            let b = pack(&v, 7).unwrap();
+            std::hint::black_box(unpack(&b).unwrap());
+        }
+    });
+
+    harness::section("store queue ops (the broker hot path; §4.1)");
+    let kv = KvStore::new();
+    harness::bench("100k rpush + lpop_n(64)", 5, || {
+        for i in 0..100_000u32 {
+            kv.rpush("q", i.to_le_bytes().to_vec());
+        }
+        let mut n = 0;
+        while n < 100_000 {
+            n += kv.lpop_n("q", 64).len().max(1);
+        }
+    });
+
+    harness::section("live end-to-end dispatch overhead");
+    let svc = Arc::new(FuncXService::new(ServiceConfig::default()));
+    let (_u, tok) = svc.bootstrap_user("bench");
+    let fc = FuncXClient::new(svc.clone(), tok);
+    let ep = fc.register_endpoint("local", "").unwrap();
+    let (fwd, agent_side) = link();
+    let agent = EndpointBuilder::new()
+        .config(EndpointConfig { min_nodes: 2, workers_per_node: 4, ..Default::default() })
+        .heartbeat_period(0.05)
+        .start(agent_side);
+    let fh = svc.connect_endpoint(ep, fwd).unwrap();
+    let f = fc.register_function("noop", Payload::Noop).unwrap();
+    let mean = harness::bench("2000 no-ops end-to-end (batch)", 3, || {
+        let inputs: Vec<Value> = (0..2000).map(|_| Value::Null).collect();
+        let tasks = fc.run_batch(f, ep, &inputs).unwrap();
+        fc.get_batch_results(&tasks, Duration::from_secs(120)).unwrap();
+    });
+    println!(
+        "  => {:.0} tasks/s end-to-end, {:.3} ms/task",
+        2000.0 / mean,
+        1e3 * mean / 2000.0
+    );
+    fh.shutdown();
+    agent.join();
+
+    harness::section("PJRT artifact execution (the compute hot path)");
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        let rt = PjrtRuntime::load_dir(dir).unwrap();
+        let ids: Vec<i32> = (0..4096).map(|i| i % 256).collect();
+        let vals = vec![1.0f32; 4096];
+        harness::bench("reducer x100 (4096 -> 256 segment sum)", 5, || {
+            for _ in 0..100 {
+                rt.execute(
+                    "reducer",
+                    &[TensorArg::I32(ids.clone()), TensorArg::F32(vals.clone())],
+                )
+                .unwrap();
+            }
+        });
+        let x = vec![0.1f32; 128 * 256];
+        let w1 = vec![0.01f32; 256 * 512];
+        let b1 = vec![0.0f32; 512];
+        let w2 = vec![0.01f32; 512 * 128];
+        let b2 = vec![0.0f32; 128];
+        let m = harness::bench("surrogate x10 (128x256 MLP fwd)", 5, || {
+            for _ in 0..10 {
+                rt.execute(
+                    "surrogate",
+                    &[
+                        TensorArg::F32(x.clone()),
+                        TensorArg::F32(w1.clone()),
+                        TensorArg::F32(b1.clone()),
+                        TensorArg::F32(w2.clone()),
+                        TensorArg::F32(b2.clone()),
+                    ],
+                )
+                .unwrap();
+            }
+        });
+        // 2 matmuls: 128x256x512 + 128x512x128 = 50.3 MFLOP x2 /inference
+        let flops = 10.0 * 2.0 * (128.0 * 256.0 * 512.0 + 128.0 * 512.0 * 128.0);
+        println!("  => {:.2} GFLOP/s through PJRT", flops / m / 1e9);
+    } else {
+        println!("artifacts missing — run `make artifacts` for PJRT benches");
+    }
+}

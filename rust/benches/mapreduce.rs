@@ -1,0 +1,73 @@
+//! E6 / Table 1 — MapReduce WordCount & Sort phase times under the
+//! in-memory store vs the shared FS: paper-scale model plus a real
+//! scaled-down WordCount on both live data channels.
+
+mod harness;
+
+use std::collections::BTreeMap;
+
+use funcx::data::{DataChannel, InMemoryChannel, SharedFsChannel};
+use funcx::experiments as exp;
+
+fn main() {
+    harness::section("Table 1 — paper-scale model (30 GB, 300x300 tasks)");
+    println!(
+        "{:<10} {:<10} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "app", "transport", "in-read", "map", "iw", "ir", "reduce", "out", "total"
+    );
+    for r in exp::table1_mapreduce() {
+        let p = r.phases;
+        println!(
+            "{:<10} {:<10} {:>9.2} {:>9.1} {:>9.2} {:>9.2} {:>9.1} {:>9.2} {:>9.1}",
+            r.app,
+            r.transport.name(),
+            p.input_read_s,
+            p.map_process_s,
+            p.intermediate_write_s,
+            p.intermediate_read_s,
+            p.reduce_process_s,
+            p.output_write_s,
+            p.total()
+        );
+    }
+    println!("(paper per-task: WC iw 3.55/8.15 ir 33.39/43.40; Sort iw 3.27/5.32 ir 11.37/41.77)");
+
+    harness::section("real scaled-down WordCount shuffle (16x16, live channels)");
+    let run = |ch: &dyn DataChannel| {
+        let maps = 16;
+        let reduces = 16;
+        let mut rng = funcx::common::rng::Rng::new(1);
+        // map + write
+        for m in 0..maps {
+            let mut parts: Vec<BTreeMap<u32, u32>> = vec![BTreeMap::new(); reduces];
+            for _ in 0..20_000 {
+                let w = rng.below(997) as u32;
+                *parts[w as usize % reduces].entry(w).or_insert(0) += 1;
+            }
+            for (r, part) in parts.iter().enumerate() {
+                let blob: Vec<u8> = part
+                    .iter()
+                    .flat_map(|(k, v)| k.to_le_bytes().into_iter().chain(v.to_le_bytes()))
+                    .collect();
+                ch.put(&format!("s/m{m}r{r}"), &blob).unwrap();
+            }
+        }
+        // read + reduce
+        let mut totals: BTreeMap<u32, u64> = BTreeMap::new();
+        for r in 0..reduces {
+            for m in 0..maps {
+                let blob = ch.get(&format!("s/m{m}r{r}")).unwrap();
+                for rec in blob.chunks_exact(8) {
+                    let k = u32::from_le_bytes(rec[0..4].try_into().unwrap());
+                    let v = u32::from_le_bytes(rec[4..8].try_into().unwrap());
+                    *totals.entry(k).or_insert(0) += v as u64;
+                }
+            }
+        }
+        assert_eq!(totals.values().sum::<u64>(), 16 * 20_000);
+    };
+    let mem = InMemoryChannel::default();
+    harness::bench("wordcount shuffle via in-memory", 3, || run(&mem));
+    let fs = SharedFsChannel::temp().unwrap();
+    harness::bench("wordcount shuffle via shared-fs", 3, || run(&fs));
+}

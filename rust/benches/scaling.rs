@@ -1,0 +1,50 @@
+//! E2/E3/E4 / Fig. 4 + §7.2.3 — strong & weak scaling of the funcX agent
+//! to 131 072 containers (discrete-event simulation; see DESIGN.md §5).
+
+mod harness;
+
+use funcx::experiments as exp;
+use funcx::sim::SimProfile;
+
+fn main() {
+    harness::section("Fig. 4(a) strong scaling — Theta, 100k concurrent requests");
+    for (label, dur, counts) in [
+        ("no-op", 0.0, vec![64, 128, 256, 512, 1024, 2048]),
+        ("1s sleep", 1.0, vec![256, 1024, 2048, 4096, 8192]),
+    ] {
+        println!("{label}:");
+        for p in exp::fig4_strong(SimProfile::theta(), 100_000, dur, &counts) {
+            println!(
+                "  {:>6} containers  {:>9.1} s  ({:>7.0} tasks/s)",
+                p.containers, p.completion_s, p.throughput
+            );
+        }
+    }
+    println!("(paper: no-op stops improving at 256 containers, sleep at 2048)");
+
+    harness::section("Fig. 4(b) weak scaling — Cori, 10 requests/container");
+    for (label, dur) in [("no-op", 0.0), ("1s sleep", 1.0), ("1min stress", 60.0)] {
+        println!("{label}:");
+        let counts = [256usize, 1024, 4096, 16_384, 65_536, 131_072];
+        for p in exp::fig4_weak(SimProfile::cori(), 10, dur, &counts) {
+            println!(
+                "  {:>7} containers ({:>8} tasks)  {:>9.1} s",
+                p.containers,
+                p.containers * 10,
+                p.completion_s
+            );
+        }
+    }
+    println!("(paper: 131072 containers / 1.3M no-ops complete; sleep ~flat to 2048; stress to 16384)");
+
+    harness::section("§7.2.3 peak agent throughput");
+    let theta = exp::peak_throughput(SimProfile::theta());
+    let cori = exp::peak_throughput(SimProfile::cori());
+    println!("Theta: {theta:.0} tasks/s (paper: 1694)");
+    println!("Cori:  {cori:.0} tasks/s (paper: 1466)");
+
+    harness::section("simulator cost");
+    harness::bench("simulate 100k no-ops @ 2048 containers", 3, || {
+        let _ = exp::fig4_strong(SimProfile::theta(), 100_000, 0.0, &[2048]);
+    });
+}

@@ -1,0 +1,52 @@
+//! §4.7 — Globus-Auth-like identity and access management substrate.
+//!
+//! funcX registers with Globus Auth as a resource server; users hold
+//! OAuth2 tokens scoped to funcX operations; endpoints are native clients
+//! that depend on funcX scopes; users may delegate access (share
+//! functions/endpoints with users or groups). We reproduce the model —
+//! identities, scoped bearer tokens with expiry, delegation grants, and
+//! group membership — as an in-process service.
+
+mod tokens;
+
+pub use tokens::{AuthService, Scope, Token};
+
+#[cfg(test)]
+mod proptests {
+    use super::*;
+    use crate::testing::check;
+
+    #[test]
+    fn scopes_are_exact() {
+        // A token authorizes exactly the scopes it was minted with
+        // (Scope::All excepted — it is the wildcard by definition).
+        check("auth-scopes-exact", 100, |g| {
+            let auth = AuthService::new();
+            let user = auth.register_identity("u@example.org");
+            let n = g.usize(1, 6);
+            let mut granted = std::collections::BTreeSet::new();
+            for _ in 0..n {
+                granted.insert(g.usize(0, 5)); // skip index 5 = Scope::All
+            }
+            let scopes: Vec<Scope> = granted.iter().map(|i| Scope::ALL[*i]).collect();
+            let tok = auth.issue_token(user, &scopes, 3600.0, 0.0).unwrap();
+            for (i, s) in Scope::ALL.iter().enumerate().take(5) {
+                let ok = auth.check(&tok, *s, 1.0).is_ok();
+                assert_eq!(ok, granted.contains(&i), "scope {s:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn token_expiry_strict_boundary() {
+        check("auth-expiry", 200, |g| {
+            let auth = AuthService::new();
+            let user = auth.register_identity("u@example.org");
+            let ttl = g.f64(1.0, 1000.0);
+            let probe = g.f64(0.0, 2000.0);
+            let tok = auth.issue_token(user, &[Scope::RunFunction], ttl, 0.0).unwrap();
+            let ok = auth.check(&tok, Scope::RunFunction, probe).is_ok();
+            assert_eq!(ok, probe < ttl);
+        });
+    }
+}

@@ -1,0 +1,303 @@
+//! Identities, scoped bearer tokens, delegation, groups.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, RwLock};
+
+use crate::common::error::{Error, Result};
+use crate::common::ids::{EndpointId, FunctionId, UserId, Uuid};
+use crate::common::time::Time;
+
+/// funcX OAuth scopes (§4.7, e.g.
+/// `urn:globus:auth:scope:funcx:register_function`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Scope {
+    RegisterFunction,
+    RunFunction,
+    RegisterEndpoint,
+    ManageEndpoint,
+    Transfer,
+    All,
+}
+
+impl Scope {
+    pub const ALL: [Scope; 6] = [
+        Scope::RegisterFunction,
+        Scope::RunFunction,
+        Scope::RegisterEndpoint,
+        Scope::ManageEndpoint,
+        Scope::Transfer,
+        Scope::All,
+    ];
+
+    pub fn urn(&self) -> &'static str {
+        match self {
+            Scope::RegisterFunction => "urn:globus:auth:scope:funcx:register_function",
+            Scope::RunFunction => "urn:globus:auth:scope:funcx:run_function",
+            Scope::RegisterEndpoint => "urn:globus:auth:scope:funcx:register_endpoint",
+            Scope::ManageEndpoint => "urn:globus:auth:scope:funcx:manage_endpoint",
+            Scope::Transfer => "urn:globus:auth:scope:transfer.api.globus.org:all",
+            Scope::All => "urn:globus:auth:scope:funcx:all",
+        }
+    }
+}
+
+/// A bearer token: opaque id + subject + scopes + expiry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Token {
+    pub id: Uuid,
+    pub subject: UserId,
+    pub scopes: Vec<Scope>,
+    pub expires_at: Time,
+}
+
+struct Identity {
+    #[allow(dead_code)]
+    username: String,
+    groups: HashSet<Uuid>,
+}
+
+#[derive(Default)]
+struct AuthState {
+    identities: HashMap<UserId, Identity>,
+    tokens: HashMap<Uuid, Token>,
+    /// function -> users allowed to invoke (owner implicit).
+    function_grants: HashMap<FunctionId, HashSet<UserId>>,
+    /// function -> groups allowed to invoke.
+    function_group_grants: HashMap<FunctionId, HashSet<Uuid>>,
+    /// endpoint -> users allowed to target it.
+    endpoint_grants: HashMap<EndpointId, HashSet<UserId>>,
+    groups: HashMap<Uuid, HashSet<UserId>>,
+}
+
+/// The IAM service. Clone-shareable.
+#[derive(Clone, Default)]
+pub struct AuthService {
+    state: Arc<RwLock<AuthState>>,
+}
+
+impl AuthService {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register an identity (institution account, ORCID, …).
+    pub fn register_identity(&self, username: &str) -> UserId {
+        let id = UserId::new();
+        self.state.write().unwrap().identities.insert(
+            id,
+            Identity { username: username.to_string(), groups: HashSet::new() },
+        );
+        id
+    }
+
+    /// Mint a bearer token for `user` with the given scopes and TTL.
+    pub fn issue_token(
+        &self,
+        user: UserId,
+        scopes: &[Scope],
+        ttl_s: f64,
+        now: Time,
+    ) -> Result<Token> {
+        let mut st = self.state.write().unwrap();
+        if !st.identities.contains_key(&user) {
+            return Err(Error::Unauthenticated(format!("unknown identity {user}")));
+        }
+        let tok = Token {
+            id: Uuid::new(),
+            subject: user,
+            scopes: scopes.to_vec(),
+            expires_at: now + ttl_s,
+        };
+        st.tokens.insert(tok.id, tok.clone());
+        Ok(tok)
+    }
+
+    /// Validate a token and check it carries `scope` (or `Scope::All`).
+    pub fn check(&self, token: &Token, scope: Scope, now: Time) -> Result<UserId> {
+        let st = self.state.read().unwrap();
+        let stored = st
+            .tokens
+            .get(&token.id)
+            .ok_or_else(|| Error::Unauthenticated("unknown token".into()))?;
+        if stored.subject != token.subject {
+            return Err(Error::Unauthenticated("token subject mismatch".into()));
+        }
+        if now >= stored.expires_at {
+            return Err(Error::Unauthenticated("token expired".into()));
+        }
+        if !stored.scopes.contains(&scope) && !stored.scopes.contains(&Scope::All) {
+            return Err(Error::Forbidden(format!("missing scope {}", scope.urn())));
+        }
+        Ok(stored.subject)
+    }
+
+    /// Revoke a token (logout / endpoint deregistration).
+    pub fn revoke(&self, token: &Token) -> bool {
+        self.state.write().unwrap().tokens.remove(&token.id).is_some()
+    }
+
+    // ---- groups & delegation (§4.7 "grant access to others") ------------
+
+    pub fn create_group(&self, members: &[UserId]) -> Uuid {
+        let gid = Uuid::new();
+        let mut st = self.state.write().unwrap();
+        st.groups.insert(gid, members.iter().copied().collect());
+        for m in members {
+            if let Some(idn) = st.identities.get_mut(m) {
+                idn.groups.insert(gid);
+            }
+        }
+        gid
+    }
+
+    pub fn add_to_group(&self, group: Uuid, user: UserId) {
+        let mut st = self.state.write().unwrap();
+        st.groups.entry(group).or_default().insert(user);
+        if let Some(idn) = st.identities.get_mut(&user) {
+            idn.groups.insert(group);
+        }
+    }
+
+    /// Share a function with a specific user (§3 "users, or groups of
+    /// users, who may be authorized to invoke the function").
+    pub fn grant_function(&self, function: FunctionId, user: UserId) {
+        self.state.write().unwrap().function_grants.entry(function).or_default().insert(user);
+    }
+
+    pub fn grant_function_to_group(&self, function: FunctionId, group: Uuid) {
+        self.state
+            .write().unwrap()
+            .function_group_grants
+            .entry(function)
+            .or_default()
+            .insert(group);
+    }
+
+    pub fn grant_endpoint(&self, endpoint: EndpointId, user: UserId) {
+        self.state.write().unwrap().endpoint_grants.entry(endpoint).or_default().insert(user);
+    }
+
+    /// May `user` invoke `function` owned by `owner`?
+    pub fn may_invoke_function(
+        &self,
+        user: UserId,
+        owner: UserId,
+        function: FunctionId,
+    ) -> bool {
+        if user == owner {
+            return true;
+        }
+        let st = self.state.read().unwrap();
+        if st.function_grants.get(&function).is_some_and(|g| g.contains(&user)) {
+            return true;
+        }
+        if let Some(groups) = st.function_group_grants.get(&function) {
+            if let Some(idn) = st.identities.get(&user) {
+                if groups.iter().any(|g| idn.groups.contains(g)) {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// May `user` target `endpoint` owned by `owner`?
+    pub fn may_use_endpoint(
+        &self,
+        user: UserId,
+        owner: UserId,
+        endpoint: EndpointId,
+    ) -> bool {
+        user == owner
+            || self
+                .state
+                .read().unwrap()
+                .endpoint_grants
+                .get(&endpoint)
+                .is_some_and(|g| g.contains(&user))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_lifecycle() {
+        let auth = AuthService::new();
+        let u = auth.register_identity("alice@uchicago.edu");
+        let tok = auth.issue_token(u, &[Scope::RunFunction], 100.0, 0.0).unwrap();
+        assert_eq!(auth.check(&tok, Scope::RunFunction, 50.0).unwrap(), u);
+        assert!(auth.check(&tok, Scope::RegisterEndpoint, 50.0).is_err());
+        assert!(auth.check(&tok, Scope::RunFunction, 100.0).is_err()); // expired
+        assert!(auth.revoke(&tok));
+        assert!(auth.check(&tok, Scope::RunFunction, 50.0).is_err());
+    }
+
+    #[test]
+    fn all_scope_is_wildcard() {
+        let auth = AuthService::new();
+        let u = auth.register_identity("u");
+        let tok = auth.issue_token(u, &[Scope::All], 100.0, 0.0).unwrap();
+        for s in Scope::ALL {
+            assert!(auth.check(&tok, s, 0.0).is_ok());
+        }
+    }
+
+    #[test]
+    fn unknown_identity_rejected() {
+        let auth = AuthService::new();
+        assert!(auth.issue_token(UserId::new(), &[Scope::All], 10.0, 0.0).is_err());
+    }
+
+    #[test]
+    fn forged_subject_rejected() {
+        let auth = AuthService::new();
+        let u = auth.register_identity("u");
+        let v = auth.register_identity("v");
+        let mut tok = auth.issue_token(u, &[Scope::All], 100.0, 0.0).unwrap();
+        tok.subject = v; // forge
+        assert!(auth.check(&tok, Scope::RunFunction, 0.0).is_err());
+    }
+
+    #[test]
+    fn function_sharing_user_and_group() {
+        let auth = AuthService::new();
+        let owner = auth.register_identity("owner");
+        let friend = auth.register_identity("friend");
+        let stranger = auth.register_identity("stranger");
+        let group_member = auth.register_identity("gm");
+        let f = FunctionId::new();
+
+        assert!(auth.may_invoke_function(owner, owner, f));
+        assert!(!auth.may_invoke_function(friend, owner, f));
+        auth.grant_function(f, friend);
+        assert!(auth.may_invoke_function(friend, owner, f));
+        assert!(!auth.may_invoke_function(stranger, owner, f));
+
+        let g = auth.create_group(&[group_member]);
+        auth.grant_function_to_group(f, g);
+        assert!(auth.may_invoke_function(group_member, owner, f));
+        // Joining the group later also grants access.
+        auth.add_to_group(g, stranger);
+        assert!(auth.may_invoke_function(stranger, owner, f));
+    }
+
+    #[test]
+    fn endpoint_sharing() {
+        let auth = AuthService::new();
+        let owner = auth.register_identity("owner");
+        let other = auth.register_identity("other");
+        let e = EndpointId::new();
+        assert!(auth.may_use_endpoint(owner, owner, e));
+        assert!(!auth.may_use_endpoint(other, owner, e));
+        auth.grant_endpoint(e, other);
+        assert!(auth.may_use_endpoint(other, owner, e));
+    }
+
+    #[test]
+    fn scope_urns() {
+        assert!(Scope::RegisterFunction.urn().contains("register_function"));
+        assert!(Scope::Transfer.urn().contains("transfer"));
+    }
+}

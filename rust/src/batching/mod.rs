@@ -1,0 +1,100 @@
+//! §4.6 — batching, at two levels:
+//!
+//! * **Internal batching**: managers request many tasks at once on
+//!   behalf of their workers, amortising network round-trips. The
+//!   [`Prefetcher`] computes the request size: idle workers plus a
+//!   configurable prefetch depth (§6.2), or 1 when batching is disabled
+//!   (the §7.5 ablation: 6.7 s vs 118 s for 10 000 no-ops).
+//! * **User-facing batching**: [`BatchRequest`] groups many function
+//!   inputs into one submission; the SDK exposes a matching batch
+//!   retrieval call.
+
+use crate::common::ids::{EndpointId, FunctionId};
+use crate::serialize::{Buffer, Value};
+
+/// Manager-side request-size policy (internal batching).
+#[derive(Clone, Copy, Debug)]
+pub struct Prefetcher {
+    /// Whether internal batching is enabled (§7.5 ablation toggles this).
+    pub enabled: bool,
+    /// Extra tasks requested beyond idle capacity (§6.2 prefetch).
+    pub prefetch: usize,
+}
+
+impl Prefetcher {
+    pub fn new(enabled: bool, prefetch: usize) -> Self {
+        Prefetcher { enabled, prefetch }
+    }
+
+    /// How many tasks the manager should request this round.
+    /// With batching disabled managers fetch one at a time (the paper's
+    /// baseline); enabled, they fetch idle + prefetch.
+    pub fn request_size(&self, idle_workers: usize) -> usize {
+        if !self.enabled {
+            return 1;
+        }
+        idle_workers + self.prefetch
+    }
+}
+
+/// A user-facing batch of invocations of one function on one endpoint.
+#[derive(Clone, Debug)]
+pub struct BatchRequest {
+    pub function: FunctionId,
+    pub endpoint: EndpointId,
+    pub inputs: Vec<Buffer>,
+}
+
+impl BatchRequest {
+    pub fn new(function: FunctionId, endpoint: EndpointId) -> Self {
+        BatchRequest { function, endpoint, inputs: Vec::new() }
+    }
+
+    /// Add one invocation's input to the batch.
+    pub fn add(&mut self, input: &Value) -> crate::Result<&mut Self> {
+        self.inputs.push(crate::serialize::pack(input, 0)?);
+        Ok(self)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inputs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inputs.is_empty()
+    }
+
+    /// Total serialized size (counted against the 10 MB service cap).
+    pub fn total_bytes(&self) -> usize {
+        self.inputs.iter().map(Buffer::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefetcher_disabled_is_one_at_a_time() {
+        let p = Prefetcher::new(false, 4);
+        assert_eq!(p.request_size(0), 1);
+        assert_eq!(p.request_size(64), 1);
+    }
+
+    #[test]
+    fn prefetcher_enabled_requests_bulk() {
+        let p = Prefetcher::new(true, 4);
+        assert_eq!(p.request_size(0), 4);
+        assert_eq!(p.request_size(64), 68);
+    }
+
+    #[test]
+    fn batch_accumulates() {
+        let mut b = BatchRequest::new(FunctionId::new(), EndpointId::new());
+        assert!(b.is_empty());
+        b.add(&Value::Int(1)).unwrap();
+        b.add(&Value::Str("x".into())).unwrap();
+        assert_eq!(b.len(), 2);
+        assert!(b.total_bytes() > 0);
+    }
+}

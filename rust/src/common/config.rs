@@ -1,0 +1,91 @@
+//! Configuration for the service, endpoints, and experiments.
+//!
+//! The defaults encode the paper's stated parameters (heartbeat 30 s,
+//! 10 MB payload cap, 10-minute container idle timeout, 2-minute resource
+//! idle timeout, prefetch batching, …) so a default deployment behaves
+//! like the published system.
+
+/// Cloud-service configuration (§4.1).
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Max serialized input/output size passed through the service
+    /// (paper §5.1: 10 MB).
+    pub max_payload_bytes: usize,
+    /// Forwarder heartbeat period (paper §4.1: 30 s default).
+    pub heartbeat_period_s: f64,
+    /// Heartbeats missed before an agent is declared lost.
+    pub heartbeat_misses_allowed: u32,
+    /// Retrieved results are purged from the store after this long
+    /// (paper §4.1 "periodically purge results").
+    pub result_ttl_s: f64,
+    /// Max times a task is re-dispatched after agent loss before being
+    /// marked [`crate::common::task::TaskState::Abandoned`].
+    pub max_redispatch: u32,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            max_payload_bytes: 10 * 1024 * 1024,
+            heartbeat_period_s: 30.0,
+            heartbeat_misses_allowed: 2,
+            result_ttl_s: 3600.0,
+            max_redispatch: 3,
+        }
+    }
+}
+
+/// Endpoint (funcX agent) configuration (§4.3, §6).
+#[derive(Clone, Debug)]
+pub struct EndpointConfig {
+    /// Worker slots per node (containers per manager).
+    pub workers_per_node: usize,
+    /// Min/max nodes the elastic strategy may hold (§6.3).
+    pub min_nodes: usize,
+    pub max_nodes: usize,
+    /// Container idle timeout before tear-down (§6.1: e.g. 10 min).
+    pub container_idle_timeout_s: f64,
+    /// Node idle timeout before release (§6.3: 2 min default).
+    pub node_idle_timeout_s: f64,
+    /// Strategy monitoring period (§6.3: e.g. every second).
+    pub strategy_period_s: f64,
+    /// Pending tasks per additional node requested (scaling
+    /// aggressiveness; §6.3 "one more resource per ten waiting").
+    pub tasks_per_node_scaling: usize,
+    /// Manager prefetch depth beyond current idle capacity (§6.2).
+    pub prefetch: usize,
+    /// Internal batching enabled (§4.6): managers request tasks in bulk.
+    pub internal_batching: bool,
+}
+
+impl Default for EndpointConfig {
+    fn default() -> Self {
+        EndpointConfig {
+            workers_per_node: 4,
+            min_nodes: 0,
+            max_nodes: 8,
+            container_idle_timeout_s: 600.0,
+            node_idle_timeout_s: 120.0,
+            strategy_period_s: 1.0,
+            tasks_per_node_scaling: 10,
+            prefetch: 4,
+            internal_batching: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let s = ServiceConfig::default();
+        assert_eq!(s.max_payload_bytes, 10 * 1024 * 1024); // §5.1
+        assert_eq!(s.heartbeat_period_s, 30.0); // §4.1
+        let e = EndpointConfig::default();
+        assert_eq!(e.container_idle_timeout_s, 600.0); // §6.1
+        assert_eq!(e.node_idle_timeout_s, 120.0); // §6.3
+        assert_eq!(e.tasks_per_node_scaling, 10); // §6.3
+    }
+}

@@ -1,0 +1,97 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Errors surfaced by the funcX service, endpoints, and substrates.
+#[derive(Debug)]
+pub enum Error {
+    /// Caller error: malformed id, bad argument, etc.
+    InvalidArgument(String),
+    /// Entity (function/endpoint/task/user) not found.
+    NotFound(String),
+    /// Authentication failed (missing/expired token).
+    Unauthenticated(String),
+    /// Authenticated but not allowed (scope/ownership; §4.7).
+    Forbidden(String),
+    /// Payload exceeds the service data limit (10 MB; §5.1).
+    PayloadTooLarge { size: usize, limit: usize },
+    /// Serialization facade exhausted all strategies (§4.5).
+    Serialization(String),
+    /// Endpoint is not connected / lost (heartbeat timeout).
+    EndpointDisconnected(String),
+    /// Task failed during execution on a worker.
+    TaskFailed(String),
+    /// A queue/channel was closed or a component shut down.
+    Shutdown(String),
+    /// The provider (scheduler/cloud) rejected a request.
+    Provider(String),
+    /// Data-plane (store/transfer) failure.
+    Data(String),
+    /// PJRT runtime failure (artifact load/compile/execute).
+    Runtime(String),
+    /// Operation timed out.
+    Timeout(String),
+    /// I/O error wrapper.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidArgument(m) => write!(f, "invalid argument: {m}"),
+            Error::NotFound(m) => write!(f, "not found: {m}"),
+            Error::Unauthenticated(m) => write!(f, "unauthenticated: {m}"),
+            Error::Forbidden(m) => write!(f, "forbidden: {m}"),
+            Error::PayloadTooLarge { size, limit } => {
+                write!(f, "payload of {size} bytes exceeds service limit of {limit}")
+            }
+            Error::Serialization(m) => write!(f, "serialization: {m}"),
+            Error::EndpointDisconnected(m) => write!(f, "endpoint disconnected: {m}"),
+            Error::TaskFailed(m) => write!(f, "task failed: {m}"),
+            Error::Shutdown(m) => write!(f, "shutdown: {m}"),
+            Error::Provider(m) => write!(f, "provider: {m}"),
+            Error::Data(m) => write!(f, "data: {m}"),
+            Error::Runtime(m) => write!(f, "runtime: {m}"),
+            Error::Timeout(m) => write!(f, "timeout: {m}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_covers_variants() {
+        let cases: Vec<Error> = vec![
+            Error::InvalidArgument("x".into()),
+            Error::NotFound("x".into()),
+            Error::Unauthenticated("x".into()),
+            Error::Forbidden("x".into()),
+            Error::PayloadTooLarge { size: 11, limit: 10 },
+            Error::Serialization("x".into()),
+            Error::EndpointDisconnected("x".into()),
+            Error::TaskFailed("x".into()),
+            Error::Shutdown("x".into()),
+            Error::Provider("x".into()),
+            Error::Data("x".into()),
+            Error::Runtime("x".into()),
+            Error::Timeout("x".into()),
+            Error::Io(std::io::Error::new(std::io::ErrorKind::Other, "x")),
+        ];
+        for c in cases {
+            assert!(!c.to_string().is_empty());
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! UUIDs for functions, endpoints, tasks, users, containers.
+//!
+//! funcX assigns a universally unique identifier to every registered
+//! entity (§3). We use a 128-bit random id with the RFC-4122 v4 layout,
+//! generated from a per-call entropy-seeded RNG (or deterministically in
+//! the simulator via [`Uuid::from_bits`]).
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::common::rng::Rng;
+use crate::serialize::{Value, Wire};
+
+/// A 128-bit universally unique identifier (v4 layout).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Uuid(pub u128);
+
+impl Uuid {
+    /// Generate a fresh random v4 UUID.
+    pub fn new() -> Self {
+        Self::from_bits(Rng::from_entropy().next_u128())
+    }
+
+    /// Deterministic construction from raw bits, normalised to the v4
+    /// version/variant layout (used by the simulator for reproducibility).
+    pub fn from_bits(bits: u128) -> Self {
+        let mut b = bits;
+        b = (b & !(0xf000 << 64)) | (0x4000 << 64); // version 4
+        b = (b & !(0xc000 << 48)) | (0x8000 << 48); // RFC variant
+        Uuid(b)
+    }
+
+    /// The nil UUID (all zeros) — used as a sentinel.
+    pub const NIL: Uuid = Uuid(0);
+
+    pub fn is_nil(&self) -> bool {
+        self.0 == 0
+    }
+}
+
+impl Default for Uuid {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl fmt::Display for Uuid {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let b = self.0;
+        write!(
+            f,
+            "{:08x}-{:04x}-{:04x}-{:04x}-{:012x}",
+            (b >> 96) as u32,
+            (b >> 80) as u16,
+            (b >> 64) as u16,
+            (b >> 48) as u16,
+            b as u64 & 0xffff_ffff_ffff
+        )
+    }
+}
+
+impl fmt::Debug for Uuid {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self}")
+    }
+}
+
+impl FromStr for Uuid {
+    type Err = crate::common::error::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let hex: String = s.chars().filter(|c| *c != '-').collect();
+        if hex.len() != 32 {
+            return Err(crate::Error::InvalidArgument(format!("bad uuid: {s}")));
+        }
+        let bits = u128::from_str_radix(&hex, 16)
+            .map_err(|_| crate::Error::InvalidArgument(format!("bad uuid: {s}")))?;
+        Ok(Uuid(bits))
+    }
+}
+
+impl Wire for Uuid {
+    fn to_value(&self) -> Value {
+        Value::Str(self.to_string())
+    }
+
+    fn from_value(v: &Value) -> crate::Result<Self> {
+        v.as_str()
+            .ok_or_else(|| crate::Error::Serialization("uuid: expected string".into()))?
+            .parse()
+    }
+}
+
+/// Typed id wrappers so a task id cannot be passed where an endpoint id
+/// is expected.
+macro_rules! typed_id {
+    ($(#[$doc:meta])* $name:ident) => {
+        $(#[$doc])*
+        #[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+        pub struct $name(pub Uuid);
+
+        impl $name {
+            pub fn new() -> Self {
+                Self(Uuid::new())
+            }
+            pub fn from_bits(bits: u128) -> Self {
+                Self(Uuid::from_bits(bits))
+            }
+        }
+
+        impl Default for $name {
+            fn default() -> Self {
+                Self::new()
+            }
+        }
+
+        impl fmt::Display for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "{}", self.0)
+            }
+        }
+
+        impl Wire for $name {
+            fn to_value(&self) -> Value {
+                self.0.to_value()
+            }
+            fn from_value(v: &Value) -> crate::Result<Self> {
+                Ok(Self(Uuid::from_value(v)?))
+            }
+        }
+    };
+}
+
+typed_id!(
+    /// Id of a registered function.
+    FunctionId
+);
+typed_id!(
+    /// Id of a registered endpoint.
+    EndpointId
+);
+typed_id!(
+    /// Id of a task (one invocation of a function; paper §3).
+    TaskId
+);
+typed_id!(
+    /// Id of a user identity.
+    UserId
+);
+typed_id!(
+    /// Id of a registered container image.
+    ContainerId
+);
+typed_id!(
+    /// Id of a manager (one per provisioned node).
+    ManagerId
+);
+typed_id!(
+    /// Id of a worker (one per container slot).
+    WorkerId
+);
+typed_id!(
+    /// Id of an inter-endpoint transfer task (Globus-like; §5.1).
+    TransferId
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uuid_display_roundtrip() {
+        for _ in 0..64 {
+            let u = Uuid::new();
+            let s = u.to_string();
+            assert_eq!(s.len(), 36);
+            assert_eq!(s.parse::<Uuid>().unwrap(), u);
+        }
+    }
+
+    #[test]
+    fn uuid_v4_layout() {
+        let u = Uuid::from_bits(u128::MAX);
+        let s = u.to_string();
+        assert_eq!(&s[14..15], "4", "version nibble");
+        assert!(matches!(&s[19..20], "8" | "9" | "a" | "b"), "variant nibble");
+    }
+
+    #[test]
+    fn uuid_uniqueness_smoke() {
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..10_000 {
+            assert!(seen.insert(Uuid::new()));
+        }
+    }
+
+    #[test]
+    fn nil_uuid() {
+        assert!(Uuid::NIL.is_nil());
+        assert!(!Uuid::new().is_nil());
+    }
+
+    #[test]
+    fn typed_ids_distinct_types() {
+        let t = TaskId::new();
+        let e = EndpointId::new();
+        assert_ne!(t.0, e.0);
+    }
+
+    #[test]
+    fn bad_uuid_parse() {
+        assert!("nope".parse::<Uuid>().is_err());
+        assert!("zz".repeat(16).parse::<Uuid>().is_err());
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let t = TaskId::new();
+        let v = t.to_value();
+        assert_eq!(TaskId::from_value(&v).unwrap(), t);
+        assert!(TaskId::from_value(&Value::Int(3)).is_err());
+    }
+}

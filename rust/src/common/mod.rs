@@ -1,0 +1,8 @@
+//! Shared primitives: ids, errors, task model, virtual time, config.
+
+pub mod config;
+pub mod error;
+pub mod ids;
+pub mod rng;
+pub mod task;
+pub mod time;

@@ -1,0 +1,380 @@
+//! The task model: one task = one invocation of a registered function
+//! on a chosen endpoint (paper §3).
+
+use crate::common::error::{Error, Result};
+use crate::common::ids::{ContainerId, EndpointId, FunctionId, TaskId, UserId};
+use crate::serialize::{Buffer, Value, Wire};
+
+/// Task lifecycle states, mirroring Fig. 2's execution path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskState {
+    /// Accepted by the web service, stored in Redis (steps 1–2).
+    Received,
+    /// In the endpoint's service-side task queue (step 3).
+    WaitingForEndpoint,
+    /// Dispatched by the forwarder to the agent (step 4).
+    WaitingForNodes,
+    /// Queued at a manager / executing on a worker.
+    Running,
+    /// Result stored in the result queue (steps 5–6), ready for pickup.
+    Success,
+    /// Execution raised; the serialized traceback is in the result.
+    Failed,
+    /// Lost agent and re-dispatch exhausted, or cancelled.
+    Abandoned,
+}
+
+impl TaskState {
+    /// Terminal states are never left once entered.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, TaskState::Success | TaskState::Failed | TaskState::Abandoned)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskState::Received => "received",
+            TaskState::WaitingForEndpoint => "waiting-for-ep",
+            TaskState::WaitingForNodes => "waiting-for-nodes",
+            TaskState::Running => "running",
+            TaskState::Success => "success",
+            TaskState::Failed => "failed",
+            TaskState::Abandoned => "abandoned",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self> {
+        Ok(match s {
+            "received" => TaskState::Received,
+            "waiting-for-ep" => TaskState::WaitingForEndpoint,
+            "waiting-for-nodes" => TaskState::WaitingForNodes,
+            "running" => TaskState::Running,
+            "success" => TaskState::Success,
+            "failed" => TaskState::Failed,
+            "abandoned" => TaskState::Abandoned,
+            _ => return Err(Error::Serialization(format!("bad task state: {s}"))),
+        })
+    }
+}
+
+/// What the worker should run. In real funcX this is always serialized
+/// Python; here payloads are either built-in microbenchmark bodies
+/// (no-op/sleep/stress, §7.2), data-plane operations, or AOT-compiled
+/// compute artifacts executed via PJRT (the science payloads).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// Returns immediately ("no-op", §7.2).
+    Noop,
+    /// Sleeps for the given number of seconds ("sleep").
+    Sleep(f64),
+    /// Busy-spins one core for the given number of seconds ("stress").
+    Stress(f64),
+    /// Echo the input buffer back (latency probes).
+    Echo,
+    /// Execute a named AOT artifact (e.g. "surrogate", "stills",
+    /// "reducer") with the input deserialized to f32/i32 arrays.
+    Artifact(String),
+    /// A data-plane op against the endpoint's intra-endpoint store
+    /// (§5.2): the worker get/puts keys to move intermediate data.
+    DataOp,
+    /// Simulated opaque function body with a fixed duration (used by the
+    /// discrete-event simulator, where nothing actually executes).
+    Simulated { duration_s: f64 },
+}
+
+impl Payload {
+    /// Nominal execution duration, used by the simulator's cost model.
+    pub fn nominal_duration(&self) -> f64 {
+        match self {
+            Payload::Noop | Payload::Echo | Payload::DataOp => 0.0,
+            Payload::Sleep(s) | Payload::Stress(s) => *s,
+            Payload::Artifact(_) => 0.005,
+            Payload::Simulated { duration_s } => *duration_s,
+        }
+    }
+}
+
+impl Wire for Payload {
+    fn to_value(&self) -> Value {
+        match self {
+            Payload::Noop => Value::map([("k", Value::Str("noop".into()))]),
+            Payload::Sleep(s) => {
+                Value::map([("k", Value::Str("sleep".into())), ("s", Value::Float(*s))])
+            }
+            Payload::Stress(s) => {
+                Value::map([("k", Value::Str("stress".into())), ("s", Value::Float(*s))])
+            }
+            Payload::Echo => Value::map([("k", Value::Str("echo".into()))]),
+            Payload::Artifact(name) => Value::map([
+                ("k", Value::Str("artifact".into())),
+                ("name", Value::Str(name.clone())),
+            ]),
+            Payload::DataOp => Value::map([("k", Value::Str("dataop".into()))]),
+            Payload::Simulated { duration_s } => Value::map([
+                ("k", Value::Str("sim".into())),
+                ("s", Value::Float(*duration_s)),
+            ]),
+        }
+    }
+
+    fn from_value(v: &Value) -> Result<Self> {
+        let kind = v
+            .get("k")
+            .and_then(Value::as_str)
+            .ok_or_else(|| Error::Serialization("payload: missing kind".into()))?;
+        let secs = || {
+            v.get("s")
+                .and_then(Value::as_float)
+                .ok_or_else(|| Error::Serialization("payload: missing seconds".into()))
+        };
+        Ok(match kind {
+            "noop" => Payload::Noop,
+            "sleep" => Payload::Sleep(secs()?),
+            "stress" => Payload::Stress(secs()?),
+            "echo" => Payload::Echo,
+            "artifact" => Payload::Artifact(
+                v.get("name")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| Error::Serialization("payload: missing name".into()))?
+                    .to_string(),
+            ),
+            "dataop" => Payload::DataOp,
+            "sim" => Payload::Simulated { duration_s: secs()? },
+            k => return Err(Error::Serialization(format!("payload: bad kind {k}"))),
+        })
+    }
+}
+
+/// A task record as brokered through the service and endpoint queues.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub id: TaskId,
+    pub function: FunctionId,
+    pub endpoint: EndpointId,
+    pub user: UserId,
+    /// Container image the function was registered with (§4.2);
+    /// `None` runs in the worker's bare environment.
+    pub container: Option<ContainerId>,
+    pub payload: Payload,
+    /// Serialized input arguments (facade-packed buffer; §4.5).
+    pub input: Buffer,
+}
+
+impl Task {
+    pub fn new(
+        function: FunctionId,
+        endpoint: EndpointId,
+        user: UserId,
+        container: Option<ContainerId>,
+        payload: Payload,
+        input: Buffer,
+    ) -> Self {
+        Task { id: TaskId::new(), function, endpoint, user, container, payload, input }
+    }
+}
+
+impl Wire for Task {
+    fn to_value(&self) -> Value {
+        Value::map([
+            ("id", self.id.to_value()),
+            ("fn", self.function.to_value()),
+            ("ep", self.endpoint.to_value()),
+            ("user", self.user.to_value()),
+            (
+                "container",
+                match &self.container {
+                    Some(c) => c.to_value(),
+                    None => Value::Null,
+                },
+            ),
+            ("payload", self.payload.to_value()),
+            ("input", Value::Bytes(self.input.0.clone())),
+        ])
+    }
+
+    fn from_value(v: &Value) -> Result<Self> {
+        let field = |name: &str| {
+            v.get(name)
+                .ok_or_else(|| Error::Serialization(format!("task: missing {name}")))
+        };
+        let container = match field("container")? {
+            Value::Null => None,
+            cv => Some(ContainerId::from_value(cv)?),
+        };
+        Ok(Task {
+            id: TaskId::from_value(field("id")?)?,
+            function: FunctionId::from_value(field("fn")?)?,
+            endpoint: EndpointId::from_value(field("ep")?)?,
+            user: UserId::from_value(field("user")?)?,
+            container,
+            payload: Payload::from_value(field("payload")?)?,
+            input: Buffer(
+                match field("input")? {
+                    Value::Bytes(b) => b.clone(),
+                    _ => return Err(Error::Serialization("task: input not bytes".into())),
+                },
+            ),
+        })
+    }
+}
+
+/// Result of one task execution, flowing back up the hierarchy.
+#[derive(Clone, Debug)]
+pub struct TaskResult {
+    pub task: TaskId,
+    pub state: TaskState,
+    /// Serialized output (or traceback when `state == Failed`).
+    pub output: Buffer,
+    /// Worker-measured execution time t_w (Fig. 3).
+    pub exec_time_s: f64,
+    /// Whether the serving container was started cold for this task.
+    pub cold_start: bool,
+}
+
+impl Wire for TaskResult {
+    fn to_value(&self) -> Value {
+        Value::map([
+            ("task", self.task.to_value()),
+            ("state", Value::Str(self.state.name().into())),
+            ("output", Value::Bytes(self.output.0.clone())),
+            ("t_w", Value::Float(self.exec_time_s)),
+            ("cold", Value::Bool(self.cold_start)),
+        ])
+    }
+
+    fn from_value(v: &Value) -> Result<Self> {
+        let field = |name: &str| {
+            v.get(name)
+                .ok_or_else(|| Error::Serialization(format!("result: missing {name}")))
+        };
+        Ok(TaskResult {
+            task: TaskId::from_value(field("task")?)?,
+            state: TaskState::from_name(
+                field("state")?
+                    .as_str()
+                    .ok_or_else(|| Error::Serialization("result: state not str".into()))?,
+            )?,
+            output: Buffer(match field("output")? {
+                Value::Bytes(b) => b.clone(),
+                _ => return Err(Error::Serialization("result: output not bytes".into())),
+            }),
+            exec_time_s: field("t_w")?
+                .as_float()
+                .ok_or_else(|| Error::Serialization("result: t_w not float".into()))?,
+            cold_start: matches!(field("cold")?, Value::Bool(true)),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::*;
+
+    #[test]
+    fn terminal_states() {
+        assert!(TaskState::Success.is_terminal());
+        assert!(TaskState::Failed.is_terminal());
+        assert!(TaskState::Abandoned.is_terminal());
+        assert!(!TaskState::Received.is_terminal());
+        assert!(!TaskState::Running.is_terminal());
+        assert!(!TaskState::WaitingForEndpoint.is_terminal());
+        assert!(!TaskState::WaitingForNodes.is_terminal());
+    }
+
+    #[test]
+    fn state_name_roundtrip() {
+        for s in [
+            TaskState::Received,
+            TaskState::WaitingForEndpoint,
+            TaskState::WaitingForNodes,
+            TaskState::Running,
+            TaskState::Success,
+            TaskState::Failed,
+            TaskState::Abandoned,
+        ] {
+            assert_eq!(TaskState::from_name(s.name()).unwrap(), s);
+        }
+        assert!(TaskState::from_name("bogus").is_err());
+    }
+
+    #[test]
+    fn nominal_durations() {
+        assert_eq!(Payload::Noop.nominal_duration(), 0.0);
+        assert_eq!(Payload::Sleep(1.5).nominal_duration(), 1.5);
+        assert_eq!(Payload::Stress(60.0).nominal_duration(), 60.0);
+        assert_eq!(Payload::Simulated { duration_s: 3.0 }.nominal_duration(), 3.0);
+    }
+
+    #[test]
+    fn payload_wire_roundtrip() {
+        for p in [
+            Payload::Noop,
+            Payload::Sleep(2.5),
+            Payload::Stress(60.0),
+            Payload::Echo,
+            Payload::Artifact("surrogate".into()),
+            Payload::DataOp,
+            Payload::Simulated { duration_s: 0.25 },
+        ] {
+            assert_eq!(Payload::from_value(&p.to_value()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn task_wire_roundtrip() {
+        let t = Task::new(
+            FunctionId::new(),
+            EndpointId::new(),
+            UserId::new(),
+            Some(ContainerId::new()),
+            Payload::Sleep(1.0),
+            crate::serialize::pack(&Value::Int(42), 7).unwrap(),
+        );
+        let back = Task::from_value(&t.to_value()).unwrap();
+        assert_eq!(back.id, t.id);
+        assert_eq!(back.function, t.function);
+        assert_eq!(back.container, t.container);
+        assert_eq!(back.payload, t.payload);
+        assert_eq!(back.input, t.input);
+    }
+
+    #[test]
+    fn task_wire_roundtrip_no_container() {
+        let t = Task::new(
+            FunctionId::new(),
+            EndpointId::new(),
+            UserId::new(),
+            None,
+            Payload::Noop,
+            Buffer::empty(),
+        );
+        let back = Task::from_value(&t.to_value()).unwrap();
+        assert_eq!(back.container, None);
+    }
+
+    #[test]
+    fn result_wire_roundtrip() {
+        let r = TaskResult {
+            task: TaskId::new(),
+            state: TaskState::Success,
+            output: Buffer::empty(),
+            exec_time_s: 0.125,
+            cold_start: true,
+        };
+        let back = TaskResult::from_value(&r.to_value()).unwrap();
+        assert_eq!(back.task, r.task);
+        assert_eq!(back.state, r.state);
+        assert_eq!(back.exec_time_s, r.exec_time_s);
+        assert!(back.cold_start);
+    }
+
+    #[test]
+    fn task_ids_unique() {
+        let f = FunctionId::new();
+        let e = EndpointId::new();
+        let u = UserId::new();
+        let t1 = Task::new(f, e, u, None, Payload::Noop, Buffer::empty());
+        let t2 = Task::new(f, e, u, None, Payload::Noop, Buffer::empty());
+        assert_ne!(t1.id, t2.id);
+    }
+}

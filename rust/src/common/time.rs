@@ -1,0 +1,98 @@
+//! Time abstraction shared by the live engine and the simulator.
+//!
+//! All policy code takes a [`Clock`] so that the discrete-event simulator
+//! can drive the *same* routing/warming/provisioning logic under virtual
+//! time while the live engine uses wall-clock time.
+
+use std::sync::{Arc, RwLock};
+use std::time::Instant;
+
+/// Seconds since an arbitrary epoch. f64 gives µs resolution over any
+/// experiment horizon we use and keeps the simulator arithmetic simple.
+pub type Time = f64;
+
+/// A time source.
+pub trait Clock: Send + Sync {
+    /// Current time in seconds.
+    fn now(&self) -> Time;
+}
+
+/// Wall-clock time, anchored at construction.
+pub struct WallClock {
+    start: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        WallClock { start: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> Time {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Shared virtual clock advanced by the simulator's event loop.
+#[derive(Clone, Default)]
+pub struct VirtualClock {
+    now: Arc<RwLock<Time>>,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Advance to `t`. Panics if time would run backwards (event-order
+    /// invariant; property-tested in `sim`).
+    pub fn advance_to(&self, t: Time) {
+        let mut now = self.now.write().unwrap();
+        assert!(t >= *now, "virtual time ran backwards: {t} < {}", *now);
+        *now = t;
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> Time {
+        *self.now.read().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_monotone() {
+        let c = WallClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn virtual_clock_advances() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance_to(1.5);
+        assert_eq!(c.now(), 1.5);
+        c.advance_to(1.5); // equal is fine
+        assert_eq!(c.now(), 1.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "ran backwards")]
+    fn virtual_clock_rejects_backwards() {
+        let c = VirtualClock::new();
+        c.advance_to(2.0);
+        c.advance_to(1.0);
+    }
+}

@@ -1,0 +1,69 @@
+//! §4.2, §6.1 — container technologies, instantiation cost models, and
+//! the warm pool.
+//!
+//! funcX adopts Docker (cloud/local), Singularity (ALCF) and Shifter
+//! (NERSC). Cold instantiation is expensive on HPC systems (Table 3:
+//! ~10 s on Theta vs ~1.2–1.8 s on EC2), which motivates warming (§6.1)
+//! and warming-aware routing (§6.2).
+
+mod pool;
+mod tech;
+
+pub use pool::{Acquire, ContainerSlot, SlotState, WarmPool};
+pub use tech::{ContainerTech, StartCostModel, SystemProfile, TABLE3_MODELS};
+
+#[cfg(test)]
+mod proptests {
+    use super::*;
+    use crate::common::ids::ContainerId;
+    use crate::testing::check;
+
+    #[test]
+    fn pool_never_exceeds_capacity() {
+        check("pool-capacity", 100, |g| {
+            let cap = g.usize(1, 12);
+            let mut pool = WarmPool::new(cap, 600.0);
+            let types: Vec<ContainerId> =
+                (0..4).map(|i| ContainerId::from_bits(i as u128 + 1)).collect();
+            let ops = g.usize(1, 100);
+            let mut now = 0.0;
+            for _ in 0..ops {
+                now += g.f64(0.0, 5.0);
+                match g.usize(0, 3) {
+                    0 => {
+                        let c = *g.choose(&types);
+                        let _ = pool.acquire(c, now);
+                    }
+                    1 => {
+                        // release something busy if any
+                        if let Some(slot) = pool.busy_slots().first().copied() {
+                            pool.release(slot, now);
+                        }
+                    }
+                    _ => {
+                        pool.reap_idle(now);
+                    }
+                }
+                assert!(pool.total() <= cap, "pool grew past capacity");
+            }
+        });
+    }
+
+    #[test]
+    fn warm_acquire_never_cold_starts() {
+        // If a warm idle container of the right type exists, acquire()
+        // must reuse it (the §6.1 invariant warming exists to provide).
+        check("pool-warm-reuse", 100, |g| {
+            let mut pool = WarmPool::new(4, 600.0);
+            let c = ContainerId::from_bits(1);
+            let now = g.f64(0.0, 100.0);
+            let slot = pool.acquire(c, now).expect("capacity available");
+            pool.release(slot, now); // now warm+idle
+            let warm_before = pool.warm_idle_count(c);
+            assert_eq!(warm_before, 1);
+            let (slot2, cold) = pool.acquire_with_origin(c, now + 1.0).unwrap();
+            assert!(!cold, "acquire must reuse the warm container");
+            assert_eq!(slot2, slot);
+        });
+    }
+}

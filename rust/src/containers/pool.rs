@@ -1,0 +1,402 @@
+//! The per-manager warm container pool (§6.1–§6.2 manager side).
+//!
+//! A manager owns a fixed number of worker slots. Each slot may host a
+//! container of some type; the pool keeps finished containers *warm*
+//! until capacity pressure or an idle timeout (default 10 min) reaps
+//! them. When a task arrives for a type with no warm container, the pool
+//! cold-starts one — evicting the least-recently-used idle container of
+//! another type if the pool is full.
+
+use std::collections::HashMap;
+
+use crate::common::ids::ContainerId;
+use crate::common::time::Time;
+
+/// Slot index within a manager.
+pub type ContainerSlot = usize;
+
+/// Outcome of a container acquisition.
+#[derive(Clone, Copy, Debug)]
+pub struct Acquire {
+    pub slot: ContainerSlot,
+    pub cold: bool,
+    /// Warm container type evicted to make room, if any.
+    pub evicted: Option<ContainerId>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SlotState {
+    /// No container in this slot.
+    Empty,
+    /// Container warm and idle since the given time.
+    WarmIdle { since: Time },
+    /// Container executing a task.
+    Busy,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Slot {
+    ctype: Option<ContainerId>,
+    state: SlotState,
+}
+
+/// Warm-container bookkeeping for one manager.
+#[derive(Clone, Debug)]
+pub struct WarmPool {
+    slots: Vec<Slot>,
+    idle_timeout_s: f64,
+    cold_starts: u64,
+    warm_hits: u64,
+    evictions: u64,
+}
+
+impl WarmPool {
+    pub fn new(capacity: usize, idle_timeout_s: f64) -> Self {
+        WarmPool {
+            slots: vec![Slot { ctype: None, state: SlotState::Empty }; capacity],
+            idle_timeout_s,
+            cold_starts: 0,
+            warm_hits: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Number of non-empty slots.
+    pub fn total(&self) -> usize {
+        self.slots.iter().filter(|s| s.state != SlotState::Empty).count()
+    }
+
+    /// Warm idle containers of the given type.
+    pub fn warm_idle_count(&self, ctype: ContainerId) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| {
+                s.ctype == Some(ctype) && matches!(s.state, SlotState::WarmIdle { .. })
+            })
+            .count()
+    }
+
+    /// All currently-busy slots.
+    pub fn busy_slots(&self) -> Vec<ContainerSlot> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.state == SlotState::Busy)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Idle (warm) + empty slots — the capacity advertised to the agent.
+    pub fn available_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.state != SlotState::Busy).count()
+    }
+
+    /// Warm-idle census by type.
+    pub fn warm_census(&self) -> HashMap<ContainerId, usize> {
+        let mut m = HashMap::new();
+        for s in &self.slots {
+            if let (Some(c), SlotState::WarmIdle { .. }) = (s.ctype, s.state) {
+                *m.entry(c).or_insert(0) += 1;
+            }
+        }
+        m
+    }
+
+    /// Deployed-container census by type — busy AND idle ("Each manager
+    /// advertises its deployed container types"; §6.2). This is what the
+    /// agent routes on.
+    pub fn deployed_census(&self) -> HashMap<ContainerId, usize> {
+        let mut m = HashMap::new();
+        for s in &self.slots {
+            if let (Some(c), state) = (s.ctype, s.state) {
+                if state != SlotState::Empty {
+                    *m.entry(c).or_insert(0) += 1;
+                }
+            }
+        }
+        m
+    }
+
+    /// Acquire a container of `ctype` for a task. Returns the slot, or
+    /// `None` if every slot is busy.
+    pub fn acquire(&mut self, ctype: ContainerId, now: Time) -> Option<ContainerSlot> {
+        self.acquire_with_origin(ctype, now).map(|(s, _)| s)
+    }
+
+    /// Like [`WarmPool::acquire`] but also reports whether the start was
+    /// cold (`true`) or reused a warm container (`false`).
+    pub fn acquire_with_origin(
+        &mut self,
+        ctype: ContainerId,
+        now: Time,
+    ) -> Option<(ContainerSlot, bool)> {
+        self.acquire_detailed(ctype, now).map(|o| (o.slot, o.cold))
+    }
+
+    /// Full acquisition outcome, including which warm container type was
+    /// evicted (if any) — lets callers maintain O(1) incremental views
+    /// (the simulator's hot path).
+    pub fn acquire_detailed(&mut self, ctype: ContainerId, now: Time) -> Option<Acquire> {
+        self.acquire_protected(ctype, now, |_| false)
+    }
+
+    /// Like [`WarmPool::acquire_detailed`], but when eviction is needed,
+    /// prefer evicting warm containers whose type is NOT `protected`
+    /// (types with queued demand are protected so their tasks are not
+    /// orphaned — the warming-aware manager's coordination rule).
+    pub fn acquire_protected(
+        &mut self,
+        ctype: ContainerId,
+        now: Time,
+        protected: impl Fn(ContainerId) -> bool,
+    ) -> Option<Acquire> {
+        let _ = now;
+        // 1. Prefer a warm idle container of the right type (§6.2).
+        if let Some(i) = self.slots.iter().position(|s| {
+            s.ctype == Some(ctype) && matches!(s.state, SlotState::WarmIdle { .. })
+        }) {
+            self.slots[i].state = SlotState::Busy;
+            self.warm_hits += 1;
+            return Some(Acquire { slot: i, cold: false, evicted: None });
+        }
+        // 2. Otherwise take an empty slot (cold start).
+        if let Some(i) = self.slots.iter().position(|s| s.state == SlotState::Empty) {
+            self.slots[i] = Slot { ctype: Some(ctype), state: SlotState::Busy };
+            self.cold_starts += 1;
+            return Some(Acquire { slot: i, cold: true, evicted: None });
+        }
+        // 3. Otherwise evict the least-recently-used warm idle container
+        //    of *any* type ("insufficient resources to process pending
+        //    workloads"; §6.1) and cold-start in its place.
+        let lru = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| match (s.ctype, s.state) {
+                (Some(c), SlotState::WarmIdle { since }) => Some((i, since, protected(c))),
+                _ => None,
+            })
+            // Unprotected types first, then least-recently-used.
+            .min_by(|a, b| a.2.cmp(&b.2).then(a.1.partial_cmp(&b.1).unwrap()))
+            .map(|(i, since, _)| (i, since));
+        if let Some((i, _)) = lru {
+            self.evictions += 1;
+            let evicted = self.slots[i].ctype;
+            self.slots[i] = Slot { ctype: Some(ctype), state: SlotState::Busy };
+            self.cold_starts += 1;
+            return Some(Acquire { slot: i, cold: true, evicted });
+        }
+        None // all busy
+    }
+
+    /// Container type currently hosted in a slot.
+    pub fn slot_type(&self, slot: ContainerSlot) -> Option<ContainerId> {
+        self.slots[slot].ctype
+    }
+
+    /// Pre-warm every slot with containers of the given types,
+    /// round-robin (the paper pre-warms all containers for the scaling
+    /// runs; §7.2 "We pre-warmed all containers in these experiments").
+    pub fn prewarm(&mut self, types: &[ContainerId], now: Time) {
+        if types.is_empty() {
+            return;
+        }
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            if s.state == SlotState::Empty {
+                *s = Slot {
+                    ctype: Some(types[i % types.len()]),
+                    state: SlotState::WarmIdle { since: now },
+                };
+            }
+        }
+    }
+
+    /// Mark a slot's task finished; the container stays warm (§6.1).
+    pub fn release(&mut self, slot: ContainerSlot, now: Time) {
+        let s = &mut self.slots[slot];
+        debug_assert_eq!(s.state, SlotState::Busy, "release of non-busy slot");
+        s.state = SlotState::WarmIdle { since: now };
+    }
+
+    /// Tear down warm containers idle longer than the timeout (§6.1).
+    /// Returns how many were reaped.
+    pub fn reap_idle(&mut self, now: Time) -> usize {
+        let timeout = self.idle_timeout_s;
+        let mut reaped = 0;
+        for s in &mut self.slots {
+            if let SlotState::WarmIdle { since } = s.state {
+                if now - since >= timeout {
+                    *s = Slot { ctype: None, state: SlotState::Empty };
+                    reaped += 1;
+                }
+            }
+        }
+        reaped
+    }
+
+    /// Fair spawn plan (§6.2 manager side): given the type histogram of
+    /// received tasks, distribute the pool capacity proportionally
+    /// ("if 30% of the tasks are type A and the manager can spawn at most
+    /// 10 containers, spawn 3 of type A"). Largest-remainder rounding so
+    /// counts sum to capacity (when demand covers it).
+    pub fn fair_spawn_plan(
+        capacity: usize,
+        demand: &HashMap<ContainerId, usize>,
+    ) -> HashMap<ContainerId, usize> {
+        let total: usize = demand.values().sum();
+        if total == 0 || capacity == 0 {
+            return HashMap::new();
+        }
+        let mut plan: Vec<(ContainerId, usize, f64)> = demand
+            .iter()
+            .map(|(c, n)| {
+                let exact = capacity as f64 * *n as f64 / total as f64;
+                // Never plan more containers of a type than its demand.
+                let base = (exact.floor() as usize).min(*n);
+                (*c, base, exact - exact.floor())
+            })
+            .collect();
+        let assigned: usize = plan.iter().map(|(_, n, _)| n).sum();
+        let mut leftover = capacity.saturating_sub(assigned);
+        // Hand leftovers to the largest remainders (stable by id for
+        // determinism).
+        plan.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap().then(a.0 .0.cmp(&b.0 .0)));
+        for p in plan.iter_mut() {
+            if leftover == 0 {
+                break;
+            }
+            // Never plan more containers of a type than it has demand.
+            if p.1 < *demand.get(&p.0).unwrap_or(&0) {
+                p.1 += 1;
+                leftover -= 1;
+            }
+        }
+        plan.into_iter()
+            .filter(|(_, n, _)| *n > 0)
+            .map(|(c, n, _)| (c, n))
+            .collect()
+    }
+
+    pub fn cold_starts(&self) -> u64 {
+        self.cold_starts
+    }
+
+    pub fn warm_hits(&self) -> u64 {
+        self.warm_hits
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ct(i: u128) -> ContainerId {
+        ContainerId::from_bits(i)
+    }
+
+    #[test]
+    fn cold_then_warm() {
+        let mut p = WarmPool::new(2, 600.0);
+        let (s, cold) = p.acquire_with_origin(ct(1), 0.0).unwrap();
+        assert!(cold);
+        p.release(s, 1.0);
+        let (s2, cold2) = p.acquire_with_origin(ct(1), 2.0).unwrap();
+        assert!(!cold2);
+        assert_eq!(s, s2);
+        assert_eq!(p.cold_starts(), 1);
+        assert_eq!(p.warm_hits(), 1);
+    }
+
+    #[test]
+    fn eviction_when_full() {
+        let mut p = WarmPool::new(2, 600.0);
+        let a = p.acquire(ct(1), 0.0).unwrap();
+        let b = p.acquire(ct(1), 0.0).unwrap();
+        p.release(a, 1.0); // idle since 1.0 (LRU)
+        p.release(b, 2.0); // idle since 2.0
+        // Different type: must evict LRU (slot a).
+        let (s, cold) = p.acquire_with_origin(ct(2), 3.0).unwrap();
+        assert!(cold);
+        assert_eq!(s, a);
+        assert_eq!(p.evictions(), 1);
+        // One warm type-1 container remains.
+        assert_eq!(p.warm_idle_count(ct(1)), 1);
+    }
+
+    #[test]
+    fn all_busy_returns_none() {
+        let mut p = WarmPool::new(1, 600.0);
+        p.acquire(ct(1), 0.0).unwrap();
+        assert!(p.acquire(ct(1), 0.0).is_none());
+        assert!(p.acquire(ct(2), 0.0).is_none());
+    }
+
+    #[test]
+    fn idle_reaping() {
+        let mut p = WarmPool::new(3, 10.0);
+        let a = p.acquire(ct(1), 0.0).unwrap();
+        let b = p.acquire(ct(2), 0.0).unwrap();
+        p.release(a, 0.0);
+        p.release(b, 5.0);
+        assert_eq!(p.reap_idle(9.9), 0);
+        assert_eq!(p.reap_idle(10.0), 1); // a idle 10s
+        assert_eq!(p.reap_idle(15.0), 1); // b idle 10s
+        assert_eq!(p.total(), 0);
+    }
+
+    #[test]
+    fn census_and_availability() {
+        let mut p = WarmPool::new(4, 600.0);
+        let a = p.acquire(ct(1), 0.0).unwrap();
+        let _b = p.acquire(ct(2), 0.0).unwrap();
+        p.release(a, 1.0);
+        let census = p.warm_census();
+        assert_eq!(census.get(&ct(1)), Some(&1));
+        assert_eq!(census.get(&ct(2)), None); // busy, not idle
+        assert_eq!(p.available_slots(), 3); // 2 empty + 1 warm idle
+    }
+
+    #[test]
+    fn fair_spawn_proportional() {
+        // Paper's example: 30% of tasks type A, capacity 10 -> 3 of A.
+        let mut demand = HashMap::new();
+        demand.insert(ct(1), 30);
+        demand.insert(ct(2), 70);
+        let plan = WarmPool::fair_spawn_plan(10, &demand);
+        assert_eq!(plan.get(&ct(1)), Some(&3));
+        assert_eq!(plan.get(&ct(2)), Some(&7));
+    }
+
+    #[test]
+    fn fair_spawn_rounding_sums_to_capacity() {
+        let mut demand = HashMap::new();
+        demand.insert(ct(1), 1);
+        demand.insert(ct(2), 1);
+        demand.insert(ct(3), 1);
+        let plan = WarmPool::fair_spawn_plan(10, &demand);
+        // Demand (3 tasks) is below capacity; plan can't exceed demand.
+        let total: usize = plan.values().sum();
+        assert_eq!(total, 3);
+
+        let mut demand = HashMap::new();
+        demand.insert(ct(1), 5);
+        demand.insert(ct(2), 5);
+        demand.insert(ct(3), 5);
+        let plan = WarmPool::fair_spawn_plan(10, &demand);
+        let total: usize = plan.values().sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn fair_spawn_empty_demand() {
+        assert!(WarmPool::fair_spawn_plan(10, &HashMap::new()).is_empty());
+    }
+}

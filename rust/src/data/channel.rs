@@ -1,0 +1,161 @@
+//! Runtime data channels used by workers (real I/O, not models).
+
+use std::path::PathBuf;
+
+use crate::common::error::{Error, Result};
+use crate::store::KvStore;
+
+/// Key-value data plane for intermediate data (Listing 3's
+/// `get_redis_client()` equivalent).
+pub trait DataChannel: Send + Sync {
+    fn put(&self, key: &str, data: &[u8]) -> Result<()>;
+    fn get(&self, key: &str) -> Result<Vec<u8>>;
+    fn delete(&self, key: &str) -> Result<bool>;
+    fn name(&self) -> &'static str;
+}
+
+/// In-memory store channel (the endpoint-deployed Redis cluster; §5.2).
+#[derive(Clone)]
+pub struct InMemoryChannel {
+    store: KvStore,
+}
+
+impl InMemoryChannel {
+    pub fn new(store: KvStore) -> Self {
+        InMemoryChannel { store }
+    }
+}
+
+impl Default for InMemoryChannel {
+    fn default() -> Self {
+        Self::new(KvStore::new())
+    }
+}
+
+impl DataChannel for InMemoryChannel {
+    fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+        self.store.set(key, data.to_vec());
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        self.store.get(key).ok_or_else(|| Error::Data(format!("key not found: {key}")))
+    }
+
+    fn delete(&self, key: &str) -> Result<bool> {
+        Ok(self.store.del(key))
+    }
+
+    fn name(&self) -> &'static str {
+        "in-memory"
+    }
+}
+
+/// Shared-file-system channel: keys are files under a spool directory
+/// (Lustre/GPFS stand-in — real file I/O).
+pub struct SharedFsChannel {
+    root: PathBuf,
+}
+
+impl SharedFsChannel {
+    pub fn new(root: impl Into<PathBuf>) -> Result<Self> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)?;
+        Ok(SharedFsChannel { root })
+    }
+
+    /// A channel under the system temp dir with a unique suffix.
+    pub fn temp() -> Result<Self> {
+        let dir = std::env::temp_dir()
+            .join(format!("funcx-sharedfs-{}", crate::Uuid::new()));
+        Self::new(dir)
+    }
+
+    fn path_for(&self, key: &str) -> PathBuf {
+        // Sanitize: keys may contain separators from namespacing.
+        let safe: String = key
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+            .collect();
+        self.root.join(safe)
+    }
+
+    pub fn root(&self) -> &PathBuf {
+        &self.root
+    }
+}
+
+impl DataChannel for SharedFsChannel {
+    fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+        Ok(std::fs::write(self.path_for(key), data)?)
+    }
+
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        std::fs::read(self.path_for(key))
+            .map_err(|e| Error::Data(format!("key not found: {key} ({e})")))
+    }
+
+    fn delete(&self, key: &str) -> Result<bool> {
+        match std::fs::remove_file(self.path_for(key)) {
+            Ok(()) => Ok(true),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "shared-fs"
+    }
+}
+
+impl Drop for SharedFsChannel {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.root);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exercise(ch: &dyn DataChannel) {
+        ch.put("shuffle/part-0", b"hello").unwrap();
+        assert_eq!(ch.get("shuffle/part-0").unwrap(), b"hello");
+        ch.put("shuffle/part-0", b"overwritten").unwrap();
+        assert_eq!(ch.get("shuffle/part-0").unwrap(), b"overwritten");
+        assert!(ch.get("missing").is_err());
+        assert!(ch.delete("shuffle/part-0").unwrap());
+        assert!(!ch.delete("shuffle/part-0").unwrap());
+        assert!(ch.get("shuffle/part-0").is_err());
+    }
+
+    #[test]
+    fn in_memory_contract() {
+        exercise(&InMemoryChannel::default());
+    }
+
+    #[test]
+    fn shared_fs_contract() {
+        exercise(&SharedFsChannel::temp().unwrap());
+    }
+
+    #[test]
+    fn shared_fs_cleans_up_on_drop() {
+        let root;
+        {
+            let ch = SharedFsChannel::temp().unwrap();
+            root = ch.root().clone();
+            ch.put("k", b"v").unwrap();
+            assert!(root.exists());
+        }
+        assert!(!root.exists());
+    }
+
+    #[test]
+    fn large_payload_roundtrip() {
+        let ch = InMemoryChannel::default();
+        let blob = vec![0xA5u8; 4 << 20]; // 4 MB
+        ch.put("big", &blob).unwrap();
+        assert_eq!(ch.get("big").unwrap().len(), blob.len());
+    }
+}

@@ -1,0 +1,22 @@
+//! §5.2 — intra-endpoint data management.
+//!
+//! Functions on one endpoint exchange intermediate data through a data
+//! channel. The paper evaluates four approaches (Fig. 5) — MPI, ZeroMQ
+//! sockets, an in-memory store (Redis), and the shared file system — and
+//! adopts the last two for generality.
+//!
+//! This module provides:
+//! * [`DataChannel`] — the runtime interface workers use, with two *real*
+//!   implementations: [`InMemoryChannel`] (our Redis-subset store) and
+//!   [`SharedFsChannel`] (actual files under a spool directory);
+//! * [`TransportModel`] — calibrated latency/bandwidth cost models for
+//!   all four approaches and the three communication patterns, used by
+//!   the Fig. 5 / Table 1 / Table 2 benches at paper scale (30 GB
+//!   shuffles don't fit a CI machine; the models preserve the ordering
+//!   and convergence the paper reports).
+
+mod channel;
+mod model;
+
+pub use channel::{DataChannel, InMemoryChannel, SharedFsChannel};
+pub use model::{CommPattern, Transport, TransportModel};

@@ -1,0 +1,246 @@
+//! §4.3 — the funcX agent: the persistent per-endpoint process that
+//! queues tasks, provisions nodes through the provider, routes tasks to
+//! managers (§6.2), drives the elastic strategy (§6.3), and heartbeats
+//! to its forwarder (§4.1).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::common::config::EndpointConfig;
+use crate::common::rng::Rng;
+use crate::common::task::{Task, TaskResult};
+use crate::common::time::{Clock, Time};
+use crate::containers::StartCostModel;
+use crate::endpoint::link::{AgentSide, Downstream, Upstream};
+use crate::endpoint::manager::{Manager, ManagerCtx};
+use crate::metrics::LatencyBreakdown;
+use crate::provider::{NodeHandle, Provider, ScaleDecision, Strategy, StrategyInputs};
+use crate::routing::Scheduler;
+use crate::runtime::PayloadExecutor;
+
+/// Shared, externally-readable agent statistics.
+#[derive(Default)]
+pub struct AgentStats {
+    pub tasks_received: AtomicU64,
+    pub tasks_dispatched: AtomicU64,
+    pub results_returned: AtomicU64,
+    pub cold_starts: AtomicU64,
+    pub warm_hits: AtomicU64,
+    pub nodes_provisioned: AtomicU64,
+    pub nodes_released: AtomicU64,
+    pub heartbeats_sent: AtomicU64,
+}
+
+/// Everything the agent needs at spawn time.
+pub struct AgentConfig {
+    pub cfg: EndpointConfig,
+    pub provider: Box<dyn Provider>,
+    pub scheduler: Box<dyn Scheduler>,
+    pub executor: Arc<PayloadExecutor>,
+    pub clock: Arc<dyn Clock>,
+    pub latency: Arc<LatencyBreakdown>,
+    pub start_model: StartCostModel,
+    pub cold_start_scale: f64,
+    pub heartbeat_period_s: f64,
+    pub seed: u64,
+}
+
+/// Handle to a running agent thread.
+pub struct AgentHandle {
+    pub stats: Arc<AgentStats>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl AgentHandle {
+    /// Spawn the agent loop servicing `link`.
+    pub fn spawn(link: AgentSide, config: AgentConfig) -> Self {
+        let stats = Arc::new(AgentStats::default());
+        let st = stats.clone();
+        let thread = std::thread::Builder::new()
+            .name("funcx-agent".into())
+            .spawn(move || agent_loop(link, config, st))
+            .expect("spawn agent");
+        AgentHandle { stats, thread: Some(thread) }
+    }
+
+    /// Wait for the agent to exit (after a Shutdown message or severed
+    /// link).
+    pub fn join(mut self) {
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+struct NodeSlot {
+    manager: Manager,
+    idle_since: Option<Time>,
+}
+
+fn agent_loop(link: AgentSide, mut config: AgentConfig, stats: Arc<AgentStats>) {
+    let mut pending: VecDeque<Task> = VecDeque::new();
+    let mut nodes: HashMap<NodeHandle, NodeSlot> = HashMap::new();
+    let (result_tx, result_rx): (Sender<TaskResult>, Receiver<TaskResult>) = channel();
+    let strategy = Strategy::new(config.cfg.clone());
+    let mut rng = Rng::new(config.seed);
+    let mut last_strategy_tick: Time = f64::NEG_INFINITY;
+    let mut last_heartbeat: Time = f64::NEG_INFINITY;
+
+    // Pre-provision the configured minimum.
+    if config.cfg.min_nodes > 0 {
+        let now = config.clock.now();
+        config.provider.request_nodes(config.cfg.min_nodes, now);
+        stats.nodes_provisioned.fetch_add(config.cfg.min_nodes as u64, Ordering::Relaxed);
+    }
+
+    loop {
+        let now = config.clock.now();
+
+        // 1. Intake from the forwarder.
+        match link.recv_timeout(Duration::from_millis(2)) {
+            Some(Downstream::Tasks(ts)) => {
+                stats.tasks_received.fetch_add(ts.len() as u64, Ordering::Relaxed);
+                pending.extend(ts);
+            }
+            Some(Downstream::Ping) => {}
+            Some(Downstream::Shutdown) => break,
+            None => {
+                if !link.is_alive() {
+                    break;
+                }
+            }
+        }
+
+        // 2. Activate nodes that cleared the provider queue.
+        for h in config.provider.poll(now) {
+            let ctx = ManagerCtx {
+                executor: config.executor.clone(),
+                results: result_tx.clone(),
+                clock: config.clock.clone(),
+                latency: config.latency.clone(),
+                start_model: config.start_model,
+                cold_start_scale: config.cold_start_scale,
+            };
+            let m = Manager::spawn(
+                config.cfg.workers_per_node,
+                config.cfg.container_idle_timeout_s,
+                ctx,
+                rng.next_u64(),
+            );
+            nodes.insert(h, NodeSlot { manager: m, idle_since: None });
+        }
+
+        // 3. Route pending tasks to managers (§6.2).
+        if !pending.is_empty() && !nodes.is_empty() {
+            let handles: Vec<NodeHandle> = nodes.keys().copied().collect();
+            let mut views: Vec<crate::routing::ManagerView> =
+                handles.iter().map(|h| nodes[h].manager.view()).collect();
+            let by_id: HashMap<crate::common::ids::ManagerId, NodeHandle> = handles
+                .iter()
+                .map(|h| (nodes[h].manager.id, *h))
+                .collect();
+            while let Some(task) = pending.pop_front() {
+                match config.scheduler.route(task.container, &views, &mut rng) {
+                    Some(mid) => {
+                        let h = by_id[&mid];
+                        // Update the local view optimistically so one
+                        // routing pass spreads a burst across managers.
+                        if let Some(v) = views.iter_mut().find(|v| v.id == mid) {
+                            v.queued += 1;
+                            // Deployed counts only shrink on eviction,
+                            // which the manager reports via its next view.
+                        }
+                        nodes[&h].manager.enqueue(vec![task]);
+                        stats.tasks_dispatched.fetch_add(1, Ordering::Relaxed);
+                    }
+                    None => {
+                        pending.push_front(task);
+                        break; // no capacity anywhere; try next tick
+                    }
+                }
+            }
+        }
+
+        // 4. Return results upstream in batches.
+        let mut results = Vec::new();
+        while let Ok(r) = result_rx.try_recv() {
+            results.push(r);
+            if results.len() >= 256 {
+                break;
+            }
+        }
+        if !results.is_empty() {
+            stats.results_returned.fetch_add(results.len() as u64, Ordering::Relaxed);
+            if !link.send(Upstream::Results(results)) {
+                break; // forwarder gone
+            }
+        }
+
+        // 5. Strategy tick (§6.3) + container reaping (§6.1).
+        if now - last_strategy_tick >= config.cfg.strategy_period_s {
+            last_strategy_tick = now;
+            let mut idle_workers = 0;
+            let mut idle_nodes = Vec::new();
+            for (h, slot) in nodes.iter_mut() {
+                let v = slot.manager.view();
+                idle_workers += v.available_slots.saturating_sub(v.queued);
+                slot.manager.reap_idle(now);
+                if slot.manager.is_idle() {
+                    let since = *slot.idle_since.get_or_insert(now);
+                    idle_nodes.push((*h, since));
+                } else {
+                    slot.idle_since = None;
+                }
+            }
+            let inputs = StrategyInputs {
+                now,
+                pending_tasks: pending.len(),
+                idle_workers,
+                active_nodes: nodes.len(),
+                pending_nodes: config.provider.pending_count(),
+                idle_nodes,
+            };
+            let ScaleDecision { request_nodes, release } = strategy.decide(&inputs);
+            if request_nodes > 0 {
+                config.provider.request_nodes(request_nodes, now);
+                stats.nodes_provisioned.fetch_add(request_nodes as u64, Ordering::Relaxed);
+            }
+            for h in release {
+                if let Some(slot) = nodes.remove(&h) {
+                    stats
+                        .cold_starts
+                        .fetch_add(slot.manager.cold_starts(), Ordering::Relaxed);
+                    stats.warm_hits.fetch_add(slot.manager.warm_hits(), Ordering::Relaxed);
+                    slot.manager.shutdown();
+                    config.provider.release_node(h, now);
+                    stats.nodes_released.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+
+        // 6. Heartbeat (§4.1).
+        if now - last_heartbeat >= config.heartbeat_period_s {
+            last_heartbeat = now;
+            let active: usize =
+                nodes.values().map(|s| s.manager.view().total_slots).sum();
+            stats.heartbeats_sent.fetch_add(1, Ordering::Relaxed);
+            if !link.send(Upstream::Heartbeat {
+                active_workers: active,
+                pending_tasks: pending.len(),
+            }) {
+                break;
+            }
+        }
+    }
+
+    // Drain managers on exit, folding their pool stats into ours.
+    for (_, slot) in nodes.drain() {
+        stats.cold_starts.fetch_add(slot.manager.cold_starts(), Ordering::Relaxed);
+        stats.warm_hits.fetch_add(slot.manager.warm_hits(), Ordering::Relaxed);
+        slot.manager.shutdown();
+    }
+}

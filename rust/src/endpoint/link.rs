@@ -1,0 +1,158 @@
+//! The service⇄agent link (the paper's ZeroMQ channel between a
+//! forwarder and its funcX agent), as typed in-process channels with
+//! explicit liveness so tests can inject disconnections (§4.1 fault
+//! tolerance).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::common::task::{Task, TaskResult};
+
+/// Message from the forwarder down to the agent.
+#[derive(Debug)]
+pub enum Downstream {
+    Tasks(Vec<Task>),
+    /// Forwarder-initiated liveness probe.
+    Ping,
+    /// Orderly shutdown.
+    Shutdown,
+}
+
+/// Message from the agent up to the forwarder.
+#[derive(Debug)]
+pub enum Upstream {
+    Results(Vec<TaskResult>),
+    /// Periodic heartbeat (§4.1: 30 s default, configurable).
+    Heartbeat { active_workers: usize, pending_tasks: usize },
+}
+
+/// One side's endpoints of the duplex link.
+pub struct ForwarderSide {
+    pub tx: Sender<Downstream>,
+    pub rx: Receiver<Upstream>,
+    alive: Arc<AtomicBool>,
+}
+
+pub struct AgentSide {
+    pub tx: Sender<Upstream>,
+    pub rx: Receiver<Downstream>,
+    alive: Arc<AtomicBool>,
+}
+
+/// Create a connected duplex link.
+pub fn link() -> (ForwarderSide, AgentSide) {
+    let (dtx, drx) = channel();
+    let (utx, urx) = channel();
+    let alive = Arc::new(AtomicBool::new(true));
+    (
+        ForwarderSide { tx: dtx, rx: urx, alive: alive.clone() },
+        AgentSide { tx: utx, rx: drx, alive },
+    )
+}
+
+impl ForwarderSide {
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Relaxed)
+    }
+
+    /// Simulate a network partition / agent crash (tests, §4.1).
+    pub fn sever(&self) {
+        self.alive.store(false, Ordering::Relaxed);
+    }
+
+    pub fn send(&self, msg: Downstream) -> bool {
+        self.is_alive() && self.tx.send(msg).is_ok()
+    }
+
+    pub fn try_recv(&self) -> Option<Upstream> {
+        if !self.is_alive() {
+            return None;
+        }
+        match self.rx.try_recv() {
+            Ok(m) => Some(m),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => {
+                self.sever();
+                None
+            }
+        }
+    }
+}
+
+impl AgentSide {
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Relaxed)
+    }
+
+    pub fn sever(&self) {
+        self.alive.store(false, Ordering::Relaxed);
+    }
+
+    pub fn send(&self, msg: Upstream) -> bool {
+        self.is_alive() && self.tx.send(msg).is_ok()
+    }
+
+    pub fn recv_timeout(&self, d: Duration) -> Option<Downstream> {
+        if !self.is_alive() {
+            return None;
+        }
+        match self.rx.recv_timeout(d) {
+            Ok(m) => Some(m),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                self.sever();
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::*;
+    use crate::common::task::Payload;
+    use crate::serialize::Buffer;
+
+    fn mk_task() -> Task {
+        Task::new(
+            FunctionId::new(),
+            EndpointId::new(),
+            UserId::new(),
+            None,
+            Payload::Noop,
+            Buffer::empty(),
+        )
+    }
+
+    #[test]
+    fn duplex_roundtrip() {
+        let (f, a) = link();
+        assert!(f.send(Downstream::Tasks(vec![mk_task()])));
+        match a.recv_timeout(Duration::from_millis(100)) {
+            Some(Downstream::Tasks(ts)) => assert_eq!(ts.len(), 1),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(a.send(Upstream::Heartbeat { active_workers: 4, pending_tasks: 0 }));
+        assert!(matches!(f.try_recv(), Some(Upstream::Heartbeat { .. })));
+    }
+
+    #[test]
+    fn severed_link_drops_messages() {
+        let (f, a) = link();
+        f.sever();
+        assert!(!f.send(Downstream::Ping));
+        assert!(!a.is_alive() || !f.is_alive());
+        assert!(!a.send(Upstream::Results(vec![])));
+    }
+
+    #[test]
+    fn dropped_agent_detected() {
+        let (f, a) = link();
+        drop(a);
+        assert!(f.try_recv().is_none());
+        assert!(!f.is_alive(), "disconnect should sever the link");
+    }
+}

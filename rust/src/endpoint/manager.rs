@@ -1,0 +1,301 @@
+//! §4.3 — the manager: represents one node's collective worker capacity.
+//!
+//! A manager partitions its node into worker slots, deploys/retains
+//! containers ([`WarmPool`]), advertises warm types + availability to the
+//! agent, and feeds tasks to blocking workers. Cold container starts cost
+//! real time, sampled from the Table-3 model for the endpoint's
+//! (system, tech) profile, scaled by `cold_start_scale` so tests and
+//! examples can run the same code path quickly.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::common::ids::ManagerId;
+use crate::common::rng::Rng;
+use crate::common::task::{Task, TaskResult, TaskState};
+use crate::common::time::{Clock, Time};
+use crate::containers::{StartCostModel, WarmPool};
+use crate::metrics::LatencyBreakdown;
+use crate::routing::ManagerView;
+use crate::runtime::PayloadExecutor;
+use crate::serialize::{unpack, Value};
+
+struct Shared {
+    queue: Mutex<VecDeque<Task>>,
+    cv: Condvar,
+    pool: Mutex<WarmPool>,
+    shutdown: AtomicBool,
+}
+
+/// A live manager with `workers` blocking worker threads.
+pub struct Manager {
+    pub id: ManagerId,
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// Everything a worker needs, bundled to keep spawn() readable.
+#[derive(Clone)]
+pub struct ManagerCtx {
+    pub executor: Arc<PayloadExecutor>,
+    pub results: Sender<TaskResult>,
+    pub clock: Arc<dyn Clock>,
+    pub latency: Arc<LatencyBreakdown>,
+    pub start_model: StartCostModel,
+    /// Multiplier on sampled cold-start times (1.0 = Table-3 realism;
+    /// examples/tests use ~0.001 to keep wall-clock short).
+    pub cold_start_scale: f64,
+}
+
+impl Manager {
+    pub fn spawn(workers: usize, idle_timeout_s: f64, ctx: ManagerCtx, seed: u64) -> Self {
+        let id = ManagerId::new();
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            pool: Mutex::new(WarmPool::new(workers, idle_timeout_s)),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..workers)
+            .map(|w| {
+                let shared = shared.clone();
+                let ctx = ctx.clone();
+                let mut rng = Rng::new(seed ^ (w as u64).wrapping_mul(0x9E3779B97F4A7C15));
+                std::thread::Builder::new()
+                    .name(format!("funcx-worker-{w}"))
+                    .spawn(move || worker_loop(shared, ctx, &mut rng))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Manager { id, shared, workers: handles }
+    }
+
+    /// Enqueue routed tasks (the agent's dispatch; §6.2).
+    pub fn enqueue(&self, tasks: Vec<Task>) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.extend(tasks);
+        drop(q);
+        self.shared.cv.notify_all();
+    }
+
+    /// Advertised view for the routing scheduler.
+    pub fn view(&self) -> ManagerView {
+        let pool = self.shared.pool.lock().unwrap();
+        let queued = self.shared.queue.lock().unwrap().len();
+        ManagerView {
+            id: self.id,
+            deployed: pool.deployed_census(),
+            warm_idle: pool.warm_census(),
+            available_slots: pool.available_slots(),
+            total_slots: pool.capacity(),
+            queued,
+        }
+    }
+
+    /// Idle = no busy slots and nothing queued (strategy scale-in input).
+    pub fn is_idle(&self) -> bool {
+        let pool = self.shared.pool.lock().unwrap();
+        pool.busy_slots().is_empty() && self.shared.queue.lock().unwrap().is_empty()
+    }
+
+    /// Reap idle containers past their timeout (§6.1); agent calls this
+    /// on its strategy tick.
+    pub fn reap_idle(&self, now: Time) -> usize {
+        self.shared.pool.lock().unwrap().reap_idle(now)
+    }
+
+    pub fn cold_starts(&self) -> u64 {
+        self.shared.pool.lock().unwrap().cold_starts()
+    }
+
+    pub fn warm_hits(&self) -> u64 {
+        self.shared.pool.lock().unwrap().warm_hits()
+    }
+
+    /// Stop workers and join them.
+    pub fn shutdown(mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        self.shared.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, ctx: ManagerCtx, rng: &mut Rng) {
+    loop {
+        // Blocking wait for a task (workers have a single responsibility
+        // and use blocking communication; §4.3).
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                let (guard, _) =
+                    shared.cv.wait_timeout(q, Duration::from_millis(50)).unwrap();
+                q = guard;
+            }
+        };
+
+        let now = ctx.clock.now();
+        ctx.latency.on_started(task.id, now);
+
+        // Container acquisition: warm hit is free; cold start costs time.
+        // Bare tasks share the nil "container" (the worker's own env).
+        let container_key =
+            task.container.unwrap_or(crate::common::ids::ContainerId(crate::Uuid::NIL));
+        let (slot, cold) = {
+            let mut pool = shared.pool.lock().unwrap();
+            // With workers == slots this can only fail transiently; retry.
+            match pool.acquire_with_origin(container_key, now) {
+                Some(x) => x,
+                None => {
+                    // Put the task back and yield.
+                    drop(pool);
+                    shared.queue.lock().unwrap().push_front(task);
+                    std::thread::sleep(Duration::from_millis(1));
+                    continue;
+                }
+            }
+        };
+        if cold {
+            let cost = ctx.start_model.sample(rng) * ctx.cold_start_scale;
+            if cost > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(cost));
+            }
+        }
+
+        // Deserialize input, execute, serialize output (§4.3 worker).
+        let input: Value = unpack(&task.input).unwrap_or(Value::Null);
+        let (state, output, exec_s) = match ctx.executor.execute(&task.payload, &input) {
+            Ok((out, t)) => match crate::serialize::pack(&out, 0) {
+                Ok(buf) => (TaskState::Success, buf, t),
+                Err(e) => (
+                    TaskState::Failed,
+                    crate::serialize::pack(&Value::Str(e.to_string()), 0).unwrap(),
+                    0.0,
+                ),
+            },
+            Err(e) => (
+                TaskState::Failed,
+                crate::serialize::pack(&Value::Str(e.to_string()), 0).unwrap(),
+                0.0,
+            ),
+        };
+
+        let done = ctx.clock.now();
+        ctx.latency.on_finished(task.id, done);
+        shared.pool.lock().unwrap().release(slot, done);
+
+        let _ = ctx.results.send(TaskResult {
+            task: task.id,
+            state,
+            output,
+            exec_time_s: exec_s,
+            cold_start: cold,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::*;
+    use crate::common::task::Payload;
+    use crate::common::time::WallClock;
+    use crate::containers::{ContainerTech, SystemProfile, TABLE3_MODELS};
+    use crate::serialize::Buffer;
+    use std::sync::mpsc::channel;
+
+    fn ctx(results: Sender<TaskResult>) -> ManagerCtx {
+        ManagerCtx {
+            executor: Arc::new(PayloadExecutor::bare()),
+            results,
+            clock: Arc::new(WallClock::new()),
+            latency: Arc::new(LatencyBreakdown::new()),
+            start_model: TABLE3_MODELS.lookup(SystemProfile::Local, ContainerTech::None),
+            cold_start_scale: 0.001,
+        }
+    }
+
+    fn mk_task(payload: Payload) -> Task {
+        Task::new(
+            FunctionId::new(),
+            EndpointId::new(),
+            UserId::new(),
+            None,
+            payload,
+            Buffer::empty(),
+        )
+    }
+
+    #[test]
+    fn executes_tasks_and_returns_results() {
+        let (tx, rx) = channel();
+        let m = Manager::spawn(2, 600.0, ctx(tx), 1);
+        m.enqueue(vec![mk_task(Payload::Noop), mk_task(Payload::Noop)]);
+        let r1 = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let r2 = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r1.state, TaskState::Success);
+        assert_eq!(r2.state, TaskState::Success);
+        m.shutdown();
+    }
+
+    #[test]
+    fn view_reflects_capacity() {
+        let (tx, _rx) = channel();
+        let m = Manager::spawn(4, 600.0, ctx(tx), 2);
+        let v = m.view();
+        assert_eq!(v.total_slots, 4);
+        assert_eq!(v.available_slots, 4);
+        assert!(m.is_idle());
+        m.shutdown();
+    }
+
+    #[test]
+    fn warm_reuse_after_first_task() {
+        let (tx, rx) = channel();
+        let m = Manager::spawn(1, 600.0, ctx(tx), 3);
+        m.enqueue(vec![mk_task(Payload::Noop)]);
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        m.enqueue(vec![mk_task(Payload::Noop)]);
+        let r2 = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(!r2.cold_start, "second task of same (nil) type must hit warm");
+        assert_eq!(m.cold_starts(), 1);
+        assert_eq!(m.warm_hits(), 1);
+        m.shutdown();
+    }
+
+    #[test]
+    fn parallel_sleep_overlaps() {
+        let (tx, rx) = channel();
+        let m = Manager::spawn(4, 600.0, ctx(tx), 4);
+        let t0 = std::time::Instant::now();
+        m.enqueue((0..4).map(|_| mk_task(Payload::Sleep(0.2))).collect());
+        for _ in 0..4 {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        assert!(elapsed < 0.6, "4 parallel 0.2s sleeps took {elapsed}s");
+        m.shutdown();
+    }
+
+    #[test]
+    fn failed_payload_reports_failure() {
+        let (tx, rx) = channel();
+        let m = Manager::spawn(1, 600.0, ctx(tx), 5);
+        // DataOp without a channel fails inside the executor.
+        m.enqueue(vec![mk_task(Payload::DataOp)]);
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r.state, TaskState::Failed);
+        m.shutdown();
+    }
+}

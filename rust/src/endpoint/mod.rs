@@ -1,0 +1,243 @@
+//! §4.3 — the funcX endpoint: agent → managers → workers.
+//!
+//! [`EndpointBuilder`] assembles a live endpoint (threads over in-process
+//! links); the service's forwarder connects to it through
+//! [`link::link`]. The discrete-event simulator mirrors this topology
+//! under virtual time (see [`crate::sim`]).
+
+pub mod agent;
+pub mod link;
+pub mod manager;
+
+pub use agent::{AgentConfig, AgentHandle, AgentStats};
+pub use link::{link, AgentSide, Downstream, ForwarderSide, Upstream};
+pub use manager::{Manager, ManagerCtx};
+
+use std::sync::Arc;
+
+use crate::common::config::EndpointConfig;
+use crate::common::time::{Clock, WallClock};
+use crate::containers::{ContainerTech, SystemProfile, TABLE3_MODELS};
+use crate::data::DataChannel;
+use crate::metrics::LatencyBreakdown;
+use crate::provider::{Provider, SimProvider};
+use crate::routing::{Scheduler, WarmingAware};
+use crate::runtime::{PayloadExecutor, PjrtRuntime};
+
+/// Builder for a live endpoint.
+pub struct EndpointBuilder {
+    cfg: EndpointConfig,
+    system: SystemProfile,
+    tech: ContainerTech,
+    provider: Option<Box<dyn Provider>>,
+    scheduler: Option<Box<dyn Scheduler>>,
+    runtime: Option<Arc<PjrtRuntime>>,
+    channel: Option<Arc<dyn DataChannel>>,
+    clock: Option<Arc<dyn Clock>>,
+    latency: Option<Arc<LatencyBreakdown>>,
+    cold_start_scale: f64,
+    heartbeat_period_s: f64,
+    seed: u64,
+}
+
+impl Default for EndpointBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EndpointBuilder {
+    pub fn new() -> Self {
+        EndpointBuilder {
+            cfg: EndpointConfig::default(),
+            system: SystemProfile::Local,
+            tech: ContainerTech::None,
+            provider: None,
+            scheduler: None,
+            runtime: None,
+            channel: None,
+            clock: None,
+            latency: None,
+            cold_start_scale: 0.001,
+            heartbeat_period_s: 1.0,
+            seed: 42,
+        }
+    }
+
+    pub fn config(mut self, cfg: EndpointConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    pub fn profile(mut self, system: SystemProfile, tech: ContainerTech) -> Self {
+        self.system = system;
+        self.tech = tech;
+        self
+    }
+
+    pub fn provider(mut self, p: Box<dyn Provider>) -> Self {
+        self.provider = Some(p);
+        self
+    }
+
+    pub fn scheduler(mut self, s: Box<dyn Scheduler>) -> Self {
+        self.scheduler = Some(s);
+        self
+    }
+
+    /// Attach the PJRT runtime so workers can run artifact payloads.
+    pub fn runtime(mut self, rt: Arc<PjrtRuntime>) -> Self {
+        self.runtime = Some(rt);
+        self
+    }
+
+    /// Attach an intra-endpoint data channel (§5.2).
+    pub fn data_channel(mut self, ch: Arc<dyn DataChannel>) -> Self {
+        self.channel = Some(ch);
+        self
+    }
+
+    pub fn clock(mut self, c: Arc<dyn Clock>) -> Self {
+        self.clock = Some(c);
+        self
+    }
+
+    pub fn latency(mut self, l: Arc<LatencyBreakdown>) -> Self {
+        self.latency = Some(l);
+        self
+    }
+
+    /// Scale factor on sampled cold-start durations (1.0 = realistic).
+    pub fn cold_start_scale(mut self, s: f64) -> Self {
+        self.cold_start_scale = s;
+        self
+    }
+
+    pub fn heartbeat_period(mut self, s: f64) -> Self {
+        self.heartbeat_period_s = s;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Start the agent servicing `link`.
+    pub fn start(self, link: AgentSide) -> AgentHandle {
+        let clock = self.clock.unwrap_or_else(|| Arc::new(WallClock::new()));
+        let latency = self.latency.unwrap_or_default();
+        let executor = Arc::new(PayloadExecutor::new(self.runtime, self.channel));
+        let config = AgentConfig {
+            start_model: TABLE3_MODELS.lookup(self.system, self.tech),
+            provider: self.provider.unwrap_or_else(|| Box::new(SimProvider::local(7))),
+            scheduler: self.scheduler.unwrap_or_else(|| Box::new(WarmingAware::default())),
+            executor,
+            clock,
+            latency,
+            cold_start_scale: self.cold_start_scale,
+            heartbeat_period_s: self.heartbeat_period_s,
+            cfg: self.cfg,
+            seed: self.seed,
+        };
+        AgentHandle::spawn(link, config)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::*;
+    use crate::common::task::{Payload, Task, TaskState};
+    use crate::serialize::Buffer;
+    use std::time::Duration;
+
+    fn mk_task(payload: Payload) -> Task {
+        Task::new(
+            FunctionId::new(),
+            EndpointId::new(),
+            UserId::new(),
+            None,
+            payload,
+            Buffer::empty(),
+        )
+    }
+
+    #[test]
+    fn end_to_end_tasks_through_agent() {
+        let (fwd, agent_side) = link::link();
+        let cfg = EndpointConfig { min_nodes: 1, workers_per_node: 2, ..Default::default() };
+        let handle = EndpointBuilder::new().config(cfg).start(agent_side);
+
+        fwd.send(Downstream::Tasks(vec![mk_task(Payload::Noop), mk_task(Payload::Noop)]));
+        let mut results = Vec::new();
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while results.len() < 2 && std::time::Instant::now() < deadline {
+            if let Some(Upstream::Results(rs)) = fwd.try_recv() {
+                results.extend(rs);
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(results.len(), 2);
+        assert!(results.iter().all(|r| r.state == TaskState::Success));
+        fwd.send(Downstream::Shutdown);
+        handle.join();
+    }
+
+    #[test]
+    fn elastic_scale_out_from_zero() {
+        let (fwd, agent_side) = link::link();
+        let cfg = EndpointConfig {
+            min_nodes: 0,
+            max_nodes: 2,
+            workers_per_node: 2,
+            strategy_period_s: 0.01,
+            ..Default::default()
+        };
+        let handle = EndpointBuilder::new().config(cfg).start(agent_side);
+        // No nodes initially; submitting tasks must trigger scale-out.
+        fwd.send(Downstream::Tasks((0..4).map(|_| mk_task(Payload::Noop)).collect()));
+        let mut got = 0;
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while got < 4 && std::time::Instant::now() < deadline {
+            if let Some(Upstream::Results(rs)) = fwd.try_recv() {
+                got += rs.len();
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(got, 4, "tasks must complete after elastic scale-out");
+        assert!(handle.stats.nodes_provisioned.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+        fwd.send(Downstream::Shutdown);
+        handle.join();
+    }
+
+    #[test]
+    fn heartbeats_flow() {
+        let (fwd, agent_side) = link::link();
+        let cfg = EndpointConfig { min_nodes: 1, ..Default::default() };
+        let handle =
+            EndpointBuilder::new().config(cfg).heartbeat_period(0.02).start(agent_side);
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        let mut beats = 0;
+        while beats < 3 && std::time::Instant::now() < deadline {
+            if let Some(Upstream::Heartbeat { .. }) = fwd.try_recv() {
+                beats += 1;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(beats >= 3, "agent must heartbeat periodically");
+        fwd.send(Downstream::Shutdown);
+        handle.join();
+    }
+
+    #[test]
+    fn severed_link_stops_agent() {
+        let (fwd, agent_side) = link::link();
+        let cfg = EndpointConfig { min_nodes: 1, ..Default::default() };
+        let handle = EndpointBuilder::new().config(cfg).start(agent_side);
+        fwd.sever();
+        drop(fwd);
+        // join() must return (agent notices the dead link).
+        handle.join();
+    }
+}

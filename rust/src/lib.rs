@@ -1,0 +1,46 @@
+//! # funcx-rs — funcX: Federated Function as a Service for Science
+//!
+//! A reproduction of the funcX platform (Li, Chard, Babuji, et al.,
+//! IEEE TPDS 2022) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the federated FaaS coordinator: the
+//!   cloud-hosted service ([`service`]) with per-endpoint forwarders and
+//!   Redis-like queues ([`store`]), the endpoint hierarchy
+//!   ([`endpoint`]: agent → manager → worker), container management and
+//!   warming-aware routing ([`containers`], [`routing`]), elastic
+//!   provisioning ([`provider`]), intra/inter-endpoint data management
+//!   ([`data`], [`transfer`]), batching ([`batching`]), the
+//!   serialization facade ([`serialize`]), and a Globus-Auth-like IAM
+//!   substrate ([`auth`]).
+//! * **Layer 2/1 (build-time Python)** — JAX compute graphs over Pallas
+//!   kernels, AOT-lowered to `artifacts/*.hlo.txt`; the [`runtime`]
+//!   module loads and executes them via PJRT so real scientific payloads
+//!   run on the request path with Python nowhere in sight.
+//!
+//! Scale experiments (131 072 workers, Fig. 4) run on the discrete-event
+//! simulator ([`sim`]) which drives the *same* policy objects as the
+//! live engine; see `DESIGN.md` for the substitution table.
+
+pub mod auth;
+pub mod batching;
+pub mod common;
+pub mod containers;
+pub mod data;
+pub mod endpoint;
+pub mod experiments;
+pub mod metrics;
+pub mod provider;
+pub mod registry;
+pub mod routing;
+pub mod runtime;
+pub mod sdk;
+pub mod serialize;
+pub mod service;
+pub mod sim;
+pub mod store;
+pub mod testing;
+pub mod transfer;
+pub mod workloads;
+
+pub use common::error::{Error, Result};
+pub use common::ids::Uuid;

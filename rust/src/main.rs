@@ -1,0 +1,349 @@
+//! funcx — the Layer-3 coordinator CLI.
+//!
+//! Subcommands map 1:1 to the paper's evaluation (§7) plus a live demo:
+//!
+//! ```text
+//! funcx demo                 run a live service+endpoint round trip
+//! funcx bench-latency        Fig. 3  latency decomposition
+//! funcx bench-scaling        Fig. 4  strong/weak scaling + throughput
+//! funcx bench-transfer       Fig. 5  intra-endpoint transports
+//! funcx bench-mapreduce      Table 1 MapReduce Redis vs sharedFS
+//! funcx bench-colmena        Table 2 Colmena stages
+//! funcx bench-containers     Table 3 container cold starts
+//! funcx bench-routing        Figs. 6–7 warming-aware vs random
+//! funcx bench-batching       §7.5   batching ablation
+//! funcx artifacts            list loaded AOT artifacts
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use funcx::common::config::{EndpointConfig, ServiceConfig};
+use funcx::common::task::Payload;
+use funcx::data::Transport;
+use funcx::endpoint::{link, EndpointBuilder};
+use funcx::experiments as exp;
+use funcx::runtime::PjrtRuntime;
+use funcx::sdk::FuncXClient;
+use funcx::serialize::Value;
+use funcx::service::FuncXService;
+use funcx::sim::SimProfile;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let code = match cmd {
+        "demo" => demo(),
+        "bench-latency" => bench_latency(),
+        "bench-scaling" => bench_scaling(&args[1..]),
+        "bench-transfer" => bench_transfer(),
+        "bench-mapreduce" => bench_mapreduce(),
+        "bench-colmena" => bench_colmena(),
+        "bench-containers" => bench_containers(),
+        "bench-routing" => bench_routing(),
+        "bench-batching" => bench_batching(),
+        "artifacts" => artifacts(),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            0
+        }
+        other => {
+            eprintln!("unknown command: {other}\n{HELP}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "\
+funcx — federated FaaS coordinator (TPDS'22 reproduction)
+
+USAGE: funcx <COMMAND>
+
+COMMANDS:
+  demo               live service+endpoint round trip (echo + artifact)
+  bench-latency      Fig. 3  latency decomposition (live stack)
+  bench-scaling      Fig. 4  strong/weak scaling [--mode strong|weak] [--system theta|cori]
+  bench-transfer     Fig. 5  intra-endpoint transport comparison
+  bench-mapreduce    Table 1 MapReduce WordCount/Sort, Redis vs sharedFS
+  bench-colmena      Table 2 Colmena communication stages
+  bench-containers   Table 3 container instantiation costs
+  bench-routing      Figs. 6-7 warming-aware vs random routing
+  bench-batching     §7.5 internal batching ablation
+  artifacts          list AOT artifacts loadable by the PJRT runtime
+  help               this message
+";
+
+fn flag(args: &[String], name: &str, default: &str) -> String {
+    args.windows(2)
+        .find(|w| w[0] == name)
+        .map(|w| w[1].clone())
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn demo() -> i32 {
+    let svc = Arc::new(FuncXService::new(ServiceConfig::default()));
+    let (_u, tok) = svc.bootstrap_user("demo@funcx");
+    let client = FuncXClient::new(svc.clone(), tok);
+    let ep = client.register_endpoint("local", "demo endpoint").unwrap();
+    let (fwd, agent) = link();
+    let mut builder = EndpointBuilder::new()
+        .config(EndpointConfig { min_nodes: 1, workers_per_node: 2, ..Default::default() })
+        .heartbeat_period(0.1);
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        builder = builder.runtime(Arc::new(PjrtRuntime::load_dir(dir).unwrap()));
+    }
+    let handle = builder.start(agent);
+    let fh = svc.connect_endpoint(ep, fwd).unwrap();
+
+    let echo = client.register_function("echo", Payload::Echo).unwrap();
+    let input = Value::map([("hello", Value::Str("funcX".into()))]);
+    let t = client.run(echo, ep, &input).unwrap();
+    let out = client.get_result(t, Duration::from_secs(10)).unwrap();
+    println!("echo -> {out:?}");
+
+    if dir.join("manifest.json").exists() {
+        let reducer = client
+            .register_function("reducer", Payload::Artifact("reducer".into()))
+            .unwrap();
+        let ids: Vec<i32> = (0..4096).map(|i| (i % 4) as i32).collect();
+        let input = Value::map([
+            ("ids", Value::I32s(ids)),
+            ("vals", Value::F32s(vec![1.0; 4096])),
+        ]);
+        let t = client.run(reducer, ep, &input).unwrap();
+        match client.get_result(t, Duration::from_secs(30)) {
+            Ok(Value::List(parts)) => {
+                if let Some(Value::F32s(sums)) = parts.first() {
+                    println!("reducer -> first buckets {:?}", &sums[..4]);
+                }
+            }
+            other => println!("reducer -> {other:?}"),
+        }
+    }
+    fh.shutdown();
+    handle.join();
+    println!("demo OK");
+    0
+}
+
+fn bench_latency() -> i32 {
+    let svc = Arc::new(FuncXService::new(ServiceConfig::default()));
+    let (_u, tok) = svc.bootstrap_user("bench@funcx");
+    let client = FuncXClient::new(svc.clone(), tok);
+    let ep = client.register_endpoint("local", "").unwrap();
+    let (fwd, agent) = link();
+    let handle = EndpointBuilder::new()
+        .config(EndpointConfig { min_nodes: 1, workers_per_node: 4, ..Default::default() })
+        .latency(svc.latency.clone())
+        .clock(svc.clock.clone())
+        .heartbeat_period(0.05)
+        .start(agent);
+    let fh = svc.connect_endpoint(ep, fwd).unwrap();
+    let f = client.register_function("noop", Payload::Noop).unwrap();
+
+    // Warm up, then measure.
+    for _ in 0..50 {
+        let t = client.run(f, ep, &Value::Null).unwrap();
+        client.get_result(t, Duration::from_secs(10)).unwrap();
+    }
+    let breakdowns = svc.latency.all_breakdowns();
+    let n = breakdowns.len() as f64;
+    let (mut ts, mut tf, mut te, mut tw) = (0.0, 0.0, 0.0, 0.0);
+    for b in &breakdowns {
+        ts += b.t_s;
+        tf += b.t_f;
+        te += b.t_e;
+        tw += b.t_w;
+    }
+    println!("Fig. 3 — latency decomposition over {} warm tasks (ms):", breakdowns.len());
+    println!("  t_s (service)   {:8.3}", 1e3 * ts / n);
+    println!("  t_f (forwarder) {:8.3}", 1e3 * tf / n);
+    println!("  t_e (endpoint)  {:8.3}", 1e3 * te / n);
+    println!("  t_w (function)  {:8.3}", 1e3 * tw / n);
+    println!("  total           {:8.3}", 1e3 * (ts + tf + te + tw) / n);
+    fh.shutdown();
+    handle.join();
+    0
+}
+
+fn bench_scaling(args: &[String]) -> i32 {
+    let mode = flag(args, "--mode", "both");
+    let system = flag(args, "--system", "theta");
+    let profile = match system.as_str() {
+        "cori" => SimProfile::cori(),
+        _ => SimProfile::theta(),
+    };
+    if mode == "strong" || mode == "both" {
+        println!("Fig. 4(a) strong scaling on {system} — 100k concurrent requests");
+        for (label, dur) in [("no-op", 0.0), ("1s sleep", 1.0)] {
+            let counts = [64, 128, 256, 512, 1024, 2048, 4096, 8192];
+            let pts = exp::fig4_strong(profile, 100_000, dur, &counts);
+            println!("  {label}:");
+            for p in pts {
+                println!(
+                    "    {:>6} containers  {:>10.1} s  ({:>7.0} tasks/s)",
+                    p.containers, p.completion_s, p.throughput
+                );
+            }
+        }
+    }
+    if mode == "weak" || mode == "both" {
+        println!("Fig. 4(b) weak scaling on {system} — 10 requests/container");
+        let max = if system == "cori" { 131_072 } else { 16_384 };
+        for (label, dur) in [("no-op", 0.0), ("1s sleep", 1.0), ("1min stress", 60.0)] {
+            let mut counts = vec![64, 256, 1024, 4096, 16_384];
+            if max > 16_384 {
+                counts.push(65_536);
+                counts.push(131_072);
+            }
+            let pts = exp::fig4_weak(profile, 10, dur, &counts);
+            println!("  {label}:");
+            for p in pts {
+                println!(
+                    "    {:>7} containers ({:>8} tasks)  {:>10.1} s",
+                    p.containers,
+                    p.containers * 10,
+                    p.completion_s
+                );
+            }
+        }
+    }
+    println!(
+        "§7.2.3 peak agent throughput: {:.0} tasks/s (paper: {})",
+        exp::peak_throughput(profile),
+        if system == "cori" { "1466" } else { "1694" }
+    );
+    0
+}
+
+fn bench_transfer() -> i32 {
+    let sizes: Vec<usize> = (0..=10).map(|i| 1024usize << (2 * i)).collect(); // 1kB..1GB
+    let pts = exp::fig5_transfer(&sizes);
+    println!("Fig. 5 — intra-endpoint transfer time (s) by transport/pattern/size");
+    let mut last_pattern = String::new();
+    for p in pts {
+        let pat = format!("{:?}", p.pattern);
+        if pat != last_pattern {
+            println!("  {pat}:");
+            last_pattern = pat;
+        }
+        println!(
+            "    {:>10} {:>12} B  {:>12.6} s",
+            p.transport.name(),
+            p.size_bytes,
+            p.time_s
+        );
+    }
+    0
+}
+
+fn bench_mapreduce() -> i32 {
+    println!("Table 1 — MapReduce phase times (s), 30 GB / 300x300 tasks");
+    println!(
+        "  {:<10} {:<10} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8} {:>9}",
+        "app", "transport", "in-read", "map", "iw", "ir", "reduce", "out", "total"
+    );
+    for r in exp::table1_mapreduce() {
+        let p = r.phases;
+        println!(
+            "  {:<10} {:<10} {:>8.2} {:>8.1} {:>8.2} {:>8.2} {:>8.1} {:>8.2} {:>9.1}",
+            r.app,
+            r.transport.name(),
+            p.input_read_s,
+            p.map_process_s,
+            p.intermediate_write_s,
+            p.intermediate_read_s,
+            p.reduce_process_s,
+            p.output_write_s,
+            p.total()
+        );
+    }
+    println!("  (paper: WordCount iw 3.55/8.15, ir 33.39/43.40; Sort iw 3.27/5.32, ir 11.37/41.77)");
+    0
+}
+
+fn bench_colmena() -> i32 {
+    println!("Table 2 — Colmena communication stages (ms), 1 MB payloads");
+    println!(
+        "  {:<10} {:>12} {:>12} {:>13} {:>12}",
+        "transport", "input-write", "input-read", "result-write", "result-read"
+    );
+    for r in exp::table2_colmena() {
+        println!(
+            "  {:<10} {:>12.2} {:>12.2} {:>13.2} {:>12.2}",
+            r.transport.name(),
+            1e3 * r.stages.input_write_s,
+            1e3 * r.stages.input_read_s,
+            1e3 * r.stages.result_write_s,
+            1e3 * r.stages.result_read_s
+        );
+    }
+    println!("  (paper: Redis 7.15/0.70/18.04/0.11; SharedFS 32.31/11.36/244.72/3.50)");
+    0
+}
+
+fn bench_containers() -> i32 {
+    println!("Table 3 — cold container instantiation (s), 10k samples/model");
+    println!("  {:<8} {:<12} {:>8} {:>8} {:>8}", "system", "container", "min", "max", "mean");
+    for r in exp::table3_containers(10_000, 42) {
+        println!(
+            "  {:<8} {:<12} {:>8.2} {:>8.2} {:>8.2}",
+            r.system, r.container, r.min_s, r.max_s, r.mean_s
+        );
+    }
+    println!("  (paper: theta 9.83/14.06/10.40, cori 7.25/31.26/8.49,");
+    println!("          ec2-docker 1.74/1.88/1.79, ec2-singularity 1.19/1.26/1.22)");
+    0
+}
+
+fn bench_routing() -> i32 {
+    println!("Figs. 6-7 — warming-aware vs random routing");
+    println!("  10 nodes x 10 workers, 10 container types, uniform batches");
+    println!(
+        "  {:>5} {:>6} | {:>12} {:>12} {:>7} | {:>10} {:>10}",
+        "dur", "batch", "warming (s)", "random (s)", "gain", "wa colds", "rnd colds"
+    );
+    let pts = exp::fig6_fig7_routing(
+        &[500, 1000, 2000, 3000],
+        &[0.0, 1.0, 5.0, 20.0],
+        7,
+    );
+    for p in pts {
+        let gain = 100.0 * (p.random_completion_s - p.warming_completion_s)
+            / p.random_completion_s;
+        println!(
+            "  {:>5.0} {:>6} | {:>12.1} {:>12.1} {:>6.1}% | {:>10} {:>10}",
+            p.duration_s,
+            p.batch,
+            p.warming_completion_s,
+            p.random_completion_s,
+            gain,
+            p.warming_cold_starts,
+            p.random_cold_starts
+        );
+    }
+    println!("  (paper: up to 61% completion reduction; 22 cold starts at 3000 tasks)");
+    0
+}
+
+fn bench_batching() -> i32 {
+    let r = exp::batching_ablation();
+    println!("§7.5 — batching ablation, 10 000 no-ops on 4 Theta nodes:");
+    println!("  internal batching ON : {:>8.1} s   (paper: 6.7 s)", r.batched_s);
+    println!("  internal batching OFF: {:>8.1} s   (paper: 118 s)", r.unbatched_s);
+    println!("  speedup              : {:>8.1}x", r.unbatched_s / r.batched_s);
+    0
+}
+
+fn artifacts() -> i32 {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("no artifacts/ — run `make artifacts` first");
+        return 1;
+    }
+    let rt = PjrtRuntime::load_dir(dir).unwrap();
+    println!("loaded artifacts: {:?}", rt.artifact_names());
+    0
+}

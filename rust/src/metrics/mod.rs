@@ -1,0 +1,223 @@
+//! Instrumentation: the Fig. 3 latency decomposition and system counters.
+//!
+//! Fig. 3 splits a task's round trip into:
+//! * `t_s` — web-service latency (auth + Redis store + queue append),
+//! * `t_f` — forwarder latency (queue read, dispatch, result write),
+//! * `t_e` — endpoint latency (agent/manager queuing + dispatch),
+//! * `t_w` — function execution on the worker.
+//!
+//! Stages are recorded per task; [`LatencyBreakdown`] aggregates them.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use std::sync::Mutex;
+
+use crate::common::ids::TaskId;
+use crate::common::time::Time;
+
+/// One task's per-stage timings, seconds.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StageTimes {
+    pub t_s: f64,
+    pub t_f: f64,
+    pub t_e: f64,
+    pub t_w: f64,
+}
+
+impl StageTimes {
+    pub fn total(&self) -> f64 {
+        self.t_s + self.t_f + self.t_e + self.t_w
+    }
+}
+
+/// Aggregated stats over many tasks.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p99: f64,
+}
+
+/// Compute summary stats for a sample.
+pub fn summarize(samples: &[f64]) -> Summary {
+    if samples.is_empty() {
+        return Summary::default();
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| sorted[((sorted.len() - 1) as f64 * p).round() as usize];
+    Summary {
+        count: sorted.len(),
+        mean: sorted.iter().sum::<f64>() / sorted.len() as f64,
+        min: sorted[0],
+        max: *sorted.last().unwrap(),
+        p50: pct(0.50),
+        p99: pct(0.99),
+    }
+}
+
+/// Collects per-task stage timings (Fig. 3 harness).
+#[derive(Clone, Default)]
+pub struct LatencyBreakdown {
+    inner: Arc<Mutex<HashMap<TaskId, StageRecord>>>,
+}
+
+#[derive(Default, Clone, Copy)]
+struct StageRecord {
+    submit: Option<Time>,
+    queued: Option<Time>,
+    forwarded: Option<Time>,
+    started: Option<Time>,
+    finished: Option<Time>,
+    result_stored: Option<Time>,
+}
+
+impl LatencyBreakdown {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_submit(&self, t: TaskId, now: Time) {
+        self.inner.lock().unwrap().entry(t).or_default().submit = Some(now);
+    }
+
+    /// Task persisted + appended to the endpoint queue (end of t_s).
+    pub fn on_queued(&self, t: TaskId, now: Time) {
+        self.inner.lock().unwrap().entry(t).or_default().queued = Some(now);
+    }
+
+    /// Forwarder handed the task to the agent (end of forwarder's send half).
+    pub fn on_forwarded(&self, t: TaskId, now: Time) {
+        self.inner.lock().unwrap().entry(t).or_default().forwarded = Some(now);
+    }
+
+    /// Worker began executing (end of t_e's dispatch half).
+    pub fn on_started(&self, t: TaskId, now: Time) {
+        self.inner.lock().unwrap().entry(t).or_default().started = Some(now);
+    }
+
+    /// Worker finished (t_w = started..finished).
+    pub fn on_finished(&self, t: TaskId, now: Time) {
+        self.inner.lock().unwrap().entry(t).or_default().finished = Some(now);
+    }
+
+    /// Result written back to the store (closes t_f's return half).
+    pub fn on_result_stored(&self, t: TaskId, now: Time) {
+        self.inner.lock().unwrap().entry(t).or_default().result_stored = Some(now);
+    }
+
+    /// Stage decomposition for one task, if all stamps are present.
+    pub fn breakdown(&self, t: TaskId) -> Option<StageTimes> {
+        let g = self.inner.lock().unwrap();
+        let r = g.get(&t)?;
+        let (submit, queued, forwarded, started, finished, stored) = (
+            r.submit?,
+            r.queued?,
+            r.forwarded?,
+            r.started?,
+            r.finished?,
+            r.result_stored?,
+        );
+        Some(StageTimes {
+            t_s: queued - submit,
+            t_f: (forwarded - queued) + (stored - finished).max(0.0),
+            t_e: started - forwarded,
+            t_w: finished - started,
+        })
+    }
+
+    pub fn all_breakdowns(&self) -> Vec<StageTimes> {
+        let g = self.inner.lock().unwrap();
+        let keys: Vec<TaskId> = g.keys().copied().collect();
+        drop(g);
+        keys.into_iter().filter_map(|k| self.breakdown(k)).collect()
+    }
+}
+
+/// Cheap global counters (tasks dispatched, cold starts, heartbeats, …).
+#[derive(Default)]
+pub struct Counters {
+    pub tasks_submitted: AtomicU64,
+    pub tasks_completed: AtomicU64,
+    pub tasks_failed: AtomicU64,
+    pub tasks_redispatched: AtomicU64,
+    pub cold_starts: AtomicU64,
+    pub warm_hits: AtomicU64,
+    pub heartbeats: AtomicU64,
+    pub bytes_through_service: AtomicU64,
+}
+
+impl Counters {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    pub fn incr(counter: &AtomicU64) -> u64 {
+        counter.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    pub fn add(counter: &AtomicU64, n: u64) -> u64 {
+        counter.fetch_add(n, Ordering::Relaxed) + n
+    }
+
+    pub fn get(counter: &AtomicU64) -> u64 {
+        counter.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summarize_basic() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.count, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert_eq!(summarize(&[]).count, 0);
+    }
+
+    #[test]
+    fn breakdown_stages() {
+        let lb = LatencyBreakdown::new();
+        let t = TaskId::new();
+        lb.on_submit(t, 0.0);
+        lb.on_queued(t, 0.010); // t_s = 10 ms
+        lb.on_forwarded(t, 0.015); // forward leg 5 ms
+        lb.on_started(t, 0.035); // t_e = 20 ms
+        lb.on_finished(t, 0.055); // t_w = 20 ms
+        lb.on_result_stored(t, 0.060); // return leg 5 ms
+        let b = lb.breakdown(t).unwrap();
+        assert!((b.t_s - 0.010).abs() < 1e-9);
+        assert!((b.t_f - 0.010).abs() < 1e-9);
+        assert!((b.t_e - 0.020).abs() < 1e-9);
+        assert!((b.t_w - 0.020).abs() < 1e-9);
+        assert!((b.total() - 0.060).abs() < 1e-9);
+    }
+
+    #[test]
+    fn incomplete_breakdown_is_none() {
+        let lb = LatencyBreakdown::new();
+        let t = TaskId::new();
+        lb.on_submit(t, 0.0);
+        assert!(lb.breakdown(t).is_none());
+        assert!(lb.breakdown(TaskId::new()).is_none());
+    }
+
+    #[test]
+    fn counters_work() {
+        let c = Counters::new();
+        Counters::incr(&c.tasks_submitted);
+        Counters::incr(&c.tasks_submitted);
+        Counters::add(&c.bytes_through_service, 100);
+        assert_eq!(Counters::get(&c.tasks_submitted), 2);
+        assert_eq!(Counters::get(&c.bytes_through_service), 100);
+    }
+}

@@ -1,0 +1,230 @@
+//! §4.4 + §6.3 — the Parsl-like provider interface and the elastic
+//! provisioning strategy.
+//!
+//! funcX uses Parsl's provider interface to provision nodes uniformly
+//! across batch schedulers (Slurm, PBS, Cobalt, SGE, Condor), clouds
+//! (AWS, Azure, GCP), and Kubernetes, with a pilot-job model. The
+//! *strategy* monitors endpoint load every second and scales between
+//! user-configured min/max bounds, releasing nodes idle longer than the
+//! max idle time (default 2 min).
+
+mod strategy;
+
+pub use strategy::{ScaleDecision, Strategy, StrategyInputs};
+
+use crate::common::rng::Rng;
+use crate::common::time::Time;
+
+/// A provisioned-node handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct NodeHandle(pub u64);
+
+/// State of one provisioning request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NodeState {
+    /// In the scheduler queue / instance booting.
+    Pending { ready_at: Time },
+    /// Running and available to host a manager.
+    Active,
+    /// Released.
+    Released,
+}
+
+/// Uniform interface over batch schedulers, clouds and K8s (§4.4).
+pub trait Provider: Send {
+    /// Request `n` nodes; returns handles immediately (pilot-job style);
+    /// nodes become active after the provider's queue/boot delay.
+    fn request_nodes(&mut self, n: usize, now: Time) -> Vec<NodeHandle>;
+
+    /// Release a node.
+    fn release_node(&mut self, h: NodeHandle, now: Time);
+
+    /// Advance provider-internal state; returns nodes that became active
+    /// since the last poll.
+    fn poll(&mut self, now: Time) -> Vec<NodeHandle>;
+
+    fn state(&self, h: NodeHandle) -> Option<NodeState>;
+
+    fn active_count(&self) -> usize;
+
+    fn pending_count(&self) -> usize;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Queue-delay profile for a simulated provider.
+#[derive(Clone, Copy, Debug)]
+pub struct DelayProfile {
+    /// Median queue/boot delay in seconds.
+    pub median_s: f64,
+    /// Log-normal sigma (spread). 0 = deterministic.
+    pub sigma: f64,
+}
+
+impl DelayProfile {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        if self.sigma == 0.0 {
+            self.median_s
+        } else {
+            // median of lognormal(mu, sigma) is exp(mu).
+            rng.lognormal(self.median_s.max(1e-9).ln(), self.sigma)
+        }
+    }
+}
+
+/// A simulated resource provider with a queue-delay model. One type
+/// covers all schedulers; the constructors encode per-system profiles.
+pub struct SimProvider {
+    name: &'static str,
+    delay: DelayProfile,
+    rng: Rng,
+    nodes: std::collections::HashMap<NodeHandle, NodeState>,
+    next_id: u64,
+}
+
+impl SimProvider {
+    pub fn new(name: &'static str, delay: DelayProfile, seed: u64) -> Self {
+        SimProvider {
+            name,
+            delay,
+            rng: Rng::new(seed),
+            nodes: Default::default(),
+            next_id: 0,
+        }
+    }
+
+    /// HPC batch scheduler (Slurm/PBS/Cobalt): minutes-scale queue waits.
+    pub fn slurm(seed: u64) -> Self {
+        Self::new("slurm", DelayProfile { median_s: 120.0, sigma: 0.8 }, seed)
+    }
+
+    pub fn pbs(seed: u64) -> Self {
+        Self::new("pbs", DelayProfile { median_s: 180.0, sigma: 0.9 }, seed)
+    }
+
+    pub fn cobalt(seed: u64) -> Self {
+        Self::new("cobalt", DelayProfile { median_s: 150.0, sigma: 0.8 }, seed)
+    }
+
+    /// Cloud instances: tens of seconds to boot.
+    pub fn cloud(seed: u64) -> Self {
+        Self::new("cloud", DelayProfile { median_s: 30.0, sigma: 0.3 }, seed)
+    }
+
+    /// Kubernetes pods: seconds.
+    pub fn kubernetes(seed: u64) -> Self {
+        Self::new("kubernetes", DelayProfile { median_s: 2.0, sigma: 0.3 }, seed)
+    }
+
+    /// Local processes: effectively instant (used by the live engine).
+    pub fn local(seed: u64) -> Self {
+        Self::new("local", DelayProfile { median_s: 0.0, sigma: 0.0 }, seed)
+    }
+}
+
+impl Provider for SimProvider {
+    fn request_nodes(&mut self, n: usize, now: Time) -> Vec<NodeHandle> {
+        (0..n)
+            .map(|_| {
+                let h = NodeHandle(self.next_id);
+                self.next_id += 1;
+                let ready_at = now + self.delay.sample(&mut self.rng);
+                self.nodes.insert(h, NodeState::Pending { ready_at });
+                h
+            })
+            .collect()
+    }
+
+    fn release_node(&mut self, h: NodeHandle, _now: Time) {
+        self.nodes.insert(h, NodeState::Released);
+    }
+
+    fn poll(&mut self, now: Time) -> Vec<NodeHandle> {
+        let mut activated = Vec::new();
+        for (h, st) in self.nodes.iter_mut() {
+            if let NodeState::Pending { ready_at } = st {
+                if now >= *ready_at {
+                    *st = NodeState::Active;
+                    activated.push(*h);
+                }
+            }
+        }
+        activated.sort_by_key(|h| h.0);
+        activated
+    }
+
+    fn state(&self, h: NodeHandle) -> Option<NodeState> {
+        self.nodes.get(&h).copied()
+    }
+
+    fn active_count(&self) -> usize {
+        self.nodes.values().filter(|s| matches!(s, NodeState::Active)).count()
+    }
+
+    fn pending_count(&self) -> usize {
+        self.nodes.values().filter(|s| matches!(s, NodeState::Pending { .. })).count()
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_nodes_activate_immediately() {
+        let mut p = SimProvider::local(1);
+        let hs = p.request_nodes(3, 0.0);
+        assert_eq!(hs.len(), 3);
+        assert_eq!(p.pending_count(), 3);
+        let active = p.poll(0.0);
+        assert_eq!(active.len(), 3);
+        assert_eq!(p.active_count(), 3);
+    }
+
+    #[test]
+    fn slurm_nodes_wait_in_queue() {
+        let mut p = SimProvider::slurm(2);
+        p.request_nodes(4, 0.0);
+        assert!(p.poll(1.0).is_empty(), "no node should clear a batch queue in 1s");
+        // All eventually activate (give a generous horizon).
+        let activated = p.poll(1e6);
+        assert_eq!(activated.len(), 4);
+    }
+
+    #[test]
+    fn release_is_terminal() {
+        let mut p = SimProvider::local(3);
+        let h = p.request_nodes(1, 0.0)[0];
+        p.poll(0.0);
+        p.release_node(h, 1.0);
+        assert_eq!(p.state(h), Some(NodeState::Released));
+        assert_eq!(p.active_count(), 0);
+        assert!(p.poll(2.0).is_empty());
+    }
+
+    #[test]
+    fn provider_profiles_ordered() {
+        // Queue-delay medians: HPC > cloud > k8s > local.
+        let mut slurm = SimProvider::slurm(4);
+        let mut cloud = SimProvider::cloud(4);
+        let mut k8s = SimProvider::kubernetes(4);
+        let sample = |p: &mut SimProvider| {
+            let hs = p.request_nodes(200, 0.0);
+            let mut times: Vec<f64> = hs
+                .iter()
+                .map(|h| match p.state(*h).unwrap() {
+                    NodeState::Pending { ready_at } => ready_at,
+                    _ => 0.0,
+                })
+                .collect();
+            times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            times[times.len() / 2]
+        };
+        let (s, c, k) = (sample(&mut slurm), sample(&mut cloud), sample(&mut k8s));
+        assert!(s > c && c > k, "medians: slurm {s} cloud {c} k8s {k}");
+    }
+}

@@ -1,0 +1,231 @@
+//! §6.3 — the elastic provisioning strategy (monitoring + scaling).
+//!
+//! Every `strategy_period_s` the agent feeds the strategy a load
+//! snapshot; the strategy returns how many nodes to request and which
+//! idle nodes to release. Pure function of its inputs → trivially
+//! testable, shared verbatim by the live engine and the simulator.
+
+use crate::common::config::EndpointConfig;
+use crate::common::time::Time;
+use crate::provider::NodeHandle;
+
+/// Load snapshot handed to the strategy (§6.3 "the monitoring component
+/// ... fetch[es] the current endpoint load, including the active and idle
+/// resources and the number of pending function requests").
+#[derive(Clone, Debug)]
+pub struct StrategyInputs {
+    pub now: Time,
+    /// Tasks waiting at the agent (not yet dispatched to managers).
+    pub pending_tasks: usize,
+    /// Idle worker slots across connected managers.
+    pub idle_workers: usize,
+    /// Nodes currently active (hosting managers).
+    pub active_nodes: usize,
+    /// Nodes requested but not yet active.
+    pub pending_nodes: usize,
+    /// Nodes idle (no busy workers) with their idle-since stamps.
+    pub idle_nodes: Vec<(NodeHandle, Time)>,
+}
+
+/// The strategy's verdict for this tick.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ScaleDecision {
+    pub request_nodes: usize,
+    pub release: Vec<NodeHandle>,
+}
+
+/// The paper's default strategy:
+/// * scale **out** when pending tasks exceed idle workers, requesting one
+///   node per `tasks_per_node_scaling` excess pending tasks (§6.3
+///   "request one more resource when there are ten waiting requests"),
+///   clamped by `max_nodes`;
+/// * scale **in** by releasing nodes idle longer than
+///   `node_idle_timeout_s` (default 2 min), clamped by `min_nodes`.
+#[derive(Clone, Debug)]
+pub struct Strategy {
+    pub cfg: EndpointConfig,
+}
+
+impl Strategy {
+    pub fn new(cfg: EndpointConfig) -> Self {
+        Strategy { cfg }
+    }
+
+    pub fn decide(&self, inputs: &StrategyInputs) -> ScaleDecision {
+        let mut d = ScaleDecision::default();
+        let total = inputs.active_nodes + inputs.pending_nodes;
+
+        // Scale out.
+        if inputs.pending_tasks > inputs.idle_workers {
+            let excess = inputs.pending_tasks - inputs.idle_workers;
+            let per = self.cfg.tasks_per_node_scaling.max(1);
+            let want = excess.div_ceil(per);
+            let headroom = self.cfg.max_nodes.saturating_sub(total);
+            d.request_nodes = want.min(headroom);
+        }
+
+        // Scale in: release idle-timed-out nodes, but never below min and
+        // never while work is queued (they'd be re-requested immediately).
+        if inputs.pending_tasks == 0 {
+            let releasable = inputs.active_nodes.saturating_sub(self.cfg.min_nodes);
+            let mut victims: Vec<(NodeHandle, Time)> = inputs
+                .idle_nodes
+                .iter()
+                .filter(|(_, since)| inputs.now - since >= self.cfg.node_idle_timeout_s)
+                .copied()
+                .collect();
+            // Longest-idle first.
+            victims.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            d.release = victims.into_iter().take(releasable).map(|(h, _)| h).collect();
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> EndpointConfig {
+        EndpointConfig {
+            min_nodes: 1,
+            max_nodes: 8,
+            tasks_per_node_scaling: 10,
+            node_idle_timeout_s: 120.0,
+            ..Default::default()
+        }
+    }
+
+    fn inputs() -> StrategyInputs {
+        StrategyInputs {
+            now: 1000.0,
+            pending_tasks: 0,
+            idle_workers: 0,
+            active_nodes: 2,
+            pending_nodes: 0,
+            idle_nodes: vec![],
+        }
+    }
+
+    #[test]
+    fn scales_out_one_node_per_ten_pending() {
+        let s = Strategy::new(cfg());
+        let mut i = inputs();
+        i.pending_tasks = 25;
+        i.idle_workers = 0;
+        assert_eq!(s.decide(&i).request_nodes, 3); // ceil(25/10)
+        i.pending_tasks = 10;
+        assert_eq!(s.decide(&i).request_nodes, 1);
+        i.pending_tasks = 1;
+        assert_eq!(s.decide(&i).request_nodes, 1);
+    }
+
+    #[test]
+    fn no_scale_out_when_idle_capacity_covers() {
+        let s = Strategy::new(cfg());
+        let mut i = inputs();
+        i.pending_tasks = 5;
+        i.idle_workers = 5;
+        assert_eq!(s.decide(&i).request_nodes, 0);
+    }
+
+    #[test]
+    fn max_nodes_clamps() {
+        let s = Strategy::new(cfg());
+        let mut i = inputs();
+        i.pending_tasks = 1000;
+        i.active_nodes = 6;
+        i.pending_nodes = 1;
+        assert_eq!(s.decide(&i).request_nodes, 1); // 8 - 7
+        i.active_nodes = 8;
+        assert_eq!(s.decide(&i).request_nodes, 0);
+    }
+
+    #[test]
+    fn releases_idle_timed_out_nodes() {
+        let s = Strategy::new(cfg());
+        let mut i = inputs();
+        i.active_nodes = 3;
+        i.idle_nodes = vec![
+            (NodeHandle(1), 800.0),  // idle 200s -> release
+            (NodeHandle(2), 950.0),  // idle 50s -> keep
+            (NodeHandle(3), 700.0),  // idle 300s -> release
+        ];
+        let d = s.decide(&i);
+        assert_eq!(d.release, vec![NodeHandle(3), NodeHandle(1)]); // longest idle first
+    }
+
+    #[test]
+    fn never_releases_below_min() {
+        let s = Strategy::new(cfg());
+        let mut i = inputs();
+        i.active_nodes = 2;
+        i.idle_nodes = vec![(NodeHandle(1), 0.0), (NodeHandle(2), 0.0)];
+        let d = s.decide(&i);
+        assert_eq!(d.release.len(), 1); // min_nodes = 1
+    }
+
+    #[test]
+    fn no_release_while_tasks_pending() {
+        let s = Strategy::new(cfg());
+        let mut i = inputs();
+        i.pending_tasks = 3;
+        i.idle_workers = 50; // plenty idle, no scale-out
+        i.active_nodes = 3;
+        i.idle_nodes = vec![(NodeHandle(1), 0.0)];
+        let d = s.decide(&i);
+        assert_eq!(d.request_nodes, 0);
+        assert!(d.release.is_empty());
+    }
+}
+
+#[cfg(test)]
+mod proptests {
+    use super::*;
+    use crate::testing::check;
+
+    #[test]
+    fn bounds_always_respected() {
+        // min <= active - released, active + pending + requested <= max.
+        check("strategy-bounds", 300, |g| {
+            let cfg = EndpointConfig {
+                min_nodes: g.usize(0, 4),
+                max_nodes: g.usize(4, 64),
+                tasks_per_node_scaling: g.usize(1, 20),
+                node_idle_timeout_s: g.f64(1.0, 300.0),
+                ..Default::default()
+            };
+            let active = g.usize(0, 32);
+            let idle_n = g.usize(0, active + 1);
+            let now = g.f64(1000.0, 2000.0);
+            let inputs = StrategyInputs {
+                now,
+                pending_tasks: g.usize(0, 2000),
+                idle_workers: g.usize(0, 512),
+                active_nodes: active,
+                pending_nodes: g.usize(0, 8),
+                idle_nodes: (0..idle_n)
+                    .map(|i| (NodeHandle(i as u64), g.f64(0.0, now)))
+                    .collect(),
+            };
+            let d = Strategy::new(cfg.clone()).decide(&inputs);
+            let total_after =
+                inputs.active_nodes + inputs.pending_nodes + d.request_nodes;
+            assert!(
+                total_after <= cfg.max_nodes.max(inputs.active_nodes + inputs.pending_nodes),
+                "scale-out exceeded max: {total_after} > {}",
+                cfg.max_nodes
+            );
+            assert!(
+                inputs.active_nodes - d.release.len() >= cfg.min_nodes.min(inputs.active_nodes),
+                "released below min"
+            );
+            // Released nodes must all have timed out.
+            for h in &d.release {
+                let (_, since) =
+                    inputs.idle_nodes.iter().find(|(n, _)| n == h).expect("released unknown node");
+                assert!(inputs.now - since >= cfg.node_idle_timeout_s);
+            }
+        });
+    }
+}

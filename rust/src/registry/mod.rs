@@ -1,0 +1,249 @@
+//! The persistent registry of users, functions, endpoints, and container
+//! images (§3, §4.1 — the AWS RDS database stand-in).
+//!
+//! Functions are registered with a name, serialized body, optional
+//! container image and sharing list; endpoints with descriptive metadata.
+//! Every entity gets a UUID used for subsequent management/invocation.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use crate::common::error::{Error, Result};
+use crate::common::ids::{ContainerId, EndpointId, FunctionId, UserId};
+use crate::common::task::Payload;
+use crate::containers::ContainerTech;
+
+/// A registered function (§3 "Function registration").
+#[derive(Clone, Debug)]
+pub struct FunctionRecord {
+    pub id: FunctionId,
+    pub name: String,
+    pub owner: UserId,
+    /// Serialized function body. For built-in payloads this encodes the
+    /// payload kind; for real funcX it would be the pickled Python.
+    pub payload: Payload,
+    /// Container image required for execution (§4.2), if any.
+    pub container: Option<ContainerId>,
+    /// Registration epoch (bookkeeping only).
+    pub registered_at: f64,
+}
+
+/// Endpoint connection status as seen by the service.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EndpointStatus {
+    /// Registered but no agent connected.
+    Offline,
+    /// Agent connected and heartbeating.
+    Online,
+    /// Heartbeats missed; tasks are queued, not dispatched (§4.1).
+    Lost,
+}
+
+/// A registered endpoint (§3 "Endpoints").
+#[derive(Clone, Debug)]
+pub struct EndpointRecord {
+    pub id: EndpointId,
+    pub name: String,
+    pub description: String,
+    pub owner: UserId,
+    pub status: EndpointStatus,
+}
+
+/// A registered container image (§4.2).
+#[derive(Clone, Debug)]
+pub struct ContainerRecord {
+    pub id: ContainerId,
+    pub name: String,
+    /// Image technology: Docker for cloud, Singularity/Shifter for HPC.
+    pub tech: ContainerTech,
+}
+
+#[derive(Default)]
+struct RegistryState {
+    functions: HashMap<FunctionId, FunctionRecord>,
+    endpoints: HashMap<EndpointId, EndpointRecord>,
+    containers: HashMap<ContainerId, ContainerRecord>,
+}
+
+/// The registry service (RDS stand-in). Clone-shareable.
+#[derive(Clone, Default)]
+pub struct Registry {
+    state: Arc<RwLock<RegistryState>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    // ---- functions -------------------------------------------------------
+
+    pub fn register_function(
+        &self,
+        name: &str,
+        owner: UserId,
+        payload: Payload,
+        container: Option<ContainerId>,
+    ) -> FunctionId {
+        let id = FunctionId::new();
+        self.state.write().unwrap().functions.insert(
+            id,
+            FunctionRecord {
+                id,
+                name: name.to_string(),
+                owner,
+                payload,
+                container,
+                registered_at: 0.0,
+            },
+        );
+        id
+    }
+
+    pub fn function(&self, id: FunctionId) -> Result<FunctionRecord> {
+        self.state
+            .read()
+            .unwrap()
+            .functions
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| Error::NotFound(format!("function {id}")))
+    }
+
+    /// Users may update functions they own (§3).
+    pub fn update_function(
+        &self,
+        id: FunctionId,
+        by: UserId,
+        payload: Payload,
+    ) -> Result<()> {
+        let mut st = self.state.write().unwrap();
+        let f = st
+            .functions
+            .get_mut(&id)
+            .ok_or_else(|| Error::NotFound(format!("function {id}")))?;
+        if f.owner != by {
+            return Err(Error::Forbidden(format!("{by} does not own function {id}")));
+        }
+        f.payload = payload;
+        Ok(())
+    }
+
+    pub fn function_count(&self) -> usize {
+        self.state.read().unwrap().functions.len()
+    }
+
+    // ---- endpoints -------------------------------------------------------
+
+    pub fn register_endpoint(
+        &self,
+        name: &str,
+        description: &str,
+        owner: UserId,
+    ) -> EndpointId {
+        let id = EndpointId::new();
+        self.state.write().unwrap().endpoints.insert(
+            id,
+            EndpointRecord {
+                id,
+                name: name.to_string(),
+                description: description.to_string(),
+                owner,
+                status: EndpointStatus::Offline,
+            },
+        );
+        id
+    }
+
+    pub fn endpoint(&self, id: EndpointId) -> Result<EndpointRecord> {
+        self.state
+            .read()
+            .unwrap()
+            .endpoints
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| Error::NotFound(format!("endpoint {id}")))
+    }
+
+    pub fn set_endpoint_status(&self, id: EndpointId, status: EndpointStatus) -> Result<()> {
+        let mut st = self.state.write().unwrap();
+        let e = st
+            .endpoints
+            .get_mut(&id)
+            .ok_or_else(|| Error::NotFound(format!("endpoint {id}")))?;
+        e.status = status;
+        Ok(())
+    }
+
+    pub fn endpoints(&self) -> Vec<EndpointRecord> {
+        self.state.read().unwrap().endpoints.values().cloned().collect()
+    }
+
+    // ---- containers ------------------------------------------------------
+
+    pub fn register_container(&self, name: &str, tech: ContainerTech) -> ContainerId {
+        let id = ContainerId::new();
+        self.state
+            .write()
+            .unwrap()
+            .containers
+            .insert(id, ContainerRecord { id, name: name.to_string(), tech });
+        id
+    }
+
+    pub fn container(&self, id: ContainerId) -> Result<ContainerRecord> {
+        self.state
+            .read()
+            .unwrap()
+            .containers
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| Error::NotFound(format!("container {id}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn function_register_lookup_update() {
+        let r = Registry::new();
+        let owner = UserId::new();
+        let other = UserId::new();
+        let f = r.register_function("process_stills", owner, Payload::Noop, None);
+        assert_eq!(r.function(f).unwrap().name, "process_stills");
+        assert_eq!(r.function_count(), 1);
+
+        // owner may update
+        r.update_function(f, owner, Payload::Sleep(1.0)).unwrap();
+        assert_eq!(r.function(f).unwrap().payload, Payload::Sleep(1.0));
+        // non-owner may not
+        assert!(matches!(
+            r.update_function(f, other, Payload::Noop),
+            Err(Error::Forbidden(_))
+        ));
+        // unknown function
+        assert!(r.function(FunctionId::new()).is_err());
+    }
+
+    #[test]
+    fn endpoint_lifecycle() {
+        let r = Registry::new();
+        let owner = UserId::new();
+        let e = r.register_endpoint("theta-knl", "ALCF Theta", owner);
+        assert_eq!(r.endpoint(e).unwrap().status, EndpointStatus::Offline);
+        r.set_endpoint_status(e, EndpointStatus::Online).unwrap();
+        assert_eq!(r.endpoint(e).unwrap().status, EndpointStatus::Online);
+        assert_eq!(r.endpoints().len(), 1);
+        assert!(r.set_endpoint_status(EndpointId::new(), EndpointStatus::Online).is_err());
+    }
+
+    #[test]
+    fn container_registry() {
+        let r = Registry::new();
+        let c = r.register_container("dials-env", ContainerTech::Singularity);
+        assert_eq!(r.container(c).unwrap().tech, ContainerTech::Singularity);
+        assert!(r.container(ContainerId::new()).is_err());
+    }
+}

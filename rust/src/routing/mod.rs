@@ -1,0 +1,583 @@
+//! §6.2 — warming-aware function routing at the funcX agent.
+//!
+//! The agent routes each task to a manager based on the container types
+//! the managers advertise:
+//!
+//! 1. If managers have a *warm* container of the required type with idle
+//!    capacity, pick the one with the **most available container
+//!    workers** (load balance).
+//! 2. Otherwise pick a manager with capacity **at random** (the paper's
+//!    fallback), cold-starting there.
+//!
+//! The module also provides the randomized baseline the paper compares
+//! against (Figs. 6–7) plus round-robin and bin-packing alternatives
+//! (§6.2 "other scheduling policies ... could also be used"), all behind
+//! the [`Scheduler`] trait so the live engine and simulator share them.
+
+use std::collections::HashMap;
+
+use crate::common::ids::{ContainerId, ManagerId};
+use crate::common::rng::Rng;
+
+/// What a manager advertises to the agent (§6.2 "Each manager advertises
+/// its deployed container types and its available resources").
+#[derive(Clone, Debug)]
+pub struct ManagerView {
+    pub id: ManagerId,
+    /// Deployed (warm, busy or idle) containers by type.
+    pub deployed: HashMap<ContainerId, usize>,
+    /// Warm *idle* containers by type (subset of `deployed`).
+    pub warm_idle: HashMap<ContainerId, usize>,
+    /// Slots not currently executing (warm idle + empty).
+    pub available_slots: usize,
+    /// Total worker slots on the node.
+    pub total_slots: usize,
+    /// Tasks already queued at the manager beyond running ones
+    /// (prefetched; §6.2). Routing counts these against availability.
+    pub queued: usize,
+}
+
+impl ManagerView {
+    /// Effective free capacity after queued-but-unstarted tasks.
+    pub fn effective_capacity(&self) -> usize {
+        self.available_slots.saturating_sub(self.queued)
+    }
+
+    fn has_capacity(&self, prefetch: usize) -> bool {
+        // A manager may accept up to `prefetch` tasks beyond its current
+        // availability (§6.2 prefetching).
+        self.available_slots + prefetch > self.queued
+    }
+}
+
+/// A routing decision for one task.
+pub trait Scheduler: Send {
+    /// Route a task needing `container` to one of `managers`.
+    /// `None` when no manager can accept work.
+    fn route(
+        &mut self,
+        container: Option<ContainerId>,
+        managers: &[ManagerView],
+        rng: &mut Rng,
+    ) -> Option<ManagerId>;
+
+    fn name(&self) -> &'static str;
+
+    /// Whether managers should warm-match queued tasks to idle warm
+    /// containers (§6.2: "warming-aware routing involves coordination
+    /// between managers and funcX agent"). The non-warming-aware
+    /// baseline serves its queue FIFO regardless of container types.
+    fn warm_matching(&self) -> bool {
+        false
+    }
+}
+
+/// The paper's warming-aware scheduler (§6.2).
+pub struct WarmingAware {
+    /// Extra tasks a manager may queue beyond availability.
+    pub prefetch: usize,
+}
+
+impl Default for WarmingAware {
+    fn default() -> Self {
+        WarmingAware { prefetch: 0 }
+    }
+}
+
+impl Scheduler for WarmingAware {
+    fn route(
+        &mut self,
+        container: Option<ContainerId>,
+        managers: &[ManagerView],
+        rng: &mut Rng,
+    ) -> Option<ManagerId> {
+        if let Some(c) = container {
+            // Tier 1: a warm *idle* container of the type exists — route
+            // there for an immediate warm start, tie-broken by most
+            // available workers (the paper's load-balance rule).
+            let tier1 = managers
+                .iter()
+                .filter(|m| m.warm_idle.get(&c).copied().unwrap_or(0) > 0)
+                .filter(|m| m.has_capacity(self.prefetch))
+                .max_by_key(|m| {
+                    (
+                        m.warm_idle.get(&c).copied().unwrap_or(0),
+                        m.effective_capacity(),
+                        std::cmp::Reverse(m.queued),
+                    )
+                });
+            if let Some(m) = tier1 {
+                return Some(m.id);
+            }
+            // Tier 2: containers of the type are deployed but busy —
+            // queue behind them (prefetch), preferring the manager with
+            // the most of them (reinforces manager/type affinity so
+            // queues stay aligned with warm sets).
+            let salt = |m: &ManagerView| {
+                let h = (c.0 .0 as u64) ^ ((c.0 .0 >> 64) as u64) ^ (m.id.0 .0 as u64);
+                h.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            };
+            let tier2 = managers
+                .iter()
+                .filter(|m| m.deployed.get(&c).copied().unwrap_or(0) > 0)
+                .filter(|m| m.has_capacity(self.prefetch))
+                .max_by_key(|m| {
+                    (
+                        m.deployed.get(&c).copied().unwrap_or(0),
+                        m.effective_capacity(),
+                        // Type-salted stable tie-break: equal-looking
+                        // managers resolve the same way for the same
+                        // type, so types specialise onto managers and
+                        // queues stay aligned with warm sets.
+                        salt(m),
+                    )
+                });
+            if let Some(m) = tier2 {
+                return Some(m.id);
+            }
+            // Tier 3: no container of the type anywhere — place the
+            // type's *first* container on a type-consistent manager
+            // (hash + linear probe over capacity) so subsequent tasks of
+            // the type concentrate instead of scattering. This plays the
+            // role of the paper's random fallback while keeping the
+            // choice stable per type.
+            if !managers.is_empty() {
+                let h = (c.0 .0 as u64) ^ ((c.0 .0 >> 64) as u64);
+                let start = (h % managers.len() as u64) as usize;
+                for i in 0..managers.len() {
+                    let m = &managers[(start + i) % managers.len()];
+                    if m.has_capacity(self.prefetch) {
+                        return Some(m.id);
+                    }
+                }
+            }
+            return None;
+        }
+        // Container-less tasks: random among managers with capacity
+        // (paper: "the funcX agent chooses one manager at random").
+        random_with_capacity(managers, self.prefetch, rng)
+    }
+
+    fn name(&self) -> &'static str {
+        "warming-aware"
+    }
+
+    fn warm_matching(&self) -> bool {
+        true
+    }
+}
+
+/// The non-warming-aware baseline (Figs. 6–7): uniformly random among
+/// managers with capacity, ignoring container warmth.
+#[derive(Default)]
+pub struct Randomized {
+    pub prefetch: usize,
+}
+
+impl Scheduler for Randomized {
+    fn route(
+        &mut self,
+        _container: Option<ContainerId>,
+        managers: &[ManagerView],
+        rng: &mut Rng,
+    ) -> Option<ManagerId> {
+        random_with_capacity(managers, self.prefetch, rng)
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+/// Round-robin over managers with capacity (§6.2 lists it as an
+/// alternative policy).
+#[derive(Default)]
+pub struct RoundRobin {
+    cursor: usize,
+    pub prefetch: usize,
+}
+
+impl Scheduler for RoundRobin {
+    fn route(
+        &mut self,
+        _container: Option<ContainerId>,
+        managers: &[ManagerView],
+        _rng: &mut Rng,
+    ) -> Option<ManagerId> {
+        if managers.is_empty() {
+            return None;
+        }
+        for i in 0..managers.len() {
+            let m = &managers[(self.cursor + i) % managers.len()];
+            if m.has_capacity(self.prefetch) {
+                self.cursor = (self.cursor + i + 1) % managers.len();
+                return Some(m.id);
+            }
+        }
+        None
+    }
+
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+}
+
+/// Bin-packing: fill the *least*-available manager that still has
+/// capacity, concentrating load so idle nodes can be released (§6.2
+/// alternative; pairs with the elastic strategy's scale-down).
+#[derive(Default)]
+pub struct BinPacking {
+    pub prefetch: usize,
+}
+
+impl Scheduler for BinPacking {
+    fn route(
+        &mut self,
+        _container: Option<ContainerId>,
+        managers: &[ManagerView],
+        _rng: &mut Rng,
+    ) -> Option<ManagerId> {
+        managers
+            .iter()
+            .filter(|m| m.has_capacity(self.prefetch))
+            .min_by_key(|m| (m.effective_capacity(), m.id.0 .0))
+            .map(|m| m.id)
+    }
+
+    fn name(&self) -> &'static str {
+        "bin-packing"
+    }
+}
+
+/// Kubernetes-endpoint routing (§6.2): on a K8s deployment each manager
+/// pod is bound to ONE container image, so "the agent simply needs to
+/// route tasks to corresponding managers" — pick among the managers
+/// pinned to the task's type (most available first); container-less
+/// tasks cannot run on a pinned pod.
+pub struct KubernetesRouting {
+    pub prefetch: usize,
+}
+
+impl KubernetesRouting {
+    pub fn new(prefetch: usize) -> Self {
+        KubernetesRouting { prefetch }
+    }
+}
+
+impl Scheduler for KubernetesRouting {
+    fn route(
+        &mut self,
+        container: Option<ContainerId>,
+        managers: &[ManagerView],
+        _rng: &mut Rng,
+    ) -> Option<ManagerId> {
+        let c = container?;
+        managers
+            .iter()
+            // A pod serves exactly one image: its deployed census is
+            // {c: n} (or empty before the first task lands).
+            .filter(|m| {
+                m.deployed.keys().all(|k| *k == c)
+                    && (m.deployed.contains_key(&c) || m.deployed.is_empty())
+            })
+            .filter(|m| m.has_capacity(self.prefetch))
+            .max_by_key(|m| (m.deployed.contains_key(&c), m.effective_capacity()))
+            .map(|m| m.id)
+    }
+
+    fn name(&self) -> &'static str {
+        "kubernetes"
+    }
+
+    fn warm_matching(&self) -> bool {
+        true
+    }
+}
+
+fn random_with_capacity(
+    managers: &[ManagerView],
+    prefetch: usize,
+    rng: &mut Rng,
+) -> Option<ManagerId> {
+    // Random-start first-fit: O(1) with plentiful capacity, O(n) worst
+    // case, no allocation, one RNG draw (this runs once per routed task —
+    // the agent hot path). Start position is uniform, so load spreads
+    // evenly even though the scan is deterministic from there.
+    if managers.is_empty() {
+        return None;
+    }
+    let start = rng.below(managers.len());
+    for i in 0..managers.len() {
+        let m = &managers[(start + i) % managers.len()];
+        if m.has_capacity(prefetch) {
+            return Some(m.id);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr(bits: u128, warm: &[(u128, usize)], avail: usize, total: usize) -> ManagerView {
+        ManagerView {
+            id: ManagerId::from_bits(bits),
+            deployed: warm
+                .iter()
+                .map(|(c, n)| (ContainerId::from_bits(*c), *n))
+                .collect(),
+            warm_idle: warm
+                .iter()
+                .map(|(c, n)| (ContainerId::from_bits(*c), *n))
+                .collect(),
+            available_slots: avail,
+            total_slots: total,
+            queued: 0,
+        }
+    }
+
+    #[test]
+    fn warming_aware_prefers_warm_manager() {
+        let managers = vec![
+            mgr(1, &[], 10, 10),
+            mgr(2, &[(7, 1)], 5, 10), // only manager with warm type-7
+        ];
+        let mut s = WarmingAware::default();
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            assert_eq!(
+                s.route(Some(ContainerId::from_bits(7)), &managers, &mut rng),
+                Some(ManagerId::from_bits(2))
+            );
+        }
+    }
+
+    #[test]
+    fn warming_aware_ties_broken_by_availability() {
+        // Both have warm type-7; pick the one with more available workers.
+        let managers = vec![mgr(1, &[(7, 1)], 2, 10), mgr(2, &[(7, 1)], 8, 10)];
+        let mut s = WarmingAware::default();
+        let mut rng = Rng::new(1);
+        assert_eq!(
+            s.route(Some(ContainerId::from_bits(7)), &managers, &mut rng),
+            Some(ManagerId::from_bits(2))
+        );
+    }
+
+    #[test]
+    fn warming_aware_fallback_is_type_consistent() {
+        // No warm containers anywhere: the fallback picks a manager with
+        // capacity, *stable per container type* so a type's containers
+        // concentrate rather than scatter.
+        let managers = vec![mgr(1, &[], 5, 10), mgr(2, &[], 5, 10)];
+        let mut s = WarmingAware::default();
+        let mut rng = Rng::new(2);
+        let c = ContainerId::from_bits(7);
+        let first = s.route(Some(c), &managers, &mut rng).unwrap();
+        for _ in 0..50 {
+            assert_eq!(s.route(Some(c), &managers, &mut rng), Some(first));
+        }
+        // Many distinct types spread across managers.
+        let mut seen = std::collections::HashSet::new();
+        for t in 0..64u128 {
+            seen.insert(
+                s.route(Some(ContainerId::from_bits(t + 100)), &managers, &mut rng).unwrap(),
+            );
+        }
+        assert_eq!(seen.len(), 2, "distinct types should spread over managers");
+        // Container-less tasks still route randomly among capacity.
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..100 {
+            seen.insert(s.route(None, &managers, &mut rng).unwrap());
+        }
+        assert_eq!(seen.len(), 2);
+    }
+
+    #[test]
+    fn no_capacity_returns_none() {
+        let managers = vec![mgr(1, &[], 0, 10)];
+        let mut rng = Rng::new(3);
+        assert!(WarmingAware::default()
+            .route(Some(ContainerId::from_bits(7)), &managers, &mut rng)
+            .is_none());
+        assert!(Randomized::default().route(None, &managers, &mut rng).is_none());
+        assert!(RoundRobin::default().route(None, &managers, &mut rng).is_none());
+        assert!(BinPacking::default().route(None, &managers, &mut rng).is_none());
+    }
+
+    #[test]
+    fn warm_but_full_manager_not_chosen() {
+        // Manager 2 has the warm container but zero capacity.
+        let managers = vec![mgr(1, &[], 5, 10), mgr(2, &[(7, 1)], 0, 10)];
+        let mut s = WarmingAware::default();
+        let mut rng = Rng::new(4);
+        assert_eq!(
+            s.route(Some(ContainerId::from_bits(7)), &managers, &mut rng),
+            Some(ManagerId::from_bits(1))
+        );
+    }
+
+    #[test]
+    fn prefetch_extends_capacity() {
+        let mut m = mgr(1, &[(7, 1)], 1, 10);
+        m.queued = 1; // availability exhausted by queued task
+        let managers = vec![m];
+        let mut rng = Rng::new(5);
+        // Without prefetch, no capacity.
+        assert!(WarmingAware { prefetch: 0 }
+            .route(Some(ContainerId::from_bits(7)), &managers, &mut rng)
+            .is_none());
+        // With prefetch, the manager can queue ahead.
+        assert!(WarmingAware { prefetch: 2 }
+            .route(Some(ContainerId::from_bits(7)), &managers, &mut rng)
+            .is_some());
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let managers = vec![mgr(1, &[], 5, 5), mgr(2, &[], 5, 5), mgr(3, &[], 5, 5)];
+        let mut s = RoundRobin::default();
+        let mut rng = Rng::new(6);
+        let picks: Vec<_> =
+            (0..6).map(|_| s.route(None, &managers, &mut rng).unwrap().0 .0).collect();
+        assert_eq!(picks[0..3], picks[3..6], "cycle repeats");
+        let unique: std::collections::HashSet<_> = picks[0..3].iter().collect();
+        assert_eq!(unique.len(), 3);
+    }
+
+    #[test]
+    fn kubernetes_routes_to_pinned_pods() {
+        // Pod 1 pinned to image 7, pod 2 pinned to image 9, pod 3 fresh.
+        let managers = vec![
+            mgr(1, &[(7, 4)], 2, 4),
+            mgr(2, &[(9, 4)], 4, 4),
+            mgr(3, &[], 4, 4),
+        ];
+        let mut s = KubernetesRouting::new(0);
+        let mut rng = Rng::new(1);
+        assert_eq!(
+            s.route(Some(ContainerId::from_bits(7)), &managers, &mut rng),
+            Some(ManagerId::from_bits(1))
+        );
+        assert_eq!(
+            s.route(Some(ContainerId::from_bits(9)), &managers, &mut rng),
+            Some(ManagerId::from_bits(2))
+        );
+        // Unknown image: only the fresh pod is eligible.
+        assert_eq!(
+            s.route(Some(ContainerId::from_bits(5)), &managers, &mut rng),
+            Some(ManagerId::from_bits(3))
+        );
+        // Container-less tasks can't run on pinned pods.
+        assert_eq!(s.route(None, &managers, &mut rng), None);
+    }
+
+    #[test]
+    fn kubernetes_respects_capacity() {
+        let managers = vec![mgr(1, &[(7, 4)], 0, 4)];
+        let mut s = KubernetesRouting::new(0);
+        let mut rng = Rng::new(2);
+        assert_eq!(s.route(Some(ContainerId::from_bits(7)), &managers, &mut rng), None);
+    }
+
+    #[test]
+    fn bin_packing_concentrates() {
+        let managers = vec![mgr(1, &[], 9, 10), mgr(2, &[], 2, 10)];
+        let mut s = BinPacking::default();
+        let mut rng = Rng::new(7);
+        // Least-available eligible manager is 2.
+        assert_eq!(s.route(None, &managers, &mut rng), Some(ManagerId::from_bits(2)));
+    }
+}
+
+#[cfg(test)]
+mod proptests {
+    use super::*;
+    use crate::testing::check;
+
+    fn arb_managers(g: &mut crate::testing::Gen) -> Vec<ManagerView> {
+        let n = g.usize(1, 12);
+        (0..n)
+            .map(|i| {
+                let total = g.usize(1, 16);
+                let avail = g.usize(0, total + 1);
+                let mut warm = HashMap::new();
+                for c in 0..g.usize(0, 4) {
+                    warm.insert(
+                        ContainerId::from_bits(c as u128 + 1),
+                        g.usize(0, avail.max(1) + 1),
+                    );
+                }
+                ManagerView {
+                    id: ManagerId::from_bits(i as u128 + 1),
+                    deployed: warm.clone(),
+                    warm_idle: warm,
+                    available_slots: avail,
+                    total_slots: total,
+                    queued: 0,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn never_routes_to_full_manager() {
+        // Invariant: every scheduler only picks managers with capacity.
+        check("route-capacity", 300, |g| {
+            let managers = arb_managers(g);
+            let container = if g.bool() {
+                Some(ContainerId::from_bits(g.usize(1, 5) as u128))
+            } else {
+                None
+            };
+            let mut rng = crate::common::rng::Rng::new(g.u64());
+            let mut schedulers: Vec<Box<dyn Scheduler>> = vec![
+                Box::new(WarmingAware::default()),
+                Box::new(Randomized::default()),
+                Box::new(RoundRobin::default()),
+                Box::new(BinPacking::default()),
+            ];
+            for s in schedulers.iter_mut() {
+                if let Some(picked) = s.route(container, &managers, &mut rng) {
+                    let m = managers.iter().find(|m| m.id == picked).unwrap();
+                    assert!(
+                        m.available_slots > 0,
+                        "{} routed to a full manager",
+                        s.name()
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn warming_aware_never_cold_when_warm_exists() {
+        // THE §6.2 invariant: if any manager has a warm idle container of
+        // the required type AND capacity, warming-aware must pick such a
+        // manager.
+        check("route-warm-first", 300, |g| {
+            let managers = arb_managers(g);
+            let c = ContainerId::from_bits(g.usize(1, 5) as u128);
+            let warm_exists = managers
+                .iter()
+                .any(|m| m.deployed.get(&c).copied().unwrap_or(0) > 0 && m.available_slots > 0);
+            let mut rng = crate::common::rng::Rng::new(g.u64());
+            let mut s = WarmingAware::default();
+            if let Some(picked) = s.route(Some(c), &managers, &mut rng) {
+                if warm_exists {
+                    let m = managers.iter().find(|m| m.id == picked).unwrap();
+                    assert!(
+                        m.deployed.get(&c).copied().unwrap_or(0) > 0,
+                        "warm manager existed but routing went cold"
+                    );
+                }
+            } else {
+                assert!(
+                    managers.iter().all(|m| m.available_slots == 0),
+                    "returned None despite available capacity"
+                );
+            }
+        });
+    }
+}

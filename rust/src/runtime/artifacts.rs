@@ -1,0 +1,144 @@
+//! The artifact shape contract — the Rust mirror of
+//! `python/compile/model.py`'s constants — and the manifest reader.
+
+use std::path::Path;
+
+use crate::common::error::{Error, Result};
+use crate::serialize::{json, Value};
+
+/// Element type of a tensor argument.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElemType {
+    F32,
+    I32,
+}
+
+/// Shape/dtype signature of one artifact parameter.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: &'static str,
+    pub dims: &'static [i64],
+    pub ty: ElemType,
+}
+
+impl ParamSpec {
+    pub fn elem_count(&self) -> usize {
+        self.dims.iter().product::<i64>() as usize
+    }
+}
+
+/// Compile-time contract for one AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: &'static str,
+    pub file: &'static str,
+    pub params: &'static [ParamSpec],
+    /// Number of outputs in the result tuple.
+    pub outputs: usize,
+}
+
+/// The three science payloads (see model.py's ARTIFACTS and docstring).
+pub const ARTIFACT_SPECS: [ArtifactSpec; 3] = [
+    ArtifactSpec {
+        name: "surrogate",
+        file: "surrogate.hlo.txt",
+        params: &[
+            ParamSpec { name: "x", dims: &[128, 256], ty: ElemType::F32 },
+            ParamSpec { name: "w1", dims: &[256, 512], ty: ElemType::F32 },
+            ParamSpec { name: "b1", dims: &[512], ty: ElemType::F32 },
+            ParamSpec { name: "w2", dims: &[512, 128], ty: ElemType::F32 },
+            ParamSpec { name: "b2", dims: &[128], ty: ElemType::F32 },
+        ],
+        outputs: 1,
+    },
+    ArtifactSpec {
+        name: "stills",
+        file: "stills.hlo.txt",
+        params: &[
+            ParamSpec { name: "img", dims: &[512, 512], ty: ElemType::F32 },
+            ParamSpec { name: "thresh", dims: &[1], ty: ElemType::F32 },
+        ],
+        outputs: 3,
+    },
+    ArtifactSpec {
+        name: "reducer",
+        file: "reducer.hlo.txt",
+        params: &[
+            ParamSpec { name: "ids", dims: &[4096], ty: ElemType::I32 },
+            ParamSpec { name: "vals", dims: &[4096], ty: ElemType::F32 },
+        ],
+        outputs: 1,
+    },
+];
+
+/// Look up a spec by name.
+pub fn spec(name: &str) -> Result<&'static ArtifactSpec> {
+    ARTIFACT_SPECS
+        .iter()
+        .find(|s| s.name == name)
+        .ok_or_else(|| Error::NotFound(format!("artifact spec {name}")))
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub entries: Vec<(String, String)>, // (name, file)
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| Error::Runtime(format!("manifest.json: {e}")))?;
+        let v = json::from_str(&text)?;
+        let m = match &v {
+            Value::Map(m) => m,
+            _ => return Err(Error::Runtime("manifest.json: not an object".into())),
+        };
+        let mut entries = Vec::new();
+        for (name, entry) in m {
+            let file = entry
+                .get("file")
+                .and_then(Value::as_str)
+                .ok_or_else(|| Error::Runtime(format!("manifest entry {name}: no file")))?;
+            entries.push((name.clone(), file.to_string()));
+        }
+        entries.sort();
+        Ok(Manifest { entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_consistent() {
+        assert_eq!(ARTIFACT_SPECS.len(), 3);
+        for s in &ARTIFACT_SPECS {
+            assert!(!s.params.is_empty());
+            assert!(s.outputs >= 1);
+            assert!(s.file.ends_with(".hlo.txt"));
+            for p in s.params {
+                assert!(p.elem_count() > 0);
+            }
+        }
+        // Surrogate contract mirrors model.py: 128x256 @ 256x512 @ 512x128.
+        let sur = spec("surrogate").unwrap();
+        assert_eq!(sur.params[0].dims, &[128, 256]);
+        assert_eq!(sur.params[1].dims, &[256, 512]);
+        assert!(spec("nope").is_err());
+    }
+
+    #[test]
+    fn manifest_parses_generated_file() {
+        // Uses the real artifacts/ when present (built by `make artifacts`).
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let names: Vec<&str> = m.entries.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["reducer", "stills", "surrogate"]);
+    }
+}

@@ -1,0 +1,258 @@
+//! PJRT engine: compile artifacts once at startup, execute many times.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::common::error::{Error, Result};
+use crate::runtime::artifacts::{spec, ElemType, Manifest};
+
+/// A concrete tensor argument for an artifact execution.
+#[derive(Clone, Debug)]
+pub enum TensorArg {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl TensorArg {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorArg::F32(v) => v.len(),
+            TensorArg::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn elem_type(&self) -> ElemType {
+        match self {
+            TensorArg::F32(_) => ElemType::F32,
+            TensorArg::I32(_) => ElemType::I32,
+        }
+    }
+}
+
+/// Loads every artifact in a directory, compiles each once on the PJRT
+/// CPU client, and serves executions. Thread-safe; executions are
+/// serialized per engine (PJRT CPU executables are not Sync in the 0.1.6
+/// crate), so the endpoint runs one engine per worker for parallelism.
+pub struct PjrtRuntime {
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+// The xla wrappers hold raw pointers; the PJRT CPU client is internally
+// synchronized and we guard all use behind the Mutex above.
+unsafe impl Send for PjrtRuntime {}
+unsafe impl Sync for PjrtRuntime {}
+
+impl PjrtRuntime {
+    /// Load and compile every artifact listed in `dir/manifest.json`.
+    pub fn load_dir(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| Error::Runtime(format!("pjrt cpu: {e}")))?;
+        let mut executables = HashMap::new();
+        for (name, file) in &manifest.entries {
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::Runtime("bad path".into()))?,
+            )
+            .map_err(|e| Error::Runtime(format!("parse {file}: {e}")))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile {file}: {e}")))?;
+            executables.insert(name.clone(), exe);
+        }
+        Ok(PjrtRuntime { inner: Mutex::new(Inner { client, executables }) })
+    }
+
+    /// Names of loaded artifacts.
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut names: Vec<String> =
+            self.inner.lock().unwrap().executables.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Execute artifact `name` with `args`, validated against the
+    /// compile-time [`spec`]. Returns the output tensors flattened to f32.
+    pub fn execute(&self, name: &str, args: &[TensorArg]) -> Result<Vec<Vec<f32>>> {
+        let s = spec(name)?;
+        if args.len() != s.params.len() {
+            return Err(Error::InvalidArgument(format!(
+                "artifact {name}: expected {} args, got {}",
+                s.params.len(),
+                args.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (arg, p) in args.iter().zip(s.params) {
+            if arg.elem_type() != p.ty {
+                return Err(Error::InvalidArgument(format!(
+                    "artifact {name}: param {} type mismatch",
+                    p.name
+                )));
+            }
+            if arg.len() != p.elem_count() {
+                return Err(Error::InvalidArgument(format!(
+                    "artifact {name}: param {} needs {} elements, got {}",
+                    p.name,
+                    p.elem_count(),
+                    arg.len()
+                )));
+            }
+            let lit = match arg {
+                TensorArg::F32(v) => xla::Literal::vec1(v),
+                TensorArg::I32(v) => xla::Literal::vec1(v),
+            };
+            let lit = if p.dims.len() == 1 {
+                lit
+            } else {
+                lit.reshape(p.dims).map_err(|e| Error::Runtime(format!("reshape: {e}")))?
+            };
+            literals.push(lit);
+        }
+
+        let inner = self.inner.lock().unwrap();
+        let exe = inner
+            .executables
+            .get(name)
+            .ok_or_else(|| Error::NotFound(format!("artifact {name} not loaded")))?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch {name}: {e}")))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result
+            .to_tuple()
+            .map_err(|e| Error::Runtime(format!("untuple {name}: {e}")))?;
+        if parts.len() != s.outputs {
+            return Err(Error::Runtime(format!(
+                "artifact {name}: expected {} outputs, got {}",
+                s.outputs,
+                parts.len()
+            )));
+        }
+        parts
+            .into_iter()
+            .map(|p| {
+                p.to_vec::<f32>().map_err(|e| Error::Runtime(format!("output: {e}")))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::OnceLock;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    fn runtime() -> Option<&'static PjrtRuntime> {
+        static RT: OnceLock<Option<PjrtRuntime>> = OnceLock::new();
+        RT.get_or_init(|| artifacts_dir().map(|d| PjrtRuntime::load_dir(&d).unwrap()))
+            .as_ref()
+    }
+
+    #[test]
+    fn loads_all_artifacts() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        assert_eq!(rt.artifact_names(), vec!["reducer", "stills", "surrogate"]);
+    }
+
+    #[test]
+    fn surrogate_identity_weights() {
+        // With w1 = [I; 0], b = 0, w2 = [I; 0]^T scaled, the MLP reduces to
+        // gelu(x) through an identity — but simpler: all-zero weights give
+        // logits = 0.
+        let Some(rt) = runtime() else {
+            return;
+        };
+        let out = rt
+            .execute(
+                "surrogate",
+                &[
+                    TensorArg::F32(vec![0.5; 128 * 256]),
+                    TensorArg::F32(vec![0.0; 256 * 512]),
+                    TensorArg::F32(vec![0.0; 512]),
+                    TensorArg::F32(vec![0.0; 512 * 128]),
+                    TensorArg::F32(vec![0.0; 128]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), 128 * 128);
+        assert!(out[0].iter().all(|v| v.abs() < 1e-6));
+    }
+
+    #[test]
+    fn stills_counts_planted_peak() {
+        let Some(rt) = runtime() else {
+            return;
+        };
+        let mut img = vec![0.0f32; 512 * 512];
+        img[100 * 512 + 100] = 50.0; // tile (0,0)
+        img[300 * 512 + 400] = 60.0; // tile (1,1)
+        let out = rt
+            .execute("stills", &[TensorArg::F32(img), TensorArg::F32(vec![1.0])])
+            .unwrap();
+        assert_eq!(out.len(), 3);
+        let counts = &out[0]; // f32[2,2] row-major
+        assert_eq!(counts[0], 1.0);
+        assert_eq!(counts[3], 1.0);
+        assert_eq!(counts[1] + counts[2], 0.0);
+        let total = out[2][0];
+        assert_eq!(total, 2.0);
+    }
+
+    #[test]
+    fn reducer_segment_sums() {
+        let Some(rt) = runtime() else {
+            return;
+        };
+        let ids: Vec<i32> = (0..4096).map(|i| (i % 256) as i32).collect();
+        let vals = vec![1.0f32; 4096];
+        let out = rt.execute("reducer", &[TensorArg::I32(ids), TensorArg::F32(vals)]).unwrap();
+        assert_eq!(out[0].len(), 256);
+        assert!(out[0].iter().all(|v| (*v - 16.0).abs() < 1e-5));
+    }
+
+    #[test]
+    fn arg_validation() {
+        let Some(rt) = runtime() else {
+            return;
+        };
+        // Wrong arity.
+        assert!(rt.execute("reducer", &[TensorArg::F32(vec![1.0])]).is_err());
+        // Wrong element count.
+        assert!(rt
+            .execute("reducer", &[TensorArg::I32(vec![0; 7]), TensorArg::F32(vec![0.0; 4096])])
+            .is_err());
+        // Wrong dtype.
+        assert!(rt
+            .execute(
+                "reducer",
+                &[TensorArg::F32(vec![0.0; 4096]), TensorArg::F32(vec![0.0; 4096])]
+            )
+            .is_err());
+        // Unknown artifact.
+        assert!(rt.execute("nope", &[]).is_err());
+    }
+}

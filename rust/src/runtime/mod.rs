@@ -1,0 +1,14 @@
+//! The PJRT runtime: loads AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Python runs once at build time (`make artifacts`); this module is the
+//! only bridge — `HloModuleProto::from_text_file` → `client.compile` →
+//! `execute` — so the serving binary is self-contained.
+
+mod artifacts;
+mod engine;
+mod payload;
+
+pub use artifacts::{spec, ArtifactSpec, ElemType, Manifest, ParamSpec, ARTIFACT_SPECS};
+pub use engine::{PjrtRuntime, TensorArg};
+pub use payload::PayloadExecutor;

@@ -1,0 +1,212 @@
+//! Worker-side payload execution: turns a [`Payload`] + input [`Value`]
+//! into an output [`Value`]. This is what actually runs inside a worker
+//! (optionally inside a "container" — a warm slot with a start cost).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::common::error::{Error, Result};
+use crate::common::task::Payload;
+use crate::data::DataChannel;
+use crate::runtime::engine::{PjrtRuntime, TensorArg};
+use crate::runtime::spec;
+use crate::serialize::Value;
+
+/// Executes payloads; shared by every worker on an endpoint.
+pub struct PayloadExecutor {
+    runtime: Option<Arc<PjrtRuntime>>,
+    channel: Option<Arc<dyn DataChannel>>,
+}
+
+impl PayloadExecutor {
+    pub fn new(
+        runtime: Option<Arc<PjrtRuntime>>,
+        channel: Option<Arc<dyn DataChannel>>,
+    ) -> Self {
+        PayloadExecutor { runtime, channel }
+    }
+
+    /// A bare executor for microbenchmark payloads only.
+    pub fn bare() -> Self {
+        Self::new(None, None)
+    }
+
+    /// Execute `payload` with `input`; returns (output, exec_seconds).
+    pub fn execute(&self, payload: &Payload, input: &Value) -> Result<(Value, f64)> {
+        let t0 = Instant::now();
+        let out = self.run(payload, input)?;
+        Ok((out, t0.elapsed().as_secs_f64()))
+    }
+
+    fn run(&self, payload: &Payload, input: &Value) -> Result<Value> {
+        match payload {
+            Payload::Noop => Ok(Value::Null),
+            Payload::Echo => Ok(input.clone()),
+            Payload::Sleep(s) => {
+                std::thread::sleep(std::time::Duration::from_secs_f64(*s));
+                Ok(Value::Null)
+            }
+            Payload::Stress(s) => {
+                // Busy-spin one core at 100% (§7.2's "stress" function).
+                let deadline = Instant::now() + std::time::Duration::from_secs_f64(*s);
+                let mut x = 0x9E3779B97F4A7C15u64;
+                while Instant::now() < deadline {
+                    for _ in 0..4096 {
+                        x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    }
+                    std::hint::black_box(x);
+                }
+                Ok(Value::Null)
+            }
+            Payload::Simulated { .. } => Err(Error::InvalidArgument(
+                "simulated payloads only run in the discrete-event simulator".into(),
+            )),
+            Payload::DataOp => {
+                let ch = self
+                    .channel
+                    .as_ref()
+                    .ok_or_else(|| Error::Data("no data channel attached".into()))?;
+                // input: {op: "put"|"get"|"delete", key, data?}
+                let op = input
+                    .get("op")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| Error::InvalidArgument("dataop: missing op".into()))?;
+                let key = input
+                    .get("key")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| Error::InvalidArgument("dataop: missing key".into()))?;
+                match op {
+                    "put" => {
+                        let data = match input.get("data") {
+                            Some(Value::Bytes(b)) => b.as_slice(),
+                            _ => {
+                                return Err(Error::InvalidArgument(
+                                    "dataop put: missing bytes data".into(),
+                                ))
+                            }
+                        };
+                        ch.put(key, data)?;
+                        Ok(Value::Null)
+                    }
+                    "get" => Ok(Value::Bytes(ch.get(key)?)),
+                    "delete" => Ok(Value::Bool(ch.delete(key)?)),
+                    o => Err(Error::InvalidArgument(format!("dataop: bad op {o}"))),
+                }
+            }
+            Payload::Artifact(name) => {
+                let rt = self
+                    .runtime
+                    .as_ref()
+                    .ok_or_else(|| Error::Runtime("no PJRT runtime attached".into()))?;
+                let s = spec(name)?;
+                // input: map from param name -> F32s/I32s.
+                let mut args = Vec::with_capacity(s.params.len());
+                for p in s.params {
+                    let v = input.get(p.name).ok_or_else(|| {
+                        Error::InvalidArgument(format!("artifact {name}: missing arg {}", p.name))
+                    })?;
+                    let arg = match v {
+                        Value::F32s(f) => TensorArg::F32(f.clone()),
+                        Value::I32s(i) => TensorArg::I32(i.clone()),
+                        _ => {
+                            return Err(Error::InvalidArgument(format!(
+                                "artifact {name}: arg {} must be a tensor",
+                                p.name
+                            )))
+                        }
+                    };
+                    args.push(arg);
+                }
+                let outputs = rt.execute(name, &args)?;
+                Ok(Value::List(outputs.into_iter().map(Value::F32s).collect()))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::InMemoryChannel;
+
+    #[test]
+    fn noop_and_echo() {
+        let ex = PayloadExecutor::bare();
+        let (out, t) = ex.execute(&Payload::Noop, &Value::Null).unwrap();
+        assert_eq!(out, Value::Null);
+        assert!(t < 0.1);
+        let input = Value::map([("x", Value::Int(3))]);
+        let (out, _) = ex.execute(&Payload::Echo, &input).unwrap();
+        assert_eq!(out, input);
+    }
+
+    #[test]
+    fn sleep_takes_time() {
+        let ex = PayloadExecutor::bare();
+        let (_, t) = ex.execute(&Payload::Sleep(0.05), &Value::Null).unwrap();
+        assert!(t >= 0.05);
+    }
+
+    #[test]
+    fn stress_spins() {
+        let ex = PayloadExecutor::bare();
+        let (_, t) = ex.execute(&Payload::Stress(0.05), &Value::Null).unwrap();
+        assert!(t >= 0.05 && t < 1.0);
+    }
+
+    #[test]
+    fn dataop_roundtrip() {
+        let ex = PayloadExecutor::new(None, Some(Arc::new(InMemoryChannel::default())));
+        let put = Value::map([
+            ("op", Value::Str("put".into())),
+            ("key", Value::Str("k1".into())),
+            ("data", Value::Bytes(vec![1, 2, 3])),
+        ]);
+        ex.execute(&Payload::DataOp, &put).unwrap();
+        let get = Value::map([
+            ("op", Value::Str("get".into())),
+            ("key", Value::Str("k1".into())),
+        ]);
+        let (out, _) = ex.execute(&Payload::DataOp, &get).unwrap();
+        assert_eq!(out, Value::Bytes(vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn missing_capabilities_error() {
+        let ex = PayloadExecutor::bare();
+        assert!(ex.execute(&Payload::DataOp, &Value::Null).is_err());
+        assert!(ex.execute(&Payload::Artifact("surrogate".into()), &Value::Null).is_err());
+        assert!(ex
+            .execute(&Payload::Simulated { duration_s: 1.0 }, &Value::Null)
+            .is_err());
+    }
+
+    #[test]
+    fn artifact_via_executor() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = Arc::new(PjrtRuntime::load_dir(&dir).unwrap());
+        let ex = PayloadExecutor::new(Some(rt), None);
+        let ids: Vec<i32> = (0..4096).map(|i| (i % 2) as i32).collect();
+        let input = Value::map([
+            ("ids", Value::I32s(ids)),
+            ("vals", Value::F32s(vec![0.5; 4096])),
+        ]);
+        let (out, _) = ex.execute(&Payload::Artifact("reducer".into()), &input).unwrap();
+        match out {
+            Value::List(parts) => match &parts[0] {
+                Value::F32s(sums) => {
+                    assert_eq!(sums.len(), 256);
+                    assert!((sums[0] - 1024.0).abs() < 1e-3);
+                    assert!((sums[1] - 1024.0).abs() < 1e-3);
+                    assert!(sums[2].abs() < 1e-6);
+                }
+                _ => panic!("expected f32s"),
+            },
+            _ => panic!("expected list"),
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! The funcX SDK (§3 "User interface") — the Rust mirror of Listing 1's
+//! `FuncXClient`:
+//!
+//! ```text
+//! fc = FuncXClient()
+//! func_id = fc.register_function(process_stills)
+//! task_id = fc.run(func_id, endpoint_id, data=input_data)
+//! res = fc.get_result(task_id)
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::auth::Token;
+use crate::batching::BatchRequest;
+use crate::common::error::Result;
+use crate::common::ids::{ContainerId, EndpointId, FunctionId, TaskId};
+use crate::common::task::Payload;
+use crate::serialize::Value;
+use crate::service::FuncXService;
+
+/// A user-facing client bound to one authenticated identity.
+#[derive(Clone)]
+pub struct FuncXClient {
+    service: Arc<FuncXService>,
+    token: Token,
+}
+
+impl FuncXClient {
+    /// Construct a client from a service handle and a bearer token
+    /// (the SDK's OAuth native-client flow equivalent).
+    pub fn new(service: Arc<FuncXService>, token: Token) -> Self {
+        FuncXClient { service, token }
+    }
+
+    /// Register a function; returns its UUID (Listing 1).
+    pub fn register_function(&self, name: &str, payload: Payload) -> Result<FunctionId> {
+        self.service.register_function(&self.token, name, payload, None)
+    }
+
+    /// Register a function that requires a container image (§4.2).
+    pub fn register_function_with_container(
+        &self,
+        name: &str,
+        payload: Payload,
+        container: ContainerId,
+    ) -> Result<FunctionId> {
+        self.service.register_function(&self.token, name, payload, Some(container))
+    }
+
+    /// Register an endpoint; returns its UUID.
+    pub fn register_endpoint(&self, name: &str, description: &str) -> Result<EndpointId> {
+        self.service.register_endpoint(&self.token, name, description)
+    }
+
+    /// Invoke a function on an endpoint (Listing 1's `fc.run`).
+    /// Asynchronous: returns the task id immediately.
+    pub fn run(
+        &self,
+        function: FunctionId,
+        endpoint: EndpointId,
+        data: &Value,
+    ) -> Result<TaskId> {
+        Ok(self.service.submit(&self.token, function, endpoint, data)?.task)
+    }
+
+    /// Submit a batch of invocations in one call (§4.6).
+    pub fn run_batch(
+        &self,
+        function: FunctionId,
+        endpoint: EndpointId,
+        inputs: &[Value],
+    ) -> Result<Vec<TaskId>> {
+        let mut batch = BatchRequest::new(function, endpoint);
+        for v in inputs {
+            batch.add(v)?;
+        }
+        Ok(self
+            .service
+            .submit_batch(&self.token, &batch)?
+            .into_iter()
+            .map(|r| r.task)
+            .collect())
+    }
+
+    /// Non-blocking result fetch; `None` while still running.
+    pub fn try_get_result(&self, task: TaskId) -> Result<Option<Value>> {
+        self.service.get_result(task)
+    }
+
+    /// Blocking result fetch (Listing 1's `fc.get_result`).
+    pub fn get_result(&self, task: TaskId, timeout: Duration) -> Result<Value> {
+        self.service.wait_result(task, timeout)
+    }
+
+    /// Batch result retrieval (§4.6's matching batch interface).
+    pub fn get_batch_results(
+        &self,
+        tasks: &[TaskId],
+        timeout: Duration,
+    ) -> Result<Vec<Value>> {
+        let deadline = std::time::Instant::now() + timeout;
+        tasks
+            .iter()
+            .map(|t| {
+                let remaining = deadline
+                    .saturating_duration_since(std::time::Instant::now())
+                    .max(Duration::from_millis(1));
+                self.service.wait_result(*t, remaining)
+            })
+            .collect()
+    }
+
+    pub fn service(&self) -> &Arc<FuncXService> {
+        &self.service
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::config::{EndpointConfig, ServiceConfig};
+    use crate::endpoint::{link, EndpointBuilder};
+
+    fn stack() -> (
+        FuncXClient,
+        EndpointId,
+        crate::service::ForwarderHandle,
+        crate::endpoint::AgentHandle,
+    ) {
+        let svc = Arc::new(FuncXService::new(ServiceConfig::default()));
+        let (_u, tok) = svc.bootstrap_user("alice");
+        let client = FuncXClient::new(svc.clone(), tok);
+        let e = client.register_endpoint("laptop", "dev box").unwrap();
+        let (fwd, agent) = link();
+        let handle = EndpointBuilder::new()
+            .config(EndpointConfig { min_nodes: 1, workers_per_node: 2, ..Default::default() })
+            .heartbeat_period(0.05)
+            .start(agent);
+        let fh = svc.connect_endpoint(e, fwd).unwrap();
+        (client, e, fh, handle)
+    }
+
+    #[test]
+    fn listing1_flow() {
+        let (client, e, fh, handle) = stack();
+        let f = client.register_function("process_stills", Payload::Echo).unwrap();
+        let input = Value::map([
+            ("inputs", Value::Str("img_0001.h5".into())),
+            ("phil", Value::Str("params.phil".into())),
+        ]);
+        let task = client.run(f, e, &input).unwrap();
+        let res = client.get_result(task, Duration::from_secs(10)).unwrap();
+        assert_eq!(res, input);
+        fh.shutdown();
+        handle.join();
+    }
+
+    #[test]
+    fn batch_flow() {
+        let (client, e, fh, handle) = stack();
+        let f = client.register_function("echo", Payload::Echo).unwrap();
+        let inputs: Vec<Value> = (0..10).map(Value::Int).collect();
+        let tasks = client.run_batch(f, e, &inputs).unwrap();
+        let results = client.get_batch_results(&tasks, Duration::from_secs(20)).unwrap();
+        assert_eq!(results, inputs);
+        fh.shutdown();
+        handle.join();
+    }
+}

@@ -1,0 +1,319 @@
+//! Individual serialization strategies behind the facade (§4.5).
+//!
+//! Mirrors funcX's library chain (JSON / pickle / dill): each codec
+//! covers a subset of values at a different speed point; the facade
+//! tries them fastest-first.
+
+use crate::common::error::{Error, Result};
+use crate::serialize::value::Value;
+
+/// Identifies which strategy produced a buffer (stored in the header so
+/// the destination deserializes without trial-and-error).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Method {
+    Raw = 0,
+    Json = 1,
+    Binc = 2,
+}
+
+impl Method {
+    pub fn from_u8(b: u8) -> Result<Method> {
+        match b {
+            0 => Ok(Method::Raw),
+            1 => Ok(Method::Json),
+            2 => Ok(Method::Binc),
+            _ => Err(Error::Serialization(format!("unknown method byte {b}"))),
+        }
+    }
+}
+
+/// One serialization strategy.
+pub trait Codec: Send + Sync {
+    fn method(&self) -> Method;
+    /// Serialize, or `None` when this codec does not support the value
+    /// (the facade then falls through to the next strategy).
+    fn encode(&self, v: &Value) -> Option<Vec<u8>>;
+    fn decode(&self, bytes: &[u8]) -> Result<Value>;
+}
+
+/// Zero-copy passthrough for `Value::Bytes` — the fastest strategy, and
+/// the narrowest (analogous to funcX handing raw buffers straight through).
+pub struct RawCodec;
+
+impl Codec for RawCodec {
+    fn method(&self) -> Method {
+        Method::Raw
+    }
+
+    fn encode(&self, v: &Value) -> Option<Vec<u8>> {
+        match v {
+            Value::Bytes(b) => Some(b.clone()),
+            _ => None,
+        }
+    }
+
+    fn decode(&self, bytes: &[u8]) -> Result<Value> {
+        Ok(Value::Bytes(bytes.to_vec()))
+    }
+}
+
+/// JSON text strategy: covers JSON-able values (no bytes / tensor blobs —
+/// like real JSON, which forces the facade to fall through, mirroring
+/// funcX's "no single library serializes all objects" observation).
+pub struct JsonCodec;
+
+impl Codec for JsonCodec {
+    fn method(&self) -> Method {
+        Method::Json
+    }
+
+    fn encode(&self, v: &Value) -> Option<Vec<u8>> {
+        fn jsonable(v: &Value) -> bool {
+            match v {
+                Value::Null | Value::Bool(_) | Value::Int(_) | Value::Float(_) | Value::Str(_) => {
+                    true
+                }
+                Value::Bytes(_) | Value::F32s(_) | Value::I32s(_) => false,
+                Value::List(l) => l.iter().all(jsonable),
+                Value::Map(m) => m.values().all(jsonable),
+            }
+        }
+        if !jsonable(v) {
+            return None;
+        }
+        Some(crate::serialize::json::to_string(v).into_bytes())
+    }
+
+    fn decode(&self, bytes: &[u8]) -> Result<Value> {
+        let s = std::str::from_utf8(bytes).map_err(|e| Error::Serialization(e.to_string()))?;
+        crate::serialize::json::from_str(s)
+    }
+}
+
+/// Compact tagged binary strategy — the "dill" of the chain: slowest to
+/// produce small output but handles every value, so the facade always
+/// terminates successfully.
+pub struct BincCodec;
+
+impl BincCodec {
+    fn enc_val(v: &Value, out: &mut Vec<u8>) {
+        match v {
+            Value::Null => out.push(0),
+            Value::Bool(b) => {
+                out.push(1);
+                out.push(*b as u8);
+            }
+            Value::Int(i) => {
+                out.push(2);
+                out.extend_from_slice(&i.to_le_bytes());
+            }
+            Value::Float(f) => {
+                out.push(3);
+                out.extend_from_slice(&f.to_le_bytes());
+            }
+            Value::Str(s) => {
+                out.push(4);
+                Self::enc_len(s.len(), out);
+                out.extend_from_slice(s.as_bytes());
+            }
+            Value::Bytes(b) => {
+                out.push(5);
+                Self::enc_len(b.len(), out);
+                out.extend_from_slice(b);
+            }
+            Value::F32s(v) => {
+                out.push(6);
+                Self::enc_len(v.len(), out);
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Value::I32s(v) => {
+                out.push(7);
+                Self::enc_len(v.len(), out);
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Value::List(l) => {
+                out.push(8);
+                Self::enc_len(l.len(), out);
+                for x in l {
+                    Self::enc_val(x, out);
+                }
+            }
+            Value::Map(m) => {
+                out.push(9);
+                Self::enc_len(m.len(), out);
+                for (k, x) in m {
+                    Self::enc_len(k.len(), out);
+                    out.extend_from_slice(k.as_bytes());
+                    Self::enc_val(x, out);
+                }
+            }
+        }
+    }
+
+    fn enc_len(n: usize, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(n as u32).to_le_bytes());
+    }
+
+    fn dec_len(bytes: &[u8], pos: &mut usize) -> Result<usize> {
+        let b = Self::take(bytes, pos, 4)?;
+        Ok(u32::from_le_bytes(b.try_into().unwrap()) as usize)
+    }
+
+    fn take<'a>(bytes: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+        if *pos + n > bytes.len() {
+            return Err(Error::Serialization(format!(
+                "truncated buffer: need {n} at {} of {}",
+                *pos,
+                bytes.len()
+            )));
+        }
+        let s = &bytes[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    }
+
+    fn dec_val(bytes: &[u8], pos: &mut usize) -> Result<Value> {
+        let tag = Self::take(bytes, pos, 1)?[0];
+        Ok(match tag {
+            0 => Value::Null,
+            1 => Value::Bool(Self::take(bytes, pos, 1)?[0] != 0),
+            2 => Value::Int(i64::from_le_bytes(Self::take(bytes, pos, 8)?.try_into().unwrap())),
+            3 => Value::Float(f64::from_le_bytes(Self::take(bytes, pos, 8)?.try_into().unwrap())),
+            4 => {
+                let n = Self::dec_len(bytes, pos)?;
+                let s = Self::take(bytes, pos, n)?;
+                Value::Str(
+                    String::from_utf8(s.to_vec())
+                        .map_err(|e| Error::Serialization(e.to_string()))?,
+                )
+            }
+            5 => {
+                let n = Self::dec_len(bytes, pos)?;
+                Value::Bytes(Self::take(bytes, pos, n)?.to_vec())
+            }
+            6 => {
+                let n = Self::dec_len(bytes, pos)?;
+                let raw = Self::take(bytes, pos, n * 4)?;
+                Value::F32s(
+                    raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                )
+            }
+            7 => {
+                let n = Self::dec_len(bytes, pos)?;
+                let raw = Self::take(bytes, pos, n * 4)?;
+                Value::I32s(
+                    raw.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                )
+            }
+            8 => {
+                let n = Self::dec_len(bytes, pos)?;
+                let mut l = Vec::with_capacity(n.min(1024));
+                for _ in 0..n {
+                    l.push(Self::dec_val(bytes, pos)?);
+                }
+                Value::List(l)
+            }
+            9 => {
+                let n = Self::dec_len(bytes, pos)?;
+                let mut m = std::collections::BTreeMap::new();
+                for _ in 0..n {
+                    let kn = Self::dec_len(bytes, pos)?;
+                    let k = String::from_utf8(Self::take(bytes, pos, kn)?.to_vec())
+                        .map_err(|e| Error::Serialization(e.to_string()))?;
+                    m.insert(k, Self::dec_val(bytes, pos)?);
+                }
+                Value::Map(m)
+            }
+            t => return Err(Error::Serialization(format!("unknown value tag {t}"))),
+        })
+    }
+}
+
+impl Codec for BincCodec {
+    fn method(&self) -> Method {
+        Method::Binc
+    }
+
+    fn encode(&self, v: &Value) -> Option<Vec<u8>> {
+        let mut out = Vec::new();
+        Self::enc_val(v, &mut out);
+        Some(out)
+    }
+
+    fn decode(&self, bytes: &[u8]) -> Result<Value> {
+        let mut pos = 0;
+        let v = Self::dec_val(bytes, &mut pos)?;
+        if pos != bytes.len() {
+            return Err(Error::Serialization(format!(
+                "trailing garbage: {} of {} consumed",
+                pos,
+                bytes.len()
+            )));
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_only_bytes() {
+        assert!(RawCodec.encode(&Value::Bytes(vec![1, 2])).is_some());
+        assert!(RawCodec.encode(&Value::Int(1)).is_none());
+    }
+
+    #[test]
+    fn json_rejects_binary() {
+        assert!(JsonCodec.encode(&Value::Bytes(vec![1])).is_none());
+        assert!(JsonCodec.encode(&Value::F32s(vec![1.0])).is_none());
+        assert!(JsonCodec
+            .encode(&Value::List(vec![Value::Int(1), Value::Bytes(vec![0])]))
+            .is_none());
+        assert!(JsonCodec.encode(&Value::Int(1)).is_some());
+    }
+
+    #[test]
+    fn binc_roundtrip_nested() {
+        let v = Value::map([
+            ("inputs", Value::Str("img_001.h5".into())),
+            ("phil", Value::Str("params.phil".into())),
+            ("pixels", Value::F32s(vec![0.5, -1.25, 3.75])),
+            ("ids", Value::I32s(vec![1, -2, 3])),
+            ("nested", Value::List(vec![Value::Null, Value::Bool(true), Value::Int(-9)])),
+        ]);
+        let enc = BincCodec.encode(&v).unwrap();
+        assert_eq!(BincCodec.decode(&enc).unwrap(), v);
+    }
+
+    #[test]
+    fn binc_rejects_truncated() {
+        let enc = BincCodec.encode(&Value::Str("hello".into())).unwrap();
+        assert!(BincCodec.decode(&enc[..enc.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn binc_rejects_trailing() {
+        let mut enc = BincCodec.encode(&Value::Int(1)).unwrap();
+        enc.push(0);
+        assert!(BincCodec.decode(&enc).is_err());
+    }
+
+    #[test]
+    fn method_byte_roundtrip() {
+        for m in [Method::Raw, Method::Json, Method::Binc] {
+            assert_eq!(Method::from_u8(m as u8).unwrap(), m);
+        }
+        assert!(Method::from_u8(99).is_err());
+    }
+}

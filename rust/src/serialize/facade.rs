@@ -1,0 +1,173 @@
+//! The facade itself: try codecs fastest-first, pack into a tagged
+//! buffer whose header carries the routing tag and method id (§4.5),
+//! so only buffers are unpacked/deserialized at the destination.
+
+use std::sync::Arc;
+
+use crate::common::error::{Error, Result};
+use crate::serialize::codec::{BincCodec, Codec, JsonCodec, Method, RawCodec};
+use crate::serialize::value::Value;
+
+/// Buffer header: magic, method, routing tag, body length.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Header {
+    pub method: Method,
+    /// Routing tag used by forwarders/managers to steer buffers without
+    /// deserializing the body.
+    pub routing_tag: u32,
+    pub body_len: u32,
+}
+
+const MAGIC: u8 = 0xFC; // "funcX"
+const HEADER_LEN: usize = 1 + 1 + 4 + 4;
+
+/// A packed, self-describing buffer as shipped through every queue.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Buffer(pub Vec<u8>);
+
+impl Buffer {
+    pub fn empty() -> Buffer {
+        Facade::default().pack(&Value::Null, 0).expect("null always packs")
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn body_len(&self) -> usize {
+        self.0.len().saturating_sub(HEADER_LEN)
+    }
+}
+
+/// Ordered chain of serialization strategies (fastest first).
+pub struct Facade {
+    codecs: Vec<Arc<dyn Codec>>,
+}
+
+impl Default for Facade {
+    fn default() -> Self {
+        Facade {
+            codecs: vec![Arc::new(RawCodec), Arc::new(JsonCodec), Arc::new(BincCodec)],
+        }
+    }
+}
+
+impl Facade {
+    /// Serialize `v`, trying each strategy in order (§4.5: "sorts the
+    /// serialization libraries by speed and applies them in order
+    /// successively until the object is successfully serialized").
+    pub fn pack(&self, v: &Value, routing_tag: u32) -> Result<Buffer> {
+        for codec in &self.codecs {
+            if let Some(body) = codec.encode(v) {
+                let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+                out.push(MAGIC);
+                out.push(codec.method() as u8);
+                out.extend_from_slice(&routing_tag.to_le_bytes());
+                out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+                out.extend_from_slice(&body);
+                return Ok(Buffer(out));
+            }
+        }
+        Err(Error::Serialization("all serialization strategies failed".into()))
+    }
+
+    /// Read the header without touching the body (what forwarders do).
+    pub fn peek(&self, buf: &Buffer) -> Result<Header> {
+        let b = &buf.0;
+        if b.len() < HEADER_LEN || b[0] != MAGIC {
+            return Err(Error::Serialization("bad buffer magic/length".into()));
+        }
+        let method = Method::from_u8(b[1])?;
+        let routing_tag = u32::from_le_bytes(b[2..6].try_into().unwrap());
+        let body_len = u32::from_le_bytes(b[6..10].try_into().unwrap());
+        if b.len() != HEADER_LEN + body_len as usize {
+            return Err(Error::Serialization(format!(
+                "length mismatch: header says {body_len}, have {}",
+                b.len() - HEADER_LEN
+            )));
+        }
+        Ok(Header { method, routing_tag, body_len })
+    }
+
+    /// Unpack a buffer at the destination.
+    pub fn unpack(&self, buf: &Buffer) -> Result<(Header, Value)> {
+        let header = self.peek(buf)?;
+        let body = &buf.0[HEADER_LEN..];
+        let codec = self
+            .codecs
+            .iter()
+            .find(|c| c.method() == header.method)
+            .ok_or_else(|| Error::Serialization("no codec for method".into()))?;
+        Ok((header, codec.decode(body)?))
+    }
+}
+
+/// The process-wide facade instance (perf: constructing a facade
+/// allocates the codec chain; the free functions below are on the
+/// per-task hot path, so they share one static instance).
+fn global() -> &'static Facade {
+    static FACADE: std::sync::OnceLock<Facade> = std::sync::OnceLock::new();
+    FACADE.get_or_init(Facade::default)
+}
+
+/// Pack with the process-default facade.
+pub fn pack(v: &Value, tag: u32) -> Result<Buffer> {
+    global().pack(v, tag)
+}
+
+/// Unpack with the process-default facade.
+pub fn unpack(buf: &Buffer) -> Result<Value> {
+    global().unpack(buf).map(|(_, v)| v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_selects_fastest() {
+        let f = Facade::default();
+        // Bytes -> Raw
+        let b = f.pack(&Value::Bytes(vec![9; 8]), 1).unwrap();
+        assert_eq!(f.peek(&b).unwrap().method, Method::Raw);
+        // JSON-able -> Json
+        let b = f.pack(&Value::Int(5), 1).unwrap();
+        assert_eq!(f.peek(&b).unwrap().method, Method::Json);
+        // Tensor blob -> Binc (json refuses)
+        let b = f.pack(&Value::F32s(vec![1.0, 2.0]), 1).unwrap();
+        assert_eq!(f.peek(&b).unwrap().method, Method::Binc);
+    }
+
+    #[test]
+    fn peek_does_not_need_body_decode() {
+        let f = Facade::default();
+        let b = f.pack(&Value::Str("task-route-me".into()), 0xDEAD).unwrap();
+        assert_eq!(f.peek(&b).unwrap().routing_tag, 0xDEAD);
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let f = Facade::default();
+        let mut b = f.pack(&Value::Int(1), 0).unwrap();
+        b.0[0] = 0x00;
+        assert!(f.peek(&b).is_err());
+    }
+
+    #[test]
+    fn corrupt_length_rejected() {
+        let f = Facade::default();
+        let mut b = f.pack(&Value::Int(1), 0).unwrap();
+        b.0.truncate(b.0.len() - 1);
+        assert!(f.peek(&b).is_err());
+    }
+
+    #[test]
+    fn empty_buffer_is_null() {
+        let v = unpack(&Buffer::empty()).unwrap();
+        assert_eq!(v, Value::Null);
+    }
+}

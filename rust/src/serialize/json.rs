@@ -1,0 +1,329 @@
+//! Minimal JSON writer/parser for the [`JsonCodec`] strategy (offline
+//! build: serde_json is unavailable). Covers exactly the JSON-able subset
+//! of [`Value`]; floats round-trip via Rust's shortest-representation
+//! formatting.
+
+use std::collections::BTreeMap;
+
+use crate::common::error::{Error, Result};
+use crate::serialize::value::Value;
+
+pub fn to_string(v: &Value) -> String {
+    let mut s = String::new();
+    write_value(v, &mut s);
+    s
+}
+
+fn write_value(v: &Value, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::Int(i) => out.push_str(&i.to_string()),
+        Value::Float(f) => {
+            // Tag floats that print like ints so parsing restores the type.
+            let s = f.to_string();
+            out.push_str(&s);
+            if !s.contains('.') && !s.contains('e') && !s.contains("inf") && !s.contains("NaN")
+            {
+                out.push_str(".0");
+            }
+        }
+        Value::Str(s) => write_string(s, out),
+        Value::List(l) => {
+            out.push('[');
+            for (i, x) in l.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value(x, out);
+            }
+            out.push(']');
+        }
+        Value::Map(m) => {
+            out.push('{');
+            for (i, (k, x)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_string(k, out);
+                out.push(':');
+                write_value(x, out);
+            }
+            out.push('}');
+        }
+        // Not JSON-able; the codec filters these out before calling us.
+        Value::Bytes(_) | Value::F32s(_) | Value::I32s(_) => unreachable!("non-jsonable"),
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+pub fn from_str(s: &str) -> Result<Value> {
+    let mut p = Parser { b: s.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.b.len() {
+        return Err(Error::Serialization("json: trailing characters".into()));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.b.len() && self.b[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b
+            .get(self.pos)
+            .copied()
+            .ok_or_else(|| Error::Serialization("json: unexpected end".into()))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? == c {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(Error::Serialization(format!(
+                "json: expected '{}' at {}",
+                c as char, self.pos
+            )))
+        }
+    }
+
+    fn literal(&mut self, lit: &str, v: Value) -> Result<Value> {
+        if self.b[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(v)
+        } else {
+            Err(Error::Serialization(format!("json: bad literal at {}", self.pos)))
+        }
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        match self.peek()? {
+            b'n' => self.literal("null", Value::Null),
+            b't' => self.literal("true", Value::Bool(true)),
+            b'f' => self.literal("false", Value::Bool(false)),
+            b'"' => Ok(Value::Str(self.string()?)),
+            b'[' => {
+                self.eat(b'[')?;
+                let mut l = Vec::new();
+                self.skip_ws();
+                if self.peek()? == b']' {
+                    self.pos += 1;
+                    return Ok(Value::List(l));
+                }
+                loop {
+                    self.skip_ws();
+                    l.push(self.value()?);
+                    self.skip_ws();
+                    match self.peek()? {
+                        b',' => self.pos += 1,
+                        b']' => {
+                            self.pos += 1;
+                            return Ok(Value::List(l));
+                        }
+                        _ => return Err(Error::Serialization("json: bad list".into())),
+                    }
+                }
+            }
+            b'{' => {
+                self.eat(b'{')?;
+                let mut m = BTreeMap::new();
+                self.skip_ws();
+                if self.peek()? == b'}' {
+                    self.pos += 1;
+                    return Ok(Value::Map(m));
+                }
+                loop {
+                    self.skip_ws();
+                    let k = self.string()?;
+                    self.skip_ws();
+                    self.eat(b':')?;
+                    self.skip_ws();
+                    m.insert(k, self.value()?);
+                    self.skip_ws();
+                    match self.peek()? {
+                        b',' => self.pos += 1,
+                        b'}' => {
+                            self.pos += 1;
+                            return Ok(Value::Map(m));
+                        }
+                        _ => return Err(Error::Serialization("json: bad map".into())),
+                    }
+                }
+            }
+            _ => self.number(),
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek()?;
+            self.pos += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.pos += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'u' => {
+                            if self.pos + 4 > self.b.len() {
+                                return Err(Error::Serialization("json: bad \\u".into()));
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.pos..self.pos + 4])
+                                .map_err(|_| Error::Serialization("json: bad \\u".into()))?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| Error::Serialization("json: bad \\u".into()))?;
+                            self.pos += 4;
+                            s.push(
+                                char::from_u32(cp)
+                                    .ok_or_else(|| Error::Serialization("json: bad codepoint".into()))?,
+                            );
+                        }
+                        _ => return Err(Error::Serialization("json: bad escape".into())),
+                    }
+                }
+                c => {
+                    // Re-decode UTF-8 multibyte sequences.
+                    if c < 0x80 {
+                        s.push(c as char);
+                    } else {
+                        let start = self.pos - 1;
+                        let width = match c {
+                            0xC0..=0xDF => 2,
+                            0xE0..=0xEF => 3,
+                            0xF0..=0xF7 => 4,
+                            _ => return Err(Error::Serialization("json: bad utf8".into())),
+                        };
+                        if start + width > self.b.len() {
+                            return Err(Error::Serialization("json: bad utf8".into()));
+                        }
+                        let chunk = std::str::from_utf8(&self.b[start..start + width])
+                            .map_err(|_| Error::Serialization("json: bad utf8".into()))?;
+                        s.push_str(chunk);
+                        self.pos = start + width;
+                    }
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.pos;
+        while self.pos < self.b.len()
+            && matches!(self.b[self.pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.pos += 1;
+        }
+        let txt = std::str::from_utf8(&self.b[start..self.pos])
+            .map_err(|_| Error::Serialization("json: bad number".into()))?;
+        if txt.is_empty() {
+            return Err(Error::Serialization(format!("json: bad value at {start}")));
+        }
+        if txt.contains('.') || txt.contains('e') || txt.contains('E') {
+            txt.parse::<f64>()
+                .map(Value::Float)
+                .map_err(|_| Error::Serialization(format!("json: bad float {txt}")))
+        } else {
+            txt.parse::<i64>()
+                .map(Value::Int)
+                .map_err(|_| Error::Serialization(format!("json: bad int {txt}")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt(v: Value) {
+        let s = to_string(&v);
+        assert_eq!(from_str(&s).unwrap(), v, "via {s}");
+    }
+
+    #[test]
+    fn scalars_roundtrip() {
+        rt(Value::Null);
+        rt(Value::Bool(true));
+        rt(Value::Bool(false));
+        rt(Value::Int(0));
+        rt(Value::Int(-12345678901234));
+        rt(Value::Float(1.5));
+        rt(Value::Float(-0.001));
+        rt(Value::Float(3.0)); // int-looking float stays float
+        rt(Value::Float(1e300));
+    }
+
+    #[test]
+    fn strings_with_escapes() {
+        rt(Value::Str("".into()));
+        rt(Value::Str("hello \"world\"\n\t\\".into()));
+        rt(Value::Str("unicode: π ≈ 3.14159 🚀".into()));
+        rt(Value::Str("\u{1}\u{1f}".into()));
+    }
+
+    #[test]
+    fn containers_roundtrip() {
+        rt(Value::List(vec![]));
+        rt(Value::List(vec![Value::Int(1), Value::Null, Value::Str("x".into())]));
+        rt(Value::map([
+            ("a", Value::Int(1)),
+            ("b", Value::List(vec![Value::Bool(false)])),
+            ("nested", Value::map([("deep", Value::Float(2.25))])),
+        ]));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(from_str("").is_err());
+        assert!(from_str("{").is_err());
+        assert!(from_str("[1,]").is_err());
+        assert!(from_str("1 2").is_err());
+        assert!(from_str("\"unterminated").is_err());
+        assert!(from_str("nul").is_err());
+    }
+
+    #[test]
+    fn whitespace_tolerated() {
+        assert_eq!(
+            from_str(" { \"a\" : [ 1 , 2 ] } ").unwrap(),
+            Value::map([("a", Value::List(vec![Value::Int(1), Value::Int(2)]))])
+        );
+    }
+}

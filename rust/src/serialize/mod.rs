@@ -1,0 +1,114 @@
+//! §4.5 — the serialization facade.
+//!
+//! funcX serializes arbitrary inputs/outputs with a *Facade* over several
+//! serialization libraries, sorted by speed and tried in order until one
+//! succeeds; serialized objects are packed into buffers with headers that
+//! carry routing tags and the method id, so only buffers need unpacking
+//! at the destination.
+//!
+//! We reproduce that design with three strategies (analogous to funcX's
+//! JSON / pickle / dill ordering):
+//!
+//! 1. [`RawCodec`]   — zero-copy for byte payloads (fastest, narrowest).
+//! 2. [`JsonCodec`]  — human-readable, handles JSON-able values.
+//! 3. [`BincCodec`]  — compact tagged binary, handles every [`Value`].
+//!
+//! [`Wire`] is the typed layer on top: structs convert to/from [`Value`]
+//! and ship through queues as facade-packed buffers.
+
+mod codec;
+mod facade;
+pub mod json;
+mod value;
+mod wire;
+
+pub use codec::{BincCodec, Codec, JsonCodec, Method, RawCodec};
+pub use facade::{pack, unpack, Buffer, Facade, Header};
+pub use value::Value;
+pub use wire::Wire;
+
+#[cfg(test)]
+mod proptests {
+    use super::*;
+    use crate::testing::{check, Gen};
+
+    fn arb_value(g: &mut Gen, depth: usize) -> Value {
+        let pick = if depth == 0 { g.usize(0, 8) } else { g.usize(0, 10) };
+        match pick {
+            0 => Value::Null,
+            1 => Value::Bool(g.bool()),
+            2 => Value::Int(g.i64(i64::MIN / 2, i64::MAX / 2)),
+            // Finite floats only: NaN breaks the roundtrip-equality oracle,
+            // and funcX's JSON path has the same restriction.
+            3 => Value::Float(g.f64(-1e12, 1e12)),
+            4 => Value::Str(g.string(32)),
+            5 => Value::Bytes(g.bytes(256)),
+            6 => Value::F32s((0..g.usize(0, 64)).map(|_| g.f64(-1e6, 1e6) as f32).collect()),
+            7 => Value::I32s((0..g.usize(0, 64)).map(|_| g.i64(i32::MIN as i64, i32::MAX as i64) as i32).collect()),
+            8 => Value::List((0..g.usize(0, 5)).map(|_| arb_value(g, depth - 1)).collect()),
+            _ => Value::Map(
+                (0..g.usize(0, 5))
+                    .map(|_| (g.string(8), arb_value(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+
+    #[test]
+    fn facade_roundtrip_any_value() {
+        check("facade-roundtrip", 300, |g| {
+            let v = arb_value(g, 3);
+            let tag = g.u64() as u32;
+            let f = Facade::default();
+            let buf = f.pack(&v, tag).unwrap();
+            let (header, back) = f.unpack(&buf).unwrap();
+            assert_eq!(header.routing_tag, tag);
+            assert_eq!(back, v);
+        });
+    }
+
+    #[test]
+    fn bytes_use_raw_path() {
+        check("bytes-raw", 100, |g| {
+            let f = Facade::default();
+            let buf = f.pack(&Value::Bytes(g.bytes(512)), 0).unwrap();
+            let (h, _) = f.unpack(&buf).unwrap();
+            assert_eq!(h.method, Method::Raw);
+        });
+    }
+
+    #[test]
+    fn header_integrity_any_size() {
+        check("header-integrity", 100, |g| {
+            let n = g.usize(0, 4096);
+            let tag = g.u64() as u32;
+            let f = Facade::default();
+            let buf = f.pack(&Value::Bytes(vec![0xAB; n]), tag).unwrap();
+            assert_eq!(buf.body_len(), n);
+            let (h, _) = f.unpack(&buf).unwrap();
+            assert_eq!(h.routing_tag, tag);
+        });
+    }
+
+    #[test]
+    fn corrupted_buffers_never_panic() {
+        check("corruption-robust", 300, |g| {
+            let v = arb_value(g, 2);
+            let f = Facade::default();
+            let mut buf = f.pack(&v, 1).unwrap();
+            if buf.0.is_empty() {
+                return;
+            }
+            // flip a byte or truncate; unpack must return Err or a value,
+            // never panic.
+            if g.bool() && buf.0.len() > 1 {
+                let i = g.usize(0, buf.0.len());
+                buf.0[i] ^= 0xFF;
+            } else {
+                let keep = g.usize(0, buf.0.len());
+                buf.0.truncate(keep);
+            }
+            let _ = f.unpack(&buf);
+        });
+    }
+}

@@ -1,0 +1,119 @@
+//! The dynamic value model passed to/from functions.
+//!
+//! Stands in for "arbitrary Python objects" (§4.5): primitives, strings,
+//! bytes, numeric arrays (the science payloads' tensors), lists, maps.
+
+use std::collections::BTreeMap;
+
+/// A dynamically-typed function input/output value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    /// Opaque byte payloads — the raw fast path.
+    Bytes(Vec<u8>),
+    /// Dense f32 tensor data (PJRT artifact inputs/outputs).
+    F32s(Vec<f32>),
+    /// Dense i32 tensor data.
+    I32s(Vec<i32>),
+    List(Vec<Value>),
+    /// Ordered map = kwargs-style inputs (Listing 1's `data` dict).
+    Map(BTreeMap<String, Value>),
+}
+
+impl Value {
+    /// Rough in-memory size, used for payload-cap enforcement (§5.1).
+    pub fn approx_size(&self) -> usize {
+        match self {
+            Value::Null | Value::Bool(_) => 1,
+            Value::Int(_) | Value::Float(_) => 8,
+            Value::Str(s) => s.len(),
+            Value::Bytes(b) => b.len(),
+            Value::F32s(v) => v.len() * 4,
+            Value::I32s(v) => v.len() * 4,
+            Value::List(l) => l.iter().map(Value::approx_size).sum::<usize>() + 8,
+            Value::Map(m) => {
+                m.iter().map(|(k, v)| k.len() + v.approx_size()).sum::<usize>() + 8
+            }
+        }
+    }
+
+    /// Convenience constructor for map values.
+    pub fn map(entries: impl IntoIterator<Item = (&'static str, Value)>) -> Value {
+        Value::Map(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Map(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f32s(&self) -> Option<&[f32]> {
+        match self {
+            Value::F32s(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32s(&self) -> Option<&[i32]> {
+        match self {
+            Value::I32s(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_sizes() {
+        assert_eq!(Value::Bytes(vec![0; 100]).approx_size(), 100);
+        assert_eq!(Value::F32s(vec![0.0; 10]).approx_size(), 40);
+        assert!(Value::map([("k", Value::Int(1))]).approx_size() >= 9);
+    }
+
+    #[test]
+    fn map_access() {
+        let v = Value::map([("x", Value::Int(7)), ("name", Value::Str("a".into()))]);
+        assert_eq!(v.get("x").and_then(Value::as_int), Some(7));
+        assert_eq!(v.get("name").and_then(Value::as_str), Some("a"));
+        assert!(v.get("missing").is_none());
+        assert!(Value::Null.get("x").is_none());
+    }
+
+    #[test]
+    fn float_coercion() {
+        assert_eq!(Value::Int(3).as_float(), Some(3.0));
+        assert_eq!(Value::Float(2.5).as_float(), Some(2.5));
+        assert_eq!(Value::Str("x".into()).as_float(), None);
+    }
+}

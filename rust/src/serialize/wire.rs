@@ -1,0 +1,108 @@
+//! Typed wire format: structs convert to/from [`Value`] and ship through
+//! queues as facade-packed byte buffers. This is the in-tree equivalent
+//! of funcX serializing task records into Redis.
+
+use crate::common::error::Result;
+use crate::serialize::facade::Buffer;
+use crate::serialize::value::Value;
+
+/// A type that can cross a queue boundary.
+pub trait Wire: Sized {
+    fn to_value(&self) -> Value;
+    fn from_value(v: &Value) -> Result<Self>;
+
+    /// Pack via the facade (tag 0).
+    fn to_bytes(&self) -> Vec<u8> {
+        crate::serialize::pack(&self.to_value(), 0)
+            .expect("facade always succeeds via BincCodec")
+            .0
+    }
+
+    fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let v = crate::serialize::unpack(&Buffer(bytes.to_vec()))?;
+        Self::from_value(&v)
+    }
+}
+
+impl Wire for Value {
+    fn to_value(&self) -> Value {
+        self.clone()
+    }
+
+    fn from_value(v: &Value) -> Result<Self> {
+        Ok(v.clone())
+    }
+}
+
+impl Wire for u32 {
+    fn to_value(&self) -> Value {
+        Value::Int(*self as i64)
+    }
+
+    fn from_value(v: &Value) -> Result<Self> {
+        v.as_int()
+            .and_then(|i| u32::try_from(i).ok())
+            .ok_or_else(|| crate::Error::Serialization("expected u32".into()))
+    }
+}
+
+impl Wire for u64 {
+    fn to_value(&self) -> Value {
+        // i64 can't hold all u64; split into two ints.
+        Value::List(vec![
+            Value::Int((*self >> 32) as i64),
+            Value::Int((*self & 0xffff_ffff) as i64),
+        ])
+    }
+
+    fn from_value(v: &Value) -> Result<Self> {
+        match v {
+            Value::List(l) if l.len() == 2 => {
+                let hi = l[0].as_int().ok_or_else(|| bad())?;
+                let lo = l[1].as_int().ok_or_else(|| bad())?;
+                Ok(((hi as u64) << 32) | (lo as u64 & 0xffff_ffff))
+            }
+            _ => Err(bad()),
+        }
+    }
+}
+
+impl Wire for String {
+    fn to_value(&self) -> Value {
+        Value::Str(self.clone())
+    }
+
+    fn from_value(v: &Value) -> Result<Self> {
+        v.as_str().map(str::to_string).ok_or_else(|| bad())
+    }
+}
+
+fn bad() -> crate::Error {
+    crate::Error::Serialization("wire type mismatch".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitive_roundtrips() {
+        assert_eq!(u32::from_bytes(&7u32.to_bytes()).unwrap(), 7);
+        assert_eq!(u64::from_bytes(&u64::MAX.to_bytes()).unwrap(), u64::MAX);
+        assert_eq!(u64::from_bytes(&0u64.to_bytes()).unwrap(), 0);
+        assert_eq!(String::from_bytes(&"hi".to_string().to_bytes()).unwrap(), "hi");
+    }
+
+    #[test]
+    fn value_is_identity() {
+        let v = Value::map([("k", Value::Int(1))]);
+        assert_eq!(Value::from_bytes(&v.to_bytes()).unwrap(), v);
+    }
+
+    #[test]
+    fn type_mismatch_errors() {
+        let s = "str".to_string().to_bytes();
+        assert!(u32::from_bytes(&s).is_err());
+        assert!(u64::from_bytes(&s).is_err());
+    }
+}

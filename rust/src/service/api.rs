@@ -1,0 +1,398 @@
+//! The REST-equivalent service API (Fig. 2 steps 1–3 and 6).
+
+use std::sync::Arc;
+
+use crate::auth::{AuthService, Scope, Token};
+use crate::batching::BatchRequest;
+use crate::common::config::ServiceConfig;
+use crate::common::error::{Error, Result};
+use crate::common::ids::{EndpointId, FunctionId, TaskId, UserId};
+use crate::common::task::{Payload, Task, TaskResult, TaskState};
+use crate::common::time::{Clock, WallClock};
+use crate::metrics::{Counters, LatencyBreakdown};
+use crate::registry::{EndpointStatus, Registry};
+use crate::serialize::{pack, unpack, Buffer, Value, Wire};
+use crate::store::{KvStore, TaskQueue};
+
+/// Receipt for a submitted task.
+#[derive(Clone, Copy, Debug)]
+pub struct SubmitReceipt {
+    pub task: TaskId,
+}
+
+/// The cloud-hosted service. Clone-shareable across threads.
+#[derive(Clone)]
+pub struct FuncXService {
+    pub auth: AuthService,
+    pub registry: Registry,
+    pub kv: KvStore,
+    pub cfg: ServiceConfig,
+    pub clock: Arc<dyn Clock>,
+    pub latency: Arc<LatencyBreakdown>,
+    pub counters: Arc<Counters>,
+}
+
+impl FuncXService {
+    pub fn new(cfg: ServiceConfig) -> Self {
+        FuncXService {
+            auth: AuthService::new(),
+            registry: Registry::new(),
+            kv: KvStore::new(),
+            cfg,
+            clock: Arc::new(WallClock::new()),
+            latency: Arc::new(LatencyBreakdown::new()),
+            counters: Counters::new(),
+        }
+    }
+
+    pub fn with_clock(mut self, clock: Arc<dyn Clock>) -> Self {
+        self.clock = clock;
+        self
+    }
+
+    // ---- registration (§3) -----------------------------------------------
+
+    /// Register a function (requires the register_function scope).
+    pub fn register_function(
+        &self,
+        token: &Token,
+        name: &str,
+        payload: Payload,
+        container: Option<crate::common::ids::ContainerId>,
+    ) -> Result<FunctionId> {
+        let user = self.auth.check(token, Scope::RegisterFunction, self.clock.now())?;
+        Ok(self.registry.register_function(name, user, payload, container))
+    }
+
+    /// Register an endpoint (requires the register_endpoint scope).
+    pub fn register_endpoint(
+        &self,
+        token: &Token,
+        name: &str,
+        description: &str,
+    ) -> Result<EndpointId> {
+        let user = self.auth.check(token, Scope::RegisterEndpoint, self.clock.now())?;
+        Ok(self.registry.register_endpoint(name, description, user))
+    }
+
+    // ---- submission (Fig. 2 steps 1–3) ------------------------------------
+
+    /// Submit one invocation: auth, authz, payload cap, persist, enqueue.
+    pub fn submit(
+        &self,
+        token: &Token,
+        function: FunctionId,
+        endpoint: EndpointId,
+        input: &Value,
+    ) -> Result<SubmitReceipt> {
+        let now = self.clock.now();
+        let user = self.auth.check(token, Scope::RunFunction, now)?;
+        let f = self.registry.function(function)?;
+        let e = self.registry.endpoint(endpoint)?;
+        if !self.auth.may_invoke_function(user, f.owner, function) {
+            return Err(Error::Forbidden(format!("{user} may not invoke {function}")));
+        }
+        if !self.auth.may_use_endpoint(user, e.owner, endpoint) {
+            return Err(Error::Forbidden(format!("{user} may not use endpoint {endpoint}")));
+        }
+        let buf = pack(input, 0)?;
+        if buf.len() > self.cfg.max_payload_bytes {
+            return Err(Error::PayloadTooLarge {
+                size: buf.len(),
+                limit: self.cfg.max_payload_bytes,
+            });
+        }
+        let task = Task {
+            id: TaskId::new(),
+            function,
+            endpoint,
+            user,
+            container: f.container,
+            payload: f.payload.clone(),
+            input: buf,
+        };
+        self.enqueue_task(task, now)
+    }
+
+    /// Submit a user-facing batch (§4.6): one authenticated call, many
+    /// invocations, one receipt per invocation.
+    pub fn submit_batch(&self, token: &Token, batch: &BatchRequest) -> Result<Vec<SubmitReceipt>> {
+        let now = self.clock.now();
+        let user = self.auth.check(token, Scope::RunFunction, now)?;
+        let f = self.registry.function(batch.function)?;
+        let e = self.registry.endpoint(batch.endpoint)?;
+        if !self.auth.may_invoke_function(user, f.owner, batch.function) {
+            return Err(Error::Forbidden("not authorized for function".into()));
+        }
+        if !self.auth.may_use_endpoint(user, e.owner, batch.endpoint) {
+            return Err(Error::Forbidden("not authorized for endpoint".into()));
+        }
+        if batch.total_bytes() > self.cfg.max_payload_bytes {
+            return Err(Error::PayloadTooLarge {
+                size: batch.total_bytes(),
+                limit: self.cfg.max_payload_bytes,
+            });
+        }
+        batch
+            .inputs
+            .iter()
+            .map(|input| {
+                let task = Task {
+                    id: TaskId::new(),
+                    function: batch.function,
+                    endpoint: batch.endpoint,
+                    user,
+                    container: f.container,
+                    payload: f.payload.clone(),
+                    input: input.clone(),
+                };
+                self.enqueue_task(task, now)
+            })
+            .collect()
+    }
+
+    fn enqueue_task(&self, task: Task, now: f64) -> Result<SubmitReceipt> {
+        let id = task.id;
+        self.latency.on_submit(id, now);
+        // Persist task state (Redis hashset; §4.1).
+        self.kv.hset("tasks", &id.to_string(), task.to_bytes());
+        self.set_state(id, TaskState::Received);
+        crate::metrics::Counters::incr(&self.counters.tasks_submitted);
+        crate::metrics::Counters::add(
+            &self.counters.bytes_through_service,
+            task.input.len() as u64,
+        );
+        // Append to the endpoint's task queue (Redis list; §4.1).
+        self.task_queue(task.endpoint).push(&task)?;
+        self.set_state(id, TaskState::WaitingForEndpoint);
+        self.latency.on_queued(id, self.clock.now());
+        Ok(SubmitReceipt { task: id })
+    }
+
+    // ---- status & results (Fig. 2 step 6) ----------------------------------
+
+    pub fn task_state(&self, id: TaskId) -> Result<TaskState> {
+        let raw = self
+            .kv
+            .hget("task_state", &id.to_string())
+            .ok_or_else(|| Error::NotFound(format!("task {id}")))?;
+        TaskState::from_name(std::str::from_utf8(&raw).unwrap_or("?"))
+    }
+
+    pub(crate) fn set_state(&self, id: TaskId, state: TaskState) {
+        self.kv.hset("task_state", &id.to_string(), state.name().as_bytes().to_vec());
+    }
+
+    /// Retrieve a completed task's output; `None` while still running.
+    /// Results are purged after retrieval (§4.1 cost control).
+    pub fn get_result(&self, id: TaskId) -> Result<Option<Value>> {
+        let state = self.task_state(id)?;
+        if !state.is_terminal() {
+            return Ok(None);
+        }
+        let key = format!("result:{id}");
+        let raw = self
+            .kv
+            .get_at(&key, self.clock.now())
+            .ok_or_else(|| Error::NotFound(format!("result for {id} (purged?)")))?;
+        self.kv.del(&key); // purge once retrieved
+        let result = TaskResult::from_bytes(&raw)?;
+        match result.state {
+            TaskState::Success => Ok(Some(unpack(&result.output)?)),
+            TaskState::Failed => {
+                let msg = unpack(&result.output)
+                    .ok()
+                    .and_then(|v| v.as_str().map(str::to_string))
+                    .unwrap_or_else(|| "unknown".into());
+                Err(Error::TaskFailed(msg))
+            }
+            _ => Err(Error::TaskFailed("abandoned after agent loss".into())),
+        }
+    }
+
+    /// Poll until the task reaches a terminal state (test/SDK helper).
+    pub fn wait_result(&self, id: TaskId, timeout: std::time::Duration) -> Result<Value> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if let Some(v) = self.get_result(id)? {
+                return Ok(v);
+            }
+            if std::time::Instant::now() >= deadline {
+                return Err(Error::Timeout(format!("task {id}")));
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+
+    // ---- internals shared with the forwarder -------------------------------
+
+    pub(crate) fn task_queue(&self, ep: EndpointId) -> TaskQueue<Task> {
+        TaskQueue::new(self.kv.clone(), format!("ep:{ep}:tasks"))
+    }
+
+    pub(crate) fn store_result(&self, r: &TaskResult) {
+        let now = self.clock.now();
+        self.kv.set_ex(
+            &format!("result:{}", r.task),
+            r.to_bytes(),
+            self.cfg.result_ttl_s,
+            now,
+        );
+        self.set_state(r.task, r.state);
+        self.latency.on_result_stored(r.task, now);
+        match r.state {
+            TaskState::Success => {
+                crate::metrics::Counters::incr(&self.counters.tasks_completed);
+            }
+            _ => {
+                crate::metrics::Counters::incr(&self.counters.tasks_failed);
+            }
+        }
+        if r.cold_start {
+            crate::metrics::Counters::incr(&self.counters.cold_starts);
+        } else {
+            crate::metrics::Counters::incr(&self.counters.warm_hits);
+        }
+    }
+
+    /// Periodic housekeeping: purge expired results (§4.1).
+    pub fn purge_expired_results(&self) -> usize {
+        self.kv.purge_expired(self.clock.now())
+    }
+
+    /// Connect an endpoint's agent link: spawns the forwarder (§4.1
+    /// "a unique forwarder process is created for each endpoint").
+    pub fn connect_endpoint(
+        &self,
+        endpoint: EndpointId,
+        link: crate::endpoint::ForwarderSide,
+    ) -> Result<crate::service::ForwarderHandle> {
+        self.registry.set_endpoint_status(endpoint, EndpointStatus::Online)?;
+        Ok(crate::service::forwarder::spawn(self.clone(), endpoint, link))
+    }
+
+    /// A ready-to-use admin identity + all-scope token (dev/test setup).
+    pub fn bootstrap_user(&self, name: &str) -> (UserId, Token) {
+        let u = self.auth.register_identity(name);
+        let t = self
+            .auth
+            .issue_token(u, &[Scope::All], 365.0 * 86400.0, self.clock.now())
+            .expect("identity just registered");
+        (u, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn svc() -> (FuncXService, Token, FunctionId, EndpointId) {
+        let s = FuncXService::new(ServiceConfig::default());
+        let (_u, tok) = s.bootstrap_user("alice");
+        let f = s.register_function(&tok, "noop", Payload::Noop, None).unwrap();
+        let e = s.register_endpoint(&tok, "laptop", "test endpoint").unwrap();
+        (s, tok, f, e)
+    }
+
+    #[test]
+    fn submit_enqueues_and_tracks_state() {
+        let (s, tok, f, e) = svc();
+        let r = s.submit(&tok, f, e, &Value::Null).unwrap();
+        assert_eq!(s.task_state(r.task).unwrap(), TaskState::WaitingForEndpoint);
+        assert_eq!(s.task_queue(e).len(), 1);
+        assert_eq!(s.get_result(r.task).unwrap(), None); // not terminal yet
+    }
+
+    #[test]
+    fn submit_rejects_bad_auth() {
+        let (s, _tok, f, e) = svc();
+        let mallory = s.auth.register_identity("mallory");
+        let bad = s.auth.issue_token(mallory, &[Scope::RegisterFunction], 100.0, 0.0).unwrap();
+        // No run_function scope.
+        assert!(matches!(
+            s.submit(&bad, f, e, &Value::Null),
+            Err(Error::Forbidden(_)) | Err(Error::Unauthenticated(_))
+        ));
+    }
+
+    #[test]
+    fn submit_rejects_unshared_function() {
+        let (s, _tok, f, e) = svc();
+        let (_bob, bob_tok) = s.bootstrap_user("bob");
+        // bob has scopes but no grant on alice's function.
+        assert!(matches!(s.submit(&bob_tok, f, e, &Value::Null), Err(Error::Forbidden(_))));
+        // After sharing both function and endpoint, submission works.
+        let alice = s.registry.function(f).unwrap().owner;
+        let bob = s.auth.check(&bob_tok, Scope::RunFunction, 0.0).unwrap();
+        assert_ne!(alice, bob);
+        s.auth.grant_function(f, bob);
+        s.auth.grant_endpoint(e, bob);
+        assert!(s.submit(&bob_tok, f, e, &Value::Null).is_ok());
+    }
+
+    #[test]
+    fn payload_cap_enforced() {
+        let (s, tok, f, e) = svc();
+        let big = Value::Bytes(vec![0; 11 * 1024 * 1024]);
+        assert!(matches!(
+            s.submit(&tok, f, e, &big),
+            Err(Error::PayloadTooLarge { .. })
+        ));
+    }
+
+    #[test]
+    fn unknown_ids_rejected() {
+        let (s, tok, f, e) = svc();
+        assert!(s.submit(&tok, FunctionId::new(), e, &Value::Null).is_err());
+        assert!(s.submit(&tok, f, EndpointId::new(), &Value::Null).is_err());
+        assert!(s.task_state(TaskId::new()).is_err());
+    }
+
+    #[test]
+    fn batch_submit_produces_receipts() {
+        let (s, tok, f, e) = svc();
+        let mut b = BatchRequest::new(f, e);
+        for i in 0..5 {
+            b.add(&Value::Int(i)).unwrap();
+        }
+        let receipts = s.submit_batch(&tok, &b).unwrap();
+        assert_eq!(receipts.len(), 5);
+        assert_eq!(s.task_queue(e).len(), 5);
+    }
+
+    #[test]
+    fn result_purged_after_retrieval() {
+        let (s, tok, f, e) = svc();
+        let r = s.submit(&tok, f, e, &Value::Null).unwrap();
+        // Fake a completed result as the forwarder would store it.
+        let tr = TaskResult {
+            task: r.task,
+            state: TaskState::Success,
+            output: pack(&Value::Int(7), 0).unwrap(),
+            exec_time_s: 0.0,
+            cold_start: false,
+        };
+        s.store_result(&tr);
+        assert_eq!(s.get_result(r.task).unwrap(), Some(Value::Int(7)));
+        // Second retrieval: purged.
+        assert!(s.get_result(r.task).is_err());
+    }
+
+    #[test]
+    fn failed_result_surfaces_error() {
+        let (s, tok, f, e) = svc();
+        let r = s.submit(&tok, f, e, &Value::Null).unwrap();
+        let tr = TaskResult {
+            task: r.task,
+            state: TaskState::Failed,
+            output: pack(&Value::Str("boom".into()), 0).unwrap(),
+            exec_time_s: 0.0,
+            cold_start: false,
+        };
+        s.store_result(&tr);
+        match s.get_result(r.task) {
+            Err(Error::TaskFailed(m)) => assert_eq!(m, "boom"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

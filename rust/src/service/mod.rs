@@ -1,0 +1,13 @@
+//! §4.1 — the cloud-hosted funcX service.
+//!
+//! The service exposes the REST-equivalent API (register/submit/monitor/
+//! retrieve), stores tasks in the Redis-subset store, maintains one task
+//! queue + result store per endpoint, and runs a *forwarder* per
+//! connected endpoint that dispatches tasks over the agent link and
+//! persists returned results (Fig. 2's lifecycle).
+
+mod api;
+mod forwarder;
+
+pub use api::{FuncXService, SubmitReceipt};
+pub use forwarder::ForwarderHandle;

@@ -1,0 +1,521 @@
+//! The simulated endpoint: agent + managers + workers under virtual
+//! time, driving the *live* policy objects ([`Scheduler`], [`WarmPool`]).
+//!
+//! Model (calibrated in [`super::profile`]):
+//! * the agent is a serial dispatcher: each routed task costs
+//!   `dispatch_s` (plus `rtt_s` when internal batching is disabled);
+//! * routing runs the real [`Scheduler`] over incrementally-maintained
+//!   [`ManagerView`]s (O(managers) per task, O(1) view updates);
+//! * a routed task immediately occupies a container slot in the target
+//!   manager's real [`WarmPool`]; cold starts sample the Table-3 model;
+//! * the task completes `cold + worker_overhead + duration` later,
+//!   releasing the slot and waking the agent if it stalled on capacity.
+
+use std::collections::VecDeque;
+
+use crate::common::ids::ContainerId;
+use crate::common::rng::Rng;
+use crate::common::time::Time;
+use crate::containers::WarmPool;
+use crate::routing::{ManagerView, Scheduler};
+use crate::sim::events::{Event, EventQueue};
+use crate::sim::profile::SimProfile;
+
+/// One simulated task.
+#[derive(Clone, Copy, Debug)]
+pub struct SimTask {
+    /// Container type required (None = bare worker env).
+    pub container: Option<ContainerId>,
+    /// Function execution time (0 = no-op, 1 = sleep 1s, 60 = stress).
+    pub duration_s: f64,
+}
+
+impl SimTask {
+    pub fn noop() -> Self {
+        SimTask { container: None, duration_s: 0.0 }
+    }
+
+    pub fn sleep(s: f64) -> Self {
+        SimTask { container: None, duration_s: s }
+    }
+
+    pub fn with_container(c: ContainerId, duration_s: f64) -> Self {
+        SimTask { container: Some(c), duration_s }
+    }
+}
+
+/// Results of a simulation run.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    /// Total completion time of the batch (makespan), seconds.
+    pub completion_s: f64,
+    pub tasks: usize,
+    pub cold_starts: u64,
+    pub warm_hits: u64,
+    pub evictions: u64,
+    /// Mean per-task latency (submit→done).
+    pub mean_latency_s: f64,
+    /// Achieved throughput, tasks/s.
+    pub throughput: f64,
+}
+
+struct SimManager {
+    pool: WarmPool,
+    /// Tasks routed here but not yet started (prefetch queue; §6.2).
+    queue: VecDeque<usize>,
+}
+
+/// The simulated endpoint.
+pub struct SimEndpoint {
+    profile: SimProfile,
+    scheduler: Box<dyn Scheduler>,
+    batching: bool,
+    managers: Vec<SimManager>,
+    views: Vec<ManagerView>,
+    /// ManagerId -> index (ids are UUID-normalised; not invertible).
+    index_of: std::collections::HashMap<crate::common::ids::ManagerId, usize>,
+    rng: Rng,
+    /// When true, cold starts are deterministic (model mean) — makes
+    /// sweep curves smooth; sampling remains available for realism.
+    deterministic_cold: bool,
+    /// Manager-side warm matching (from the scheduler; §6.2).
+    warm_match: bool,
+}
+
+impl SimEndpoint {
+    pub fn new(
+        profile: SimProfile,
+        nodes: usize,
+        scheduler: Box<dyn Scheduler>,
+        batching: bool,
+        seed: u64,
+    ) -> Self {
+        let managers: Vec<SimManager> = (0..nodes)
+            .map(|_| SimManager {
+                // Container idle timeout is irrelevant inside one batch
+                // run (600 s default far exceeds any makespan segment).
+                pool: WarmPool::new(profile.workers_per_node, 600.0),
+                queue: VecDeque::new(),
+            })
+            .collect();
+        let views: Vec<ManagerView> = managers
+            .iter()
+            .enumerate()
+            .map(|(i, m)| ManagerView {
+                id: crate::common::ids::ManagerId::from_bits(i as u128 + 1),
+                deployed: m.pool.deployed_census(),
+                warm_idle: m.pool.warm_census(),
+                available_slots: m.pool.available_slots(),
+                total_slots: m.pool.capacity(),
+                queued: 0,
+            })
+            .collect();
+        let index_of = views
+            .iter()
+            .enumerate()
+            .map(|(i, v): (usize, &ManagerView)| (v.id, i))
+            .collect();
+        let warm_match = scheduler.warm_matching();
+        SimEndpoint {
+            profile,
+            scheduler,
+            batching,
+            managers,
+            views,
+            index_of,
+            rng: Rng::new(seed),
+            deterministic_cold: false,
+            warm_match,
+        }
+    }
+
+    /// Use deterministic (mean) cold-start costs.
+    pub fn deterministic_cold(mut self, on: bool) -> Self {
+        self.deterministic_cold = on;
+        self
+    }
+
+    /// Pre-warm all containers (§7.2's scaling methodology).
+    pub fn prewarm(&mut self, types: &[ContainerId]) {
+        for (m, v) in self.managers.iter_mut().zip(self.views.iter_mut()) {
+            m.pool.prewarm(types, 0.0);
+            v.deployed = m.pool.deployed_census();
+            v.warm_idle = m.pool.warm_census();
+            v.available_slots = m.pool.available_slots();
+        }
+    }
+
+    /// Total container slots.
+    pub fn total_workers(&self) -> usize {
+        self.managers.len() * self.profile.workers_per_node
+    }
+
+    /// Run a concurrent batch of tasks to completion; returns the report.
+    pub fn run(&mut self, tasks: &[SimTask]) -> SimReport {
+        let mut q = EventQueue::new();
+        let mut pending: VecDeque<usize> = (0..tasks.len()).collect();
+        let mut completions: Vec<Time> = vec![0.0; tasks.len()];
+        let mut completed = 0usize;
+        let mut agent_idle = false;
+        // Per-task dispatch cost: serial agent loop; unbatched dispatch
+        // pays a request RTT per task (§7.5).
+        let dispatch_cost = if self.batching {
+            self.profile.dispatch_s
+        } else {
+            self.profile.dispatch_s + self.profile.rtt_s
+        };
+        let start_model = self.profile.start_model();
+
+        q.schedule(0.0, Event::AgentDispatch);
+
+        // Start as many queued tasks as manager `mi` can serve right now:
+        // prefer queued tasks whose container is warm-idle (the manager
+        // reuses deployed containers); otherwise FIFO head cold-starts,
+        // evicting LRU warm containers of other types (§6.1–§6.2).
+        macro_rules! try_start {
+            ($self:ident, $mi:expr, $now:expr, $q:expr, $tasks:expr) => {{
+                let mi = $mi;
+                loop {
+                    let mgr = &$self.managers[mi];
+                    if mgr.queue.is_empty() || mgr.pool.available_slots() == 0 {
+                        break;
+                    }
+                    // Manager service policy (§6.2):
+                    // * warming-aware coordination: start queued tasks in
+                    //   warm matching containers; cold-start only types
+                    //   with no container deployed here (empty slot or
+                    //   LRU eviction); if every queued type is deployed
+                    //   but busy, WAIT for a matching container to free
+                    //   instead of killing a warm one.
+                    // * baseline (non-warming-aware): serve FIFO — the
+                    //   head task's container is started immediately,
+                    //   killing a warm container on mismatch ("a
+                    //   container worker is more likely to be killed to
+                    //   serve other requests"; §7.4).
+                    let pick = if $self.warm_match {
+                        let warm = mgr.queue.iter().position(|&ti| {
+                            let c = $tasks[ti]
+                                .container
+                                .unwrap_or(ContainerId(crate::Uuid::NIL));
+                            mgr.pool.warm_idle_count(c) > 0
+                        });
+                        // Fair-share overflow (§6.2 "proportional to
+                        // the number of received tasks"): spawn another
+                        // container for a type whose queued demand
+                        // exceeds its deployed count — covers both
+                        // brand-new types (deployed == 0) and hot types
+                        // that need more capacity than they have.
+                        let overflow = || {
+                            let mut queued_of: std::collections::HashMap<ContainerId, usize> =
+                                std::collections::HashMap::new();
+                            for &ti in mgr.queue.iter() {
+                                let c = $tasks[ti]
+                                    .container
+                                    .unwrap_or(ContainerId(crate::Uuid::NIL));
+                                *queued_of.entry(c).or_insert(0) += 1;
+                            }
+                            let qlen: usize = queued_of.values().sum();
+                            let cap = mgr.pool.capacity();
+                            mgr.queue.iter().position(|&ti| {
+                                let c = $tasks[ti]
+                                    .container
+                                    .unwrap_or(ContainerId(crate::Uuid::NIL));
+                                let q = queued_of.get(&c).copied().unwrap_or(0);
+                                let dep = $self.views[mi]
+                                    .deployed
+                                    .get(&c)
+                                    .copied()
+                                    .unwrap_or(0);
+                                // Spawn when the type holds less than its
+                                // fair share of the pool (paper's
+                                // proportional rule), with new types
+                                // (dep == 0) always eligible.
+                                let fair = cap * q / qlen.max(1);
+                                // Deadband (dep + 1 < fair) prevents
+                                // perpetual rebalance thrash on noisy
+                                // queue compositions.
+                                dep == 0 || dep + 1 < fair
+                            })
+                        };
+                        let empty_slot =
+                            mgr.pool.total() < mgr.pool.capacity();
+                        match warm.or_else(overflow) {
+                            Some(i) => i,
+                            // Every queued type has enough containers
+                            // deployed (busy): use an empty slot for the
+                            // head if one exists, otherwise wait for a
+                            // matching release instead of killing a warm
+                            // container (§6.1).
+                            None if empty_slot => 0,
+                            None => break,
+                        }
+                    } else {
+                        0
+                    };
+                    // Types with queued demand are protected from
+                    // eviction (their tasks would be orphaned and cascade
+                    // into more cold starts).
+                    let protected: std::collections::HashSet<ContainerId> = $self.managers
+                        [mi]
+                        .queue
+                        .iter()
+                        .map(|&ti| {
+                            $tasks[ti].container.unwrap_or(ContainerId(crate::Uuid::NIL))
+                        })
+                        .collect();
+                    let mgr = &mut $self.managers[mi];
+                    let task_idx = mgr.queue.remove(pick).unwrap();
+                    let t = $tasks[task_idx];
+                    let ctype =
+                        t.container.unwrap_or(ContainerId(crate::Uuid::NIL));
+                    let outcome = if $self.warm_match {
+                        mgr.pool
+                            .acquire_protected(ctype, $now, |c| c != ctype && protected.contains(&c))
+                            .expect("available slot checked above")
+                    } else {
+                        mgr.pool
+                            .acquire_detailed(ctype, $now)
+                            .expect("available slot checked above")
+                    };
+                    let v = &mut $self.views[mi];
+                    v.available_slots -= 1;
+                    v.queued -= 1;
+                    if outcome.cold {
+                        *v.deployed.entry(ctype).or_insert(0) += 1;
+                        if let Some(evicted) = outcome.evicted {
+                            if let Some(n) = v.deployed.get_mut(&evicted) {
+                                *n = n.saturating_sub(1);
+                            }
+                            if let Some(n) = v.warm_idle.get_mut(&evicted) {
+                                *n = n.saturating_sub(1);
+                            }
+                        }
+                    } else if let Some(n) = v.warm_idle.get_mut(&ctype) {
+                        *n = n.saturating_sub(1);
+                    }
+                    let cold_cost = if outcome.cold {
+                        if $self.deterministic_cold {
+                            start_model.mean()
+                        } else {
+                            start_model.sample(&mut $self.rng)
+                        }
+                    } else {
+                        0.0
+                    };
+                    let done = $now
+                        + cold_cost
+                        + $self.profile.worker_overhead_s
+                        + t.duration_s;
+                    $q.schedule(
+                        done,
+                        Event::WorkerDone { manager: mi, slot: outcome.slot, task: task_idx },
+                    );
+                }
+            }};
+        }
+
+        while let Some((now, ev)) = q.next() {
+            match ev {
+                Event::AgentDispatch => {
+                    let Some(&task_idx) = pending.front() else {
+                        agent_idle = true;
+                        continue;
+                    };
+                    let t = tasks[task_idx];
+                    match self.scheduler.route(t.container, &self.views, &mut self.rng) {
+                        Some(mid) => {
+                            pending.pop_front();
+                            let mi = self.index_of[&mid];
+                            self.views[mi].queued += 1;
+                            self.managers[mi].queue.push_back(task_idx);
+                            try_start!(self, mi, now, q, tasks);
+                            // Serial dispatcher: next task after d.
+                            q.schedule(now + dispatch_cost, Event::AgentDispatch);
+                            agent_idle = false;
+                        }
+                        None => {
+                            // No capacity anywhere: stall until a worker
+                            // frees up (WorkerDone re-arms us).
+                            agent_idle = true;
+                        }
+                    }
+                }
+                Event::WorkerDone { manager, slot, task } => {
+                    let pool = &mut self.managers[manager].pool;
+                    let ctype = pool.slot_type(slot).expect("busy slot has a type");
+                    pool.release(slot, now);
+                    let v = &mut self.views[manager];
+                    v.available_slots += 1;
+                    *v.warm_idle.entry(ctype).or_insert(0) += 1;
+                    completions[task] = now;
+                    completed += 1;
+                    try_start!(self, manager, now, q, tasks);
+                    if agent_idle && !pending.is_empty() {
+                        q.schedule(now, Event::AgentDispatch);
+                        agent_idle = false;
+                    }
+                }
+                Event::StrategyTick | Event::NodeActive => {}
+            }
+        }
+
+        assert_eq!(completed, tasks.len(), "task conservation violated");
+        let completion_s = completions.iter().cloned().fold(0.0, f64::max);
+        let (mut cold, mut warm, mut evict) = (0, 0, 0);
+        for m in &self.managers {
+            cold += m.pool.cold_starts();
+            warm += m.pool.warm_hits();
+            evict += m.pool.evictions();
+        }
+        SimReport {
+            completion_s,
+            tasks: tasks.len(),
+            cold_starts: cold,
+            warm_hits: warm,
+            evictions: evict,
+            mean_latency_s: completions.iter().sum::<f64>() / tasks.len().max(1) as f64,
+            throughput: tasks.len() as f64 / completion_s.max(1e-9),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::{Randomized, WarmingAware};
+
+    fn theta(nodes: usize, scheduler: Box<dyn Scheduler>) -> SimEndpoint {
+        SimEndpoint::new(SimProfile::theta(), nodes, scheduler, true, 1)
+            .deterministic_cold(true)
+    }
+
+    #[test]
+    fn all_tasks_complete() {
+        let mut ep = theta(2, Box::new(WarmingAware::default()));
+        ep.prewarm(&[ContainerId(crate::Uuid::NIL)]);
+        let r = ep.run(&vec![SimTask::noop(); 1000]);
+        assert_eq!(r.tasks, 1000);
+        assert!(r.completion_s > 0.0);
+        assert_eq!(r.cold_starts, 0, "prewarmed run must have no cold starts");
+    }
+
+    #[test]
+    fn strong_scaling_shape() {
+        // Fig. 4(a): completion decreases with containers, flattening
+        // near 256 for no-ops (agent dispatch bound).
+        let m = 20_000;
+        let run = |nodes: usize| {
+            let mut ep = theta(nodes, Box::new(WarmingAware::default()));
+            ep.prewarm(&[ContainerId(crate::Uuid::NIL)]);
+            ep.run(&vec![SimTask::noop(); m]).completion_s
+        };
+        let t1 = run(1); // 64 workers
+        let t4 = run(4); // 256 workers
+        let t16 = run(16); // 1024 workers
+        assert!(t1 > t4 * 2.0, "scaling 64->256 should speed up ~4x: {t1} vs {t4}");
+        let flat = t4 / t16;
+        assert!(flat < 1.3, "beyond 256 containers no-ops are dispatch-bound: {t4} vs {t16}");
+        // Agent-bound floor ≈ m * dispatch_s.
+        let floor = m as f64 * SimProfile::theta().dispatch_s;
+        assert!((t16 / floor) < 1.5, "floor {floor}, got {t16}");
+    }
+
+    #[test]
+    fn peak_throughput_matches_calibration() {
+        // §7.2.3: ~1694 tasks/s on Theta at scale.
+        let mut ep = theta(8, Box::new(WarmingAware::default()));
+        ep.prewarm(&[ContainerId(crate::Uuid::NIL)]);
+        let r = ep.run(&vec![SimTask::noop(); 50_000]);
+        assert!(
+            (r.throughput - 1694.0).abs() / 1694.0 < 0.15,
+            "throughput {}",
+            r.throughput
+        );
+    }
+
+    #[test]
+    fn batching_ablation_matches_7_5() {
+        // §7.5: 10 000 no-ops on 4 nodes (256 containers): 6.7 s batched
+        // vs 118 s unbatched.
+        let mk = |batching| {
+            let mut ep = SimEndpoint::new(
+                SimProfile::theta(),
+                4,
+                Box::new(WarmingAware::default()),
+                batching,
+                1,
+            )
+            .deterministic_cold(true);
+            ep.prewarm(&[ContainerId(crate::Uuid::NIL)]);
+            ep.run(&vec![SimTask::noop(); 10_000]).completion_s
+        };
+        let on = mk(true);
+        let off = mk(false);
+        assert!((5.0..9.0).contains(&on), "batched {on}");
+        assert!((100.0..140.0).contains(&off), "unbatched {off}");
+        assert!(off / on > 10.0, "batching speedup {}", off / on);
+    }
+
+    #[test]
+    fn warming_aware_beats_random_with_containers() {
+        // Figs. 6–7 setup: 10 nodes x 10 workers, 10 container types,
+        // uniform-random 3000-task batch, duration 0.
+        let types: Vec<ContainerId> = (1..=10).map(|i| ContainerId::from_bits(i)).collect();
+        let mut profile = SimProfile::theta();
+        profile.workers_per_node = 10;
+        let mut rng = Rng::new(7);
+        let tasks: Vec<SimTask> = (0..3000)
+            .map(|_| SimTask::with_container(*rng.choose(&types).unwrap(), 0.0))
+            .collect();
+        let run = |sched: Box<dyn Scheduler>| {
+            SimEndpoint::new(profile, 10, sched, true, 11)
+                .deterministic_cold(true)
+                .run(&tasks)
+        };
+        // Prefetch (§6.2) lets managers queue ahead so warm containers
+        // can pick matching tasks.
+        let wa = run(Box::new(WarmingAware { prefetch: 10 }));
+        let rnd = run(Box::new(Randomized { prefetch: 10 }));
+        assert!(
+            wa.cold_starts < rnd.cold_starts / 2,
+            "warming-aware cold starts {} vs random {}",
+            wa.cold_starts,
+            rnd.cold_starts
+        );
+        assert!(
+            wa.completion_s < rnd.completion_s,
+            "warming-aware {} vs random {}",
+            wa.completion_s,
+            rnd.completion_s
+        );
+        // Paper: 22 cold starts for 3000 functions with warming-aware (on
+        // an endpoint warmed by preceding batches). Our cold-started run
+        // includes the 100-slot fill plus fair-share rebalance churn; the
+        // invariant we hold is the *relative* claim: warming-aware colds
+        // stay well under half of random's (see EXPERIMENTS.md E9/E10).
+        assert!(wa.cold_starts <= 1400, "warming-aware cold starts {}", wa.cold_starts);
+    }
+
+    #[test]
+    fn sim_is_deterministic() {
+        let types: Vec<ContainerId> = (1..=4).map(ContainerId::from_bits).collect();
+        let mut rng = Rng::new(3);
+        let tasks: Vec<SimTask> = (0..500)
+            .map(|_| SimTask::with_container(*rng.choose(&types).unwrap(), 0.1))
+            .collect();
+        let run = || {
+            SimEndpoint::new(
+                SimProfile::theta(),
+                4,
+                Box::new(WarmingAware::default()),
+                true,
+                99,
+            )
+            .run(&tasks)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.completion_s, b.completion_s);
+        assert_eq!(a.cold_starts, b.cold_starts);
+    }
+}

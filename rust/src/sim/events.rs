@@ -1,0 +1,161 @@
+//! The event queue: a time-ordered heap with deterministic FIFO
+//! tie-breaking (sequence numbers), so equal-time events fire in
+//! insertion order and runs are reproducible.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::common::time::Time;
+
+/// Simulator events.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// The agent processes the next pending task (serial dispatcher).
+    AgentDispatch,
+    /// A worker finished a task on (manager, slot).
+    WorkerDone { manager: usize, slot: usize, task: usize },
+    /// Elastic-strategy monitoring tick (§6.3).
+    StrategyTick,
+    /// A provisioned node became active.
+    NodeActive,
+}
+
+struct Entry {
+    at: Time,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap: earlier time first; FIFO on ties.
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic min-time event queue.
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+    now: Time,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Schedule `event` at absolute time `at` (>= now).
+    pub fn schedule(&mut self, at: Time, event: Event) {
+        debug_assert!(at >= self.now, "scheduling into the past: {at} < {}", self.now);
+        self.heap.push(Entry { at, seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    /// Schedule `event` after a delay.
+    pub fn after(&mut self, delay: Time, event: Event) {
+        self.schedule(self.now + delay, event);
+    }
+
+    /// Pop the next event, advancing the clock. `None` when drained.
+    pub fn next(&mut self) -> Option<(Time, Event)> {
+        let e = self.heap.pop()?;
+        debug_assert!(e.at >= self.now, "event time ran backwards");
+        self.now = e.at;
+        Some((e.at, e.event))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_ordering() {
+        let mut q = EventQueue::new();
+        q.schedule(3.0, Event::StrategyTick);
+        q.schedule(1.0, Event::AgentDispatch);
+        q.schedule(2.0, Event::NodeActive);
+        assert_eq!(q.next().unwrap().0, 1.0);
+        assert_eq!(q.next().unwrap().0, 2.0);
+        assert_eq!(q.next().unwrap().0, 3.0);
+        assert!(q.next().is_none());
+    }
+
+    #[test]
+    fn fifo_on_ties() {
+        let mut q = EventQueue::new();
+        for task in 0..10 {
+            q.schedule(1.0, Event::WorkerDone { manager: 0, slot: 0, task });
+        }
+        for task in 0..10 {
+            match q.next().unwrap().1 {
+                Event::WorkerDone { task: t, .. } => assert_eq!(t, task),
+                _ => panic!(),
+            }
+        }
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.schedule(5.0, Event::AgentDispatch);
+        q.after(1.0, Event::StrategyTick); // at t=1
+        let (t1, _) = q.next().unwrap();
+        let (t2, _) = q.next().unwrap();
+        assert!(t2 >= t1);
+        assert_eq!(q.now(), 5.0);
+    }
+}
+
+#[cfg(test)]
+mod proptests {
+    use super::*;
+    use crate::testing::check;
+
+    #[test]
+    fn events_always_pop_in_time_order() {
+        check("event-order", 200, |g| {
+            let mut q = EventQueue::new();
+            let n = g.usize(1, 200);
+            for _ in 0..n {
+                q.schedule(g.f64(0.0, 1000.0), Event::AgentDispatch);
+            }
+            let mut last = f64::NEG_INFINITY;
+            while let Some((t, _)) = q.next() {
+                assert!(t >= last);
+                last = t;
+            }
+        });
+    }
+}

@@ -1,0 +1,28 @@
+//! The discrete-event simulator — the scale substrate for the paper's
+//! HPC experiments (Fig. 4's 131 072 containers, Figs. 6–7's routing
+//! comparison, §7.5's batching ablation).
+//!
+//! The simulator drives the *same* policy objects as the live engine —
+//! [`crate::routing::Scheduler`], [`crate::containers::WarmPool`],
+//! [`crate::provider::Strategy`], [`crate::batching::Prefetcher`] —
+//! under virtual time, with cost models calibrated to the paper's own
+//! measurements:
+//!
+//! * **agent dispatch cost** `d` per task: the serial brokering cost at
+//!   the agent. Calibrated from §7.2.3's peak throughput (1694 req/s on
+//!   Theta ⇒ d ≈ 0.59 ms; 1466 req/s on Cori ⇒ d ≈ 0.68 ms).
+//! * **worker task overhead** `w` per task: deserialize + dispatch +
+//!   result path on a slow KNL core. Calibrated from Fig. 4(a): strong
+//!   scaling of no-ops flattens at N* ≈ w/d ≈ 256 containers ⇒ w ≈ 150 ms.
+//! * **cold container starts**: Table 3 distributions (see
+//!   [`crate::containers::StartCostModel`]).
+//! * **batching off**: each dispatch pays a request round-trip
+//!   (§7.5: 10 000 no-ops, 6.7 s batched vs 118 s unbatched ⇒ RTT ≈ 11 ms).
+
+mod endpoint;
+mod events;
+mod profile;
+
+pub use endpoint::{SimEndpoint, SimReport, SimTask};
+pub use events::{Event, EventQueue};
+pub use profile::SimProfile;

@@ -1,0 +1,316 @@
+//! The key-value core: strings + TTL, hashes, lists, counters.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::common::time::Time;
+
+#[derive(Default)]
+struct Shard {
+    strings: HashMap<String, (Vec<u8>, Option<Time>)>,
+    hashes: HashMap<String, HashMap<String, Vec<u8>>>,
+    lists: HashMap<String, VecDeque<Vec<u8>>>,
+    counters: HashMap<String, i64>,
+}
+
+/// An in-process Redis-subset store. Cheap to clone (Arc inside); all
+/// operations are linearizable under one mutex per store — funcX's Redis
+/// is single-threaded per shard too, so this matches the consistency
+/// model the paper's queues rely on.
+#[derive(Clone)]
+pub struct KvStore {
+    inner: Arc<(Mutex<Shard>, Condvar)>,
+}
+
+impl Default for KvStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl KvStore {
+    pub fn new() -> Self {
+        KvStore { inner: Arc::new((Mutex::new(Shard::default()), Condvar::new())) }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Shard> {
+        self.inner.0.lock().expect("kv store poisoned")
+    }
+
+    // ---- strings ---------------------------------------------------------
+
+    /// SET key value (no expiry).
+    pub fn set(&self, key: &str, value: Vec<u8>) {
+        self.lock().strings.insert(key.to_string(), (value, None));
+    }
+
+    /// SETEX: set with a TTL relative to `now` (caller supplies the clock
+    /// reading so the simulator can drive expiry under virtual time).
+    pub fn set_ex(&self, key: &str, value: Vec<u8>, ttl_s: f64, now: Time) {
+        self.lock().strings.insert(key.to_string(), (value, Some(now + ttl_s)));
+    }
+
+    /// GET at an explicit time (TTL-aware).
+    pub fn get_at(&self, key: &str, now: Time) -> Option<Vec<u8>> {
+        let mut g = self.lock();
+        match g.strings.get(key) {
+            Some((_, Some(exp))) if now >= *exp => {
+                g.strings.remove(key);
+                None
+            }
+            Some((v, _)) => Some(v.clone()),
+            None => None,
+        }
+    }
+
+    /// GET ignoring TTL bookkeeping (keys set without expiry).
+    pub fn get(&self, key: &str) -> Option<Vec<u8>> {
+        self.get_at(key, 0.0)
+    }
+
+    /// DEL; returns whether the key existed.
+    pub fn del(&self, key: &str) -> bool {
+        let mut g = self.lock();
+        g.strings.remove(key).is_some()
+            | g.hashes.remove(key).is_some()
+            | g.lists.remove(key).is_some()
+    }
+
+    /// Purge every expired string key (the service's periodic result
+    /// purge; §4.1). Returns the number purged.
+    pub fn purge_expired(&self, now: Time) -> usize {
+        let mut g = self.lock();
+        let before = g.strings.len();
+        g.strings.retain(|_, (_, exp)| exp.map_or(true, |e| now < e));
+        before - g.strings.len()
+    }
+
+    // ---- hashes ----------------------------------------------------------
+
+    pub fn hset(&self, key: &str, field: &str, value: Vec<u8>) {
+        self.lock()
+            .hashes
+            .entry(key.to_string())
+            .or_default()
+            .insert(field.to_string(), value);
+    }
+
+    pub fn hget(&self, key: &str, field: &str) -> Option<Vec<u8>> {
+        self.lock().hashes.get(key).and_then(|h| h.get(field).cloned())
+    }
+
+    pub fn hdel(&self, key: &str, field: &str) -> bool {
+        self.lock()
+            .hashes
+            .get_mut(key)
+            .map(|h| h.remove(field).is_some())
+            .unwrap_or(false)
+    }
+
+    pub fn hlen(&self, key: &str) -> usize {
+        self.lock().hashes.get(key).map(|h| h.len()).unwrap_or(0)
+    }
+
+    pub fn hkeys(&self, key: &str) -> Vec<String> {
+        self.lock()
+            .hashes
+            .get(key)
+            .map(|h| h.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    // ---- lists (queues) ---------------------------------------------------
+
+    /// RPUSH: append to the tail; wakes blocked poppers.
+    pub fn rpush(&self, key: &str, value: Vec<u8>) -> usize {
+        let mut g = self.lock();
+        let l = g.lists.entry(key.to_string()).or_default();
+        l.push_back(value);
+        let n = l.len();
+        drop(g);
+        self.inner.1.notify_all();
+        n
+    }
+
+    /// LPUSH: prepend to the head (used to *return* undelivered tasks to
+    /// the front of the queue on agent loss; §4.1).
+    pub fn lpush(&self, key: &str, value: Vec<u8>) -> usize {
+        let mut g = self.lock();
+        let l = g.lists.entry(key.to_string()).or_default();
+        l.push_front(value);
+        let n = l.len();
+        drop(g);
+        self.inner.1.notify_all();
+        n
+    }
+
+    /// LPOP: pop from the head.
+    pub fn lpop(&self, key: &str) -> Option<Vec<u8>> {
+        self.lock().lists.get_mut(key).and_then(|l| l.pop_front())
+    }
+
+    /// Pop up to `n` items (pipelined LPOP — the batching fast path).
+    pub fn lpop_n(&self, key: &str, n: usize) -> Vec<Vec<u8>> {
+        let mut g = self.lock();
+        match g.lists.get_mut(key) {
+            Some(l) => {
+                let take = n.min(l.len());
+                l.drain(..take).collect()
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// BLPOP: block until an item arrives or `timeout` elapses.
+    pub fn blpop(&self, key: &str, timeout: Duration) -> Option<Vec<u8>> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = self.lock();
+        loop {
+            if let Some(v) = g.lists.get_mut(key).and_then(|l| l.pop_front()) {
+                return Some(v);
+            }
+            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+            if remaining.is_zero() {
+                return None;
+            }
+            let (guard, timed_out) = self
+                .inner
+                .1
+                .wait_timeout(g, remaining)
+                .expect("kv store poisoned");
+            g = guard;
+            if timed_out.timed_out() {
+                // Re-check once after timeout to avoid a lost-wakeup race.
+                return g.lists.get_mut(key).and_then(|l| l.pop_front());
+            }
+        }
+    }
+
+    pub fn llen(&self, key: &str) -> usize {
+        self.lock().lists.get(key).map(|l| l.len()).unwrap_or(0)
+    }
+
+    // ---- counters ----------------------------------------------------------
+
+    pub fn incr(&self, key: &str) -> i64 {
+        let mut g = self.lock();
+        let c = g.counters.entry(key.to_string()).or_insert(0);
+        *c += 1;
+        *c
+    }
+
+    pub fn counter(&self, key: &str) -> i64 {
+        *self.lock().counters.get(key).unwrap_or(&0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn string_set_get_del() {
+        let kv = KvStore::new();
+        kv.set("a", b"1".to_vec());
+        assert_eq!(kv.get("a"), Some(b"1".to_vec()));
+        assert!(kv.del("a"));
+        assert_eq!(kv.get("a"), None);
+        assert!(!kv.del("a"));
+    }
+
+    #[test]
+    fn ttl_and_purge() {
+        let kv = KvStore::new();
+        kv.set_ex("r1", b"x".to_vec(), 10.0, 0.0);
+        kv.set_ex("r2", b"y".to_vec(), 100.0, 0.0);
+        kv.set("keep", b"z".to_vec());
+        assert!(kv.get_at("r1", 5.0).is_some());
+        assert_eq!(kv.purge_expired(50.0), 1); // r1 expired at t=10; r2 alive
+        assert!(kv.get_at("r2", 50.0).is_some());
+        assert!(kv.get("keep").is_some());
+    }
+
+    #[test]
+    fn lpush_returns_to_front() {
+        let kv = KvStore::new();
+        kv.rpush("q", b"b".to_vec());
+        kv.lpush("q", b"a".to_vec());
+        assert_eq!(kv.lpop("q"), Some(b"a".to_vec()));
+        assert_eq!(kv.lpop("q"), Some(b"b".to_vec()));
+    }
+
+    #[test]
+    fn lpop_n_batches() {
+        let kv = KvStore::new();
+        for i in 0..10u8 {
+            kv.rpush("q", vec![i]);
+        }
+        let got = kv.lpop_n("q", 4);
+        assert_eq!(got, vec![vec![0], vec![1], vec![2], vec![3]]);
+        assert_eq!(kv.llen("q"), 6);
+        assert_eq!(kv.lpop_n("q", 100).len(), 6);
+        assert_eq!(kv.lpop_n("q", 1).len(), 0);
+    }
+
+    #[test]
+    fn blpop_wakes_on_push() {
+        let kv = KvStore::new();
+        let kv2 = kv.clone();
+        let h = thread::spawn(move || kv2.blpop("q", Duration::from_secs(5)));
+        thread::sleep(Duration::from_millis(20));
+        kv.rpush("q", b"wake".to_vec());
+        assert_eq!(h.join().unwrap(), Some(b"wake".to_vec()));
+    }
+
+    #[test]
+    fn blpop_times_out() {
+        let kv = KvStore::new();
+        let t0 = std::time::Instant::now();
+        assert_eq!(kv.blpop("q", Duration::from_millis(30)), None);
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+    }
+
+    #[test]
+    fn counters() {
+        let kv = KvStore::new();
+        assert_eq!(kv.incr("c"), 1);
+        assert_eq!(kv.incr("c"), 2);
+        assert_eq!(kv.counter("c"), 2);
+        assert_eq!(kv.counter("other"), 0);
+    }
+
+    #[test]
+    fn concurrent_producers_consumers() {
+        let kv = KvStore::new();
+        let n_prod = 4;
+        let per = 500;
+        let mut handles = Vec::new();
+        for p in 0..n_prod {
+            let kv = kv.clone();
+            handles.push(thread::spawn(move || {
+                for i in 0..per {
+                    kv.rpush("q", format!("{p}:{i}").into_bytes());
+                }
+            }));
+        }
+        let consumed = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        for _ in 0..3 {
+            let kv = kv.clone();
+            let consumed = consumed.clone();
+            handles.push(thread::spawn(move || {
+                while kv.blpop("q", Duration::from_millis(100)).is_some() {
+                    consumed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(
+            consumed.load(std::sync::atomic::Ordering::Relaxed) + kv.llen("q"),
+            n_prod * per
+        );
+    }
+}

@@ -1,0 +1,130 @@
+//! Redis-subset in-memory store — the broker substrate (§4.1).
+//!
+//! funcX stores serialized functions and tasks in an AWS ElastiCache
+//! Redis hashset and implements its hierarchical task/result queues as
+//! Redis Lists. We implement the subset funcX uses, in-process:
+//!
+//! * strings with TTL ([`KvStore::set`], [`KvStore::get`], expiry purge),
+//! * hashes ([`KvStore::hset`], [`KvStore::hget`]),
+//! * lists used as queues ([`KvStore::rpush`], [`KvStore::lpop`],
+//!   blocking pop with timeout — Redis `BLPOP`),
+//! * counters ([`KvStore::incr`]).
+//!
+//! The same type backs (a) the service's task brokering and (b) the
+//! endpoint-local in-memory data store used for intra-endpoint data
+//! management (§5.2, Tables 1–2).
+
+mod kv;
+mod queue;
+
+pub use kv::KvStore;
+pub use queue::TaskQueue;
+
+#[cfg(test)]
+mod proptests {
+    use super::*;
+    use crate::testing::check;
+
+    #[test]
+    fn list_fifo_invariant() {
+        // FIFO: a list fed by rpush and drained by lpop yields exactly the
+        // pushed sequence (queue semantics the task broker depends on).
+        check("list-fifo", 100, |g| {
+            let kv = KvStore::new();
+            let items = g.vec(0..200, |g| g.u64());
+            for i in &items {
+                kv.rpush("q", i.to_le_bytes().to_vec());
+            }
+            let mut out = Vec::new();
+            while let Some(b) = kv.lpop("q") {
+                out.push(u64::from_le_bytes(b.as_slice().try_into().unwrap()));
+            }
+            assert_eq!(out, items);
+        });
+    }
+
+    #[test]
+    fn list_len_conserved() {
+        // llen always equals pushes minus pops.
+        check("list-len", 100, |g| {
+            let kv = KvStore::new();
+            let pushes = g.usize(0, 100);
+            let pops = g.usize(0, 120);
+            for i in 0..pushes {
+                kv.rpush("q", vec![i as u8]);
+            }
+            let mut popped = 0;
+            for _ in 0..pops {
+                if kv.lpop("q").is_some() {
+                    popped += 1;
+                }
+            }
+            assert_eq!(popped, pops.min(pushes));
+            assert_eq!(kv.llen("q"), pushes - popped);
+        });
+    }
+
+    #[test]
+    fn hash_last_write_wins() {
+        check("hash-lww", 100, |g| {
+            let kv = KvStore::new();
+            let mut oracle = std::collections::HashMap::new();
+            let n = g.usize(1, 40);
+            for _ in 0..n {
+                let field = ["a", "b", "c", "d"][g.usize(0, 4)].to_string();
+                let val = g.bytes(16);
+                kv.hset("h", &field, val.clone());
+                oracle.insert(field, val);
+            }
+            for (field, val) in &oracle {
+                assert_eq!(kv.hget("h", field).as_ref(), Some(val));
+            }
+            assert_eq!(kv.hlen("h"), oracle.len());
+        });
+    }
+
+    #[test]
+    fn ttl_expiry_boundary() {
+        // Keys readable strictly before expiry, gone at/after.
+        check("ttl-expiry", 200, |g| {
+            let kv = KvStore::new();
+            let ttl = g.f64(0.1, 100.0);
+            let probe = g.f64(0.0, 200.0);
+            kv.set_ex("k", b"v".to_vec(), ttl, 0.0);
+            let got = kv.get_at("k", probe);
+            if probe < ttl {
+                assert!(got.is_some());
+            } else {
+                assert!(got.is_none());
+            }
+        });
+    }
+
+    #[test]
+    fn mixed_push_pop_front_back() {
+        // Oracle comparison against VecDeque under a random op sequence.
+        check("deque-oracle", 100, |g| {
+            let kv = KvStore::new();
+            let mut oracle = std::collections::VecDeque::new();
+            let ops = g.usize(1, 120);
+            for _ in 0..ops {
+                match g.usize(0, 3) {
+                    0 => {
+                        let v = g.bytes(8);
+                        kv.rpush("q", v.clone());
+                        oracle.push_back(v);
+                    }
+                    1 => {
+                        let v = g.bytes(8);
+                        kv.lpush("q", v.clone());
+                        oracle.push_front(v);
+                    }
+                    _ => {
+                        assert_eq!(kv.lpop("q"), oracle.pop_front());
+                    }
+                }
+                assert_eq!(kv.llen("q"), oracle.len());
+            }
+        });
+    }
+}

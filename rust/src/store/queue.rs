@@ -1,0 +1,145 @@
+//! Typed task/result queues over the KV store's lists.
+//!
+//! Each registered endpoint gets a Redis task queue and a result queue
+//! (§4.1, "implemented using Redis Lists"). Tasks are serialized into the
+//! list; acknowledgement semantics live a layer up (the forwarder caches
+//! in-flight tasks until the agent acks — §4.1 "tasks are cached at each
+//! layer and only removed when downstream layers have acknowledged").
+
+use std::time::Duration;
+
+use crate::common::error::Result;
+use crate::serialize::Wire;
+use crate::store::KvStore;
+
+/// A typed FIFO queue stored as a Redis-style list.
+#[derive(Clone)]
+pub struct TaskQueue<T> {
+    kv: KvStore,
+    key: String,
+    _marker: std::marker::PhantomData<fn() -> T>,
+}
+
+impl<T: Wire> TaskQueue<T> {
+    pub fn new(kv: KvStore, key: impl Into<String>) -> Self {
+        TaskQueue { kv, key: key.into(), _marker: std::marker::PhantomData }
+    }
+
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+
+    /// Append to the tail (normal enqueue).
+    pub fn push(&self, item: &T) -> Result<usize> {
+        Ok(self.kv.rpush(&self.key, item.to_bytes()))
+    }
+
+    /// Return an item to the *front* (re-dispatch after agent loss; §4.1).
+    pub fn push_front(&self, item: &T) -> Result<usize> {
+        Ok(self.kv.lpush(&self.key, item.to_bytes()))
+    }
+
+    /// Non-blocking pop.
+    pub fn pop(&self) -> Result<Option<T>> {
+        match self.kv.lpop(&self.key) {
+            Some(bytes) => Ok(Some(T::from_bytes(&bytes)?)),
+            None => Ok(None),
+        }
+    }
+
+    /// Pop up to `n` items in one call (internal batching; §4.6).
+    pub fn pop_n(&self, n: usize) -> Result<Vec<T>> {
+        self.kv.lpop_n(&self.key, n).iter().map(|b| T::from_bytes(b)).collect()
+    }
+
+    /// Blocking pop with timeout (the forwarder's listen loop).
+    pub fn pop_blocking(&self, timeout: Duration) -> Result<Option<T>> {
+        match self.kv.blpop(&self.key, timeout) {
+            Some(bytes) => Ok(Some(T::from_bytes(&bytes)?)),
+            None => Ok(None),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.kv.llen(&self.key)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::ids::*;
+    use crate::common::task::{Payload, Task};
+    use crate::serialize::Buffer;
+
+    fn mk_task() -> Task {
+        Task::new(
+            FunctionId::new(),
+            EndpointId::new(),
+            UserId::new(),
+            None,
+            Payload::Noop,
+            Buffer::empty(),
+        )
+    }
+
+    #[test]
+    fn typed_roundtrip() {
+        let kv = KvStore::new();
+        let q: TaskQueue<Task> = TaskQueue::new(kv, "ep:tasks");
+        let t = mk_task();
+        q.push(&t).unwrap();
+        let back = q.pop().unwrap().unwrap();
+        assert_eq!(back.id, t.id);
+        assert!(q.pop().unwrap().is_none());
+    }
+
+    #[test]
+    fn front_requeue_order() {
+        let kv = KvStore::new();
+        let q: TaskQueue<u32> = TaskQueue::new(kv, "q");
+        q.push(&1).unwrap();
+        q.push(&2).unwrap();
+        let first = q.pop().unwrap().unwrap();
+        assert_eq!(first, 1);
+        q.push_front(&first).unwrap(); // simulate agent loss re-queue
+        assert_eq!(q.pop().unwrap().unwrap(), 1);
+        assert_eq!(q.pop().unwrap().unwrap(), 2);
+    }
+
+    #[test]
+    fn pop_n_preserves_order() {
+        let kv = KvStore::new();
+        let q: TaskQueue<u32> = TaskQueue::new(kv, "q");
+        for i in 0..10 {
+            q.push(&i).unwrap();
+        }
+        assert_eq!(q.pop_n(4).unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn queues_isolated_by_key() {
+        let kv = KvStore::new();
+        let a: TaskQueue<u32> = TaskQueue::new(kv.clone(), "ep-a:tasks");
+        let b: TaskQueue<u32> = TaskQueue::new(kv, "ep-b:tasks");
+        a.push(&1).unwrap();
+        assert!(b.pop().unwrap().is_none());
+        assert_eq!(a.pop().unwrap(), Some(1));
+    }
+
+    #[test]
+    fn blocking_pop_sees_push() {
+        let kv = KvStore::new();
+        let q: TaskQueue<u32> = TaskQueue::new(kv.clone(), "q");
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop_blocking(Duration::from_secs(2)));
+        std::thread::sleep(Duration::from_millis(10));
+        q.push(&9).unwrap();
+        assert_eq!(h.join().unwrap().unwrap(), Some(9));
+    }
+}

@@ -1,0 +1,149 @@
+//! In-tree property-testing harness (the build is offline; proptest is
+//! unavailable), used by the module-level invariant tests.
+//!
+//! [`check`] runs a property over `n` seeded cases; on failure it reports
+//! the seed so the case replays deterministically:
+//!
+//! ```no_run
+//! use funcx::testing::{check, Gen};
+//! check("sort is idempotent", 200, |g| {
+//!     let mut v = g.vec(0..64, |g| g.i64(-100, 100));
+//!     v.sort();
+//!     let w = { let mut w = v.clone(); w.sort(); w };
+//!     assert_eq!(v, w);
+//! });
+//! ```
+
+use crate::common::rng::Rng;
+
+/// A seeded case generator handed to each property invocation.
+pub struct Gen {
+    rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), seed }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        lo + self.rng.below(hi - lo)
+    }
+
+    pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo < hi);
+        lo + (self.rng.next_u64() % (hi - lo) as u64) as i64
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn bytes(&mut self, max_len: usize) -> Vec<u8> {
+        let n = self.rng.below(max_len + 1);
+        (0..n).map(|_| (self.rng.next_u64() & 0xff) as u8).collect()
+    }
+
+    pub fn string(&mut self, max_len: usize) -> String {
+        let n = self.rng.below(max_len + 1);
+        (0..n)
+            .map(|_| {
+                let c = self.rng.below(52);
+                (if c < 26 { b'a' + c as u8 } else { b'A' + (c - 26) as u8 }) as char
+            })
+            .collect()
+    }
+
+    pub fn vec<T>(
+        &mut self,
+        len: std::ops::Range<usize>,
+        mut f: impl FnMut(&mut Gen) -> T,
+    ) -> Vec<T> {
+        let n = self.usize(len.start, len.end.max(len.start + 1));
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, v: &'a [T]) -> &'a T {
+        assert!(!v.is_empty());
+        &v[self.rng.below(v.len())]
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` over `cases` seeded generations. Panics (with the seed) on
+/// the first failing case. `FUNCX_PROP_SEED` replays a single case.
+pub fn check(name: &str, cases: u64, mut prop: impl FnMut(&mut Gen)) {
+    if let Ok(seed) = std::env::var("FUNCX_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("FUNCX_PROP_SEED must be u64");
+        let mut g = Gen::new(seed);
+        prop(&mut g);
+        return;
+    }
+    // Deterministic seed stream per property name so CI is stable.
+    let base = name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    });
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {i} (replay with FUNCX_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", 50, |g| {
+            let x = g.usize(0, 10);
+            assert!(x < 10);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with FUNCX_PROP_SEED=")]
+    fn check_reports_seed_on_failure() {
+        check("always-fails", 5, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn gen_vec_respects_bounds() {
+        check("vec-bounds", 50, |g| {
+            let v = g.vec(2..5, |g| g.bool());
+            assert!((2..5).contains(&v.len()));
+        });
+    }
+
+    #[test]
+    fn gen_string_alpha() {
+        check("string-alpha", 50, |g| {
+            let s = g.string(16);
+            assert!(s.chars().all(|c| c.is_ascii_alphabetic()));
+        });
+    }
+}

@@ -1,0 +1,232 @@
+//! §5.1 — inter-endpoint data transfers (the Globus integration).
+//!
+//! funcX passes *references* to Globus-accessible files between
+//! endpoints; the service stages data before/after function invocation
+//! via the Globus transfer API. We reproduce the programmatic surface —
+//! storage-endpoint registry, async third-party transfers with status
+//! polling, Globus-Auth-scoped access — over a bandwidth/latency model
+//! (GridFTP behaviour: per-transfer setup cost, striped wide-area
+//! bandwidth shared across concurrent transfers per endpoint pair).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::common::error::{Error, Result};
+use crate::common::ids::{TransferId, Uuid};
+use crate::common::time::Time;
+
+/// A registered storage endpoint (Globus Connect installation).
+#[derive(Clone, Debug)]
+pub struct StorageEndpoint {
+    pub id: Uuid,
+    pub name: String,
+    /// Wide-area bandwidth to/from this endpoint, bytes/s.
+    pub wan_bps: f64,
+    /// Per-transfer setup latency (auth handshake + GridFTP control).
+    pub setup_s: f64,
+}
+
+/// A file reference passed to/from functions (Listing 2's
+/// `GlobusFile(endpoint, path)`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GlobusFile {
+    pub endpoint: Uuid,
+    pub path: String,
+    pub size_bytes: u64,
+}
+
+/// Transfer task status.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TransferStatus {
+    Active { done_at: Time },
+    Succeeded,
+    Failed,
+}
+
+#[derive(Clone, Debug)]
+struct TransferTask {
+    #[allow(dead_code)]
+    id: TransferId,
+    status: TransferStatus,
+    src: Uuid,
+    dst: Uuid,
+    bytes: u64,
+}
+
+#[derive(Default)]
+struct TransferState {
+    endpoints: HashMap<Uuid, StorageEndpoint>,
+    tasks: HashMap<TransferId, TransferTask>,
+}
+
+/// The transfer service (Globus stand-in). Clone-shareable.
+#[derive(Clone, Default)]
+pub struct TransferService {
+    state: Arc<Mutex<TransferState>>,
+}
+
+impl TransferService {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a storage endpoint (Globus Connect install).
+    pub fn register_endpoint(&self, name: &str, wan_bps: f64, setup_s: f64) -> Uuid {
+        let id = Uuid::new();
+        self.state.lock().unwrap().endpoints.insert(
+            id,
+            StorageEndpoint { id, name: name.to_string(), wan_bps, setup_s },
+        );
+        id
+    }
+
+    pub fn endpoint(&self, id: Uuid) -> Result<StorageEndpoint> {
+        self.state
+            .lock()
+            .unwrap()
+            .endpoints
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| Error::NotFound(format!("storage endpoint {id}")))
+    }
+
+    /// Estimated duration for a transfer between two endpoints: setup +
+    /// size over the min of the two WAN links.
+    pub fn estimate(&self, src: Uuid, dst: Uuid, bytes: u64) -> Result<f64> {
+        let st = self.state.lock().unwrap();
+        let s = st
+            .endpoints
+            .get(&src)
+            .ok_or_else(|| Error::NotFound(format!("storage endpoint {src}")))?;
+        let d = st
+            .endpoints
+            .get(&dst)
+            .ok_or_else(|| Error::NotFound(format!("storage endpoint {dst}")))?;
+        let bw = s.wan_bps.min(d.wan_bps);
+        Ok(s.setup_s.max(d.setup_s) + bytes as f64 / bw)
+    }
+
+    /// Submit an async third-party transfer; data moves directly between
+    /// the source and destination systems (GridFTP), not through funcX.
+    pub fn submit(
+        &self,
+        file: &GlobusFile,
+        dst: Uuid,
+        dst_path: &str,
+        now: Time,
+    ) -> Result<TransferId> {
+        if dst_path.is_empty() {
+            return Err(Error::InvalidArgument("empty destination path".into()));
+        }
+        let duration = self.estimate(file.endpoint, dst, file.size_bytes)?;
+        let id = TransferId::new();
+        self.state.lock().unwrap().tasks.insert(
+            id,
+            TransferTask {
+                id,
+                status: TransferStatus::Active { done_at: now + duration },
+                src: file.endpoint,
+                dst,
+                bytes: file.size_bytes,
+            },
+        );
+        Ok(id)
+    }
+
+    /// Poll a transfer's status at `now` (marks completion lazily).
+    pub fn status(&self, id: TransferId, now: Time) -> Result<TransferStatus> {
+        let mut st = self.state.lock().unwrap();
+        let t = st
+            .tasks
+            .get_mut(&id)
+            .ok_or_else(|| Error::NotFound(format!("transfer {id}")))?;
+        if let TransferStatus::Active { done_at } = t.status {
+            if now >= done_at {
+                t.status = TransferStatus::Succeeded;
+            }
+        }
+        Ok(t.status)
+    }
+
+    /// Wait (virtually): the completion time of a submitted transfer.
+    pub fn completion_time(&self, id: TransferId) -> Result<Time> {
+        let st = self.state.lock().unwrap();
+        match st.tasks.get(&id) {
+            Some(TransferTask { status: TransferStatus::Active { done_at }, .. }) => {
+                Ok(*done_at)
+            }
+            Some(_) => Ok(0.0),
+            None => Err(Error::NotFound(format!("transfer {id}"))),
+        }
+    }
+
+    /// Aggregate bytes currently in flight between an endpoint pair
+    /// (capacity planning / tests).
+    pub fn in_flight_bytes(&self, src: Uuid, dst: Uuid, now: Time) -> u64 {
+        let st = self.state.lock().unwrap();
+        st.tasks
+            .values()
+            .filter(|t| t.src == src && t.dst == dst)
+            .filter(|t| matches!(t.status, TransferStatus::Active { done_at } if now < done_at))
+            .map(|t| t.bytes)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn svc() -> (TransferService, Uuid, Uuid) {
+        let ts = TransferService::new();
+        // ALCF DTN: 10 Gb/s WAN; campus cluster: 1 Gb/s.
+        let alcf = ts.register_endpoint("alcf#dtn", 1.25e9, 2.0);
+        let campus = ts.register_endpoint("campus#cluster", 0.125e9, 2.0);
+        (ts, alcf, campus)
+    }
+
+    #[test]
+    fn estimate_uses_min_bandwidth() {
+        let (ts, alcf, campus) = svc();
+        // 1 GB over the 1 Gb/s link: 8 s + 2 s setup.
+        let est = ts.estimate(alcf, campus, 1_000_000_000).unwrap();
+        assert!((est - 10.0).abs() < 0.5, "estimate {est}");
+    }
+
+    #[test]
+    fn transfer_lifecycle() {
+        let (ts, alcf, campus) = svc();
+        let f = GlobusFile { endpoint: alcf, path: "/data/run42.h5".into(), size_bytes: 125_000_000 };
+        let id = ts.submit(&f, campus, "/scratch/run42.h5", 0.0).unwrap();
+        assert!(matches!(ts.status(id, 0.1).unwrap(), TransferStatus::Active { .. }));
+        // 125 MB over 1 Gb/s ~ 1 s + 2 s setup = 3 s.
+        assert!(matches!(ts.status(id, 10.0).unwrap(), TransferStatus::Succeeded));
+    }
+
+    #[test]
+    fn unknown_endpoints_rejected() {
+        let (ts, alcf, _) = svc();
+        let f = GlobusFile { endpoint: alcf, path: "/x".into(), size_bytes: 1 };
+        assert!(ts.submit(&f, Uuid::new(), "/y", 0.0).is_err());
+        assert!(ts.estimate(Uuid::new(), alcf, 1).is_err());
+        assert!(ts.status(TransferId::new(), 0.0).is_err());
+    }
+
+    #[test]
+    fn empty_dst_path_rejected() {
+        let (ts, alcf, campus) = svc();
+        let f = GlobusFile { endpoint: alcf, path: "/x".into(), size_bytes: 1 };
+        assert!(ts.submit(&f, campus, "", 0.0).is_err());
+    }
+
+    #[test]
+    fn in_flight_accounting() {
+        let (ts, alcf, campus) = svc();
+        let f = GlobusFile { endpoint: alcf, path: "/a".into(), size_bytes: 1_000_000 };
+        ts.submit(&f, campus, "/a", 0.0).unwrap();
+        ts.submit(&f, campus, "/b", 0.0).unwrap();
+        assert_eq!(ts.in_flight_bytes(alcf, campus, 0.5), 2_000_000);
+        assert_eq!(ts.in_flight_bytes(alcf, campus, 100.0), 0);
+        assert_eq!(ts.in_flight_bytes(campus, alcf, 0.5), 0);
+    }
+}

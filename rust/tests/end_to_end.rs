@@ -1,0 +1,314 @@
+//! Integration tests over the live engine: multi-endpoint topologies,
+//! failure injection, artifact payloads, auth enforcement, and data
+//! staging — the compositions module-level unit tests don't cover.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use funcx::common::config::{EndpointConfig, ServiceConfig};
+use funcx::common::task::{Payload, TaskState};
+use funcx::containers::{ContainerTech, SystemProfile};
+use funcx::data::InMemoryChannel;
+use funcx::endpoint::{link, EndpointBuilder};
+use funcx::provider::SimProvider;
+use funcx::routing::RoundRobin;
+use funcx::runtime::PjrtRuntime;
+use funcx::sdk::FuncXClient;
+use funcx::serialize::Value;
+use funcx::service::FuncXService;
+use funcx::transfer::{GlobusFile, TransferService, TransferStatus};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+/// Two endpoints, one service: tasks route to the endpoint the user
+/// picked, results come back independently (the federation contract).
+#[test]
+fn two_endpoints_isolated_queues() {
+    let svc = Arc::new(FuncXService::new(ServiceConfig::default()));
+    let (_u, tok) = svc.bootstrap_user("alice");
+    let fc = FuncXClient::new(svc.clone(), tok);
+
+    let mut handles = Vec::new();
+    let mut eps = Vec::new();
+    for name in ["theta", "cori"] {
+        let ep = fc.register_endpoint(name, "").unwrap();
+        let (fwd, agent_side) = link();
+        let agent = EndpointBuilder::new()
+            .config(EndpointConfig { min_nodes: 1, workers_per_node: 2, ..Default::default() })
+            .heartbeat_period(0.05)
+            .start(agent_side);
+        let fh = svc.connect_endpoint(ep, fwd).unwrap();
+        handles.push((agent, fh));
+        eps.push(ep);
+    }
+    let f = fc.register_function("echo", Payload::Echo).unwrap();
+    // Interleave submissions across endpoints.
+    let mut tasks = Vec::new();
+    for i in 0..40 {
+        let ep = eps[i % 2];
+        tasks.push(fc.run(f, ep, &Value::Int(i as i64)).unwrap());
+    }
+    for (i, t) in tasks.iter().enumerate() {
+        assert_eq!(
+            fc.get_result(*t, Duration::from_secs(15)).unwrap(),
+            Value::Int(i as i64)
+        );
+    }
+    for (agent, fh) in handles {
+        fh.shutdown();
+        agent.join();
+    }
+}
+
+/// Artifact payloads through the full stack (PJRT on the worker).
+#[test]
+fn artifact_payloads_end_to_end() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let svc = Arc::new(FuncXService::new(ServiceConfig::default()));
+    let (_u, tok) = svc.bootstrap_user("alice");
+    let fc = FuncXClient::new(svc.clone(), tok);
+    let ep = fc.register_endpoint("local", "").unwrap();
+    let (fwd, agent_side) = link();
+    let agent = EndpointBuilder::new()
+        .config(EndpointConfig { min_nodes: 1, workers_per_node: 2, ..Default::default() })
+        .runtime(Arc::new(PjrtRuntime::load_dir(&dir).unwrap()))
+        .heartbeat_period(0.05)
+        .start(agent_side);
+    let fh = svc.connect_endpoint(ep, fwd).unwrap();
+
+    let f = fc.register_function("reduce", Payload::Artifact("reducer".into())).unwrap();
+    let ids: Vec<i32> = (0..4096).map(|i| (i % 8) as i32).collect();
+    let input = Value::map([
+        ("ids", Value::I32s(ids)),
+        ("vals", Value::F32s(vec![2.0; 4096])),
+    ]);
+    let t = fc.run(f, ep, &input).unwrap();
+    let out = fc.get_result(t, Duration::from_secs(60)).unwrap();
+    match out {
+        Value::List(parts) => match &parts[0] {
+            Value::F32s(sums) => {
+                for b in 0..8 {
+                    assert!((sums[b] - 1024.0).abs() < 1e-3);
+                }
+                assert!(sums[8..].iter().all(|v| *v == 0.0));
+            }
+            _ => panic!("bad output"),
+        },
+        _ => panic!("bad result"),
+    }
+
+    // Malformed artifact input fails gracefully (Failed, not hang).
+    let bad = fc.run(f, ep, &Value::Null).unwrap();
+    let err = svc.wait_result(bad, Duration::from_secs(30));
+    assert!(err.is_err());
+    assert_eq!(svc.task_state(bad).unwrap(), TaskState::Failed);
+
+    fh.shutdown();
+    agent.join();
+}
+
+/// §4.7: tokens without scopes are rejected across every API.
+#[test]
+fn auth_is_enforced_everywhere() {
+    let svc = Arc::new(FuncXService::new(ServiceConfig::default()));
+    let (_admin, admin_tok) = svc.bootstrap_user("admin");
+    let limited = svc.auth.register_identity("limited");
+    let run_only = svc
+        .auth
+        .issue_token(limited, &[funcx::auth::Scope::RunFunction], 3600.0, 0.0)
+        .unwrap();
+
+    let fc_admin = FuncXClient::new(svc.clone(), admin_tok);
+    let fc_limited = FuncXClient::new(svc.clone(), run_only);
+
+    // limited cannot register functions or endpoints.
+    assert!(fc_limited.register_function("f", Payload::Noop).is_err());
+    assert!(fc_limited.register_endpoint("e", "").is_err());
+
+    // limited cannot run admin's unshared function.
+    let f = fc_admin.register_function("secret", Payload::Noop).unwrap();
+    let ep = fc_admin.register_endpoint("ep", "").unwrap();
+    assert!(fc_limited.run(f, ep, &Value::Null).is_err());
+
+    // sharing the function is not enough: the endpoint must be shared too.
+    svc.auth.grant_function(f, limited);
+    assert!(fc_limited.run(f, ep, &Value::Null).is_err());
+    svc.auth.grant_endpoint(ep, limited);
+    assert!(fc_limited.run(f, ep, &Value::Null).is_ok());
+}
+
+/// §4.4/§6.3: batch-scheduler provider with queue delays + elastic
+/// scale-out, then scale-in after idle.
+#[test]
+fn elastic_lifecycle_with_batch_provider() {
+    let svc = Arc::new(FuncXService::new(ServiceConfig::default()));
+    let (_u, tok) = svc.bootstrap_user("alice");
+    let fc = FuncXClient::new(svc.clone(), tok);
+    let ep = fc.register_endpoint("cluster", "").unwrap();
+    let (fwd, agent_side) = link();
+    // Kubernetes-ish provider: ~2s pod starts — fast enough for a test,
+    // slow enough to exercise the pending-node path.
+    let agent = EndpointBuilder::new()
+        .config(EndpointConfig {
+            min_nodes: 0,
+            max_nodes: 2,
+            workers_per_node: 2,
+            strategy_period_s: 0.02,
+            node_idle_timeout_s: 0.3,
+            tasks_per_node_scaling: 2,
+            ..Default::default()
+        })
+        .provider(Box::new(SimProvider::kubernetes(7)))
+        .heartbeat_period(0.05)
+        .start(agent_side);
+    let fh = svc.connect_endpoint(ep, fwd).unwrap();
+    let f = fc.register_function("noop", Payload::Noop).unwrap();
+
+    let tasks: Vec<_> = (0..8).map(|_| fc.run(f, ep, &Value::Null).unwrap()).collect();
+    for t in &tasks {
+        fc.get_result(*t, Duration::from_secs(30)).unwrap();
+    }
+    let provisioned = agent.stats.nodes_provisioned.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(provisioned >= 1, "scale-out must have happened");
+
+    // Idle long enough for scale-in.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while agent.stats.nodes_released.load(std::sync::atomic::Ordering::Relaxed) == 0
+        && std::time::Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(
+        agent.stats.nodes_released.load(std::sync::atomic::Ordering::Relaxed) >= 1,
+        "idle nodes must be released (§6.3)"
+    );
+    fh.shutdown();
+    agent.join();
+}
+
+/// Alternative scheduler (round-robin) works through the live agent.
+#[test]
+fn round_robin_scheduler_live() {
+    let svc = Arc::new(FuncXService::new(ServiceConfig::default()));
+    let (_u, tok) = svc.bootstrap_user("alice");
+    let fc = FuncXClient::new(svc.clone(), tok);
+    let ep = fc.register_endpoint("local", "").unwrap();
+    let (fwd, agent_side) = link();
+    let agent = EndpointBuilder::new()
+        .config(EndpointConfig { min_nodes: 2, workers_per_node: 1, ..Default::default() })
+        .scheduler(Box::new(RoundRobin::default()))
+        .heartbeat_period(0.05)
+        .start(agent_side);
+    let fh = svc.connect_endpoint(ep, fwd).unwrap();
+    let f = fc.register_function("echo", Payload::Echo).unwrap();
+    let inputs: Vec<Value> = (0..20).map(Value::Int).collect();
+    let tasks = fc.run_batch(f, ep, &inputs).unwrap();
+    assert_eq!(fc.get_batch_results(&tasks, Duration::from_secs(30)).unwrap(), inputs);
+    fh.shutdown();
+    agent.join();
+}
+
+/// §5: staging + intra-endpoint data ops compose — stage a "file" via the
+/// transfer service, have workers move data through the endpoint store.
+#[test]
+fn data_staging_and_intra_endpoint_ops() {
+    // Inter-endpoint staging (Globus-like).
+    let ts = TransferService::new();
+    let src = ts.register_endpoint("beamline", 1e9, 0.5);
+    let dst = ts.register_endpoint("hpc", 1e9, 0.5);
+    let file = GlobusFile { endpoint: src, path: "/raw/a.h5".into(), size_bytes: 50_000_000 };
+    let tid = ts.submit(&file, dst, "/scratch/a.h5", 0.0).unwrap();
+    let done = ts.completion_time(tid).unwrap();
+    assert!(done > 0.5 && done < 5.0, "50MB over 1GB/s + setup: got {done}");
+    assert_eq!(ts.status(tid, done).unwrap(), TransferStatus::Succeeded);
+
+    // Intra-endpoint: workers put/get through the shared store (§5.2).
+    let svc = Arc::new(FuncXService::new(ServiceConfig::default()));
+    let (_u, tok) = svc.bootstrap_user("alice");
+    let fc = FuncXClient::new(svc.clone(), tok);
+    let ep = fc.register_endpoint("hpc", "").unwrap();
+    let store = Arc::new(InMemoryChannel::default());
+    let (fwd, agent_side) = link();
+    let agent = EndpointBuilder::new()
+        .config(EndpointConfig { min_nodes: 1, workers_per_node: 2, ..Default::default() })
+        .data_channel(store.clone())
+        .profile(SystemProfile::Theta, ContainerTech::Singularity)
+        .heartbeat_period(0.05)
+        .start(agent_side);
+    let fh = svc.connect_endpoint(ep, fwd).unwrap();
+    let dataop = fc.register_function("dataop", Payload::DataOp).unwrap();
+
+    // Producer task writes; consumer task reads (Listing 3's pattern).
+    let put = Value::map([
+        ("op", Value::Str("put".into())),
+        ("key", Value::Str("stage/x".into())),
+        ("data", Value::Bytes(vec![7; 1024])),
+    ]);
+    let t1 = fc.run(dataop, ep, &put).unwrap();
+    fc.get_result(t1, Duration::from_secs(15)).unwrap();
+    let get = Value::map([
+        ("op", Value::Str("get".into())),
+        ("key", Value::Str("stage/x".into())),
+    ]);
+    let t2 = fc.run(dataop, ep, &get).unwrap();
+    assert_eq!(
+        fc.get_result(t2, Duration::from_secs(15)).unwrap(),
+        Value::Bytes(vec![7; 1024])
+    );
+    fh.shutdown();
+    agent.join();
+}
+
+/// Task conservation under repeated agent churn: every submitted task
+/// ends terminal (Success after reconnect, or Abandoned past the
+/// re-dispatch budget) — none lost, none duplicated.
+#[test]
+fn churn_conserves_tasks() {
+    let mut cfg = ServiceConfig::default();
+    cfg.heartbeat_period_s = 0.05;
+    cfg.heartbeat_misses_allowed = 1;
+    let svc = Arc::new(FuncXService::new(cfg));
+    let (_u, tok) = svc.bootstrap_user("alice");
+    let fc = FuncXClient::new(svc.clone(), tok);
+    let ep = fc.register_endpoint("flaky", "").unwrap();
+    let f = fc.register_function("noop", Payload::Noop).unwrap();
+
+    // Submit before any agent exists.
+    let tasks: Vec<_> = (0..30).map(|_| fc.run(f, ep, &Value::Null).unwrap()).collect();
+
+    // Two kill/reconnect cycles, then a healthy agent.
+    for round in 0..2 {
+        let (fwd, agent_side) = link();
+        agent_side.sever();
+        drop(agent_side);
+        let fh = svc.connect_endpoint(ep, fwd).unwrap();
+        std::thread::sleep(Duration::from_millis(300 + round * 100));
+        fh.shutdown();
+    }
+    let (fwd, agent_side) = link();
+    let agent = EndpointBuilder::new()
+        .config(EndpointConfig { min_nodes: 1, workers_per_node: 4, ..Default::default() })
+        .heartbeat_period(0.02)
+        .start(agent_side);
+    let fh = svc.connect_endpoint(ep, fwd).unwrap();
+
+    let mut success = 0;
+    let mut abandoned = 0;
+    for t in &tasks {
+        match svc.wait_result(*t, Duration::from_secs(30)) {
+            Ok(_) => success += 1,
+            Err(funcx::Error::TaskFailed(_)) => abandoned += 1,
+            Err(e) => panic!("unexpected terminal state: {e}"),
+        }
+    }
+    assert_eq!(success + abandoned, 30, "every task must reach a terminal state");
+    assert!(success > 0, "healthy reconnect must complete the queue");
+    fh.shutdown();
+    agent.join();
+}

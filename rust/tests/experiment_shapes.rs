@@ -1,0 +1,167 @@
+//! Integration tests asserting the *shape* of every reproduced table and
+//! figure (DESIGN.md §4's accepted-shape criteria). These are the
+//! regression guards for the evaluation harnesses.
+
+use funcx::data::Transport;
+use funcx::experiments as exp;
+use funcx::sim::SimProfile;
+
+/// Fig. 4(a): completion decreases with containers then flattens near
+/// 256 (no-op) / 2048 (1 s sleep) — the agent-dispatch bound.
+#[test]
+fn fig4a_strong_scaling_knees() {
+    let counts = [64, 128, 256, 1024, 4096];
+    let noop = exp::fig4_strong(SimProfile::theta(), 50_000, 0.0, &counts);
+    assert!(noop[0].completion_s > 1.5 * noop[2].completion_s, "64 -> 256 must speed up");
+    assert!(
+        noop[2].completion_s < 1.3 * noop[4].completion_s
+            && noop[4].completion_s < 1.3 * noop[2].completion_s,
+        "no-op flat past 256: {} vs {}",
+        noop[2].completion_s,
+        noop[4].completion_s
+    );
+
+    let sleep = exp::fig4_strong(SimProfile::theta(), 50_000, 1.0, &[256, 2048, 8192]);
+    assert!(sleep[0].completion_s > 1.5 * sleep[1].completion_s, "sleep scales past 256");
+    assert!(
+        sleep[1].completion_s < 1.3 * sleep[2].completion_s,
+        "sleep flat past 2048: {} vs {}",
+        sleep[1].completion_s,
+        sleep[2].completion_s
+    );
+}
+
+/// Fig. 4(b): weak-scaling no-op completion grows with container count;
+/// sleep stays ~flat to 2048; Cori reaches 131 072 containers / 1.3 M
+/// tasks (the paper's headline scale).
+#[test]
+fn fig4b_weak_scaling_shapes() {
+    let noop = exp::fig4_weak(SimProfile::cori(), 10, 0.0, &[1024, 16_384, 131_072]);
+    assert!(noop[2].completion_s > noop[1].completion_s);
+    assert!(noop[1].completion_s > noop[0].completion_s);
+    assert_eq!(noop[2].containers, 131_072);
+
+    let sleep = exp::fig4_weak(SimProfile::theta(), 10, 1.0, &[256, 2048]);
+    let ratio = sleep[1].completion_s / sleep[0].completion_s;
+    assert!(ratio < 1.5, "1s-sleep weak scaling ~flat to 2048: ratio {ratio}");
+}
+
+/// §7.2.3: peak throughputs match the paper's calibration.
+#[test]
+fn throughput_matches_calibration() {
+    let theta = exp::peak_throughput(SimProfile::theta());
+    let cori = exp::peak_throughput(SimProfile::cori());
+    assert!((theta - 1694.0).abs() / 1694.0 < 0.15, "theta {theta}");
+    assert!((cori - 1466.0).abs() / 1466.0 < 0.15, "cori {cori}");
+}
+
+/// Fig. 5: ordering MPI < ZMQ <= in-memory << sharedFS at small sizes;
+/// convergence at 1 GB.
+#[test]
+fn fig5_ordering_and_convergence() {
+    let pts = exp::fig5_transfer(&[4096, 1 << 30]);
+    let get = |t: Transport, size: usize| {
+        pts.iter()
+            .find(|p| {
+                p.transport == t
+                    && p.size_bytes == size
+                    && matches!(p.pattern, funcx::data::CommPattern::PointToPoint)
+            })
+            .unwrap()
+            .time_s
+    };
+    let small = 4096;
+    assert!(get(Transport::Mpi, small) < get(Transport::ZeroMq, small));
+    assert!(get(Transport::ZeroMq, small) < get(Transport::InMemoryStore, small));
+    assert!(get(Transport::InMemoryStore, small) < get(Transport::SharedFs, small));
+    assert!(get(Transport::SharedFs, small) / get(Transport::Mpi, small) > 20.0);
+    let big = 1 << 30;
+    assert!(get(Transport::SharedFs, big) / get(Transport::Mpi, big) < 6.0);
+}
+
+/// Table 1: shuffle speedups and Sort-vs-WordCount improvement ordering.
+#[test]
+fn table1_claims() {
+    let rows = exp::table1_mapreduce();
+    let phases = |app: &str, t: Transport| {
+        rows.iter().find(|r| r.app == app && r.transport == t).unwrap().phases
+    };
+    let speedup = phases("Sort", Transport::SharedFs).intermediate_read_s
+        / phases("Sort", Transport::InMemoryStore).intermediate_read_s;
+    assert!((1.5..6.0).contains(&speedup), "sort shuffle-read speedup {speedup}");
+    let imp = |app: &str| {
+        let r = phases(app, Transport::InMemoryStore).total();
+        let f = phases(app, Transport::SharedFs).total();
+        (f - r) / f
+    };
+    assert!(imp("Sort") > imp("WordCount"));
+}
+
+/// Table 2: Redis wins every stage; contended result-write dominates FS.
+#[test]
+fn table2_claims() {
+    let rows = exp::table2_colmena();
+    let redis = rows.iter().find(|r| r.transport == Transport::InMemoryStore).unwrap().stages;
+    let fs = rows.iter().find(|r| r.transport == Transport::SharedFs).unwrap().stages;
+    assert!(redis.input_write_s < fs.input_write_s);
+    assert!(redis.input_read_s < fs.input_read_s);
+    assert!(redis.result_write_s < fs.result_write_s);
+    assert!(redis.result_read_s < fs.result_read_s);
+    assert!(fs.result_write_s > fs.input_write_s * 2.0);
+    // Near the paper's cells.
+    assert!((fs.result_write_s - 0.2447).abs() < 0.08, "{}", fs.result_write_s);
+    assert!((redis.input_write_s - 0.00715).abs() < 0.004, "{}", redis.input_write_s);
+}
+
+/// Table 3: sampled stats close to the published min/max/mean.
+#[test]
+fn table3_close_to_paper() {
+    let rows = exp::table3_containers(20_000, 11);
+    let expect = [
+        ("theta", "singularity", 9.83, 14.06, 10.40),
+        ("cori", "shifter", 7.25, 31.26, 8.49),
+        ("ec2", "docker", 1.74, 1.88, 1.79),
+        ("ec2", "singularity", 1.19, 1.26, 1.22),
+    ];
+    for (sys, tech, min, max, mean) in expect {
+        let r = rows
+            .iter()
+            .find(|r| r.system == sys && r.container == tech)
+            .unwrap_or_else(|| panic!("row {sys}/{tech}"));
+        assert!(r.min_s >= min - 0.01, "{sys} min {}", r.min_s);
+        assert!(r.max_s <= max + 0.01, "{sys} max {}", r.max_s);
+        assert!((r.mean_s - mean).abs() / mean < 0.12, "{sys} mean {}", r.mean_s);
+    }
+}
+
+/// Figs. 6–7: warming-aware beats random on completion AND cold starts;
+/// the benefit decays as function duration grows (the paper's claim).
+#[test]
+fn fig6_fig7_claims() {
+    let pts = exp::fig6_fig7_routing(&[3000], &[0.0, 5.0, 20.0], 13);
+    for p in &pts {
+        assert!(
+            p.warming_completion_s <= p.random_completion_s,
+            "warming must not lose at duration {}",
+            p.duration_s
+        );
+        assert!(p.warming_cold_starts < p.random_cold_starts);
+    }
+    let gain = |p: &exp::RoutingPoint| {
+        (p.random_completion_s - p.warming_completion_s) / p.random_completion_s
+    };
+    assert!(gain(&pts[0]) > gain(&pts[2]), "benefit decays with duration");
+    // Fig. 7's relative claim: random's cold starts grow with the batch
+    // and stay a large multiple of warming-aware's.
+    assert!(pts[0].warming_cold_starts < 1400);
+    assert!(pts[0].random_cold_starts > 2 * pts[0].warming_cold_starts);
+}
+
+/// §7.5: batching 10x+ speedup, magnitudes near the paper's 6.7 s/118 s.
+#[test]
+fn batching_claims() {
+    let r = exp::batching_ablation();
+    assert!((4.0..12.0).contains(&r.batched_s), "batched {}", r.batched_s);
+    assert!((90.0..150.0).contains(&r.unbatched_s), "unbatched {}", r.unbatched_s);
+    assert!(r.unbatched_s / r.batched_s > 10.0);
+}
