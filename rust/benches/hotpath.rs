@@ -4,7 +4,8 @@
 
 mod harness;
 
-use std::sync::Arc;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use funcx::common::config::{EndpointConfig, ServiceConfig};
@@ -15,6 +16,118 @@ use funcx::sdk::FuncXClient;
 use funcx::serialize::{pack, unpack, Value};
 use funcx::service::FuncXService;
 use funcx::store::KvStore;
+
+/// Minimal queue interface so the contention workload runs identically
+/// over the sharded [`KvStore`] and the single-mutex baseline.
+trait QueueOps: Clone + Send + 'static {
+    fn push(&self, key: &str, v: Vec<u8>);
+    /// Blocking batched pop; returns the number of items popped.
+    fn pop_many(&self, key: &str, max: usize, timeout: Duration) -> usize;
+}
+
+impl QueueOps for KvStore {
+    fn push(&self, key: &str, v: Vec<u8>) {
+        self.rpush(key, v);
+    }
+    fn pop_many(&self, key: &str, max: usize, timeout: Duration) -> usize {
+        self.blpop_n(key, max, timeout).len()
+    }
+}
+
+/// Replica of the seed's store design: every queue op serializes behind
+/// ONE global mutex — the baseline the sharded store is measured against.
+#[derive(Clone)]
+struct SingleMutexStore {
+    inner: Arc<(Mutex<HashMap<String, VecDeque<Vec<u8>>>>, Condvar)>,
+}
+
+impl SingleMutexStore {
+    fn new() -> Self {
+        SingleMutexStore { inner: Arc::new((Mutex::new(HashMap::new()), Condvar::new())) }
+    }
+}
+
+impl QueueOps for SingleMutexStore {
+    fn push(&self, key: &str, v: Vec<u8>) {
+        let mut g = self.inner.0.lock().unwrap();
+        g.entry(key.to_string()).or_default().push_back(v);
+        drop(g);
+        self.inner.1.notify_all();
+    }
+    fn pop_many(&self, key: &str, max: usize, timeout: Duration) -> usize {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = self.inner.0.lock().unwrap();
+        loop {
+            if let Some(l) = g.get_mut(key) {
+                if !l.is_empty() {
+                    let take = max.min(l.len());
+                    l.drain(..take);
+                    return take;
+                }
+            }
+            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+            if remaining.is_zero() {
+                return 0;
+            }
+            let (guard, timed_out) = self.inner.1.wait_timeout(g, remaining).unwrap();
+            g = guard;
+            if timed_out.timed_out() {
+                return 0;
+            }
+        }
+    }
+}
+
+/// P producers × C consumers over `n_keys` queue keys (distinct keys ⇒
+/// distinct endpoints' queues). Returns elapsed seconds for `total` items
+/// through the store.
+fn contention_run<Q: QueueOps>(
+    q: &Q,
+    producers: usize,
+    consumers: usize,
+    n_keys: usize,
+    per_producer: usize,
+) -> f64 {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let total = producers * per_producer;
+    let consumed = Arc::new(AtomicUsize::new(0));
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for p in 0..producers {
+        let q = q.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..per_producer {
+                q.push(&format!("q{}", (p + i) % n_keys), vec![0u8; 64]);
+            }
+        }));
+    }
+    for c in 0..consumers {
+        let q = q.clone();
+        let consumed = consumed.clone();
+        handles.push(std::thread::spawn(move || {
+            // Each consumer drains the keys congruent to it mod `consumers`.
+            let mut keys: Vec<String> = (0..n_keys)
+                .filter(|k| k % consumers == c)
+                .map(|k| format!("q{k}"))
+                .collect();
+            if keys.is_empty() {
+                keys.push(format!("q{}", c % n_keys));
+            }
+            let mut i = 0usize;
+            while consumed.load(Ordering::Relaxed) < total {
+                let got = q.pop_many(&keys[i % keys.len()], 64, Duration::from_millis(1));
+                if got > 0 {
+                    consumed.fetch_add(got, Ordering::Relaxed);
+                }
+                i += 1;
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    t0.elapsed().as_secs_f64()
+}
 
 fn main() {
     harness::section("serialization facade (§4.5)");
@@ -41,6 +154,36 @@ fn main() {
             n += kv.lpop_n("q", 64).len().max(1);
         }
     });
+
+    harness::section("store contention — 4 producers × 4 consumers, 8 queue keys");
+    {
+        let (producers, consumers, n_keys, per) = (4usize, 4usize, 8usize, 100_000usize);
+        let total = producers * per;
+        // Warm-up + 3 timed runs each, keep the best (min) like harness::bench.
+        let run_best = |f: &dyn Fn() -> f64| {
+            f();
+            (0..3).map(|_| f()).fold(f64::INFINITY, f64::min)
+        };
+        let single = run_best(&|| {
+            contention_run(&SingleMutexStore::new(), producers, consumers, n_keys, per)
+        });
+        let sharded =
+            run_best(&|| contention_run(&KvStore::new(), producers, consumers, n_keys, per));
+        println!(
+            "  single-mutex baseline: {:>8.0} items/s   ({:.3} s)",
+            total as f64 / single,
+            single
+        );
+        println!(
+            "  sharded KvStore:       {:>8.0} items/s   ({:.3} s)",
+            total as f64 / sharded,
+            sharded
+        );
+        println!(
+            "  => {:.2}x throughput vs single mutex (target: >= 2x)",
+            single / sharded
+        );
+    }
 
     harness::section("live end-to-end dispatch overhead");
     let svc = Arc::new(FuncXService::new(ServiceConfig::default()));

@@ -65,4 +65,85 @@ fn main() {
     harness::bench("route 3000 tasks through the full sim", 5, || {
         let _ = exp::fig6_fig7_routing(&[3000], &[0.0], 3);
     });
+
+    harness::section("indexed routing sweep — O(M) scan vs RoutingTable, 100/1k/10k managers");
+    {
+        use funcx::common::ids::{ContainerId, ManagerId};
+        use funcx::common::rng::Rng;
+        use funcx::routing::{ManagerView, RoutingTable, Scheduler, WarmingAware};
+        use std::collections::HashMap;
+
+        let n_types = 10usize;
+        let mk_views = |m: usize| -> Vec<ManagerView> {
+            (0..m)
+                .map(|i| {
+                    let t = ContainerId::from_bits((i % n_types) as u128 + 1);
+                    let mut warm = HashMap::new();
+                    warm.insert(t, 2usize);
+                    ManagerView {
+                        id: ManagerId::from_bits(i as u128 + 1),
+                        deployed: warm.clone(),
+                        warm_idle: warm,
+                        available_slots: 8,
+                        total_slots: 10,
+                        queued: 0,
+                    }
+                })
+                .collect()
+        };
+        println!(
+            "{:>9} | {:>14} {:>14} | {:>8} {:>10}",
+            "managers", "scan ns/route", "index ns/route", "speedup", "identical"
+        );
+        for &m in &[100usize, 1_000, 10_000] {
+            let views = mk_views(m);
+            let table = RoutingTable::with_views(0, views.clone());
+            let mut wa = WarmingAware::default();
+            let types: Vec<ContainerId> =
+                (1..=n_types).map(|t| ContainerId::from_bits(t as u128)).collect();
+
+            // Scan path: fewer routes at large M (it is the slow one).
+            let r_scan = (2_000_000 / m).max(200);
+            let mut rng = Rng::new(1);
+            let t0 = std::time::Instant::now();
+            for i in 0..r_scan {
+                std::hint::black_box(wa.route(
+                    Some(types[i % n_types]),
+                    &views,
+                    &mut rng,
+                ));
+            }
+            let scan_ns = t0.elapsed().as_nanos() as f64 / r_scan as f64;
+
+            // Indexed path.
+            let r_idx = 200_000usize;
+            let mut rng = Rng::new(1);
+            let t0 = std::time::Instant::now();
+            for i in 0..r_idx {
+                std::hint::black_box(wa.route_indexed(
+                    Some(types[i % n_types]),
+                    &table,
+                    &mut rng,
+                ));
+            }
+            let idx_ns = t0.elapsed().as_nanos() as f64 / r_idx as f64;
+
+            // Decision equality on a sample.
+            let mut r1 = Rng::new(7);
+            let mut r2 = Rng::new(7);
+            let identical = (0..1000).all(|i| {
+                wa.route(Some(types[i % n_types]), &views, &mut r1)
+                    == wa.route_indexed(Some(types[i % n_types]), &table, &mut r2)
+            });
+            println!(
+                "{:>9} | {:>14.0} {:>14.0} | {:>7.1}x {:>10}",
+                m,
+                scan_ns,
+                idx_ns,
+                scan_ns / idx_ns,
+                identical
+            );
+        }
+        println!("(indexed cost must stay ~flat as managers grow: sub-linear per-route growth)");
+    }
 }

@@ -47,4 +47,40 @@ fn main() {
     harness::bench("simulate 100k no-ops @ 2048 containers", 3, || {
         let _ = exp::fig4_strong(SimProfile::theta(), 100_000, 0.0, &[2048]);
     });
+
+    harness::section("agent dispatch cost at 1k/10k managers (indexed routing)");
+    {
+        use funcx::common::ids::ContainerId;
+        use funcx::common::rng::Rng;
+        use funcx::routing::WarmingAware;
+        use funcx::sim::{SimEndpoint, SimTask};
+        // The sim drives the real RoutingTable; wall-clock per routed
+        // task should grow sub-linearly with the manager fleet.
+        let types: Vec<ContainerId> = (1..=10).map(ContainerId::from_bits).collect();
+        let mut rng = Rng::new(13);
+        let tasks: Vec<SimTask> = (0..50_000)
+            .map(|_| SimTask::with_container(types[rng.below(types.len())], 0.0))
+            .collect();
+        for &nodes in &[1_000usize, 10_000] {
+            let mut ep = SimEndpoint::new(
+                SimProfile::theta(),
+                nodes,
+                Box::new(WarmingAware { prefetch: 10 }),
+                true,
+                17,
+            )
+            .deterministic_cold(true);
+            ep.prewarm(&types);
+            let t0 = std::time::Instant::now();
+            let r = ep.run(&tasks);
+            let el = t0.elapsed().as_secs_f64();
+            println!(
+                "  {:>6} managers  {:>8.2} s wall  ({:>6.1} µs/task routed, {} colds)",
+                nodes,
+                el,
+                1e6 * el / tasks.len() as f64,
+                r.cold_starts
+            );
+        }
+    }
 }

@@ -1,8 +1,10 @@
-//! Shared primitives: ids, errors, task model, virtual time, config.
+//! Shared primitives: ids, errors, task model, virtual time, config,
+//! wakeup plumbing.
 
 pub mod config;
 pub mod error;
 pub mod ids;
 pub mod rng;
+pub mod sync;
 pub mod task;
 pub mod time;

@@ -11,6 +11,7 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::common::config::EndpointConfig;
+use crate::common::ids::ManagerId;
 use crate::common::rng::Rng;
 use crate::common::task::{Task, TaskResult};
 use crate::common::time::{Clock, Time};
@@ -19,7 +20,7 @@ use crate::endpoint::link::{AgentSide, Downstream, Upstream};
 use crate::endpoint::manager::{Manager, ManagerCtx};
 use crate::metrics::LatencyBreakdown;
 use crate::provider::{NodeHandle, Provider, ScaleDecision, Strategy, StrategyInputs};
-use crate::routing::Scheduler;
+use crate::routing::{RoutingTable, Scheduler};
 use crate::runtime::PayloadExecutor;
 
 /// Shared, externally-readable agent statistics.
@@ -84,7 +85,16 @@ struct NodeSlot {
 fn agent_loop(link: AgentSide, mut config: AgentConfig, stats: Arc<AgentStats>) {
     let mut pending: VecDeque<Task> = VecDeque::new();
     let mut nodes: HashMap<NodeHandle, NodeSlot> = HashMap::new();
+    // ManagerId → node handle, maintained alongside `nodes`.
+    let mut by_id: HashMap<ManagerId, NodeHandle> = HashMap::new();
     let (result_tx, result_rx): (Sender<TaskResult>, Receiver<TaskResult>) = channel();
+    // One latch, three wake sources: downstream link traffic (wired in
+    // by `link()`), worker results (via ManagerCtx), and link death.
+    let wake = link.wake_handle();
+    // Incrementally-maintained routing indexes: views are refreshed once
+    // per dispatch pass (skipping unchanged managers), then a whole
+    // burst routes at O(log M) per task.
+    let mut table = RoutingTable::new(config.scheduler.prefetch());
     let strategy = Strategy::new(config.cfg.clone());
     let mut rng = Rng::new(config.seed);
     let mut last_strategy_tick: Time = f64::NEG_INFINITY;
@@ -97,29 +107,36 @@ fn agent_loop(link: AgentSide, mut config: AgentConfig, stats: Arc<AgentStats>) 
         stats.nodes_provisioned.fetch_add(config.cfg.min_nodes as u64, Ordering::Relaxed);
     }
 
-    loop {
+    'outer: loop {
         let now = config.clock.now();
+        // Epoch snapshot before the work checks: traffic or results
+        // arriving during the pass void the idle wait at the bottom.
+        let seen = wake.epoch();
+        let mut progressed = false;
 
-        // 1. Intake from the forwarder.
-        match link.recv_timeout(Duration::from_millis(2)) {
-            Some(Downstream::Tasks(ts)) => {
-                stats.tasks_received.fetch_add(ts.len() as u64, Ordering::Relaxed);
-                pending.extend(ts);
-            }
-            Some(Downstream::Ping) => {}
-            Some(Downstream::Shutdown) => break,
-            None => {
-                if !link.is_alive() {
-                    break;
+        // 1. Intake from the forwarder (drain everything available).
+        while let Some(msg) = link.try_recv() {
+            progressed = true;
+            match msg {
+                Downstream::Tasks(ts) => {
+                    stats.tasks_received.fetch_add(ts.len() as u64, Ordering::Relaxed);
+                    pending.extend(ts);
                 }
+                Downstream::Ping => {}
+                Downstream::Shutdown => break 'outer,
             }
+        }
+        if !link.is_alive() {
+            break;
         }
 
         // 2. Activate nodes that cleared the provider queue.
         for h in config.provider.poll(now) {
+            progressed = true;
             let ctx = ManagerCtx {
                 executor: config.executor.clone(),
                 results: result_tx.clone(),
+                wake: wake.clone(),
                 clock: config.clock.clone(),
                 latency: config.latency.clone(),
                 start_model: config.start_model,
@@ -131,35 +148,34 @@ fn agent_loop(link: AgentSide, mut config: AgentConfig, stats: Arc<AgentStats>) 
                 ctx,
                 rng.next_u64(),
             );
+            by_id.insert(m.id, h);
+            table.upsert(m.view());
             nodes.insert(h, NodeSlot { manager: m, idle_since: None });
         }
 
         // 3. Route pending tasks to managers (§6.2).
         if !pending.is_empty() && !nodes.is_empty() {
-            let handles: Vec<NodeHandle> = nodes.keys().copied().collect();
-            let mut views: Vec<crate::routing::ManagerView> =
-                handles.iter().map(|h| nodes[h].manager.view()).collect();
-            let by_id: HashMap<crate::common::ids::ManagerId, NodeHandle> = handles
-                .iter()
-                .map(|h| (nodes[h].manager.id, *h))
-                .collect();
+            // Refresh the table from live manager state — one O(M) pass
+            // amortized over the whole burst, no-op for unchanged views.
+            for slot in nodes.values() {
+                table.sync(slot.manager.view());
+            }
             while let Some(task) = pending.pop_front() {
-                match config.scheduler.route(task.container, &views, &mut rng) {
+                match config.scheduler.route_indexed(task.container, &table, &mut rng) {
                     Some(mid) => {
+                        progressed = true;
                         let h = by_id[&mid];
-                        // Update the local view optimistically so one
-                        // routing pass spreads a burst across managers.
-                        if let Some(v) = views.iter_mut().find(|v| v.id == mid) {
-                            v.queued += 1;
-                            // Deployed counts only shrink on eviction,
-                            // which the manager reports via its next view.
-                        }
+                        // Update the table optimistically so one routing
+                        // pass spreads a burst across managers. (Deployed
+                        // counts only shrink on eviction, which the
+                        // manager reports via its next view.)
+                        table.update(mid, |v| v.queued += 1);
                         nodes[&h].manager.enqueue(vec![task]);
                         stats.tasks_dispatched.fetch_add(1, Ordering::Relaxed);
                     }
                     None => {
                         pending.push_front(task);
-                        break; // no capacity anywhere; try next tick
+                        break; // no capacity anywhere; results re-wake us
                     }
                 }
             }
@@ -174,6 +190,7 @@ fn agent_loop(link: AgentSide, mut config: AgentConfig, stats: Arc<AgentStats>) 
             }
         }
         if !results.is_empty() {
+            progressed = true;
             stats.results_returned.fetch_add(results.len() as u64, Ordering::Relaxed);
             if !link.send(Upstream::Results(results)) {
                 break; // forwarder gone
@@ -215,6 +232,8 @@ fn agent_loop(link: AgentSide, mut config: AgentConfig, stats: Arc<AgentStats>) 
                         .cold_starts
                         .fetch_add(slot.manager.cold_starts(), Ordering::Relaxed);
                     stats.warm_hits.fetch_add(slot.manager.warm_hits(), Ordering::Relaxed);
+                    by_id.remove(&slot.manager.id);
+                    table.remove(slot.manager.id);
                     slot.manager.shutdown();
                     config.provider.release_node(h, now);
                     stats.nodes_released.fetch_add(1, Ordering::Relaxed);
@@ -234,6 +253,21 @@ fn agent_loop(link: AgentSide, mut config: AgentConfig, stats: Arc<AgentStats>) 
             }) {
                 break;
             }
+        }
+
+        // 7. Idle wait: block until link traffic or a worker result,
+        // bounded by the next timer deadline (strategy tick, heartbeat,
+        // or a short provider re-poll while nodes are provisioning).
+        if !progressed {
+            let mut next = (last_strategy_tick + config.cfg.strategy_period_s)
+                .min(last_heartbeat + config.heartbeat_period_s);
+            if config.provider.pending_count() > 0 {
+                // The provider is pull-only; re-poll soon while nodes
+                // are in its queue.
+                next = next.min(now + 1e-3);
+            }
+            let dur = (next - config.clock.now()).clamp(1e-4, 0.5);
+            wake.wait_newer(seen, Duration::from_secs_f64(dur));
         }
     }
 

@@ -2,12 +2,19 @@
 //! forwarder and its funcX agent), as typed in-process channels with
 //! explicit liveness so tests can inject disconnections (§4.1 fault
 //! tolerance).
+//!
+//! Each side carries a wakeup latch ([`Notify`]) signalled whenever the
+//! *peer* sends a message (and when the link is severed), so the
+//! forwarder and agent loops can block on "anything happened on my link"
+//! — multiplexed with other wake sources through the same handle —
+//! instead of sleep-polling.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::common::sync::Notify;
 use crate::common::task::{Task, TaskResult};
 
 /// Message from the forwarder down to the agent.
@@ -33,12 +40,20 @@ pub struct ForwarderSide {
     pub tx: Sender<Downstream>,
     pub rx: Receiver<Upstream>,
     alive: Arc<AtomicBool>,
+    /// Signalled when the agent sends upstream or the link dies.
+    wake: Arc<Notify>,
+    /// The agent side's latch; we signal it on every downstream send.
+    peer_wake: Arc<Notify>,
 }
 
 pub struct AgentSide {
     pub tx: Sender<Upstream>,
     pub rx: Receiver<Downstream>,
     alive: Arc<AtomicBool>,
+    /// Signalled when the forwarder sends downstream or the link dies.
+    wake: Arc<Notify>,
+    /// The forwarder side's latch; we signal it on every upstream send.
+    peer_wake: Arc<Notify>,
 }
 
 /// Create a connected duplex link.
@@ -46,9 +61,17 @@ pub fn link() -> (ForwarderSide, AgentSide) {
     let (dtx, drx) = channel();
     let (utx, urx) = channel();
     let alive = Arc::new(AtomicBool::new(true));
+    let fwd_wake = Arc::new(Notify::new());
+    let agent_wake = Arc::new(Notify::new());
     (
-        ForwarderSide { tx: dtx, rx: urx, alive: alive.clone() },
-        AgentSide { tx: utx, rx: drx, alive },
+        ForwarderSide {
+            tx: dtx,
+            rx: urx,
+            alive: alive.clone(),
+            wake: fwd_wake.clone(),
+            peer_wake: agent_wake.clone(),
+        },
+        AgentSide { tx: utx, rx: drx, alive, wake: agent_wake, peer_wake: fwd_wake },
     )
 }
 
@@ -57,13 +80,27 @@ impl ForwarderSide {
         self.alive.load(Ordering::Relaxed)
     }
 
-    /// Simulate a network partition / agent crash (tests, §4.1).
+    /// Simulate a network partition / agent crash (tests, §4.1). Wakes
+    /// both sides so blocked loops notice promptly.
     pub fn sever(&self) {
         self.alive.store(false, Ordering::Relaxed);
+        self.wake.notify();
+        self.peer_wake.notify();
+    }
+
+    /// This side's wakeup latch: signalled on upstream traffic and link
+    /// death. Attach it to other sources (e.g. a queue watch) to block
+    /// on all of them at once.
+    pub fn wake_handle(&self) -> Arc<Notify> {
+        self.wake.clone()
     }
 
     pub fn send(&self, msg: Downstream) -> bool {
-        self.is_alive() && self.tx.send(msg).is_ok()
+        let ok = self.is_alive() && self.tx.send(msg).is_ok();
+        if ok {
+            self.peer_wake.notify();
+        }
+        ok
     }
 
     pub fn try_recv(&self) -> Option<Upstream> {
@@ -79,6 +116,20 @@ impl ForwarderSide {
             }
         }
     }
+
+    pub fn recv_timeout(&self, d: Duration) -> Option<Upstream> {
+        if !self.is_alive() {
+            return None;
+        }
+        match self.rx.recv_timeout(d) {
+            Ok(m) => Some(m),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                self.sever();
+                None
+            }
+        }
+    }
 }
 
 impl AgentSide {
@@ -88,10 +139,36 @@ impl AgentSide {
 
     pub fn sever(&self) {
         self.alive.store(false, Ordering::Relaxed);
+        self.wake.notify();
+        self.peer_wake.notify();
+    }
+
+    /// This side's wakeup latch: signalled on downstream traffic and
+    /// link death (workers also signal it when results are ready).
+    pub fn wake_handle(&self) -> Arc<Notify> {
+        self.wake.clone()
     }
 
     pub fn send(&self, msg: Upstream) -> bool {
-        self.is_alive() && self.tx.send(msg).is_ok()
+        let ok = self.is_alive() && self.tx.send(msg).is_ok();
+        if ok {
+            self.peer_wake.notify();
+        }
+        ok
+    }
+
+    pub fn try_recv(&self) -> Option<Downstream> {
+        if !self.is_alive() {
+            return None;
+        }
+        match self.rx.try_recv() {
+            Ok(m) => Some(m),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => {
+                self.sever();
+                None
+            }
+        }
     }
 
     pub fn recv_timeout(&self, d: Duration) -> Option<Downstream> {
@@ -106,6 +183,21 @@ impl AgentSide {
                 None
             }
         }
+    }
+}
+
+// Dropping either side kills the link and wakes the peer, so a blocked
+// event loop notices a vanished counterpart immediately instead of at
+// its timeout bound.
+impl Drop for ForwarderSide {
+    fn drop(&mut self) {
+        self.sever();
+    }
+}
+
+impl Drop for AgentSide {
+    fn drop(&mut self) {
+        self.sever();
     }
 }
 
@@ -137,6 +229,25 @@ mod tests {
         }
         assert!(a.send(Upstream::Heartbeat { active_workers: 4, pending_tasks: 0 }));
         assert!(matches!(f.try_recv(), Some(Upstream::Heartbeat { .. })));
+    }
+
+    #[test]
+    fn sends_signal_peer_wake() {
+        let (f, a) = link();
+        let fw = f.wake_handle();
+        let aw = a.wake_handle();
+        let f_seen = fw.epoch();
+        let a_seen = aw.epoch();
+        assert!(f.send(Downstream::Ping));
+        assert_ne!(aw.epoch(), a_seen, "downstream send wakes the agent");
+        assert!(a.send(Upstream::Heartbeat { active_workers: 0, pending_tasks: 0 }));
+        assert_ne!(fw.epoch(), f_seen, "upstream send wakes the forwarder");
+        // Severing wakes both sides.
+        let f_seen = fw.epoch();
+        let a_seen = aw.epoch();
+        f.sever();
+        assert_ne!(fw.epoch(), f_seen);
+        assert_ne!(aw.epoch(), a_seen);
     }
 
     #[test]

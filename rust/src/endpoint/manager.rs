@@ -16,6 +16,7 @@ use std::time::Duration;
 
 use crate::common::ids::ManagerId;
 use crate::common::rng::Rng;
+use crate::common::sync::Notify;
 use crate::common::task::{Task, TaskResult, TaskState};
 use crate::common::time::{Clock, Time};
 use crate::containers::{StartCostModel, WarmPool};
@@ -43,6 +44,9 @@ pub struct Manager {
 pub struct ManagerCtx {
     pub executor: Arc<PayloadExecutor>,
     pub results: Sender<TaskResult>,
+    /// Signalled after each result send so the agent's event loop wakes
+    /// on completions instead of polling its result channel.
+    pub wake: Arc<Notify>,
     pub clock: Arc<dyn Clock>,
     pub latency: Arc<LatencyBreakdown>,
     pub start_model: StartCostModel,
@@ -158,10 +162,14 @@ fn worker_loop(shared: Arc<Shared>, ctx: ManagerCtx, rng: &mut Rng) {
             match pool.acquire_with_origin(container_key, now) {
                 Some(x) => x,
                 None => {
-                    // Put the task back and yield.
+                    // Put the task back and block (bounded) until a slot
+                    // release notifies the condvar — no spin-sleep.
                     drop(pool);
-                    shared.queue.lock().unwrap().push_front(task);
-                    std::thread::sleep(Duration::from_millis(1));
+                    let mut q = shared.queue.lock().unwrap();
+                    q.push_front(task);
+                    let (q, _timed_out) =
+                        shared.cv.wait_timeout(q, Duration::from_millis(5)).unwrap();
+                    drop(q);
                     continue;
                 }
             }
@@ -194,6 +202,8 @@ fn worker_loop(shared: Arc<Shared>, ctx: ManagerCtx, rng: &mut Rng) {
         let done = ctx.clock.now();
         ctx.latency.on_finished(task.id, done);
         shared.pool.lock().unwrap().release(slot, done);
+        // Wake siblings blocked on a transient acquire failure.
+        shared.cv.notify_all();
 
         let _ = ctx.results.send(TaskResult {
             task: task.id,
@@ -202,6 +212,7 @@ fn worker_loop(shared: Arc<Shared>, ctx: ManagerCtx, rng: &mut Rng) {
             exec_time_s: exec_s,
             cold_start: cold,
         });
+        ctx.wake.notify();
     }
 }
 
@@ -219,6 +230,7 @@ mod tests {
         ManagerCtx {
             executor: Arc::new(PayloadExecutor::bare()),
             results,
+            wake: Arc::new(Notify::new()),
             clock: Arc::new(WallClock::new()),
             latency: Arc::new(LatencyBreakdown::new()),
             start_model: TABLE3_MODELS.lookup(SystemProfile::Local, ContainerTech::None),

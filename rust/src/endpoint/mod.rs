@@ -173,10 +173,9 @@ mod tests {
         let mut results = Vec::new();
         let deadline = std::time::Instant::now() + Duration::from_secs(10);
         while results.len() < 2 && std::time::Instant::now() < deadline {
-            if let Some(Upstream::Results(rs)) = fwd.try_recv() {
+            if let Some(Upstream::Results(rs)) = fwd.recv_timeout(Duration::from_millis(100)) {
                 results.extend(rs);
             }
-            std::thread::sleep(Duration::from_millis(5));
         }
         assert_eq!(results.len(), 2);
         assert!(results.iter().all(|r| r.state == TaskState::Success));
@@ -200,10 +199,9 @@ mod tests {
         let mut got = 0;
         let deadline = std::time::Instant::now() + Duration::from_secs(10);
         while got < 4 && std::time::Instant::now() < deadline {
-            if let Some(Upstream::Results(rs)) = fwd.try_recv() {
+            if let Some(Upstream::Results(rs)) = fwd.recv_timeout(Duration::from_millis(100)) {
                 got += rs.len();
             }
-            std::thread::sleep(Duration::from_millis(5));
         }
         assert_eq!(got, 4, "tasks must complete after elastic scale-out");
         assert!(handle.stats.nodes_provisioned.load(std::sync::atomic::Ordering::Relaxed) >= 1);
@@ -220,10 +218,10 @@ mod tests {
         let deadline = std::time::Instant::now() + Duration::from_secs(5);
         let mut beats = 0;
         while beats < 3 && std::time::Instant::now() < deadline {
-            if let Some(Upstream::Heartbeat { .. }) = fwd.try_recv() {
+            if let Some(Upstream::Heartbeat { .. }) = fwd.recv_timeout(Duration::from_millis(100))
+            {
                 beats += 1;
             }
-            std::thread::sleep(Duration::from_millis(5));
         }
         assert!(beats >= 3, "agent must heartbeat periodically");
         fwd.send(Downstream::Shutdown);

@@ -13,15 +13,41 @@
 //! against (Figs. 6–7) plus round-robin and bin-packing alternatives
 //! (§6.2 "other scheduling policies ... could also be used"), all behind
 //! the [`Scheduler`] trait so the live engine and simulator share them.
+//!
+//! # Indexed routing ([`RoutingTable`])
+//!
+//! A naive implementation scans every [`ManagerView`] per routed task —
+//! O(M) on the agent's per-task hot path, which FDN (arXiv:2102.02330)
+//! identifies as the scaling limiter for large manager fleets. The
+//! [`RoutingTable`] maintains the same information incrementally:
+//!
+//! * per container type, a `BTreeSet` ordered by the warming-aware
+//!   tier-1 key `(warm_idle, effective capacity, fewest queued, id)` and
+//!   a second set ordered by the tier-2 key `(deployed, effective
+//!   capacity, type-salt, id)`, each holding only managers that
+//!   currently pass the capacity filter — so the best candidate is
+//!   `set.last()`, O(log M);
+//! * a capacity count updated O(1) per slot change, so "no capacity
+//!   anywhere" answers without a scan.
+//!
+//! Every view mutation goes through [`RoutingTable::update`] /
+//! [`RoutingTable::upsert`], which de-index and re-index just the
+//! touched manager (O(T·log M) for a manager hosting T container
+//! types). [`Scheduler::route_indexed`] defaults to the O(M) scan over
+//! the table's views, so alternative policies keep working unchanged;
+//! [`WarmingAware`] overrides it with the O(log M) lookups and — by
+//! construction of the keys — makes **identical decisions** to its scan
+//! path (a property test pins this).
 
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BTreeSet, HashMap};
 
 use crate::common::ids::{ContainerId, ManagerId};
 use crate::common::rng::Rng;
 
 /// What a manager advertises to the agent (§6.2 "Each manager advertises
 /// its deployed container types and its available resources").
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ManagerView {
     pub id: ManagerId,
     /// Deployed (warm, busy or idle) containers by type.
@@ -70,6 +96,26 @@ pub trait Scheduler: Send {
     fn warm_matching(&self) -> bool {
         false
     }
+
+    /// Extra tasks a manager may queue beyond availability (§6.2
+    /// prefetch). The [`RoutingTable`] must be built with the same value
+    /// so its capacity filter matches the policy's.
+    fn prefetch(&self) -> usize {
+        0
+    }
+
+    /// Route using an incrementally-maintained [`RoutingTable`]. The
+    /// default is the O(M) scan over the table's views, so every policy
+    /// works unchanged; policies with an indexed implementation
+    /// ([`WarmingAware`]) override this with O(log M) lookups.
+    fn route_indexed(
+        &mut self,
+        container: Option<ContainerId>,
+        table: &RoutingTable,
+        rng: &mut Rng,
+    ) -> Option<ManagerId> {
+        self.route(container, table.views(), rng)
+    }
 }
 
 /// The paper's warming-aware scheduler (§6.2).
@@ -84,6 +130,36 @@ impl Default for WarmingAware {
     }
 }
 
+/// Type-salted stable tie-break (see tier 2 below): equal-looking
+/// managers resolve the same way for the same type, so types specialise
+/// onto managers and queues stay aligned with warm sets. Shared with the
+/// [`RoutingTable`]'s tier-2 index keys so indexed routing agrees.
+fn type_salt(c: ContainerId, m: ManagerId) -> u64 {
+    let h = (c.0 .0 as u64) ^ ((c.0 .0 >> 64) as u64) ^ (m.0 .0 as u64);
+    h.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Tier 3: no container of the type anywhere — place the type's *first*
+/// container on a type-consistent manager (hash + linear probe over
+/// capacity) so subsequent tasks of the type concentrate instead of
+/// scattering. Plays the role of the paper's random fallback while
+/// keeping the choice stable per type. O(1) expected while capacity is
+/// plentiful (the common case); shared by the scan and indexed paths.
+fn hash_probe(c: ContainerId, managers: &[ManagerView], prefetch: usize) -> Option<ManagerId> {
+    if managers.is_empty() {
+        return None;
+    }
+    let h = (c.0 .0 as u64) ^ ((c.0 .0 >> 64) as u64);
+    let start = (h % managers.len() as u64) as usize;
+    for i in 0..managers.len() {
+        let m = &managers[(start + i) % managers.len()];
+        if m.has_capacity(prefetch) {
+            return Some(m.id);
+        }
+    }
+    None
+}
+
 impl Scheduler for WarmingAware {
     fn route(
         &mut self,
@@ -94,7 +170,9 @@ impl Scheduler for WarmingAware {
         if let Some(c) = container {
             // Tier 1: a warm *idle* container of the type exists — route
             // there for an immediate warm start, tie-broken by most
-            // available workers (the paper's load-balance rule).
+            // available workers (the paper's load-balance rule). The id
+            // is the final key component so the maximum is unique and
+            // the indexed path picks the identical manager.
             let tier1 = managers
                 .iter()
                 .filter(|m| m.warm_idle.get(&c).copied().unwrap_or(0) > 0)
@@ -103,7 +181,8 @@ impl Scheduler for WarmingAware {
                     (
                         m.warm_idle.get(&c).copied().unwrap_or(0),
                         m.effective_capacity(),
-                        std::cmp::Reverse(m.queued),
+                        Reverse(m.queued),
+                        m.id,
                     )
                 });
             if let Some(m) = tier1 {
@@ -113,10 +192,6 @@ impl Scheduler for WarmingAware {
             // queue behind them (prefetch), preferring the manager with
             // the most of them (reinforces manager/type affinity so
             // queues stay aligned with warm sets).
-            let salt = |m: &ManagerView| {
-                let h = (c.0 .0 as u64) ^ ((c.0 .0 >> 64) as u64) ^ (m.id.0 .0 as u64);
-                h.wrapping_mul(0x9E37_79B9_7F4A_7C15)
-            };
             let tier2 = managers
                 .iter()
                 .filter(|m| m.deployed.get(&c).copied().unwrap_or(0) > 0)
@@ -125,33 +200,14 @@ impl Scheduler for WarmingAware {
                     (
                         m.deployed.get(&c).copied().unwrap_or(0),
                         m.effective_capacity(),
-                        // Type-salted stable tie-break: equal-looking
-                        // managers resolve the same way for the same
-                        // type, so types specialise onto managers and
-                        // queues stay aligned with warm sets.
-                        salt(m),
+                        type_salt(c, m.id),
+                        m.id,
                     )
                 });
             if let Some(m) = tier2 {
                 return Some(m.id);
             }
-            // Tier 3: no container of the type anywhere — place the
-            // type's *first* container on a type-consistent manager
-            // (hash + linear probe over capacity) so subsequent tasks of
-            // the type concentrate instead of scattering. This plays the
-            // role of the paper's random fallback while keeping the
-            // choice stable per type.
-            if !managers.is_empty() {
-                let h = (c.0 .0 as u64) ^ ((c.0 .0 >> 64) as u64);
-                let start = (h % managers.len() as u64) as usize;
-                for i in 0..managers.len() {
-                    let m = &managers[(start + i) % managers.len()];
-                    if m.has_capacity(self.prefetch) {
-                        return Some(m.id);
-                    }
-                }
-            }
-            return None;
+            return hash_probe(c, managers, self.prefetch);
         }
         // Container-less tasks: random among managers with capacity
         // (paper: "the funcX agent chooses one manager at random").
@@ -164,6 +220,45 @@ impl Scheduler for WarmingAware {
 
     fn warm_matching(&self) -> bool {
         true
+    }
+
+    fn prefetch(&self) -> usize {
+        self.prefetch
+    }
+
+    /// O(log M) amortized: tier 1/2 answers come straight off the
+    /// table's per-type ordered indexes; the fallbacks are O(1) expected
+    /// while capacity is plentiful. Decisions are identical to
+    /// [`WarmingAware::route`] (pinned by `proptests::indexed_matches_scan`).
+    fn route_indexed(
+        &mut self,
+        container: Option<ContainerId>,
+        table: &RoutingTable,
+        rng: &mut Rng,
+    ) -> Option<ManagerId> {
+        debug_assert_eq!(
+            table.prefetch(),
+            self.prefetch,
+            "routing table built with a different prefetch than the policy"
+        );
+        if let Some(c) = container {
+            // The scan path consumes no RNG for container tasks, so this
+            // path must not either (shared-RNG streams stay identical).
+            if !table.any_capacity() {
+                return None;
+            }
+            if let Some(m) = table.best_warm(c) {
+                return Some(m);
+            }
+            if let Some(m) = table.best_deployed(c) {
+                return Some(m);
+            }
+            return hash_probe(c, table.views(), self.prefetch);
+        }
+        // Container-less: delegate to the exact scan routine (same single
+        // RNG draw even when nothing has capacity), keeping the RNG
+        // stream — not just the decision — identical to `route`.
+        random_with_capacity(table.views(), self.prefetch, rng)
     }
 }
 
@@ -186,6 +281,10 @@ impl Scheduler for Randomized {
 
     fn name(&self) -> &'static str {
         "random"
+    }
+
+    fn prefetch(&self) -> usize {
+        self.prefetch
     }
 }
 
@@ -220,6 +319,10 @@ impl Scheduler for RoundRobin {
     fn name(&self) -> &'static str {
         "round-robin"
     }
+
+    fn prefetch(&self) -> usize {
+        self.prefetch
+    }
 }
 
 /// Bin-packing: fill the *least*-available manager that still has
@@ -246,6 +349,10 @@ impl Scheduler for BinPacking {
 
     fn name(&self) -> &'static str {
         "bin-packing"
+    }
+
+    fn prefetch(&self) -> usize {
+        self.prefetch
     }
 }
 
@@ -292,6 +399,10 @@ impl Scheduler for KubernetesRouting {
     fn warm_matching(&self) -> bool {
         true
     }
+
+    fn prefetch(&self) -> usize {
+        self.prefetch
+    }
 }
 
 fn random_with_capacity(
@@ -314,6 +425,223 @@ fn random_with_capacity(
         }
     }
     None
+}
+
+// ---- the routing table -----------------------------------------------------
+
+/// Tier-1 ordering: (warm idle of the type, effective capacity, fewest
+/// queued, id). The id makes the maximum unique, so `set.last()` equals
+/// the scan's `max_by_key`.
+type WarmKey = (usize, usize, Reverse<usize>, ManagerId);
+/// Tier-2 ordering: (deployed of the type, effective capacity,
+/// type-salt, id).
+type DeployedKey = (usize, usize, u64, ManagerId);
+
+/// The index entries a view contributes, or `None` if it fails the
+/// capacity filter (ineligible managers are simply absent from every
+/// index, which is exactly the scan's `has_capacity` filter).
+#[allow(clippy::type_complexity)]
+fn index_entries(
+    v: &ManagerView,
+    prefetch: usize,
+) -> Option<(Vec<(ContainerId, WarmKey)>, Vec<(ContainerId, DeployedKey)>)> {
+    if !v.has_capacity(prefetch) {
+        return None;
+    }
+    let eff = v.effective_capacity();
+    let warm = v
+        .warm_idle
+        .iter()
+        .filter(|(_, n)| **n > 0)
+        .map(|(c, n)| (*c, (*n, eff, Reverse(v.queued), v.id)))
+        .collect();
+    let deployed = v
+        .deployed
+        .iter()
+        .filter(|(_, n)| **n > 0)
+        .map(|(c, n)| (*c, (*n, eff, type_salt(*c, v.id), v.id)))
+        .collect();
+    Some((warm, deployed))
+}
+
+/// Incrementally-maintained routing state: the managers' views plus the
+/// per-type ordered indexes and a capacity count that make
+/// [`WarmingAware`] routing O(log M) amortized instead of an O(M) scan
+/// per task (module docs, "Indexed routing"). Owned by whoever drives
+/// dispatch — the live agent and the simulated endpoint both keep one —
+/// and mutated *only* through [`RoutingTable::upsert`] /
+/// [`RoutingTable::update`] / [`RoutingTable::remove`] so the indexes
+/// never drift from the views.
+pub struct RoutingTable {
+    prefetch: usize,
+    views: Vec<ManagerView>,
+    index_of: HashMap<ManagerId, usize>,
+    warm_index: HashMap<ContainerId, BTreeSet<WarmKey>>,
+    deployed_index: HashMap<ContainerId, BTreeSet<DeployedKey>>,
+    /// Managers currently passing the capacity filter.
+    with_capacity: usize,
+}
+
+impl RoutingTable {
+    /// An empty table. `prefetch` must match the routing policy's (the
+    /// capacity filter depends on it).
+    pub fn new(prefetch: usize) -> Self {
+        RoutingTable {
+            prefetch,
+            views: Vec::new(),
+            index_of: HashMap::new(),
+            warm_index: HashMap::new(),
+            deployed_index: HashMap::new(),
+            with_capacity: 0,
+        }
+    }
+
+    /// Bulk-build from a set of views (benches, tests).
+    pub fn with_views(prefetch: usize, views: Vec<ManagerView>) -> Self {
+        let mut t = Self::new(prefetch);
+        for v in views {
+            t.upsert(v);
+        }
+        t
+    }
+
+    pub fn prefetch(&self) -> usize {
+        self.prefetch
+    }
+
+    pub fn len(&self) -> usize {
+        self.views.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.views.is_empty()
+    }
+
+    /// The views, for scan-based policies and the probe fallbacks.
+    pub fn views(&self) -> &[ManagerView] {
+        &self.views
+    }
+
+    pub fn view(&self, id: ManagerId) -> Option<&ManagerView> {
+        self.index_of.get(&id).map(|&i| &self.views[i])
+    }
+
+    /// Any manager with capacity at all? O(1).
+    pub fn any_capacity(&self) -> bool {
+        self.with_capacity > 0
+    }
+
+    /// Insert a new view or replace an existing manager's view wholesale.
+    pub fn upsert(&mut self, view: ManagerView) {
+        match self.index_of.get(&view.id).copied() {
+            Some(i) => {
+                self.deindex(i);
+                self.views[i] = view;
+                self.reindex(i);
+            }
+            None => {
+                let i = self.views.len();
+                self.index_of.insert(view.id, i);
+                self.views.push(view);
+                self.reindex(i);
+            }
+        }
+    }
+
+    /// Upsert that skips the reindex when the view is unchanged — the
+    /// live agent refreshes every manager's view once per dispatch pass,
+    /// and steady-state managers don't churn the indexes.
+    pub fn sync(&mut self, view: ManagerView) {
+        if let Some(&i) = self.index_of.get(&view.id) {
+            if self.views[i] == view {
+                return;
+            }
+        }
+        self.upsert(view);
+    }
+
+    /// Remove a manager (node released / lost).
+    pub fn remove(&mut self, id: ManagerId) -> Option<ManagerView> {
+        let i = self.index_of.get(&id).copied()?;
+        self.deindex(i);
+        let removed = self.views.swap_remove(i);
+        self.index_of.remove(&id);
+        if i < self.views.len() {
+            // Index keys don't encode positions, so only the slot map of
+            // the swapped-in tail view needs fixing.
+            self.index_of.insert(self.views[i].id, i);
+        }
+        Some(removed)
+    }
+
+    /// Apply a point mutation to one manager's view (slot acquired or
+    /// released, task queued, container deployed/evicted), keeping the
+    /// indexes consistent. O(T·log M) for a manager hosting T types.
+    pub fn update(&mut self, id: ManagerId, f: impl FnOnce(&mut ManagerView)) {
+        if let Some(&i) = self.index_of.get(&id) {
+            self.deindex(i);
+            f(&mut self.views[i]);
+            self.reindex(i);
+        } else {
+            debug_assert!(false, "update of unknown manager {id}");
+        }
+    }
+
+    /// Best tier-1 candidate for `c`: the eligible manager maximising
+    /// (warm idle, effective capacity, fewest queued, id). O(log M).
+    pub fn best_warm(&self, c: ContainerId) -> Option<ManagerId> {
+        self.warm_index.get(&c).and_then(|s| s.iter().next_back()).map(|k| k.3)
+    }
+
+    /// Best tier-2 candidate for `c`: the eligible manager maximising
+    /// (deployed, effective capacity, type-salt, id). O(log M).
+    pub fn best_deployed(&self, c: ContainerId) -> Option<ManagerId> {
+        self.deployed_index.get(&c).and_then(|s| s.iter().next_back()).map(|k| k.3)
+    }
+
+    fn deindex(&mut self, i: usize) {
+        if let Some((warm, deployed)) = index_entries(&self.views[i], self.prefetch) {
+            self.with_capacity -= 1;
+            for (c, key) in warm {
+                let now_empty = match self.warm_index.get_mut(&c) {
+                    Some(set) => {
+                        let removed = set.remove(&key);
+                        debug_assert!(removed, "warm index out of sync");
+                        set.is_empty()
+                    }
+                    None => false,
+                };
+                if now_empty {
+                    self.warm_index.remove(&c);
+                }
+            }
+            for (c, key) in deployed {
+                let now_empty = match self.deployed_index.get_mut(&c) {
+                    Some(set) => {
+                        let removed = set.remove(&key);
+                        debug_assert!(removed, "deployed index out of sync");
+                        set.is_empty()
+                    }
+                    None => false,
+                };
+                if now_empty {
+                    self.deployed_index.remove(&c);
+                }
+            }
+        }
+    }
+
+    fn reindex(&mut self, i: usize) {
+        if let Some((warm, deployed)) = index_entries(&self.views[i], self.prefetch) {
+            self.with_capacity += 1;
+            for (c, key) in warm {
+                self.warm_index.entry(c).or_default().insert(key);
+            }
+            for (c, key) in deployed {
+                self.deployed_index.entry(c).or_default().insert(key);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -489,6 +817,82 @@ mod tests {
         // Least-available eligible manager is 2.
         assert_eq!(s.route(None, &managers, &mut rng), Some(ManagerId::from_bits(2)));
     }
+
+    #[test]
+    fn table_tier1_picks_best_warm() {
+        let table = RoutingTable::with_views(
+            0,
+            vec![
+                mgr(1, &[], 10, 10),
+                mgr(2, &[(7, 1)], 5, 10),
+                mgr(3, &[(7, 2)], 3, 10),
+            ],
+        );
+        // Most warm-idle of type 7 wins (manager 3), despite less capacity.
+        assert_eq!(
+            table.best_warm(ContainerId::from_bits(7)),
+            Some(ManagerId::from_bits(3))
+        );
+        assert_eq!(table.best_warm(ContainerId::from_bits(9)), None);
+        assert!(table.any_capacity());
+    }
+
+    #[test]
+    fn table_update_moves_candidates() {
+        let mut table =
+            RoutingTable::with_views(0, vec![mgr(1, &[(7, 1)], 5, 10), mgr(2, &[(7, 1)], 8, 10)]);
+        let c = ContainerId::from_bits(7);
+        // More capacity wins the warm tie.
+        assert_eq!(table.best_warm(c), Some(ManagerId::from_bits(2)));
+        // Drain manager 2's warm container: candidate flips to 1.
+        table.update(ManagerId::from_bits(2), |v| {
+            v.warm_idle.insert(c, 0);
+        });
+        assert_eq!(table.best_warm(c), Some(ManagerId::from_bits(1)));
+        // Manager 2 still has the type deployed, so tier-2 prefers it
+        // (more capacity).
+        assert_eq!(table.best_deployed(c), Some(ManagerId::from_bits(2)));
+        // Exhaust manager 1's capacity: it must drop out of every index.
+        table.update(ManagerId::from_bits(1), |v| {
+            v.available_slots = 0;
+        });
+        assert_eq!(table.best_warm(c), None);
+        assert_eq!(table.view(ManagerId::from_bits(1)).unwrap().available_slots, 0);
+    }
+
+    #[test]
+    fn table_remove_and_capacity_count() {
+        let mut table =
+            RoutingTable::with_views(0, vec![mgr(1, &[(7, 1)], 5, 10), mgr(2, &[], 0, 10)]);
+        assert_eq!(table.len(), 2);
+        assert!(table.any_capacity());
+        assert!(table.remove(ManagerId::from_bits(1)).is_some());
+        assert_eq!(table.len(), 1);
+        assert!(!table.any_capacity(), "only the full manager remains");
+        assert_eq!(table.best_warm(ContainerId::from_bits(7)), None);
+        assert!(table.remove(ManagerId::from_bits(1)).is_none());
+    }
+
+    #[test]
+    fn route_indexed_agrees_on_fixtures() {
+        let managers = vec![
+            mgr(1, &[], 10, 10),
+            mgr(2, &[(7, 1)], 5, 10),
+            mgr(3, &[(9, 2)], 0, 10),
+        ];
+        let table = RoutingTable::with_views(0, managers.clone());
+        let mut s = WarmingAware::default();
+        for t in [5u128, 7, 9, 40] {
+            let c = Some(ContainerId::from_bits(t));
+            let mut r1 = Rng::new(11);
+            let mut r2 = Rng::new(11);
+            assert_eq!(
+                s.route(c, &managers, &mut r1),
+                s.route_indexed(c, &table, &mut r2),
+                "scan and indexed disagree for type {t}"
+            );
+        }
+    }
 }
 
 #[cfg(test)]
@@ -548,6 +952,116 @@ mod proptests {
                     );
                 }
             }
+        });
+    }
+
+    /// Richer generator for the table-equivalence property: deployed ⊇
+    /// warm-idle, non-zero queued, varying capacity.
+    fn arb_managers_full(g: &mut crate::testing::Gen) -> Vec<ManagerView> {
+        let n = g.usize(1, 14);
+        (0..n)
+            .map(|i| {
+                let total = g.usize(1, 16);
+                let avail = g.usize(0, total + 1);
+                let queued = g.usize(0, 4);
+                let mut deployed = HashMap::new();
+                let mut warm = HashMap::new();
+                for c in 1..=g.usize(0, 4) {
+                    let dep = g.usize(0, 5);
+                    let idle = g.usize(0, dep + 1);
+                    if dep > 0 {
+                        deployed.insert(ContainerId::from_bits(c as u128), dep);
+                    }
+                    if idle > 0 {
+                        warm.insert(ContainerId::from_bits(c as u128), idle);
+                    }
+                }
+                ManagerView {
+                    id: ManagerId::from_bits(i as u128 + 1),
+                    deployed,
+                    warm_idle: warm,
+                    available_slots: avail,
+                    total_slots: total,
+                    queued,
+                }
+            })
+            .collect()
+    }
+
+    fn apply_op(v: &mut ManagerView, op: usize, c: ContainerId) {
+        match op {
+            0 => v.queued += 1,
+            1 => v.queued = v.queued.saturating_sub(1),
+            2 => v.available_slots = (v.available_slots + 1).min(v.total_slots),
+            3 => v.available_slots = v.available_slots.saturating_sub(1),
+            4 => {
+                *v.deployed.entry(c).or_insert(0) += 1;
+                *v.warm_idle.entry(c).or_insert(0) += 1;
+            }
+            _ => {
+                if let Some(n) = v.warm_idle.get_mut(&c) {
+                    *n = n.saturating_sub(1);
+                }
+            }
+        }
+    }
+
+    /// Route a probe sequence through both paths and assert equal
+    /// decisions (helper for `indexed_matches_scan`). One long-lived RNG
+    /// per path across the whole sequence, so a path that consumes a
+    /// different number of draws (stream divergence) also fails.
+    fn compare_paths(
+        s: &mut WarmingAware,
+        managers: &[ManagerView],
+        table: &RoutingTable,
+        seed: u64,
+    ) {
+        let mut r1 = crate::common::rng::Rng::new(seed);
+        let mut r2 = crate::common::rng::Rng::new(seed);
+        for round in 0..3 {
+            for t in 0..6u128 {
+                let c = if t == 0 { None } else { Some(ContainerId::from_bits(t)) };
+                assert_eq!(
+                    s.route(c, managers, &mut r1),
+                    s.route_indexed(c, table, &mut r2),
+                    "scan vs indexed diverged for container {c:?} (round {round})"
+                );
+            }
+        }
+    }
+
+    /// THE indexed-routing invariant: `route_indexed` makes the same
+    /// decision as the O(M) scan, including after arbitrary incremental
+    /// updates and removals through the table.
+    #[test]
+    fn indexed_matches_scan() {
+        check("route-indexed-eq", 300, |g| {
+            let mut managers = arb_managers_full(g);
+            let prefetch = g.usize(0, 3);
+            let mut table = RoutingTable::with_views(prefetch, managers.clone());
+            let mut s = WarmingAware { prefetch };
+            compare_paths(&mut s, &managers, &table, g.u64());
+
+            // Incremental updates (and occasional removals) must keep
+            // the indexes exact.
+            for _ in 0..g.usize(1, 25) {
+                if managers.is_empty() {
+                    break;
+                }
+                let i = g.usize(0, managers.len());
+                let id = managers[i].id;
+                if g.usize(0, 10) == 0 {
+                    // swap_remove on both sides keeps view order aligned.
+                    managers.swap_remove(i);
+                    table.remove(id);
+                } else {
+                    let op = g.usize(0, 6);
+                    let c = ContainerId::from_bits(g.usize(1, 5) as u128);
+                    apply_op(&mut managers[i], op, c);
+                    table.update(id, |v| apply_op(v, op, c));
+                }
+            }
+            compare_paths(&mut s, &managers, &table, g.u64());
         });
     }
 

@@ -7,6 +7,7 @@ use crate::batching::BatchRequest;
 use crate::common::config::ServiceConfig;
 use crate::common::error::{Error, Result};
 use crate::common::ids::{EndpointId, FunctionId, TaskId, UserId};
+use crate::common::sync::Notify;
 use crate::common::task::{Payload, Task, TaskResult, TaskState};
 use crate::common::time::{Clock, WallClock};
 use crate::metrics::{Counters, LatencyBreakdown};
@@ -30,6 +31,9 @@ pub struct FuncXService {
     pub clock: Arc<dyn Clock>,
     pub latency: Arc<LatencyBreakdown>,
     pub counters: Arc<Counters>,
+    /// Signalled on every stored result so [`FuncXService::wait_result`]
+    /// blocks instead of polling.
+    result_notify: Arc<Notify>,
 }
 
 impl FuncXService {
@@ -42,6 +46,7 @@ impl FuncXService {
             clock: Arc::new(WallClock::new()),
             latency: Arc::new(LatencyBreakdown::new()),
             counters: Counters::new(),
+            result_notify: Arc::new(Notify::new()),
         }
     }
 
@@ -210,17 +215,23 @@ impl FuncXService {
         }
     }
 
-    /// Poll until the task reaches a terminal state (test/SDK helper).
+    /// Block until the task reaches a terminal state (test/SDK helper).
+    /// Wakeup-driven: waiters sleep on the service's result latch and are
+    /// woken by [`FuncXService::store_result`] — no poll interval.
     pub fn wait_result(&self, id: TaskId, timeout: std::time::Duration) -> Result<Value> {
         let deadline = std::time::Instant::now() + timeout;
         loop {
+            // Snapshot the epoch *before* checking so a result stored
+            // between the check and the wait still wakes us.
+            let seen = self.result_notify.epoch();
             if let Some(v) = self.get_result(id)? {
                 return Ok(v);
             }
-            if std::time::Instant::now() >= deadline {
+            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+            if remaining.is_zero() {
                 return Err(Error::Timeout(format!("task {id}")));
             }
-            std::thread::sleep(std::time::Duration::from_millis(2));
+            self.result_notify.wait_newer(seen, remaining);
         }
     }
 
@@ -253,6 +264,7 @@ impl FuncXService {
         } else {
             crate::metrics::Counters::incr(&self.counters.warm_hits);
         }
+        self.result_notify.notify();
     }
 
     /// Periodic housekeeping: purge expired results (§4.1).

@@ -6,6 +6,12 @@
 //! lost (missed heartbeats / dead link), returned to the *front* of the
 //! task queue for re-dispatch on reconnect; tasks exceeding the
 //! re-dispatch budget are marked Abandoned.
+//!
+//! The loop is event-driven: it blocks on a single wakeup latch
+//! signalled by (a) pushes to this endpoint's task queue (a KV watch),
+//! (b) upstream traffic on the agent link, and (c) shutdown — bounded by
+//! the heartbeat period so agent-loss deadlines are still enforced.
+//! Under load it never sleeps; idle it never spins.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -33,6 +39,7 @@ pub struct ForwarderStats {
 pub struct ForwarderHandle {
     pub stats: Arc<ForwarderStats>,
     stop: Arc<AtomicBool>,
+    wake: Arc<crate::common::sync::Notify>,
     thread: Option<JoinHandle<()>>,
 }
 
@@ -40,6 +47,7 @@ impl ForwarderHandle {
     /// Signal shutdown (sends Shutdown to the agent) and join.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Relaxed);
+        self.wake.notify(); // pull the loop out of its blocking wait
         if let Some(t) = self.thread.take() {
             let _ = t.join();
         }
@@ -53,13 +61,14 @@ pub(crate) fn spawn(
 ) -> ForwarderHandle {
     let stats = Arc::new(ForwarderStats::default());
     let stop = Arc::new(AtomicBool::new(false));
+    let wake = link.wake_handle();
     let st = stats.clone();
     let sp = stop.clone();
     let thread = std::thread::Builder::new()
         .name(format!("funcx-forwarder-{endpoint}"))
         .spawn(move || forwarder_loop(svc, endpoint, link, st, sp))
         .expect("spawn forwarder");
-    ForwarderHandle { stats, stop, thread: Some(thread) }
+    ForwarderHandle { stats, stop, wake, thread: Some(thread) }
 }
 
 fn forwarder_loop(
@@ -70,6 +79,10 @@ fn forwarder_loop(
     stop: Arc<AtomicBool>,
 ) {
     let queue = svc.task_queue(endpoint);
+    // One latch, three wake sources: upstream link traffic (wired in by
+    // `link()`), pushes to this endpoint's task queue, and shutdown.
+    let wake = link.wake_handle();
+    queue.watch(wake.clone());
     // Tasks sent to the agent but not yet completed (§4.1 ack cache).
     let mut in_flight: HashMap<TaskId, Task> = HashMap::new();
     // Per-task re-dispatch counts.
@@ -77,10 +90,15 @@ fn forwarder_loop(
     let mut last_heartbeat = svc.clock.now();
 
     loop {
+        // Epoch snapshot before EVERY check below — including stop: a
+        // shutdown() (store + notify) racing past the stop check bumps
+        // the epoch after this read and voids the idle wait.
+        let seen = wake.epoch();
         if stop.load(Ordering::Relaxed) {
             let _ = link.send(Downstream::Shutdown);
             break;
         }
+        let mut progressed = false;
         let now = svc.clock.now();
 
         // Agent-loss detection (§4.1): missed heartbeats or dead link.
@@ -114,9 +132,13 @@ fn forwarder_loop(
             break; // this forwarder's link is done; reconnect spawns a new one
         }
 
-        // Dispatch a batch of queued tasks to the agent.
+        // Dispatch a batch of queued tasks to the agent. (The seed's
+        // always-true `batch_is_empty_hint` made the loop sleep 500 µs
+        // even after dispatching a *full* batch; now a non-empty batch
+        // counts as progress and the loop re-runs immediately.)
         let batch = queue.pop_n(64).unwrap_or_default();
         if !batch.is_empty() {
+            progressed = true;
             let now = svc.clock.now();
             for t in &batch {
                 in_flight.insert(t.id, t.clone());
@@ -130,16 +152,17 @@ fn forwarder_loop(
         }
 
         // Drain upstream messages.
-        let mut idle = batch_is_empty_hint(&stats);
         while let Some(msg) = link.try_recv() {
-            idle = false;
+            progressed = true;
             match msg {
                 Upstream::Results(rs) => {
                     for r in rs {
                         in_flight.remove(&r.task);
                         redispatches.remove(&r.task);
-                        svc.store_result(&r);
+                        // Count before storing: store_result wakes
+                        // result waiters, who may read the stats.
                         stats.results.fetch_add(1, Ordering::Relaxed);
+                        svc.store_result(&r);
                     }
                 }
                 Upstream::Heartbeat { .. } => {
@@ -150,14 +173,14 @@ fn forwarder_loop(
             }
         }
 
-        if idle {
-            std::thread::sleep(Duration::from_micros(500));
+        if !progressed {
+            // Nothing to do: block until a push/result/shutdown arrives,
+            // bounded by the heartbeat period so the agent-loss deadline
+            // above is still checked on time.
+            let bound = Duration::from_secs_f64(svc.cfg.heartbeat_period_s.max(1e-3));
+            wake.wait_newer(seen, bound);
         }
     }
-}
-
-fn batch_is_empty_hint(_stats: &ForwarderStats) -> bool {
-    true
 }
 
 #[cfg(test)]
@@ -243,6 +266,47 @@ mod tests {
         let r2 = svc.submit(&tok, f2, e, &Value::Null).unwrap();
         svc.wait_result(r2.task, Duration::from_secs(10)).unwrap();
         fh2.shutdown();
+        handle.join();
+    }
+
+    /// The seed's `batch_is_empty_hint` was always-true, so the
+    /// forwarder slept 500 µs per iteration even right after dispatching
+    /// a full batch — and submissions landing while it slept waited out
+    /// the nap. Now dispatch is wakeup-driven: a task submitted to an
+    /// *idle* stack (forwarder blocked in its wait) must be picked up by
+    /// the queue-watch notification, not a poll tick, and a saturating
+    /// burst must drain without idle naps in between.
+    #[test]
+    fn wakeup_driven_dispatch_not_throttled() {
+        let svc = FuncXService::new(ServiceConfig::default());
+        let (_u, tok) = svc.bootstrap_user("alice");
+        let f = svc.register_function(&tok, "noop", Payload::Noop, None).unwrap();
+        let e = svc.register_endpoint(&tok, "node", "").unwrap();
+        let (fwd_side, agent_side) = link();
+        let handle = EndpointBuilder::new()
+            .config(EndpointConfig { min_nodes: 1, workers_per_node: 4, ..Default::default() })
+            .heartbeat_period(0.05)
+            .start(agent_side);
+        let fh = svc.connect_endpoint(e, fwd_side).unwrap();
+
+        // Let the stack go fully idle (forwarder blocked on its latch —
+        // with the default 30 s heartbeat period a poll-based loop would
+        // otherwise be napping).
+        std::thread::sleep(Duration::from_millis(100));
+
+        // An idle-path submit completes promptly (push → watch → dispatch).
+        let r = svc.submit(&tok, f, e, &Value::Null).unwrap();
+        svc.wait_result(r.task, Duration::from_secs(5)).unwrap();
+
+        // A burst larger than several dispatch batches drains fully.
+        let receipts: Vec<_> =
+            (0..300).map(|_| svc.submit(&tok, f, e, &Value::Null).unwrap()).collect();
+        for r in &receipts {
+            svc.wait_result(r.task, Duration::from_secs(30)).unwrap();
+        }
+        assert_eq!(fh.stats.dispatched.load(Ordering::Relaxed), 301);
+        assert_eq!(fh.stats.results.load(Ordering::Relaxed), 301);
+        fh.shutdown();
         handle.join();
     }
 

@@ -4,8 +4,9 @@
 //! Model (calibrated in [`super::profile`]):
 //! * the agent is a serial dispatcher: each routed task costs
 //!   `dispatch_s` (plus `rtt_s` when internal batching is disabled);
-//! * routing runs the real [`Scheduler`] over incrementally-maintained
-//!   [`ManagerView`]s (O(managers) per task, O(1) view updates);
+//! * routing runs the real [`Scheduler`] over an incrementally-maintained
+//!   [`RoutingTable`] (O(log managers) per warming-aware route,
+//!   O(types·log managers) per slot-change update);
 //! * a routed task immediately occupies a container slot in the target
 //!   manager's real [`WarmPool`]; cold starts sample the Table-3 model;
 //! * the task completes `cold + worker_overhead + duration` later,
@@ -13,11 +14,11 @@
 
 use std::collections::VecDeque;
 
-use crate::common::ids::ContainerId;
+use crate::common::ids::{ContainerId, ManagerId};
 use crate::common::rng::Rng;
 use crate::common::time::Time;
 use crate::containers::WarmPool;
-use crate::routing::{ManagerView, Scheduler};
+use crate::routing::{ManagerView, RoutingTable, Scheduler};
 use crate::sim::events::{Event, EventQueue};
 use crate::sim::profile::SimProfile;
 
@@ -71,15 +72,22 @@ pub struct SimEndpoint {
     scheduler: Box<dyn Scheduler>,
     batching: bool,
     managers: Vec<SimManager>,
-    views: Vec<ManagerView>,
+    /// Views + per-type routing indexes, kept exact under every slot
+    /// change (the agent's O(log M) dispatch structure).
+    table: RoutingTable,
     /// ManagerId -> index (ids are UUID-normalised; not invertible).
-    index_of: std::collections::HashMap<crate::common::ids::ManagerId, usize>,
+    index_of: std::collections::HashMap<ManagerId, usize>,
     rng: Rng,
     /// When true, cold starts are deterministic (model mean) — makes
     /// sweep curves smooth; sampling remains available for realism.
     deterministic_cold: bool,
     /// Manager-side warm matching (from the scheduler; §6.2).
     warm_match: bool,
+}
+
+/// The simulator's deterministic manager ids: index `i` ↔ bits `i + 1`.
+fn sim_mid(i: usize) -> ManagerId {
+    ManagerId::from_bits(i as u128 + 1)
 }
 
 impl SimEndpoint {
@@ -102,7 +110,7 @@ impl SimEndpoint {
             .iter()
             .enumerate()
             .map(|(i, m)| ManagerView {
-                id: crate::common::ids::ManagerId::from_bits(i as u128 + 1),
+                id: sim_mid(i),
                 deployed: m.pool.deployed_census(),
                 warm_idle: m.pool.warm_census(),
                 available_slots: m.pool.available_slots(),
@@ -116,12 +124,13 @@ impl SimEndpoint {
             .map(|(i, v): (usize, &ManagerView)| (v.id, i))
             .collect();
         let warm_match = scheduler.warm_matching();
+        let table = RoutingTable::with_views(scheduler.prefetch(), views);
         SimEndpoint {
             profile,
             scheduler,
             batching,
             managers,
-            views,
+            table,
             index_of,
             rng: Rng::new(seed),
             deterministic_cold: false,
@@ -137,11 +146,18 @@ impl SimEndpoint {
 
     /// Pre-warm all containers (§7.2's scaling methodology).
     pub fn prewarm(&mut self, types: &[ContainerId]) {
-        for (m, v) in self.managers.iter_mut().zip(self.views.iter_mut()) {
+        for (i, m) in self.managers.iter_mut().enumerate() {
             m.pool.prewarm(types, 0.0);
-            v.deployed = m.pool.deployed_census();
-            v.warm_idle = m.pool.warm_census();
-            v.available_slots = m.pool.available_slots();
+            let id = sim_mid(i);
+            let queued = self.table.view(id).map(|v| v.queued).unwrap_or(0);
+            self.table.upsert(ManagerView {
+                id,
+                deployed: m.pool.deployed_census(),
+                warm_idle: m.pool.warm_census(),
+                available_slots: m.pool.available_slots(),
+                total_slots: m.pool.capacity(),
+                queued,
+            });
         }
     }
 
@@ -175,6 +191,7 @@ impl SimEndpoint {
         macro_rules! try_start {
             ($self:ident, $mi:expr, $now:expr, $q:expr, $tasks:expr) => {{
                 let mi = $mi;
+                let mid = sim_mid(mi);
                 loop {
                     let mgr = &$self.managers[mi];
                     if mgr.queue.is_empty() || mgr.pool.available_slots() == 0 {
@@ -221,10 +238,10 @@ impl SimEndpoint {
                                     .container
                                     .unwrap_or(ContainerId(crate::Uuid::NIL));
                                 let q = queued_of.get(&c).copied().unwrap_or(0);
-                                let dep = $self.views[mi]
-                                    .deployed
-                                    .get(&c)
-                                    .copied()
+                                let dep = $self
+                                    .table
+                                    .view(mid)
+                                    .and_then(|v| v.deployed.get(&c).copied())
                                     .unwrap_or(0);
                                 // Spawn when the type holds less than its
                                 // fair share of the pool (paper's
@@ -277,22 +294,25 @@ impl SimEndpoint {
                             .acquire_detailed(ctype, $now)
                             .expect("available slot checked above")
                     };
-                    let v = &mut $self.views[mi];
-                    v.available_slots -= 1;
-                    v.queued -= 1;
-                    if outcome.cold {
-                        *v.deployed.entry(ctype).or_insert(0) += 1;
-                        if let Some(evicted) = outcome.evicted {
-                            if let Some(n) = v.deployed.get_mut(&evicted) {
-                                *n = n.saturating_sub(1);
+                    let cold = outcome.cold;
+                    let evicted = outcome.evicted;
+                    $self.table.update(mid, |v| {
+                        v.available_slots -= 1;
+                        v.queued -= 1;
+                        if cold {
+                            *v.deployed.entry(ctype).or_insert(0) += 1;
+                            if let Some(evicted) = evicted {
+                                if let Some(n) = v.deployed.get_mut(&evicted) {
+                                    *n = n.saturating_sub(1);
+                                }
+                                if let Some(n) = v.warm_idle.get_mut(&evicted) {
+                                    *n = n.saturating_sub(1);
+                                }
                             }
-                            if let Some(n) = v.warm_idle.get_mut(&evicted) {
-                                *n = n.saturating_sub(1);
-                            }
+                        } else if let Some(n) = v.warm_idle.get_mut(&ctype) {
+                            *n = n.saturating_sub(1);
                         }
-                    } else if let Some(n) = v.warm_idle.get_mut(&ctype) {
-                        *n = n.saturating_sub(1);
-                    }
+                    });
                     let cold_cost = if outcome.cold {
                         if $self.deterministic_cold {
                             start_model.mean()
@@ -322,11 +342,12 @@ impl SimEndpoint {
                         continue;
                     };
                     let t = tasks[task_idx];
-                    match self.scheduler.route(t.container, &self.views, &mut self.rng) {
+                    match self.scheduler.route_indexed(t.container, &self.table, &mut self.rng)
+                    {
                         Some(mid) => {
                             pending.pop_front();
                             let mi = self.index_of[&mid];
-                            self.views[mi].queued += 1;
+                            self.table.update(mid, |v| v.queued += 1);
                             self.managers[mi].queue.push_back(task_idx);
                             try_start!(self, mi, now, q, tasks);
                             // Serial dispatcher: next task after d.
@@ -344,9 +365,10 @@ impl SimEndpoint {
                     let pool = &mut self.managers[manager].pool;
                     let ctype = pool.slot_type(slot).expect("busy slot has a type");
                     pool.release(slot, now);
-                    let v = &mut self.views[manager];
-                    v.available_slots += 1;
-                    *v.warm_idle.entry(ctype).or_insert(0) += 1;
+                    self.table.update(sim_mid(manager), |v| {
+                        v.available_slots += 1;
+                        *v.warm_idle.entry(ctype).or_insert(0) += 1;
+                    });
                     completions[task] = now;
                     completed += 1;
                     try_start!(self, manager, now, q, tasks);

@@ -1,10 +1,37 @@
 //! The key-value core: strings + TTL, hashes, lists, counters.
+//!
+//! # Lock striping
+//!
+//! The store is split into [`N_SHARDS`] shards, each guarded by its own
+//! `Mutex + Condvar`; a key's shard is picked by an FNV-1a hash of the
+//! key bytes. Every key lives entirely inside one shard, so single-key
+//! operations stay linearizable (per-key FIFO for the queues) while
+//! operations on *different* keys proceed in parallel — the property the
+//! forwarder fleet needs, since each endpoint has its own task/result
+//! queue keys. This mirrors a clustered Redis: single-threaded per
+//! shard, sharded by key hash.
+//!
+//! # Wakeups
+//!
+//! Blocking pops ([`KvStore::blpop`], [`KvStore::blpop_n`]) wait on the
+//! owning shard's condvar and are woken by pushes to that shard. In
+//! addition, a consumer can register a [`Notify`] watch on a key
+//! ([`KvStore::add_watch`]); pushes to that key signal the watch, which
+//! lets a control loop block on *several* wake sources (its link and its
+//! queue) through one handle instead of polling. Watches are held weakly
+//! and pruned once the watcher drops its handle.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::time::{Duration, Instant};
 
+use crate::common::sync::Notify;
 use crate::common::time::Time;
+
+/// Number of lock stripes. A small power of two: enough to keep a
+/// forwarder fleet's queue keys from contending, cheap to scan for
+/// store-wide ops (purge).
+const N_SHARDS: usize = 16;
 
 #[derive(Default)]
 struct Shard {
@@ -12,15 +39,47 @@ struct Shard {
     hashes: HashMap<String, HashMap<String, Vec<u8>>>,
     lists: HashMap<String, VecDeque<Vec<u8>>>,
     counters: HashMap<String, i64>,
+    /// Key → weakly-held wakeup latches signalled on pushes to the key.
+    watchers: HashMap<String, Vec<Weak<Notify>>>,
+}
+
+impl Shard {
+    /// Upgrade (and prune) the watchers registered for `key`.
+    fn live_watchers(&mut self, key: &str) -> Vec<Arc<Notify>> {
+        let live: Vec<Arc<Notify>> = match self.watchers.get_mut(key) {
+            Some(ws) => {
+                ws.retain(|w| w.strong_count() > 0);
+                ws.iter().filter_map(Weak::upgrade).collect()
+            }
+            None => Vec::new(),
+        };
+        if live.is_empty() {
+            // No live watchers left (or none registered): drop the slot.
+            self.watchers.remove(key);
+        }
+        live
+    }
+}
+
+struct ShardCell {
+    data: Mutex<Shard>,
+    cv: Condvar,
+}
+
+impl Default for ShardCell {
+    fn default() -> Self {
+        ShardCell { data: Mutex::new(Shard::default()), cv: Condvar::new() }
+    }
 }
 
 /// An in-process Redis-subset store. Cheap to clone (Arc inside); all
-/// operations are linearizable under one mutex per store — funcX's Redis
-/// is single-threaded per shard too, so this matches the consistency
-/// model the paper's queues rely on.
+/// operations on one key are linearizable under that key's shard mutex —
+/// funcX's Redis is single-threaded per shard too, so this matches the
+/// consistency model the paper's queues rely on, while distinct keys
+/// (distinct endpoints' queues) no longer serialize behind one lock.
 #[derive(Clone)]
 pub struct KvStore {
-    inner: Arc<(Mutex<Shard>, Condvar)>,
+    shards: Arc<Vec<ShardCell>>,
 }
 
 impl Default for KvStore {
@@ -31,29 +90,51 @@ impl Default for KvStore {
 
 impl KvStore {
     pub fn new() -> Self {
-        KvStore { inner: Arc::new((Mutex::new(Shard::default()), Condvar::new())) }
+        KvStore {
+            shards: Arc::new((0..N_SHARDS).map(|_| ShardCell::default()).collect()),
+        }
     }
 
-    fn lock(&self) -> std::sync::MutexGuard<'_, Shard> {
-        self.inner.0.lock().expect("kv store poisoned")
+    fn cell(&self, key: &str) -> &ShardCell {
+        // FNV-1a over the key bytes.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in key.as_bytes() {
+            h = (h ^ u64::from(*b)).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        &self.shards[(h as usize) % self.shards.len()]
+    }
+
+    fn lock(&self, key: &str) -> std::sync::MutexGuard<'_, Shard> {
+        self.cell(key).data.lock().expect("kv store poisoned")
+    }
+
+    /// Register a wakeup latch signalled whenever `key` receives a push.
+    /// The store holds the latch weakly: drop your `Arc` and the watch
+    /// disappears on the next push.
+    pub fn add_watch(&self, key: &str, notify: Arc<Notify>) {
+        self.lock(key)
+            .watchers
+            .entry(key.to_string())
+            .or_default()
+            .push(Arc::downgrade(&notify));
     }
 
     // ---- strings ---------------------------------------------------------
 
     /// SET key value (no expiry).
     pub fn set(&self, key: &str, value: Vec<u8>) {
-        self.lock().strings.insert(key.to_string(), (value, None));
+        self.lock(key).strings.insert(key.to_string(), (value, None));
     }
 
     /// SETEX: set with a TTL relative to `now` (caller supplies the clock
     /// reading so the simulator can drive expiry under virtual time).
     pub fn set_ex(&self, key: &str, value: Vec<u8>, ttl_s: f64, now: Time) {
-        self.lock().strings.insert(key.to_string(), (value, Some(now + ttl_s)));
+        self.lock(key).strings.insert(key.to_string(), (value, Some(now + ttl_s)));
     }
 
     /// GET at an explicit time (TTL-aware).
     pub fn get_at(&self, key: &str, now: Time) -> Option<Vec<u8>> {
-        let mut g = self.lock();
+        let mut g = self.lock(key);
         match g.strings.get(key) {
             Some((_, Some(exp))) if now >= *exp => {
                 g.strings.remove(key);
@@ -69,27 +150,33 @@ impl KvStore {
         self.get_at(key, 0.0)
     }
 
-    /// DEL; returns whether the key existed.
+    /// DEL; removes every type stored under the key (string, hash, list,
+    /// counter). Returns whether the key existed in any of them.
     pub fn del(&self, key: &str) -> bool {
-        let mut g = self.lock();
+        let mut g = self.lock(key);
         g.strings.remove(key).is_some()
             | g.hashes.remove(key).is_some()
             | g.lists.remove(key).is_some()
+            | g.counters.remove(key).is_some()
     }
 
     /// Purge every expired string key (the service's periodic result
     /// purge; §4.1). Returns the number purged.
     pub fn purge_expired(&self, now: Time) -> usize {
-        let mut g = self.lock();
-        let before = g.strings.len();
-        g.strings.retain(|_, (_, exp)| exp.map_or(true, |e| now < e));
-        before - g.strings.len()
+        let mut purged = 0;
+        for cell in self.shards.iter() {
+            let mut g = cell.data.lock().expect("kv store poisoned");
+            let before = g.strings.len();
+            g.strings.retain(|_, (_, exp)| exp.map_or(true, |e| now < e));
+            purged += before - g.strings.len();
+        }
+        purged
     }
 
     // ---- hashes ----------------------------------------------------------
 
     pub fn hset(&self, key: &str, field: &str, value: Vec<u8>) {
-        self.lock()
+        self.lock(key)
             .hashes
             .entry(key.to_string())
             .or_default()
@@ -97,11 +184,11 @@ impl KvStore {
     }
 
     pub fn hget(&self, key: &str, field: &str) -> Option<Vec<u8>> {
-        self.lock().hashes.get(key).and_then(|h| h.get(field).cloned())
+        self.lock(key).hashes.get(key).and_then(|h| h.get(field).cloned())
     }
 
     pub fn hdel(&self, key: &str, field: &str) -> bool {
-        self.lock()
+        self.lock(key)
             .hashes
             .get_mut(key)
             .map(|h| h.remove(field).is_some())
@@ -109,11 +196,11 @@ impl KvStore {
     }
 
     pub fn hlen(&self, key: &str) -> usize {
-        self.lock().hashes.get(key).map(|h| h.len()).unwrap_or(0)
+        self.lock(key).hashes.get(key).map(|h| h.len()).unwrap_or(0)
     }
 
     pub fn hkeys(&self, key: &str) -> Vec<String> {
-        self.lock()
+        self.lock(key)
             .hashes
             .get(key)
             .map(|h| h.keys().cloned().collect())
@@ -122,37 +209,47 @@ impl KvStore {
 
     // ---- lists (queues) ---------------------------------------------------
 
-    /// RPUSH: append to the tail; wakes blocked poppers.
+    /// RPUSH: append to the tail; wakes blocked poppers and watchers.
     pub fn rpush(&self, key: &str, value: Vec<u8>) -> usize {
-        let mut g = self.lock();
+        let cell = self.cell(key);
+        let mut g = cell.data.lock().expect("kv store poisoned");
         let l = g.lists.entry(key.to_string()).or_default();
         l.push_back(value);
         let n = l.len();
+        let watchers = g.live_watchers(key);
         drop(g);
-        self.inner.1.notify_all();
+        cell.cv.notify_all();
+        for w in watchers {
+            w.notify();
+        }
         n
     }
 
     /// LPUSH: prepend to the head (used to *return* undelivered tasks to
     /// the front of the queue on agent loss; §4.1).
     pub fn lpush(&self, key: &str, value: Vec<u8>) -> usize {
-        let mut g = self.lock();
+        let cell = self.cell(key);
+        let mut g = cell.data.lock().expect("kv store poisoned");
         let l = g.lists.entry(key.to_string()).or_default();
         l.push_front(value);
         let n = l.len();
+        let watchers = g.live_watchers(key);
         drop(g);
-        self.inner.1.notify_all();
+        cell.cv.notify_all();
+        for w in watchers {
+            w.notify();
+        }
         n
     }
 
     /// LPOP: pop from the head.
     pub fn lpop(&self, key: &str) -> Option<Vec<u8>> {
-        self.lock().lists.get_mut(key).and_then(|l| l.pop_front())
+        self.lock(key).lists.get_mut(key).and_then(|l| l.pop_front())
     }
 
     /// Pop up to `n` items (pipelined LPOP — the batching fast path).
     pub fn lpop_n(&self, key: &str, n: usize) -> Vec<Vec<u8>> {
-        let mut g = self.lock();
+        let mut g = self.lock(key);
         match g.lists.get_mut(key) {
             Some(l) => {
                 let take = n.min(l.len());
@@ -164,44 +261,64 @@ impl KvStore {
 
     /// BLPOP: block until an item arrives or `timeout` elapses.
     pub fn blpop(&self, key: &str, timeout: Duration) -> Option<Vec<u8>> {
-        let deadline = std::time::Instant::now() + timeout;
-        let mut g = self.lock();
+        self.blpop_n(key, 1, timeout).pop()
+    }
+
+    /// Batched BLPOP: block until the list is non-empty (or `timeout`
+    /// elapses), then drain up to `max` items in one call. Consumers get
+    /// push-driven wakeups *and* internal batching in a single op — for
+    /// single-queue consumers. (The forwarder multiplexes several wake
+    /// sources instead: it pairs non-blocking [`KvStore::lpop_n`] with an
+    /// [`KvStore::add_watch`] latch shared with its agent link.)
+    pub fn blpop_n(&self, key: &str, max: usize, timeout: Duration) -> Vec<Vec<u8>> {
+        if max == 0 {
+            return Vec::new();
+        }
+        let cell = self.cell(key);
+        let deadline = Instant::now() + timeout;
+        let mut g = cell.data.lock().expect("kv store poisoned");
         loop {
-            if let Some(v) = g.lists.get_mut(key).and_then(|l| l.pop_front()) {
-                return Some(v);
+            if let Some(l) = g.lists.get_mut(key) {
+                if !l.is_empty() {
+                    let take = max.min(l.len());
+                    return l.drain(..take).collect();
+                }
             }
-            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+            let remaining = deadline.saturating_duration_since(Instant::now());
             if remaining.is_zero() {
-                return None;
+                return Vec::new();
             }
-            let (guard, timed_out) = self
-                .inner
-                .1
-                .wait_timeout(g, remaining)
-                .expect("kv store poisoned");
+            let (guard, timed_out) =
+                cell.cv.wait_timeout(g, remaining).expect("kv store poisoned");
             g = guard;
             if timed_out.timed_out() {
                 // Re-check once after timeout to avoid a lost-wakeup race.
-                return g.lists.get_mut(key).and_then(|l| l.pop_front());
+                return match g.lists.get_mut(key) {
+                    Some(l) => {
+                        let take = max.min(l.len());
+                        l.drain(..take).collect()
+                    }
+                    None => Vec::new(),
+                };
             }
         }
     }
 
     pub fn llen(&self, key: &str) -> usize {
-        self.lock().lists.get(key).map(|l| l.len()).unwrap_or(0)
+        self.lock(key).lists.get(key).map(|l| l.len()).unwrap_or(0)
     }
 
     // ---- counters ----------------------------------------------------------
 
     pub fn incr(&self, key: &str) -> i64 {
-        let mut g = self.lock();
+        let mut g = self.lock(key);
         let c = g.counters.entry(key.to_string()).or_insert(0);
         *c += 1;
         *c
     }
 
     pub fn counter(&self, key: &str) -> i64 {
-        *self.lock().counters.get(key).unwrap_or(&0)
+        *self.lock(key).counters.get(key).unwrap_or(&0)
     }
 }
 
@@ -218,6 +335,25 @@ mod tests {
         assert!(kv.del("a"));
         assert_eq!(kv.get("a"), None);
         assert!(!kv.del("a"));
+    }
+
+    #[test]
+    fn del_clears_every_type() {
+        let kv = KvStore::new();
+        kv.set("k", b"s".to_vec());
+        kv.hset("k", "f", b"h".to_vec());
+        kv.rpush("k", b"l".to_vec());
+        kv.incr("k");
+        assert!(kv.del("k"));
+        assert_eq!(kv.get("k"), None);
+        assert_eq!(kv.hget("k", "f"), None);
+        assert_eq!(kv.llen("k"), 0);
+        assert_eq!(kv.counter("k"), 0, "del must clear counters too");
+        assert!(!kv.del("k"));
+        // A counter-only key is deletable as well.
+        kv.incr("c");
+        assert!(kv.del("c"));
+        assert_eq!(kv.counter("c"), 0);
     }
 
     #[test]
@@ -265,11 +401,43 @@ mod tests {
     }
 
     #[test]
+    fn blpop_n_wakes_on_push_and_batches() {
+        let kv = KvStore::new();
+        let kv2 = kv.clone();
+        let t0 = Instant::now();
+        let h = thread::spawn(move || kv2.blpop_n("q", 8, Duration::from_secs(5)));
+        thread::sleep(Duration::from_millis(20));
+        for i in 0..3u8 {
+            kv.rpush("q", vec![i]);
+        }
+        let got = h.join().unwrap();
+        // Wakes on the first push — well before the 5 s timeout — and
+        // drains what is available without waiting for a full batch.
+        assert!(!got.is_empty() && got.len() <= 3);
+        assert!(t0.elapsed() < Duration::from_secs(4));
+        assert_eq!(got[0], vec![0]);
+    }
+
+    #[test]
     fn blpop_times_out() {
         let kv = KvStore::new();
         let t0 = std::time::Instant::now();
         assert_eq!(kv.blpop("q", Duration::from_millis(30)), None);
         assert!(t0.elapsed() >= Duration::from_millis(30));
+    }
+
+    #[test]
+    fn watch_notified_on_push() {
+        let kv = KvStore::new();
+        let n = Arc::new(Notify::new());
+        kv.add_watch("q", n.clone());
+        let seen = n.epoch();
+        kv.rpush("q", b"x".to_vec());
+        assert_ne!(n.epoch(), seen, "push must signal the watch");
+        // Dropped watches are pruned and do not panic later pushes.
+        drop(n);
+        kv.rpush("q", b"y".to_vec());
+        kv.lpush("q", b"z".to_vec());
     }
 
     #[test]
@@ -312,5 +480,63 @@ mod tests {
             consumed.load(std::sync::atomic::Ordering::Relaxed) + kv.llen("q"),
             n_prod * per
         );
+    }
+
+    /// Multi-producer / multi-consumer stress across shards: every item
+    /// pushed to any of 8 keys is consumed exactly once, and per-key
+    /// order is preserved (each key has one consumer).
+    #[test]
+    fn sharded_mpmc_no_loss_no_dup_fifo() {
+        let kv = KvStore::new();
+        let n_keys = 8usize;
+        let n_prod = 4usize;
+        let per = 400usize; // per producer per key
+        let mut handles = Vec::new();
+        for p in 0..n_prod {
+            let kv = kv.clone();
+            handles.push(thread::spawn(move || {
+                for i in 0..per {
+                    for k in 0..n_keys {
+                        // Encode (producer, seq) so consumers can check
+                        // per-producer order within each key.
+                        let mut v = (p as u32).to_le_bytes().to_vec();
+                        v.extend((i as u32).to_le_bytes());
+                        kv.rpush(&format!("q{k}"), v);
+                    }
+                }
+            }));
+        }
+        let mut consumers = Vec::new();
+        for k in 0..n_keys {
+            let kv = kv.clone();
+            consumers.push(thread::spawn(move || {
+                let key = format!("q{k}");
+                let want = n_prod * per;
+                let mut got = 0usize;
+                let mut last_seq = vec![-1i64; n_prod];
+                while got < want {
+                    for item in kv.blpop_n(&key, 64, Duration::from_secs(10)) {
+                        let p = u32::from_le_bytes(item[0..4].try_into().unwrap()) as usize;
+                        let i = i64::from(u32::from_le_bytes(item[4..8].try_into().unwrap()));
+                        assert!(
+                            i > last_seq[p],
+                            "per-key FIFO violated for producer {p}: {i} after {}",
+                            last_seq[p]
+                        );
+                        last_seq[p] = i;
+                        got += 1;
+                    }
+                }
+                got
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total: usize = consumers.into_iter().map(|c| c.join().unwrap()).sum();
+        assert_eq!(total, n_keys * n_prod * per, "no item lost or duplicated");
+        for k in 0..n_keys {
+            assert_eq!(kv.llen(&format!("q{k}")), 0);
+        }
     }
 }

@@ -7,8 +7,18 @@
 //! * strings with TTL ([`KvStore::set`], [`KvStore::get`], expiry purge),
 //! * hashes ([`KvStore::hset`], [`KvStore::hget`]),
 //! * lists used as queues ([`KvStore::rpush`], [`KvStore::lpop`],
-//!   blocking pop with timeout — Redis `BLPOP`),
+//!   blocking pop with timeout — Redis `BLPOP` — and the batched
+//!   [`KvStore::blpop_n`]),
 //! * counters ([`KvStore::incr`]).
+//!
+//! The store is **lock-striped**: keys hash onto independent shards
+//! (each its own `Mutex + Condvar`), so the forwarder fleet's
+//! per-endpoint queues never serialize behind one global lock, while
+//! every single-key operation remains linearizable (see [`kv`] module
+//! docs). Consumers block on push-driven wakeups — shard condvars for
+//! `BLPOP`, or a registered [`crate::common::sync::Notify`] watch
+//! ([`KvStore::add_watch`]) for loops that multiplex several wake
+//! sources.
 //!
 //! The same type backs (a) the service's task brokering and (b) the
 //! endpoint-local in-memory data store used for intra-endpoint data
@@ -61,6 +71,51 @@ mod proptests {
             }
             assert_eq!(popped, pops.min(pushes));
             assert_eq!(kv.llen("q"), pushes - popped);
+        });
+    }
+
+    #[test]
+    fn mpmc_conserves_items_across_shards() {
+        // Concurrent producers/consumers over many keys (which spread
+        // across shards): nothing lost, nothing duplicated, and each
+        // key's drain order is the per-key push order.
+        check("shard-mpmc", 20, |g| {
+            let kv = KvStore::new();
+            let n_keys = g.usize(2, 6);
+            let per_key = g.usize(1, 120);
+            let mut producers = Vec::new();
+            for k in 0..n_keys {
+                let kv = kv.clone();
+                producers.push(std::thread::spawn(move || {
+                    for i in 0..per_key {
+                        kv.rpush(&format!("k{k}"), (i as u64).to_le_bytes().to_vec());
+                    }
+                }));
+            }
+            let mut consumers = Vec::new();
+            for k in 0..n_keys {
+                let kv = kv.clone();
+                consumers.push(std::thread::spawn(move || {
+                    let key = format!("k{k}");
+                    let mut seen = 0u64;
+                    while (seen as usize) < per_key {
+                        for item in
+                            kv.blpop_n(&key, 16, std::time::Duration::from_secs(5))
+                        {
+                            let v =
+                                u64::from_le_bytes(item.as_slice().try_into().unwrap());
+                            assert_eq!(v, seen, "per-key FIFO broken on {key}");
+                            seen += 1;
+                        }
+                    }
+                    seen
+                }));
+            }
+            for p in producers {
+                p.join().unwrap();
+            }
+            let total: u64 = consumers.into_iter().map(|c| c.join().unwrap()).sum();
+            assert_eq!(total as usize, n_keys * per_key);
         });
     }
 

@@ -6,9 +6,11 @@
 //! in-flight tasks until the agent acks — §4.1 "tasks are cached at each
 //! layer and only removed when downstream layers have acknowledged").
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::common::error::Result;
+use crate::common::sync::Notify;
 use crate::serialize::Wire;
 use crate::store::KvStore;
 
@@ -58,6 +60,18 @@ impl<T: Wire> TaskQueue<T> {
             Some(bytes) => Ok(Some(T::from_bytes(&bytes)?)),
             None => Ok(None),
         }
+    }
+
+    /// Blocking batched pop: wait (bounded) until items arrive, then
+    /// drain up to `max` in one store op. Empty on timeout.
+    pub fn pop_blocking_n(&self, max: usize, timeout: Duration) -> Result<Vec<T>> {
+        self.kv.blpop_n(&self.key, max, timeout).iter().map(|b| T::from_bytes(b)).collect()
+    }
+
+    /// Signal `notify` whenever this queue receives a push (weakly held;
+    /// see [`KvStore::add_watch`]).
+    pub fn watch(&self, notify: Arc<Notify>) {
+        self.kv.add_watch(&self.key, notify);
     }
 
     pub fn len(&self) -> usize {
@@ -130,6 +144,33 @@ mod tests {
         a.push(&1).unwrap();
         assert!(b.pop().unwrap().is_none());
         assert_eq!(a.pop().unwrap(), Some(1));
+    }
+
+    #[test]
+    fn blocking_batched_pop_wakes_on_push() {
+        let kv = KvStore::new();
+        let q: TaskQueue<u32> = TaskQueue::new(kv.clone(), "q");
+        let q2 = q.clone();
+        let t0 = std::time::Instant::now();
+        let h = std::thread::spawn(move || q2.pop_blocking_n(64, Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(10));
+        q.push(&1).unwrap();
+        q.push(&2).unwrap();
+        let got = h.join().unwrap().unwrap();
+        assert!(!got.is_empty(), "pop_blocking_n must wake on push");
+        assert_eq!(got[0], 1);
+        assert!(t0.elapsed() < Duration::from_secs(4), "woke by push, not timeout");
+    }
+
+    #[test]
+    fn watch_signals_on_queue_push() {
+        let kv = KvStore::new();
+        let q: TaskQueue<u32> = TaskQueue::new(kv, "q");
+        let n = std::sync::Arc::new(crate::common::sync::Notify::new());
+        q.watch(n.clone());
+        let seen = n.epoch();
+        q.push(&7).unwrap();
+        assert_ne!(n.epoch(), seen);
     }
 
     #[test]
