@@ -1,10 +1,18 @@
 //! Minimal bench harness shared by every bench target (criterion is
 //! unavailable offline). Times closures over several iterations and
-//! prints mean/min wall-clock alongside the experiment tables.
+//! prints mean/min wall-clock alongside the experiment tables, and
+//! records every number so a bench target can emit a machine-readable
+//! JSON artifact (CI uploads `BENCH_hotpath.json` per run, giving the
+//! facade/dispatch sections a trajectory across PRs).
 
 #![allow(dead_code)]
 
+use std::sync::Mutex;
 use std::time::Instant;
+
+/// (section, name, value, unit) records for the JSON artifact.
+static RECORDS: Mutex<Vec<(String, String, f64, &'static str)>> = Mutex::new(Vec::new());
+static SECTION: Mutex<String> = Mutex::new(String::new());
 
 /// Time `f` `iters` times; print mean/min and return the mean seconds.
 pub fn bench(name: &str, iters: usize, mut f: impl FnMut()) -> f64 {
@@ -19,10 +27,60 @@ pub fn bench(name: &str, iters: usize, mut f: impl FnMut()) -> f64 {
     let mean = times.iter().sum::<f64>() / times.len() as f64;
     let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
     println!("bench {name:<40} mean {:>10.4} s   min {:>10.4} s", mean, min);
+    record(name, mean, "s");
+    record(&format!("{name} (min)"), min, "s");
     mean
 }
 
 /// Section header for bench output.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
+    *SECTION.lock().unwrap() = title.to_string();
+}
+
+/// Record a derived metric (throughput, allocs/op, …) under the current
+/// section, for the JSON artifact.
+pub fn record(name: &str, value: f64, unit: &'static str) {
+    RECORDS.lock().unwrap().push((
+        SECTION.lock().unwrap().clone(),
+        name.to_string(),
+        value,
+        unit,
+    ));
+}
+
+/// Write every recorded number as a JSON artifact at `path`.
+pub fn write_json(path: &str) {
+    let records = RECORDS.lock().unwrap();
+    let mut out = String::from("{\n  \"benchmarks\": [\n");
+    for (i, (section, name, value, unit)) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"section\": {}, \"name\": {}, \"value\": {}, \"unit\": \"{}\"}}{}\n",
+            json_str(section),
+            json_str(name),
+            if value.is_finite() { format!("{value:.6}") } else { "null".into() },
+            unit,
+            if i + 1 == records.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write(path, out) {
+        Ok(()) => println!("\nwrote {path} ({} records)", records.len()),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }

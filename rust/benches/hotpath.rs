@@ -4,9 +4,43 @@
 
 mod harness;
 
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
+
+/// Counting allocator so the facade section reports allocations per op
+/// (the scratch-reuse/zero-copy trajectory tracked across PRs via the
+/// BENCH_hotpath.json artifact).
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs_during(f: impl FnOnce()) -> usize {
+    let before = ALLOCS.load(Ordering::SeqCst);
+    f();
+    ALLOCS.load(Ordering::SeqCst) - before
+}
 
 use funcx::common::config::{EndpointConfig, ServiceConfig};
 use funcx::common::task::Payload;
@@ -142,6 +176,37 @@ fn main() {
             std::hint::black_box(unpack(&b).unwrap());
         }
     });
+    // Allocations per op: pack should be ~1 (scratch reuse + one shared
+    // frame); unpack only allocates what the decoded Value needs.
+    let n = allocs_during(|| {
+        for _ in 0..10_000 {
+            std::hint::black_box(pack(&v, 7).unwrap());
+        }
+    });
+    println!("  pack allocs/op:          {:.2}", n as f64 / 10_000.0);
+    harness::record("pack allocs/op", n as f64 / 10_000.0, "allocs");
+    let frame = pack(&v, 7).unwrap();
+    let n = allocs_during(|| {
+        for _ in 0..10_000 {
+            std::hint::black_box(unpack(&frame).unwrap());
+        }
+    });
+    println!("  unpack allocs/op:        {:.2}", n as f64 / 10_000.0);
+    harness::record("unpack allocs/op", n as f64 / 10_000.0, "allocs");
+    // Buffer clone: the per-hop cost on the dispatch path — a refcount
+    // bump, zero allocations, O(1) in payload size.
+    harness::bench("clone 1M packed buffers (16 KB frames)", 5, || {
+        for _ in 0..1_000_000 {
+            std::hint::black_box(frame.clone());
+        }
+    });
+    let n = allocs_during(|| {
+        for _ in 0..100_000 {
+            std::hint::black_box(frame.clone());
+        }
+    });
+    println!("  clone allocs/op:         {:.5}", n as f64 / 100_000.0);
+    harness::record("clone allocs/op", n as f64 / 100_000.0, "allocs");
 
     harness::section("store queue ops (the broker hot path; §4.1)");
     let kv = KvStore::new();
@@ -210,6 +275,69 @@ fn main() {
     fh.shutdown();
     agent.join();
 
+    harness::section("live multi-endpoint — 4 forwarders × 4 agents, concurrent submitters");
+    {
+        // One service, N endpoints each with its own forwarder + agent:
+        // exercises store sharding (distinct queue keys), the watch/latch
+        // wakeups, Arc task dispatch, and batched result upload end to
+        // end — the topology the per-endpoint benches can't.
+        const ENDPOINTS: usize = 4;
+        const TASKS_PER_EP: usize = 2000;
+        let svc = Arc::new(FuncXService::new(ServiceConfig::default()));
+        let (_u, tok) = svc.bootstrap_user("fleet");
+        let fc = FuncXClient::new(svc.clone(), tok);
+        let mut stacks = Vec::new();
+        for i in 0..ENDPOINTS {
+            let ep = fc.register_endpoint(&format!("ep{i}"), "").unwrap();
+            let (fwd, agent_side) = link();
+            let agent = EndpointBuilder::new()
+                .config(EndpointConfig {
+                    min_nodes: 2,
+                    workers_per_node: 4,
+                    ..Default::default()
+                })
+                .heartbeat_period(0.05)
+                .seed(100 + i as u64)
+                .start(agent_side);
+            let fh = svc.connect_endpoint(ep, fwd).unwrap();
+            let f = fc.register_function(&format!("noop{i}"), Payload::Noop).unwrap();
+            stacks.push((ep, f, fh, agent));
+        }
+        let run = || {
+            let t0 = std::time::Instant::now();
+            let handles: Vec<_> = stacks
+                .iter()
+                .map(|(ep, f, _, _)| {
+                    let fc = fc.clone();
+                    let (ep, f) = (*ep, *f);
+                    std::thread::spawn(move || {
+                        let inputs: Vec<Value> =
+                            (0..TASKS_PER_EP).map(|_| Value::Null).collect();
+                        let tasks = fc.run_batch(f, ep, &inputs).unwrap();
+                        fc.get_batch_results(&tasks, Duration::from_secs(120)).unwrap();
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            t0.elapsed().as_secs_f64()
+        };
+        run(); // warm-up
+        let secs = (0..3).map(|_| run()).fold(f64::INFINITY, f64::min);
+        let total = (ENDPOINTS * TASKS_PER_EP) as f64;
+        println!(
+            "  {ENDPOINTS} endpoints x {TASKS_PER_EP} no-ops: {:.3} s, {:>8.0} tasks/s fleet-wide",
+            secs,
+            total / secs
+        );
+        harness::record("multi-endpoint fleet throughput", total / secs, "tasks/s");
+        for (_, _, fh, agent) in stacks {
+            fh.shutdown();
+            agent.join();
+        }
+    }
+
     harness::section("PJRT artifact execution (the compute hot path)");
     let dir = std::path::Path::new("artifacts");
     if dir.join("manifest.json").exists() {
@@ -251,4 +379,6 @@ fn main() {
     } else {
         println!("artifacts missing — run `make artifacts` for PJRT benches");
     }
+
+    harness::write_json("BENCH_hotpath.json");
 }

@@ -9,7 +9,12 @@
 //!   inputs into one submission; the SDK exposes a matching batch
 //!   retrieval call.
 
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+
 use crate::common::ids::{EndpointId, FunctionId};
+use crate::common::sync::Notify;
+use crate::common::task::TaskResult;
 use crate::serialize::{Buffer, Value};
 
 /// Manager-side request-size policy (internal batching).
@@ -34,6 +39,64 @@ impl Prefetcher {
             return 1;
         }
         idle_workers + self.prefetch
+    }
+}
+
+/// Manager-side result buffer (internal batching on the *return* path).
+///
+/// Workers append completed results here instead of sending each one
+/// over the manager→agent channel individually; the buffer flushes a
+/// whole `Vec<TaskResult>` — one channel send and one [`Notify`] signal
+/// per batch — when:
+///
+/// * `cap` results have accumulated (size flush, the high-load path), or
+/// * the completing worker observes an idle manager queue (idle flush:
+///   nothing else is coming soon, so don't sit on the tail), or
+/// * the agent calls [`ResultBuffer::flush`] on its loop tick (straggler
+///   flush, bounded by the agent's idle-wait timeout).
+///
+/// At 10k+ workers this collapses per-result channel traffic and wakeups
+/// into per-batch ones — the return-path mirror of §4.6's task-fetch
+/// batching.
+pub struct ResultBuffer {
+    buf: Mutex<Vec<TaskResult>>,
+    cap: usize,
+    tx: Sender<Vec<TaskResult>>,
+    wake: Arc<Notify>,
+}
+
+impl ResultBuffer {
+    pub fn new(cap: usize, tx: Sender<Vec<TaskResult>>, wake: Arc<Notify>) -> Self {
+        ResultBuffer { buf: Mutex::new(Vec::new()), cap: cap.max(1), tx, wake }
+    }
+
+    /// Append one result; flushes when full or when `idle` says no more
+    /// completions are imminent.
+    pub fn push(&self, r: TaskResult, idle: bool) {
+        let mut b = self.buf.lock().expect("result buffer poisoned");
+        b.push(r);
+        if b.len() >= self.cap || idle {
+            let out = std::mem::take(&mut *b);
+            drop(b);
+            self.send(out);
+        }
+    }
+
+    /// Drain whatever is buffered (agent straggler flush). Returns the
+    /// number of results flushed.
+    pub fn flush(&self) -> usize {
+        let out = std::mem::take(&mut *self.buf.lock().expect("result buffer poisoned"));
+        let n = out.len();
+        if n > 0 {
+            self.send(out);
+        }
+        n
+    }
+
+    fn send(&self, out: Vec<TaskResult>) {
+        // A dropped receiver means the agent is gone; results are moot.
+        let _ = self.tx.send(out);
+        self.wake.notify();
     }
 }
 
@@ -86,6 +149,51 @@ mod tests {
         let p = Prefetcher::new(true, 4);
         assert_eq!(p.request_size(0), 4);
         assert_eq!(p.request_size(64), 68);
+    }
+
+    fn mk_result() -> TaskResult {
+        TaskResult {
+            task: crate::common::ids::TaskId::new(),
+            state: crate::common::task::TaskState::Success,
+            output: Buffer::empty(),
+            exec_time_s: 0.0,
+            cold_start: false,
+        }
+    }
+
+    #[test]
+    fn result_buffer_flushes_on_cap() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let wake = Arc::new(Notify::new());
+        let rb = ResultBuffer::new(3, tx, wake.clone());
+        let seen = wake.epoch();
+        rb.push(mk_result(), false);
+        rb.push(mk_result(), false);
+        assert!(rx.try_recv().is_err(), "below cap, nothing sent");
+        assert_eq!(wake.epoch(), seen, "no wakeup before a flush");
+        rb.push(mk_result(), false);
+        assert_eq!(rx.try_recv().unwrap().len(), 3, "cap flush sends the batch");
+        assert_ne!(wake.epoch(), seen, "flush signals the latch");
+    }
+
+    #[test]
+    fn result_buffer_flushes_on_idle() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let rb = ResultBuffer::new(64, tx, Arc::new(Notify::new()));
+        rb.push(mk_result(), true);
+        assert_eq!(rx.try_recv().unwrap().len(), 1, "idle push flushes immediately");
+    }
+
+    #[test]
+    fn result_buffer_straggler_flush() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let rb = ResultBuffer::new(64, tx, Arc::new(Notify::new()));
+        assert_eq!(rb.flush(), 0, "empty flush is a no-op send-wise");
+        assert!(rx.try_recv().is_err());
+        rb.push(mk_result(), false);
+        rb.push(mk_result(), false);
+        assert_eq!(rb.flush(), 2);
+        assert_eq!(rx.try_recv().unwrap().len(), 2);
     }
 
     #[test]

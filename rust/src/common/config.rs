@@ -56,6 +56,11 @@ pub struct EndpointConfig {
     pub prefetch: usize,
     /// Internal batching enabled (§4.6): managers request tasks in bulk.
     pub internal_batching: bool,
+    /// Manager-side result buffering (§4.6 on the return path): workers
+    /// append completed results to a per-manager buffer that flushes to
+    /// the agent once this many accumulate (or sooner — see
+    /// [`crate::batching::ResultBuffer`]). 1 disables buffering.
+    pub result_batch: usize,
 }
 
 impl Default for EndpointConfig {
@@ -70,6 +75,7 @@ impl Default for EndpointConfig {
             tasks_per_node_scaling: 10,
             prefetch: 4,
             internal_batching: true,
+            result_batch: 32,
         }
     }
 }

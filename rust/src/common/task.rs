@@ -91,6 +91,18 @@ impl Payload {
             Payload::Simulated { duration_s } => *duration_s,
         }
     }
+
+    /// Whether execution reads the task input at all. Workers skip
+    /// deserializing the input buffer for payloads that ignore it
+    /// (no-op/sleep/stress storms are the §7.2 throughput workloads).
+    pub fn reads_input(&self) -> bool {
+        match self {
+            Payload::Noop | Payload::Sleep(_) | Payload::Stress(_) | Payload::Simulated { .. } => {
+                false
+            }
+            Payload::Echo | Payload::Artifact(_) | Payload::DataOp => true,
+        }
+    }
 }
 
 impl Wire for Payload {
@@ -172,8 +184,10 @@ impl Task {
     }
 }
 
-impl Wire for Task {
-    fn to_value(&self) -> Value {
+impl Task {
+    /// Everything except the input payload — the part that gets encoded
+    /// into the frame body; the input rides behind it as a raw trailer.
+    fn meta_value(&self) -> Value {
         Value::map([
             ("id", self.id.to_value()),
             ("fn", self.function.to_value()),
@@ -187,11 +201,10 @@ impl Wire for Task {
                 },
             ),
             ("payload", self.payload.to_value()),
-            ("input", Value::Bytes(self.input.0.clone())),
         ])
     }
 
-    fn from_value(v: &Value) -> Result<Self> {
+    fn from_meta(v: &Value, input: Buffer) -> Result<Self> {
         let field = |name: &str| {
             v.get(name)
                 .ok_or_else(|| Error::Serialization(format!("task: missing {name}")))
@@ -207,13 +220,42 @@ impl Wire for Task {
             user: UserId::from_value(field("user")?)?,
             container,
             payload: Payload::from_value(field("payload")?)?,
-            input: Buffer(
-                match field("input")? {
-                    Value::Bytes(b) => b.clone(),
-                    _ => return Err(Error::Serialization("task: input not bytes".into())),
-                },
-            ),
+            input,
         })
+    }
+}
+
+impl Wire for Task {
+    fn to_value(&self) -> Value {
+        match self.meta_value() {
+            Value::Map(mut m) => {
+                m.insert("input".into(), Value::Bytes(self.input.to_vec()));
+                Value::Map(m)
+            }
+            _ => unreachable!("meta_value is a map"),
+        }
+    }
+
+    fn from_value(v: &Value) -> Result<Self> {
+        let input = v
+            .get("input")
+            .and_then(Value::as_bytes)
+            .ok_or_else(|| Error::Serialization("task: input not bytes".into()))?;
+        Self::from_meta(v, Buffer::from_slice(input))
+    }
+
+    /// Frame = packed meta + raw input trailer: the input buffer is
+    /// appended as-is, not re-encoded into the meta body.
+    fn to_buffer(&self) -> Buffer {
+        crate::serialize::pack_with_trailer(&self.meta_value(), 0, &self.input)
+            .expect("facade always succeeds via BincCodec")
+    }
+
+    /// Decoding borrows the input from the frame: `input` is a zero-copy
+    /// view sharing the frame's allocation (the queue-pop fast path).
+    fn from_buffer(buf: &Buffer) -> Result<Self> {
+        let (meta, input) = crate::serialize::unpack_with_trailer(buf)?;
+        Self::from_meta(&meta, input)
     }
 }
 
@@ -230,18 +272,17 @@ pub struct TaskResult {
     pub cold_start: bool,
 }
 
-impl Wire for TaskResult {
-    fn to_value(&self) -> Value {
+impl TaskResult {
+    fn meta_value(&self) -> Value {
         Value::map([
             ("task", self.task.to_value()),
             ("state", Value::Str(self.state.name().into())),
-            ("output", Value::Bytes(self.output.0.clone())),
             ("t_w", Value::Float(self.exec_time_s)),
             ("cold", Value::Bool(self.cold_start)),
         ])
     }
 
-    fn from_value(v: &Value) -> Result<Self> {
+    fn from_meta(v: &Value, output: Buffer) -> Result<Self> {
         let field = |name: &str| {
             v.get(name)
                 .ok_or_else(|| Error::Serialization(format!("result: missing {name}")))
@@ -253,15 +294,45 @@ impl Wire for TaskResult {
                     .as_str()
                     .ok_or_else(|| Error::Serialization("result: state not str".into()))?,
             )?,
-            output: Buffer(match field("output")? {
-                Value::Bytes(b) => b.clone(),
-                _ => return Err(Error::Serialization("result: output not bytes".into())),
-            }),
+            output,
             exec_time_s: field("t_w")?
                 .as_float()
                 .ok_or_else(|| Error::Serialization("result: t_w not float".into()))?,
             cold_start: matches!(field("cold")?, Value::Bool(true)),
         })
+    }
+}
+
+impl Wire for TaskResult {
+    fn to_value(&self) -> Value {
+        match self.meta_value() {
+            Value::Map(mut m) => {
+                m.insert("output".into(), Value::Bytes(self.output.to_vec()));
+                Value::Map(m)
+            }
+            _ => unreachable!("meta_value is a map"),
+        }
+    }
+
+    fn from_value(v: &Value) -> Result<Self> {
+        let output = v
+            .get("output")
+            .and_then(Value::as_bytes)
+            .ok_or_else(|| Error::Serialization("result: output not bytes".into()))?;
+        Self::from_meta(v, Buffer::from_slice(output))
+    }
+
+    /// Frame = packed meta + raw output trailer (mirrors [`Task`]).
+    fn to_buffer(&self) -> Buffer {
+        crate::serialize::pack_with_trailer(&self.meta_value(), 0, &self.output)
+            .expect("facade always succeeds via BincCodec")
+    }
+
+    /// Decoding borrows the output from the frame as a zero-copy view
+    /// (the result-retrieval fast path out of the KV store).
+    fn from_buffer(buf: &Buffer) -> Result<Self> {
+        let (meta, output) = crate::serialize::unpack_with_trailer(buf)?;
+        Self::from_meta(&meta, output)
     }
 }
 

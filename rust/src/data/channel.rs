@@ -34,12 +34,15 @@ impl Default for InMemoryChannel {
 
 impl DataChannel for InMemoryChannel {
     fn put(&self, key: &str, data: &[u8]) -> Result<()> {
-        self.store.set(key, data.to_vec());
+        self.store.set(key, data);
         Ok(())
     }
 
     fn get(&self, key: &str) -> Result<Vec<u8>> {
-        self.store.get(key).ok_or_else(|| Error::Data(format!("key not found: {key}")))
+        self.store
+            .get(key)
+            .map(|b| b.to_vec())
+            .ok_or_else(|| Error::Data(format!("key not found: {key}")))
     }
 
     fn delete(&self, key: &str) -> Result<bool> {

@@ -83,11 +83,15 @@ struct NodeSlot {
 }
 
 fn agent_loop(link: AgentSide, mut config: AgentConfig, stats: Arc<AgentStats>) {
-    let mut pending: VecDeque<Task> = VecDeque::new();
+    // Shared task handles end to end: intake, routing, and manager
+    // enqueue move the same Arc the forwarder dispatched.
+    let mut pending: VecDeque<Arc<Task>> = VecDeque::new();
     let mut nodes: HashMap<NodeHandle, NodeSlot> = HashMap::new();
     // ManagerId → node handle, maintained alongside `nodes`.
     let mut by_id: HashMap<ManagerId, NodeHandle> = HashMap::new();
-    let (result_tx, result_rx): (Sender<TaskResult>, Receiver<TaskResult>) = channel();
+    // Managers send result *batches* (size/idle-flushed ResultBuffer).
+    let (result_tx, result_rx): (Sender<Vec<TaskResult>>, Receiver<Vec<TaskResult>>) =
+        channel();
     // One latch, three wake sources: downstream link traffic (wired in
     // by `link()`), worker results (via ManagerCtx), and link death.
     let wake = link.wake_handle();
@@ -137,6 +141,7 @@ fn agent_loop(link: AgentSide, mut config: AgentConfig, stats: Arc<AgentStats>) 
                 executor: config.executor.clone(),
                 results: result_tx.clone(),
                 wake: wake.clone(),
+                result_batch: config.cfg.result_batch,
                 clock: config.clock.clone(),
                 latency: config.latency.clone(),
                 start_model: config.start_model,
@@ -183,9 +188,9 @@ fn agent_loop(link: AgentSide, mut config: AgentConfig, stats: Arc<AgentStats>) 
 
         // 4. Return results upstream in batches.
         let mut results = Vec::new();
-        while let Ok(r) = result_rx.try_recv() {
-            results.push(r);
-            if results.len() >= 256 {
+        while let Ok(mut batch) = result_rx.try_recv() {
+            results.append(&mut batch);
+            if results.len() >= 1024 {
                 break;
             }
         }
@@ -258,6 +263,14 @@ fn agent_loop(link: AgentSide, mut config: AgentConfig, stats: Arc<AgentStats>) 
         // 7. Idle wait: block until link traffic or a worker result,
         // bounded by the next timer deadline (strategy tick, heartbeat,
         // or a short provider re-poll while nodes are provisioning).
+        // First flush straggler results still sitting in manager buffers
+        // (buffered because the manager queue wasn't idle at push time);
+        // anything flushed re-arms the loop via the shared wake latch.
+        if !progressed {
+            for slot in nodes.values() {
+                slot.manager.flush_results();
+            }
+        }
         if !progressed {
             let mut next = (last_strategy_tick + config.cfg.strategy_period_s)
                 .min(last_heartbeat + config.heartbeat_period_s);

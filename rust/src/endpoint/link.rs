@@ -18,9 +18,15 @@ use crate::common::sync::Notify;
 use crate::common::task::{Task, TaskResult};
 
 /// Message from the forwarder down to the agent.
+///
+/// Tasks travel as `Arc<Task>` handles: the forwarder's in-flight ack
+/// cache, the link frame, and the manager queue all share one `Task`
+/// allocation (whose `input` is itself a view into the queue frame) —
+/// no payload bytes are copied between submit-side serialization and
+/// the worker.
 #[derive(Debug)]
 pub enum Downstream {
-    Tasks(Vec<Task>),
+    Tasks(Vec<Arc<Task>>),
     /// Forwarder-initiated liveness probe.
     Ping,
     /// Orderly shutdown.
@@ -208,6 +214,27 @@ mod tests {
     use crate::common::task::Payload;
     use crate::serialize::Buffer;
 
+    /// The zero-copy dispatch invariant at the link hop: the task the
+    /// agent receives is the *same allocation* the forwarder retained in
+    /// its in-flight cache — an Arc handoff, not a clone of the record
+    /// (let alone its payload).
+    #[test]
+    fn tasks_cross_link_by_handle_not_copy() {
+        let (f, a) = link();
+        let task = Arc::new(mk_task());
+        let in_flight = task.clone(); // forwarder ack-cache handle
+        assert!(f.send(Downstream::Tasks(vec![task])));
+        match a.recv_timeout(Duration::from_millis(100)) {
+            Some(Downstream::Tasks(ts)) => {
+                assert!(Arc::ptr_eq(&ts[0], &in_flight), "link must not copy tasks");
+                // Two live handles: the ack cache and the received one.
+                assert_eq!(Arc::strong_count(&in_flight), 2);
+                assert!(ts[0].input.same_allocation(&in_flight.input));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
     fn mk_task() -> Task {
         Task::new(
             FunctionId::new(),
@@ -222,7 +249,7 @@ mod tests {
     #[test]
     fn duplex_roundtrip() {
         let (f, a) = link();
-        assert!(f.send(Downstream::Tasks(vec![mk_task()])));
+        assert!(f.send(Downstream::Tasks(vec![Arc::new(mk_task())])));
         match a.recv_timeout(Duration::from_millis(100)) {
             Some(Downstream::Tasks(ts)) => assert_eq!(ts.len(), 1),
             other => panic!("unexpected {other:?}"),

@@ -14,6 +14,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use crate::batching::ResultBuffer;
 use crate::common::ids::ManagerId;
 use crate::common::rng::Rng;
 use crate::common::sync::Notify;
@@ -26,9 +27,14 @@ use crate::runtime::PayloadExecutor;
 use crate::serialize::{unpack, Value};
 
 struct Shared {
-    queue: Mutex<VecDeque<Task>>,
+    /// Tasks are shared handles: the queue holds the same allocation the
+    /// forwarder cached and the link carried — no per-hop record clone.
+    queue: Mutex<VecDeque<Arc<Task>>>,
     cv: Condvar,
     pool: Mutex<WarmPool>,
+    /// Completed results, buffered and flushed in batches (§4.6 on the
+    /// return path) instead of one channel send per result.
+    results: ResultBuffer,
     shutdown: AtomicBool,
 }
 
@@ -43,10 +49,16 @@ pub struct Manager {
 #[derive(Clone)]
 pub struct ManagerCtx {
     pub executor: Arc<PayloadExecutor>,
-    pub results: Sender<TaskResult>,
-    /// Signalled after each result send so the agent's event loop wakes
-    /// on completions instead of polling its result channel.
+    /// Receives *batches* of results (size/idle/straggler-flushed by the
+    /// manager's [`ResultBuffer`]).
+    pub results: Sender<Vec<TaskResult>>,
+    /// Signalled after each result-batch send so the agent's event loop
+    /// wakes on completions instead of polling its result channel.
     pub wake: Arc<Notify>,
+    /// Results buffered before a size flush
+    /// ([`crate::common::config::EndpointConfig::result_batch`]; 1
+    /// disables buffering).
+    pub result_batch: usize,
     pub clock: Arc<dyn Clock>,
     pub latency: Arc<LatencyBreakdown>,
     pub start_model: StartCostModel,
@@ -62,6 +74,11 @@ impl Manager {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             pool: Mutex::new(WarmPool::new(workers, idle_timeout_s)),
+            results: ResultBuffer::new(
+                ctx.result_batch,
+                ctx.results.clone(),
+                ctx.wake.clone(),
+            ),
             shutdown: AtomicBool::new(false),
         });
         let handles = (0..workers)
@@ -78,12 +95,20 @@ impl Manager {
         Manager { id, shared, workers: handles }
     }
 
-    /// Enqueue routed tasks (the agent's dispatch; §6.2).
-    pub fn enqueue(&self, tasks: Vec<Task>) {
+    /// Enqueue routed tasks (the agent's dispatch; §6.2). Takes shared
+    /// handles: enqueueing is O(1) per task regardless of payload size.
+    pub fn enqueue(&self, tasks: Vec<Arc<Task>>) {
         let mut q = self.shared.queue.lock().unwrap();
         q.extend(tasks);
         drop(q);
         self.shared.cv.notify_all();
+    }
+
+    /// Straggler flush of the result buffer (the agent calls this on its
+    /// loop tick so buffered results never wait longer than its idle
+    /// bound). Returns how many results were flushed.
+    pub fn flush_results(&self) -> usize {
+        self.shared.results.flush()
     }
 
     /// Advertised view for the routing scheduler.
@@ -181,8 +206,14 @@ fn worker_loop(shared: Arc<Shared>, ctx: ManagerCtx, rng: &mut Rng) {
             }
         }
 
-        // Deserialize input, execute, serialize output (§4.3 worker).
-        let input: Value = unpack(&task.input).unwrap_or(Value::Null);
+        // Deserialize input (borrowing the body from the shared frame —
+        // and only when the payload actually reads it), execute,
+        // serialize output (§4.3 worker).
+        let input: Value = if task.payload.reads_input() {
+            unpack(&task.input).unwrap_or(Value::Null)
+        } else {
+            Value::Null
+        };
         let (state, output, exec_s) = match ctx.executor.execute(&task.payload, &input) {
             Ok((out, t)) => match crate::serialize::pack(&out, 0) {
                 Ok(buf) => (TaskState::Success, buf, t),
@@ -205,14 +236,13 @@ fn worker_loop(shared: Arc<Shared>, ctx: ManagerCtx, rng: &mut Rng) {
         // Wake siblings blocked on a transient acquire failure.
         shared.cv.notify_all();
 
-        let _ = ctx.results.send(TaskResult {
-            task: task.id,
-            state,
-            output,
-            exec_time_s: exec_s,
-            cold_start: cold,
-        });
-        ctx.wake.notify();
+        // Idle flush when the queue looks drained: nothing else is
+        // finishing soon, so don't sit on the tail of a burst.
+        let idle = shared.queue.lock().unwrap().is_empty();
+        shared.results.push(
+            TaskResult { task: task.id, state, output, exec_time_s: exec_s, cold_start: cold },
+            idle,
+        );
     }
 }
 
@@ -224,13 +254,14 @@ mod tests {
     use crate::common::time::WallClock;
     use crate::containers::{ContainerTech, SystemProfile, TABLE3_MODELS};
     use crate::serialize::Buffer;
-    use std::sync::mpsc::channel;
+    use std::sync::mpsc::{channel, Receiver};
 
-    fn ctx(results: Sender<TaskResult>) -> ManagerCtx {
+    fn ctx(results: Sender<Vec<TaskResult>>, result_batch: usize) -> ManagerCtx {
         ManagerCtx {
             executor: Arc::new(PayloadExecutor::bare()),
             results,
             wake: Arc::new(Notify::new()),
+            result_batch,
             clock: Arc::new(WallClock::new()),
             latency: Arc::new(LatencyBreakdown::new()),
             start_model: TABLE3_MODELS.lookup(SystemProfile::Local, ContainerTech::None),
@@ -238,33 +269,45 @@ mod tests {
         }
     }
 
-    fn mk_task(payload: Payload) -> Task {
-        Task::new(
+    fn mk_task(payload: Payload) -> Arc<Task> {
+        Arc::new(Task::new(
             FunctionId::new(),
             EndpointId::new(),
             UserId::new(),
             None,
             payload,
             Buffer::empty(),
-        )
+        ))
+    }
+
+    /// Collect `n` results across however many batches they arrive in.
+    fn recv_n(rx: &Receiver<Vec<TaskResult>>, n: usize) -> Vec<TaskResult> {
+        let mut got = Vec::new();
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while got.len() < n && std::time::Instant::now() < deadline {
+            if let Ok(batch) = rx.recv_timeout(Duration::from_millis(100)) {
+                got.extend(batch);
+            }
+        }
+        assert_eq!(got.len(), n, "timed out collecting results");
+        got
     }
 
     #[test]
     fn executes_tasks_and_returns_results() {
         let (tx, rx) = channel();
-        let m = Manager::spawn(2, 600.0, ctx(tx), 1);
+        let m = Manager::spawn(2, 600.0, ctx(tx, 32), 1);
         m.enqueue(vec![mk_task(Payload::Noop), mk_task(Payload::Noop)]);
-        let r1 = rx.recv_timeout(Duration::from_secs(5)).unwrap();
-        let r2 = rx.recv_timeout(Duration::from_secs(5)).unwrap();
-        assert_eq!(r1.state, TaskState::Success);
-        assert_eq!(r2.state, TaskState::Success);
+        for r in recv_n(&rx, 2) {
+            assert_eq!(r.state, TaskState::Success);
+        }
         m.shutdown();
     }
 
     #[test]
     fn view_reflects_capacity() {
         let (tx, _rx) = channel();
-        let m = Manager::spawn(4, 600.0, ctx(tx), 2);
+        let m = Manager::spawn(4, 600.0, ctx(tx, 32), 2);
         let v = m.view();
         assert_eq!(v.total_slots, 4);
         assert_eq!(v.available_slots, 4);
@@ -275,11 +318,11 @@ mod tests {
     #[test]
     fn warm_reuse_after_first_task() {
         let (tx, rx) = channel();
-        let m = Manager::spawn(1, 600.0, ctx(tx), 3);
+        let m = Manager::spawn(1, 600.0, ctx(tx, 32), 3);
         m.enqueue(vec![mk_task(Payload::Noop)]);
-        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        recv_n(&rx, 1);
         m.enqueue(vec![mk_task(Payload::Noop)]);
-        let r2 = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let r2 = recv_n(&rx, 1).pop().unwrap();
         assert!(!r2.cold_start, "second task of same (nil) type must hit warm");
         assert_eq!(m.cold_starts(), 1);
         assert_eq!(m.warm_hits(), 1);
@@ -289,12 +332,10 @@ mod tests {
     #[test]
     fn parallel_sleep_overlaps() {
         let (tx, rx) = channel();
-        let m = Manager::spawn(4, 600.0, ctx(tx), 4);
+        let m = Manager::spawn(4, 600.0, ctx(tx, 32), 4);
         let t0 = std::time::Instant::now();
         m.enqueue((0..4).map(|_| mk_task(Payload::Sleep(0.2))).collect());
-        for _ in 0..4 {
-            rx.recv_timeout(Duration::from_secs(5)).unwrap();
-        }
+        recv_n(&rx, 4);
         let elapsed = t0.elapsed().as_secs_f64();
         assert!(elapsed < 0.6, "4 parallel 0.2s sleeps took {elapsed}s");
         m.shutdown();
@@ -303,11 +344,54 @@ mod tests {
     #[test]
     fn failed_payload_reports_failure() {
         let (tx, rx) = channel();
-        let m = Manager::spawn(1, 600.0, ctx(tx), 5);
+        let m = Manager::spawn(1, 600.0, ctx(tx, 32), 5);
         // DataOp without a channel fails inside the executor.
         m.enqueue(vec![mk_task(Payload::DataOp)]);
-        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let r = recv_n(&rx, 1).pop().unwrap();
         assert_eq!(r.state, TaskState::Failed);
         m.shutdown();
+    }
+
+    /// Return-path batching: a burst through a buffered manager crosses
+    /// the channel in far fewer sends than results, while a result_batch
+    /// of 1 degrades to one send per result.
+    #[test]
+    fn results_cross_channel_in_batches() {
+        let (tx, rx) = channel();
+        let m = Manager::spawn(2, 600.0, ctx(tx, 16), 6);
+        m.enqueue((0..64).map(|_| mk_task(Payload::Noop)).collect());
+        let mut results = 0usize;
+        let mut sends = 0usize;
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while results < 64 && std::time::Instant::now() < deadline {
+            if let Ok(batch) = rx.recv_timeout(Duration::from_millis(100)) {
+                sends += 1;
+                results += batch.len();
+            }
+        }
+        assert_eq!(results, 64);
+        assert!(sends < 32, "64 results arrived in {sends} sends — batching inactive");
+        m.shutdown();
+    }
+
+    /// The zero-copy dispatch invariant at the manager hop: while queued
+    /// and executing, the manager works on the *same* `Task` allocation
+    /// the dispatcher holds — never a clone of the record or its payload.
+    #[test]
+    fn enqueued_tasks_are_shared_not_cloned() {
+        let (tx, rx) = channel();
+        let m = Manager::spawn(1, 600.0, ctx(tx, 1), 7);
+        let task = mk_task(Payload::Sleep(0.3));
+        m.enqueue(vec![task.clone()]);
+        // Give the worker time to pop and start executing.
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(
+            Arc::strong_count(&task),
+            2,
+            "worker must hold the same Task allocation while executing"
+        );
+        recv_n(&rx, 1);
+        m.shutdown();
+        assert_eq!(Arc::strong_count(&task), 1, "handle released after completion");
     }
 }

@@ -152,15 +152,15 @@ mod tests {
     use crate::serialize::Buffer;
     use std::time::Duration;
 
-    fn mk_task(payload: Payload) -> Task {
-        Task::new(
+    fn mk_task(payload: Payload) -> std::sync::Arc<Task> {
+        std::sync::Arc::new(Task::new(
             FunctionId::new(),
             EndpointId::new(),
             UserId::new(),
             None,
             payload,
             Buffer::empty(),
-        )
+        ))
     }
 
     #[test]

@@ -343,7 +343,7 @@ impl Scheduler for BinPacking {
         managers
             .iter()
             .filter(|m| m.has_capacity(self.prefetch))
-            .min_by_key(|m| (m.effective_capacity(), m.id.0 .0))
+            .min_by_key(|m| (m.effective_capacity(), m.id))
             .map(|m| m.id)
     }
 
@@ -353,6 +353,24 @@ impl Scheduler for BinPacking {
 
     fn prefetch(&self) -> usize {
         self.prefetch
+    }
+
+    /// O(log M): the least-loaded eligible manager is the first entry of
+    /// the table's capacity-ordered index — the same (effective
+    /// capacity, id) key the scan minimises, so decisions are identical
+    /// (pinned by `proptests::binpacking_indexed_matches_scan`).
+    fn route_indexed(
+        &mut self,
+        _container: Option<ContainerId>,
+        table: &RoutingTable,
+        _rng: &mut Rng,
+    ) -> Option<ManagerId> {
+        debug_assert_eq!(
+            table.prefetch(),
+            self.prefetch,
+            "routing table built with a different prefetch than the policy"
+        );
+        table.min_capacity()
     }
 }
 
@@ -478,6 +496,10 @@ pub struct RoutingTable {
     index_of: HashMap<ManagerId, usize>,
     warm_index: HashMap<ContainerId, BTreeSet<WarmKey>>,
     deployed_index: HashMap<ContainerId, BTreeSet<DeployedKey>>,
+    /// Eligible managers ordered by (effective capacity, id) — the
+    /// bin-packing fill order; `first()` is the least-loaded manager
+    /// still passing the capacity filter.
+    capacity_index: BTreeSet<(usize, ManagerId)>,
     /// Managers currently passing the capacity filter.
     with_capacity: usize,
 }
@@ -492,6 +514,7 @@ impl RoutingTable {
             index_of: HashMap::new(),
             warm_index: HashMap::new(),
             deployed_index: HashMap::new(),
+            capacity_index: BTreeSet::new(),
             with_capacity: 0,
         }
     }
@@ -599,9 +622,18 @@ impl RoutingTable {
         self.deployed_index.get(&c).and_then(|s| s.iter().next_back()).map(|k| k.3)
     }
 
+    /// The eligible manager minimising (effective capacity, id) — the
+    /// bin-packing pick. O(log M).
+    pub fn min_capacity(&self) -> Option<ManagerId> {
+        self.capacity_index.iter().next().map(|k| k.1)
+    }
+
     fn deindex(&mut self, i: usize) {
         if let Some((warm, deployed)) = index_entries(&self.views[i], self.prefetch) {
             self.with_capacity -= 1;
+            let cap_key = (self.views[i].effective_capacity(), self.views[i].id);
+            let removed = self.capacity_index.remove(&cap_key);
+            debug_assert!(removed, "capacity index out of sync");
             for (c, key) in warm {
                 let now_empty = match self.warm_index.get_mut(&c) {
                     Some(set) => {
@@ -634,6 +666,8 @@ impl RoutingTable {
     fn reindex(&mut self, i: usize) {
         if let Some((warm, deployed)) = index_entries(&self.views[i], self.prefetch) {
             self.with_capacity += 1;
+            let cap_key = (self.views[i].effective_capacity(), self.views[i].id);
+            self.capacity_index.insert(cap_key);
             for (c, key) in warm {
                 self.warm_index.entry(c).or_default().insert(key);
             }
@@ -874,6 +908,26 @@ mod tests {
     }
 
     #[test]
+    fn table_min_capacity_tracks_binpacking_order() {
+        let mut table = RoutingTable::with_views(
+            0,
+            vec![mgr(1, &[], 9, 10), mgr(2, &[], 2, 10), mgr(3, &[], 0, 10)],
+        );
+        // Least-loaded eligible manager (3 has no capacity).
+        assert_eq!(table.min_capacity(), Some(ManagerId::from_bits(2)));
+        let mut s = BinPacking::default();
+        let mut rng = Rng::new(1);
+        assert_eq!(s.route_indexed(None, &table, &mut rng), Some(ManagerId::from_bits(2)));
+        // Fill 2 completely: the pick moves to 1.
+        table.update(ManagerId::from_bits(2), |v| v.available_slots = 0);
+        assert_eq!(table.min_capacity(), Some(ManagerId::from_bits(1)));
+        // Drain everyone: no pick.
+        table.update(ManagerId::from_bits(1), |v| v.available_slots = 0);
+        assert_eq!(table.min_capacity(), None);
+        assert_eq!(s.route_indexed(None, &table, &mut rng), None);
+    }
+
+    #[test]
     fn route_indexed_agrees_on_fixtures() {
         let managers = vec![
             mgr(1, &[], 10, 10),
@@ -1062,6 +1116,48 @@ mod proptests {
                 }
             }
             compare_paths(&mut s, &managers, &table, g.u64());
+        });
+    }
+
+    /// The bin-packing analogue of `indexed_matches_scan`: the
+    /// capacity-ordered index must reproduce the O(M) scan's decision,
+    /// including after arbitrary incremental updates and removals.
+    #[test]
+    fn binpacking_indexed_matches_scan() {
+        check("binpack-indexed-eq", 300, |g| {
+            let mut managers = arb_managers_full(g);
+            let prefetch = g.usize(0, 3);
+            let mut table = RoutingTable::with_views(prefetch, managers.clone());
+            let mut s = BinPacking { prefetch };
+            let mut rng = crate::common::rng::Rng::new(g.u64());
+            let compare = |s: &mut BinPacking,
+                           managers: &[ManagerView],
+                           table: &RoutingTable,
+                           rng: &mut crate::common::rng::Rng| {
+                assert_eq!(
+                    s.route(None, managers, rng),
+                    s.route_indexed(None, table, rng),
+                    "bin-packing scan vs indexed diverged"
+                );
+            };
+            compare(&mut s, &managers, &table, &mut rng);
+            for _ in 0..g.usize(1, 25) {
+                if managers.is_empty() {
+                    break;
+                }
+                let i = g.usize(0, managers.len());
+                let id = managers[i].id;
+                if g.usize(0, 10) == 0 {
+                    managers.swap_remove(i);
+                    table.remove(id);
+                } else {
+                    let op = g.usize(0, 6);
+                    let c = ContainerId::from_bits(g.usize(1, 5) as u128);
+                    apply_op(&mut managers[i], op, c);
+                    table.update(id, |v| apply_op(v, op, c));
+                }
+                compare(&mut s, &managers, &table, &mut rng);
+            }
         });
     }
 

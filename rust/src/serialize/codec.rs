@@ -31,9 +31,20 @@ impl Method {
 /// One serialization strategy.
 pub trait Codec: Send + Sync {
     fn method(&self) -> Method;
-    /// Serialize, or `None` when this codec does not support the value
-    /// (the facade then falls through to the next strategy).
-    fn encode(&self, v: &Value) -> Option<Vec<u8>>;
+
+    /// Append the encoded body to `out` and return `true`, or leave any
+    /// partial write behind and return `false` when this codec does not
+    /// support the value (the facade truncates and falls through to the
+    /// next strategy). Appending into the caller's scratch keeps the
+    /// per-value hot path at zero codec-side allocations.
+    fn encode_into(&self, v: &Value, out: &mut Vec<u8>) -> bool;
+
+    /// Convenience owned-vec encode (tests, one-off callers).
+    fn encode(&self, v: &Value) -> Option<Vec<u8>> {
+        let mut out = Vec::new();
+        self.encode_into(v, &mut out).then_some(out)
+    }
+
     fn decode(&self, bytes: &[u8]) -> Result<Value>;
 }
 
@@ -46,10 +57,13 @@ impl Codec for RawCodec {
         Method::Raw
     }
 
-    fn encode(&self, v: &Value) -> Option<Vec<u8>> {
+    fn encode_into(&self, v: &Value, out: &mut Vec<u8>) -> bool {
         match v {
-            Value::Bytes(b) => Some(b.clone()),
-            _ => None,
+            Value::Bytes(b) => {
+                out.extend_from_slice(b);
+                true
+            }
+            _ => false,
         }
     }
 
@@ -68,7 +82,7 @@ impl Codec for JsonCodec {
         Method::Json
     }
 
-    fn encode(&self, v: &Value) -> Option<Vec<u8>> {
+    fn encode_into(&self, v: &Value, out: &mut Vec<u8>) -> bool {
         fn jsonable(v: &Value) -> bool {
             match v {
                 Value::Null | Value::Bool(_) | Value::Int(_) | Value::Float(_) | Value::Str(_) => {
@@ -80,9 +94,10 @@ impl Codec for JsonCodec {
             }
         }
         if !jsonable(v) {
-            return None;
+            return false;
         }
-        Some(crate::serialize::json::to_string(v).into_bytes())
+        crate::serialize::json::write_value(v, out);
+        true
     }
 
     fn decode(&self, bytes: &[u8]) -> Result<Value> {
@@ -243,10 +258,9 @@ impl Codec for BincCodec {
         Method::Binc
     }
 
-    fn encode(&self, v: &Value) -> Option<Vec<u8>> {
-        let mut out = Vec::new();
-        Self::enc_val(v, &mut out);
-        Some(out)
+    fn encode_into(&self, v: &Value, out: &mut Vec<u8>) -> bool {
+        Self::enc_val(v, out);
+        true
     }
 
     fn decode(&self, bytes: &[u8]) -> Result<Value> {

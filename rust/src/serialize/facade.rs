@@ -1,8 +1,28 @@
 //! The facade itself: try codecs fastest-first, pack into a tagged
 //! buffer whose header carries the routing tag and method id (§4.5),
 //! so only buffers are unpacked/deserialized at the destination.
+//!
+//! # Shared buffers
+//!
+//! [`Buffer`] is a view (`offset`, `len`) into a reference-counted
+//! `Arc<[u8]>` allocation. Cloning a buffer is an O(1) refcount bump —
+//! never a copy of the bytes — so a packed payload can sit in the task
+//! queue, the forwarder's in-flight ack cache, a link frame, and a
+//! manager queue while the process holds exactly one allocation of the
+//! body. Sub-views ([`Buffer::slice`]) share the same allocation, which
+//! is how a `Task` decoded from a queue frame borrows its input payload
+//! from the frame instead of copying it (see `docs/wire-format.md`).
+//!
+//! # Encode scratch
+//!
+//! [`Facade::pack`] assembles header + body in a thread-local scratch
+//! `Vec<u8>` that is reused across calls, then makes the single exact-size
+//! allocation for the shared `Arc<[u8]>`. One allocation and one memcpy
+//! per pack, regardless of codec (the seed allocated a body vec *and* an
+//! out vec per value, on every submit and every result).
 
-use std::sync::Arc;
+use std::cell::RefCell;
+use std::sync::{Arc, OnceLock};
 
 use crate::common::error::{Error, Result};
 use crate::serialize::codec::{BincCodec, Codec, JsonCodec, Method, RawCodec};
@@ -19,27 +39,129 @@ pub struct Header {
 }
 
 const MAGIC: u8 = 0xFC; // "funcX"
-const HEADER_LEN: usize = 1 + 1 + 4 + 4;
+pub(crate) const HEADER_LEN: usize = 1 + 1 + 4 + 4;
+/// Scratch capacity kept alive per thread between packs (see
+/// [`Facade::pack`]); larger one-off frames are released after use.
+const MAX_RETAINED_SCRATCH: usize = 64 * 1024;
 
-/// A packed, self-describing buffer as shipped through every queue.
-#[derive(Clone, Debug, PartialEq)]
-pub struct Buffer(pub Vec<u8>);
+/// A packed, self-describing byte buffer as shipped through every queue:
+/// a cheaply-cloneable view into a shared, immutable allocation.
+#[derive(Clone)]
+pub struct Buffer {
+    data: Arc<[u8]>,
+    off: usize,
+    len: usize,
+}
 
 impl Buffer {
+    /// Wrap an owned byte vector (one allocation for the shared slice).
+    pub fn from_vec(v: Vec<u8>) -> Buffer {
+        let len = v.len();
+        Buffer { data: Arc::from(v), off: 0, len }
+    }
+
+    /// Copy a slice into a fresh shared allocation.
+    pub fn from_slice(s: &[u8]) -> Buffer {
+        Buffer { data: Arc::from(s), off: 0, len: s.len() }
+    }
+
+    /// The cached empty (packed `Value::Null`) buffer. O(1): the frame is
+    /// packed once per process and every caller clones the same
+    /// allocation (the seed rebuilt a full `Facade` — codec chain and
+    /// all — on every call).
     pub fn empty() -> Buffer {
-        Facade::default().pack(&Value::Null, 0).expect("null always packs")
+        static EMPTY: OnceLock<Buffer> = OnceLock::new();
+        EMPTY
+            .get_or_init(|| global().pack(&Value::Null, 0).expect("null always packs"))
+            .clone()
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.data[self.off..self.off + self.len]
+    }
+
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.as_slice().to_vec()
     }
 
     pub fn len(&self) -> usize {
-        self.0.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.0.is_empty()
+        self.len == 0
     }
 
+    /// Length of the packed body (everything after the header).
     pub fn body_len(&self) -> usize {
-        self.0.len().saturating_sub(HEADER_LEN)
+        self.len.saturating_sub(HEADER_LEN)
+    }
+
+    /// A sub-view sharing this buffer's allocation — O(1), no copy.
+    /// Panics when the range exceeds the view (internal callers validate
+    /// against a parsed header first).
+    pub fn slice(&self, start: usize, len: usize) -> Buffer {
+        assert!(start + len <= self.len, "slice {start}+{len} out of {}", self.len);
+        Buffer { data: self.data.clone(), off: self.off + start, len }
+    }
+
+    /// Whether two buffers are views into the same allocation (the
+    /// zero-copy invariant tests pin).
+    pub fn same_allocation(&self, other: &Buffer) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
+    }
+
+    /// Size of the backing allocation (≥ `len()` for sub-views). A task
+    /// input deep-copied out of its queue frame would satisfy
+    /// `alloc_len() == len()`; a borrowed view satisfies
+    /// `alloc_len() > len()`.
+    pub fn alloc_len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Number of live handles on the backing allocation.
+    pub fn ref_count(&self) -> usize {
+        Arc::strong_count(&self.data)
+    }
+}
+
+impl std::ops::Deref for Buffer {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl PartialEq for Buffer {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for Buffer {}
+
+impl std::fmt::Debug for Buffer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Buffer({} bytes @{} of {})", self.len, self.off, self.data.len())
+    }
+}
+
+impl From<Vec<u8>> for Buffer {
+    fn from(v: Vec<u8>) -> Buffer {
+        Buffer::from_vec(v)
+    }
+}
+
+impl From<&[u8]> for Buffer {
+    fn from(s: &[u8]) -> Buffer {
+        Buffer::from_slice(s)
+    }
+}
+
+impl<const N: usize> From<&[u8; N]> for Buffer {
+    fn from(s: &[u8; N]) -> Buffer {
+        Buffer::from_slice(s)
     }
 }
 
@@ -56,61 +178,132 @@ impl Default for Facade {
     }
 }
 
+thread_local! {
+    /// Reusable encode scratch: header + body are assembled here, then
+    /// copied once into the exact-size shared allocation.
+    static SCRATCH: RefCell<Vec<u8>> = const { RefCell::new(Vec::new()) };
+}
+
 impl Facade {
     /// Serialize `v`, trying each strategy in order (§4.5: "sorts the
     /// serialization libraries by speed and applies them in order
     /// successively until the object is successfully serialized").
     pub fn pack(&self, v: &Value, routing_tag: u32) -> Result<Buffer> {
-        for codec in &self.codecs {
-            if let Some(body) = codec.encode(v) {
-                let mut out = Vec::with_capacity(HEADER_LEN + body.len());
-                out.push(MAGIC);
-                out.push(codec.method() as u8);
-                out.extend_from_slice(&routing_tag.to_le_bytes());
-                out.extend_from_slice(&(body.len() as u32).to_le_bytes());
-                out.extend_from_slice(&body);
-                return Ok(Buffer(out));
+        self.pack_with_trailer(v, routing_tag, &[])
+    }
+
+    /// Pack `v` and append `trailer` raw after the packed frame. The
+    /// header's `body_len` covers only `v`'s body, so [`Facade::peek_prefix`]
+    /// recovers the frame boundary and the trailer can be sliced off as a
+    /// zero-copy view — the framing `Task`/`TaskResult` use to carry
+    /// their payload buffers without re-encoding them.
+    pub fn pack_with_trailer(&self, v: &Value, routing_tag: u32, trailer: &[u8]) -> Result<Buffer> {
+        SCRATCH.with(|cell| {
+            // Re-entrant pack (a codec packing a nested buffer) falls back
+            // to a local scratch; the hot path never recurses.
+            match cell.try_borrow_mut() {
+                Ok(mut scratch) => self.pack_into(v, routing_tag, trailer, &mut scratch),
+                Err(_) => self.pack_into(v, routing_tag, trailer, &mut Vec::new()),
             }
+        })
+    }
+
+    fn pack_into(
+        &self,
+        v: &Value,
+        routing_tag: u32,
+        trailer: &[u8],
+        out: &mut Vec<u8>,
+    ) -> Result<Buffer> {
+        out.clear();
+        out.push(MAGIC);
+        out.push(0); // method byte patched below
+        out.extend_from_slice(&routing_tag.to_le_bytes());
+        out.extend_from_slice(&[0; 4]); // body_len patched below
+        for codec in &self.codecs {
+            if codec.encode_into(v, out) {
+                let body_len = out.len() - HEADER_LEN;
+                out[1] = codec.method() as u8;
+                out[6..10].copy_from_slice(&(body_len as u32).to_le_bytes());
+                out.extend_from_slice(trailer);
+                let frame = Buffer::from_slice(out);
+                // Don't let one oversized frame (payloads are capped at
+                // ~10 MB by the service) pin that much scratch capacity
+                // in every packing thread forever.
+                if out.capacity() > MAX_RETAINED_SCRATCH {
+                    out.truncate(0);
+                    out.shrink_to(MAX_RETAINED_SCRATCH);
+                }
+                return Ok(frame);
+            }
+            out.truncate(HEADER_LEN);
         }
         Err(Error::Serialization("all serialization strategies failed".into()))
     }
 
     /// Read the header without touching the body (what forwarders do).
+    /// Strict: the buffer must contain exactly one frame.
     pub fn peek(&self, buf: &Buffer) -> Result<Header> {
-        let b = &buf.0;
+        let (header, end) = self.peek_prefix(buf)?;
+        if buf.len() != end {
+            return Err(Error::Serialization(format!(
+                "length mismatch: header says {}, have {}",
+                header.body_len,
+                buf.len() - HEADER_LEN
+            )));
+        }
+        Ok(header)
+    }
+
+    /// Read the header of a frame that may carry trailing bytes (the
+    /// trailer framing). Returns the header and the frame end offset;
+    /// hostile `body_len` values error out instead of panicking or
+    /// driving allocations.
+    pub fn peek_prefix(&self, buf: &Buffer) -> Result<(Header, usize)> {
+        let b = buf.as_slice();
         if b.len() < HEADER_LEN || b[0] != MAGIC {
             return Err(Error::Serialization("bad buffer magic/length".into()));
         }
         let method = Method::from_u8(b[1])?;
         let routing_tag = u32::from_le_bytes(b[2..6].try_into().unwrap());
         let body_len = u32::from_le_bytes(b[6..10].try_into().unwrap());
-        if b.len() != HEADER_LEN + body_len as usize {
-            return Err(Error::Serialization(format!(
-                "length mismatch: header says {body_len}, have {}",
-                b.len() - HEADER_LEN
-            )));
-        }
-        Ok(Header { method, routing_tag, body_len })
+        let end = HEADER_LEN
+            .checked_add(body_len as usize)
+            .filter(|end| *end <= b.len())
+            .ok_or_else(|| {
+                Error::Serialization(format!(
+                    "length mismatch: header says {body_len}, have {}",
+                    b.len() - HEADER_LEN
+                ))
+            })?;
+        Ok((Header { method, routing_tag, body_len }, end))
     }
 
-    /// Unpack a buffer at the destination.
-    pub fn unpack(&self, buf: &Buffer) -> Result<(Header, Value)> {
-        let header = self.peek(buf)?;
-        let body = &buf.0[HEADER_LEN..];
+    /// Decode a body slice with the codec named in `header`. Borrows the
+    /// body — callers hand in a sub-slice of the frame they already hold.
+    pub fn decode_body(&self, header: Header, body: &[u8]) -> Result<Value> {
         let codec = self
             .codecs
             .iter()
             .find(|c| c.method() == header.method)
             .ok_or_else(|| Error::Serialization("no codec for method".into()))?;
-        Ok((header, codec.decode(body)?))
+        codec.decode(body)
+    }
+
+    /// Unpack a buffer at the destination. The body is decoded in place
+    /// (borrowed from `buf`), never copied out first.
+    pub fn unpack(&self, buf: &Buffer) -> Result<(Header, Value)> {
+        let header = self.peek(buf)?;
+        let body = &buf.as_slice()[HEADER_LEN..];
+        Ok((header, self.decode_body(header, body)?))
     }
 }
 
 /// The process-wide facade instance (perf: constructing a facade
 /// allocates the codec chain; the free functions below are on the
 /// per-task hot path, so they share one static instance).
-fn global() -> &'static Facade {
-    static FACADE: std::sync::OnceLock<Facade> = std::sync::OnceLock::new();
+pub(crate) fn global() -> &'static Facade {
+    static FACADE: OnceLock<Facade> = OnceLock::new();
     FACADE.get_or_init(Facade::default)
 }
 
@@ -152,22 +345,78 @@ mod tests {
     #[test]
     fn corrupt_magic_rejected() {
         let f = Facade::default();
-        let mut b = f.pack(&Value::Int(1), 0).unwrap();
-        b.0[0] = 0x00;
-        assert!(f.peek(&b).is_err());
+        let mut raw = f.pack(&Value::Int(1), 0).unwrap().to_vec();
+        raw[0] = 0x00;
+        assert!(f.peek(&Buffer::from_vec(raw)).is_err());
     }
 
     #[test]
     fn corrupt_length_rejected() {
         let f = Facade::default();
-        let mut b = f.pack(&Value::Int(1), 0).unwrap();
-        b.0.truncate(b.0.len() - 1);
-        assert!(f.peek(&b).is_err());
+        let mut raw = f.pack(&Value::Int(1), 0).unwrap().to_vec();
+        raw.truncate(raw.len() - 1);
+        assert!(f.peek(&Buffer::from_vec(raw)).is_err());
     }
 
     #[test]
     fn empty_buffer_is_null() {
         let v = unpack(&Buffer::empty()).unwrap();
         assert_eq!(v, Value::Null);
+        // Cached: every call shares one allocation.
+        assert!(Buffer::empty().same_allocation(&Buffer::empty()));
+    }
+
+    #[test]
+    fn clone_shares_allocation() {
+        let b = pack(&Value::Bytes(vec![7; 1024]), 0).unwrap();
+        let c = b.clone();
+        assert!(b.same_allocation(&c));
+        assert_eq!(b.ref_count(), 2);
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn slice_is_a_view() {
+        let b = Buffer::from_vec((0..32u8).collect());
+        let s = b.slice(4, 8);
+        assert_eq!(s.as_slice(), &(4..12u8).collect::<Vec<_>>()[..]);
+        assert!(s.same_allocation(&b));
+        assert_eq!(s.alloc_len(), 32);
+        // Views of views compose.
+        let ss = s.slice(2, 3);
+        assert_eq!(ss.as_slice(), [6, 7, 8]);
+        assert!(ss.same_allocation(&b));
+    }
+
+    #[test]
+    fn trailer_frame_roundtrip() {
+        let f = Facade::default();
+        let trailer = [0xAA; 16];
+        let b = f.pack_with_trailer(&Value::Int(9), 3, &trailer).unwrap();
+        // Strict peek rejects the trailing bytes...
+        assert!(f.peek(&b).is_err());
+        // ...prefix peek recovers the boundary.
+        let (h, end) = f.peek_prefix(&b).unwrap();
+        assert_eq!(h.routing_tag, 3);
+        assert_eq!(end, b.len() - trailer.len());
+        assert_eq!(&b.as_slice()[end..], trailer);
+        let meta = f.decode_body(h, &b.as_slice()[HEADER_LEN..end]).unwrap();
+        assert_eq!(meta, Value::Int(9));
+    }
+
+    #[test]
+    fn hostile_body_len_rejected() {
+        // A header claiming a huge body must error, not panic or allocate.
+        for claimed in [u32::MAX, u32::MAX - 9, 1 << 30, 11] {
+            let mut raw = vec![MAGIC, Method::Raw as u8];
+            raw.extend_from_slice(&0u32.to_le_bytes());
+            raw.extend_from_slice(&claimed.to_le_bytes());
+            raw.extend_from_slice(&[0; 10]); // actual body: 10 bytes
+            let f = Facade::default();
+            let b = Buffer::from_vec(raw);
+            assert!(f.peek(&b).is_err(), "claimed {claimed}");
+            assert!(f.peek_prefix(&b).is_err(), "claimed {claimed}");
+            assert!(f.unpack(&b).is_err(), "claimed {claimed}");
+        }
     }
 }

@@ -9,68 +9,97 @@ use crate::common::error::{Error, Result};
 use crate::serialize::value::Value;
 
 pub fn to_string(v: &Value) -> String {
-    let mut s = String::new();
-    write_value(v, &mut s);
-    s
+    let mut out = Vec::new();
+    write_value(v, &mut out);
+    String::from_utf8(out).expect("json writer emits utf-8")
 }
 
-fn write_value(v: &Value, out: &mut String) {
+/// Append UTF-8 JSON bytes directly to `out`. Allocation-free (numbers
+/// format through `fmt::Write` into the same vec), so the facade's
+/// reusable encode scratch stays the only buffer on the pack hot path.
+pub(crate) fn write_value(v: &Value, out: &mut Vec<u8>) {
+    use std::fmt::Write;
     match v {
-        Value::Null => out.push_str("null"),
-        Value::Bool(true) => out.push_str("true"),
-        Value::Bool(false) => out.push_str("false"),
-        Value::Int(i) => out.push_str(&i.to_string()),
+        Value::Null => out.extend_from_slice(b"null"),
+        Value::Bool(true) => out.extend_from_slice(b"true"),
+        Value::Bool(false) => out.extend_from_slice(b"false"),
+        Value::Int(i) => {
+            let _ = write!(Utf8Vec(out), "{i}");
+        }
         Value::Float(f) => {
             // Tag floats that print like ints so parsing restores the type.
-            let s = f.to_string();
-            out.push_str(&s);
-            if !s.contains('.') && !s.contains('e') && !s.contains("inf") && !s.contains("NaN")
+            let start = out.len();
+            let _ = write!(Utf8Vec(out), "{f}");
+            let s = &out[start..];
+            if !s.contains(&b'.') && !s.contains(&b'e') && !s.windows(3).any(|w| w == b"inf")
+                && !s.windows(3).any(|w| w == b"NaN")
             {
-                out.push_str(".0");
+                out.extend_from_slice(b".0");
             }
         }
         Value::Str(s) => write_string(s, out),
         Value::List(l) => {
-            out.push('[');
+            out.push(b'[');
             for (i, x) in l.iter().enumerate() {
                 if i > 0 {
-                    out.push(',');
+                    out.push(b',');
                 }
                 write_value(x, out);
             }
-            out.push(']');
+            out.push(b']');
         }
         Value::Map(m) => {
-            out.push('{');
+            out.push(b'{');
             for (i, (k, x)) in m.iter().enumerate() {
                 if i > 0 {
-                    out.push(',');
+                    out.push(b',');
                 }
                 write_string(k, out);
-                out.push(':');
+                out.push(b':');
                 write_value(x, out);
             }
-            out.push('}');
+            out.push(b'}');
         }
         // Not JSON-able; the codec filters these out before calling us.
         Value::Bytes(_) | Value::F32s(_) | Value::I32s(_) => unreachable!("non-jsonable"),
     }
 }
 
-fn write_string(s: &str, out: &mut String) {
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
+/// `fmt::Write` adapter appending to a byte vec (JSON is valid UTF-8 by
+/// construction, so raw byte appends are safe).
+struct Utf8Vec<'a>(&'a mut Vec<u8>);
+
+impl std::fmt::Write for Utf8Vec<'_> {
+    fn write_str(&mut self, s: &str) -> std::fmt::Result {
+        self.0.extend_from_slice(s.as_bytes());
+        Ok(())
     }
-    out.push('"');
+}
+
+fn write_string(s: &str, out: &mut Vec<u8>) {
+    use std::fmt::Write;
+    out.push(b'"');
+    let mut rest = s;
+    while let Some(i) = rest
+        .bytes()
+        .position(|b| matches!(b, b'"' | b'\\' | b'\n' | b'\r' | b'\t') || b < 0x20)
+    {
+        out.extend_from_slice(rest[..i].as_bytes());
+        let c = rest.as_bytes()[i];
+        match c {
+            b'"' => out.extend_from_slice(b"\\\""),
+            b'\\' => out.extend_from_slice(b"\\\\"),
+            b'\n' => out.extend_from_slice(b"\\n"),
+            b'\r' => out.extend_from_slice(b"\\r"),
+            b'\t' => out.extend_from_slice(b"\\t"),
+            c => {
+                let _ = write!(Utf8Vec(out), "\\u{:04x}", c as u32);
+            }
+        }
+        rest = &rest[i + 1..];
+    }
+    out.extend_from_slice(rest.as_bytes());
+    out.push(b'"');
 }
 
 pub fn from_str(s: &str) -> Result<Value> {

@@ -27,6 +27,25 @@ pub use facade::{pack, unpack, Buffer, Facade, Header};
 pub use value::Value;
 pub use wire::Wire;
 
+use crate::common::error::Result;
+
+/// Pack `v` with `trailer` appended raw after the frame — the framing
+/// [`crate::common::task::Task`] / [`crate::common::task::TaskResult`]
+/// use to carry their already-packed payload buffers without
+/// re-encoding them (see `docs/wire-format.md`).
+pub fn pack_with_trailer(v: &Value, tag: u32, trailer: &[u8]) -> Result<Buffer> {
+    facade::global().pack_with_trailer(v, tag, trailer)
+}
+
+/// Split a trailer-framed buffer into its decoded meta value and the
+/// trailer as a zero-copy view sharing the frame's allocation.
+pub fn unpack_with_trailer(buf: &Buffer) -> Result<(Value, Buffer)> {
+    let f = facade::global();
+    let (header, end) = f.peek_prefix(buf)?;
+    let meta = f.decode_body(header, &buf.as_slice()[facade::HEADER_LEN..end])?;
+    Ok((meta, buf.slice(end, buf.len() - end)))
+}
+
 #[cfg(test)]
 mod proptests {
     use super::*;
@@ -95,20 +114,92 @@ mod proptests {
         check("corruption-robust", 300, |g| {
             let v = arb_value(g, 2);
             let f = Facade::default();
-            let mut buf = f.pack(&v, 1).unwrap();
-            if buf.0.is_empty() {
+            let mut raw = f.pack(&v, 1).unwrap().to_vec();
+            if raw.is_empty() {
                 return;
             }
             // flip a byte or truncate; unpack must return Err or a value,
             // never panic.
-            if g.bool() && buf.0.len() > 1 {
-                let i = g.usize(0, buf.0.len());
-                buf.0[i] ^= 0xFF;
+            if g.bool() && raw.len() > 1 {
+                let i = g.usize(0, raw.len());
+                raw[i] ^= 0xFF;
             } else {
-                let keep = g.usize(0, buf.0.len());
-                buf.0.truncate(keep);
+                let keep = g.usize(0, raw.len());
+                raw.truncate(keep);
             }
-            let _ = f.unpack(&buf);
+            let _ = f.unpack(&Buffer::from_vec(raw));
+        });
+    }
+
+    /// Every codec that accepts a value must roundtrip it exactly (not
+    /// just the facade's first-match choice).
+    #[test]
+    fn every_codec_roundtrips_what_it_accepts() {
+        check("codec-roundtrip-all", 300, |g| {
+            let v = arb_value(g, 3);
+            let codecs: Vec<Box<dyn Codec>> =
+                vec![Box::new(RawCodec), Box::new(JsonCodec), Box::new(BincCodec)];
+            let mut accepted = 0;
+            for c in &codecs {
+                if let Some(body) = c.encode(&v) {
+                    accepted += 1;
+                    assert_eq!(
+                        c.decode(&body).unwrap(),
+                        v,
+                        "codec {:?} failed to roundtrip",
+                        c.method()
+                    );
+                    // encode_into must agree with encode and leave prior
+                    // scratch content untouched (facade contract).
+                    let mut out = vec![0xEE; 7];
+                    assert!(c.encode_into(&v, &mut out));
+                    assert_eq!(&out[..7], [0xEE; 7]);
+                    assert_eq!(&out[7..], &body[..]);
+                }
+            }
+            assert!(accepted >= 1, "BincCodec must accept every value");
+        });
+    }
+
+    /// Hostile headers: arbitrary claimed `body_len` over a short buffer
+    /// must produce `Error::Serialization` — never a panic and never an
+    /// allocation proportional to the claim.
+    #[test]
+    fn hostile_headers_error_cleanly() {
+        check("hostile-headers", 300, |g| {
+            let claimed = g.u64() as u32;
+            let actual = g.usize(0, 64);
+            let mut raw = vec![0xFC, g.usize(0, 4) as u8]; // magic + method
+            raw.extend_from_slice(&(g.u64() as u32).to_le_bytes()); // tag
+            raw.extend_from_slice(&claimed.to_le_bytes());
+            raw.extend(std::iter::repeat(0xAB).take(actual));
+            let f = Facade::default();
+            let buf = Buffer::from_vec(raw);
+            if claimed as usize != actual {
+                match f.unpack(&buf) {
+                    Err(crate::common::error::Error::Serialization(_)) => {}
+                    other => panic!("claimed {claimed} actual {actual}: {other:?}"),
+                }
+            } else {
+                // Consistent length: decode may still fail (garbage
+                // body) but must not panic.
+                let _ = f.unpack(&buf);
+            }
+        });
+    }
+
+    /// Trailer framing: any (value, trailer) pair splits back exactly,
+    /// with the trailer borrowed from the frame allocation.
+    #[test]
+    fn trailer_framing_roundtrip() {
+        check("trailer-roundtrip", 200, |g| {
+            let v = arb_value(g, 2);
+            let trailer = g.bytes(512);
+            let frame = pack_with_trailer(&v, 9, &trailer).unwrap();
+            let (meta, tail) = unpack_with_trailer(&frame).unwrap();
+            assert_eq!(meta, v);
+            assert_eq!(tail.as_slice(), &trailer[..]);
+            assert!(tail.same_allocation(&frame), "trailer must be a borrowed view");
         });
     }
 }

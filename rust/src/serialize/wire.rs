@@ -7,20 +7,35 @@ use crate::serialize::facade::Buffer;
 use crate::serialize::value::Value;
 
 /// A type that can cross a queue boundary.
+///
+/// [`Wire::to_buffer`] / [`Wire::from_buffer`] are the hot path: frames
+/// are shared [`Buffer`]s end to end, so queue push/pop never copies the
+/// frame, and types carrying payload buffers ([`crate::common::task::Task`],
+/// [`crate::common::task::TaskResult`]) override them with a trailer
+/// framing whose decode *borrows* the payload from the frame instead of
+/// copying it. `to_bytes`/`from_bytes` remain as owned-vec conveniences.
 pub trait Wire: Sized {
     fn to_value(&self) -> Value;
     fn from_value(v: &Value) -> Result<Self>;
 
-    /// Pack via the facade (tag 0).
-    fn to_bytes(&self) -> Vec<u8> {
+    /// Pack via the facade (tag 0) into a shared frame.
+    fn to_buffer(&self) -> Buffer {
         crate::serialize::pack(&self.to_value(), 0)
             .expect("facade always succeeds via BincCodec")
-            .0
+    }
+
+    /// Decode from a shared frame, borrowing the body in place.
+    fn from_buffer(buf: &Buffer) -> Result<Self> {
+        Self::from_value(&crate::serialize::unpack(buf)?)
+    }
+
+    /// Pack via the facade (tag 0) into an owned vec.
+    fn to_bytes(&self) -> Vec<u8> {
+        self.to_buffer().to_vec()
     }
 
     fn from_bytes(bytes: &[u8]) -> Result<Self> {
-        let v = crate::serialize::unpack(&Buffer(bytes.to_vec()))?;
-        Self::from_value(&v)
+        Self::from_buffer(&Buffer::from_slice(bytes))
     }
 }
 

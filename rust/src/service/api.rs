@@ -12,7 +12,7 @@ use crate::common::task::{Payload, Task, TaskResult, TaskState};
 use crate::common::time::{Clock, WallClock};
 use crate::metrics::{Counters, LatencyBreakdown};
 use crate::registry::{EndpointStatus, Registry};
-use crate::serialize::{pack, unpack, Buffer, Value, Wire};
+use crate::serialize::{pack, unpack, Value, Wire};
 use crate::store::{KvStore, TaskQueue};
 
 /// Receipt for a submitted task.
@@ -160,7 +160,7 @@ impl FuncXService {
         let id = task.id;
         self.latency.on_submit(id, now);
         // Persist task state (Redis hashset; §4.1).
-        self.kv.hset("tasks", &id.to_string(), task.to_bytes());
+        self.kv.hset("tasks", &id.to_string(), task.to_buffer());
         self.set_state(id, TaskState::Received);
         crate::metrics::Counters::incr(&self.counters.tasks_submitted);
         crate::metrics::Counters::add(
@@ -185,7 +185,7 @@ impl FuncXService {
     }
 
     pub(crate) fn set_state(&self, id: TaskId, state: TaskState) {
-        self.kv.hset("task_state", &id.to_string(), state.name().as_bytes().to_vec());
+        self.kv.hset("task_state", &id.to_string(), state.name().as_bytes());
     }
 
     /// Retrieve a completed task's output; `None` while still running.
@@ -201,7 +201,7 @@ impl FuncXService {
             .get_at(&key, self.clock.now())
             .ok_or_else(|| Error::NotFound(format!("result for {id} (purged?)")))?;
         self.kv.del(&key); // purge once retrieved
-        let result = TaskResult::from_bytes(&raw)?;
+        let result = TaskResult::from_buffer(&raw)?;
         match result.state {
             TaskState::Success => Ok(Some(unpack(&result.output)?)),
             TaskState::Failed => {
@@ -245,7 +245,7 @@ impl FuncXService {
         let now = self.clock.now();
         self.kv.set_ex(
             &format!("result:{}", r.task),
-            r.to_bytes(),
+            r.to_buffer(),
             self.cfg.result_ttl_s,
             now,
         );

@@ -84,7 +84,10 @@ fn forwarder_loop(
     let wake = link.wake_handle();
     queue.watch(wake.clone());
     // Tasks sent to the agent but not yet completed (§4.1 ack cache).
-    let mut in_flight: HashMap<TaskId, Task> = HashMap::new();
+    // Shared handles: caching a task and framing it onto the link are
+    // refcount bumps on one allocation, not clones of the record (whose
+    // input is itself a view into the queue frame it was popped from).
+    let mut in_flight: HashMap<TaskId, Arc<Task>> = HashMap::new();
     // Per-task re-dispatch counts.
     let mut redispatches: HashMap<TaskId, u32> = HashMap::new();
     let mut last_heartbeat = svc.clock.now();
@@ -123,7 +126,7 @@ fn forwarder_loop(
                     svc.store_result(&r);
                     stats.abandoned.fetch_add(1, Ordering::Relaxed);
                 } else {
-                    let _ = queue.push_front(&task);
+                    let _ = queue.push_front(task.as_ref());
                     svc.set_state(id, TaskState::WaitingForEndpoint);
                     stats.requeued.fetch_add(1, Ordering::Relaxed);
                     crate::metrics::Counters::incr(&svc.counters.tasks_redispatched);
@@ -136,7 +139,8 @@ fn forwarder_loop(
         // always-true `batch_is_empty_hint` made the loop sleep 500 µs
         // even after dispatching a *full* batch; now a non-empty batch
         // counts as progress and the loop re-runs immediately.)
-        let batch = queue.pop_n(64).unwrap_or_default();
+        let batch: Vec<Arc<Task>> =
+            queue.pop_n(64).unwrap_or_default().into_iter().map(Arc::new).collect();
         if !batch.is_empty() {
             progressed = true;
             let now = svc.clock.now();

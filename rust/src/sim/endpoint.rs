@@ -518,6 +518,33 @@ mod tests {
         assert!(wa.cold_starts <= 1400, "warming-aware cold starts {}", wa.cold_starts);
     }
 
+    /// Bin-packing rides the capacity-ordered index through the sim's
+    /// dispatch loop: tasks complete, the run is deterministic, and load
+    /// concentrates (later nodes stay idle when early ones suffice) so
+    /// the elastic strategy could release them.
+    #[test]
+    fn bin_packing_routes_through_capacity_index() {
+        use crate::routing::BinPacking;
+        let run = || {
+            let mut ep = SimEndpoint::new(
+                SimProfile::theta(),
+                4,
+                Box::new(BinPacking { prefetch: 4 }),
+                true,
+                21,
+            )
+            .deterministic_cold(true);
+            ep.prewarm(&[ContainerId(crate::Uuid::NIL)]);
+            ep.run(&vec![SimTask::sleep(0.05); 500])
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.tasks, 500);
+        assert_eq!(a.completion_s, b.completion_s, "indexed bin-packing must be deterministic");
+        assert_eq!(a.cold_starts, b.cold_starts);
+        assert!(a.completion_s > 0.0);
+    }
+
     #[test]
     fn sim_is_deterministic() {
         let types: Vec<ContainerId> = (1..=4).map(ContainerId::from_bits).collect();

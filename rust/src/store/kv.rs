@@ -27,6 +27,7 @@ use std::time::{Duration, Instant};
 
 use crate::common::sync::Notify;
 use crate::common::time::Time;
+use crate::serialize::Buffer;
 
 /// Number of lock stripes. A small power of two: enough to keep a
 /// forwarder fleet's queue keys from contending, cheap to scan for
@@ -35,9 +36,9 @@ const N_SHARDS: usize = 16;
 
 #[derive(Default)]
 struct Shard {
-    strings: HashMap<String, (Vec<u8>, Option<Time>)>,
-    hashes: HashMap<String, HashMap<String, Vec<u8>>>,
-    lists: HashMap<String, VecDeque<Vec<u8>>>,
+    strings: HashMap<String, (Buffer, Option<Time>)>,
+    hashes: HashMap<String, HashMap<String, Buffer>>,
+    lists: HashMap<String, VecDeque<Buffer>>,
     counters: HashMap<String, i64>,
     /// Key → weakly-held wakeup latches signalled on pushes to the key.
     watchers: HashMap<String, Vec<Weak<Notify>>>,
@@ -121,19 +122,21 @@ impl KvStore {
 
     // ---- strings ---------------------------------------------------------
 
-    /// SET key value (no expiry).
-    pub fn set(&self, key: &str, value: Vec<u8>) {
-        self.lock(key).strings.insert(key.to_string(), (value, None));
+    /// SET key value (no expiry). Values are shared [`Buffer`]s: the
+    /// store keeps a refcounted handle, never a copy.
+    pub fn set(&self, key: &str, value: impl Into<Buffer>) {
+        self.lock(key).strings.insert(key.to_string(), (value.into(), None));
     }
 
     /// SETEX: set with a TTL relative to `now` (caller supplies the clock
     /// reading so the simulator can drive expiry under virtual time).
-    pub fn set_ex(&self, key: &str, value: Vec<u8>, ttl_s: f64, now: Time) {
-        self.lock(key).strings.insert(key.to_string(), (value, Some(now + ttl_s)));
+    pub fn set_ex(&self, key: &str, value: impl Into<Buffer>, ttl_s: f64, now: Time) {
+        self.lock(key).strings.insert(key.to_string(), (value.into(), Some(now + ttl_s)));
     }
 
-    /// GET at an explicit time (TTL-aware).
-    pub fn get_at(&self, key: &str, now: Time) -> Option<Vec<u8>> {
+    /// GET at an explicit time (TTL-aware). O(1): returns another handle
+    /// on the stored allocation, not a copy of the bytes.
+    pub fn get_at(&self, key: &str, now: Time) -> Option<Buffer> {
         let mut g = self.lock(key);
         match g.strings.get(key) {
             Some((_, Some(exp))) if now >= *exp => {
@@ -146,7 +149,7 @@ impl KvStore {
     }
 
     /// GET ignoring TTL bookkeeping (keys set without expiry).
-    pub fn get(&self, key: &str) -> Option<Vec<u8>> {
+    pub fn get(&self, key: &str) -> Option<Buffer> {
         self.get_at(key, 0.0)
     }
 
@@ -175,15 +178,15 @@ impl KvStore {
 
     // ---- hashes ----------------------------------------------------------
 
-    pub fn hset(&self, key: &str, field: &str, value: Vec<u8>) {
+    pub fn hset(&self, key: &str, field: &str, value: impl Into<Buffer>) {
         self.lock(key)
             .hashes
             .entry(key.to_string())
             .or_default()
-            .insert(field.to_string(), value);
+            .insert(field.to_string(), value.into());
     }
 
-    pub fn hget(&self, key: &str, field: &str) -> Option<Vec<u8>> {
+    pub fn hget(&self, key: &str, field: &str) -> Option<Buffer> {
         self.lock(key).hashes.get(key).and_then(|h| h.get(field).cloned())
     }
 
@@ -210,11 +213,12 @@ impl KvStore {
     // ---- lists (queues) ---------------------------------------------------
 
     /// RPUSH: append to the tail; wakes blocked poppers and watchers.
-    pub fn rpush(&self, key: &str, value: Vec<u8>) -> usize {
+    /// O(1) in payload size — the queue holds a handle on the frame.
+    pub fn rpush(&self, key: &str, value: impl Into<Buffer>) -> usize {
         let cell = self.cell(key);
         let mut g = cell.data.lock().expect("kv store poisoned");
         let l = g.lists.entry(key.to_string()).or_default();
-        l.push_back(value);
+        l.push_back(value.into());
         let n = l.len();
         let watchers = g.live_watchers(key);
         drop(g);
@@ -227,11 +231,11 @@ impl KvStore {
 
     /// LPUSH: prepend to the head (used to *return* undelivered tasks to
     /// the front of the queue on agent loss; §4.1).
-    pub fn lpush(&self, key: &str, value: Vec<u8>) -> usize {
+    pub fn lpush(&self, key: &str, value: impl Into<Buffer>) -> usize {
         let cell = self.cell(key);
         let mut g = cell.data.lock().expect("kv store poisoned");
         let l = g.lists.entry(key.to_string()).or_default();
-        l.push_front(value);
+        l.push_front(value.into());
         let n = l.len();
         let watchers = g.live_watchers(key);
         drop(g);
@@ -243,12 +247,12 @@ impl KvStore {
     }
 
     /// LPOP: pop from the head.
-    pub fn lpop(&self, key: &str) -> Option<Vec<u8>> {
+    pub fn lpop(&self, key: &str) -> Option<Buffer> {
         self.lock(key).lists.get_mut(key).and_then(|l| l.pop_front())
     }
 
     /// Pop up to `n` items (pipelined LPOP — the batching fast path).
-    pub fn lpop_n(&self, key: &str, n: usize) -> Vec<Vec<u8>> {
+    pub fn lpop_n(&self, key: &str, n: usize) -> Vec<Buffer> {
         let mut g = self.lock(key);
         match g.lists.get_mut(key) {
             Some(l) => {
@@ -260,7 +264,7 @@ impl KvStore {
     }
 
     /// BLPOP: block until an item arrives or `timeout` elapses.
-    pub fn blpop(&self, key: &str, timeout: Duration) -> Option<Vec<u8>> {
+    pub fn blpop(&self, key: &str, timeout: Duration) -> Option<Buffer> {
         self.blpop_n(key, 1, timeout).pop()
     }
 
@@ -270,7 +274,7 @@ impl KvStore {
     /// single-queue consumers. (The forwarder multiplexes several wake
     /// sources instead: it pairs non-blocking [`KvStore::lpop_n`] with an
     /// [`KvStore::add_watch`] latch shared with its agent link.)
-    pub fn blpop_n(&self, key: &str, max: usize, timeout: Duration) -> Vec<Vec<u8>> {
+    pub fn blpop_n(&self, key: &str, max: usize, timeout: Duration) -> Vec<Buffer> {
         if max == 0 {
             return Vec::new();
         }
@@ -331,7 +335,7 @@ mod tests {
     fn string_set_get_del() {
         let kv = KvStore::new();
         kv.set("a", b"1".to_vec());
-        assert_eq!(kv.get("a"), Some(b"1".to_vec()));
+        assert_eq!(kv.get("a"), Some(b"1".into()));
         assert!(kv.del("a"));
         assert_eq!(kv.get("a"), None);
         assert!(!kv.del("a"));
@@ -373,8 +377,8 @@ mod tests {
         let kv = KvStore::new();
         kv.rpush("q", b"b".to_vec());
         kv.lpush("q", b"a".to_vec());
-        assert_eq!(kv.lpop("q"), Some(b"a".to_vec()));
-        assert_eq!(kv.lpop("q"), Some(b"b".to_vec()));
+        assert_eq!(kv.lpop("q"), Some(b"a".into()));
+        assert_eq!(kv.lpop("q"), Some(b"b".into()));
     }
 
     #[test]
@@ -384,7 +388,8 @@ mod tests {
             kv.rpush("q", vec![i]);
         }
         let got = kv.lpop_n("q", 4);
-        assert_eq!(got, vec![vec![0], vec![1], vec![2], vec![3]]);
+        let raw: Vec<Vec<u8>> = got.iter().map(|b| b.to_vec()).collect();
+        assert_eq!(raw, vec![vec![0], vec![1], vec![2], vec![3]]);
         assert_eq!(kv.llen("q"), 6);
         assert_eq!(kv.lpop_n("q", 100).len(), 6);
         assert_eq!(kv.lpop_n("q", 1).len(), 0);
@@ -397,7 +402,7 @@ mod tests {
         let h = thread::spawn(move || kv2.blpop("q", Duration::from_secs(5)));
         thread::sleep(Duration::from_millis(20));
         kv.rpush("q", b"wake".to_vec());
-        assert_eq!(h.join().unwrap(), Some(b"wake".to_vec()));
+        assert_eq!(h.join().unwrap(), Some(b"wake".into()));
     }
 
     #[test]
@@ -415,7 +420,7 @@ mod tests {
         // drains what is available without waiting for a full batch.
         assert!(!got.is_empty() && got.len() <= 3);
         assert!(t0.elapsed() < Duration::from_secs(4));
-        assert_eq!(got[0], vec![0]);
+        assert_eq!(got[0].to_vec(), vec![0]);
     }
 
     #[test]

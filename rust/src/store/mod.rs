@@ -132,7 +132,7 @@ mod proptests {
                 oracle.insert(field, val);
             }
             for (field, val) in &oracle {
-                assert_eq!(kv.hget("h", field).as_ref(), Some(val));
+                assert_eq!(kv.hget("h", field).as_deref(), Some(val.as_slice()));
             }
             assert_eq!(kv.hlen("h"), oracle.len());
         });
@@ -175,7 +175,7 @@ mod proptests {
                         oracle.push_front(v);
                     }
                     _ => {
-                        assert_eq!(kv.lpop("q"), oracle.pop_front());
+                        assert_eq!(kv.lpop("q").map(|b| b.to_vec()), oracle.pop_front());
                     }
                 }
                 assert_eq!(kv.llen("q"), oracle.len());

@@ -31,33 +31,36 @@ impl<T: Wire> TaskQueue<T> {
         &self.key
     }
 
-    /// Append to the tail (normal enqueue).
+    /// Append to the tail (normal enqueue). The serialized frame is a
+    /// shared [`crate::serialize::Buffer`]; the store keeps a refcounted
+    /// handle rather than copying the bytes in.
     pub fn push(&self, item: &T) -> Result<usize> {
-        Ok(self.kv.rpush(&self.key, item.to_bytes()))
+        Ok(self.kv.rpush(&self.key, item.to_buffer()))
     }
 
     /// Return an item to the *front* (re-dispatch after agent loss; §4.1).
     pub fn push_front(&self, item: &T) -> Result<usize> {
-        Ok(self.kv.lpush(&self.key, item.to_bytes()))
+        Ok(self.kv.lpush(&self.key, item.to_buffer()))
     }
 
-    /// Non-blocking pop.
+    /// Non-blocking pop. Decoding borrows the popped frame in place;
+    /// payload-carrying types come back holding zero-copy views into it.
     pub fn pop(&self) -> Result<Option<T>> {
         match self.kv.lpop(&self.key) {
-            Some(bytes) => Ok(Some(T::from_bytes(&bytes)?)),
+            Some(frame) => Ok(Some(T::from_buffer(&frame)?)),
             None => Ok(None),
         }
     }
 
     /// Pop up to `n` items in one call (internal batching; §4.6).
     pub fn pop_n(&self, n: usize) -> Result<Vec<T>> {
-        self.kv.lpop_n(&self.key, n).iter().map(|b| T::from_bytes(b)).collect()
+        self.kv.lpop_n(&self.key, n).iter().map(T::from_buffer).collect()
     }
 
     /// Blocking pop with timeout (the forwarder's listen loop).
     pub fn pop_blocking(&self, timeout: Duration) -> Result<Option<T>> {
         match self.kv.blpop(&self.key, timeout) {
-            Some(bytes) => Ok(Some(T::from_bytes(&bytes)?)),
+            Some(frame) => Ok(Some(T::from_buffer(&frame)?)),
             None => Ok(None),
         }
     }
@@ -65,7 +68,7 @@ impl<T: Wire> TaskQueue<T> {
     /// Blocking batched pop: wait (bounded) until items arrive, then
     /// drain up to `max` in one store op. Empty on timeout.
     pub fn pop_blocking_n(&self, max: usize, timeout: Duration) -> Result<Vec<T>> {
-        self.kv.blpop_n(&self.key, max, timeout).iter().map(|b| T::from_bytes(b)).collect()
+        self.kv.blpop_n(&self.key, max, timeout).iter().map(T::from_buffer).collect()
     }
 
     /// Signal `notify` whenever this queue receives a push (weakly held;

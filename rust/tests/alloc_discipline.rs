@@ -1,0 +1,110 @@
+//! Allocation-count pins for the serialization facade (acceptance
+//! criterion: pack reuses its scratch — one exact-size allocation per
+//! frame — and cloning a packed buffer allocates nothing).
+//!
+//! A counting global allocator wraps the system one; everything runs in
+//! ONE test function so no sibling test's allocations pollute the
+//! deltas (each integration-test file is its own binary).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use funcx::serialize::{pack, unpack, Buffer, Value};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+fn allocs_during<R>(f: impl FnOnce() -> R) -> (usize, R) {
+    let before = ALLOCS.load(Ordering::SeqCst);
+    let r = f();
+    (ALLOCS.load(Ordering::SeqCst) - before, r)
+}
+
+#[test]
+fn facade_allocation_discipline() {
+    const N: usize = 100;
+
+    // Warm up: thread-local scratch, cached empty frame, any lazy
+    // formatting tables.
+    let bytes_val = Value::Bytes(vec![0xA5; 4096]);
+    let json_val = Value::map([
+        ("inputs", Value::Str("image_000.h5".into())),
+        ("meta", Value::List(vec![Value::Int(1), Value::Bool(true), Value::Float(2.5)])),
+    ]);
+    let binc_val = Value::F32s(vec![1.5; 1024]);
+    for v in [&bytes_val, &json_val, &binc_val] {
+        let _ = pack(v, 7).unwrap();
+    }
+    let _ = Buffer::empty();
+
+    // Pack = one exact-size allocation per frame, for every codec path
+    // (Raw, Json, Binc): the scratch is reused, codecs append into it,
+    // nothing else allocates. Slack covers a possible one-off scratch
+    // regrow.
+    for (name, v) in [("raw", &bytes_val), ("json", &json_val), ("binc", &binc_val)] {
+        let (n, frames) = allocs_during(|| {
+            (0..N).map(|_| pack(v, 7).unwrap()).collect::<Vec<_>>()
+        });
+        // N frame allocations + 1 for the collecting Vec (+ small slack
+        // for its growth doublings).
+        assert!(
+            n <= N + 12,
+            "{name}: {n} allocations for {N} packs — scratch reuse broken"
+        );
+        drop(frames);
+    }
+
+    // Cloning a packed buffer is a refcount bump: ZERO allocations.
+    let frame = pack(&bytes_val, 7).unwrap();
+    let (n, clones) = allocs_during(|| {
+        let mut clones = Vec::with_capacity(1000);
+        for _ in 0..1000 {
+            clones.push(frame.clone());
+        }
+        clones
+    });
+    assert_eq!(n, 0, "cloning a packed buffer must not allocate");
+    assert!(clones.iter().all(|c| c.same_allocation(&frame)));
+    drop(clones);
+
+    // The cached empty frame: zero allocations per call.
+    let (n, _) = allocs_during(|| {
+        for _ in 0..1000 {
+            std::hint::black_box(Buffer::empty());
+        }
+    });
+    assert_eq!(n, 0, "Buffer::empty must serve the cached frame");
+
+    // Unpack decodes the body borrowed in place: the only allocations
+    // are the ones the decoded Value itself needs (here: the Bytes vec),
+    // not a copy of the frame first.
+    let (n, _) = allocs_during(|| {
+        for _ in 0..N {
+            std::hint::black_box(unpack(&frame).unwrap());
+        }
+    });
+    assert!(
+        n <= 2 * N,
+        "unpack allocated {n} times for {N} raw-bytes frames — body is being copied"
+    );
+}

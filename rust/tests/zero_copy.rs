@@ -1,0 +1,139 @@
+//! Pointer-identity pins for the zero-copy task lifecycle: from the
+//! moment a task frame is popped off its queue, dispatching it through
+//! the forwarder's ack cache, the link, and the manager's worker queue
+//! must never deep-copy the task record or its payload body. The sibling
+//! `alloc_discipline` test binary pins the allocation counts; this one
+//! pins allocation *identity* (`Buffer::same_allocation`, `Arc::ptr_eq`,
+//! `Arc::strong_count`).
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+use funcx::common::ids::{EndpointId, FunctionId, UserId};
+use funcx::common::task::{Payload, Task, TaskResult, TaskState};
+use funcx::common::time::WallClock;
+use funcx::containers::{ContainerTech, SystemProfile, TABLE3_MODELS};
+use funcx::endpoint::{link, Downstream, Manager, ManagerCtx};
+use funcx::metrics::LatencyBreakdown;
+use funcx::runtime::PayloadExecutor;
+use funcx::serialize::{pack, Buffer, Value, Wire};
+use funcx::store::{KvStore, TaskQueue};
+
+fn mk_task(payload: Payload, input: Buffer) -> Task {
+    Task::new(FunctionId::new(), EndpointId::new(), UserId::new(), None, payload, input)
+}
+
+/// A decoded task's input is a borrowed view into the frame it came
+/// from — same allocation, not a copy.
+#[test]
+fn task_input_borrows_its_frame() {
+    let input = pack(&Value::Bytes(vec![7u8; 4096]), 0).unwrap();
+    let task = mk_task(Payload::Echo, input.clone());
+    let frame = task.to_buffer();
+    let back = Task::from_buffer(&frame).unwrap();
+    assert!(back.input.same_allocation(&frame), "input must be a view into the frame");
+    assert!(
+        back.input.alloc_len() > back.input.len(),
+        "a deep copy would have an exact-size allocation"
+    );
+    assert_eq!(back.input, input);
+}
+
+/// Same invariant on the return path: a decoded result's output borrows
+/// the result frame (what `get_result` pulls out of the KV store).
+#[test]
+fn result_output_borrows_its_frame() {
+    let output = pack(&Value::Bytes(vec![9u8; 2048]), 0).unwrap();
+    let r = TaskResult {
+        task: funcx::common::ids::TaskId::new(),
+        state: TaskState::Success,
+        output: output.clone(),
+        exec_time_s: 0.5,
+        cold_start: false,
+    };
+    let frame = r.to_buffer();
+    let back = TaskResult::from_buffer(&frame).unwrap();
+    assert!(back.output.same_allocation(&frame));
+    assert_eq!(back.output, output);
+}
+
+/// Popping a typed queue yields tasks whose payload still lives in the
+/// queue frame's allocation (the store hands out refcounted handles).
+#[test]
+fn queue_pop_yields_borrowed_payload() {
+    let kv = KvStore::new();
+    let q: TaskQueue<Task> = TaskQueue::new(kv, "ep:tasks");
+    let input = pack(&Value::Bytes(vec![3u8; 1024]), 0).unwrap();
+    let task = mk_task(Payload::Echo, input.clone());
+    q.push(&task).unwrap();
+    let popped = q.pop().unwrap().unwrap();
+    assert_eq!(popped.input, input);
+    assert!(
+        popped.input.alloc_len() > popped.input.len(),
+        "popped input must be a view into the popped frame, not a copy"
+    );
+}
+
+/// THE dispatch-path pin (acceptance criterion): pop a task from its
+/// queue, cache it in-flight, frame it down the link, enqueue it at a
+/// manager — every hop shares ONE `Task` allocation (whose input is a
+/// view into the queue frame), verified by pointer identity and live
+/// refcounts while the worker executes.
+#[test]
+fn dispatch_forwarder_link_manager_is_zero_copy() {
+    // Submit side: serialize into the queue once.
+    let kv = KvStore::new();
+    let q: TaskQueue<Task> = TaskQueue::new(kv, "ep:tasks");
+    let input = pack(&Value::Bytes(vec![5u8; 8192]), 0).unwrap();
+    q.push(&mk_task(Payload::Sleep(0.3), input)).unwrap();
+
+    // Forwarder hop: pop + wrap once, cache in-flight, send on the link.
+    let popped = q.pop().unwrap().unwrap();
+    let frame_view = popped.input.clone();
+    let in_flight = Arc::new(popped); // §4.1 ack-cache handle
+    let (fwd, agent) = link();
+    assert!(fwd.send(Downstream::Tasks(vec![in_flight.clone()])));
+
+    // Agent hop: the received task IS the cached one.
+    let received = match agent.recv_timeout(Duration::from_millis(200)) {
+        Some(Downstream::Tasks(mut ts)) => ts.pop().unwrap(),
+        other => panic!("unexpected {other:?}"),
+    };
+    assert!(Arc::ptr_eq(&received, &in_flight), "link must move handles, not clone tasks");
+    assert!(received.input.same_allocation(&frame_view));
+
+    // Manager hop: enqueue the same handle; while the worker sleeps the
+    // allocation is shared by ack cache + this test + the worker.
+    let (tx, rx) = channel();
+    let ctx = ManagerCtx {
+        executor: Arc::new(PayloadExecutor::bare()),
+        results: tx,
+        wake: Arc::new(funcx::common::sync::Notify::new()),
+        result_batch: 1,
+        clock: Arc::new(WallClock::new()),
+        latency: Arc::new(LatencyBreakdown::new()),
+        start_model: TABLE3_MODELS.lookup(SystemProfile::Local, ContainerTech::None),
+        cold_start_scale: 0.001,
+    };
+    let m = Manager::spawn(1, 600.0, ctx, 1);
+    m.enqueue(vec![received]);
+    std::thread::sleep(Duration::from_millis(100));
+    assert!(
+        Arc::strong_count(&in_flight) >= 2,
+        "worker must execute the shared allocation, not a copy"
+    );
+    let batch = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(batch[0].state, TaskState::Success);
+    m.shutdown();
+    assert_eq!(Arc::strong_count(&in_flight), 1, "all hops released the shared handle");
+}
+
+/// Buffer clones are refcount bumps on one allocation.
+#[test]
+fn buffer_clone_is_refcount_not_copy() {
+    let b = pack(&Value::Bytes(vec![1u8; 65536]), 0).unwrap();
+    let clones: Vec<Buffer> = (0..64).map(|_| b.clone()).collect();
+    assert!(clones.iter().all(|c| c.same_allocation(&b)));
+    assert_eq!(b.ref_count(), 65);
+}
