@@ -1,0 +1,163 @@
+//! Data-fabric benches: the paper's store-vs-shared-FS comparison
+//! (Fig. 5 ordering — the in-memory tier must beat the shared file
+//! system by ≥ 3x for intra-endpoint payload exchange), tier put/get
+//! costs, spill throughput, and ref-dispatch vs inline task framing.
+//! Emits `BENCH_datastore.json` (uploaded by CI next to
+//! `BENCH_hotpath.json`).
+
+mod harness;
+
+use std::sync::Arc;
+
+use funcx::common::ids::{EndpointId, FunctionId, UserId};
+use funcx::common::task::{Payload, Task};
+use funcx::data::{DataChannel, SharedFsChannel};
+use funcx::datastore::{DataFabric, TieredConfig, TieredStore};
+use funcx::serialize::{pack, Buffer, Value, Wire};
+
+fn frame_of(len: usize) -> Buffer {
+    pack(&Value::Bytes(vec![0xA5; len]), 0).unwrap()
+}
+
+fn mem_store() -> TieredStore {
+    TieredStore::new(
+        EndpointId::new(),
+        TieredConfig { mem_high_watermark: 1 << 30, default_ttl_s: 0.0, spool_dir: None },
+    )
+    .unwrap()
+}
+
+fn disk_store() -> TieredStore {
+    // Watermark 0: every frame spills immediately and never promotes.
+    TieredStore::new(
+        EndpointId::new(),
+        TieredConfig { mem_high_watermark: 0, default_ttl_s: 0.0, spool_dir: None },
+    )
+    .unwrap()
+}
+
+fn main() {
+    let sizes = [(64usize * 1024, "64KB"), (1024 * 1024, "1MB")];
+
+    harness::section("store tiers: put/get (intra-endpoint payload exchange; §5.2)");
+    let mut mem_get_s = f64::NAN;
+    let mut fs_get_s = f64::NAN;
+    for (size, label) in sizes {
+        let n = 2000;
+        let frame = frame_of(size);
+
+        // Memory tier: put then repeated get (handle clones).
+        let mem = mem_store();
+        mem.put("k", frame.clone(), 0.0).unwrap();
+        let t_mem = harness::bench(&format!("memory-tier get x{n} ({label})"), 5, || {
+            for _ in 0..n {
+                std::hint::black_box(mem.get("k", 0.0).unwrap());
+            }
+        }) / n as f64;
+        harness::record(&format!("memory get ({label})"), t_mem * 1e6, "us/op");
+
+        // Disk tier: spilled frame, every get reads the spool file.
+        let disk = disk_store();
+        disk.put("k", frame.clone(), 0.0).unwrap();
+        let t_disk = harness::bench(&format!("disk-tier get x{n} ({label})"), 5, || {
+            for _ in 0..n {
+                std::hint::black_box(disk.get("k", 0.0).unwrap());
+            }
+        }) / n as f64;
+        harness::record(&format!("disk get ({label})"), t_disk * 1e6, "us/op");
+
+        // Shared-FS channel (the paper's baseline data plane).
+        let fs = SharedFsChannel::temp().unwrap();
+        fs.put("k", frame.as_slice()).unwrap();
+        let t_fs = harness::bench(&format!("shared-fs get x{n} ({label})"), 5, || {
+            for _ in 0..n {
+                std::hint::black_box(fs.get("k").unwrap());
+            }
+        }) / n as f64;
+        harness::record(&format!("shared-fs get ({label})"), t_fs * 1e6, "us/op");
+
+        let speedup = t_fs / t_mem;
+        println!("  => in-memory tier is {speedup:.1}x faster than shared-FS ({label})");
+        harness::record(&format!("mem vs shared-fs speedup ({label})"), speedup, "x");
+        if size == 1024 * 1024 {
+            mem_get_s = t_mem;
+            fs_get_s = t_fs;
+        }
+    }
+    // Fig. 5 ordering acceptance: in-memory ≥ 3x shared file system.
+    let speedup = fs_get_s / mem_get_s;
+    assert!(
+        speedup >= 3.0,
+        "in-memory tier must be >= 3x the shared-FS path (got {speedup:.1}x)"
+    );
+
+    harness::section("spill throughput (memory -> disk tier)");
+    {
+        let n = 64;
+        let size = 1024 * 1024;
+        let frames: Vec<Buffer> = (0..n).map(|_| frame_of(size)).collect();
+        let mean_s = harness::bench(&format!("put {n} x 1MB through a 8MB watermark"), 3, || {
+            let s = TieredStore::new(
+                EndpointId::new(),
+                TieredConfig {
+                    mem_high_watermark: 8 << 20,
+                    default_ttl_s: 0.0,
+                    spool_dir: None,
+                },
+            )
+            .unwrap();
+            for (i, f) in frames.iter().enumerate() {
+                s.put(&format!("k{i}"), f.clone(), 0.0).unwrap();
+            }
+            std::hint::black_box(s.stats.spills.load(std::sync::atomic::Ordering::Relaxed));
+        });
+        let spilled_mb = (n * size) as f64 / 1e6 - 8.0; // roughly n MB minus resident
+        harness::record("spill throughput", spilled_mb / mean_s, "MB/s");
+        println!("  => ~{:.0} MB/s spill throughput", spilled_mb / mean_s);
+    }
+
+    harness::section("ref dispatch vs inline (8MB input through the task wire format)");
+    {
+        let n = 200;
+        let big = frame_of(8 << 20);
+        let mk_inline = || {
+            Task::new(
+                FunctionId::new(),
+                EndpointId::new(),
+                UserId::new(),
+                None,
+                Payload::Echo,
+                big.clone(),
+            )
+        };
+        let t_inline = harness::bench(&format!("inline to_buffer+from_buffer x{n}"), 5, || {
+            let t = mk_inline();
+            for _ in 0..n {
+                let f = t.to_buffer();
+                std::hint::black_box(Task::from_buffer(&f).unwrap());
+            }
+        }) / n as f64;
+        harness::record("inline frame+parse (8MB)", t_inline * 1e6, "us/op");
+
+        let store = Arc::new(mem_store());
+        let fabric = DataFabric::new(store.clone());
+        let dref = fabric.put("task-input:bench", big.clone(), 0.0).unwrap();
+        let t_ref = harness::bench(&format!("by-ref to_buffer+from_buffer+resolve x{n}"), 5, || {
+            let t = mk_inline().with_input_ref(dref.clone());
+            for _ in 0..n {
+                let f = t.to_buffer();
+                let back = Task::from_buffer(&f).unwrap();
+                let r = back.input_ref.as_ref().unwrap();
+                std::hint::black_box(fabric.resolve(r, 0.0).unwrap());
+            }
+        }) / n as f64;
+        harness::record("ref frame+parse+resolve (8MB)", t_ref * 1e6, "us/op");
+        println!(
+            "  => by-ref dispatch is {:.1}x cheaper per hop than re-framing 8MB inline",
+            t_inline / t_ref
+        );
+        harness::record("ref vs inline speedup (8MB)", t_inline / t_ref, "x");
+    }
+
+    harness::write_json("BENCH_datastore.json");
+}

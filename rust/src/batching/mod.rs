@@ -15,6 +15,7 @@ use std::sync::{Arc, Mutex};
 use crate::common::ids::{EndpointId, FunctionId};
 use crate::common::sync::Notify;
 use crate::common::task::TaskResult;
+use crate::common::time::{Clock, Time};
 use crate::serialize::{Buffer, Value};
 
 /// Manager-side request-size policy (internal batching).
@@ -42,6 +43,34 @@ impl Prefetcher {
     }
 }
 
+/// Flush-latency budget for the adaptive threshold: a batch should
+/// accumulate for at most about this long at the observed completion
+/// rate before the size flush fires.
+const TARGET_WINDOW_S: f64 = 0.02;
+/// EWMA smoothing factor for the completion-gap estimate.
+const EWMA_ALPHA: f64 = 0.2;
+/// Upper bound on the adaptive flush threshold.
+const MAX_ADAPTIVE_BATCH: usize = 1024;
+
+/// The adaptive size threshold: how many results may buffer before a
+/// size flush, given the EWMA of the gap between completions.
+///
+/// * `floor <= 1` disables buffering entirely (the config contract).
+/// * Fast completions (small gap) ⇒ bigger batches, up to
+///   [`MAX_ADAPTIVE_BATCH`]: at high rate the latency cost of waiting
+///   for a large batch is tiny and the channel-traffic saving is big.
+/// * Slow completions ⇒ the threshold decays to `floor` (the static
+///   `result_batch` value), never below it.
+pub fn adaptive_threshold(ewma_gap_s: f64, floor: usize) -> usize {
+    if floor <= 1 {
+        return 1;
+    }
+    if ewma_gap_s <= 0.0 {
+        return MAX_ADAPTIVE_BATCH;
+    }
+    ((TARGET_WINDOW_S / ewma_gap_s) as usize).clamp(floor, MAX_ADAPTIVE_BATCH)
+}
+
 /// Manager-side result buffer (internal batching on the *return* path).
 ///
 /// Workers append completed results here instead of sending each one
@@ -49,7 +78,12 @@ impl Prefetcher {
 /// whole `Vec<TaskResult>` — one channel send and one [`Notify`] signal
 /// per batch — when:
 ///
-/// * `cap` results have accumulated (size flush, the high-load path), or
+/// * the **adaptive threshold** results have accumulated (size flush):
+///   an EWMA of the completion rate sizes batches to roughly
+///   [`TARGET_WINDOW_S`] of accumulation, with the configured
+///   `result_batch` as the floor and [`MAX_ADAPTIVE_BATCH`] as the
+///   ceiling — fast endpoints batch big automatically, slow ones fall
+///   back to the static value; or
 /// * the completing worker observes an idle manager queue (idle flush:
 ///   nothing else is coming soon, so don't sit on the tail), or
 /// * the agent calls [`ResultBuffer::flush`] on its loop tick (straggler
@@ -57,35 +91,78 @@ impl Prefetcher {
 ///
 /// At 10k+ workers this collapses per-result channel traffic and wakeups
 /// into per-batch ones — the return-path mirror of §4.6's task-fetch
-/// batching.
+/// batching — while adapting the latency/traffic trade per endpoint.
 pub struct ResultBuffer {
-    buf: Mutex<Vec<TaskResult>>,
-    cap: usize,
+    inner: Mutex<Inner>,
+    /// The static `result_batch` value: the adaptive threshold's floor.
+    floor: usize,
     tx: Sender<Vec<TaskResult>>,
     wake: Arc<Notify>,
+    /// Completion gaps are measured on the injected clock (the same
+    /// [`Clock`] the rest of the endpoint runs on), so simulated /
+    /// virtual time drives the adaptive threshold deterministically.
+    clock: Arc<dyn Clock>,
+}
+
+struct Inner {
+    buf: Vec<TaskResult>,
+    /// EWMA of the gap between consecutive completions, seconds.
+    ewma_gap_s: f64,
+    last_push: Option<Time>,
 }
 
 impl ResultBuffer {
-    pub fn new(cap: usize, tx: Sender<Vec<TaskResult>>, wake: Arc<Notify>) -> Self {
-        ResultBuffer { buf: Mutex::new(Vec::new()), cap: cap.max(1), tx, wake }
+    pub fn new(
+        floor: usize,
+        tx: Sender<Vec<TaskResult>>,
+        wake: Arc<Notify>,
+        clock: Arc<dyn Clock>,
+    ) -> Self {
+        let floor = floor.max(1);
+        ResultBuffer {
+            inner: Mutex::new(Inner {
+                buf: Vec::new(),
+                // Seed the gap estimate so the threshold *starts at the
+                // floor* (static behaviour) and adapts from there.
+                ewma_gap_s: TARGET_WINDOW_S / floor as f64,
+                last_push: None,
+            }),
+            floor,
+            tx,
+            wake,
+            clock,
+        }
     }
 
-    /// Append one result; flushes when full or when `idle` says no more
-    /// completions are imminent.
+    /// Append one result; flushes when the adaptive threshold is reached
+    /// or when `idle` says no more completions are imminent.
     pub fn push(&self, r: TaskResult, idle: bool) {
-        let mut b = self.buf.lock().expect("result buffer poisoned");
-        b.push(r);
-        if b.len() >= self.cap || idle {
-            let out = std::mem::take(&mut *b);
-            drop(b);
+        let now = self.clock.now();
+        let mut g = self.inner.lock().expect("result buffer poisoned");
+        if let Some(last) = g.last_push {
+            let gap = (now - last).max(0.0);
+            g.ewma_gap_s = EWMA_ALPHA * gap + (1.0 - EWMA_ALPHA) * g.ewma_gap_s;
+        }
+        g.last_push = Some(now);
+        g.buf.push(r);
+        if g.buf.len() >= adaptive_threshold(g.ewma_gap_s, self.floor) || idle {
+            let out = std::mem::take(&mut g.buf);
+            drop(g);
             self.send(out);
         }
+    }
+
+    /// The size threshold the next push will flush at (telemetry/tests).
+    pub fn current_threshold(&self) -> usize {
+        let g = self.inner.lock().expect("result buffer poisoned");
+        adaptive_threshold(g.ewma_gap_s, self.floor)
     }
 
     /// Drain whatever is buffered (agent straggler flush). Returns the
     /// number of results flushed.
     pub fn flush(&self) -> usize {
-        let out = std::mem::take(&mut *self.buf.lock().expect("result buffer poisoned"));
+        let out =
+            std::mem::take(&mut self.inner.lock().expect("result buffer poisoned").buf);
         let n = out.len();
         if n > 0 {
             self.send(out);
@@ -162,24 +239,78 @@ mod tests {
     }
 
     #[test]
-    fn result_buffer_flushes_on_cap() {
+    fn result_buffer_flushes_at_floor_when_completions_are_slow() {
+        // Deterministic: gaps are driven on a virtual clock.
+        let vc = crate::common::time::VirtualClock::new();
         let (tx, rx) = std::sync::mpsc::channel();
         let wake = Arc::new(Notify::new());
-        let rb = ResultBuffer::new(3, tx, wake.clone());
+        let rb = ResultBuffer::new(3, tx, wake.clone(), Arc::new(vc.clone()));
         let seen = wake.epoch();
+        // Gaps longer than the target window keep the threshold at the
+        // static floor — this is the pre-adaptive behaviour.
         rb.push(mk_result(), false);
+        vc.advance_to(0.05);
         rb.push(mk_result(), false);
-        assert!(rx.try_recv().is_err(), "below cap, nothing sent");
+        assert!(rx.try_recv().is_err(), "below the floor, nothing sent");
         assert_eq!(wake.epoch(), seen, "no wakeup before a flush");
+        assert_eq!(rb.current_threshold(), 3, "slow completions pin the floor");
+        vc.advance_to(0.10);
         rb.push(mk_result(), false);
-        assert_eq!(rx.try_recv().unwrap().len(), 3, "cap flush sends the batch");
+        assert_eq!(rx.try_recv().unwrap().len(), 3, "floor flush sends the batch");
         assert_ne!(wake.epoch(), seen, "flush signals the latch");
+    }
+
+    #[test]
+    fn result_buffer_adapts_threshold_up_under_load() {
+        // Deterministic: a zero-gap burst on a virtual clock drives the
+        // EWMA gap down and the threshold up — no size flush at all.
+        let vc = crate::common::time::VirtualClock::new();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let rb = ResultBuffer::new(4, tx, Arc::new(Notify::new()), Arc::new(vc));
+        let n = 200;
+        for _ in 0..n {
+            rb.push(mk_result(), false);
+        }
+        assert!(rb.current_threshold() > 4, "threshold must grow above the floor");
+        let mut sends = 0;
+        let mut results = 0;
+        while let Ok(batch) = rx.try_recv() {
+            sends += 1;
+            results += batch.len();
+        }
+        // Static batching would have sent n/4 = 50 batches.
+        assert_eq!(sends, 0, "zero-gap burst must defer entirely to the straggler flush");
+        // Nothing lost: the remainder drains on the straggler flush.
+        results += rb.flush();
+        assert_eq!(results, n);
+    }
+
+    #[test]
+    fn adaptive_threshold_formula() {
+        // floor 1 = buffering disabled, whatever the rate.
+        assert_eq!(adaptive_threshold(0.0, 1), 1);
+        assert_eq!(adaptive_threshold(1e-9, 1), 1);
+        // Slow completions (gap >> window) sit at the floor.
+        assert_eq!(adaptive_threshold(1.0, 8), 8);
+        assert_eq!(adaptive_threshold(TARGET_WINDOW_S, 8), 8);
+        // Fast completions scale up to the cap (±1 for float rounding).
+        let t = adaptive_threshold(TARGET_WINDOW_S / 100.0, 8);
+        assert!((99..=101).contains(&t), "expected ~100, got {t}");
+        assert_eq!(adaptive_threshold(1e-12, 8), MAX_ADAPTIVE_BATCH);
+        // Degenerate gap (unknown) maxes out rather than thrashing.
+        assert_eq!(adaptive_threshold(0.0, 8), MAX_ADAPTIVE_BATCH);
+        // Never below the floor, never above the cap.
+        for gap in [1e-9, 1e-6, 1e-3, 1.0, 100.0] {
+            let t = adaptive_threshold(gap, 16);
+            assert!((16..=MAX_ADAPTIVE_BATCH).contains(&t));
+        }
     }
 
     #[test]
     fn result_buffer_flushes_on_idle() {
         let (tx, rx) = std::sync::mpsc::channel();
-        let rb = ResultBuffer::new(64, tx, Arc::new(Notify::new()));
+        let clock = Arc::new(crate::common::time::WallClock::new());
+        let rb = ResultBuffer::new(64, tx, Arc::new(Notify::new()), clock);
         rb.push(mk_result(), true);
         assert_eq!(rx.try_recv().unwrap().len(), 1, "idle push flushes immediately");
     }
@@ -187,7 +318,8 @@ mod tests {
     #[test]
     fn result_buffer_straggler_flush() {
         let (tx, rx) = std::sync::mpsc::channel();
-        let rb = ResultBuffer::new(64, tx, Arc::new(Notify::new()));
+        let clock = Arc::new(crate::common::time::WallClock::new());
+        let rb = ResultBuffer::new(64, tx, Arc::new(Notify::new()), clock);
         assert_eq!(rb.flush(), 0, "empty flush is a no-op send-wise");
         assert!(rx.try_recv().is_err());
         rb.push(mk_result(), false);

@@ -8,9 +8,18 @@
 /// Cloud-service configuration (§4.1).
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
-    /// Max serialized input/output size passed through the service
-    /// (paper §5.1: 10 MB).
+    /// Max serialized input size carried *inline* through the service
+    /// queues (paper §5.1: 10 MB). With [`ServiceConfig::ref_dispatch`]
+    /// enabled, larger inputs are offloaded to the data fabric and the
+    /// task carries a [`crate::datastore::DataRef`] instead; disabled,
+    /// they are rejected as in the original system.
     pub max_payload_bytes: usize,
+    /// Dispatch oversized inputs by reference through the tiered
+    /// payload store (§5 data layer) instead of rejecting them.
+    pub ref_dispatch: bool,
+    /// Memory high-watermark of the service-side tiered payload store;
+    /// offloaded inputs beyond this spill to the disk tier.
+    pub store_mem_watermark_bytes: usize,
     /// Forwarder heartbeat period (paper §4.1: 30 s default).
     pub heartbeat_period_s: f64,
     /// Heartbeats missed before an agent is declared lost.
@@ -27,6 +36,8 @@ impl Default for ServiceConfig {
     fn default() -> Self {
         ServiceConfig {
             max_payload_bytes: 10 * 1024 * 1024,
+            ref_dispatch: true,
+            store_mem_watermark_bytes: 256 * 1024 * 1024,
             heartbeat_period_s: 30.0,
             heartbeat_misses_allowed: 2,
             result_ttl_s: 3600.0,
@@ -56,9 +67,10 @@ pub struct EndpointConfig {
     pub prefetch: usize,
     /// Internal batching enabled (§4.6): managers request tasks in bulk.
     pub internal_batching: bool,
-    /// Manager-side result buffering (§4.6 on the return path): workers
-    /// append completed results to a per-manager buffer that flushes to
-    /// the agent once this many accumulate (or sooner — see
+    /// Manager-side result buffering (§4.6 on the return path): the
+    /// *floor* of the adaptive flush threshold. Workers append completed
+    /// results to a per-manager buffer whose size threshold adapts to an
+    /// EWMA of the completion rate, never dropping below this value (see
     /// [`crate::batching::ResultBuffer`]). 1 disables buffering.
     pub result_batch: usize,
 }
@@ -88,6 +100,7 @@ mod tests {
     fn defaults_match_paper() {
         let s = ServiceConfig::default();
         assert_eq!(s.max_payload_bytes, 10 * 1024 * 1024); // §5.1
+        assert!(s.ref_dispatch, "oversized inputs dispatch by reference by default");
         assert_eq!(s.heartbeat_period_s, 30.0); // §4.1
         let e = EndpointConfig::default();
         assert_eq!(e.container_idle_timeout_s, 600.0); // §6.1

@@ -3,6 +3,7 @@
 
 use crate::common::error::{Error, Result};
 use crate::common::ids::{ContainerId, EndpointId, FunctionId, TaskId, UserId};
+use crate::datastore::DataRef;
 use crate::serialize::{Buffer, Value, Wire};
 
 /// Task lifecycle states, mirroring Fig. 2's execution path.
@@ -167,8 +168,15 @@ pub struct Task {
     /// `None` runs in the worker's bare environment.
     pub container: Option<ContainerId>,
     pub payload: Payload,
-    /// Serialized input arguments (facade-packed buffer; §4.5).
+    /// Serialized input arguments (facade-packed buffer; §4.5). Empty
+    /// when the task dispatches by reference.
     pub input: Buffer,
+    /// Pass-by-reference input (§5): set when the input exceeded the
+    /// service data cap and was offloaded to the data fabric. The worker
+    /// resolves it through its endpoint's
+    /// [`crate::datastore::DataFabric`] handle; `input` is an empty
+    /// placeholder frame in that case.
+    pub input_ref: Option<DataRef>,
 }
 
 impl Task {
@@ -180,15 +188,40 @@ impl Task {
         payload: Payload,
         input: Buffer,
     ) -> Self {
-        Task { id: TaskId::new(), function, endpoint, user, container, payload, input }
+        Task {
+            id: TaskId::new(),
+            function,
+            endpoint,
+            user,
+            container,
+            payload,
+            input,
+            input_ref: None,
+        }
+    }
+
+    /// Convert to pass-by-reference dispatch: the task carries `r` in
+    /// its trailer meta instead of inline input bytes.
+    pub fn with_input_ref(mut self, r: DataRef) -> Self {
+        self.input = Buffer::empty();
+        self.input_ref = Some(r);
+        self
+    }
+
+    /// Whether this task's input travels as a [`DataRef`].
+    pub fn dispatches_by_ref(&self) -> bool {
+        self.input_ref.is_some()
     }
 }
 
 impl Task {
     /// Everything except the input payload — the part that gets encoded
     /// into the frame body; the input rides behind it as a raw trailer.
+    /// A pass-by-reference task additionally carries its [`DataRef`]
+    /// under `iref` (absent for inline tasks, so pre-extension frames
+    /// decode unchanged — see `docs/data-fabric.md`).
     fn meta_value(&self) -> Value {
-        Value::map([
+        let mut m = match Value::map([
             ("id", self.id.to_value()),
             ("fn", self.function.to_value()),
             ("ep", self.endpoint.to_value()),
@@ -201,7 +234,14 @@ impl Task {
                 },
             ),
             ("payload", self.payload.to_value()),
-        ])
+        ]) {
+            Value::Map(m) => m,
+            _ => unreachable!("Value::map builds a map"),
+        };
+        if let Some(r) = &self.input_ref {
+            m.insert("iref".into(), r.to_value());
+        }
+        Value::Map(m)
     }
 
     fn from_meta(v: &Value, input: Buffer) -> Result<Self> {
@@ -213,6 +253,10 @@ impl Task {
             Value::Null => None,
             cv => Some(ContainerId::from_value(cv)?),
         };
+        let input_ref = match v.get("iref") {
+            Some(rv) => Some(DataRef::from_value(rv)?),
+            None => None,
+        };
         Ok(Task {
             id: TaskId::from_value(field("id")?)?,
             function: FunctionId::from_value(field("fn")?)?,
@@ -221,6 +265,7 @@ impl Task {
             container,
             payload: Payload::from_value(field("payload")?)?,
             input,
+            input_ref,
         })
     }
 }
@@ -421,6 +466,43 @@ mod tests {
         );
         let back = Task::from_value(&t.to_value()).unwrap();
         assert_eq!(back.container, None);
+    }
+
+    #[test]
+    fn ref_task_wire_roundtrip() {
+        let r = DataRef {
+            owner: EndpointId::new(),
+            epoch: 3,
+            key: "task-input:abc".into(),
+            size: 12345,
+            checksum: 0xDEAD_BEEF,
+        };
+        let t = Task::new(
+            FunctionId::new(),
+            EndpointId::new(),
+            UserId::new(),
+            None,
+            Payload::Echo,
+            crate::serialize::pack(&Value::Int(1), 0).unwrap(),
+        )
+        .with_input_ref(r.clone());
+        assert!(t.dispatches_by_ref());
+        assert_eq!(t.input, Buffer::empty(), "by-ref task carries a placeholder input");
+        // Both framings carry the ref.
+        let via_buffer = Task::from_buffer(&t.to_buffer()).unwrap();
+        assert_eq!(via_buffer.input_ref, Some(r.clone()));
+        let via_value = Task::from_value(&t.to_value()).unwrap();
+        assert_eq!(via_value.input_ref, Some(r));
+        // Inline tasks stay ref-free through the wire.
+        let plain = Task::new(
+            FunctionId::new(),
+            EndpointId::new(),
+            UserId::new(),
+            None,
+            Payload::Noop,
+            Buffer::empty(),
+        );
+        assert_eq!(Task::from_buffer(&plain.to_buffer()).unwrap().input_ref, None);
     }
 
     #[test]

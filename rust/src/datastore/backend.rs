@@ -1,0 +1,193 @@
+//! Frame-holder backends behind the tiered store.
+//!
+//! A backend stores packed frames (shared [`Buffer`] handles) under
+//! string keys and hands them back verbatim — no backend ever decodes or
+//! re-encodes a frame. The memory tier keeps refcounted handles in the
+//! existing lock-striped [`KvStore`] shards (put/get are O(1) in payload
+//! size); the disk tier writes the raw wire bytes to real files under a
+//! spool directory and reloads them with a single read.
+
+use std::path::{Path, PathBuf};
+
+use crate::common::error::Result;
+use crate::serialize::Buffer;
+use crate::store::KvStore;
+
+/// One storage tier: holds frames by key, byte-for-byte.
+pub trait StoreBackend: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Store a frame under `key` (overwrites).
+    fn put(&self, key: &str, frame: &Buffer) -> Result<()>;
+    /// Fetch the frame under `key`, or `None` when absent.
+    fn get(&self, key: &str) -> Result<Option<Buffer>>;
+    /// Drop the frame under `key`; returns whether it existed.
+    fn remove(&self, key: &str) -> Result<bool>;
+}
+
+/// In-memory tier over the sharded [`KvStore`]: the store keeps another
+/// handle on the frame's allocation, so `put` + `get` round-trips the
+/// *same* allocation (pointer-pinned in `tests/data_fabric.rs`).
+#[derive(Clone, Default)]
+pub struct MemoryBackend {
+    kv: KvStore,
+}
+
+impl MemoryBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl StoreBackend for MemoryBackend {
+    fn name(&self) -> &'static str {
+        "memory"
+    }
+
+    fn put(&self, key: &str, frame: &Buffer) -> Result<()> {
+        self.kv.set(key, frame.clone());
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<Option<Buffer>> {
+        Ok(self.kv.get(key))
+    }
+
+    fn remove(&self, key: &str) -> Result<bool> {
+        Ok(self.kv.del(key))
+    }
+}
+
+/// Disk tier: one file per key under a spool directory (the Lustre/GPFS
+/// stand-in, but holding *wire frames*, not decoded values). Spill is
+/// `fs::write` of the frame bytes; reload is `fs::read` wrapped into a
+/// fresh shared allocation — zero decode/re-encode either way.
+pub struct DiskBackend {
+    root: PathBuf,
+    /// Temp-dir spools are removed on drop; explicit spool dirs are not.
+    owned: bool,
+}
+
+impl DiskBackend {
+    /// Spool under an explicit directory (created if missing; kept on
+    /// drop).
+    pub fn new(root: impl Into<PathBuf>) -> Result<Self> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)?;
+        Ok(DiskBackend { root, owned: false })
+    }
+
+    /// Spool under a unique temp directory (removed on drop).
+    pub fn temp() -> Result<Self> {
+        let root = std::env::temp_dir().join(format!("funcx-datastore-{}", crate::Uuid::new()));
+        std::fs::create_dir_all(&root)?;
+        Ok(DiskBackend { root, owned: true })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Sanitized, collision-proofed file name: keys may contain
+    /// separators from namespacing, and two keys must never map to the
+    /// same file, so the key's own hash is appended.
+    fn path_for(&self, key: &str) -> PathBuf {
+        let safe: String = key
+            .chars()
+            .take(64)
+            .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+            .collect();
+        self.root
+            .join(format!("{safe}.{:016x}", super::dataref::checksum(key.as_bytes())))
+    }
+}
+
+impl StoreBackend for DiskBackend {
+    fn name(&self) -> &'static str {
+        "disk"
+    }
+
+    fn put(&self, key: &str, frame: &Buffer) -> Result<()> {
+        Ok(std::fs::write(self.path_for(key), frame.as_slice())?)
+    }
+
+    fn get(&self, key: &str) -> Result<Option<Buffer>> {
+        match std::fs::read(self.path_for(key)) {
+            Ok(v) => Ok(Some(Buffer::from_vec(v))),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    fn remove(&self, key: &str) -> Result<bool> {
+        match std::fs::remove_file(self.path_for(key)) {
+            Ok(()) => Ok(true),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
+            Err(e) => Err(e.into()),
+        }
+    }
+}
+
+impl Drop for DiskBackend {
+    fn drop(&mut self) {
+        if self.owned {
+            let _ = std::fs::remove_dir_all(&self.root);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exercise(b: &dyn StoreBackend) {
+        let frame = Buffer::from_vec(vec![0xAB; 512]);
+        assert!(b.get("k").unwrap().is_none());
+        b.put("k", &frame).unwrap();
+        assert_eq!(b.get("k").unwrap().unwrap().as_slice(), frame.as_slice());
+        b.put("k", &Buffer::from_vec(vec![1])).unwrap();
+        assert_eq!(b.get("k").unwrap().unwrap().as_slice(), [1]);
+        assert!(b.remove("k").unwrap());
+        assert!(!b.remove("k").unwrap());
+        assert!(b.get("k").unwrap().is_none());
+    }
+
+    #[test]
+    fn memory_contract() {
+        exercise(&MemoryBackend::new());
+    }
+
+    #[test]
+    fn disk_contract() {
+        exercise(&DiskBackend::temp().unwrap());
+    }
+
+    #[test]
+    fn memory_get_shares_allocation() {
+        let b = MemoryBackend::new();
+        let frame = Buffer::from_vec(vec![7; 4096]);
+        b.put("k", &frame).unwrap();
+        assert!(b.get("k").unwrap().unwrap().same_allocation(&frame));
+    }
+
+    #[test]
+    fn disk_keys_do_not_collide_after_sanitizing() {
+        let b = DiskBackend::temp().unwrap();
+        // Both sanitize to "a_b" — the appended key hash keeps them apart.
+        b.put("a/b", &Buffer::from_vec(vec![1])).unwrap();
+        b.put("a:b", &Buffer::from_vec(vec![2])).unwrap();
+        assert_eq!(b.get("a/b").unwrap().unwrap().as_slice(), [1]);
+        assert_eq!(b.get("a:b").unwrap().unwrap().as_slice(), [2]);
+    }
+
+    #[test]
+    fn temp_spool_removed_on_drop() {
+        let root;
+        {
+            let b = DiskBackend::temp().unwrap();
+            root = b.root().to_path_buf();
+            b.put("k", &Buffer::from_vec(vec![1])).unwrap();
+            assert!(root.exists());
+        }
+        assert!(!root.exists());
+    }
+}

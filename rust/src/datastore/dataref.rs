@@ -1,0 +1,132 @@
+//! The pass-by-reference handle: what a task carries instead of inline
+//! payload bytes once the input exceeds the service data cap (§5.1).
+//!
+//! A [`DataRef`] names a frame in some endpoint's [`super::TieredStore`]:
+//! which endpoint owns it, which store generation (epoch) it was written
+//! under, the key, and a size + checksum pair so the resolver can verify
+//! the fetched frame bit-for-bit without decoding it.
+
+use crate::common::error::{Error, Result};
+use crate::common::ids::{EndpointId, Uuid};
+use crate::serialize::{Value, Wire};
+
+/// The owner id used by the cloud service's own payload store (tasks
+/// whose oversized inputs were offloaded at submit; resolvable by any
+/// endpoint fabric peered with the service store).
+pub const SERVICE_OWNER: EndpointId = EndpointId(Uuid::NIL);
+
+/// FNV-1a over a byte slice — the frame checksum carried in every
+/// [`DataRef`] (cheap, dependency-free; collisions are a non-goal, the
+/// check guards against truncation/corruption, not adversaries).
+pub fn checksum(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h = (h ^ u64::from(*b)).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A compact reference to a frame held in a data-fabric store.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DataRef {
+    /// Endpoint whose store holds the frame ([`SERVICE_OWNER`] for the
+    /// cloud service's store).
+    pub owner: EndpointId,
+    /// Store generation the frame was written under; a restarted or
+    /// recreated store has a fresh epoch, so stale refs resolve to
+    /// [`Error::NotFound`] instead of wrong data.
+    pub epoch: u64,
+    pub key: String,
+    /// Exact frame length in bytes.
+    pub size: u64,
+    /// [`checksum`] of the frame bytes.
+    pub checksum: u64,
+}
+
+impl DataRef {
+    /// Verify a fetched frame against the size/checksum pair.
+    pub fn verify(&self, frame: &[u8]) -> Result<()> {
+        if frame.len() as u64 != self.size {
+            return Err(Error::Data(format!(
+                "ref {}: frame is {} bytes, expected {}",
+                self.key,
+                frame.len(),
+                self.size
+            )));
+        }
+        if checksum(frame) != self.checksum {
+            return Err(Error::Data(format!("ref {}: checksum mismatch", self.key)));
+        }
+        Ok(())
+    }
+}
+
+impl Wire for DataRef {
+    fn to_value(&self) -> Value {
+        Value::map([
+            ("owner", self.owner.to_value()),
+            ("epoch", self.epoch.to_value()),
+            ("key", Value::Str(self.key.clone())),
+            ("size", self.size.to_value()),
+            ("sum", self.checksum.to_value()),
+        ])
+    }
+
+    fn from_value(v: &Value) -> Result<Self> {
+        let field = |name: &str| {
+            v.get(name)
+                .ok_or_else(|| Error::Serialization(format!("dataref: missing {name}")))
+        };
+        Ok(DataRef {
+            owner: EndpointId::from_value(field("owner")?)?,
+            epoch: u64::from_value(field("epoch")?)?,
+            key: String::from_value(field("key")?)?,
+            size: u64::from_value(field("size")?)?,
+            checksum: u64::from_value(field("sum")?)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_ref(bytes: &[u8]) -> DataRef {
+        DataRef {
+            owner: EndpointId::new(),
+            epoch: 7,
+            key: "k/part-0".into(),
+            size: bytes.len() as u64,
+            checksum: checksum(bytes),
+        }
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let r = mk_ref(&[1, 2, 3]);
+        let back = DataRef::from_bytes(&r.to_bytes()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn verify_accepts_exact_frame() {
+        let data = vec![9u8; 4096];
+        assert!(mk_ref(&data).verify(&data).is_ok());
+    }
+
+    #[test]
+    fn verify_rejects_truncation_and_corruption() {
+        let data = vec![9u8; 4096];
+        let r = mk_ref(&data);
+        assert!(r.verify(&data[..4095]).is_err());
+        let mut flipped = data.clone();
+        flipped[100] ^= 0xFF;
+        assert!(r.verify(&flipped).is_err());
+    }
+
+    #[test]
+    fn checksum_distinguishes_content() {
+        assert_ne!(checksum(b"abc"), checksum(b"abd"));
+        assert_eq!(checksum(b""), 0xcbf2_9ce4_8422_2325);
+    }
+}

@@ -1,0 +1,464 @@
+//! The per-endpoint data-fabric handle: where [`DataRef`]s get resolved.
+//!
+//! Resolution walks a fetch fallback ladder (cheapest first):
+//!
+//! 1. **Local store** — the ref is owned by this endpoint's
+//!    [`TieredStore`] (memory or disk tier).
+//! 2. **Resolve cache** — a hit-counting cache of frames previously
+//!    fetched from other endpoints.
+//! 3. **Peer forward** — the owning endpoint's store is reachable
+//!    directly; the frame moves endpoint-to-endpoint as raw wire bytes
+//!    (in-process: another handle on the same allocation — no decode,
+//!    no re-encode).
+//! 4. **Globus model** — refs at or above the wide-area threshold are
+//!    routed through the [`TransferService`] cost model (§5.1): a
+//!    third-party transfer is submitted between the endpoints' storage
+//!    endpoints and its modeled duration is observable via
+//!    [`DataFabric::plan`] / the transfer service itself.
+//!
+//! An unreachable owner, a stale epoch, or an evicted/expired key
+//! surfaces [`Error::NotFound`] — never a panic — so a re-dispatched
+//! task whose input aged out fails cleanly at the worker.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::common::error::{Error, Result};
+use crate::common::ids::{EndpointId, Uuid};
+use crate::common::time::Time;
+use crate::datastore::dataref::DataRef;
+use crate::datastore::tiered::{Tier, TieredStore};
+use crate::serialize::Buffer;
+use crate::transfer::{GlobusFile, TransferService};
+
+/// Monotone fabric counters (tests/telemetry).
+#[derive(Default)]
+pub struct FabricStats {
+    pub local_hits: AtomicU64,
+    pub cache_hits: AtomicU64,
+    /// Frames fetched endpoint-to-endpoint as raw wire bytes.
+    pub frames_forwarded: AtomicU64,
+    pub bytes_forwarded: AtomicU64,
+    /// Fetches routed through the Globus transfer model.
+    pub globus_transfers: AtomicU64,
+    pub misses: AtomicU64,
+}
+
+/// How a given ref would be (or was) fetched — the ladder decision.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FetchPlan {
+    LocalMemory,
+    LocalDisk,
+    Cache,
+    /// Direct endpoint-to-endpoint frame forward.
+    PeerForward,
+    /// Wide-area movement through the Globus model, with its estimated
+    /// duration in seconds.
+    Globus { est_s: f64 },
+    Unavailable,
+}
+
+struct CacheEntry {
+    frame: Buffer,
+    checksum: u64,
+    hits: u64,
+    /// Monotone access stamp (LRU eviction order) — newest insert/hit
+    /// wins, so fresh entries are never the immediate victims and cold
+    /// old frames cannot pin their allocations forever.
+    last_used: u64,
+}
+
+struct WideArea {
+    transfer: TransferService,
+    /// funcX endpoint → Globus storage endpoint fronting its spool.
+    storage_of: HashMap<EndpointId, Uuid>,
+    /// Refs at or above this size go through the Globus model.
+    threshold_bytes: u64,
+}
+
+/// Byte budget for the resolve cache. Bounded by *bytes*, not entries:
+/// frames are shared handles, and owners reclaim their copies on task
+/// completion, so a cached frame may be the last live reference to a
+/// large allocation — an entry-count cap could pin gigabytes.
+const CACHE_MAX_BYTES: usize = 64 * 1024 * 1024;
+
+struct CacheMap {
+    entries: HashMap<String, CacheEntry>,
+    /// Total frame bytes currently cached.
+    bytes: usize,
+}
+
+/// The per-endpoint resolver handle. Share via `Arc`; workers resolve
+/// through it, the service submits through it.
+pub struct DataFabric {
+    local: Arc<TieredStore>,
+    cache: Mutex<CacheMap>,
+    /// Monotone stamp source for the cache's LRU order.
+    cache_seq: AtomicU64,
+    peers: Mutex<HashMap<EndpointId, Arc<TieredStore>>>,
+    wide_area: Mutex<Option<WideArea>>,
+    pub stats: FabricStats,
+}
+
+fn cache_key(r: &DataRef) -> String {
+    format!("{}:{}:{}", r.owner, r.epoch, r.key)
+}
+
+impl DataFabric {
+    pub fn new(local: Arc<TieredStore>) -> Self {
+        DataFabric {
+            local,
+            cache: Mutex::new(CacheMap { entries: HashMap::new(), bytes: 0 }),
+            cache_seq: AtomicU64::new(0),
+            peers: Mutex::new(HashMap::new()),
+            wide_area: Mutex::new(None),
+            stats: FabricStats::default(),
+        }
+    }
+
+    /// This endpoint's own tiered store.
+    pub fn local(&self) -> &Arc<TieredStore> {
+        &self.local
+    }
+
+    /// Make a peer endpoint's store directly reachable (the
+    /// endpoint-to-endpoint forwarding path).
+    pub fn connect_peer(&self, owner: EndpointId, store: Arc<TieredStore>) {
+        self.peers.lock().expect("fabric peers poisoned").insert(owner, store);
+    }
+
+    /// Enable the wide-area (Globus) fallback for refs at or above
+    /// `threshold_bytes`.
+    pub fn with_wide_area(&self, transfer: TransferService, threshold_bytes: u64) {
+        *self.wide_area.lock().expect("fabric wide-area poisoned") =
+            Some(WideArea { transfer, storage_of: HashMap::new(), threshold_bytes });
+    }
+
+    /// Map a funcX endpoint to the Globus storage endpoint fronting its
+    /// spool (required for the wide-area fallback on that endpoint).
+    pub fn map_storage(&self, endpoint: EndpointId, storage: Uuid) {
+        if let Some(wa) = self.wide_area.lock().expect("fabric wide-area poisoned").as_mut() {
+            wa.storage_of.insert(endpoint, storage);
+        }
+    }
+
+    /// Store a frame in the local store; returns the ref to dispatch.
+    pub fn put(&self, key: &str, frame: Buffer, now: Time) -> Result<DataRef> {
+        self.local.put(key, frame, now)
+    }
+
+    /// Resolve a ref down the fetch ladder (see module docs).
+    pub fn resolve(&self, r: &DataRef, now: Time) -> Result<Buffer> {
+        // 1. Local store.
+        if r.owner == self.local.owner() && r.epoch == self.local.epoch() {
+            let out = self.local.resolve(r, now);
+            match &out {
+                Ok(_) => {
+                    self.stats.local_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(_) => {
+                    self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            return out;
+        }
+        // 2. Hit-counting resolve cache.
+        if let Some(frame) = self.cache_lookup(r) {
+            self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(frame);
+        }
+        // 3. Peer forward (raw frame handle) / 4. Globus model.
+        let peer = self.peers.lock().expect("fabric peers poisoned").get(&r.owner).cloned();
+        if let Some(peer) = peer {
+            let frame = match peer.resolve(r, now) {
+                Ok(f) => f,
+                Err(e) => {
+                    self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                    return Err(e);
+                }
+            };
+            if self.submit_globus(r, now).is_some() {
+                self.stats.globus_transfers.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.stats.frames_forwarded.fetch_add(1, Ordering::Relaxed);
+                self.stats.bytes_forwarded.fetch_add(r.size, Ordering::Relaxed);
+            }
+            self.cache_insert(r, frame.clone());
+            return Ok(frame);
+        }
+        self.stats.misses.fetch_add(1, Ordering::Relaxed);
+        Err(Error::NotFound(format!(
+            "ref {}: owner {} unreachable from this endpoint",
+            r.key, r.owner
+        )))
+    }
+
+    /// The ladder decision for `r` without fetching anything. TTL-aware:
+    /// an expired local entry reports `Unavailable`, matching what
+    /// [`DataFabric::resolve`] at the same `now` would return.
+    pub fn plan(&self, r: &DataRef, now: Time) -> FetchPlan {
+        if r.owner == self.local.owner() && r.epoch == self.local.epoch() {
+            return match self.local.live_tier(&r.key, now) {
+                Some(Tier::Memory) => FetchPlan::LocalMemory,
+                Some(Tier::Disk) => FetchPlan::LocalDisk,
+                None => FetchPlan::Unavailable,
+            };
+        }
+        if self
+            .cache
+            .lock()
+            .expect("fabric cache poisoned")
+            .entries
+            .get(&cache_key(r))
+            .is_some_and(|e| e.checksum == r.checksum)
+        {
+            return FetchPlan::Cache;
+        }
+        if self.peers.lock().expect("fabric peers poisoned").contains_key(&r.owner) {
+            if let Some(est_s) = self.estimate_globus(r) {
+                return FetchPlan::Globus { est_s };
+            }
+            return FetchPlan::PeerForward;
+        }
+        FetchPlan::Unavailable
+    }
+
+    /// How often the cached copy of `r` has been consulted.
+    pub fn cache_hits_of(&self, r: &DataRef) -> u64 {
+        self.cache
+            .lock()
+            .expect("fabric cache poisoned")
+            .entries
+            .get(&cache_key(r))
+            .map(|e| e.hits)
+            .unwrap_or(0)
+    }
+
+    /// Estimated wide-area duration for `r`, when the ladder would route
+    /// it through Globus.
+    fn estimate_globus(&self, r: &DataRef) -> Option<f64> {
+        let g = self.wide_area.lock().expect("fabric wide-area poisoned");
+        let wa = g.as_ref()?;
+        if r.size < wa.threshold_bytes {
+            return None;
+        }
+        let src = *wa.storage_of.get(&r.owner)?;
+        let dst = *wa.storage_of.get(&self.local.owner())?;
+        let file =
+            GlobusFile { endpoint: src, path: format!("/spool/{}", r.key), size_bytes: r.size };
+        wa.transfer.estimate_file(&file, dst).ok()
+    }
+
+    /// Submit the modeled third-party transfer for a GlobusFile-sized
+    /// ref; returns its completion time when the fallback applies.
+    fn submit_globus(&self, r: &DataRef, now: Time) -> Option<Time> {
+        let g = self.wide_area.lock().expect("fabric wide-area poisoned");
+        let wa = g.as_ref()?;
+        if r.size < wa.threshold_bytes {
+            return None;
+        }
+        let src = *wa.storage_of.get(&r.owner)?;
+        let dst = *wa.storage_of.get(&self.local.owner())?;
+        let file =
+            GlobusFile { endpoint: src, path: format!("/spool/{}", r.key), size_bytes: r.size };
+        let id = wa.transfer.submit(&file, dst, &format!("/spool/{}", r.key), now).ok()?;
+        wa.transfer.completion_time(id).ok()
+    }
+
+    /// Bytes currently held by the resolve cache (telemetry/tests).
+    pub fn cache_bytes(&self) -> usize {
+        self.cache.lock().expect("fabric cache poisoned").bytes
+    }
+
+    fn cache_lookup(&self, r: &DataRef) -> Option<Buffer> {
+        let mut c = self.cache.lock().expect("fabric cache poisoned");
+        let e = c.entries.get_mut(&cache_key(r))?;
+        if e.checksum != r.checksum {
+            return None;
+        }
+        e.hits += 1;
+        e.last_used = self.cache_seq.fetch_add(1, Ordering::Relaxed);
+        Some(e.frame.clone())
+    }
+
+    fn cache_insert(&self, r: &DataRef, frame: Buffer) {
+        let size = frame.len();
+        let mut c = self.cache.lock().expect("fabric cache poisoned");
+        // Replace-in-place re-accounts the old size; no victim needed
+        // for a same-key overwrite that doesn't grow the cache.
+        if let Some(old) = c.entries.insert(
+            cache_key(r),
+            CacheEntry {
+                frame,
+                checksum: r.checksum,
+                hits: 0,
+                last_used: self.cache_seq.fetch_add(1, Ordering::Relaxed),
+            },
+        ) {
+            c.bytes -= old.frame.len();
+        }
+        c.bytes += size;
+        // Evict least-recently-used entries (NOT fewest-hits: that
+        // would make every fresh insert the next victim while old
+        // once-hit frames pinned their allocations forever) until the
+        // byte budget holds. A single frame larger than the budget is
+        // simply not retained.
+        while c.bytes > CACHE_MAX_BYTES && !c.entries.is_empty() {
+            let victim = c
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            let Some(k) = victim else { break };
+            if let Some(e) = c.entries.remove(&k) {
+                c.bytes -= e.frame.len();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datastore::tiered::TieredConfig;
+    use std::sync::atomic::Ordering::Relaxed;
+
+    fn store() -> Arc<TieredStore> {
+        Arc::new(
+            TieredStore::new(
+                EndpointId::new(),
+                TieredConfig { mem_high_watermark: 1 << 20, default_ttl_s: 0.0, spool_dir: None },
+            )
+            .unwrap(),
+        )
+    }
+
+    fn frame(len: usize) -> Buffer {
+        Buffer::from_vec(vec![0x42; len])
+    }
+
+    #[test]
+    fn local_resolution() {
+        let s = store();
+        let fab = DataFabric::new(s.clone());
+        let r = fab.put("k", frame(256), 0.0).unwrap();
+        assert_eq!(fab.plan(&r, 0.0), FetchPlan::LocalMemory);
+        let got = fab.resolve(&r, 0.0).unwrap();
+        assert_eq!(got.len(), 256);
+        assert_eq!(fab.stats.local_hits.load(Relaxed), 1);
+    }
+
+    #[test]
+    fn peer_forward_shares_the_frame_and_caches() {
+        let a = store();
+        let b = store();
+        let fab = DataFabric::new(b);
+        fab.connect_peer(a.owner(), a.clone());
+        let f = frame(1024);
+        let r = a.put("k", f.clone(), 0.0).unwrap();
+        assert_eq!(fab.plan(&r, 0.0), FetchPlan::PeerForward);
+        let got = fab.resolve(&r, 0.0).unwrap();
+        assert!(got.same_allocation(&f), "peer forward must hand over the raw frame");
+        assert_eq!(fab.stats.frames_forwarded.load(Relaxed), 1);
+        assert_eq!(fab.stats.bytes_forwarded.load(Relaxed), 1024);
+        // Second resolve: cache hit, counted on the entry.
+        assert_eq!(fab.plan(&r, 0.0), FetchPlan::Cache);
+        let again = fab.resolve(&r, 0.0).unwrap();
+        assert!(again.same_allocation(&f));
+        assert_eq!(fab.stats.cache_hits.load(Relaxed), 1);
+        assert_eq!(fab.cache_hits_of(&r), 1);
+        assert_eq!(fab.stats.frames_forwarded.load(Relaxed), 1, "no re-fetch");
+    }
+
+    #[test]
+    fn unreachable_owner_is_not_found() {
+        let fab = DataFabric::new(store());
+        let r = DataRef {
+            owner: EndpointId::new(),
+            epoch: 1,
+            key: "k".into(),
+            size: 1,
+            checksum: 0,
+        };
+        assert!(matches!(fab.resolve(&r, 0.0), Err(Error::NotFound(_))));
+        assert_eq!(fab.plan(&r, 0.0), FetchPlan::Unavailable);
+        assert_eq!(fab.stats.misses.load(Relaxed), 1);
+    }
+
+    #[test]
+    fn globus_fallback_for_large_refs() {
+        let a = store();
+        let b = store();
+        let fab = DataFabric::new(b.clone());
+        fab.connect_peer(a.owner(), a.clone());
+        let ts = TransferService::new();
+        let ga = ts.register_endpoint("a#dtn", 1.25e9, 2.0);
+        let gb = ts.register_endpoint("b#dtn", 1.25e9, 2.0);
+        fab.with_wide_area(ts.clone(), 1 << 20);
+        fab.map_storage(a.owner(), ga);
+        fab.map_storage(b.owner(), gb);
+
+        // Below threshold: direct forward, no transfer submitted.
+        let small = a.put("small", frame(512), 0.0).unwrap();
+        assert_eq!(fab.plan(&small, 0.0), FetchPlan::PeerForward);
+        fab.resolve(&small, 0.0).unwrap();
+        assert_eq!(fab.stats.globus_transfers.load(Relaxed), 0);
+
+        // At/above threshold: the Globus model carries it.
+        let big = a.put("big", frame(2 << 20), 0.0).unwrap();
+        match fab.plan(&big, 0.0) {
+            FetchPlan::Globus { est_s } => assert!(est_s > 2.0, "setup + wire time, got {est_s}"),
+            other => panic!("expected Globus plan, got {other:?}"),
+        }
+        let got = fab.resolve(&big, 0.0).unwrap();
+        assert_eq!(got.len(), 2 << 20);
+        assert_eq!(fab.stats.globus_transfers.load(Relaxed), 1);
+        assert!(ts.in_flight_bytes(ga, gb, 0.5) >= (2 << 20) as u64);
+    }
+
+    #[test]
+    fn cache_is_byte_bounded_and_evicts_lru() {
+        let a = Arc::new(
+            TieredStore::new(
+                EndpointId::new(),
+                TieredConfig {
+                    mem_high_watermark: 1 << 30,
+                    default_ttl_s: 0.0,
+                    spool_dir: None,
+                },
+            )
+            .unwrap(),
+        );
+        let fab = DataFabric::new(store());
+        fab.connect_peer(a.owner(), a.clone());
+        // Fill well past the byte budget with 1 MB frames, keeping the
+        // first entry hot throughout.
+        let mb = 1 << 20;
+        let n = CACHE_MAX_BYTES / mb + 16;
+        let hot = a.put("hot", frame(mb), 0.0).unwrap();
+        fab.resolve(&hot, 0.0).unwrap();
+        for i in 0..n {
+            let r = a.put(&format!("k{i}"), frame(mb), 0.0).unwrap();
+            fab.resolve(&r, 0.0).unwrap();
+            fab.resolve(&hot, 0.0).unwrap(); // refresh the hot entry
+        }
+        assert!(
+            fab.cache_bytes() <= CACHE_MAX_BYTES,
+            "cache holds {} bytes over the {CACHE_MAX_BYTES} budget",
+            fab.cache_bytes()
+        );
+        // The hot entry survived the churn; resolving it again is still
+        // a cache hit, not a re-fetch.
+        let forwarded = fab.stats.frames_forwarded.load(Relaxed);
+        fab.resolve(&hot, 0.0).unwrap();
+        assert_eq!(fab.stats.frames_forwarded.load(Relaxed), forwarded);
+        assert!(fab.cache_hits_of(&hot) > 0);
+        // Overwriting a cached key in place re-accounts instead of
+        // evicting an innocent sibling.
+        let before = fab.cache_bytes();
+        let hot2 = a.put("hot", frame(mb / 2), 0.0).unwrap();
+        fab.resolve(&hot2, 0.0).unwrap(); // checksum miss -> re-fetch + replace
+        assert!(fab.cache_bytes() <= before, "in-place replace must not grow the cache");
+    }
+}

@@ -1,0 +1,36 @@
+//! §5 — the data fabric: a tiered payload store with pass-by-reference
+//! dispatch and cross-endpoint frame fetch.
+//!
+//! funcX routes *references* between endpoints rather than the data
+//! itself: intra-endpoint intermediate data lives in an in-memory store
+//! (up to 3x faster than the shared file system, Fig. 5 / §5.2), while
+//! wide-area movement goes through Globus (§5.1). This module is that
+//! data layer as a real subsystem:
+//!
+//! * [`StoreBackend`] — the frame-holder contract, with two
+//!   implementations that hold shared [`crate::serialize::Buffer`]
+//!   frames: [`MemoryBackend`] (over the existing lock-striped
+//!   [`crate::store::KvStore`] shards) and [`DiskBackend`] (real files
+//!   under a spool directory).
+//! * [`TieredStore`] — composes the two behind a configurable memory
+//!   high-watermark with LRU spill to disk, promotion back on access,
+//!   and TTL expiry. Frames spill and reload as raw wire bytes — never
+//!   decoded or re-encoded on the way through a tier.
+//! * [`DataRef`] — the compact (owner, epoch, key, size, checksum)
+//!   reference that rides in the task trailer wire format instead of
+//!   inline payload bytes once an input exceeds
+//!   [`crate::common::config::ServiceConfig::max_payload_bytes`].
+//! * [`DataFabric`] — the per-endpoint resolver handle: local store →
+//!   hit-counting cache → endpoint-to-endpoint raw-frame forward →
+//!   Globus transfer model, in that order (the fetch fallback ladder;
+//!   see `docs/data-fabric.md`).
+
+mod backend;
+mod dataref;
+mod fabric;
+mod tiered;
+
+pub use backend::{DiskBackend, MemoryBackend, StoreBackend};
+pub use dataref::{checksum, DataRef, SERVICE_OWNER};
+pub use fabric::{DataFabric, FabricStats, FetchPlan};
+pub use tiered::{Tier, TierStats, TieredConfig, TieredStore};

@@ -1,0 +1,530 @@
+//! The tiered payload store: memory tier + disk tier behind one index.
+//!
+//! Frames land in the memory tier; once the tier's resident bytes exceed
+//! the configured high-watermark, least-recently-used frames spill to
+//! the disk tier as raw wire bytes. A disk-tier hit promotes the frame
+//! back to memory when it fits without displacing residents (promotion
+//! never cascades into spills, so a frame larger than the remaining
+//! headroom simply keeps serving from disk). Every entry carries an
+//! optional TTL; expired entries resolve to [`Error::NotFound`] and are
+//! removed lazily on access or eagerly via
+//! [`TieredStore::evict_expired`].
+//!
+//! The store never decodes a frame: spill writes the frame's bytes,
+//! reload wraps the read bytes in a fresh shared allocation, and a
+//! memory-tier hit returns another handle on the *original* allocation
+//! (pointer-pinned in `tests/data_fabric.rs`).
+//!
+//! # Clock contract
+//!
+//! Like [`crate::store::KvStore`]'s TTL ops, every method takes the
+//! caller's clock reading so the simulator can drive expiry under
+//! virtual time. All parties touching one store — the owner writing
+//! frames and any fabric resolving against it — MUST share a clock
+//! (e.g. pass the service's clock to `EndpointBuilder::clock`): a
+//! reader whose `now` comes from a different epoch can expire entries
+//! early or keep them alive late (see ROADMAP: store-owned clocks).
+//!
+//! # Locking
+//!
+//! One index mutex guards both tiers, so disk-tier reads/spills
+//! serialize concurrent store ops. That is deliberate for now —
+//! correctness first; the memory tier dominates the hot path — and
+//! lifting I/O out of the lock is a ROADMAP item.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::common::error::{Error, Result};
+use crate::common::ids::EndpointId;
+use crate::common::time::Time;
+use crate::datastore::backend::{DiskBackend, MemoryBackend, StoreBackend};
+use crate::datastore::dataref::{checksum, DataRef};
+use crate::serialize::Buffer;
+
+/// Which tier currently holds a frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    Memory,
+    Disk,
+}
+
+/// Tiered-store tuning knobs.
+#[derive(Clone, Debug)]
+pub struct TieredConfig {
+    /// Bytes the memory tier may hold before LRU frames spill to disk.
+    pub mem_high_watermark: usize,
+    /// Default TTL applied by [`TieredStore::put`]; `<= 0` disables
+    /// expiry.
+    pub default_ttl_s: f64,
+    /// Spool directory for the disk tier (`None` = unique temp dir,
+    /// removed when the store drops).
+    pub spool_dir: Option<PathBuf>,
+}
+
+impl Default for TieredConfig {
+    fn default() -> Self {
+        TieredConfig {
+            mem_high_watermark: 64 * 1024 * 1024,
+            default_ttl_s: 3600.0,
+            spool_dir: None,
+        }
+    }
+}
+
+/// Monotone counters exposed for tests/benches/telemetry.
+#[derive(Default)]
+pub struct TierStats {
+    pub puts: AtomicU64,
+    pub mem_hits: AtomicU64,
+    pub disk_hits: AtomicU64,
+    pub spills: AtomicU64,
+    pub spilled_bytes: AtomicU64,
+    pub promotes: AtomicU64,
+    pub expirations: AtomicU64,
+}
+
+struct Entry {
+    size: usize,
+    checksum: u64,
+    tier: Tier,
+    /// Monotone access sequence number (LRU order).
+    last_access: u64,
+    expires_at: Option<Time>,
+}
+
+struct Index {
+    entries: HashMap<String, Entry>,
+    seq: u64,
+    /// Bytes currently resident in the memory tier.
+    mem_bytes: usize,
+}
+
+/// Process-wide epoch source: every store gets a distinct generation so
+/// refs cannot resolve against the wrong store instance.
+static EPOCHS: AtomicU64 = AtomicU64::new(1);
+
+/// The tiered store. Thread-safe; share via `Arc`.
+pub struct TieredStore {
+    owner: EndpointId,
+    epoch: u64,
+    cfg: TieredConfig,
+    mem: MemoryBackend,
+    disk: DiskBackend,
+    index: Mutex<Index>,
+    pub stats: TierStats,
+}
+
+impl TieredStore {
+    pub fn new(owner: EndpointId, cfg: TieredConfig) -> Result<Self> {
+        let disk = match &cfg.spool_dir {
+            Some(d) => DiskBackend::new(d.clone())?,
+            None => DiskBackend::temp()?,
+        };
+        Ok(TieredStore {
+            owner,
+            epoch: EPOCHS.fetch_add(1, Ordering::Relaxed),
+            cfg,
+            mem: MemoryBackend::new(),
+            disk,
+            index: Mutex::new(Index { entries: HashMap::new(), seq: 0, mem_bytes: 0 }),
+            stats: TierStats::default(),
+        })
+    }
+
+    pub fn owner(&self) -> EndpointId {
+        self.owner
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Store a frame under `key` with the configured default TTL.
+    /// Returns the [`DataRef`] that resolves back to it.
+    pub fn put(&self, key: &str, frame: Buffer, now: Time) -> Result<DataRef> {
+        self.put_with_ttl(key, frame, None, now)
+    }
+
+    /// Store a frame with an explicit TTL (`Some(t)`; `t <= 0` disables
+    /// expiry for this key) or the configured default (`None`).
+    pub fn put_with_ttl(
+        &self,
+        key: &str,
+        frame: Buffer,
+        ttl_s: Option<f64>,
+        now: Time,
+    ) -> Result<DataRef> {
+        let size = frame.len();
+        let sum = checksum(frame.as_slice());
+        let ttl = ttl_s.unwrap_or(self.cfg.default_ttl_s);
+        let expires_at = (ttl > 0.0).then_some(now + ttl);
+        let mut idx = self.index.lock().expect("tiered index poisoned");
+        // Overwrite: drop the previous generation of the key first.
+        if let Some(old) = idx.entries.remove(key) {
+            match old.tier {
+                Tier::Memory => {
+                    idx.mem_bytes -= old.size;
+                    self.mem.remove(key)?;
+                }
+                Tier::Disk => {
+                    self.disk.remove(key)?;
+                }
+            }
+        }
+        self.mem.put(key, &frame)?;
+        idx.seq += 1;
+        let last_access = idx.seq;
+        idx.mem_bytes += size;
+        idx.entries.insert(
+            key.to_string(),
+            Entry { size, checksum: sum, tier: Tier::Memory, last_access, expires_at },
+        );
+        self.stats.puts.fetch_add(1, Ordering::Relaxed);
+        self.spill_over_watermark(&mut idx)?;
+        Ok(DataRef {
+            owner: self.owner,
+            epoch: self.epoch,
+            key: key.to_string(),
+            size: size as u64,
+            checksum: sum,
+        })
+    }
+
+    /// Spill LRU memory-tier frames to disk until resident bytes drop to
+    /// the watermark. Frames move as raw wire bytes. One O(n log n)
+    /// LRU-ordered pass, not an O(n) scan per victim.
+    fn spill_over_watermark(&self, idx: &mut Index) -> Result<()> {
+        if idx.mem_bytes <= self.cfg.mem_high_watermark {
+            return Ok(());
+        }
+        let mut victims: Vec<(u64, String)> = idx
+            .entries
+            .iter()
+            .filter(|(_, e)| e.tier == Tier::Memory)
+            .map(|(k, e)| (e.last_access, k.clone()))
+            .collect();
+        victims.sort_unstable_by_key(|(seq, _)| *seq);
+        for (_, k) in victims {
+            if idx.mem_bytes <= self.cfg.mem_high_watermark {
+                break;
+            }
+            let frame = self
+                .mem
+                .get(&k)?
+                .ok_or_else(|| Error::Data(format!("tier index out of sync for {k}")))?;
+            self.disk.put(&k, &frame)?;
+            self.mem.remove(&k)?;
+            let e = idx.entries.get_mut(&k).expect("victim is indexed");
+            e.tier = Tier::Disk;
+            let size = e.size;
+            idx.mem_bytes -= size;
+            self.stats.spills.fetch_add(1, Ordering::Relaxed);
+            self.stats.spilled_bytes.fetch_add(size as u64, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    /// Fetch the frame under `key`. `Err(NotFound)` for missing or
+    /// expired keys; a disk hit promotes the frame back to memory when
+    /// it fits the remaining headroom.
+    pub fn get(&self, key: &str, now: Time) -> Result<Buffer> {
+        let mut idx = self.index.lock().expect("tiered index poisoned");
+        let Some(e) = idx.entries.get(key) else {
+            return Err(Error::NotFound(format!("data key {key}")));
+        };
+        if let Some(exp) = e.expires_at {
+            if now >= exp {
+                let tier = e.tier;
+                let size = e.size;
+                idx.entries.remove(key);
+                match tier {
+                    Tier::Memory => {
+                        idx.mem_bytes -= size;
+                        self.mem.remove(key)?;
+                    }
+                    Tier::Disk => {
+                        self.disk.remove(key)?;
+                    }
+                }
+                self.stats.expirations.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::NotFound(format!("data key {key} (expired)")));
+            }
+        }
+        idx.seq += 1;
+        let seq = idx.seq;
+        let (tier, size) = {
+            let e = idx.entries.get_mut(key).expect("checked above");
+            e.last_access = seq;
+            (e.tier, e.size)
+        };
+        match tier {
+            Tier::Memory => {
+                self.stats.mem_hits.fetch_add(1, Ordering::Relaxed);
+                self.mem
+                    .get(key)?
+                    .ok_or_else(|| Error::Data(format!("tier index out of sync for {key}")))
+            }
+            Tier::Disk => {
+                let frame = self
+                    .disk
+                    .get(key)?
+                    .ok_or_else(|| Error::Data(format!("tier index out of sync for {key}")))?;
+                self.stats.disk_hits.fetch_add(1, Ordering::Relaxed);
+                // Promote only into free headroom: promotion must never
+                // spill residents (that would ping-pong hot sets around
+                // the watermark).
+                if idx.mem_bytes + size <= self.cfg.mem_high_watermark {
+                    self.mem.put(key, &frame)?;
+                    self.disk.remove(key)?;
+                    if let Some(e) = idx.entries.get_mut(key) {
+                        e.tier = Tier::Memory;
+                    }
+                    idx.mem_bytes += size;
+                    self.stats.promotes.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(frame)
+            }
+        }
+    }
+
+    /// Resolve a [`DataRef`] against this store: owner + epoch must
+    /// match, the key must be live, and the frame must verify against
+    /// the ref's size/checksum.
+    pub fn resolve(&self, r: &DataRef, now: Time) -> Result<Buffer> {
+        if r.owner != self.owner || r.epoch != self.epoch {
+            return Err(Error::NotFound(format!(
+                "ref {}: owner/epoch does not match this store",
+                r.key
+            )));
+        }
+        let frame = self.get(&r.key, now)?;
+        r.verify(frame.as_slice())?;
+        Ok(frame)
+    }
+
+    /// Remove a key from whichever tier holds it.
+    pub fn remove(&self, key: &str) -> Result<bool> {
+        let mut idx = self.index.lock().expect("tiered index poisoned");
+        match idx.entries.remove(key) {
+            Some(e) => {
+                match e.tier {
+                    Tier::Memory => {
+                        idx.mem_bytes -= e.size;
+                        self.mem.remove(key)?;
+                    }
+                    Tier::Disk => {
+                        self.disk.remove(key)?;
+                    }
+                }
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
+    /// Eagerly drop every expired entry; returns how many were evicted.
+    pub fn evict_expired(&self, now: Time) -> usize {
+        let mut idx = self.index.lock().expect("tiered index poisoned");
+        let expired: Vec<String> = idx
+            .entries
+            .iter()
+            .filter(|(_, e)| e.expires_at.is_some_and(|t| now >= t))
+            .map(|(k, _)| k.clone())
+            .collect();
+        for k in &expired {
+            if let Some(e) = idx.entries.remove(k) {
+                match e.tier {
+                    Tier::Memory => {
+                        idx.mem_bytes -= e.size;
+                        let _ = self.mem.remove(k);
+                    }
+                    Tier::Disk => {
+                        let _ = self.disk.remove(k);
+                    }
+                }
+                self.stats.expirations.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        expired.len()
+    }
+
+    /// Which tier holds `key` right now (None = absent). Ignores TTL —
+    /// use [`TieredStore::live_tier`] for a resolvability answer.
+    pub fn tier_of(&self, key: &str) -> Option<Tier> {
+        self.index
+            .lock()
+            .expect("tiered index poisoned")
+            .entries
+            .get(key)
+            .map(|e| e.tier)
+    }
+
+    /// Which tier holds a frame that is still live (not expired) at
+    /// `now` — the non-destructive check behind
+    /// [`crate::datastore::DataFabric::plan`]: a `Some` answer means
+    /// [`TieredStore::get`] at the same `now` would succeed.
+    pub fn live_tier(&self, key: &str, now: Time) -> Option<Tier> {
+        let idx = self.index.lock().expect("tiered index poisoned");
+        let e = idx.entries.get(key)?;
+        if e.expires_at.is_some_and(|t| now >= t) {
+            return None;
+        }
+        Some(e.tier)
+    }
+
+    /// Number of live keys across both tiers.
+    pub fn len(&self) -> usize {
+        self.index.lock().expect("tiered index poisoned").entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes resident in the memory tier.
+    pub fn mem_bytes(&self) -> usize {
+        self.index.lock().expect("tiered index poisoned").mem_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering::Relaxed;
+
+    fn frame(byte: u8, len: usize) -> Buffer {
+        Buffer::from_vec(vec![byte; len])
+    }
+
+    fn store(watermark: usize) -> TieredStore {
+        TieredStore::new(
+            EndpointId::new(),
+            TieredConfig { mem_high_watermark: watermark, default_ttl_s: 0.0, spool_dir: None },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn put_get_roundtrip_memory() {
+        let s = store(1 << 20);
+        let f = frame(0xA5, 4096);
+        let r = s.put("k", f.clone(), 0.0).unwrap();
+        assert_eq!(r.size, 4096);
+        assert_eq!(s.tier_of("k"), Some(Tier::Memory));
+        let got = s.get("k", 0.0).unwrap();
+        assert!(got.same_allocation(&f), "memory tier must hand back the same allocation");
+        assert_eq!(s.stats.mem_hits.load(Relaxed), 1);
+    }
+
+    #[test]
+    fn watermark_spills_lru_to_disk() {
+        let s = store(10_000);
+        s.put("a", frame(1, 4 << 10), 0.0).unwrap();
+        s.put("b", frame(2, 4 << 10), 0.0).unwrap();
+        // Touch a so b becomes LRU.
+        s.get("a", 0.0).unwrap();
+        s.put("c", frame(3, 4 << 10), 0.0).unwrap();
+        assert_eq!(s.tier_of("b"), Some(Tier::Disk), "LRU key spills");
+        assert_eq!(s.tier_of("a"), Some(Tier::Memory));
+        assert_eq!(s.tier_of("c"), Some(Tier::Memory));
+        assert!(s.mem_bytes() <= 10_000);
+        assert_eq!(s.stats.spills.load(Relaxed), 1);
+        // Disk hit returns the exact bytes.
+        let got = s.get("b", 0.0).unwrap();
+        assert_eq!(got.as_slice(), frame(2, 4 << 10).as_slice());
+        assert_eq!(s.stats.disk_hits.load(Relaxed), 1);
+    }
+
+    #[test]
+    fn disk_hit_promotes_into_headroom() {
+        let s = store(10_000);
+        s.put("a", frame(1, 4 << 10), 0.0).unwrap();
+        s.put("b", frame(2, 4 << 10), 0.0).unwrap();
+        s.put("c", frame(3, 4 << 10), 0.0).unwrap(); // spills "a"
+        assert_eq!(s.tier_of("a"), Some(Tier::Disk));
+        s.remove("b").unwrap(); // free headroom
+        s.get("a", 0.0).unwrap();
+        assert_eq!(s.tier_of("a"), Some(Tier::Memory), "promoted into freed headroom");
+        assert_eq!(s.stats.promotes.load(Relaxed), 1);
+        // Without headroom the frame keeps serving from disk.
+        s.put("d", frame(4, 4 << 10), 0.0).unwrap();
+        let spilled = s
+            .index
+            .lock()
+            .unwrap()
+            .entries
+            .iter()
+            .find(|(_, e)| e.tier == Tier::Disk)
+            .map(|(k, _)| k.clone())
+            .unwrap();
+        s.get(&spilled, 0.0).unwrap();
+        assert_eq!(s.tier_of(&spilled), Some(Tier::Disk), "no promotion without headroom");
+    }
+
+    #[test]
+    fn ttl_expiry_is_not_found() {
+        let s = TieredStore::new(
+            EndpointId::new(),
+            TieredConfig { mem_high_watermark: 1 << 20, default_ttl_s: 10.0, spool_dir: None },
+        )
+        .unwrap();
+        let r = s.put("k", frame(1, 64), 0.0).unwrap();
+        assert!(s.get("k", 5.0).is_ok());
+        match s.get("k", 11.0) {
+            Err(Error::NotFound(m)) => assert!(m.contains("expired"), "{m}"),
+            other => panic!("expected NotFound, got {other:?}"),
+        }
+        // Gone for good — and resolving the ref reports NotFound too.
+        assert!(matches!(s.get("k", 12.0), Err(Error::NotFound(_))));
+        assert!(matches!(s.resolve(&r, 12.0), Err(Error::NotFound(_))));
+        assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn eager_eviction_and_ttl_override() {
+        let s = store(1 << 20);
+        s.put_with_ttl("short", frame(1, 64), Some(1.0), 0.0).unwrap();
+        s.put_with_ttl("keep", frame(2, 64), Some(0.0), 0.0).unwrap(); // no expiry
+        assert_eq!(s.evict_expired(0.5), 0);
+        assert_eq!(s.evict_expired(2.0), 1);
+        assert!(s.get("keep", 1e9).is_ok());
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn stale_epoch_and_wrong_owner_rejected() {
+        let a = store(1 << 20);
+        let b = store(1 << 20);
+        let r = a.put("k", frame(1, 64), 0.0).unwrap();
+        assert!(matches!(b.resolve(&r, 0.0), Err(Error::NotFound(_))));
+        assert!(a.resolve(&r, 0.0).is_ok());
+        assert_ne!(a.epoch(), b.epoch());
+    }
+
+    #[test]
+    fn overwrite_replaces_and_reaccounts() {
+        let s = store(10_000);
+        s.put("k", frame(1, 8 << 10), 0.0).unwrap();
+        assert_eq!(s.mem_bytes(), 8 << 10);
+        let r = s.put("k", frame(2, 1 << 10), 0.0).unwrap();
+        assert_eq!(s.mem_bytes(), 1 << 10);
+        assert_eq!(s.len(), 1);
+        let got = s.resolve(&r, 0.0).unwrap();
+        assert_eq!(got.as_slice(), frame(2, 1 << 10).as_slice());
+    }
+
+    #[test]
+    fn oversized_single_frame_spills_itself() {
+        let s = store(1 << 10);
+        s.put("big", frame(9, 64 << 10), 0.0).unwrap();
+        assert_eq!(s.tier_of("big"), Some(Tier::Disk));
+        assert_eq!(s.mem_bytes(), 0);
+        // Serves from disk, never promotes (larger than the watermark).
+        let got = s.get("big", 0.0).unwrap();
+        assert_eq!(got.len(), 64 << 10);
+        assert_eq!(s.tier_of("big"), Some(Tier::Disk));
+    }
+}

@@ -16,6 +16,7 @@ use crate::common::rng::Rng;
 use crate::common::task::{Task, TaskResult};
 use crate::common::time::{Clock, Time};
 use crate::containers::StartCostModel;
+use crate::datastore::DataFabric;
 use crate::endpoint::link::{AgentSide, Downstream, Upstream};
 use crate::endpoint::manager::{Manager, ManagerCtx};
 use crate::metrics::LatencyBreakdown;
@@ -42,6 +43,9 @@ pub struct AgentConfig {
     pub provider: Box<dyn Provider>,
     pub scheduler: Box<dyn Scheduler>,
     pub executor: Arc<PayloadExecutor>,
+    /// Data-fabric handle for resolving by-ref task inputs (§5);
+    /// threaded into every manager's worker context.
+    pub fabric: Option<Arc<DataFabric>>,
     pub clock: Arc<dyn Clock>,
     pub latency: Arc<LatencyBreakdown>,
     pub start_model: StartCostModel,
@@ -142,6 +146,7 @@ fn agent_loop(link: AgentSide, mut config: AgentConfig, stats: Arc<AgentStats>) 
                 results: result_tx.clone(),
                 wake: wake.clone(),
                 result_batch: config.cfg.result_batch,
+                fabric: config.fabric.clone(),
                 clock: config.clock.clone(),
                 latency: config.latency.clone(),
                 start_model: config.start_model,

@@ -15,16 +15,18 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::batching::ResultBuffer;
+use crate::common::error::Error;
 use crate::common::ids::ManagerId;
 use crate::common::rng::Rng;
 use crate::common::sync::Notify;
 use crate::common::task::{Task, TaskResult, TaskState};
 use crate::common::time::{Clock, Time};
 use crate::containers::{StartCostModel, WarmPool};
+use crate::datastore::DataFabric;
 use crate::metrics::LatencyBreakdown;
 use crate::routing::ManagerView;
 use crate::runtime::PayloadExecutor;
-use crate::serialize::{unpack, Value};
+use crate::serialize::{unpack, Buffer, Value};
 
 struct Shared {
     /// Tasks are shared handles: the queue holds the same allocation the
@@ -55,10 +57,14 @@ pub struct ManagerCtx {
     /// Signalled after each result-batch send so the agent's event loop
     /// wakes on completions instead of polling its result channel.
     pub wake: Arc<Notify>,
-    /// Results buffered before a size flush
+    /// Floor of the adaptive result-flush threshold
     /// ([`crate::common::config::EndpointConfig::result_batch`]; 1
     /// disables buffering).
     pub result_batch: usize,
+    /// Data-fabric handle workers resolve [`crate::datastore::DataRef`]
+    /// inputs through (§5 pass-by-reference); `None` means by-ref tasks
+    /// fail cleanly at this endpoint.
+    pub fabric: Option<Arc<DataFabric>>,
     pub clock: Arc<dyn Clock>,
     pub latency: Arc<LatencyBreakdown>,
     pub start_model: StartCostModel,
@@ -78,6 +84,7 @@ impl Manager {
                 ctx.result_batch,
                 ctx.results.clone(),
                 ctx.wake.clone(),
+                ctx.clock.clone(),
             ),
             shutdown: AtomicBool::new(false),
         });
@@ -206,28 +213,50 @@ fn worker_loop(shared: Arc<Shared>, ctx: ManagerCtx, rng: &mut Rng) {
             }
         }
 
+        // Materialize the input frame: inline tasks already carry it
+        // (a borrowed view of the queue frame); by-ref tasks resolve
+        // their DataRef through the endpoint's data fabric (§5). An
+        // unresolvable ref — evicted, expired, stale epoch, or no
+        // fabric attached — fails the task cleanly, never panics.
+        let input_frame: Result<Buffer, Error> = if !task.payload.reads_input() {
+            Ok(Buffer::empty())
+        } else {
+            match (&task.input_ref, ctx.fabric.as_ref()) {
+                (Some(r), Some(fabric)) => fabric.resolve(r, ctx.clock.now()),
+                (Some(r), None) => Err(Error::Data(format!(
+                    "ref {} undeliverable: no data fabric attached to this endpoint",
+                    r.key
+                ))),
+                (None, _) => Ok(task.input.clone()),
+            }
+        };
+
         // Deserialize input (borrowing the body from the shared frame —
         // and only when the payload actually reads it), execute,
         // serialize output (§4.3 worker).
-        let input: Value = if task.payload.reads_input() {
-            unpack(&task.input).unwrap_or(Value::Null)
-        } else {
-            Value::Null
-        };
-        let (state, output, exec_s) = match ctx.executor.execute(&task.payload, &input) {
-            Ok((out, t)) => match crate::serialize::pack(&out, 0) {
-                Ok(buf) => (TaskState::Success, buf, t),
-                Err(e) => (
-                    TaskState::Failed,
-                    crate::serialize::pack(&Value::Str(e.to_string()), 0).unwrap(),
-                    0.0,
-                ),
-            },
-            Err(e) => (
+        let fail = |e: &Error| {
+            (
                 TaskState::Failed,
                 crate::serialize::pack(&Value::Str(e.to_string()), 0).unwrap(),
                 0.0,
-            ),
+            )
+        };
+        let (state, output, exec_s) = match &input_frame {
+            Ok(frame) => {
+                let input: Value = if task.payload.reads_input() {
+                    unpack(frame).unwrap_or(Value::Null)
+                } else {
+                    Value::Null
+                };
+                match ctx.executor.execute(&task.payload, &input) {
+                    Ok((out, t)) => match crate::serialize::pack(&out, 0) {
+                        Ok(buf) => (TaskState::Success, buf, t),
+                        Err(e) => fail(&e),
+                    },
+                    Err(e) => fail(&e),
+                }
+            }
+            Err(e) => fail(e),
         };
 
         let done = ctx.clock.now();
@@ -262,6 +291,7 @@ mod tests {
             results,
             wake: Arc::new(Notify::new()),
             result_batch,
+            fabric: None,
             clock: Arc::new(WallClock::new()),
             latency: Arc::new(LatencyBreakdown::new()),
             start_model: TABLE3_MODELS.lookup(SystemProfile::Local, ContainerTech::None),
@@ -371,6 +401,72 @@ mod tests {
         }
         assert_eq!(results, 64);
         assert!(sends < 32, "64 results arrived in {sends} sends — batching inactive");
+        m.shutdown();
+    }
+
+    /// A by-ref task on an endpoint with no fabric attached fails the
+    /// task (clean Failed result, not a panic).
+    #[test]
+    fn ref_task_without_fabric_fails_cleanly() {
+        let (tx, rx) = channel();
+        let m = Manager::spawn(1, 600.0, ctx(tx, 1), 9);
+        let dref = crate::datastore::DataRef {
+            owner: EndpointId::new(),
+            epoch: 1,
+            key: "task-input:x".into(),
+            size: 64,
+            checksum: 0,
+        };
+        let task = Task::new(
+            FunctionId::new(),
+            EndpointId::new(),
+            UserId::new(),
+            None,
+            Payload::Echo,
+            Buffer::empty(),
+        )
+        .with_input_ref(dref);
+        m.enqueue(vec![Arc::new(task)]);
+        let r = recv_n(&rx, 1).pop().unwrap();
+        assert_eq!(r.state, TaskState::Failed);
+        let msg = unpack(&r.output).unwrap();
+        assert!(
+            msg.as_str().unwrap_or("").contains("no data fabric"),
+            "failure names the missing fabric: {msg:?}"
+        );
+        m.shutdown();
+    }
+
+    /// With a fabric attached, a by-ref Echo resolves its input frame
+    /// from the store and echoes the original value.
+    #[test]
+    fn ref_task_resolves_through_fabric() {
+        use crate::datastore::{DataFabric, TieredConfig, TieredStore};
+        let store = Arc::new(
+            TieredStore::new(EndpointId::new(), TieredConfig::default()).unwrap(),
+        );
+        let fabric = Arc::new(DataFabric::new(store));
+        let input = Value::Bytes(vec![0x5A; 2048]);
+        let frame = crate::serialize::pack(&input, 0).unwrap();
+        let dref = fabric.put("task-input:t1", frame, 0.0).unwrap();
+
+        let (tx, rx) = channel();
+        let mut c = ctx(tx, 1);
+        c.fabric = Some(fabric);
+        let m = Manager::spawn(1, 600.0, c, 10);
+        let task = Task::new(
+            FunctionId::new(),
+            EndpointId::new(),
+            UserId::new(),
+            None,
+            Payload::Echo,
+            Buffer::empty(),
+        )
+        .with_input_ref(dref);
+        m.enqueue(vec![Arc::new(task)]);
+        let r = recv_n(&rx, 1).pop().unwrap();
+        assert_eq!(r.state, TaskState::Success);
+        assert_eq!(unpack(&r.output).unwrap(), input);
         m.shutdown();
     }
 

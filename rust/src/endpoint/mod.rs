@@ -19,6 +19,7 @@ use crate::common::config::EndpointConfig;
 use crate::common::time::{Clock, WallClock};
 use crate::containers::{ContainerTech, SystemProfile, TABLE3_MODELS};
 use crate::data::DataChannel;
+use crate::datastore::DataFabric;
 use crate::metrics::LatencyBreakdown;
 use crate::provider::{Provider, SimProvider};
 use crate::routing::{Scheduler, WarmingAware};
@@ -33,6 +34,7 @@ pub struct EndpointBuilder {
     scheduler: Option<Box<dyn Scheduler>>,
     runtime: Option<Arc<PjrtRuntime>>,
     channel: Option<Arc<dyn DataChannel>>,
+    fabric: Option<Arc<DataFabric>>,
     clock: Option<Arc<dyn Clock>>,
     latency: Option<Arc<LatencyBreakdown>>,
     cold_start_scale: f64,
@@ -56,6 +58,7 @@ impl EndpointBuilder {
             scheduler: None,
             runtime: None,
             channel: None,
+            fabric: None,
             clock: None,
             latency: None,
             cold_start_scale: 0.001,
@@ -97,6 +100,14 @@ impl EndpointBuilder {
         self
     }
 
+    /// Attach the endpoint's data-fabric handle (§5): workers resolve
+    /// by-ref task inputs through it. Peer it with the service store
+    /// (and other endpoints) before starting the agent.
+    pub fn fabric(mut self, f: Arc<DataFabric>) -> Self {
+        self.fabric = Some(f);
+        self
+    }
+
     pub fn clock(mut self, c: Arc<dyn Clock>) -> Self {
         self.clock = Some(c);
         self
@@ -133,6 +144,7 @@ impl EndpointBuilder {
             provider: self.provider.unwrap_or_else(|| Box::new(SimProvider::local(7))),
             scheduler: self.scheduler.unwrap_or_else(|| Box::new(WarmingAware::default())),
             executor,
+            fabric: self.fabric,
             clock,
             latency,
             cold_start_scale: self.cold_start_scale,

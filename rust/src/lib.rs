@@ -9,7 +9,7 @@
 //!   ([`endpoint`]: agent → manager → worker), container management and
 //!   warming-aware routing ([`containers`], [`routing`]), elastic
 //!   provisioning ([`provider`]), intra/inter-endpoint data management
-//!   ([`data`], [`transfer`]), batching ([`batching`]), the
+//!   ([`data`], [`datastore`], [`transfer`]), batching ([`batching`]), the
 //!   serialization facade ([`serialize`]), and a Globus-Auth-like IAM
 //!   substrate ([`auth`]).
 //! * **Layer 2/1 (build-time Python)** — JAX compute graphs over Pallas
@@ -26,6 +26,7 @@ pub mod batching;
 pub mod common;
 pub mod containers;
 pub mod data;
+pub mod datastore;
 pub mod endpoint;
 pub mod experiments;
 pub mod metrics;

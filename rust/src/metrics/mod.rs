@@ -146,6 +146,11 @@ pub struct Counters {
     pub tasks_completed: AtomicU64,
     pub tasks_failed: AtomicU64,
     pub tasks_redispatched: AtomicU64,
+    /// Tasks whose oversized input was offloaded to the data fabric and
+    /// dispatched as a `DataRef` (§5 pass-by-reference).
+    pub tasks_ref_dispatched: AtomicU64,
+    /// Input bytes kept *out* of the service queues by ref dispatch.
+    pub bytes_offloaded: AtomicU64,
     pub cold_starts: AtomicU64,
     pub warm_hits: AtomicU64,
     pub heartbeats: AtomicU64,

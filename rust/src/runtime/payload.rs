@@ -77,9 +77,10 @@ impl PayloadExecutor {
                     .ok_or_else(|| Error::InvalidArgument("dataop: missing key".into()))?;
                 match op {
                     "put" => {
-                        let data = match input.get("data") {
-                            Some(Value::Bytes(b)) => b.as_slice(),
-                            _ => {
+                        // Accept owned Bytes or a zero-copy Blob view.
+                        let data = match input.get("data").and_then(Value::as_bytes) {
+                            Some(b) => b,
+                            None => {
                                 return Err(Error::InvalidArgument(
                                     "dataop put: missing bytes data".into(),
                                 ))

@@ -63,10 +63,17 @@ impl Codec for RawCodec {
                 out.extend_from_slice(b);
                 true
             }
+            Value::Blob(b) => {
+                out.extend_from_slice(b.as_slice());
+                true
+            }
             _ => false,
         }
     }
 
+    /// Slice-level decode yields owned bytes; the facade's
+    /// [`crate::serialize::Facade::unpack`] short-circuits Raw frames to
+    /// a zero-copy [`Value::Blob`] view instead of calling this.
     fn decode(&self, bytes: &[u8]) -> Result<Value> {
         Ok(Value::Bytes(bytes.to_vec()))
     }
@@ -88,7 +95,7 @@ impl Codec for JsonCodec {
                 Value::Null | Value::Bool(_) | Value::Int(_) | Value::Float(_) | Value::Str(_) => {
                     true
                 }
-                Value::Bytes(_) | Value::F32s(_) | Value::I32s(_) => false,
+                Value::Bytes(_) | Value::Blob(_) | Value::F32s(_) | Value::I32s(_) => false,
                 Value::List(l) => l.iter().all(jsonable),
                 Value::Map(m) => m.values().all(jsonable),
             }
@@ -136,6 +143,13 @@ impl BincCodec {
                 out.push(5);
                 Self::enc_len(b.len(), out);
                 out.extend_from_slice(b);
+            }
+            // Blob encodes as bytes (tag 5); decode restores Bytes, which
+            // compares equal by content.
+            Value::Blob(b) => {
+                out.push(5);
+                Self::enc_len(b.len(), out);
+                out.extend_from_slice(b.as_slice());
             }
             Value::F32s(v) => {
                 out.push(6);

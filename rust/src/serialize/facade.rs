@@ -291,9 +291,15 @@ impl Facade {
     }
 
     /// Unpack a buffer at the destination. The body is decoded in place
-    /// (borrowed from `buf`), never copied out first.
+    /// (borrowed from `buf`), never copied out first. Raw-method frames
+    /// short-circuit to a [`Value::Blob`] *view* of the frame — reading
+    /// a raw payload allocates nothing (the body isn't even copied into
+    /// an owned vec; pinned in `tests/alloc_discipline.rs`).
     pub fn unpack(&self, buf: &Buffer) -> Result<(Header, Value)> {
         let header = self.peek(buf)?;
+        if header.method == Method::Raw {
+            return Ok((header, Value::Blob(buf.slice(HEADER_LEN, header.body_len as usize))));
+        }
         let body = &buf.as_slice()[HEADER_LEN..];
         Ok((header, self.decode_body(header, body)?))
     }

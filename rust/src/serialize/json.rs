@@ -61,7 +61,9 @@ pub(crate) fn write_value(v: &Value, out: &mut Vec<u8>) {
             out.push(b'}');
         }
         // Not JSON-able; the codec filters these out before calling us.
-        Value::Bytes(_) | Value::F32s(_) | Value::I32s(_) => unreachable!("non-jsonable"),
+        Value::Bytes(_) | Value::Blob(_) | Value::F32s(_) | Value::I32s(_) => {
+            unreachable!("non-jsonable")
+        }
     }
 }
 

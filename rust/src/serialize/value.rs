@@ -5,16 +5,27 @@
 
 use std::collections::BTreeMap;
 
+use crate::serialize::facade::Buffer;
+
 /// A dynamically-typed function input/output value.
-#[derive(Clone, Debug, PartialEq)]
+///
+/// Equality is structural by *content*: [`Value::Bytes`] and
+/// [`Value::Blob`] compare equal when their bytes match, so zero-copy
+/// decodes are interchangeable with owned ones.
+#[derive(Clone, Debug)]
 pub enum Value {
     Null,
     Bool(bool),
     Int(i64),
     Float(f64),
     Str(String),
-    /// Opaque byte payloads — the raw fast path.
+    /// Opaque byte payloads — the raw fast path (owned).
     Bytes(Vec<u8>),
+    /// Opaque byte payload as a zero-copy [`Buffer`] view: `unpack` of a
+    /// Raw-method frame yields this variant borrowing the frame's
+    /// allocation, so reading a raw payload at the worker allocates
+    /// nothing (pinned in `tests/alloc_discipline.rs`).
+    Blob(Buffer),
     /// Dense f32 tensor data (PJRT artifact inputs/outputs).
     F32s(Vec<f32>),
     /// Dense i32 tensor data.
@@ -32,6 +43,7 @@ impl Value {
             Value::Int(_) | Value::Float(_) => 8,
             Value::Str(s) => s.len(),
             Value::Bytes(b) => b.len(),
+            Value::Blob(b) => b.len(),
             Value::F32s(v) => v.len() * 4,
             Value::I32s(v) => v.len() * 4,
             Value::List(l) => l.iter().map(Value::approx_size).sum::<usize>() + 8,
@@ -70,6 +82,7 @@ impl Value {
     pub fn as_bytes(&self) -> Option<&[u8]> {
         match self {
             Value::Bytes(b) => Some(b),
+            Value::Blob(b) => Some(b.as_slice()),
             _ => None,
         }
     }
@@ -93,6 +106,29 @@ impl Value {
             Value::Float(f) => Some(*f),
             Value::Int(i) => Some(*i as f64),
             _ => None,
+        }
+    }
+}
+
+impl PartialEq for Value {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Value::Null, Value::Null) => true,
+            (Value::Bool(a), Value::Bool(b)) => a == b,
+            (Value::Int(a), Value::Int(b)) => a == b,
+            (Value::Float(a), Value::Float(b)) => a == b,
+            (Value::Str(a), Value::Str(b)) => a == b,
+            (Value::Bytes(a), Value::Bytes(b)) => a == b,
+            (Value::Blob(a), Value::Blob(b)) => a.as_slice() == b.as_slice(),
+            // Owned and zero-copy byte payloads are the same value.
+            (Value::Bytes(a), Value::Blob(b)) | (Value::Blob(b), Value::Bytes(a)) => {
+                a.as_slice() == b.as_slice()
+            }
+            (Value::F32s(a), Value::F32s(b)) => a == b,
+            (Value::I32s(a), Value::I32s(b)) => a == b,
+            (Value::List(a), Value::List(b)) => a == b,
+            (Value::Map(a), Value::Map(b)) => a == b,
+            _ => false,
         }
     }
 }
@@ -122,5 +158,16 @@ mod tests {
         assert_eq!(Value::Int(3).as_float(), Some(3.0));
         assert_eq!(Value::Float(2.5).as_float(), Some(2.5));
         assert_eq!(Value::Str("x".into()).as_float(), None);
+    }
+
+    #[test]
+    fn blob_equals_bytes_by_content() {
+        let blob = Value::Blob(Buffer::from_slice(&[1, 2, 3]));
+        assert_eq!(blob, Value::Bytes(vec![1, 2, 3]));
+        assert_eq!(Value::Bytes(vec![1, 2, 3]), blob);
+        assert_ne!(blob, Value::Bytes(vec![1, 2, 4]));
+        assert_eq!(blob, Value::Blob(Buffer::from_slice(&[1, 2, 3])));
+        assert_eq!(blob.as_bytes(), Some(&[1u8, 2, 3][..]));
+        assert_eq!(blob.approx_size(), 3);
     }
 }

@@ -1,6 +1,7 @@
 //! The REST-equivalent service API (Fig. 2 steps 1–3 and 6).
 
-use std::sync::Arc;
+use std::collections::HashSet;
+use std::sync::{Arc, Mutex};
 
 use crate::auth::{AuthService, Scope, Token};
 use crate::batching::BatchRequest;
@@ -9,7 +10,8 @@ use crate::common::error::{Error, Result};
 use crate::common::ids::{EndpointId, FunctionId, TaskId, UserId};
 use crate::common::sync::Notify;
 use crate::common::task::{Payload, Task, TaskResult, TaskState};
-use crate::common::time::{Clock, WallClock};
+use crate::common::time::{Clock, Time, WallClock};
+use crate::datastore::{DataFabric, TieredConfig, TieredStore, SERVICE_OWNER};
 use crate::metrics::{Counters, LatencyBreakdown};
 use crate::registry::{EndpointStatus, Registry};
 use crate::serialize::{pack, unpack, Value, Wire};
@@ -27,6 +29,11 @@ pub struct FuncXService {
     pub auth: AuthService,
     pub registry: Registry,
     pub kv: KvStore,
+    /// The service-side data fabric: oversized task inputs are `put()`
+    /// here and dispatched as [`crate::datastore::DataRef`]s (§5).
+    /// Endpoint fabrics peer with `fabric.local()` (owner
+    /// [`SERVICE_OWNER`]) to resolve them.
+    pub fabric: Arc<DataFabric>,
     pub cfg: ServiceConfig,
     pub clock: Arc<dyn Clock>,
     pub latency: Arc<LatencyBreakdown>,
@@ -34,19 +41,34 @@ pub struct FuncXService {
     /// Signalled on every stored result so [`FuncXService::wait_result`]
     /// blocks instead of polling.
     result_notify: Arc<Notify>,
+    /// Task ids whose inputs were offloaded to the fabric — so the
+    /// result hot path only touches the payload store's lock for tasks
+    /// that actually dispatched by reference.
+    offloaded: Arc<Mutex<HashSet<TaskId>>>,
 }
 
 impl FuncXService {
     pub fn new(cfg: ServiceConfig) -> Self {
+        let store = TieredStore::new(
+            SERVICE_OWNER,
+            TieredConfig {
+                mem_high_watermark: cfg.store_mem_watermark_bytes,
+                default_ttl_s: cfg.result_ttl_s,
+                spool_dir: None,
+            },
+        )
+        .expect("create service payload spool");
         FuncXService {
             auth: AuthService::new(),
             registry: Registry::new(),
             kv: KvStore::new(),
+            fabric: Arc::new(DataFabric::new(Arc::new(store))),
             cfg,
             clock: Arc::new(WallClock::new()),
             latency: Arc::new(LatencyBreakdown::new()),
             counters: Counters::new(),
             result_notify: Arc::new(Notify::new()),
+            offloaded: Arc::new(Mutex::new(HashSet::new())),
         }
     }
 
@@ -101,22 +123,53 @@ impl FuncXService {
             return Err(Error::Forbidden(format!("{user} may not use endpoint {endpoint}")));
         }
         let buf = pack(input, 0)?;
-        if buf.len() > self.cfg.max_payload_bytes {
-            return Err(Error::PayloadTooLarge {
-                size: buf.len(),
-                limit: self.cfg.max_payload_bytes,
+        let task =
+            self.make_task(function, endpoint, user, f.container, f.payload.clone(), buf, now)?;
+        self.enqueue_task(task, now)
+    }
+
+    /// Build the task record for one invocation, enforcing the inline
+    /// data cap: inputs above `max_payload_bytes` are offloaded to the
+    /// data fabric and the task carries a compact `DataRef` in its
+    /// trailer meta (§5 pass-by-reference dispatch) — or, with
+    /// `ref_dispatch` disabled, are rejected as in the original
+    /// 10 MB-capped service.
+    #[allow(clippy::too_many_arguments)]
+    fn make_task(
+        &self,
+        function: FunctionId,
+        endpoint: EndpointId,
+        user: UserId,
+        container: Option<crate::common::ids::ContainerId>,
+        payload: Payload,
+        input: crate::serialize::Buffer,
+        now: Time,
+    ) -> Result<Task> {
+        let id = TaskId::new();
+        if input.len() > self.cfg.max_payload_bytes {
+            if !self.cfg.ref_dispatch {
+                return Err(Error::PayloadTooLarge {
+                    size: input.len(),
+                    limit: self.cfg.max_payload_bytes,
+                });
+            }
+            let size = input.len() as u64;
+            let r = self.fabric.put(&format!("task-input:{id}"), input, now)?;
+            self.offloaded.lock().expect("offloaded set poisoned").insert(id);
+            crate::metrics::Counters::incr(&self.counters.tasks_ref_dispatched);
+            crate::metrics::Counters::add(&self.counters.bytes_offloaded, size);
+            return Ok(Task {
+                id,
+                function,
+                endpoint,
+                user,
+                container,
+                payload,
+                input: crate::serialize::Buffer::empty(),
+                input_ref: Some(r),
             });
         }
-        let task = Task {
-            id: TaskId::new(),
-            function,
-            endpoint,
-            user,
-            container: f.container,
-            payload: f.payload.clone(),
-            input: buf,
-        };
-        self.enqueue_task(task, now)
+        Ok(Task { id, function, endpoint, user, container, payload, input, input_ref: None })
     }
 
     /// Submit a user-facing batch (§4.6): one authenticated call, many
@@ -132,28 +185,42 @@ impl FuncXService {
         if !self.auth.may_use_endpoint(user, e.owner, batch.endpoint) {
             return Err(Error::Forbidden("not authorized for endpoint".into()));
         }
-        if batch.total_bytes() > self.cfg.max_payload_bytes {
+        // Admission is atomic: the size check runs before anything is
+        // enqueued, so an oversized batch never leaves orphaned members
+        // behind. Without ref dispatch the whole batch is inline-capped
+        // (the original rule — any over-cap member also trips it); with
+        // ref dispatch, oversized members offload individually but the
+        // bytes that stay *inline* must still fit the cap.
+        let inline_total: usize = batch
+            .inputs
+            .iter()
+            .map(crate::serialize::Buffer::len)
+            .filter(|l| !self.cfg.ref_dispatch || *l <= self.cfg.max_payload_bytes)
+            .sum();
+        if inline_total > self.cfg.max_payload_bytes {
             return Err(Error::PayloadTooLarge {
-                size: batch.total_bytes(),
+                size: inline_total,
                 limit: self.cfg.max_payload_bytes,
             });
         }
-        batch
+        // Build every task first (offloading oversized inputs), then
+        // enqueue: size errors can no longer strike mid-batch.
+        let tasks: Vec<Task> = batch
             .inputs
             .iter()
             .map(|input| {
-                let task = Task {
-                    id: TaskId::new(),
-                    function: batch.function,
-                    endpoint: batch.endpoint,
+                self.make_task(
+                    batch.function,
+                    batch.endpoint,
                     user,
-                    container: f.container,
-                    payload: f.payload.clone(),
-                    input: input.clone(),
-                };
-                self.enqueue_task(task, now)
+                    f.container,
+                    f.payload.clone(),
+                    input.clone(),
+                    now,
+                )
             })
-            .collect()
+            .collect::<Result<_>>()?;
+        tasks.into_iter().map(|task| self.enqueue_task(task, now)).collect()
     }
 
     fn enqueue_task(&self, task: Task, now: f64) -> Result<SubmitReceipt> {
@@ -249,6 +316,15 @@ impl FuncXService {
             self.cfg.result_ttl_s,
             now,
         );
+        // Terminal state: reclaim the offloaded input frame, if any,
+        // instead of letting it sit in the payload store until TTL.
+        // Gated on the offloaded set so inline results (the common
+        // case) never touch the payload store's lock. (Re-dispatch
+        // after agent loss never reaches here non-terminal, so
+        // in-flight refs stay resolvable.)
+        if self.offloaded.lock().expect("offloaded set poisoned").remove(&r.task) {
+            let _ = self.fabric.local().remove(&format!("task-input:{}", r.task));
+        }
         self.set_state(r.task, r.state);
         self.latency.on_result_stored(r.task, now);
         match r.state {
@@ -267,9 +343,19 @@ impl FuncXService {
         self.result_notify.notify();
     }
 
-    /// Periodic housekeeping: purge expired results (§4.1).
+    /// Periodic housekeeping: purge expired results (§4.1) and sweep
+    /// expired offloaded inputs out of the payload store (frames whose
+    /// tasks never produced a result would otherwise only expire
+    /// lazily on access — i.e. never). The offloaded-id set is pruned
+    /// in the same pass so ids of never-completing tasks don't
+    /// accumulate across the service's lifetime.
     pub fn purge_expired_results(&self) -> usize {
-        self.kv.purge_expired(self.clock.now())
+        let now = self.clock.now();
+        self.fabric.local().evict_expired(now);
+        self.offloaded.lock().expect("offloaded set poisoned").retain(|id| {
+            self.fabric.local().live_tier(&format!("task-input:{id}"), now).is_some()
+        });
+        self.kv.purge_expired(now)
     }
 
     /// Connect an endpoint's agent link: spawns the forwarder (§4.1
@@ -343,8 +429,33 @@ mod tests {
     }
 
     #[test]
-    fn payload_cap_enforced() {
+    fn oversized_payload_dispatches_by_ref() {
         let (s, tok, f, e) = svc();
+        let big = Value::Bytes(vec![0xAB; 11 * 1024 * 1024]);
+        let r = s.submit(&tok, f, e, &big).unwrap();
+        assert_eq!(s.task_state(r.task).unwrap(), TaskState::WaitingForEndpoint);
+        // The queued task carries a DataRef, not 11 MB of inline bytes.
+        let task = s.task_queue(e).pop().unwrap().unwrap();
+        let dref = task.input_ref.expect("oversized input must go by reference");
+        assert!(dref.size > 10 * 1024 * 1024);
+        assert_eq!(dref.owner, crate::datastore::SERVICE_OWNER);
+        assert!(task.input.len() < 100, "placeholder input only");
+        // The frame resolves from the service store bit-for-bit.
+        let frame = s.fabric.resolve(&dref, s.clock.now()).unwrap();
+        assert_eq!(frame.len() as u64, dref.size);
+        assert_eq!(
+            crate::metrics::Counters::get(&s.counters.tasks_ref_dispatched),
+            1
+        );
+        assert!(crate::metrics::Counters::get(&s.counters.bytes_offloaded) > 10 * 1024 * 1024);
+    }
+
+    #[test]
+    fn payload_cap_enforced_without_ref_dispatch() {
+        let s = FuncXService::new(ServiceConfig { ref_dispatch: false, ..Default::default() });
+        let (_u, tok) = s.bootstrap_user("alice");
+        let f = s.register_function(&tok, "noop", Payload::Noop, None).unwrap();
+        let e = s.register_endpoint(&tok, "laptop", "test endpoint").unwrap();
         let big = Value::Bytes(vec![0; 11 * 1024 * 1024]);
         assert!(matches!(
             s.submit(&tok, f, e, &big),
@@ -370,6 +481,34 @@ mod tests {
         let receipts = s.submit_batch(&tok, &b).unwrap();
         assert_eq!(receipts.len(), 5);
         assert_eq!(s.task_queue(e).len(), 5);
+    }
+
+    #[test]
+    fn batch_admission_is_atomic_and_inline_capped() {
+        let (s, tok, f, e) = svc();
+        // Members under the per-task cap but summing over it: the batch
+        // is rejected up front — nothing enqueued, nothing orphaned.
+        let mut b = BatchRequest::new(f, e);
+        for _ in 0..3 {
+            b.add(&Value::Bytes(vec![0; 4 * 1024 * 1024])).unwrap();
+        }
+        b.add(&Value::Bytes(vec![0; 9 * 1024 * 1024])).unwrap();
+        assert!(matches!(
+            s.submit_batch(&tok, &b),
+            Err(Error::PayloadTooLarge { .. })
+        ));
+        assert_eq!(s.task_queue(e).len(), 0, "rejected batch must enqueue nothing");
+        // An oversized member offloads by ref while small siblings stay
+        // inline; the batch passes because the *inline* bytes fit.
+        let mut b = BatchRequest::new(f, e);
+        b.add(&Value::Bytes(vec![1; 1024])).unwrap();
+        b.add(&Value::Bytes(vec![2; 11 * 1024 * 1024])).unwrap();
+        let receipts = s.submit_batch(&tok, &b).unwrap();
+        assert_eq!(receipts.len(), 2);
+        let t1 = s.task_queue(e).pop().unwrap().unwrap();
+        let t2 = s.task_queue(e).pop().unwrap().unwrap();
+        assert!(t1.input_ref.is_none());
+        assert!(t2.input_ref.is_some());
     }
 
     #[test]

@@ -29,6 +29,9 @@ use crate::service::api::FuncXService;
 #[derive(Default)]
 pub struct ForwarderStats {
     pub dispatched: AtomicU64,
+    /// Subset of `dispatched` that carried a `DataRef` instead of
+    /// inline input bytes (§5 pass-by-reference dispatch).
+    pub ref_dispatched: AtomicU64,
     pub results: AtomicU64,
     pub heartbeats: AtomicU64,
     pub requeued: AtomicU64,
@@ -150,6 +153,10 @@ fn forwarder_loop(
                 svc.latency.on_forwarded(t.id, now);
             }
             stats.dispatched.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            let refs = batch.iter().filter(|t| t.dispatches_by_ref()).count() as u64;
+            if refs > 0 {
+                stats.ref_dispatched.fetch_add(refs, Ordering::Relaxed);
+            }
             if !link.send(Downstream::Tasks(batch)) {
                 continue; // next iteration handles the lost link
             }

@@ -17,6 +17,19 @@ pub struct SimProfile {
     pub rtt_s: f64,
     /// Containers (worker slots) per node.
     pub workers_per_node: usize,
+    /// Serial agent-link bandwidth for *inline* task input bytes,
+    /// bytes/s (the dispatch loop ships each inline payload through the
+    /// forwarder→agent wire).
+    pub wire_bps: f64,
+    /// Inputs strictly above this size dispatch as a fixed-size
+    /// `DataRef` frame instead of inline bytes (§5 pass-by-reference;
+    /// mirrors `ServiceConfig::max_payload_bytes` and its
+    /// `len > cap` offload rule).
+    pub ref_threshold_bytes: u64,
+    /// Intra-endpoint data-store read bandwidth, bytes/s — what a
+    /// worker pays once to fetch a by-ref input from the in-memory
+    /// store (§5.2, Fig. 5's fastest adopted channel).
+    pub store_bps: f64,
 }
 
 impl SimProfile {
@@ -31,6 +44,9 @@ impl SimProfile {
             worker_overhead_s: 0.150,
             rtt_s: 0.0112, // §7.5: 118 s / 10 000 unbatched no-ops
             workers_per_node: 64,
+            wire_bps: 1.25e9,                      // 10 Gb/s service link
+            ref_threshold_bytes: 10 * 1024 * 1024, // §5.1 data cap
+            store_bps: 1.0e10,                     // in-memory store read
         }
     }
 
@@ -44,6 +60,9 @@ impl SimProfile {
             worker_overhead_s: 0.175,
             rtt_s: 0.0125,
             workers_per_node: 256,
+            wire_bps: 1.25e9,
+            ref_threshold_bytes: 10 * 1024 * 1024,
+            store_bps: 1.0e10,
         }
     }
 
@@ -56,6 +75,9 @@ impl SimProfile {
             worker_overhead_s: 0.002,
             rtt_s: 0.001,
             workers_per_node: 8,
+            wire_bps: 1.25e10, // cloud-local 100 Gb/s
+            ref_threshold_bytes: 10 * 1024 * 1024,
+            store_bps: 2.0e10,
         }
     }
 

@@ -106,6 +106,13 @@ impl TransferService {
         Ok(s.setup_s.max(d.setup_s) + bytes as f64 / bw)
     }
 
+    /// Estimated duration for moving `file` to `dst` — the cost the
+    /// data fabric's fetch ladder consults before routing a
+    /// GlobusFile-sized [`crate::datastore::DataRef`] wide-area (§5.1).
+    pub fn estimate_file(&self, file: &GlobusFile, dst: Uuid) -> Result<f64> {
+        self.estimate(file.endpoint, dst, file.size_bytes)
+    }
+
     /// Submit an async third-party transfer; data moves directly between
     /// the source and destination systems (GridFTP), not through funcX.
     pub fn submit(
@@ -191,6 +198,16 @@ mod tests {
         // 1 GB over the 1 Gb/s link: 8 s + 2 s setup.
         let est = ts.estimate(alcf, campus, 1_000_000_000).unwrap();
         assert!((est - 10.0).abs() < 0.5, "estimate {est}");
+    }
+
+    #[test]
+    fn estimate_file_matches_estimate() {
+        let (ts, alcf, campus) = svc();
+        let f = GlobusFile { endpoint: alcf, path: "/data/x".into(), size_bytes: 1_000_000_000 };
+        assert_eq!(
+            ts.estimate_file(&f, campus).unwrap(),
+            ts.estimate(alcf, campus, 1_000_000_000).unwrap()
+        );
     }
 
     #[test]

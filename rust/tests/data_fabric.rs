@@ -1,0 +1,227 @@
+//! End-to-end pins for the data fabric (§5): pass-by-reference dispatch
+//! through the live stack, tier spill/reload byte-identity, the
+//! cross-endpoint fetch ladder, and clean failure (`Error::NotFound`,
+//! never a panic) when a ref's frame has been evicted by TTL.
+
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::Arc;
+use std::time::Duration;
+
+use funcx::common::config::{EndpointConfig, ServiceConfig};
+use funcx::common::ids::EndpointId;
+use funcx::common::task::Payload;
+use funcx::common::time::WallClock;
+use funcx::datastore::{
+    checksum, DataFabric, FetchPlan, Tier, TieredConfig, TieredStore, SERVICE_OWNER,
+};
+use funcx::endpoint::{link, EndpointBuilder};
+use funcx::metrics::Counters;
+use funcx::serialize::{pack, Value};
+use funcx::service::FuncXService;
+use funcx::transfer::TransferService;
+
+/// Tier round-trip acceptance pin: a frame that spills to the disk tier
+/// reloads byte-identical (same checksum, same packed-frame bytes), and
+/// a memory-tier hit is pointer-identical to the stored frame — zero
+/// decode/re-encode on either fetch path.
+#[test]
+fn spilled_frames_round_trip_byte_identical() {
+    let store = TieredStore::new(
+        EndpointId::new(),
+        TieredConfig { mem_high_watermark: 96 * 1024, default_ttl_s: 0.0, spool_dir: None },
+    )
+    .unwrap();
+    let a = pack(&Value::Bytes(vec![0xA1; 64 * 1024]), 0).unwrap();
+    let b = pack(&Value::Bytes(vec![0xB2; 64 * 1024]), 0).unwrap();
+    let ra = store.put("a", a.clone(), 0.0).unwrap();
+    store.put("b", b.clone(), 0.0).unwrap();
+
+    // The watermark fits one frame: the older key spilled to disk.
+    assert_eq!(store.tier_of("a"), Some(Tier::Disk));
+    assert_eq!(store.tier_of("b"), Some(Tier::Memory));
+    assert!(store.stats.spills.load(Relaxed) >= 1);
+
+    // Memory-tier get: the SAME allocation (pointer pin).
+    let got_b = store.get("b", 0.0).unwrap();
+    assert!(got_b.same_allocation(&b), "memory tier must hand back the stored frame");
+
+    // Disk-tier get: byte-identical reload of the raw wire bytes.
+    let got_a = store.get("a", 0.0).unwrap();
+    assert_eq!(got_a.as_slice(), a.as_slice(), "spill/reload must be byte-identical");
+    assert_eq!(checksum(got_a.as_slice()), ra.checksum);
+    // Still the original packed frame: unpacking yields the original
+    // value without any re-encode having happened in between.
+    assert_eq!(
+        funcx::serialize::unpack(&got_a).unwrap(),
+        Value::Bytes(vec![0xA1; 64 * 1024])
+    );
+}
+
+/// The full pass-by-reference lifecycle through the live stack: an
+/// input above the service cap is offloaded at submit, the task crosses
+/// the queues as a compact ref, and the worker resolves the frame from
+/// the service store through the endpoint's fabric.
+#[test]
+fn large_payload_dispatches_by_reference_end_to_end() {
+    let clock = Arc::new(WallClock::new());
+    let svc = FuncXService::new(ServiceConfig {
+        max_payload_bytes: 4096, // force by-ref for a 64 KB input
+        ..Default::default()
+    })
+    .with_clock(clock.clone());
+    let (_u, tok) = svc.bootstrap_user("alice");
+    let f = svc.register_function(&tok, "echo", Payload::Echo, None).unwrap();
+    let e = svc.register_endpoint(&tok, "laptop", "").unwrap();
+
+    // Endpoint-side fabric, peered with the service's payload store.
+    let local = Arc::new(TieredStore::new(e, TieredConfig::default()).unwrap());
+    let fabric = Arc::new(DataFabric::new(local));
+    fabric.connect_peer(SERVICE_OWNER, svc.fabric.local().clone());
+
+    let (fwd, agent_side) = link();
+    let handle = EndpointBuilder::new()
+        .config(EndpointConfig { min_nodes: 1, workers_per_node: 2, ..Default::default() })
+        .fabric(fabric.clone())
+        .clock(clock)
+        .heartbeat_period(0.05)
+        .start(agent_side);
+    let fh = svc.connect_endpoint(e, fwd).unwrap();
+
+    let input = Value::Bytes(vec![0x5A; 64 * 1024]);
+    let r = svc.submit(&tok, f, e, &input).unwrap();
+    let out = svc.wait_result(r.task, Duration::from_secs(10)).unwrap();
+    assert_eq!(out, input, "by-ref echo returns the original payload");
+
+    assert_eq!(Counters::get(&svc.counters.tasks_ref_dispatched), 1);
+    assert!(Counters::get(&svc.counters.bytes_offloaded) >= 64 * 1024);
+    assert_eq!(fh.stats.ref_dispatched.load(Relaxed), 1);
+    assert!(
+        fabric.stats.frames_forwarded.load(Relaxed) + fabric.stats.cache_hits.load(Relaxed)
+            >= 1,
+        "the worker resolved the frame through the fabric"
+    );
+
+    fh.shutdown();
+    handle.join();
+}
+
+/// Satellite pin: a ref whose frame was evicted from the store (here
+/// deterministically removed; TTL expiry takes the same `NotFound`
+/// path, unit-pinned in `datastore::tiered`) fails the task with a
+/// clean `not found` error at the worker on dispatch — no panic,
+/// terminal Failed state, message surfaced to `get_result`.
+#[test]
+fn evicted_ref_fails_cleanly_on_dispatch() {
+    let clock = Arc::new(WallClock::new());
+    let svc = FuncXService::new(ServiceConfig {
+        max_payload_bytes: 1024,
+        ..Default::default()
+    })
+    .with_clock(clock.clone());
+    let (_u, tok) = svc.bootstrap_user("alice");
+    let f = svc.register_function(&tok, "echo", Payload::Echo, None).unwrap();
+    let e = svc.register_endpoint(&tok, "laptop", "").unwrap();
+
+    // Submit while no agent is connected: the by-ref task waits in the
+    // queue; meanwhile its frame is evicted from the service store.
+    let input = Value::Bytes(vec![0x77; 16 * 1024]);
+    let r = svc.submit(&tok, f, e, &input).unwrap();
+    assert!(
+        svc.fabric.local().remove(&format!("task-input:{}", r.task)).unwrap(),
+        "the offloaded input frame is keyed by task id"
+    );
+
+    let local = Arc::new(TieredStore::new(e, TieredConfig::default()).unwrap());
+    let fabric = Arc::new(DataFabric::new(local));
+    fabric.connect_peer(SERVICE_OWNER, svc.fabric.local().clone());
+    let (fwd, agent_side) = link();
+    let handle = EndpointBuilder::new()
+        .config(EndpointConfig { min_nodes: 1, workers_per_node: 1, ..Default::default() })
+        .fabric(fabric)
+        .clock(clock)
+        .heartbeat_period(0.05)
+        .start(agent_side);
+    let fh = svc.connect_endpoint(e, fwd).unwrap();
+
+    match svc.wait_result(r.task, Duration::from_secs(10)) {
+        Err(funcx::Error::TaskFailed(msg)) => {
+            assert!(msg.contains("not found"), "expected a NotFound failure, got: {msg}");
+        }
+        other => panic!("evicted ref must fail the task cleanly, got {other:?}"),
+    }
+
+    fh.shutdown();
+    handle.join();
+}
+
+/// An endpoint with no fabric attached fails by-ref tasks cleanly too
+/// (the capability is opt-in, like the data channel and the runtime).
+#[test]
+fn missing_fabric_fails_ref_tasks_cleanly() {
+    let svc = FuncXService::new(ServiceConfig {
+        max_payload_bytes: 1024,
+        ..Default::default()
+    });
+    let (_u, tok) = svc.bootstrap_user("alice");
+    let f = svc.register_function(&tok, "echo", Payload::Echo, None).unwrap();
+    let e = svc.register_endpoint(&tok, "laptop", "").unwrap();
+    let (fwd, agent_side) = link();
+    let handle = EndpointBuilder::new()
+        .config(EndpointConfig { min_nodes: 1, workers_per_node: 1, ..Default::default() })
+        .heartbeat_period(0.05)
+        .start(agent_side);
+    let fh = svc.connect_endpoint(e, fwd).unwrap();
+
+    let r = svc.submit(&tok, f, e, &Value::Bytes(vec![1; 8192])).unwrap();
+    match svc.wait_result(r.task, Duration::from_secs(10)) {
+        Err(funcx::Error::TaskFailed(msg)) => {
+            assert!(msg.contains("no data fabric"), "got: {msg}");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    fh.shutdown();
+    handle.join();
+}
+
+/// The cross-endpoint fetch ladder: direct raw-frame forwarding below
+/// the wide-area threshold, the Globus transfer model at/above it.
+#[test]
+fn fetch_ladder_forwards_frames_and_falls_back_to_globus() {
+    let owner_a = EndpointId::new();
+    let owner_b = EndpointId::new();
+    let sa = Arc::new(TieredStore::new(owner_a, TieredConfig::default()).unwrap());
+    let sb = Arc::new(TieredStore::new(owner_b, TieredConfig::default()).unwrap());
+    let fab = DataFabric::new(sb);
+    fab.connect_peer(owner_a, sa.clone());
+    let ts = TransferService::new();
+    let ga = ts.register_endpoint("a#dtn", 1.25e9, 2.0);
+    let gb = ts.register_endpoint("b#dtn", 1.25e9, 2.0);
+    fab.with_wide_area(ts.clone(), 1024 * 1024);
+    fab.map_storage(owner_a, ga);
+    fab.map_storage(owner_b, gb);
+
+    // Small frame: endpoint-to-endpoint forward of the raw wire bytes.
+    let small = pack(&Value::Bytes(vec![1; 512]), 0).unwrap();
+    let r_small = sa.put("small", small.clone(), 0.0).unwrap();
+    assert_eq!(fab.plan(&r_small, 0.0), FetchPlan::PeerForward);
+    let got = fab.resolve(&r_small, 0.0).unwrap();
+    assert!(got.same_allocation(&small), "in-process forward shares the frame allocation");
+    assert_eq!(fab.stats.frames_forwarded.load(Relaxed), 1);
+    // Re-resolving hits the local cache and counts the hit.
+    fab.resolve(&r_small, 0.0).unwrap();
+    assert_eq!(fab.stats.cache_hits.load(Relaxed), 1);
+    assert_eq!(fab.cache_hits_of(&r_small), 1);
+
+    // GlobusFile-sized frame: the ladder routes it through the modeled
+    // wide-area transfer (setup + wire time on the 10 Gb/s pair).
+    let big = pack(&Value::Bytes(vec![2; 2 * 1024 * 1024]), 0).unwrap();
+    let r_big = sa.put("big", big.clone(), 0.0).unwrap();
+    match fab.plan(&r_big, 0.0) {
+        FetchPlan::Globus { est_s } => assert!(est_s > 2.0, "estimate {est_s}"),
+        other => panic!("expected Globus plan, got {other:?}"),
+    }
+    let got = fab.resolve(&r_big, 0.0).unwrap();
+    assert_eq!(got.as_slice(), big.as_slice());
+    assert_eq!(fab.stats.globus_transfers.load(Relaxed), 1);
+    assert!(ts.in_flight_bytes(ga, gb, 0.5) >= 2 * 1024 * 1024);
+}

@@ -111,6 +111,7 @@ fn dispatch_forwarder_link_manager_is_zero_copy() {
         results: tx,
         wake: Arc::new(funcx::common::sync::Notify::new()),
         result_batch: 1,
+        fabric: None,
         clock: Arc::new(WallClock::new()),
         latency: Arc::new(LatencyBreakdown::new()),
         start_model: TABLE3_MODELS.lookup(SystemProfile::Local, ContainerTech::None),
