@@ -9,11 +9,13 @@ mod harness;
 
 use std::sync::Arc;
 
-use funcx::common::ids::{EndpointId, FunctionId, UserId};
+use funcx::common::ids::{ContainerId, EndpointId, FunctionId, UserId};
 use funcx::common::task::{Payload, Task};
 use funcx::data::{DataChannel, SharedFsChannel};
 use funcx::datastore::{DataFabric, TieredConfig, TieredStore};
+use funcx::routing::WarmingAware;
 use funcx::serialize::{pack, Buffer, Value, Wire};
+use funcx::sim::{SimEndpoint, SimProfile, SimTask};
 
 fn frame_of(len: usize) -> Buffer {
     pack(&Value::Bytes(vec![0xA5; len]), 0).unwrap()
@@ -157,6 +159,45 @@ fn main() {
             t_inline / t_ref
         );
         harness::record("ref vs inline speedup (8MB)", t_inline / t_ref, "x");
+    }
+
+    harness::section("ref-forwarded chain vs inline (3 stages, 64MB intermediates; sim)");
+    {
+        // The A → B → C shape: A's output feeds B, B's feeds C. With
+        // result offload + ref forwarding the intermediates stay in the
+        // endpoint store (ref frames on the wire, one store fetch per
+        // hop); inline they cross the serial agent wire both ways.
+        let mb64 = 64 * 1024 * 1024;
+        let stages = [
+            SimTask::noop().with_output_bytes(mb64),
+            SimTask::noop().with_input_bytes(mb64).with_output_bytes(mb64),
+            SimTask::noop().with_input_bytes(mb64),
+        ];
+        let run_chain = |profile: SimProfile| {
+            let mut ep = SimEndpoint::new(profile, 1, Box::new(WarmingAware::default()), true, 5)
+                .deterministic_cold(true);
+            ep.prewarm(&[ContainerId(funcx::Uuid::NIL)]);
+            ep.run_chain(&stages)
+        };
+        let by_ref = run_chain(SimProfile::theta());
+        let mut inline_profile = SimProfile::theta();
+        inline_profile.ref_threshold_bytes = u64::MAX;
+        let inline = run_chain(inline_profile);
+        harness::record("chain completion ref-forwarded (3x64MB)", by_ref * 1e3, "ms");
+        harness::record("chain completion inline (3x64MB)", inline * 1e3, "ms");
+        harness::record("ref chain speedup (3x64MB)", inline / by_ref, "x");
+        println!(
+            "  => ref-forwarded chain {:.0} ms vs inline {:.0} ms ({:.2}x)",
+            by_ref * 1e3,
+            inline * 1e3,
+            inline / by_ref
+        );
+        // Acceptance: keeping intermediates in the store must beat
+        // shipping them through the service path inline.
+        assert!(
+            inline > by_ref,
+            "ref-forwarded chain ({by_ref}s) must beat inline ({inline}s)"
+        );
     }
 
     harness::write_json("BENCH_datastore.json");

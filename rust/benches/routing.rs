@@ -87,6 +87,7 @@ fn main() {
                         available_slots: 8,
                         total_slots: 10,
                         queued: 0,
+                        endpoint: None,
                     }
                 })
                 .collect()

@@ -135,9 +135,15 @@ impl ResultBuffer {
     }
 
     /// Append one result; flushes when the adaptive threshold is reached
-    /// or when `idle` says no more completions are imminent.
+    /// or when `idle` says no more completions are imminent. A result
+    /// travelling by reference (`output_ref` set) bypasses the adaptive
+    /// buffer and flushes immediately: its frame is a ~100-byte ref, so
+    /// there is no wire traffic to amortise, while the consumer may be
+    /// blocked waiting to chain a follow-on task on exactly this ref —
+    /// buffering it would trade nothing for tail latency.
     pub fn push(&self, r: TaskResult, idle: bool) {
         let now = self.clock.now();
+        let flush_now = idle || r.returns_by_ref();
         let mut g = self.inner.lock().expect("result buffer poisoned");
         if let Some(last) = g.last_push {
             let gap = (now - last).max(0.0);
@@ -145,7 +151,7 @@ impl ResultBuffer {
         }
         g.last_push = Some(now);
         g.buf.push(r);
-        if g.buf.len() >= adaptive_threshold(g.ewma_gap_s, self.floor) || idle {
+        if g.buf.len() >= adaptive_threshold(g.ewma_gap_s, self.floor) || flush_now {
             let out = std::mem::take(&mut g.buf);
             drop(g);
             self.send(out);
@@ -233,6 +239,7 @@ mod tests {
             task: crate::common::ids::TaskId::new(),
             state: crate::common::task::TaskState::Success,
             output: Buffer::empty(),
+            output_ref: None,
             exec_time_s: 0.0,
             cold_start: false,
         }
@@ -304,6 +311,27 @@ mod tests {
             let t = adaptive_threshold(gap, 16);
             assert!((16..=MAX_ADAPTIVE_BATCH).contains(&t));
         }
+    }
+
+    #[test]
+    fn by_ref_results_bypass_the_buffer() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let clock = Arc::new(crate::common::time::WallClock::new());
+        let rb = ResultBuffer::new(64, tx, Arc::new(Notify::new()), clock);
+        rb.push(mk_result(), false);
+        assert!(rx.try_recv().is_err(), "inline result buffers below the floor");
+        let mut r = mk_result();
+        r.output_ref = Some(crate::datastore::DataRef {
+            owner: EndpointId::new(),
+            epoch: 1,
+            key: "task-result:x".into(),
+            size: 1 << 20,
+            checksum: 7,
+        });
+        rb.push(r, false);
+        // The ref flushes immediately and carries the buffered inline
+        // sibling out with it.
+        assert_eq!(rx.try_recv().unwrap().len(), 2, "ref result must flush the buffer");
     }
 
     #[test]

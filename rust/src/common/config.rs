@@ -73,6 +73,16 @@ pub struct EndpointConfig {
     /// EWMA of the completion rate, never dropping below this value (see
     /// [`crate::batching::ResultBuffer`]). 1 disables buffering.
     pub result_batch: usize,
+    /// Max serialized *output* size carried inline through the result
+    /// queues (the return-path mirror of
+    /// [`ServiceConfig::max_payload_bytes`]). A successful result larger
+    /// than this is `put()` into the endpoint's data-fabric store and
+    /// the [`crate::common::task::TaskResult`] carries a
+    /// [`crate::datastore::DataRef`] (`"rref"` trailer-meta field)
+    /// instead of the bytes; `get_result` resolves it through the
+    /// service-side fabric ladder. Endpoints without a fabric attached
+    /// always return results inline.
+    pub max_result_bytes: usize,
 }
 
 impl Default for EndpointConfig {
@@ -88,6 +98,7 @@ impl Default for EndpointConfig {
             prefetch: 4,
             internal_batching: true,
             result_batch: 32,
+            max_result_bytes: 10 * 1024 * 1024,
         }
     }
 }

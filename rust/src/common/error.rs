@@ -27,6 +27,10 @@ pub enum Error {
     Provider(String),
     /// Data-plane (store/transfer) failure.
     Data(String),
+    /// A fetched frame failed its [`crate::datastore::DataRef`]
+    /// size/checksum verification (truncation or bit corruption — the
+    /// bytes exist but cannot be trusted, unlike [`Error::NotFound`]).
+    Corrupt(String),
     /// PJRT runtime failure (artifact load/compile/execute).
     Runtime(String),
     /// Operation timed out.
@@ -51,6 +55,7 @@ impl fmt::Display for Error {
             Error::Shutdown(m) => write!(f, "shutdown: {m}"),
             Error::Provider(m) => write!(f, "provider: {m}"),
             Error::Data(m) => write!(f, "data: {m}"),
+            Error::Corrupt(m) => write!(f, "corrupt: {m}"),
             Error::Runtime(m) => write!(f, "runtime: {m}"),
             Error::Timeout(m) => write!(f, "timeout: {m}"),
             Error::Io(e) => write!(f, "io: {e}"),
@@ -86,6 +91,7 @@ mod tests {
             Error::Shutdown("x".into()),
             Error::Provider("x".into()),
             Error::Data("x".into()),
+            Error::Corrupt("x".into()),
             Error::Runtime("x".into()),
             Error::Timeout("x".into()),
             Error::Io(std::io::Error::new(std::io::ErrorKind::Other, "x")),

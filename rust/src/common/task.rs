@@ -309,8 +309,17 @@ impl Wire for Task {
 pub struct TaskResult {
     pub task: TaskId,
     pub state: TaskState,
-    /// Serialized output (or traceback when `state == Failed`).
+    /// Serialized output (or traceback when `state == Failed`). Empty
+    /// when the result travels by reference.
     pub output: Buffer,
+    /// Pass-by-reference output (§5 result offload, the return-path
+    /// mirror of [`Task::input_ref`]): set when the worker's output
+    /// exceeded [`crate::common::config::EndpointConfig::max_result_bytes`]
+    /// and was `put()` into the endpoint's store. Rides in the trailer
+    /// meta under `rref` (absent for inline results, so pre-extension
+    /// frames decode unchanged); `get_result` resolves it through the
+    /// service-side fabric ladder.
+    pub output_ref: Option<DataRef>,
     /// Worker-measured execution time t_w (Fig. 3).
     pub exec_time_s: f64,
     /// Whether the serving container was started cold for this task.
@@ -318,19 +327,35 @@ pub struct TaskResult {
 }
 
 impl TaskResult {
+    /// Whether this result's output travels as a [`DataRef`].
+    pub fn returns_by_ref(&self) -> bool {
+        self.output_ref.is_some()
+    }
+
     fn meta_value(&self) -> Value {
-        Value::map([
+        let mut m = match Value::map([
             ("task", self.task.to_value()),
             ("state", Value::Str(self.state.name().into())),
             ("t_w", Value::Float(self.exec_time_s)),
             ("cold", Value::Bool(self.cold_start)),
-        ])
+        ]) {
+            Value::Map(m) => m,
+            _ => unreachable!("Value::map builds a map"),
+        };
+        if let Some(r) = &self.output_ref {
+            m.insert("rref".into(), r.to_value());
+        }
+        Value::Map(m)
     }
 
     fn from_meta(v: &Value, output: Buffer) -> Result<Self> {
         let field = |name: &str| {
             v.get(name)
                 .ok_or_else(|| Error::Serialization(format!("result: missing {name}")))
+        };
+        let output_ref = match v.get("rref") {
+            Some(rv) => Some(DataRef::from_value(rv)?),
+            None => None,
         };
         Ok(TaskResult {
             task: TaskId::from_value(field("task")?)?,
@@ -340,6 +365,7 @@ impl TaskResult {
                     .ok_or_else(|| Error::Serialization("result: state not str".into()))?,
             )?,
             output,
+            output_ref,
             exec_time_s: field("t_w")?
                 .as_float()
                 .ok_or_else(|| Error::Serialization("result: t_w not float".into()))?,
@@ -511,6 +537,7 @@ mod tests {
             task: TaskId::new(),
             state: TaskState::Success,
             output: Buffer::empty(),
+            output_ref: None,
             exec_time_s: 0.125,
             cold_start: true,
         };
@@ -519,6 +546,36 @@ mod tests {
         assert_eq!(back.state, r.state);
         assert_eq!(back.exec_time_s, r.exec_time_s);
         assert!(back.cold_start);
+        assert_eq!(back.output_ref, None, "inline results stay ref-free through the wire");
+    }
+
+    #[test]
+    fn ref_result_wire_roundtrip() {
+        let dref = DataRef {
+            owner: EndpointId::new(),
+            epoch: 5,
+            key: "task-result:abc".into(),
+            size: 98765,
+            checksum: 0xFEED_F00D,
+        };
+        let r = TaskResult {
+            task: TaskId::new(),
+            state: TaskState::Success,
+            output: Buffer::empty(),
+            output_ref: Some(dref.clone()),
+            exec_time_s: 0.5,
+            cold_start: false,
+        };
+        assert!(r.returns_by_ref());
+        // Both framings carry the ref; the frame itself stays compact
+        // (the offloaded bytes never enter it).
+        let frame = r.to_buffer();
+        assert!(frame.len() < 256, "by-ref result frame is {} bytes", frame.len());
+        let via_buffer = TaskResult::from_buffer(&frame).unwrap();
+        assert_eq!(via_buffer.output_ref, Some(dref.clone()));
+        assert_eq!(via_buffer.task, r.task);
+        let via_value = TaskResult::from_value(&r.to_value()).unwrap();
+        assert_eq!(via_value.output_ref, Some(dref));
     }
 
     #[test]

@@ -6,10 +6,27 @@
 //! existing lock-striped [`KvStore`] shards (put/get are O(1) in payload
 //! size); the disk tier writes the raw wire bytes to real files under a
 //! spool directory and reloads them with a single read.
+//!
+//! # Spool manifest & crash recovery
+//!
+//! The disk tier keeps an epoch-stamped manifest (`spool.manifest`)
+//! alongside its frame files: one line per spilled key recording the
+//! frame's size, checksum, and expiry stamp. Frame files are written
+//! *before* the manifest updates, and the manifest is replaced via
+//! write-to-temp + rename, so at any crash point the invariant holds:
+//! every manifest entry names a fully-written file, and a file without a
+//! manifest entry is an interrupted spill. [`DiskBackend::recover`]
+//! readopts the former (after re-verifying size + checksum) and reclaims
+//! the latter, closing the "crashed endpoint leaks spool files" gap;
+//! [`DiskBackend::new`] reclaims everything, for callers that want a
+//! clean store over a dirty directory.
 
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 
 use crate::common::error::Result;
+use crate::common::time::Time;
 use crate::serialize::Buffer;
 use crate::store::KvStore;
 
@@ -57,48 +74,251 @@ impl StoreBackend for MemoryBackend {
     }
 }
 
+/// What the spool manifest records for one spilled key (everything
+/// [`DiskBackend::recover`] needs to readopt the frame into a restarted
+/// store's index without decoding it).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpoolEntry {
+    /// Exact frame length in bytes.
+    pub size: u64,
+    /// [`super::dataref::checksum`] of the frame bytes.
+    pub checksum: u64,
+    /// Owner-stamped expiry (absent = no TTL).
+    pub expires_at: Option<Time>,
+}
+
+struct Manifest {
+    /// The owning store's generation, so readopted frames keep
+    /// resolving refs minted before the crash.
+    epoch: u64,
+    entries: HashMap<String, SpoolEntry>,
+}
+
+const MANIFEST_FILE: &str = "spool.manifest";
+
 /// Disk tier: one file per key under a spool directory (the Lustre/GPFS
 /// stand-in, but holding *wire frames*, not decoded values). Spill is
 /// `fs::write` of the frame bytes; reload is `fs::read` wrapped into a
-/// fresh shared allocation — zero decode/re-encode either way.
+/// fresh shared allocation — zero decode/re-encode either way. Every
+/// mutation also updates the epoch-stamped manifest (module docs).
 pub struct DiskBackend {
     root: PathBuf,
     /// Temp-dir spools are removed on drop; explicit spool dirs are not.
     owned: bool,
+    manifest: Mutex<Manifest>,
 }
 
 impl DiskBackend {
     /// Spool under an explicit directory (created if missing; kept on
-    /// drop).
+    /// drop). Starts **clean**: leftover frame files and manifest from a
+    /// previous store generation are reclaimed — use
+    /// [`DiskBackend::recover`] to readopt them instead.
     pub fn new(root: impl Into<PathBuf>) -> Result<Self> {
         let root = root.into();
         std::fs::create_dir_all(&root)?;
-        Ok(DiskBackend { root, owned: false })
+        let b = DiskBackend {
+            root,
+            owned: false,
+            manifest: Mutex::new(Manifest { epoch: 0, entries: HashMap::new() }),
+        };
+        b.reclaim_unlisted()?;
+        b.write_manifest()?;
+        Ok(b)
     }
 
     /// Spool under a unique temp directory (removed on drop).
     pub fn temp() -> Result<Self> {
         let root = std::env::temp_dir().join(format!("funcx-datastore-{}", crate::Uuid::new()));
         std::fs::create_dir_all(&root)?;
-        Ok(DiskBackend { root, owned: true })
+        let b = DiskBackend {
+            root,
+            owned: true,
+            manifest: Mutex::new(Manifest { epoch: 0, entries: HashMap::new() }),
+        };
+        b.write_manifest()?;
+        Ok(b)
+    }
+
+    /// Reopen a spool directory after a crash: every manifest entry
+    /// whose file re-verifies (size + checksum) is readopted and
+    /// returned; entries whose file is missing or damaged are dropped,
+    /// and frame files with no manifest entry (interrupted spills) are
+    /// reclaimed. The manifest's epoch survives, so refs minted before
+    /// the crash keep resolving against the recovered store.
+    pub fn recover(root: impl Into<PathBuf>) -> Result<(Self, Vec<(String, SpoolEntry)>)> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)?;
+        let loaded = load_manifest(&root.join(MANIFEST_FILE));
+        let mut adopted = Vec::new();
+        let mut manifest = Manifest { epoch: loaded.epoch, entries: HashMap::new() };
+        for (key, entry) in loaded.entries {
+            let path = path_for(&root, &key);
+            let ok = match std::fs::read(&path) {
+                Ok(bytes) => {
+                    bytes.len() as u64 == entry.size
+                        && super::dataref::checksum(&bytes) == entry.checksum
+                }
+                Err(_) => false,
+            };
+            if ok {
+                manifest.entries.insert(key.clone(), entry);
+                adopted.push((key, entry));
+            } else {
+                let _ = std::fs::remove_file(&path);
+            }
+        }
+        let b = DiskBackend { root, owned: false, manifest: Mutex::new(manifest) };
+        b.reclaim_unlisted()?;
+        b.write_manifest()?;
+        Ok((b, adopted))
     }
 
     pub fn root(&self) -> &Path {
         &self.root
     }
 
-    /// Sanitized, collision-proofed file name: keys may contain
-    /// separators from namespacing, and two keys must never map to the
-    /// same file, so the key's own hash is appended.
-    fn path_for(&self, key: &str) -> PathBuf {
-        let safe: String = key
-            .chars()
-            .take(64)
-            .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
-            .collect();
-        self.root
-            .join(format!("{safe}.{:016x}", super::dataref::checksum(key.as_bytes())))
+    /// The manifest's store generation (0 = never stamped).
+    pub fn epoch(&self) -> u64 {
+        self.manifest.lock().expect("spool manifest poisoned").epoch
     }
+
+    /// Stamp the owning store's generation into the manifest.
+    pub fn set_epoch(&self, epoch: u64) -> Result<()> {
+        self.manifest.lock().expect("spool manifest poisoned").epoch = epoch;
+        self.write_manifest()
+    }
+
+    /// Store a frame with its manifest record (the tiered store's spill
+    /// path; the trait `put` records no expiry). File first, manifest
+    /// second — see the module docs' crash invariant.
+    pub fn put_entry(&self, key: &str, frame: &Buffer, expires_at: Option<Time>) -> Result<()> {
+        std::fs::write(path_for(&self.root, key), frame.as_slice())?;
+        self.manifest.lock().expect("spool manifest poisoned").entries.insert(
+            key.to_string(),
+            SpoolEntry {
+                size: frame.len() as u64,
+                checksum: super::dataref::checksum(frame.as_slice()),
+                expires_at,
+            },
+        );
+        self.write_manifest()
+    }
+
+    /// Delete every frame file the manifest does not list (stale
+    /// generations, interrupted spills). The manifest itself and
+    /// non-spool files are left alone.
+    fn reclaim_unlisted(&self) -> Result<()> {
+        let g = self.manifest.lock().expect("spool manifest poisoned");
+        let listed: std::collections::HashSet<PathBuf> =
+            g.entries.keys().map(|k| path_for(&self.root, k)).collect();
+        drop(g);
+        for entry in std::fs::read_dir(&self.root)? {
+            let path = entry?.path();
+            if is_frame_file(&path) && !listed.contains(&path) {
+                let _ = std::fs::remove_file(&path);
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize the manifest via write-to-temp + rename, so a crash
+    /// mid-write leaves the previous manifest intact. The snapshot is
+    /// written and renamed *while holding the manifest lock*: dropping
+    /// it earlier would let two concurrent mutators race their renames
+    /// and persist the older snapshot (losing a fully-spilled frame to
+    /// the next recovery's orphan reclaim).
+    fn write_manifest(&self) -> Result<()> {
+        let g = self.manifest.lock().expect("spool manifest poisoned");
+        let mut out = format!("v1 {}\n", g.epoch);
+        for (key, e) in &g.entries {
+            let exp = match e.expires_at {
+                Some(t) => format!("{t}"),
+                None => "-".into(),
+            };
+            out.push_str(&format!("{} {} {} {}\n", hex(key.as_bytes()), e.size, e.checksum, exp));
+        }
+        let tmp = self.root.join(format!("{MANIFEST_FILE}.tmp"));
+        std::fs::write(&tmp, out)?;
+        std::fs::rename(&tmp, self.root.join(MANIFEST_FILE))?;
+        drop(g);
+        Ok(())
+    }
+}
+
+/// Sanitized, collision-proofed file name: keys may contain separators
+/// from namespacing, and two keys must never map to the same file, so
+/// the key's own hash is appended.
+fn path_for(root: &Path, key: &str) -> PathBuf {
+    let safe: String = key
+        .chars()
+        .take(64)
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+        .collect();
+    root.join(format!("{safe}.{:016x}", super::dataref::checksum(key.as_bytes())))
+}
+
+/// Spool frame files end in a 16-hex-digit key hash; the manifest and
+/// its temp file do not, so reclaim passes never touch them.
+fn is_frame_file(path: &Path) -> bool {
+    path.file_name()
+        .and_then(|n| n.to_str())
+        .and_then(|n| n.rsplit_once('.'))
+        .is_some_and(|(_, suffix)| {
+            suffix.len() == 16 && suffix.bytes().all(|b| b.is_ascii_hexdigit())
+        })
+}
+
+fn hex(bytes: &[u8]) -> String {
+    use std::fmt::Write;
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        let _ = write!(s, "{b:02x}");
+    }
+    s
+}
+
+fn unhex(s: &str) -> Option<String> {
+    if s.len() % 2 != 0 {
+        return None;
+    }
+    let bytes: Option<Vec<u8>> = (0..s.len())
+        .step_by(2)
+        .map(|i| u8::from_str_radix(&s[i..i + 2], 16).ok())
+        .collect();
+    String::from_utf8(bytes?).ok()
+}
+
+/// Parse a manifest file; unreadable or malformed content degrades to an
+/// empty manifest (recovery then reclaims everything — safe, not wrong).
+fn load_manifest(path: &Path) -> Manifest {
+    let mut m = Manifest { epoch: 0, entries: HashMap::new() };
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return m;
+    };
+    let mut lines = text.lines();
+    match lines.next().and_then(|h| h.strip_prefix("v1 ")).and_then(|e| e.parse::<u64>().ok()) {
+        Some(epoch) => m.epoch = epoch,
+        None => return m,
+    }
+    for line in lines {
+        let mut parts = line.split_ascii_whitespace();
+        let (Some(hkey), Some(size), Some(sum), Some(exp)) =
+            (parts.next(), parts.next(), parts.next(), parts.next())
+        else {
+            continue;
+        };
+        let (Some(key), Ok(size), Ok(checksum)) =
+            (unhex(hkey), size.parse::<u64>(), sum.parse::<u64>())
+        else {
+            continue;
+        };
+        let expires_at = if exp == "-" { None } else { exp.parse::<Time>().ok() };
+        if exp != "-" && expires_at.is_none() {
+            continue;
+        }
+        m.entries.insert(key, SpoolEntry { size, checksum, expires_at });
+    }
+    m
 }
 
 impl StoreBackend for DiskBackend {
@@ -107,11 +327,11 @@ impl StoreBackend for DiskBackend {
     }
 
     fn put(&self, key: &str, frame: &Buffer) -> Result<()> {
-        Ok(std::fs::write(self.path_for(key), frame.as_slice())?)
+        self.put_entry(key, frame, None)
     }
 
     fn get(&self, key: &str) -> Result<Option<Buffer>> {
-        match std::fs::read(self.path_for(key)) {
+        match std::fs::read(path_for(&self.root, key)) {
             Ok(v) => Ok(Some(Buffer::from_vec(v))),
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
             Err(e) => Err(e.into()),
@@ -119,11 +339,22 @@ impl StoreBackend for DiskBackend {
     }
 
     fn remove(&self, key: &str) -> Result<bool> {
-        match std::fs::remove_file(self.path_for(key)) {
-            Ok(()) => Ok(true),
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
-            Err(e) => Err(e.into()),
+        let existed = match std::fs::remove_file(path_for(&self.root, key)) {
+            Ok(()) => true,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => false,
+            Err(e) => return Err(e.into()),
+        };
+        let listed = self
+            .manifest
+            .lock()
+            .expect("spool manifest poisoned")
+            .entries
+            .remove(key)
+            .is_some();
+        if listed {
+            self.write_manifest()?;
         }
+        Ok(existed)
     }
 }
 
@@ -189,5 +420,82 @@ mod tests {
             assert!(root.exists());
         }
         assert!(!root.exists());
+    }
+
+    fn crash_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("funcx-spool-{tag}-{}", crate::Uuid::new()))
+    }
+
+    #[test]
+    fn recover_readopts_listed_and_reclaims_orphans() {
+        let dir = crash_dir("recover");
+        let frame = Buffer::from_vec(vec![0x5C; 2048]);
+        {
+            let b = DiskBackend::new(&dir).unwrap();
+            b.set_epoch(42).unwrap();
+            b.put_entry("task-result:a", &frame, Some(99.5)).unwrap();
+            b.put_entry("task-result:b", &Buffer::from_vec(vec![2; 64]), None).unwrap();
+            // Crash: the backend never runs cleanup.
+            std::mem::forget(b);
+        }
+        // Interrupted spill: a frame file with no manifest entry.
+        std::fs::write(dir.join("orphan.00112233aabbccdd"), [9u8; 100]).unwrap();
+        // Damaged file for a listed key: truncate it.
+        std::fs::write(path_for(&dir, "task-result:b"), [2u8; 10]).unwrap();
+
+        let (b, adopted) = DiskBackend::recover(&dir).unwrap();
+        assert_eq!(b.epoch(), 42, "recovery keeps the stamped epoch");
+        assert_eq!(adopted.len(), 1, "only the verifying entry readopts");
+        assert_eq!(adopted[0].0, "task-result:a");
+        assert_eq!(adopted[0].1.size, 2048);
+        assert_eq!(adopted[0].1.expires_at, Some(99.5));
+        assert_eq!(
+            b.get("task-result:a").unwrap().unwrap().as_slice(),
+            frame.as_slice(),
+            "readopted frame is byte-identical"
+        );
+        assert!(b.get("task-result:b").unwrap().is_none(), "damaged entry reclaimed");
+        // No leaked files: exactly one frame file + the manifest remain.
+        let frames = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter(|e| is_frame_file(&e.as_ref().unwrap().path()))
+            .count();
+        assert_eq!(frames, 1, "orphan and damaged files must be reclaimed");
+        drop(b);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn new_reclaims_stale_spool_files() {
+        let dir = crash_dir("clean");
+        {
+            let b = DiskBackend::new(&dir).unwrap();
+            b.put("k", &Buffer::from_vec(vec![1; 256])).unwrap();
+            std::mem::forget(b); // crash
+        }
+        let b = DiskBackend::new(&dir).unwrap();
+        assert!(b.get("k").unwrap().is_none(), "fresh store starts clean");
+        let frames = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter(|e| is_frame_file(&e.as_ref().unwrap().path()))
+            .count();
+        assert_eq!(frames, 0);
+        drop(b);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn manifest_roundtrips_entries() {
+        let dir = crash_dir("manifest");
+        let b = DiskBackend::new(&dir).unwrap();
+        b.set_epoch(7).unwrap();
+        b.put_entry("spaced key/with:sep", &Buffer::from_vec(vec![3; 128]), Some(12.25)).unwrap();
+        let m = load_manifest(&dir.join(MANIFEST_FILE));
+        assert_eq!(m.epoch, 7);
+        let e = m.entries.get("spaced key/with:sep").expect("key survives hex framing");
+        assert_eq!(e.size, 128);
+        assert_eq!(e.expires_at, Some(12.25));
+        drop(b);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

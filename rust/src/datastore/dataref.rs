@@ -44,10 +44,13 @@ pub struct DataRef {
 }
 
 impl DataRef {
-    /// Verify a fetched frame against the size/checksum pair.
+    /// Verify a fetched frame against the size/checksum pair. Both
+    /// failure shapes are [`Error::Corrupt`]: the bytes were found but
+    /// cannot be trusted (truncation or bit corruption), as opposed to
+    /// [`Error::NotFound`] for refs whose frame is simply gone.
     pub fn verify(&self, frame: &[u8]) -> Result<()> {
         if frame.len() as u64 != self.size {
-            return Err(Error::Data(format!(
+            return Err(Error::Corrupt(format!(
                 "ref {}: frame is {} bytes, expected {}",
                 self.key,
                 frame.len(),
@@ -55,7 +58,7 @@ impl DataRef {
             )));
         }
         if checksum(frame) != self.checksum {
-            return Err(Error::Data(format!("ref {}: checksum mismatch", self.key)));
+            return Err(Error::Corrupt(format!("ref {}: checksum mismatch", self.key)));
         }
         Ok(())
     }
@@ -118,10 +121,10 @@ mod tests {
     fn verify_rejects_truncation_and_corruption() {
         let data = vec![9u8; 4096];
         let r = mk_ref(&data);
-        assert!(r.verify(&data[..4095]).is_err());
+        assert!(matches!(r.verify(&data[..4095]), Err(Error::Corrupt(_))));
         let mut flipped = data.clone();
         flipped[100] ^= 0xFF;
-        assert!(r.verify(&flipped).is_err());
+        assert!(matches!(r.verify(&flipped), Err(Error::Corrupt(_))));
     }
 
     #[test]

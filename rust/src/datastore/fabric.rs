@@ -128,6 +128,14 @@ impl DataFabric {
         self.peers.lock().expect("fabric peers poisoned").insert(owner, store);
     }
 
+    /// Sever a peer (endpoint lost/disconnected): refs owned there
+    /// resolve to [`Error::NotFound`] from now on — except frames
+    /// already in the resolve cache, which keep serving (they were
+    /// fetched and verified while the peer was up).
+    pub fn disconnect_peer(&self, owner: EndpointId) -> bool {
+        self.peers.lock().expect("fabric peers poisoned").remove(&owner).is_some()
+    }
+
     /// Enable the wide-area (Globus) fallback for refs at or above
     /// `threshold_bytes`.
     pub fn with_wide_area(&self, transfer: TransferService, threshold_bytes: u64) {

@@ -30,7 +30,7 @@ mod dataref;
 mod fabric;
 mod tiered;
 
-pub use backend::{DiskBackend, MemoryBackend, StoreBackend};
+pub use backend::{DiskBackend, MemoryBackend, SpoolEntry, StoreBackend};
 pub use dataref::{checksum, DataRef, SERVICE_OWNER};
 pub use fabric::{DataFabric, FabricStats, FetchPlan};
 pub use tiered::{Tier, TierStats, TieredConfig, TieredStore};

@@ -19,11 +19,26 @@
 //!
 //! Like [`crate::store::KvStore`]'s TTL ops, every method takes the
 //! caller's clock reading so the simulator can drive expiry under
-//! virtual time. All parties touching one store — the owner writing
-//! frames and any fabric resolving against it — MUST share a clock
-//! (e.g. pass the service's clock to `EndpointBuilder::clock`): a
-//! reader whose `now` comes from a different epoch can expire entries
-//! early or keep them alive late (see ROADMAP: store-owned clocks).
+//! virtual time. By default all parties touching one store — the owner
+//! writing frames and any fabric resolving against it — MUST share a
+//! clock (e.g. pass the service's clock to `EndpointBuilder::clock`).
+//! For cross-endpoint deployments where that cannot hold, pin the store
+//! with [`TieredStore::with_owner_clock`]: expiry stamps *and* expiry
+//! decisions then both read the owner's clock and readers' skewed `now`
+//! arguments are ignored for TTL purposes, so a resolver whose clock
+//! runs fast cannot expire a live entry and one running slow cannot
+//! resurrect a dead one (owner-stamped expiry; pinned in
+//! `tests/fabric_faults.rs`).
+//!
+//! # Crash recovery
+//!
+//! The disk tier's epoch-stamped manifest (see
+//! [`crate::datastore::DiskBackend`]) makes spilled frames survive a
+//! crash: [`TieredStore::recover`] readopts every manifest entry whose
+//! file re-verifies — same epoch, same keys, byte-identical frames, so
+//! refs minted before the crash still resolve — and reclaims interrupted
+//! spills; [`TieredStore::new`] over the same directory instead starts
+//! clean, reclaiming the lot (spool GC).
 //!
 //! # Locking
 //!
@@ -35,11 +50,11 @@
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::common::error::{Error, Result};
 use crate::common::ids::EndpointId;
-use crate::common::time::Time;
+use crate::common::time::{Clock, Time};
 use crate::datastore::backend::{DiskBackend, MemoryBackend, StoreBackend};
 use crate::datastore::dataref::{checksum, DataRef};
 use crate::serialize::Buffer;
@@ -114,6 +129,10 @@ pub struct TieredStore {
     mem: MemoryBackend,
     disk: DiskBackend,
     index: Mutex<Index>,
+    /// When set, TTL stamps and expiry decisions read this clock and
+    /// ignore callers' `now` arguments (owner-stamped expiry — see the
+    /// module's clock contract).
+    owner_clock: Option<Arc<dyn Clock>>,
     pub stats: TierStats,
 }
 
@@ -123,15 +142,84 @@ impl TieredStore {
             Some(d) => DiskBackend::new(d.clone())?,
             None => DiskBackend::temp()?,
         };
+        let epoch = EPOCHS.fetch_add(1, Ordering::Relaxed);
+        disk.set_epoch(epoch)?;
         Ok(TieredStore {
             owner,
-            epoch: EPOCHS.fetch_add(1, Ordering::Relaxed),
+            epoch,
             cfg,
             mem: MemoryBackend::new(),
             disk,
             index: Mutex::new(Index { entries: HashMap::new(), seq: 0, mem_bytes: 0 }),
+            owner_clock: None,
             stats: TierStats::default(),
         })
+    }
+
+    /// Reopen a crashed store's spool (requires an explicit
+    /// `cfg.spool_dir`): disk-tier frames whose manifest record
+    /// re-verifies are readopted under the manifest's epoch — so
+    /// [`DataRef`]s minted before the crash still resolve, byte-identical
+    /// — and interrupted spills are reclaimed. Memory-tier contents died
+    /// with the process and are gone.
+    pub fn recover(owner: EndpointId, cfg: TieredConfig) -> Result<Self> {
+        let dir = cfg.spool_dir.clone().ok_or_else(|| {
+            Error::InvalidArgument("recover requires an explicit spool_dir".into())
+        })?;
+        let (disk, adopted) = DiskBackend::recover(dir)?;
+        let mut epoch = disk.epoch();
+        if epoch == 0 {
+            // Nothing to readopt from (no stamped manifest): behave like
+            // a fresh store.
+            epoch = EPOCHS.fetch_add(1, Ordering::Relaxed);
+            disk.set_epoch(epoch)?;
+        } else {
+            // Keep future fresh epochs distinct from the readopted one.
+            EPOCHS.fetch_max(epoch + 1, Ordering::Relaxed);
+        }
+        let mut entries = HashMap::new();
+        let mut seq = 0u64;
+        for (key, e) in adopted {
+            seq += 1;
+            entries.insert(
+                key,
+                Entry {
+                    size: e.size as usize,
+                    checksum: e.checksum,
+                    tier: Tier::Disk,
+                    last_access: seq,
+                    expires_at: e.expires_at,
+                },
+            );
+        }
+        Ok(TieredStore {
+            owner,
+            epoch,
+            cfg,
+            mem: MemoryBackend::new(),
+            disk,
+            index: Mutex::new(Index { entries, seq, mem_bytes: 0 }),
+            owner_clock: None,
+            stats: TierStats::default(),
+        })
+    }
+
+    /// Pin TTL stamps and expiry decisions to this store's own clock
+    /// (owner-stamped expiry): callers' `now` arguments are then ignored
+    /// for TTL purposes, so cross-endpoint resolvers with skewed clocks
+    /// cannot mis-expire entries. Call before sharing the store.
+    pub fn with_owner_clock(mut self, clock: Arc<dyn Clock>) -> Self {
+        self.owner_clock = Some(clock);
+        self
+    }
+
+    /// The clock reading expiry logic should use: the owner clock when
+    /// pinned, the caller's `now` otherwise.
+    fn ttl_now(&self, caller_now: Time) -> Time {
+        match &self.owner_clock {
+            Some(c) => c.now(),
+            None => caller_now,
+        }
     }
 
     pub fn owner(&self) -> EndpointId {
@@ -160,7 +248,7 @@ impl TieredStore {
         let size = frame.len();
         let sum = checksum(frame.as_slice());
         let ttl = ttl_s.unwrap_or(self.cfg.default_ttl_s);
-        let expires_at = (ttl > 0.0).then_some(now + ttl);
+        let expires_at = (ttl > 0.0).then_some(self.ttl_now(now) + ttl);
         let mut idx = self.index.lock().expect("tiered index poisoned");
         // Overwrite: drop the previous generation of the key first.
         if let Some(old) = idx.entries.remove(key) {
@@ -215,7 +303,10 @@ impl TieredStore {
                 .mem
                 .get(&k)?
                 .ok_or_else(|| Error::Data(format!("tier index out of sync for {k}")))?;
-            self.disk.put(&k, &frame)?;
+            // Spill with the entry's expiry stamp so the spool manifest
+            // can readopt it (with its TTL) after a crash.
+            let expires_at = idx.entries.get(&k).and_then(|e| e.expires_at);
+            self.disk.put_entry(&k, &frame, expires_at)?;
             self.mem.remove(&k)?;
             let e = idx.entries.get_mut(&k).expect("victim is indexed");
             e.tier = Tier::Disk;
@@ -231,6 +322,7 @@ impl TieredStore {
     /// expired keys; a disk hit promotes the frame back to memory when
     /// it fits the remaining headroom.
     pub fn get(&self, key: &str, now: Time) -> Result<Buffer> {
+        let now = self.ttl_now(now);
         let mut idx = self.index.lock().expect("tiered index poisoned");
         let Some(e) = idx.entries.get(key) else {
             return Err(Error::NotFound(format!("data key {key}")));
@@ -327,6 +419,7 @@ impl TieredStore {
 
     /// Eagerly drop every expired entry; returns how many were evicted.
     pub fn evict_expired(&self, now: Time) -> usize {
+        let now = self.ttl_now(now);
         let mut idx = self.index.lock().expect("tiered index poisoned");
         let expired: Vec<String> = idx
             .entries
@@ -367,6 +460,7 @@ impl TieredStore {
     /// [`crate::datastore::DataFabric::plan`]: a `Some` answer means
     /// [`TieredStore::get`] at the same `now` would succeed.
     pub fn live_tier(&self, key: &str, now: Time) -> Option<Tier> {
+        let now = self.ttl_now(now);
         let idx = self.index.lock().expect("tiered index poisoned");
         let e = idx.entries.get(key)?;
         if e.expires_at.is_some_and(|t| now >= t) {
@@ -514,6 +608,62 @@ mod tests {
         assert_eq!(s.len(), 1);
         let got = s.resolve(&r, 0.0).unwrap();
         assert_eq!(got.as_slice(), frame(2, 1 << 10).as_slice());
+    }
+
+    #[test]
+    fn owner_clock_overrides_reader_skew() {
+        let vc = crate::common::time::VirtualClock::new();
+        let s = TieredStore::new(
+            EndpointId::new(),
+            TieredConfig { mem_high_watermark: 1 << 20, default_ttl_s: 10.0, spool_dir: None },
+        )
+        .unwrap()
+        .with_owner_clock(Arc::new(vc.clone()));
+        let r = s.put("k", frame(1, 64), 777.0).unwrap(); // caller's now is ignored
+        // A reader whose clock runs far ahead cannot expire the entry…
+        assert!(s.get("k", 1e6).is_ok());
+        assert!(s.resolve(&r, 1e6).is_ok());
+        assert_eq!(s.live_tier("k", 1e6), Some(Tier::Memory));
+        // …and one running far behind cannot resurrect it once the
+        // owner's clock passes the stamp.
+        vc.advance_to(11.0);
+        assert_eq!(s.live_tier("k", -1e6), None);
+        assert!(matches!(s.get("k", -1e6), Err(Error::NotFound(_))));
+    }
+
+    #[test]
+    fn recover_readopts_spilled_frames_under_the_old_epoch() {
+        let dir =
+            std::env::temp_dir().join(format!("funcx-tiered-recover-{}", crate::Uuid::new()));
+        let owner = EndpointId::new();
+        let cfg = TieredConfig {
+            mem_high_watermark: 0, // everything spills immediately
+            default_ttl_s: 0.0,
+            spool_dir: Some(dir.clone()),
+        };
+        let (r1, epoch1, bytes) = {
+            let s = TieredStore::new(owner, cfg.clone()).unwrap();
+            let f = frame(0x3C, 8 << 10);
+            let r = s.put("k1", f.clone(), 0.0).unwrap();
+            s.put("k2", frame(0x4D, 4 << 10), 0.0).unwrap();
+            assert_eq!(s.tier_of("k1"), Some(Tier::Disk));
+            let (epoch, bytes) = (s.epoch(), f.to_vec());
+            std::mem::forget(s); // crash: no Drop, no cleanup
+            (r, epoch, bytes)
+        };
+        let s2 = TieredStore::recover(owner, cfg.clone()).unwrap();
+        assert_eq!(s2.epoch(), epoch1, "recovery adopts the crashed store's epoch");
+        assert_eq!(s2.len(), 2);
+        let got = s2.resolve(&r1, 0.0).unwrap();
+        assert_eq!(got.as_slice(), &bytes[..], "readopted frame resolves byte-identical");
+        // A *fresh* store over the same dir instead reclaims everything.
+        drop(s2);
+        let s3 = TieredStore::new(owner, cfg).unwrap();
+        assert_eq!(s3.len(), 0);
+        assert!(matches!(s3.resolve(&r1, 0.0), Err(Error::NotFound(_))));
+        assert_ne!(s3.epoch(), epoch1);
+        drop(s3);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

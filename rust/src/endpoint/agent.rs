@@ -21,7 +21,7 @@ use crate::endpoint::link::{AgentSide, Downstream, Upstream};
 use crate::endpoint::manager::{Manager, ManagerCtx};
 use crate::metrics::LatencyBreakdown;
 use crate::provider::{NodeHandle, Provider, ScaleDecision, Strategy, StrategyInputs};
-use crate::routing::{RoutingTable, Scheduler};
+use crate::routing::{RouteHints, RoutingTable, Scheduler};
 use crate::runtime::PayloadExecutor;
 
 /// Shared, externally-readable agent statistics.
@@ -147,6 +147,8 @@ fn agent_loop(link: AgentSide, mut config: AgentConfig, stats: Arc<AgentStats>) 
                 wake: wake.clone(),
                 result_batch: config.cfg.result_batch,
                 fabric: config.fabric.clone(),
+                endpoint: config.fabric.as_ref().map(|f| f.local().owner()),
+                max_result_bytes: config.cfg.max_result_bytes,
                 clock: config.clock.clone(),
                 latency: config.latency.clone(),
                 start_model: config.start_model,
@@ -171,7 +173,12 @@ fn agent_loop(link: AgentSide, mut config: AgentConfig, stats: Arc<AgentStats>) 
                 table.sync(slot.manager.view());
             }
             while let Some(task) = pending.pop_front() {
-                match config.scheduler.route_indexed(task.container, &table, &mut rng) {
+                // Hinted routing: a by-ref task names its data's owner
+                // so LocalityAware can route it to the store; every
+                // other policy ignores the hints (trait default).
+                let hints = RouteHints::for_task(task.as_ref());
+                match config.scheduler.route_hinted_indexed(task.container, hints, &table, &mut rng)
+                {
                     Some(mid) => {
                         progressed = true;
                         let h = by_id[&mid];

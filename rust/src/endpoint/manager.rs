@@ -16,7 +16,7 @@ use std::time::Duration;
 
 use crate::batching::ResultBuffer;
 use crate::common::error::Error;
-use crate::common::ids::ManagerId;
+use crate::common::ids::{EndpointId, ManagerId};
 use crate::common::rng::Rng;
 use crate::common::sync::Notify;
 use crate::common::task::{Task, TaskResult, TaskState};
@@ -45,6 +45,9 @@ pub struct Manager {
     pub id: ManagerId,
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
+    /// Endpoint whose data-fabric store is local to this manager
+    /// (advertised in [`ManagerView`] for locality-aware routing).
+    endpoint: Option<EndpointId>,
 }
 
 /// Everything a worker needs, bundled to keep spawn() readable.
@@ -65,6 +68,14 @@ pub struct ManagerCtx {
     /// inputs through (§5 pass-by-reference); `None` means by-ref tasks
     /// fail cleanly at this endpoint.
     pub fabric: Option<Arc<DataFabric>>,
+    /// The fabric's owning endpoint, advertised in [`ManagerView`] so
+    /// [`crate::routing::LocalityAware`] can route tasks toward the
+    /// store that holds their by-ref input.
+    pub endpoint: Option<EndpointId>,
+    /// Successful outputs above this size are `put()` into the fabric
+    /// and returned as a `DataRef` (`"rref"`); inline below it. With no
+    /// fabric attached, results always return inline.
+    pub max_result_bytes: usize,
     pub clock: Arc<dyn Clock>,
     pub latency: Arc<LatencyBreakdown>,
     pub start_model: StartCostModel,
@@ -76,6 +87,7 @@ pub struct ManagerCtx {
 impl Manager {
     pub fn spawn(workers: usize, idle_timeout_s: f64, ctx: ManagerCtx, seed: u64) -> Self {
         let id = ManagerId::new();
+        let endpoint = ctx.endpoint;
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
@@ -99,7 +111,7 @@ impl Manager {
                     .expect("spawn worker")
             })
             .collect();
-        Manager { id, shared, workers: handles }
+        Manager { id, shared, workers: handles, endpoint }
     }
 
     /// Enqueue routed tasks (the agent's dispatch; §6.2). Takes shared
@@ -129,6 +141,7 @@ impl Manager {
             available_slots: pool.available_slots(),
             total_slots: pool.capacity(),
             queued,
+            endpoint: self.endpoint,
         }
     }
 
@@ -265,11 +278,34 @@ fn worker_loop(shared: Arc<Shared>, ctx: ManagerCtx, rng: &mut Rng) {
         // Wake siblings blocked on a transient acquire failure.
         shared.cv.notify_all();
 
+        // §5 result offload (return-path mirror of ref dispatch): a
+        // successful output above the inline result cap is stored in the
+        // endpoint's fabric and returned as a compact `DataRef`
+        // (`"rref"`), keeping the bytes out of the result queues. No
+        // fabric, or a store failure on an already-successful execution,
+        // falls back to inline rather than failing the task.
+        let (output, output_ref) = match (&ctx.fabric, state) {
+            (Some(fabric), TaskState::Success) if output.len() > ctx.max_result_bytes => {
+                match fabric.put(&format!("task-result:{}", task.id), output.clone(), done) {
+                    Ok(r) => (Buffer::empty(), Some(r)),
+                    Err(_) => (output, None),
+                }
+            }
+            _ => (output, None),
+        };
+
         // Idle flush when the queue looks drained: nothing else is
         // finishing soon, so don't sit on the tail of a burst.
         let idle = shared.queue.lock().unwrap().is_empty();
         shared.results.push(
-            TaskResult { task: task.id, state, output, exec_time_s: exec_s, cold_start: cold },
+            TaskResult {
+                task: task.id,
+                state,
+                output,
+                output_ref,
+                exec_time_s: exec_s,
+                cold_start: cold,
+            },
             idle,
         );
     }
@@ -292,6 +328,8 @@ mod tests {
             wake: Arc::new(Notify::new()),
             result_batch,
             fabric: None,
+            endpoint: None,
+            max_result_bytes: 10 * 1024 * 1024,
             clock: Arc::new(WallClock::new()),
             latency: Arc::new(LatencyBreakdown::new()),
             start_model: TABLE3_MODELS.lookup(SystemProfile::Local, ContainerTech::None),
@@ -467,6 +505,60 @@ mod tests {
         let r = recv_n(&rx, 1).pop().unwrap();
         assert_eq!(r.state, TaskState::Success);
         assert_eq!(unpack(&r.output).unwrap(), input);
+        m.shutdown();
+    }
+
+    /// §5 result offload: an output above `max_result_bytes` comes back
+    /// as a `DataRef` into the endpoint store — empty inline bytes,
+    /// resolvable frame — while small outputs stay inline.
+    #[test]
+    fn oversized_result_returns_by_ref() {
+        use crate::datastore::{DataFabric, TieredConfig, TieredStore};
+        let ep = EndpointId::new();
+        let store = Arc::new(TieredStore::new(ep, TieredConfig::default()).unwrap());
+        let fabric = Arc::new(DataFabric::new(store));
+        let (tx, rx) = channel();
+        let mut c = ctx(tx, 1);
+        c.fabric = Some(fabric.clone());
+        c.endpoint = Some(ep);
+        c.max_result_bytes = 4096;
+        let m = Manager::spawn(1, 600.0, c, 11);
+        assert_eq!(m.view().endpoint, Some(ep), "view advertises the fabric's endpoint");
+
+        // Big echo: the 64 KB output offloads.
+        let input = Value::Bytes(vec![0x7E; 64 * 1024]);
+        let task = Task::new(
+            FunctionId::new(),
+            ep,
+            UserId::new(),
+            None,
+            Payload::Echo,
+            crate::serialize::pack(&input, 0).unwrap(),
+        );
+        m.enqueue(vec![Arc::new(task)]);
+        let r = recv_n(&rx, 1).pop().unwrap();
+        assert_eq!(r.state, TaskState::Success);
+        let dref = r.output_ref.expect("oversized output must return by reference");
+        assert_eq!(r.output.len(), 0, "inline bytes replaced by a placeholder");
+        assert!(dref.size > 64 * 1024);
+        assert_eq!(dref.owner, ep);
+        let frame = fabric.resolve(&dref, 0.0).unwrap();
+        assert_eq!(unpack(&frame).unwrap(), input);
+
+        // Small echo: stays inline.
+        let small = Value::Int(7);
+        let task = Task::new(
+            FunctionId::new(),
+            ep,
+            UserId::new(),
+            None,
+            Payload::Echo,
+            crate::serialize::pack(&small, 0).unwrap(),
+        );
+        m.enqueue(vec![Arc::new(task)]);
+        let r = recv_n(&rx, 1).pop().unwrap();
+        assert!(r.output_ref.is_none());
+        assert_eq!(unpack(&r.output).unwrap(), small);
         m.shutdown();
     }
 

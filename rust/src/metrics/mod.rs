@@ -151,10 +151,21 @@ pub struct Counters {
     pub tasks_ref_dispatched: AtomicU64,
     /// Input bytes kept *out* of the service queues by ref dispatch.
     pub bytes_offloaded: AtomicU64,
+    /// Tasks submitted with a prior result's `DataRef` as their input
+    /// (ref forwarding — the service never touched the bytes).
+    pub tasks_ref_forwarded: AtomicU64,
+    /// Completed results whose output came back as a `DataRef`
+    /// (`"rref"`) instead of inline bytes (§5 result offload).
+    pub results_ref_offloaded: AtomicU64,
     pub cold_starts: AtomicU64,
     pub warm_hits: AtomicU64,
     pub heartbeats: AtomicU64,
     pub bytes_through_service: AtomicU64,
+    /// Result-payload bytes stored inline in the service result queue
+    /// (by-ref results contribute only their empty placeholder, so this
+    /// stays near zero for offloaded chains — pinned in
+    /// `tests/data_fabric.rs`).
+    pub result_bytes_through_service: AtomicU64,
 }
 
 impl Counters {

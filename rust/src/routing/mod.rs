@@ -41,8 +41,10 @@
 
 use std::cmp::Reverse;
 use std::collections::{BTreeSet, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
-use crate::common::ids::{ContainerId, ManagerId};
+use crate::common::ids::{ContainerId, EndpointId, ManagerId};
 use crate::common::rng::Rng;
 
 /// What a manager advertises to the agent (§6.2 "Each manager advertises
@@ -61,6 +63,28 @@ pub struct ManagerView {
     /// Tasks already queued at the manager beyond running ones
     /// (prefetched; §6.2). Routing counts these against availability.
     pub queued: usize,
+    /// Endpoint whose data-fabric store is local to this manager's node
+    /// (`None` = unadvertised). [`LocalityAware`] prefers managers whose
+    /// endpoint owns a task's by-ref input, so the frame resolves from
+    /// the local store instead of a cross-endpoint fetch (the FDN
+    /// "data-aware delivery" signal).
+    pub endpoint: Option<EndpointId>,
+}
+
+/// Data-locality hints for one routing decision, derived from the task
+/// being routed (today: who owns its by-ref input frame).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RouteHints {
+    /// Endpoint owning the task's [`crate::datastore::DataRef`] input,
+    /// if the task dispatches by reference.
+    pub data_owner: Option<EndpointId>,
+}
+
+impl RouteHints {
+    /// Hints for a task (the agent's per-task call site).
+    pub fn for_task(task: &crate::common::task::Task) -> Self {
+        RouteHints { data_owner: task.input_ref.as_ref().map(|r| r.owner) }
+    }
 }
 
 impl ManagerView {
@@ -115,6 +139,34 @@ pub trait Scheduler: Send {
         rng: &mut Rng,
     ) -> Option<ManagerId> {
         self.route(container, table.views(), rng)
+    }
+
+    /// Route with data-locality hints. Policies that ignore locality
+    /// (everything except [`LocalityAware`]) delegate to [`Scheduler::route`],
+    /// so existing schedulers behave identically under the hinted call
+    /// sites.
+    fn route_hinted(
+        &mut self,
+        container: Option<ContainerId>,
+        hints: RouteHints,
+        managers: &[ManagerView],
+        rng: &mut Rng,
+    ) -> Option<ManagerId> {
+        let _ = hints;
+        self.route(container, managers, rng)
+    }
+
+    /// Hinted routing over a [`RoutingTable`] (the agent's per-task hot
+    /// path). Defaults to [`Scheduler::route_indexed`], ignoring hints.
+    fn route_hinted_indexed(
+        &mut self,
+        container: Option<ContainerId>,
+        hints: RouteHints,
+        table: &RoutingTable,
+        rng: &mut Rng,
+    ) -> Option<ManagerId> {
+        let _ = hints;
+        self.route_indexed(container, table, rng)
     }
 }
 
@@ -259,6 +311,226 @@ impl Scheduler for WarmingAware {
         // RNG draw even when nothing has capacity), keeping the RNG
         // stream — not just the decision — identical to `route`.
         random_with_capacity(table.views(), self.prefetch, rng)
+    }
+}
+
+/// Telemetry for [`LocalityAware`]: where hinted tasks actually landed.
+#[derive(Default)]
+pub struct LocalityStats {
+    /// Hinted tasks routed to a manager on the ref owner's endpoint.
+    pub local_routes: AtomicU64,
+    /// Hinted tasks that had to route off the owner endpoint.
+    pub remote_routes: AtomicU64,
+}
+
+/// Locality-aware routing (§5 + FDN "data-aware delivery"): wraps
+/// [`WarmingAware`] and, for tasks carrying a by-ref input, prefers
+/// managers on the ref owner's endpoint *within* each warming tier — a
+/// warm container elsewhere still beats a cold start next to the data
+/// (cold starts cost seconds, a peer fetch costs milliseconds), but
+/// whenever the warming tiers tie, the task lands where its bytes
+/// already live and the worker's fabric resolve is a local hit.
+///
+/// Unhinted tasks (inline inputs) route exactly as [`WarmingAware`].
+/// The indexed path rides the [`RoutingTable`]'s per-endpoint owner
+/// indexes, staying O(log M) per decision, and makes decisions
+/// identical to the scan (pinned by
+/// `proptests::locality_indexed_matches_scan`).
+pub struct LocalityAware {
+    pub inner: WarmingAware,
+    pub stats: Arc<LocalityStats>,
+}
+
+impl LocalityAware {
+    pub fn new(prefetch: usize) -> Self {
+        LocalityAware {
+            inner: WarmingAware { prefetch },
+            stats: Arc::new(LocalityStats::default()),
+        }
+    }
+
+    fn note(&self, owner: EndpointId, picked_ep: Option<EndpointId>) {
+        if picked_ep == Some(owner) {
+            self.stats.local_routes.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.stats.remote_routes.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// The reference scan (O(M)): same tiers as [`WarmingAware::route`],
+    /// with an owner-endpoint pass *inside* each tier before the global
+    /// one. Consumes RNG exactly like the inner scan (none for container
+    /// tasks; one draw for the container-less random fallback).
+    fn route_scan(
+        &self,
+        container: Option<ContainerId>,
+        owner: EndpointId,
+        managers: &[ManagerView],
+        rng: &mut Rng,
+    ) -> Option<ManagerId> {
+        let prefetch = self.inner.prefetch;
+        if let Some(c) = container {
+            // Tier 1: warm idle container of the type — owner-endpoint
+            // candidates win the tier; the keys match the scan within
+            // each pass, so indexed lookups reproduce this exactly.
+            for local_only in [true, false] {
+                let pick = managers
+                    .iter()
+                    .filter(|m| m.warm_idle.get(&c).copied().unwrap_or(0) > 0)
+                    .filter(|m| m.has_capacity(prefetch))
+                    .filter(|m| !local_only || m.endpoint == Some(owner))
+                    .max_by_key(|m| {
+                        (
+                            m.warm_idle.get(&c).copied().unwrap_or(0),
+                            m.effective_capacity(),
+                            Reverse(m.queued),
+                            m.id,
+                        )
+                    });
+                if let Some(m) = pick {
+                    return Some(m.id);
+                }
+            }
+            // Tier 2: type deployed but busy — same locality-first order.
+            for local_only in [true, false] {
+                let pick = managers
+                    .iter()
+                    .filter(|m| m.deployed.get(&c).copied().unwrap_or(0) > 0)
+                    .filter(|m| m.has_capacity(prefetch))
+                    .filter(|m| !local_only || m.endpoint == Some(owner))
+                    .max_by_key(|m| {
+                        (
+                            m.deployed.get(&c).copied().unwrap_or(0),
+                            m.effective_capacity(),
+                            type_salt(c, m.id),
+                            m.id,
+                        )
+                    });
+                if let Some(m) = pick {
+                    return Some(m.id);
+                }
+            }
+            // Tier 3: the type is nowhere — every placement cold-starts,
+            // so data gravity decides: any owner-endpoint manager with
+            // capacity (most capacity first), then the type-consistent
+            // probe.
+            if let Some(m) = managers
+                .iter()
+                .filter(|m| m.has_capacity(prefetch))
+                .filter(|m| m.endpoint == Some(owner))
+                .max_by_key(|m| (m.effective_capacity(), m.id))
+            {
+                return Some(m.id);
+            }
+            return hash_probe(c, managers, prefetch);
+        }
+        // Container-less: owner-endpoint manager with the most capacity,
+        // else the inner policy's random fallback (one RNG draw).
+        if let Some(m) = managers
+            .iter()
+            .filter(|m| m.has_capacity(prefetch))
+            .filter(|m| m.endpoint == Some(owner))
+            .max_by_key(|m| (m.effective_capacity(), m.id))
+        {
+            return Some(m.id);
+        }
+        random_with_capacity(managers, prefetch, rng)
+    }
+}
+
+impl Scheduler for LocalityAware {
+    fn route(
+        &mut self,
+        container: Option<ContainerId>,
+        managers: &[ManagerView],
+        rng: &mut Rng,
+    ) -> Option<ManagerId> {
+        self.inner.route(container, managers, rng)
+    }
+
+    fn name(&self) -> &'static str {
+        "locality-aware"
+    }
+
+    fn warm_matching(&self) -> bool {
+        true
+    }
+
+    fn prefetch(&self) -> usize {
+        self.inner.prefetch
+    }
+
+    fn route_indexed(
+        &mut self,
+        container: Option<ContainerId>,
+        table: &RoutingTable,
+        rng: &mut Rng,
+    ) -> Option<ManagerId> {
+        self.inner.route_indexed(container, table, rng)
+    }
+
+    fn route_hinted(
+        &mut self,
+        container: Option<ContainerId>,
+        hints: RouteHints,
+        managers: &[ManagerView],
+        rng: &mut Rng,
+    ) -> Option<ManagerId> {
+        let Some(owner) = hints.data_owner else {
+            return self.inner.route(container, managers, rng);
+        };
+        let picked = self.route_scan(container, owner, managers, rng);
+        if let Some(id) = picked {
+            let ep = managers.iter().find(|m| m.id == id).and_then(|m| m.endpoint);
+            self.note(owner, ep);
+        }
+        picked
+    }
+
+    /// O(log M): tier answers come off the table's per-endpoint owner
+    /// indexes first, then the global ones — identical decisions to
+    /// [`LocalityAware::route_scan`] (proptest-pinned).
+    fn route_hinted_indexed(
+        &mut self,
+        container: Option<ContainerId>,
+        hints: RouteHints,
+        table: &RoutingTable,
+        rng: &mut Rng,
+    ) -> Option<ManagerId> {
+        let Some(owner) = hints.data_owner else {
+            return self.inner.route_indexed(container, table, rng);
+        };
+        debug_assert_eq!(
+            table.prefetch(),
+            self.inner.prefetch,
+            "routing table built with a different prefetch than the policy"
+        );
+        let prefetch = self.inner.prefetch;
+        let picked = if let Some(c) = container {
+            if !table.any_capacity() {
+                None
+            } else if let Some(m) = table.best_warm_local(owner, c) {
+                Some(m)
+            } else if let Some(m) = table.best_warm(c) {
+                Some(m)
+            } else if let Some(m) = table.best_deployed_local(owner, c) {
+                Some(m)
+            } else if let Some(m) = table.best_deployed(c) {
+                Some(m)
+            } else if let Some(m) = table.max_capacity_local(owner) {
+                Some(m)
+            } else {
+                hash_probe(c, table.views(), prefetch)
+            }
+        } else if let Some(m) = table.max_capacity_local(owner) {
+            Some(m)
+        } else {
+            random_with_capacity(table.views(), prefetch, rng)
+        };
+        if let Some(id) = picked {
+            self.note(owner, table.view(id).and_then(|v| v.endpoint));
+        }
+        picked
     }
 }
 
@@ -500,8 +772,32 @@ pub struct RoutingTable {
     /// bin-packing fill order; `first()` is the least-loaded manager
     /// still passing the capacity filter.
     capacity_index: BTreeSet<(usize, ManagerId)>,
+    /// Owner indexes: the same three orderings restricted to managers
+    /// advertising a given endpoint, so [`LocalityAware`] answers
+    /// "best candidate *on the ref owner's endpoint*" in O(log M)
+    /// without scanning. Managers with `endpoint: None` appear only in
+    /// the global indexes.
+    warm_local: HashMap<(EndpointId, ContainerId), BTreeSet<WarmKey>>,
+    deployed_local: HashMap<(EndpointId, ContainerId), BTreeSet<DeployedKey>>,
+    capacity_local: HashMap<EndpointId, BTreeSet<(usize, ManagerId)>>,
     /// Managers currently passing the capacity filter.
     with_capacity: usize,
+}
+
+/// Remove one key from a keyed index set, dropping the set when it
+/// empties (ineligible entries are simply absent from every index).
+fn index_remove<K: Eq + std::hash::Hash, V: Ord>(map: &mut HashMap<K, BTreeSet<V>>, k: K, v: &V) {
+    let now_empty = match map.get_mut(&k) {
+        Some(set) => {
+            let removed = set.remove(v);
+            debug_assert!(removed, "routing index out of sync");
+            set.is_empty()
+        }
+        None => false,
+    };
+    if now_empty {
+        map.remove(&k);
+    }
 }
 
 impl RoutingTable {
@@ -515,6 +811,9 @@ impl RoutingTable {
             warm_index: HashMap::new(),
             deployed_index: HashMap::new(),
             capacity_index: BTreeSet::new(),
+            warm_local: HashMap::new(),
+            deployed_local: HashMap::new(),
+            capacity_local: HashMap::new(),
             with_capacity: 0,
         }
     }
@@ -628,36 +927,43 @@ impl RoutingTable {
         self.capacity_index.iter().next().map(|k| k.1)
     }
 
+    /// Best tier-1 candidate for `c` *on endpoint `ep`* — same ordering
+    /// as [`RoutingTable::best_warm`], restricted to the owner. O(log M).
+    pub fn best_warm_local(&self, ep: EndpointId, c: ContainerId) -> Option<ManagerId> {
+        self.warm_local.get(&(ep, c)).and_then(|s| s.iter().next_back()).map(|k| k.3)
+    }
+
+    /// Best tier-2 candidate for `c` on endpoint `ep`. O(log M).
+    pub fn best_deployed_local(&self, ep: EndpointId, c: ContainerId) -> Option<ManagerId> {
+        self.deployed_local.get(&(ep, c)).and_then(|s| s.iter().next_back()).map(|k| k.3)
+    }
+
+    /// The eligible manager on endpoint `ep` maximising (effective
+    /// capacity, id) — the locality fallback pick. O(log M).
+    pub fn max_capacity_local(&self, ep: EndpointId) -> Option<ManagerId> {
+        self.capacity_local.get(&ep).and_then(|s| s.iter().next_back()).map(|k| k.1)
+    }
+
     fn deindex(&mut self, i: usize) {
         if let Some((warm, deployed)) = index_entries(&self.views[i], self.prefetch) {
             self.with_capacity -= 1;
             let cap_key = (self.views[i].effective_capacity(), self.views[i].id);
             let removed = self.capacity_index.remove(&cap_key);
             debug_assert!(removed, "capacity index out of sync");
+            let ep = self.views[i].endpoint;
+            if let Some(ep) = ep {
+                index_remove(&mut self.capacity_local, ep, &cap_key);
+            }
             for (c, key) in warm {
-                let now_empty = match self.warm_index.get_mut(&c) {
-                    Some(set) => {
-                        let removed = set.remove(&key);
-                        debug_assert!(removed, "warm index out of sync");
-                        set.is_empty()
-                    }
-                    None => false,
-                };
-                if now_empty {
-                    self.warm_index.remove(&c);
+                index_remove(&mut self.warm_index, c, &key);
+                if let Some(ep) = ep {
+                    index_remove(&mut self.warm_local, (ep, c), &key);
                 }
             }
             for (c, key) in deployed {
-                let now_empty = match self.deployed_index.get_mut(&c) {
-                    Some(set) => {
-                        let removed = set.remove(&key);
-                        debug_assert!(removed, "deployed index out of sync");
-                        set.is_empty()
-                    }
-                    None => false,
-                };
-                if now_empty {
-                    self.deployed_index.remove(&c);
+                index_remove(&mut self.deployed_index, c, &key);
+                if let Some(ep) = ep {
+                    index_remove(&mut self.deployed_local, (ep, c), &key);
                 }
             }
         }
@@ -668,11 +974,21 @@ impl RoutingTable {
             self.with_capacity += 1;
             let cap_key = (self.views[i].effective_capacity(), self.views[i].id);
             self.capacity_index.insert(cap_key);
+            let ep = self.views[i].endpoint;
+            if let Some(ep) = ep {
+                self.capacity_local.entry(ep).or_default().insert(cap_key);
+            }
             for (c, key) in warm {
                 self.warm_index.entry(c).or_default().insert(key);
+                if let Some(ep) = ep {
+                    self.warm_local.entry((ep, c)).or_default().insert(key);
+                }
             }
             for (c, key) in deployed {
                 self.deployed_index.entry(c).or_default().insert(key);
+                if let Some(ep) = ep {
+                    self.deployed_local.entry((ep, c)).or_default().insert(key);
+                }
             }
         }
     }
@@ -696,7 +1012,13 @@ mod tests {
             available_slots: avail,
             total_slots: total,
             queued: 0,
+            endpoint: None,
         }
+    }
+
+    fn on_ep(mut v: ManagerView, ep: u128) -> ManagerView {
+        v.endpoint = Some(EndpointId::from_bits(ep));
+        v
     }
 
     #[test]
@@ -853,6 +1175,91 @@ mod tests {
     }
 
     #[test]
+    fn locality_prefers_owner_endpoint_within_a_tier() {
+        let owner = EndpointId::from_bits(9);
+        let hints = RouteHints { data_owner: Some(owner) };
+        // Both managers have warm type-7 and capacity; manager 1 is on
+        // the owner endpoint, manager 2 (more capacity) is not: the
+        // warming tiers tie, so locality decides.
+        let managers =
+            vec![on_ep(mgr(1, &[(7, 1)], 2, 10), 9), on_ep(mgr(2, &[(7, 1)], 8, 10), 5)];
+        let table = RoutingTable::with_views(0, managers.clone());
+        let mut s = LocalityAware::new(0);
+        let mut rng = Rng::new(1);
+        let c = Some(ContainerId::from_bits(7));
+        assert_eq!(s.route_hinted(c, hints, &managers, &mut rng), Some(ManagerId::from_bits(1)));
+        assert_eq!(
+            s.route_hinted_indexed(c, hints, &table, &mut rng),
+            Some(ManagerId::from_bits(1))
+        );
+        // Plain WarmingAware would pick manager 2 (more capacity).
+        let mut wa = WarmingAware::default();
+        assert_eq!(wa.route(c, &managers, &mut rng), Some(ManagerId::from_bits(2)));
+        // Without a hint LocalityAware decides exactly like its inner.
+        assert_eq!(
+            s.route_hinted(c, RouteHints::default(), &managers, &mut rng),
+            Some(ManagerId::from_bits(2))
+        );
+        assert_eq!(s.stats.local_routes.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn locality_never_trades_warmth_for_distance() {
+        let owner = EndpointId::from_bits(9);
+        let hints = RouteHints { data_owner: Some(owner) };
+        // Only the remote manager has the warm container: warmth wins
+        // the tier, locality does not override it.
+        let managers = vec![on_ep(mgr(1, &[], 5, 10), 9), on_ep(mgr(2, &[(7, 1)], 5, 10), 5)];
+        let table = RoutingTable::with_views(0, managers.clone());
+        let mut s = LocalityAware::new(0);
+        let mut rng = Rng::new(2);
+        let c = Some(ContainerId::from_bits(7));
+        assert_eq!(s.route_hinted(c, hints, &managers, &mut rng), Some(ManagerId::from_bits(2)));
+        assert_eq!(
+            s.route_hinted_indexed(c, hints, &table, &mut rng),
+            Some(ManagerId::from_bits(2))
+        );
+        assert_eq!(s.stats.remote_routes.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn locality_routes_containerless_tasks_to_the_data() {
+        let owner = EndpointId::from_bits(9);
+        let hints = RouteHints { data_owner: Some(owner) };
+        let managers = vec![
+            on_ep(mgr(1, &[], 3, 10), 9),
+            on_ep(mgr(2, &[], 9, 10), 5),
+            on_ep(mgr(3, &[], 5, 10), 9),
+        ];
+        let table = RoutingTable::with_views(0, managers.clone());
+        let mut s = LocalityAware::new(0);
+        let mut rng = Rng::new(3);
+        // Most capacity among the owner's managers: 3, not the globally
+        // freest manager 2.
+        assert_eq!(
+            s.route_hinted(None, hints, &managers, &mut rng),
+            Some(ManagerId::from_bits(3))
+        );
+        assert_eq!(
+            s.route_hinted_indexed(None, hints, &table, &mut rng),
+            Some(ManagerId::from_bits(3))
+        );
+        // Owner endpoint saturated: falls back off-endpoint rather than
+        // stalling the task.
+        let drained = vec![
+            on_ep(mgr(1, &[], 0, 10), 9),
+            on_ep(mgr(2, &[], 9, 10), 5),
+            on_ep(mgr(3, &[], 0, 10), 9),
+        ];
+        assert_eq!(
+            s.route_hinted(None, hints, &drained, &mut rng),
+            Some(ManagerId::from_bits(2))
+        );
+        assert_eq!(s.stats.local_routes.load(Ordering::Relaxed), 2);
+        assert_eq!(s.stats.remote_routes.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
     fn table_tier1_picks_best_warm() {
         let table = RoutingTable::with_views(
             0,
@@ -974,6 +1381,7 @@ mod proptests {
                     available_slots: avail,
                     total_slots: total,
                     queued: 0,
+                    endpoint: None,
                 }
             })
             .collect()
@@ -1030,6 +1438,13 @@ mod proptests {
                         warm.insert(ContainerId::from_bits(c as u128), idle);
                     }
                 }
+                // A few managers leave their endpoint unadvertised, so
+                // the locality property also covers the None case.
+                let endpoint = if g.usize(0, 5) == 0 {
+                    None
+                } else {
+                    Some(EndpointId::from_bits(g.usize(1, 4) as u128))
+                };
                 ManagerView {
                     id: ManagerId::from_bits(i as u128 + 1),
                     deployed,
@@ -1037,6 +1452,7 @@ mod proptests {
                     available_slots: avail,
                     total_slots: total,
                     queued,
+                    endpoint,
                 }
             })
             .collect()
@@ -1116,6 +1532,61 @@ mod proptests {
                 }
             }
             compare_paths(&mut s, &managers, &table, g.u64());
+        });
+    }
+
+    /// The locality analogue of `indexed_matches_scan`: for every hint
+    /// shape (no owner, an owner with managers, an owner nobody
+    /// advertises), `LocalityAware::route_hinted_indexed` must decide
+    /// exactly like the O(M) scan — including after arbitrary
+    /// incremental updates and removals through the table.
+    #[test]
+    fn locality_indexed_matches_scan() {
+        check("locality-indexed-eq", 300, |g| {
+            let mut managers = arb_managers_full(g);
+            let prefetch = g.usize(0, 3);
+            let mut table = RoutingTable::with_views(prefetch, managers.clone());
+            let mut s = LocalityAware::new(prefetch);
+            let compare = |s: &mut LocalityAware,
+                           managers: &[ManagerView],
+                           table: &RoutingTable,
+                           seed: u64| {
+                let mut r1 = crate::common::rng::Rng::new(seed);
+                let mut r2 = crate::common::rng::Rng::new(seed);
+                // Owner 0 = no hint; owners 1..=3 exist in the pool;
+                // owner 7 is advertised by nobody.
+                for owner in [0u128, 1, 2, 3, 7] {
+                    let hints = RouteHints {
+                        data_owner: (owner > 0).then(|| EndpointId::from_bits(owner)),
+                    };
+                    for t in 0..6u128 {
+                        let c = if t == 0 { None } else { Some(ContainerId::from_bits(t)) };
+                        assert_eq!(
+                            s.route_hinted(c, hints, managers, &mut r1),
+                            s.route_hinted_indexed(c, hints, table, &mut r2),
+                            "locality scan vs indexed diverged for container {c:?} owner {owner}"
+                        );
+                    }
+                }
+            };
+            compare(&mut s, &managers, &table, g.u64());
+            for _ in 0..g.usize(1, 25) {
+                if managers.is_empty() {
+                    break;
+                }
+                let i = g.usize(0, managers.len());
+                let id = managers[i].id;
+                if g.usize(0, 10) == 0 {
+                    managers.swap_remove(i);
+                    table.remove(id);
+                } else {
+                    let op = g.usize(0, 6);
+                    let c = ContainerId::from_bits(g.usize(1, 5) as u128);
+                    apply_op(&mut managers[i], op, c);
+                    table.update(id, |v| apply_op(v, op, c));
+                }
+            }
+            compare(&mut s, &managers, &table, g.u64());
         });
     }
 

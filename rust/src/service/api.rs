@@ -11,7 +11,7 @@ use crate::common::ids::{EndpointId, FunctionId, TaskId, UserId};
 use crate::common::sync::Notify;
 use crate::common::task::{Payload, Task, TaskResult, TaskState};
 use crate::common::time::{Clock, Time, WallClock};
-use crate::datastore::{DataFabric, TieredConfig, TieredStore, SERVICE_OWNER};
+use crate::datastore::{DataFabric, DataRef, TieredConfig, TieredStore, SERVICE_OWNER};
 use crate::metrics::{Counters, LatencyBreakdown};
 use crate::registry::{EndpointStatus, Registry};
 use crate::serialize::{pack, unpack, Value, Wire};
@@ -47,24 +47,49 @@ pub struct FuncXService {
     offloaded: Arc<Mutex<HashSet<TaskId>>>,
 }
 
+/// The typed error a terminal non-success result maps to (shared by
+/// [`FuncXService::get_result`] and [`FuncXService::wait_result_ref`]
+/// so the two APIs always report failures identically).
+fn terminal_error(r: &TaskResult) -> Error {
+    match r.state {
+        TaskState::Failed => {
+            let msg = unpack(&r.output)
+                .ok()
+                .and_then(|v| v.as_str().map(str::to_string))
+                .unwrap_or_else(|| "unknown".into());
+            Error::TaskFailed(msg)
+        }
+        _ => Error::TaskFailed("abandoned after agent loss".into()),
+    }
+}
+
+/// The service payload store, TTL-pinned to the service's own clock
+/// (owner-stamped expiry): endpoint fabrics resolving against it with
+/// skewed clocks cannot mis-expire offloaded frames.
+fn build_fabric(cfg: &ServiceConfig, clock: Arc<dyn Clock>) -> Arc<DataFabric> {
+    let store = TieredStore::new(
+        SERVICE_OWNER,
+        TieredConfig {
+            mem_high_watermark: cfg.store_mem_watermark_bytes,
+            default_ttl_s: cfg.result_ttl_s,
+            spool_dir: None,
+        },
+    )
+    .expect("create service payload spool")
+    .with_owner_clock(clock);
+    Arc::new(DataFabric::new(Arc::new(store)))
+}
+
 impl FuncXService {
     pub fn new(cfg: ServiceConfig) -> Self {
-        let store = TieredStore::new(
-            SERVICE_OWNER,
-            TieredConfig {
-                mem_high_watermark: cfg.store_mem_watermark_bytes,
-                default_ttl_s: cfg.result_ttl_s,
-                spool_dir: None,
-            },
-        )
-        .expect("create service payload spool");
+        let clock: Arc<dyn Clock> = Arc::new(WallClock::new());
         FuncXService {
             auth: AuthService::new(),
             registry: Registry::new(),
             kv: KvStore::new(),
-            fabric: Arc::new(DataFabric::new(Arc::new(store))),
+            fabric: build_fabric(&cfg, clock.clone()),
             cfg,
-            clock: Arc::new(WallClock::new()),
+            clock,
             latency: Arc::new(LatencyBreakdown::new()),
             counters: Counters::new(),
             result_notify: Arc::new(Notify::new()),
@@ -72,8 +97,12 @@ impl FuncXService {
         }
     }
 
+    /// Replace the service clock (construction-time only: the payload
+    /// store is rebuilt so its owner-stamped TTLs follow the new clock,
+    /// dropping any peers already wired into the old fabric).
     pub fn with_clock(mut self, clock: Arc<dyn Clock>) -> Self {
         self.clock = clock;
+        self.fabric = build_fabric(&self.cfg, self.clock.clone());
         self
     }
 
@@ -256,7 +285,12 @@ impl FuncXService {
     }
 
     /// Retrieve a completed task's output; `None` while still running.
-    /// Results are purged after retrieval (§4.1 cost control).
+    /// Results are purged after retrieval (§4.1 cost control). A by-ref
+    /// result (`"rref"`) resolves through the service fabric's fetch
+    /// ladder — local store, cache, peer forward, Globus model — so the
+    /// caller sees the bytes whether or not they ever touched the
+    /// service queues; a vanished or corrupt frame surfaces the typed
+    /// [`Error::NotFound`] / [`Error::Corrupt`].
     pub fn get_result(&self, id: TaskId) -> Result<Option<Value>> {
         let state = self.task_state(id)?;
         if !state.is_terminal() {
@@ -267,19 +301,108 @@ impl FuncXService {
             .kv
             .get_at(&key, self.clock.now())
             .ok_or_else(|| Error::NotFound(format!("result for {id} (purged?)")))?;
-        self.kv.del(&key); // purge once retrieved
         let result = TaskResult::from_buffer(&raw)?;
         match result.state {
-            TaskState::Success => Ok(Some(unpack(&result.output)?)),
-            TaskState::Failed => {
-                let msg = unpack(&result.output)
-                    .ok()
-                    .and_then(|v| v.as_str().map(str::to_string))
-                    .unwrap_or_else(|| "unknown".into());
-                Err(Error::TaskFailed(msg))
+            TaskState::Success => {
+                // Resolve BEFORE purging: a transiently-unreachable
+                // by-ref frame must leave the record in place so a
+                // later get_result call can still succeed once the
+                // owner endpoint is reachable again. (The error itself
+                // still propagates — wait_result surfaces it rather
+                // than blocking on a ref that may be gone for good.)
+                let frame = match &result.output_ref {
+                    Some(r) => self.fabric.resolve(r, self.clock.now())?,
+                    None => result.output.clone(),
+                };
+                let value = unpack(&frame)?;
+                self.kv.del(&key); // purge once actually retrieved
+                Ok(Some(value))
             }
-            _ => Err(Error::TaskFailed("abandoned after agent loss".into())),
+            _ => {
+                self.kv.del(&key); // purge once retrieved
+                Err(terminal_error(&result))
+            }
         }
+    }
+
+    /// Read a completed task's stored result record without purging or
+    /// resolving it (`None` while still running) — the chain submitter's
+    /// peek: take the `DataRef`, leave the bytes where they are.
+    pub fn peek_result(&self, id: TaskId) -> Result<Option<TaskResult>> {
+        let state = self.task_state(id)?;
+        if !state.is_terminal() {
+            return Ok(None);
+        }
+        let raw = self
+            .kv
+            .get_at(&format!("result:{id}"), self.clock.now())
+            .ok_or_else(|| Error::NotFound(format!("result for {id} (purged?)")))?;
+        Ok(Some(TaskResult::from_buffer(&raw)?))
+    }
+
+    /// Block until `id` completes and return the [`DataRef`] its
+    /// offloaded output travels by — the ref-forwarding fast path: feed
+    /// it straight into [`FuncXService::submit_by_ref`] and the result
+    /// bytes never transit the service. The stored result is *not*
+    /// purged (follow-on resolution still needs the frame). Failed tasks
+    /// surface their traceback; an inline result is an
+    /// [`Error::InvalidArgument`] (there is nothing to forward — use
+    /// [`FuncXService::get_result`]).
+    pub fn wait_result_ref(&self, id: TaskId, timeout: std::time::Duration) -> Result<DataRef> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let seen = self.result_notify.epoch();
+            if let Some(r) = self.peek_result(id)? {
+                return match r.state {
+                    TaskState::Success => r.output_ref.ok_or_else(|| {
+                        Error::InvalidArgument(format!(
+                            "result for {id} is inline; use get_result"
+                        ))
+                    }),
+                    _ => Err(terminal_error(&r)),
+                };
+            }
+            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+            if remaining.is_zero() {
+                return Err(Error::Timeout(format!("task {id}")));
+            }
+            self.result_notify.wait_newer(seen, remaining);
+        }
+    }
+
+    /// Submit an invocation whose input *is* a prior result's ref
+    /// (§5 ref forwarding): the task carries the compact `DataRef`
+    /// through the queues and the service never touches the payload —
+    /// the worker resolves it endpoint-side, a local store hit when
+    /// [`crate::routing::LocalityAware`] routed the task to the owner.
+    pub fn submit_by_ref(
+        &self,
+        token: &Token,
+        function: FunctionId,
+        endpoint: EndpointId,
+        input: &DataRef,
+    ) -> Result<SubmitReceipt> {
+        let now = self.clock.now();
+        let user = self.auth.check(token, Scope::RunFunction, now)?;
+        let f = self.registry.function(function)?;
+        let e = self.registry.endpoint(endpoint)?;
+        if !self.auth.may_invoke_function(user, f.owner, function) {
+            return Err(Error::Forbidden(format!("{user} may not invoke {function}")));
+        }
+        if !self.auth.may_use_endpoint(user, e.owner, endpoint) {
+            return Err(Error::Forbidden(format!("{user} may not use endpoint {endpoint}")));
+        }
+        let task = Task::new(
+            function,
+            endpoint,
+            user,
+            f.container,
+            f.payload.clone(),
+            crate::serialize::Buffer::empty(),
+        )
+        .with_input_ref(input.clone());
+        crate::metrics::Counters::incr(&self.counters.tasks_ref_forwarded);
+        self.enqueue_task(task, now)
     }
 
     /// Block until the task reaches a terminal state (test/SDK helper).
@@ -316,6 +439,15 @@ impl FuncXService {
             self.cfg.result_ttl_s,
             now,
         );
+        // Byte accounting for the return path: by-ref results contribute
+        // only their empty placeholder here (the §5 symmetric-path pin).
+        crate::metrics::Counters::add(
+            &self.counters.result_bytes_through_service,
+            r.output.len() as u64,
+        );
+        if r.returns_by_ref() {
+            crate::metrics::Counters::incr(&self.counters.results_ref_offloaded);
+        }
         // Terminal state: reclaim the offloaded input frame, if any,
         // instead of letting it sit in the payload store until TTL.
         // Gated on the offloaded set so inline results (the common
@@ -512,6 +644,78 @@ mod tests {
     }
 
     #[test]
+    fn by_ref_result_resolves_through_the_fabric() {
+        let (s, tok, f, e) = svc();
+        let r = s.submit(&tok, f, e, &Value::Null).unwrap();
+        // The worker-side store holding the offloaded output, peered
+        // with the service fabric (as connect_endpoint wiring would).
+        let store = Arc::new(
+            TieredStore::new(e, TieredConfig::default()).unwrap(),
+        );
+        s.fabric.connect_peer(e, store.clone());
+        let out = Value::Bytes(vec![0x6B; 32 * 1024]);
+        let frame = pack(&out, 0).unwrap();
+        let dref = store.put(&format!("task-result:{}", r.task), frame, 0.0).unwrap();
+        let tr = TaskResult {
+            task: r.task,
+            state: TaskState::Success,
+            output: crate::serialize::Buffer::empty(),
+            output_ref: Some(dref.clone()),
+            exec_time_s: 0.0,
+            cold_start: false,
+        };
+        s.store_result(&tr);
+        // peek leaves the record in place; get_result resolves the ref.
+        let peeked = s.peek_result(r.task).unwrap().unwrap();
+        assert_eq!(peeked.output_ref, Some(dref.clone()));
+        assert_eq!(s.get_result(r.task).unwrap(), Some(out));
+        assert_eq!(
+            crate::metrics::Counters::get(&s.counters.results_ref_offloaded),
+            1
+        );
+        // Only the empty placeholder crossed the service queues.
+        assert_eq!(
+            crate::metrics::Counters::get(&s.counters.result_bytes_through_service),
+            0
+        );
+        // Ref forwarding: a follow-on task carries the same ref; the
+        // service enqueues it without touching the bytes.
+        let r2 = s.submit_by_ref(&tok, f, e, &dref).unwrap();
+        let _first = s.task_queue(e).pop().unwrap().unwrap(); // r's task
+        let task = s.task_queue(e).pop().unwrap().unwrap();
+        assert_eq!(task.id, r2.task);
+        assert_eq!(task.input_ref, Some(dref));
+        assert_eq!(task.input.len(), 0);
+        assert_eq!(
+            crate::metrics::Counters::get(&s.counters.tasks_ref_forwarded),
+            1
+        );
+    }
+
+    #[test]
+    fn by_ref_result_with_vanished_frame_is_typed_not_found() {
+        let (s, tok, f, e) = svc();
+        let r = s.submit(&tok, f, e, &Value::Null).unwrap();
+        let dref = crate::datastore::DataRef {
+            owner: EndpointId::new(), // never peered
+            epoch: 3,
+            key: "task-result:gone".into(),
+            size: 64,
+            checksum: 0,
+        };
+        let tr = TaskResult {
+            task: r.task,
+            state: TaskState::Success,
+            output: crate::serialize::Buffer::empty(),
+            output_ref: Some(dref),
+            exec_time_s: 0.0,
+            cold_start: false,
+        };
+        s.store_result(&tr);
+        assert!(matches!(s.get_result(r.task), Err(Error::NotFound(_))));
+    }
+
+    #[test]
     fn result_purged_after_retrieval() {
         let (s, tok, f, e) = svc();
         let r = s.submit(&tok, f, e, &Value::Null).unwrap();
@@ -520,6 +724,7 @@ mod tests {
             task: r.task,
             state: TaskState::Success,
             output: pack(&Value::Int(7), 0).unwrap(),
+            output_ref: None,
             exec_time_s: 0.0,
             cold_start: false,
         };
@@ -537,6 +742,7 @@ mod tests {
             task: r.task,
             state: TaskState::Failed,
             output: pack(&Value::Str("boom".into()), 0).unwrap(),
+            output_ref: None,
             exec_time_s: 0.0,
             cold_start: false,
         };

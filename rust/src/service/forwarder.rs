@@ -33,6 +33,9 @@ pub struct ForwarderStats {
     /// inline input bytes (§5 pass-by-reference dispatch).
     pub ref_dispatched: AtomicU64,
     pub results: AtomicU64,
+    /// Subset of `results` whose output returned as a `DataRef`
+    /// (`"rref"`; §5 result offload).
+    pub ref_results: AtomicU64,
     pub heartbeats: AtomicU64,
     pub requeued: AtomicU64,
     pub abandoned: AtomicU64,
@@ -123,6 +126,7 @@ fn forwarder_loop(
                         task: id,
                         state: TaskState::Abandoned,
                         output: crate::serialize::Buffer::empty(),
+                        output_ref: None,
                         exec_time_s: 0.0,
                         cold_start: false,
                     };
@@ -173,6 +177,9 @@ fn forwarder_loop(
                         // Count before storing: store_result wakes
                         // result waiters, who may read the stats.
                         stats.results.fetch_add(1, Ordering::Relaxed);
+                        if r.returns_by_ref() {
+                            stats.ref_results.fetch_add(1, Ordering::Relaxed);
+                        }
                         svc.store_result(&r);
                     }
                 }

@@ -40,24 +40,36 @@ pub struct SimTask {
     /// the worker fetches the payload from the intra-endpoint store
     /// once (§5 pass-by-reference).
     pub input_bytes: u64,
+    /// Serialized output size. Outputs above the profile's
+    /// `ref_threshold_bytes` return as a fixed-size `DataRef` frame over
+    /// the serial wire — the bytes stay in the endpoint store (§5
+    /// result offload); at or below it the full output occupies the
+    /// upstream wire.
+    pub output_bytes: u64,
 }
 
 impl SimTask {
     pub fn noop() -> Self {
-        SimTask { container: None, duration_s: 0.0, input_bytes: 0 }
+        SimTask { container: None, duration_s: 0.0, input_bytes: 0, output_bytes: 0 }
     }
 
     pub fn sleep(s: f64) -> Self {
-        SimTask { container: None, duration_s: s, input_bytes: 0 }
+        SimTask { container: None, duration_s: s, input_bytes: 0, output_bytes: 0 }
     }
 
     pub fn with_container(c: ContainerId, duration_s: f64) -> Self {
-        SimTask { container: Some(c), duration_s, input_bytes: 0 }
+        SimTask { container: Some(c), duration_s, input_bytes: 0, output_bytes: 0 }
     }
 
     /// Set the serialized input size carried by this task.
     pub fn with_input_bytes(mut self, n: u64) -> Self {
         self.input_bytes = n;
+        self
+    }
+
+    /// Set the serialized output size this task produces.
+    pub fn with_output_bytes(mut self, n: u64) -> Self {
+        self.output_bytes = n;
         self
     }
 }
@@ -133,6 +145,7 @@ impl SimEndpoint {
                 available_slots: m.pool.available_slots(),
                 total_slots: m.pool.capacity(),
                 queued: 0,
+                endpoint: None,
             })
             .collect();
         let index_of = views
@@ -174,6 +187,7 @@ impl SimEndpoint {
                 available_slots: m.pool.available_slots(),
                 total_slots: m.pool.capacity(),
                 queued,
+                endpoint: None,
             });
         }
     }
@@ -190,6 +204,11 @@ impl SimEndpoint {
         let mut completions: Vec<Time> = vec![0.0; tasks.len()];
         let mut completed = 0usize;
         let mut agent_idle = false;
+        // Upstream result traffic shares the serial agent wire with
+        // dispatch: completed results accumulate wire occupancy here and
+        // the next dispatch drains it (by-ref outputs contribute a ref
+        // frame; inline ones their full payload — §5 result offload).
+        let mut result_wire_backlog: f64 = 0.0;
         // Per-task dispatch cost: serial agent loop; unbatched dispatch
         // pays a request RTT per task (§7.5).
         let dispatch_cost = if self.batching {
@@ -393,7 +412,11 @@ impl SimEndpoint {
                                     t.input_bytes
                                 };
                             let wire_s = inline_bytes as f64 / self.profile.wire_bps;
-                            q.schedule(now + dispatch_cost + wire_s, Event::AgentDispatch);
+                            let upstream = std::mem::take(&mut result_wire_backlog);
+                            q.schedule(
+                                now + dispatch_cost + wire_s + upstream,
+                                Event::AgentDispatch,
+                            );
                             agent_idle = false;
                         }
                         None => {
@@ -411,7 +434,19 @@ impl SimEndpoint {
                         v.available_slots += 1;
                         *v.warm_idle.entry(ctype).or_insert(0) += 1;
                     });
-                    completions[task] = now;
+                    // The result crosses the serial wire upstream: a
+                    // by-ref output ships its ref frame, an inline one
+                    // its payload. The task completes once its result
+                    // is off the endpoint.
+                    let out_b = tasks[task].output_bytes;
+                    let up_bytes = if out_b > self.profile.ref_threshold_bytes {
+                        REF_FRAME_BYTES
+                    } else {
+                        out_b
+                    };
+                    let result_wire_s = up_bytes as f64 / self.profile.wire_bps;
+                    result_wire_backlog += result_wire_s;
+                    completions[task] = now + result_wire_s;
                     completed += 1;
                     try_start!(self, manager, now, q, tasks);
                     if agent_idle && !pending.is_empty() {
@@ -440,6 +475,18 @@ impl SimEndpoint {
             mean_latency_s: completions.iter().sum::<f64>() / tasks.len().max(1) as f64,
             throughput: tasks.len() as f64 / completion_s.max(1e-9),
         }
+    }
+
+    /// Run a sequential task chain — stage k+1 dispatches only after
+    /// stage k's result is back, its input being stage k's output (the
+    /// A → B → C shape of §5 ref-forwarded pipelines). Warm container
+    /// state persists across stages. Returns total chain completion
+    /// time: with by-ref intermediates each hop ships two ref frames
+    /// over the serial wire plus one store fetch at the worker; inline
+    /// intermediates pay the full payload over the wire in both
+    /// directions (`benches/datastore.rs` reports the ratio).
+    pub fn run_chain(&mut self, stages: &[SimTask]) -> f64 {
+        stages.iter().map(|t| self.run(std::slice::from_ref(t)).completion_s).sum()
     }
 }
 
@@ -615,6 +662,38 @@ mod tests {
             "inline {inline} s should be ≥3x by-ref {by_ref} s"
         );
         assert!(by_ref < 1.0, "by-ref makespan stays dispatch-bound: {by_ref} s");
+    }
+
+    /// §5 result offload closes the loop: a 3-stage chain whose 64 MB
+    /// intermediates stay in the endpoint store (ref frames on the
+    /// wire, one store fetch per hop) completes far faster than the
+    /// same chain shipping every intermediate inline both ways.
+    #[test]
+    fn ref_forwarded_chain_beats_inline_chain() {
+        let mb64 = 64 * 1024 * 1024;
+        let stages = [
+            SimTask::noop().with_output_bytes(mb64),
+            SimTask::noop().with_input_bytes(mb64).with_output_bytes(mb64),
+            SimTask::noop().with_input_bytes(mb64),
+        ];
+        let run = |profile: SimProfile| {
+            let mut ep =
+                SimEndpoint::new(profile, 1, Box::new(WarmingAware::default()), true, 5)
+                    .deterministic_cold(true);
+            ep.prewarm(&[ContainerId(crate::Uuid::NIL)]);
+            ep.run_chain(&stages)
+        };
+        let by_ref = run(SimProfile::theta());
+        let mut inline_profile = SimProfile::theta();
+        inline_profile.ref_threshold_bytes = u64::MAX;
+        let inline = run(inline_profile);
+        // Inline pays two 64 MB result uploads over the 1.25 GB/s wire
+        // (~107 ms); by-ref ships ref frames and pays two ~7 ms store
+        // fetches instead — a ≥ 50 ms deterministic gap.
+        assert!(
+            inline > by_ref + 0.05,
+            "inline chain {inline}s must trail ref-forwarded {by_ref}s"
+        );
     }
 
     #[test]

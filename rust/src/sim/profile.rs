@@ -17,18 +17,23 @@ pub struct SimProfile {
     pub rtt_s: f64,
     /// Containers (worker slots) per node.
     pub workers_per_node: usize,
-    /// Serial agent-link bandwidth for *inline* task input bytes,
-    /// bytes/s (the dispatch loop ships each inline payload through the
-    /// forwarder→agent wire).
+    /// Serial agent-link bandwidth for *inline* payload bytes, bytes/s.
+    /// Both directions share it: the dispatch loop ships each inline
+    /// input downstream, and each completed inline result occupies the
+    /// same wire upstream before the next dispatch proceeds.
     pub wire_bps: f64,
-    /// Inputs strictly above this size dispatch as a fixed-size
-    /// `DataRef` frame instead of inline bytes (§5 pass-by-reference;
-    /// mirrors `ServiceConfig::max_payload_bytes` and its
-    /// `len > cap` offload rule).
+    /// Payloads strictly above this size travel as a fixed-size
+    /// `DataRef` frame instead of inline bytes — inputs on dispatch
+    /// (§5 pass-by-reference, mirroring `ServiceConfig::
+    /// max_payload_bytes` and its `len > cap` offload rule) and outputs
+    /// on the return path (§5 result offload, mirroring
+    /// `EndpointConfig::max_result_bytes`).
     pub ref_threshold_bytes: u64,
-    /// Intra-endpoint data-store read bandwidth, bytes/s — what a
-    /// worker pays once to fetch a by-ref input from the in-memory
-    /// store (§5.2, Fig. 5's fastest adopted channel).
+    /// Intra-endpoint data-store bandwidth, bytes/s — what a worker
+    /// pays once to fetch a by-ref input from the in-memory store
+    /// (§5.2, Fig. 5's fastest adopted channel); by-ref outputs land in
+    /// the same store, so a ref-forwarded chain stage pays this instead
+    /// of two wire crossings (`SimEndpoint::run_chain`).
     pub store_bps: f64,
 }
 

@@ -16,6 +16,7 @@ use funcx::datastore::{
 };
 use funcx::endpoint::{link, EndpointBuilder};
 use funcx::metrics::Counters;
+use funcx::routing::LocalityAware;
 use funcx::serialize::{pack, Value};
 use funcx::service::FuncXService;
 use funcx::transfer::TransferService;
@@ -99,6 +100,91 @@ fn large_payload_dispatches_by_reference_end_to_end() {
         fabric.stats.frames_forwarded.load(Relaxed) + fabric.stats.cache_hits.load(Relaxed)
             >= 1,
         "the worker resolved the frame through the fabric"
+    );
+
+    fh.shutdown();
+    handle.join();
+}
+
+/// THE closed-loop acceptance pin (result offload + ref forwarding +
+/// locality routing): a 3-task chain — A's large output becomes B's
+/// input becomes C's input — completes with the intermediate bytes
+/// never transiting the service queues inline, B and C routed to the
+/// data owner's managers by `LocalityAware`, and their input resolves
+/// served from the endpoint's own store.
+#[test]
+fn three_task_chain_forwards_refs_and_routes_to_the_data() {
+    let clock = Arc::new(WallClock::new());
+    let svc = FuncXService::new(ServiceConfig {
+        max_payload_bytes: 4096, // force A's input by-ref too
+        ..Default::default()
+    })
+    .with_clock(clock.clone());
+    let (_u, tok) = svc.bootstrap_user("alice");
+    let f = svc.register_function(&tok, "echo", Payload::Echo, None).unwrap();
+    let e = svc.register_endpoint(&tok, "cluster", "").unwrap();
+
+    // Endpoint fabric, peered both ways: the endpoint resolves
+    // service-owned input refs, the service resolves endpoint-owned
+    // result refs.
+    let local = Arc::new(TieredStore::new(e, TieredConfig::default()).unwrap());
+    let fabric = Arc::new(DataFabric::new(local.clone()));
+    fabric.connect_peer(SERVICE_OWNER, svc.fabric.local().clone());
+    svc.fabric.connect_peer(e, local.clone());
+
+    let scheduler = LocalityAware::new(0);
+    let route_stats = scheduler.stats.clone();
+
+    let (fwd, agent_side) = link();
+    let handle = EndpointBuilder::new()
+        .config(EndpointConfig {
+            min_nodes: 2,
+            workers_per_node: 2,
+            max_result_bytes: 4096, // force outputs by-ref
+            ..Default::default()
+        })
+        .fabric(fabric.clone())
+        .scheduler(Box::new(scheduler))
+        .clock(clock)
+        .heartbeat_period(0.05)
+        .start(agent_side);
+    let fh = svc.connect_endpoint(e, fwd).unwrap();
+
+    // A: 256 KB input (offloaded at submit into the service store);
+    // echo produces a 256 KB output, offloaded into the ENDPOINT store.
+    let payload = Value::Bytes(vec![0x42; 256 * 1024]);
+    let a = svc.submit(&tok, f, e, &payload).unwrap();
+    let ref_a = svc.wait_result_ref(a.task, Duration::from_secs(10)).unwrap();
+    assert_eq!(ref_a.owner, e, "A's result lives in the endpoint's store");
+
+    // B and C: submitted by ref — the service brokers a ~100-byte ref
+    // and never touches the intermediate bytes.
+    let b = svc.submit_by_ref(&tok, f, e, &ref_a).unwrap();
+    let ref_b = svc.wait_result_ref(b.task, Duration::from_secs(10)).unwrap();
+    assert_eq!(ref_b.owner, e);
+    let c = svc.submit_by_ref(&tok, f, e, &ref_b).unwrap();
+    let out = svc.wait_result(c.task, Duration::from_secs(10)).unwrap();
+    assert_eq!(out, payload, "the chain round-trips the payload bit-for-bit");
+
+    // Byte pins: nothing big crossed the service queues in either
+    // direction — all three inputs and all three outputs were refs.
+    assert_eq!(Counters::get(&svc.counters.bytes_through_service), 0);
+    assert_eq!(Counters::get(&svc.counters.result_bytes_through_service), 0);
+    assert_eq!(Counters::get(&svc.counters.results_ref_offloaded), 3);
+    assert_eq!(Counters::get(&svc.counters.tasks_ref_forwarded), 2);
+    assert_eq!(fh.stats.ref_results.load(Relaxed), 3);
+
+    // Locality pins: B and C were hinted with the endpoint as data
+    // owner and routed to its managers (A's hint named the service
+    // store — no manager lives there, so it counts remote)...
+    assert_eq!(route_stats.local_routes.load(Relaxed), 2, "B and C routed to the data");
+    assert_eq!(route_stats.remote_routes.load(Relaxed), 1, "A's input is service-owned");
+    // ...and their resolves were local store hits: the bytes never left
+    // the endpoint between stages.
+    assert!(
+        fabric.stats.local_hits.load(Relaxed) >= 2,
+        "B's and C's inputs must resolve from the endpoint's own store, got {}",
+        fabric.stats.local_hits.load(Relaxed)
     );
 
     fh.shutdown();

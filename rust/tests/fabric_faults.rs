@@ -1,0 +1,266 @@
+//! Fault injection over the ref lifecycle (§5 data fabric): every
+//! injected fault — eviction mid-flight, owner disconnect, checksum
+//! corruption, TTL expiry, clock skew, crash mid-spill — must surface a
+//! *typed* error (`Error::NotFound` / `Error::Corrupt`) and fail the
+//! affected task cleanly at the worker within a bounded wait. Never a
+//! hang, never a panic, never wrong bytes.
+//!
+//! The scenarios are deterministic: faults are injected at fixed points
+//! between `put` and `resolve`, and virtual clocks drive every
+//! time-dependent case.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+use funcx::common::ids::{EndpointId, FunctionId, UserId};
+use funcx::common::sync::Notify;
+use funcx::common::task::{Payload, Task, TaskResult, TaskState};
+use funcx::common::time::{Clock, VirtualClock, WallClock};
+use funcx::containers::{ContainerTech, SystemProfile, TABLE3_MODELS};
+use funcx::datastore::{DataFabric, DataRef, TieredConfig, TieredStore};
+use funcx::endpoint::{Manager, ManagerCtx};
+use funcx::metrics::LatencyBreakdown;
+use funcx::runtime::PayloadExecutor;
+use funcx::serialize::{pack, unpack, Buffer, Value};
+use funcx::Error;
+
+/// Drive one by-ref Echo task through a real manager + worker against
+/// `fabric`, and return its result within a bounded wait. The harness
+/// itself asserts the no-hang half of every scenario.
+fn run_ref_task(fabric: Arc<DataFabric>, clock: Arc<dyn Clock>, dref: DataRef) -> TaskResult {
+    let (tx, rx) = channel();
+    let ctx = ManagerCtx {
+        executor: Arc::new(PayloadExecutor::bare()),
+        results: tx,
+        wake: Arc::new(Notify::new()),
+        result_batch: 1,
+        endpoint: Some(fabric.local().owner()),
+        fabric: Some(fabric),
+        max_result_bytes: usize::MAX,
+        clock,
+        latency: Arc::new(LatencyBreakdown::new()),
+        start_model: TABLE3_MODELS.lookup(SystemProfile::Local, ContainerTech::None),
+        cold_start_scale: 0.001,
+    };
+    let m = Manager::spawn(1, 600.0, ctx, 1);
+    let task = Task::new(
+        FunctionId::new(),
+        EndpointId::new(),
+        UserId::new(),
+        None,
+        Payload::Echo,
+        Buffer::empty(),
+    )
+    .with_input_ref(dref);
+    m.enqueue(vec![Arc::new(task)]);
+    let batch = rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("faulted task must produce a result, not hang");
+    m.shutdown();
+    batch.into_iter().next().expect("one result")
+}
+
+/// The failure message a faulted task carries back to the caller.
+fn failure_message(r: &TaskResult) -> String {
+    assert_eq!(r.state, TaskState::Failed, "fault must fail the task, not {:?}", r.state);
+    unpack(&r.output)
+        .ok()
+        .and_then(|v| v.as_str().map(str::to_string))
+        .unwrap_or_default()
+}
+
+fn store() -> Arc<TieredStore> {
+    Arc::new(TieredStore::new(EndpointId::new(), TieredConfig::default()).unwrap())
+}
+
+fn frame(byte: u8, len: usize) -> Buffer {
+    pack(&Value::Bytes(vec![byte; len]), 0).unwrap()
+}
+
+/// Fault: the ref's frame is evicted between dispatch and the worker's
+/// resolve (the store owner reclaimed it). The task fails `not found`.
+#[test]
+fn ref_evicted_mid_flight_fails_typed() {
+    let s = store();
+    let fabric = Arc::new(DataFabric::new(s.clone()));
+    let dref = fabric.put("task-input:victim", frame(0x11, 8 << 10), 0.0).unwrap();
+    // Mid-flight eviction, after the ref was minted and "dispatched".
+    assert!(s.remove("task-input:victim").unwrap());
+    assert!(matches!(fabric.resolve(&dref, 0.0), Err(Error::NotFound(_))));
+    let r = run_ref_task(fabric, Arc::new(WallClock::new()), dref);
+    assert!(failure_message(&r).contains("not found"), "got: {}", failure_message(&r));
+}
+
+/// Fault: the owning endpoint disconnects before the fetch. Peer-held
+/// refs stop resolving with `NotFound`; frames already verified into
+/// the resolve cache keep serving.
+#[test]
+fn owner_disconnected_before_fetch_fails_typed() {
+    let owner = store();
+    let mine = store();
+    let fabric = Arc::new(DataFabric::new(mine));
+    fabric.connect_peer(owner.owner(), owner.clone());
+    let cached = owner.put("task-input:cached", frame(0x22, 4 << 10), 0.0).unwrap();
+    let uncached = owner.put("task-input:uncached", frame(0x33, 4 << 10), 0.0).unwrap();
+    // Warm the cache with one of the two, then lose the peer.
+    fabric.resolve(&cached, 0.0).unwrap();
+    assert!(fabric.disconnect_peer(owner.owner()));
+    assert!(!fabric.disconnect_peer(owner.owner()), "second disconnect is a no-op");
+
+    match fabric.resolve(&uncached, 0.0) {
+        Err(Error::NotFound(m)) => assert!(m.contains("unreachable"), "{m}"),
+        other => panic!("expected NotFound, got {other:?}"),
+    }
+    assert!(fabric.resolve(&cached, 0.0).is_ok(), "verified cache entries survive peer loss");
+
+    let r = run_ref_task(fabric, Arc::new(WallClock::new()), uncached);
+    assert!(failure_message(&r).contains("not found"), "got: {}", failure_message(&r));
+}
+
+/// Fault: the frame fetched from a peer no longer matches the ref's
+/// checksum (the owner overwrote the key; same length, different
+/// bytes). The forward surfaces `Error::Corrupt` — wrong data is never
+/// silently delivered — and the task fails with the corrupt message.
+#[test]
+fn checksum_mismatch_on_peer_forward_is_corrupt() {
+    let owner = store();
+    let mine = store();
+    let fabric = Arc::new(DataFabric::new(mine));
+    fabric.connect_peer(owner.owner(), owner.clone());
+    let stale = owner.put("task-input:k", frame(0x44, 4 << 10), 0.0).unwrap();
+    // Same key, same length, different content: size check passes, the
+    // checksum catches it.
+    owner.put("task-input:k", frame(0x55, 4 << 10), 0.0).unwrap();
+    match fabric.resolve(&stale, 0.0) {
+        Err(Error::Corrupt(m)) => assert!(m.contains("checksum"), "{m}"),
+        other => panic!("expected Corrupt, got {other:?}"),
+    }
+    let r = run_ref_task(fabric, Arc::new(WallClock::new()), stale);
+    assert!(failure_message(&r).contains("corrupt"), "got: {}", failure_message(&r));
+}
+
+/// Fault: the ref's TTL lapses between `put` and the worker's resolve
+/// (driven on a virtual clock). `NotFound`, and the frame is gone for
+/// good — a later resolve at an even later time stays `NotFound`.
+#[test]
+fn ttl_expiry_between_put_and_resolve_fails_typed() {
+    let vc = VirtualClock::new();
+    let s = Arc::new(
+        TieredStore::new(
+            EndpointId::new(),
+            TieredConfig { mem_high_watermark: 1 << 20, default_ttl_s: 5.0, spool_dir: None },
+        )
+        .unwrap(),
+    );
+    let fabric = Arc::new(DataFabric::new(s));
+    let dref = fabric.put("task-input:short", frame(0x66, 2 << 10), vc.now()).unwrap();
+    assert!(fabric.resolve(&dref, vc.now()).is_ok(), "live before expiry");
+    vc.advance_to(6.0);
+    assert!(matches!(fabric.resolve(&dref, vc.now()), Err(Error::NotFound(_))));
+    let r = run_ref_task(fabric, Arc::new(vc), dref);
+    assert!(failure_message(&r).contains("not found"), "got: {}", failure_message(&r));
+}
+
+/// Fix pin (ROADMAP "store-owned clocks"): with owner-stamped expiry, a
+/// resolving peer whose clock disagrees by ± the full TTL neither
+/// expires a live entry early nor resurrects a dead one.
+#[test]
+fn skewed_peer_clocks_cannot_mis_expire() {
+    let owner_clock = VirtualClock::new();
+    let ttl = 10.0;
+    let owner_store = Arc::new(
+        TieredStore::new(
+            EndpointId::new(),
+            TieredConfig { mem_high_watermark: 1 << 20, default_ttl_s: ttl, spool_dir: None },
+        )
+        .unwrap()
+        .with_owner_clock(Arc::new(owner_clock.clone())),
+    );
+    let reader = Arc::new(DataFabric::new(store()));
+    reader.connect_peer(owner_store.owner(), owner_store.clone());
+    let dref = owner_store.put("task-input:skew", frame(0x77, 2 << 10), 0.0).unwrap();
+
+    // Reader clock running a full TTL *ahead*: the entry is still live
+    // on the owner's clock, so the resolve must succeed.
+    let got = reader.resolve(&dref, ttl + 1.0).unwrap();
+    assert_eq!(got.len(), frame(0x77, 2 << 10).len());
+
+    // Owner's clock passes the stamp: now the entry is dead, and a
+    // reader running a full TTL *behind* must not resurrect it.
+    owner_store.evict_expired(0.0); // skewed caller `now` is ignored too
+    owner_clock.advance_to(ttl + 1.0);
+    assert!(matches!(owner_store.resolve(&dref, -ttl), Err(Error::NotFound(_))));
+    // (The reader's earlier fetch lives in its verified cache; a fresh
+    // fabric sees the expiry.)
+    let fresh = DataFabric::new(store());
+    fresh.connect_peer(owner_store.owner(), owner_store.clone());
+    assert!(matches!(fresh.resolve(&dref, -ttl), Err(Error::NotFound(_))));
+}
+
+/// Fix pin (ROADMAP "spool GC / crash recovery"): a store killed
+/// mid-spill leaks nothing — on recovery, fully-spilled frames readopt
+/// byte-identical under the old epoch (in-flight refs keep resolving),
+/// the interrupted spill is reclaimed, and memory-tier refs that died
+/// with the process fail `NotFound`, not wrong data.
+#[test]
+fn crash_mid_spill_recovers_without_leaks() {
+    let dir = std::env::temp_dir().join(format!("funcx-faults-spool-{}", funcx::Uuid::new()));
+    let owner = EndpointId::new();
+    let cfg = TieredConfig {
+        mem_high_watermark: 16 * 1024, // one 12 KB frame resident at most
+        default_ttl_s: 0.0,
+        spool_dir: Some(dir.clone()),
+    };
+    let spilled_bytes = frame(0x88, 12 << 10);
+    let (spilled_ref, resident_ref) = {
+        let s = TieredStore::new(owner, cfg.clone()).unwrap();
+        let spilled = s.put("chain:spilled", spilled_bytes.clone(), 0.0).unwrap();
+        // The second put pushes the first to disk and stays in memory.
+        let resident = s.put("chain:resident", frame(0x99, 12 << 10), 0.0).unwrap();
+        assert_eq!(s.tier_of("chain:spilled"), Some(funcx::datastore::Tier::Disk));
+        assert_eq!(s.tier_of("chain:resident"), Some(funcx::datastore::Tier::Memory));
+        std::mem::forget(s); // crash: no Drop, no cleanup
+        (spilled, resident)
+    };
+    // Interrupted spill: a frame file the manifest never recorded.
+    std::fs::write(dir.join("torn.0123456789abcdef"), [0u8; 64]).unwrap();
+
+    let recovered = Arc::new(TieredStore::recover(owner, cfg).unwrap());
+    // Byte-identical readopt under the old epoch: the in-flight ref
+    // resolves as if the crash never happened.
+    let got = recovered.resolve(&spilled_ref, 0.0).unwrap();
+    assert_eq!(got.as_slice(), spilled_bytes.as_slice());
+    // The memory-tier frame died with the process: typed NotFound.
+    assert!(matches!(recovered.resolve(&resident_ref, 0.0), Err(Error::NotFound(_))));
+    // No leaked files: exactly the one readopted frame remains (plus
+    // the manifest).
+    let mut names: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    names.sort();
+    assert_eq!(names.len(), 2, "spool must hold one frame + manifest, got {names:?}");
+    assert!(names.iter().any(|n| n.starts_with("chain_spilled.")), "{names:?}");
+    assert!(names.contains(&"spool.manifest".to_string()), "{names:?}");
+
+    // And the whole fault still fails a *task* cleanly, not just a
+    // direct resolve.
+    let fabric = Arc::new(DataFabric::new(recovered));
+    let r = run_ref_task(fabric, Arc::new(WallClock::new()), resident_ref);
+    assert!(failure_message(&r).contains("not found"), "got: {}", failure_message(&r));
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The harness's own sanity: an unfaulted by-ref task succeeds, so the
+/// failures above are the faults' doing, not the harness's.
+#[test]
+fn unfaulted_ref_task_succeeds() {
+    let fabric = Arc::new(DataFabric::new(store()));
+    let input = Value::Bytes(vec![0xAA; 4 << 10]);
+    let dref = fabric.put("task-input:ok", pack(&input, 0).unwrap(), 0.0).unwrap();
+    let r = run_ref_task(fabric, Arc::new(WallClock::new()), dref);
+    assert_eq!(r.state, TaskState::Success);
+    assert_eq!(unpack(&r.output).unwrap(), input);
+}

@@ -49,6 +49,7 @@ fn result_output_borrows_its_frame() {
         task: funcx::common::ids::TaskId::new(),
         state: TaskState::Success,
         output: output.clone(),
+        output_ref: None,
         exec_time_s: 0.5,
         cold_start: false,
     };
@@ -56,6 +57,48 @@ fn result_output_borrows_its_frame() {
     let back = TaskResult::from_buffer(&frame).unwrap();
     assert!(back.output.same_allocation(&frame));
     assert_eq!(back.output, output);
+}
+
+/// The `"rref"` trailer field survives the wire, and a by-ref result
+/// frame under hostile `body_len` values errors out instead of
+/// panicking or mis-decoding (the same contract the facade pins for
+/// plain frames).
+#[test]
+fn rref_frame_roundtrips_and_rejects_hostile_body_len() {
+    let dref = funcx::datastore::DataRef {
+        owner: EndpointId::new(),
+        epoch: 9,
+        key: "task-result:chain".into(),
+        size: 1 << 20,
+        checksum: 0xABCD_EF01,
+    };
+    let r = TaskResult {
+        task: funcx::common::ids::TaskId::new(),
+        state: TaskState::Success,
+        output: Buffer::empty(),
+        output_ref: Some(dref.clone()),
+        exec_time_s: 0.25,
+        cold_start: false,
+    };
+    let frame = r.to_buffer();
+    let back = TaskResult::from_buffer(&frame).unwrap();
+    assert_eq!(back.output_ref, Some(dref));
+    assert_eq!(back.output.len(), 0);
+
+    let bytes = frame.to_vec();
+    // body_len claims reaching past the frame must all error.
+    for claimed in [u32::MAX, u32::MAX - 9, 1u32 << 30, bytes.len() as u32] {
+        let mut raw = bytes.clone();
+        raw[6..10].copy_from_slice(&claimed.to_le_bytes());
+        assert!(
+            TaskResult::from_buffer(&Buffer::from_vec(raw)).is_err(),
+            "claimed body_len {claimed} must be rejected"
+        );
+    }
+    // A clobbered magic byte is rejected before anything decodes.
+    let mut raw = bytes.clone();
+    raw[0] = 0x00;
+    assert!(TaskResult::from_buffer(&Buffer::from_vec(raw)).is_err());
 }
 
 /// Popping a typed queue yields tasks whose payload still lives in the
@@ -112,6 +155,8 @@ fn dispatch_forwarder_link_manager_is_zero_copy() {
         wake: Arc::new(funcx::common::sync::Notify::new()),
         result_batch: 1,
         fabric: None,
+        endpoint: None,
+        max_result_bytes: 10 * 1024 * 1024,
         clock: Arc::new(WallClock::new()),
         latency: Arc::new(LatencyBreakdown::new()),
         start_model: TABLE3_MODELS.lookup(SystemProfile::Local, ContainerTech::None),
