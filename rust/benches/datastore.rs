@@ -7,12 +7,15 @@
 
 mod harness;
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use funcx::common::ids::{ContainerId, EndpointId, FunctionId, UserId};
 use funcx::common::task::{Payload, Task};
 use funcx::data::{DataChannel, SharedFsChannel};
 use funcx::datastore::{DataFabric, TieredConfig, TieredStore};
+use funcx::metrics::summarize;
 use funcx::routing::WarmingAware;
 use funcx::serialize::{pack, Buffer, Value, Wire};
 use funcx::sim::{SimEndpoint, SimProfile, SimTask};
@@ -30,7 +33,7 @@ fn mem_store() -> TieredStore {
 }
 
 fn disk_store() -> TieredStore {
-    // Watermark 0: every frame spills immediately and never promotes.
+    // Watermark 0: every frame spills (background) and never promotes.
     TieredStore::new(
         EndpointId::new(),
         TieredConfig { mem_high_watermark: 0, default_ttl_s: 0.0, spool_dir: None },
@@ -61,6 +64,7 @@ fn main() {
         // Disk tier: spilled frame, every get reads the spool file.
         let disk = disk_store();
         disk.put("k", frame.clone(), 0.0).unwrap();
+        assert!(disk.settle(Duration::from_secs(10)), "background spill must finish");
         let t_disk = harness::bench(&format!("disk-tier get x{n} ({label})"), 5, || {
             for _ in 0..n {
                 std::hint::black_box(disk.get("k", 0.0).unwrap());
@@ -111,7 +115,10 @@ fn main() {
             for (i, f) in frames.iter().enumerate() {
                 s.put(&format!("k{i}"), f.clone(), 0.0).unwrap();
             }
-            std::hint::black_box(s.stats.spills.load(std::sync::atomic::Ordering::Relaxed));
+            // Spilling is asynchronous now; wait for the spiller to
+            // drain so the measurement still covers the disk writes.
+            assert!(s.settle(Duration::from_secs(60)));
+            std::hint::black_box(s.stats.spills.load(Ordering::Relaxed));
         });
         let spilled_mb = (n * size) as f64 / 1e6 - 8.0; // roughly n MB minus resident
         harness::record("spill throughput", spilled_mb / mean_s, "MB/s");
@@ -197,6 +204,98 @@ fn main() {
         assert!(
             inline > by_ref,
             "ref-forwarded chain ({by_ref}s) must beat inline ({inline}s)"
+        );
+    }
+
+    harness::section("lock contention: p99 mem-hit latency under a spill storm (state machine)");
+    {
+        // The tentpole's perf half: a memory-tier get must stay
+        // memory-speed while the store is spilling — the index mutex
+        // holds metadata transitions only, never tier I/O. Measure
+        // per-get latency on a hot resident key (a) uncontended and
+        // (b) under a continuous watermark-crossing put storm that
+        // keeps the background spiller writing 256 KB spool files.
+        const SAMPLES: usize = 20_000;
+        let sample_gets = |s: &TieredStore, key: &str| -> Vec<f64> {
+            let mut lat = Vec::with_capacity(SAMPLES);
+            for _ in 0..SAMPLES {
+                let t0 = std::time::Instant::now();
+                std::hint::black_box(s.get(key, 0.0).unwrap());
+                lat.push(t0.elapsed().as_secs_f64());
+            }
+            lat
+        };
+        let store = TieredStore::new(
+            EndpointId::new(),
+            TieredConfig {
+                mem_high_watermark: 4 << 20,
+                default_ttl_s: 0.0,
+                spool_dir: None,
+            },
+        )
+        .unwrap();
+        let hot = frame_of(64 * 1024);
+        store.put("hot", hot, 0.0).unwrap();
+
+        // Uncontended baseline.
+        sample_gets(&store, "hot"); // warm-up
+        let base = summarize(&sample_gets(&store, "hot"));
+
+        // Spill storm: a writer thread keeps the memory tier over the
+        // watermark with fresh 256 KB frames while we re-sample. The
+        // sampling starts at the same instant and touches the hot key
+        // every iteration, so LRU keeps requeuing it past the spiller's
+        // victim picks — its gets stay memory-tier throughout (asserted
+        // below). No warm-up gap: an untouched hot key would be the
+        // oldest entry and the first victim.
+        let store = Arc::new(store);
+        let stop = Arc::new(AtomicBool::new(false));
+        let storm = {
+            let store = store.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let f = frame_of(256 * 1024);
+                let mut i = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    store.put(&format!("storm{i}"), f.clone(), 0.0).unwrap();
+                    i += 1;
+                }
+                i
+            })
+        };
+        let contended = summarize(&sample_gets(&store, "hot"));
+        // Captured before the storm winds down: every sampled get must
+        // have been a memory hit (the constantly-touched hot key is
+        // never the LRU victim while sampling runs), or the comparison
+        // would be measuring disk reads, not lock contention.
+        let disk_hits = store.stats.disk_hits.load(Ordering::Relaxed);
+        stop.store(true, Ordering::Relaxed);
+        let storm_puts = storm.join().unwrap();
+        assert_eq!(disk_hits, 0, "sampled gets must all be memory-tier hits");
+        let spills = store.stats.spills.load(Ordering::Relaxed);
+        assert!(spills > 0, "the storm never forced a spill ({storm_puts} puts)");
+
+        harness::record("mem-hit p99 uncontended", base.p99 * 1e6, "us");
+        harness::record("mem-hit p99 under spill storm", contended.p99 * 1e6, "us");
+        harness::record("mem-hit p99 contention ratio", contended.p99 / base.p99, "x");
+        println!(
+            "  => p99 {:.2} us uncontended vs {:.2} us under storm ({} spills) — {:.2}x",
+            base.p99 * 1e6,
+            contended.p99 * 1e6,
+            spills,
+            contended.p99 / base.p99
+        );
+        // Acceptance: within 2x of uncontended (+25 us absolute floor —
+        // at sub-microsecond baselines a single scheduler wakeup would
+        // otherwise dominate the ratio). Before the state-machine
+        // rework, a 256 KB spool write under the index lock put
+        // disk-write latency on this path's tail.
+        assert!(
+            contended.p99 <= base.p99 * 2.0 + 25e-6,
+            "mem-hit p99 under spill storm {:.2} us vs uncontended {:.2} us — \
+             tier I/O is back under the index lock",
+            contended.p99 * 1e6,
+            base.p99 * 1e6
         );
     }
 

@@ -250,6 +250,47 @@ fn main() {
         );
     }
 
+    harness::section("watch wakeups per consumed frame (hot key; coalescing baseline)");
+    {
+        // ROADMAP "watch granularity" says measure before optimizing:
+        // a KV watch signals on EVERY push to the watched key, but the
+        // epoch protocol lets a consumer drain whole batches per wait —
+        // so the number that matters is waits-woken per consumed frame,
+        // not signals published. This section records both for a hot
+        // key under a saturating producer, as the baseline any future
+        // wakeup-coalescing PR must beat.
+        const FRAMES: usize = 100_000;
+        let kv = KvStore::new();
+        let watch = Arc::new(funcx::common::sync::Notify::new());
+        kv.add_watch("hotq", watch.clone());
+        let producer = {
+            let kv = kv.clone();
+            std::thread::spawn(move || {
+                for _ in 0..FRAMES {
+                    kv.rpush("hotq", vec![0u8; 32]);
+                }
+            })
+        };
+        let mut consumed = 0usize;
+        while consumed < FRAMES {
+            let seen = watch.epoch();
+            let got = kv.lpop_n("hotq", 256).len();
+            if got == 0 {
+                watch.wait_newer(seen, Duration::from_millis(10));
+            } else {
+                consumed += got;
+            }
+        }
+        producer.join().unwrap();
+        let notifies = watch.notify_count() as f64 / FRAMES as f64;
+        let wakeups = watch.wakeup_count() as f64 / FRAMES as f64;
+        println!(
+            "  {FRAMES} frames: {notifies:.3} notifies/frame, {wakeups:.4} wakeups/frame"
+        );
+        harness::record("watch notifies per consumed frame (hot key)", notifies, "signals");
+        harness::record("watch wakeups per consumed frame (hot key)", wakeups, "wakes");
+    }
+
     harness::section("live end-to-end dispatch overhead");
     let svc = Arc::new(FuncXService::new(ServiceConfig::default()));
     let (_u, tok) = svc.bootstrap_user("bench");
@@ -332,6 +373,25 @@ fn main() {
             total / secs
         );
         harness::record("multi-endpoint fleet throughput", total / secs, "tasks/s");
+        // Forwarder-latch traffic per task across the fleet (queue
+        // watches + link sends + result stores all multiplex onto one
+        // latch): the live-stack companion to the hot-key watch
+        // baseline above.
+        let (notifies, wakeups) = stacks
+            .iter()
+            .map(|(_, _, fh, _)| fh.wake_counters())
+            .fold((0u64, 0u64), |(n, w), (a, b)| (n + a, w + b));
+        let per_task = 4.0 * total; // warm-up + 3 timed runs
+        harness::record(
+            "forwarder notifies per task (fleet)",
+            notifies as f64 / per_task,
+            "signals",
+        );
+        harness::record(
+            "forwarder wakeups per task (fleet)",
+            wakeups as f64 / per_task,
+            "wakes",
+        );
         for (_, _, fh, agent) in stacks {
             fh.shutdown();
             agent.join();

@@ -11,7 +11,15 @@
 //! on its link *and* its task-queue watch through a single handle), which
 //! is what lets the control loops block instead of sleep-polling across
 //! heterogeneous wake sources (mpsc channels, KV pushes, result stores).
+//!
+//! Each latch keeps two relaxed counters — signals published
+//! ([`Notify::notify_count`]) and waits that actually observed a newer
+//! epoch ([`Notify::wakeup_count`]) — so benches can measure wakeups per
+//! unit of work (e.g. per consumed frame on a hot watched key) before
+//! investing in coalescing. The counters are telemetry only: nothing in
+//! the wait protocol reads them.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -20,11 +28,16 @@ use std::time::{Duration, Instant};
 pub struct Notify {
     epoch: Mutex<u64>,
     cv: Condvar,
+    /// Signals published via [`Notify::notify`].
+    notifies: AtomicU64,
+    /// Waits that returned having observed an epoch newer than `seen`
+    /// (immediately-stale waits included; timeouts excluded).
+    wakeups: AtomicU64,
 }
 
 impl Notify {
     pub fn new() -> Self {
-        Notify { epoch: Mutex::new(0), cv: Condvar::new() }
+        Notify::default()
     }
 
     /// Current epoch. Snapshot this *before* checking for work.
@@ -37,6 +50,7 @@ impl Notify {
         let mut g = self.epoch.lock().expect("notify poisoned");
         *g = g.wrapping_add(1);
         drop(g);
+        self.notifies.fetch_add(1, Ordering::Relaxed);
         self.cv.notify_all();
     }
 
@@ -53,7 +67,22 @@ impl Notify {
             let (guard, _) = self.cv.wait_timeout(g, remaining).expect("notify poisoned");
             g = guard;
         }
-        *g
+        let out = *g;
+        drop(g);
+        if out != seen {
+            self.wakeups.fetch_add(1, Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// How many signals have been published on this latch.
+    pub fn notify_count(&self) -> u64 {
+        self.notifies.load(Ordering::Relaxed)
+    }
+
+    /// How many waits returned because the epoch moved (not timeouts).
+    pub fn wakeup_count(&self) -> u64 {
+        self.wakeups.load(Ordering::Relaxed)
     }
 }
 
@@ -91,5 +120,22 @@ mod tests {
         let t0 = Instant::now();
         assert_eq!(n.wait_newer(seen, Duration::from_millis(30)), seen);
         assert!(t0.elapsed() >= Duration::from_millis(30));
+    }
+
+    #[test]
+    fn counters_track_signals_and_wakeups() {
+        let n = Notify::new();
+        assert_eq!((n.notify_count(), n.wakeup_count()), (0, 0));
+        let seen = n.epoch();
+        n.notify();
+        n.notify();
+        assert_eq!(n.notify_count(), 2);
+        // A wait observing a newer epoch counts as one wakeup…
+        n.wait_newer(seen, Duration::from_secs(1));
+        assert_eq!(n.wakeup_count(), 1);
+        // …a timed-out wait does not.
+        let seen = n.epoch();
+        n.wait_newer(seen, Duration::from_millis(5));
+        assert_eq!(n.wakeup_count(), 1);
     }
 }

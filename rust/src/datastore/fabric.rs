@@ -43,6 +43,9 @@ pub struct FabricStats {
     /// Fetches routed through the Globus transfer model.
     pub globus_transfers: AtomicU64,
     pub misses: AtomicU64,
+    /// Frames eagerly reclaimed from their owning store via
+    /// [`DataFabric::reclaim`] (result-frame GC).
+    pub frames_reclaimed: AtomicU64,
 }
 
 /// How a given ref would be (or was) fetched — the ladder decision.
@@ -200,6 +203,37 @@ impl DataFabric {
             "ref {}: owner {} unreachable from this endpoint",
             r.key, r.owner
         )))
+    }
+
+    /// Eagerly reclaim the frame behind `r` from its owning store — the
+    /// consumed-result GC path: once a result ref has been retrieved (or
+    /// its consuming chain task has completed), the frame need not sit
+    /// in the owner's store until TTL. Reaches the local store or a
+    /// connected peer, and always drops any cached copy so the bytes are
+    /// actually freed. Returns whether the owner's copy was removed (a
+    /// vanished frame or unreachable owner is not an error — GC is
+    /// best-effort).
+    pub fn reclaim(&self, r: &DataRef) -> bool {
+        // Drop the cached copy regardless of owner reachability.
+        {
+            let mut c = self.cache.lock().expect("fabric cache poisoned");
+            if let Some(e) = c.entries.remove(&cache_key(r)) {
+                c.bytes -= e.frame.len();
+            }
+        }
+        let removed = if r.owner == self.local.owner() && r.epoch == self.local.epoch() {
+            self.local.remove(&r.key).unwrap_or(false)
+        } else {
+            let peer = self.peers.lock().expect("fabric peers poisoned").get(&r.owner).cloned();
+            match peer {
+                Some(p) if p.epoch() == r.epoch => p.remove(&r.key).unwrap_or(false),
+                _ => false,
+            }
+        };
+        if removed {
+            self.stats.frames_reclaimed.fetch_add(1, Ordering::Relaxed);
+        }
+        removed
     }
 
     /// The ladder decision for `r` without fetching anything. TTL-aware:
@@ -423,6 +457,33 @@ mod tests {
         assert_eq!(got.len(), 2 << 20);
         assert_eq!(fab.stats.globus_transfers.load(Relaxed), 1);
         assert!(ts.in_flight_bytes(ga, gb, 0.5) >= (2 << 20) as u64);
+    }
+
+    /// Result-frame GC: reclaiming a consumed ref frees the owner's copy
+    /// (local or peer) *and* the resolve-cache copy, after which the ref
+    /// is NotFound everywhere — and reclaiming again is a no-op.
+    #[test]
+    fn reclaim_frees_owner_and_cache_copies() {
+        use std::sync::atomic::Ordering::Relaxed;
+        // Local owner.
+        let s = store();
+        let fab = DataFabric::new(s.clone());
+        let r = fab.put("task-result:x", frame(512), 0.0).unwrap();
+        assert!(fab.reclaim(&r), "local reclaim removes the frame");
+        assert!(!fab.reclaim(&r), "second reclaim is a no-op");
+        assert!(matches!(fab.resolve(&r, 0.0), Err(Error::NotFound(_))));
+        assert_eq!(fab.stats.frames_reclaimed.load(Relaxed), 1);
+
+        // Peer owner, with the frame already verified into the cache.
+        let owner = store();
+        let fab2 = DataFabric::new(store());
+        fab2.connect_peer(owner.owner(), owner.clone());
+        let r2 = owner.put("task-result:y", frame(1024), 0.0).unwrap();
+        fab2.resolve(&r2, 0.0).unwrap(); // warms the cache
+        assert!(fab2.cache_bytes() > 0);
+        assert!(fab2.reclaim(&r2), "peer reclaim removes the owner's frame");
+        assert_eq!(fab2.cache_bytes(), 0, "cached copy dropped too");
+        assert!(matches!(fab2.resolve(&r2, 0.0), Err(Error::NotFound(_))));
     }
 
     #[test]

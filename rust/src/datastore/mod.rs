@@ -12,10 +12,12 @@
 //!   frames: [`MemoryBackend`] (over the existing lock-striped
 //!   [`crate::store::KvStore`] shards) and [`DiskBackend`] (real files
 //!   under a spool directory).
-//! * [`TieredStore`] — composes the two behind a configurable memory
-//!   high-watermark with LRU spill to disk, promotion back on access,
-//!   and TTL expiry. Frames spill and reload as raw wire bytes — never
-//!   decoded or re-encoded on the way through a tier.
+//! * [`TieredStore`] — the tiered store behind a configurable memory
+//!   high-watermark with background LRU spill to disk, promotion back
+//!   on access, and TTL expiry, built around a per-key state machine
+//!   ([`EntryState`]) so the index mutex guards metadata only and tier
+//!   I/O never runs under it. Frames spill and reload as raw wire
+//!   bytes — never decoded or re-encoded on the way through a tier.
 //! * [`DataRef`] — the compact (owner, epoch, key, size, checksum)
 //!   reference that rides in the task trailer wire format instead of
 //!   inline payload bytes once an input exceeds
@@ -30,7 +32,7 @@ mod dataref;
 mod fabric;
 mod tiered;
 
-pub use backend::{DiskBackend, MemoryBackend, SpoolEntry, StoreBackend};
+pub use backend::{DiskBackend, MemoryBackend, SpoolEntry, SpoolStore, StoreBackend};
 pub use dataref::{checksum, DataRef, SERVICE_OWNER};
 pub use fabric::{DataFabric, FabricStats, FetchPlan};
-pub use tiered::{Tier, TierStats, TieredConfig, TieredStore};
+pub use tiered::{EntryState, Tier, TierStats, TieredConfig, TieredStore};

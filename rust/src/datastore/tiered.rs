@@ -1,19 +1,62 @@
 //! The tiered payload store: memory tier + disk tier behind one index.
 //!
 //! Frames land in the memory tier; once the tier's resident bytes exceed
-//! the configured high-watermark, least-recently-used frames spill to
-//! the disk tier as raw wire bytes. A disk-tier hit promotes the frame
-//! back to memory when it fits without displacing residents (promotion
-//! never cascades into spills, so a frame larger than the remaining
-//! headroom simply keeps serving from disk). Every entry carries an
-//! optional TTL; expired entries resolve to [`Error::NotFound`] and are
-//! removed lazily on access or eagerly via
-//! [`TieredStore::evict_expired`].
+//! the configured high-watermark, a background spiller moves
+//! least-recently-used frames to the disk tier as raw wire bytes. A
+//! disk-tier hit promotes the frame back to memory when it fits without
+//! displacing residents (promotion never cascades into spills, so a
+//! frame larger than the remaining headroom simply keeps serving from
+//! disk). Every entry carries an optional TTL; expired entries resolve
+//! to [`Error::NotFound`] and are removed lazily on access or eagerly
+//! via [`TieredStore::evict_expired`].
 //!
 //! The store never decodes a frame: spill writes the frame's bytes,
 //! reload wraps the read bytes in a fresh shared allocation, and a
 //! memory-tier hit returns another handle on the *original* allocation
 //! (pointer-pinned in `tests/data_fabric.rs`).
+//!
+//! # Concurrency: the per-key state machine
+//!
+//! Each entry moves through [`EntryState`]:
+//!
+//! ```text
+//!            put                    spill commit
+//!   (new) ────────► Resident ─────────────────────► OnDisk
+//!                      ▲   └─► Spilling ──┘           │ promote mark
+//!                      │         (bg spiller,         ▼
+//!                      └────── Promoting ◄── disk hit w/ headroom
+//!                    promote commit
+//!
+//!   any state ──(TTL lapse / remove)──► Expired (entry reaped)
+//! ```
+//!
+//! The index mutex guards **metadata only** — state tags, sizes, LRU
+//! seqs, and the O(1) frame *handles* of memory-resident entries. No
+//! backend I/O ever runs under it:
+//!
+//! * **Spill** (background thread): pop the LRU victim, mark it
+//!   `Spilling` (the entry keeps its live `Buffer` handle), drop the
+//!   lock, write the spool file, re-acquire to commit `OnDisk`.
+//!   Concurrent `get`s of a `Spilling` key are served from the
+//!   still-live handle with zero blocking — a stalled spool write
+//!   cannot delay a memory-tier hit (pinned below with a blocking fake
+//!   spool).
+//! * **Promote** (symmetric): a disk hit with headroom marks
+//!   `Promoting` (reserving the bytes), drops the lock, reads the spool
+//!   file, re-acquires to commit `Resident`. Concurrent `get`s of a
+//!   `Promoting` key read the spool file themselves (it stays in place
+//!   until the commit) or retry into the committed handle.
+//! * **`put` never pays disk latency**: it installs the frame handle,
+//!   bumps the generation, and nudges the spiller when the watermark is
+//!   crossed.
+//!
+//! Every `put` of a key bumps its **generation** (and every spill
+//! re-stamps it); transition commits re-check the generation, so an
+//! overwrite or removal that lands mid-transition makes the in-flight
+//! worker abandon its artifact instead of clobbering newer data. Spool
+//! files are keyed `key#generation` and each name is written exactly
+//! once, so no two generations ever share a file and a reader can
+//! never observe a partially-written one.
 //!
 //! # Clock contract
 //!
@@ -32,38 +75,54 @@
 //!
 //! # Crash recovery
 //!
-//! The disk tier's epoch-stamped manifest (see
+//! The disk tier's epoch-stamped, append-only manifest log (see
 //! [`crate::datastore::DiskBackend`]) makes spilled frames survive a
-//! crash: [`TieredStore::recover`] readopts every manifest entry whose
-//! file re-verifies — same epoch, same keys, byte-identical frames, so
-//! refs minted before the crash still resolve — and reclaims interrupted
-//! spills; [`TieredStore::new`] over the same directory instead starts
-//! clean, reclaiming the lot (spool GC).
-//!
-//! # Locking
-//!
-//! One index mutex guards both tiers, so disk-tier reads/spills
-//! serialize concurrent store ops. That is deliberate for now —
-//! correctness first; the memory tier dominates the hot path — and
-//! lifting I/O out of the lock is a ROADMAP item.
+//! crash: [`TieredStore::recover`] replays the log and readopts every
+//! entry whose file re-verifies — same epoch, same keys, byte-identical
+//! frames, so refs minted before the crash still resolve — and reclaims
+//! interrupted spills; [`TieredStore::new`] over the same directory
+//! instead starts clean, reclaiming the lot (spool GC).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::common::error::{Error, Result};
 use crate::common::ids::EndpointId;
+use crate::common::sync::Notify;
 use crate::common::time::{Clock, Time};
-use crate::datastore::backend::{DiskBackend, MemoryBackend, StoreBackend};
+use crate::datastore::backend::{DiskBackend, SpoolStore, StoreBackend};
 use crate::datastore::dataref::{checksum, DataRef};
 use crate::serialize::Buffer;
 
-/// Which tier currently holds a frame.
+/// Which tier currently holds a frame (the coarse, two-valued view of
+/// [`EntryState`] that routing and planning consume).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Tier {
     Memory,
     Disk,
+}
+
+/// The per-key lifecycle (module docs). `Expired` is terminal: the
+/// entry is reaped and the key resolves [`Error::NotFound`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EntryState {
+    /// Frame handle live in the memory tier.
+    Resident,
+    /// Background spill in flight: the handle is still live (gets are
+    /// memory hits); the spiller is writing the spool file off-lock.
+    Spilling,
+    /// Frame lives only in the spool file.
+    OnDisk,
+    /// Promotion in flight: bytes reserved, the promoter is reading the
+    /// spool file off-lock; gets read the file too until the commit.
+    Promoting,
+    /// TTL lapsed but the entry has not been reaped yet (reported by
+    /// [`TieredStore::state_of`]; any access reaps it).
+    Expired,
 }
 
 /// Tiered-store tuning knobs.
@@ -97,43 +156,112 @@ pub struct TierStats {
     pub disk_hits: AtomicU64,
     pub spills: AtomicU64,
     pub spilled_bytes: AtomicU64,
+    /// Spills abandoned because the key was overwritten/removed while
+    /// the spool write was in flight (the artifact is reclaimed).
+    pub spill_aborts: AtomicU64,
+    /// Spool writes that FAILED (disk full, spool dir gone): the victim
+    /// stays resident and the spiller backs off, so a climbing count
+    /// here means the watermark is not being enforced — alert on it.
+    pub spill_errors: AtomicU64,
     pub promotes: AtomicU64,
     pub expirations: AtomicU64,
 }
 
 struct Entry {
+    /// The key's shared handle (also the LRU queue's value — one
+    /// allocation per key, not per touch).
+    key: Arc<str>,
     size: usize,
     checksum: u64,
-    tier: Tier,
+    state: EntryState,
+    /// Bumped on every `put` of this key; in-flight transitions re-check
+    /// it at commit so they abandon instead of clobbering a newer
+    /// generation.
+    gen: u64,
+    /// Live frame handle while memory-resident (`Resident`/`Spilling`).
+    frame: Option<Buffer>,
     /// Monotone access sequence number (LRU order).
     last_access: u64,
+    /// Where this entry's victim-queue node currently sits (`Some` iff
+    /// `Resident`): lets overwrite/remove/expiry delete the node
+    /// instead of leaking it until the spiller happens to pop it.
+    lru_pos: Option<u64>,
     expires_at: Option<Time>,
 }
 
 struct Index {
-    entries: HashMap<String, Entry>,
+    entries: HashMap<Arc<str>, Entry>,
+    /// Lazy LRU victim queue over `Resident` entries: keyed by the seq
+    /// at insert time; a popped node whose entry has been touched since
+    /// is re-queued at its current seq instead of spilled (so `get`
+    /// stays O(1) with zero allocations — no queue reshuffle per hit).
+    lru: BTreeMap<u64, (Arc<str>, u64)>,
     seq: u64,
-    /// Bytes currently resident in the memory tier.
+    /// Bytes held by the memory tier: `Resident` + `Spilling` frames
+    /// plus `Promoting` reservations.
     mem_bytes: usize,
+    /// Entries currently in `Spilling`/`Promoting` ([`TieredStore::settle`]).
+    in_flight: usize,
+}
+
+impl Index {
+    fn bump(&mut self) -> u64 {
+        self.seq += 1;
+        self.seq
+    }
+
+    /// Release the accounting a dying entry held, per its state —
+    /// memory bytes, its victim-queue node. Disk artifacts of `OnDisk`
+    /// entries must be reclaimed by the caller *off-lock* (returned as
+    /// the spool key); in-flight transitions clean up their own
+    /// artifact when their commit sees the generation gone.
+    fn release(&mut self, e: &Entry) -> Option<String> {
+        if let Some(pos) = e.lru_pos {
+            self.lru.remove(&pos);
+        }
+        match e.state {
+            EntryState::Resident | EntryState::Spilling | EntryState::Promoting => {
+                self.mem_bytes -= e.size;
+                None
+            }
+            EntryState::OnDisk => Some(spool_key(&e.key, e.gen)),
+            EntryState::Expired => None,
+        }
+    }
+}
+
+fn spool_key(key: &str, gen: u64) -> String {
+    format!("{key}#{gen}")
 }
 
 /// Process-wide epoch source: every store gets a distinct generation so
 /// refs cannot resolve against the wrong store instance.
 static EPOCHS: AtomicU64 = AtomicU64::new(1);
 
-/// The tiered store. Thread-safe; share via `Arc`.
-pub struct TieredStore {
+struct Inner {
     owner: EndpointId,
     epoch: u64,
     cfg: TieredConfig,
-    mem: MemoryBackend,
-    disk: DiskBackend,
+    spool: Arc<dyn SpoolStore>,
     index: Mutex<Index>,
     /// When set, TTL stamps and expiry decisions read this clock and
     /// ignore callers' `now` arguments (owner-stamped expiry — see the
     /// module's clock contract).
-    owner_clock: Option<Arc<dyn Clock>>,
-    pub stats: TierStats,
+    owner_clock: OnceLock<Arc<dyn Clock>>,
+    stats: Arc<TierStats>,
+    /// Nudged when the watermark is crossed (and on shutdown).
+    spill_wake: Notify,
+    /// Signalled after every committed/aborted transition so
+    /// [`TieredStore::settle`] can wait without polling.
+    settled: Notify,
+    shutdown: AtomicBool,
+}
+
+/// The tiered store. Thread-safe; share via `Arc`.
+pub struct TieredStore {
+    inner: Arc<Inner>,
+    spiller: Option<JoinHandle<()>>,
+    pub stats: Arc<TierStats>,
 }
 
 impl TieredStore {
@@ -144,16 +272,20 @@ impl TieredStore {
         };
         let epoch = EPOCHS.fetch_add(1, Ordering::Relaxed);
         disk.set_epoch(epoch)?;
-        Ok(TieredStore {
-            owner,
-            epoch,
-            cfg,
-            mem: MemoryBackend::new(),
-            disk,
-            index: Mutex::new(Index { entries: HashMap::new(), seq: 0, mem_bytes: 0 }),
-            owner_clock: None,
-            stats: TierStats::default(),
-        })
+        Ok(Self::assemble(owner, epoch, cfg, Arc::new(disk), HashMap::new(), 0))
+    }
+
+    /// Build a store over an injected spool backend (fault/locking
+    /// tests: a blocking fake pins that spool I/O never runs under the
+    /// index lock). Not part of the supported API surface.
+    #[doc(hidden)]
+    pub fn with_spool_for_tests(
+        owner: EndpointId,
+        cfg: TieredConfig,
+        spool: Arc<dyn SpoolStore>,
+    ) -> Self {
+        let epoch = EPOCHS.fetch_add(1, Ordering::Relaxed);
+        Self::assemble(owner, epoch, cfg, spool, HashMap::new(), 0)
     }
 
     /// Reopen a crashed store's spool (requires an explicit
@@ -177,57 +309,128 @@ impl TieredStore {
             // Keep future fresh epochs distinct from the readopted one.
             EPOCHS.fetch_max(epoch + 1, Ordering::Relaxed);
         }
+        // Spool keys are `key#gen`; a crash between a newer generation's
+        // spill and the older one's reclaim can leave both on disk —
+        // keep the newest, reclaim the rest.
+        let mut newest: HashMap<String, (u64, crate::datastore::SpoolEntry)> = HashMap::new();
+        let mut losers: Vec<String> = Vec::new();
+        for (skey, e) in adopted {
+            let (key, gen) = match skey.rsplit_once('#') {
+                Some((k, g)) => match g.parse::<u64>() {
+                    Ok(gen) => (k.to_string(), gen),
+                    Err(_) => (skey.clone(), 0),
+                },
+                None => (skey.clone(), 0),
+            };
+            match newest.get(&key).map(|(have, _)| *have) {
+                Some(have) if have >= gen => losers.push(spool_key(&key, gen)),
+                Some(have) => {
+                    losers.push(spool_key(&key, have));
+                    newest.insert(key, (gen, e));
+                }
+                None => {
+                    newest.insert(key, (gen, e));
+                }
+            }
+        }
+        for skey in losers {
+            let _ = disk.remove(&skey);
+        }
         let mut entries = HashMap::new();
         let mut seq = 0u64;
-        for (key, e) in adopted {
+        let mut max_gen = 0u64;
+        for (key, (gen, e)) in newest {
             seq += 1;
+            max_gen = max_gen.max(gen);
+            let karc: Arc<str> = Arc::from(key.as_str());
             entries.insert(
-                key,
+                karc.clone(),
                 Entry {
+                    key: karc,
                     size: e.size as usize,
                     checksum: e.checksum,
-                    tier: Tier::Disk,
+                    state: EntryState::OnDisk,
+                    gen,
+                    frame: None,
                     last_access: seq,
+                    lru_pos: None,
                     expires_at: e.expires_at,
                 },
             );
         }
-        Ok(TieredStore {
+        let seq = seq.max(max_gen);
+        Ok(Self::assemble(owner, epoch, cfg, Arc::new(disk), entries, seq))
+    }
+
+    fn assemble(
+        owner: EndpointId,
+        epoch: u64,
+        cfg: TieredConfig,
+        spool: Arc<dyn SpoolStore>,
+        entries: HashMap<Arc<str>, Entry>,
+        seq: u64,
+    ) -> Self {
+        let stats = Arc::new(TierStats::default());
+        let inner = Arc::new(Inner {
             owner,
             epoch,
             cfg,
-            mem: MemoryBackend::new(),
-            disk,
-            index: Mutex::new(Index { entries, seq, mem_bytes: 0 }),
-            owner_clock: None,
-            stats: TierStats::default(),
-        })
+            spool,
+            index: Mutex::new(Index {
+                entries,
+                lru: BTreeMap::new(),
+                seq,
+                mem_bytes: 0,
+                in_flight: 0,
+            }),
+            owner_clock: OnceLock::new(),
+            stats: stats.clone(),
+            spill_wake: Notify::new(),
+            settled: Notify::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let worker = inner.clone();
+        let spiller = std::thread::Builder::new()
+            .name("funcx-tier-spiller".into())
+            .spawn(move || spiller_loop(worker))
+            .expect("spawn tier spiller");
+        TieredStore { inner, spiller: Some(spiller), stats }
     }
 
     /// Pin TTL stamps and expiry decisions to this store's own clock
     /// (owner-stamped expiry): callers' `now` arguments are then ignored
     /// for TTL purposes, so cross-endpoint resolvers with skewed clocks
     /// cannot mis-expire entries. Call before sharing the store.
-    pub fn with_owner_clock(mut self, clock: Arc<dyn Clock>) -> Self {
-        self.owner_clock = Some(clock);
+    pub fn with_owner_clock(self, clock: Arc<dyn Clock>) -> Self {
+        let _ = self.inner.owner_clock.set(clock);
         self
     }
 
     /// The clock reading expiry logic should use: the owner clock when
     /// pinned, the caller's `now` otherwise.
     fn ttl_now(&self, caller_now: Time) -> Time {
-        match &self.owner_clock {
+        match self.inner.owner_clock.get() {
             Some(c) => c.now(),
             None => caller_now,
         }
     }
 
     pub fn owner(&self) -> EndpointId {
-        self.owner
+        self.inner.owner
     }
 
     pub fn epoch(&self) -> u64 {
-        self.epoch
+        self.inner.epoch
+    }
+
+    fn mk_ref(&self, key: &str, size: usize, sum: u64) -> DataRef {
+        DataRef {
+            owner: self.inner.owner,
+            epoch: self.inner.epoch,
+            key: key.to_string(),
+            size: size as u64,
+            checksum: sum,
+        }
     }
 
     /// Store a frame under `key` with the configured default TTL.
@@ -237,7 +440,9 @@ impl TieredStore {
     }
 
     /// Store a frame with an explicit TTL (`Some(t)`; `t <= 0` disables
-    /// expiry for this key) or the configured default (`None`).
+    /// expiry for this key) or the configured default (`None`). Pays no
+    /// disk latency: the frame lands as a memory handle and the
+    /// background spiller restores the watermark asynchronously.
     pub fn put_with_ttl(
         &self,
         key: &str,
@@ -247,146 +452,251 @@ impl TieredStore {
     ) -> Result<DataRef> {
         let size = frame.len();
         let sum = checksum(frame.as_slice());
-        let ttl = ttl_s.unwrap_or(self.cfg.default_ttl_s);
+        let ttl = ttl_s.unwrap_or(self.inner.cfg.default_ttl_s);
         let expires_at = (ttl > 0.0).then_some(self.ttl_now(now) + ttl);
-        let mut idx = self.index.lock().expect("tiered index poisoned");
-        // Overwrite: drop the previous generation of the key first.
-        if let Some(old) = idx.entries.remove(key) {
-            match old.tier {
-                Tier::Memory => {
-                    idx.mem_bytes -= old.size;
-                    self.mem.remove(key)?;
+        let mut reclaim: Option<String> = None;
+        let over = {
+            let mut guard = self.inner.index.lock().expect("tiered index poisoned");
+            // Reborrow as a plain `&mut Index`: field accesses below are
+            // then disjoint borrows, not repeated reborrows of the guard.
+            let idx = &mut *guard;
+            let seq = idx.bump();
+            let node = match idx.entries.get_mut(key) {
+                Some(e) => {
+                    // Overwrite: release the previous generation's
+                    // accounting (bytes + victim-queue node). An
+                    // in-flight transition on it sees the bumped gen at
+                    // commit and abandons its own artifact; a committed
+                    // `OnDisk` file is ours to reclaim (off-lock,
+                    // below).
+                    let old_mem = matches!(
+                        e.state,
+                        EntryState::Resident | EntryState::Spilling | EntryState::Promoting
+                    );
+                    let old_size = e.size;
+                    let old_pos = e.lru_pos;
+                    if !old_mem {
+                        reclaim = Some(spool_key(&e.key, e.gen));
+                    }
+                    install(e, seq, size, sum, frame, expires_at);
+                    let node = (e.key.clone(), seq);
+                    if old_mem {
+                        idx.mem_bytes -= old_size;
+                    }
+                    if let Some(pos) = old_pos {
+                        idx.lru.remove(&pos);
+                    }
+                    node
                 }
-                Tier::Disk => {
-                    self.disk.remove(key)?;
+                None => {
+                    let karc: Arc<str> = Arc::from(key);
+                    idx.entries.insert(
+                        karc.clone(),
+                        Entry {
+                            key: karc.clone(),
+                            size,
+                            checksum: sum,
+                            state: EntryState::Resident,
+                            gen: seq,
+                            frame: Some(frame),
+                            last_access: seq,
+                            lru_pos: Some(seq),
+                            expires_at,
+                        },
+                    );
+                    (karc, seq)
                 }
-            }
+            };
+            idx.mem_bytes += size;
+            idx.lru.insert(seq, node);
+            idx.mem_bytes > self.inner.cfg.mem_high_watermark
+        };
+        if let Some(skey) = reclaim {
+            let _ = self.inner.spool.remove(&skey);
         }
-        self.mem.put(key, &frame)?;
-        idx.seq += 1;
-        let last_access = idx.seq;
-        idx.mem_bytes += size;
-        idx.entries.insert(
-            key.to_string(),
-            Entry { size, checksum: sum, tier: Tier::Memory, last_access, expires_at },
-        );
+        if over {
+            self.inner.spill_wake.notify();
+        }
         self.stats.puts.fetch_add(1, Ordering::Relaxed);
-        self.spill_over_watermark(&mut idx)?;
-        Ok(DataRef {
-            owner: self.owner,
-            epoch: self.epoch,
-            key: key.to_string(),
-            size: size as u64,
-            checksum: sum,
-        })
-    }
-
-    /// Spill LRU memory-tier frames to disk until resident bytes drop to
-    /// the watermark. Frames move as raw wire bytes. One O(n log n)
-    /// LRU-ordered pass, not an O(n) scan per victim.
-    fn spill_over_watermark(&self, idx: &mut Index) -> Result<()> {
-        if idx.mem_bytes <= self.cfg.mem_high_watermark {
-            return Ok(());
-        }
-        let mut victims: Vec<(u64, String)> = idx
-            .entries
-            .iter()
-            .filter(|(_, e)| e.tier == Tier::Memory)
-            .map(|(k, e)| (e.last_access, k.clone()))
-            .collect();
-        victims.sort_unstable_by_key(|(seq, _)| *seq);
-        for (_, k) in victims {
-            if idx.mem_bytes <= self.cfg.mem_high_watermark {
-                break;
-            }
-            let frame = self
-                .mem
-                .get(&k)?
-                .ok_or_else(|| Error::Data(format!("tier index out of sync for {k}")))?;
-            // Spill with the entry's expiry stamp so the spool manifest
-            // can readopt it (with its TTL) after a crash.
-            let expires_at = idx.entries.get(&k).and_then(|e| e.expires_at);
-            self.disk.put_entry(&k, &frame, expires_at)?;
-            self.mem.remove(&k)?;
-            let e = idx.entries.get_mut(&k).expect("victim is indexed");
-            e.tier = Tier::Disk;
-            let size = e.size;
-            idx.mem_bytes -= size;
-            self.stats.spills.fetch_add(1, Ordering::Relaxed);
-            self.stats.spilled_bytes.fetch_add(size as u64, Ordering::Relaxed);
-        }
-        Ok(())
+        Ok(self.mk_ref(key, size, sum))
     }
 
     /// Fetch the frame under `key`. `Err(NotFound)` for missing or
-    /// expired keys; a disk hit promotes the frame back to memory when
-    /// it fits the remaining headroom.
+    /// expired keys. Memory-resident states (`Resident`, `Spilling`)
+    /// are served from the live handle under the metadata lock alone —
+    /// zero backend calls, zero allocations, zero blocking on tier I/O.
+    /// Disk states read the spool file off-lock; a disk hit promotes
+    /// the frame back to memory when it fits the remaining headroom.
     pub fn get(&self, key: &str, now: Time) -> Result<Buffer> {
         let now = self.ttl_now(now);
-        let mut idx = self.index.lock().expect("tiered index poisoned");
-        let Some(e) = idx.entries.get(key) else {
-            return Err(Error::NotFound(format!("data key {key}")));
-        };
-        if let Some(exp) = e.expires_at {
-            if now >= exp {
-                let tier = e.tier;
-                let size = e.size;
-                idx.entries.remove(key);
-                match tier {
-                    Tier::Memory => {
-                        idx.mem_bytes -= size;
-                        self.mem.remove(key)?;
-                    }
-                    Tier::Disk => {
-                        self.disk.remove(key)?;
+        // Disk reads race transitions (promote commit, overwrite,
+        // remove); each retry re-observes the state machine. A repeated
+        // verification miss at the SAME generation means no writer
+        // moved the key — the spool file itself is damaged — and fails
+        // typed instead of re-reading; the iteration cap is a backstop
+        // against pathological interleavings only.
+        let mut missed_gen: Option<u64> = None;
+        for _ in 0..16 {
+            enum Action {
+                Serve(Buffer),
+                Read { gen: u64, size: usize, sum: u64, promoting: bool },
+                /// TTL lapsed: the entry was reaped; reclaim the spool
+                /// key (if any) off-lock.
+                Expired(Option<String>),
+            }
+            let action = {
+                let mut guard = self.inner.index.lock().expect("tiered index poisoned");
+                let idx = &mut *guard;
+                let Some(e) = idx.entries.get_mut(key) else {
+                    return Err(Error::NotFound(format!("data key {key}")));
+                };
+                if e.expires_at.is_some_and(|t| now >= t) {
+                    let e = idx.entries.remove(key).expect("just seen");
+                    Action::Expired(idx.release(&e))
+                } else {
+                    let seq = idx.bump();
+                    let e = idx.entries.get_mut(key).expect("just seen");
+                    e.last_access = seq;
+                    match e.state {
+                        EntryState::Resident | EntryState::Spilling => Action::Serve(
+                            e.frame.clone().expect("memory-resident entry has a frame"),
+                        ),
+                        EntryState::OnDisk => {
+                            let (gen, size, sum) = (e.gen, e.size, e.checksum);
+                            // Promote only into free headroom: promotion
+                            // must never spill residents (that would
+                            // ping-pong hot sets around the watermark).
+                            let promoting =
+                                idx.mem_bytes + size <= self.inner.cfg.mem_high_watermark;
+                            if promoting {
+                                let e = idx.entries.get_mut(key).expect("just seen");
+                                e.state = EntryState::Promoting;
+                                idx.mem_bytes += size;
+                                idx.in_flight += 1;
+                            }
+                            Action::Read { gen, size, sum, promoting }
+                        }
+                        EntryState::Promoting => Action::Read {
+                            gen: e.gen,
+                            size: e.size,
+                            sum: e.checksum,
+                            promoting: false,
+                        },
+                        EntryState::Expired => unreachable!("expired entries are reaped above"),
                     }
                 }
-                self.stats.expirations.fetch_add(1, Ordering::Relaxed);
-                return Err(Error::NotFound(format!("data key {key} (expired)")));
-            }
-        }
-        idx.seq += 1;
-        let seq = idx.seq;
-        let (tier, size) = {
-            let e = idx.entries.get_mut(key).expect("checked above");
-            e.last_access = seq;
-            (e.tier, e.size)
-        };
-        match tier {
-            Tier::Memory => {
-                self.stats.mem_hits.fetch_add(1, Ordering::Relaxed);
-                self.mem
-                    .get(key)?
-                    .ok_or_else(|| Error::Data(format!("tier index out of sync for {key}")))
-            }
-            Tier::Disk => {
-                let frame = self
-                    .disk
-                    .get(key)?
-                    .ok_or_else(|| Error::Data(format!("tier index out of sync for {key}")))?;
-                self.stats.disk_hits.fetch_add(1, Ordering::Relaxed);
-                // Promote only into free headroom: promotion must never
-                // spill residents (that would ping-pong hot sets around
-                // the watermark).
-                if idx.mem_bytes + size <= self.cfg.mem_high_watermark {
-                    self.mem.put(key, &frame)?;
-                    self.disk.remove(key)?;
-                    if let Some(e) = idx.entries.get_mut(key) {
-                        e.tier = Tier::Memory;
-                    }
-                    idx.mem_bytes += size;
-                    self.stats.promotes.fetch_add(1, Ordering::Relaxed);
+            };
+            match action {
+                Action::Serve(frame) => {
+                    self.stats.mem_hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(frame);
                 }
-                Ok(frame)
+                Action::Expired(reclaim) => {
+                    if let Some(skey) = reclaim {
+                        let _ = self.inner.spool.remove(&skey);
+                    }
+                    self.stats.expirations.fetch_add(1, Ordering::Relaxed);
+                    return Err(Error::NotFound(format!("data key {key} (expired)")));
+                }
+                Action::Read { gen, size, sum, promoting } => {
+                    let skey = spool_key(key, gen);
+                    let read = self.inner.spool.get(&skey);
+                    let frame = match read {
+                        Ok(Some(f)) if f.len() == size && checksum(f.as_slice()) == sum => {
+                            Some(f)
+                        }
+                        Ok(_) => None,
+                        Err(err) => {
+                            if promoting {
+                                self.abort_promote(key, gen, size);
+                            }
+                            return Err(err);
+                        }
+                    };
+                    let Some(frame) = frame else {
+                        // The file moved under us (promote commit,
+                        // overwrite reclaim, removal): undo any
+                        // reservation and re-observe. A second miss at
+                        // the same generation is not a race — the entry
+                        // never left the disk states — so the file is
+                        // gone or corrupt for good.
+                        if promoting {
+                            self.abort_promote(key, gen, size);
+                        }
+                        if missed_gen == Some(gen) {
+                            return Err(Error::Corrupt(format!(
+                                "spool frame for {key} is missing or fails verification"
+                            )));
+                        }
+                        missed_gen = Some(gen);
+                        continue;
+                    };
+                    self.stats.disk_hits.fetch_add(1, Ordering::Relaxed);
+                    if promoting {
+                        self.commit_promote(key, gen, &frame, &skey);
+                    }
+                    return Ok(frame);
+                }
             }
         }
+        Err(Error::Data(format!("tier index livelocked for {key}")))
+    }
+
+    /// Commit a promotion: install the handle if the generation still
+    /// stands, then reclaim the spool file (ours either way — no other
+    /// transition touches this generation while it is `Promoting`).
+    fn commit_promote(&self, key: &str, gen: u64, frame: &Buffer, skey: &str) {
+        let committed = {
+            let mut guard = self.inner.index.lock().expect("tiered index poisoned");
+            let idx = &mut *guard;
+            match idx.entries.get_mut(key) {
+                Some(e) if e.gen == gen && e.state == EntryState::Promoting => {
+                    e.state = EntryState::Resident;
+                    e.frame = Some(frame.clone());
+                    let node = (e.key.clone(), e.gen);
+                    let at = e.last_access;
+                    e.lru_pos = Some(at);
+                    idx.lru.insert(at, node);
+                    idx.in_flight -= 1;
+                    true
+                }
+                _ => {
+                    // Overwritten/removed mid-promotion: whoever did it
+                    // released the reservation; only the artifact and
+                    // the in-flight count are still ours.
+                    idx.in_flight -= 1;
+                    false
+                }
+            }
+        };
+        let _ = self.inner.spool.remove(skey);
+        if committed {
+            self.stats.promotes.fetch_add(1, Ordering::Relaxed);
+        }
+        self.inner.settled.notify();
+    }
+
+    /// Abort a promotion we marked: revert the reservation if the entry
+    /// still stands (otherwise its replacer already released it).
+    fn abort_promote(&self, key: &str, gen: u64, size: usize) {
+        let mut guard = self.inner.index.lock().expect("tiered index poisoned");
+        let idx = &mut *guard;
+        if let Some(e) = idx.entries.get_mut(key) {
+            if e.gen == gen && e.state == EntryState::Promoting {
+                e.state = EntryState::OnDisk;
+                idx.mem_bytes -= size;
+            }
+        }
+        idx.in_flight -= 1;
+        drop(guard);
+        self.inner.settled.notify();
     }
 
     /// Resolve a [`DataRef`] against this store: owner + epoch must
     /// match, the key must be live, and the frame must verify against
     /// the ref's size/checksum.
     pub fn resolve(&self, r: &DataRef, now: Time) -> Result<Buffer> {
-        if r.owner != self.owner || r.epoch != self.epoch {
+        if r.owner != self.inner.owner || r.epoch != self.inner.epoch {
             return Err(Error::NotFound(format!(
                 "ref {}: owner/epoch does not match this store",
                 r.key
@@ -397,62 +707,76 @@ impl TieredStore {
         Ok(frame)
     }
 
-    /// Remove a key from whichever tier holds it.
+    /// Remove a key from whichever tier holds it. The index entry is
+    /// authoritative: once it is gone the key is removed, and the spool
+    /// reclaim is best-effort like every other reclaim site (a leaked
+    /// file is reclaimed by the next recovery's orphan pass).
     pub fn remove(&self, key: &str) -> Result<bool> {
-        let mut idx = self.index.lock().expect("tiered index poisoned");
-        match idx.entries.remove(key) {
-            Some(e) => {
-                match e.tier {
-                    Tier::Memory => {
-                        idx.mem_bytes -= e.size;
-                        self.mem.remove(key)?;
-                    }
-                    Tier::Disk => {
-                        self.disk.remove(key)?;
-                    }
-                }
-                Ok(true)
+        let reclaim = {
+            let mut idx = self.inner.index.lock().expect("tiered index poisoned");
+            match idx.entries.remove(key) {
+                Some(e) => idx.release(&e),
+                None => return Ok(false),
             }
-            None => Ok(false),
+        };
+        if let Some(skey) = reclaim {
+            let _ = self.inner.spool.remove(&skey);
         }
+        self.inner.settled.notify();
+        Ok(true)
     }
 
     /// Eagerly drop every expired entry; returns how many were evicted.
     pub fn evict_expired(&self, now: Time) -> usize {
         let now = self.ttl_now(now);
-        let mut idx = self.index.lock().expect("tiered index poisoned");
-        let expired: Vec<String> = idx
-            .entries
-            .iter()
-            .filter(|(_, e)| e.expires_at.is_some_and(|t| now >= t))
-            .map(|(k, _)| k.clone())
-            .collect();
-        for k in &expired {
-            if let Some(e) = idx.entries.remove(k) {
-                match e.tier {
-                    Tier::Memory => {
-                        idx.mem_bytes -= e.size;
-                        let _ = self.mem.remove(k);
+        let (evicted, reclaims) = {
+            let mut idx = self.inner.index.lock().expect("tiered index poisoned");
+            let expired: Vec<Arc<str>> = idx
+                .entries
+                .values()
+                .filter(|e| e.expires_at.is_some_and(|t| now >= t))
+                .map(|e| e.key.clone())
+                .collect();
+            let mut reclaims = Vec::new();
+            for k in &expired {
+                if let Some(e) = idx.entries.remove(&**k) {
+                    if let Some(skey) = idx.release(&e) {
+                        reclaims.push(skey);
                     }
-                    Tier::Disk => {
-                        let _ = self.disk.remove(k);
-                    }
+                    self.stats.expirations.fetch_add(1, Ordering::Relaxed);
                 }
-                self.stats.expirations.fetch_add(1, Ordering::Relaxed);
             }
+            (expired.len(), reclaims)
+        };
+        for skey in reclaims {
+            let _ = self.inner.spool.remove(&skey);
         }
-        expired.len()
+        evicted
     }
 
     /// Which tier holds `key` right now (None = absent). Ignores TTL —
     /// use [`TieredStore::live_tier`] for a resolvability answer.
     pub fn tier_of(&self, key: &str) -> Option<Tier> {
-        self.index
+        self.inner
+            .index
             .lock()
             .expect("tiered index poisoned")
             .entries
             .get(key)
-            .map(|e| e.tier)
+            .map(|e| tier_of_state(e.state))
+    }
+
+    /// The key's position in the entry state machine at `now`
+    /// (TTL-aware: a lapsed-but-unreaped entry reports
+    /// [`EntryState::Expired`]).
+    pub fn state_of(&self, key: &str, now: Time) -> Option<EntryState> {
+        let now = self.ttl_now(now);
+        let idx = self.inner.index.lock().expect("tiered index poisoned");
+        let e = idx.entries.get(key)?;
+        if e.expires_at.is_some_and(|t| now >= t) {
+            return Some(EntryState::Expired);
+        }
+        Some(e.state)
     }
 
     /// Which tier holds a frame that is still live (not expired) at
@@ -461,26 +785,210 @@ impl TieredStore {
     /// [`TieredStore::get`] at the same `now` would succeed.
     pub fn live_tier(&self, key: &str, now: Time) -> Option<Tier> {
         let now = self.ttl_now(now);
-        let idx = self.index.lock().expect("tiered index poisoned");
+        let idx = self.inner.index.lock().expect("tiered index poisoned");
         let e = idx.entries.get(key)?;
         if e.expires_at.is_some_and(|t| now >= t) {
             return None;
         }
-        Some(e.tier)
+        Some(tier_of_state(e.state))
     }
 
     /// Number of live keys across both tiers.
     pub fn len(&self) -> usize {
-        self.index.lock().expect("tiered index poisoned").entries.len()
+        self.inner.index.lock().expect("tiered index poisoned").entries.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Bytes resident in the memory tier.
+    /// Bytes resident in the memory tier (live handles + promotion
+    /// reservations).
     pub fn mem_bytes(&self) -> usize {
-        self.index.lock().expect("tiered index poisoned").mem_bytes
+        self.inner.index.lock().expect("tiered index poisoned").mem_bytes
+    }
+
+    /// Victim-queue size (tests: pins that the queue is bounded by the
+    /// resident set, not by lifetime put count).
+    #[cfg(test)]
+    fn lru_len(&self) -> usize {
+        self.inner.index.lock().expect("tiered index poisoned").lru.len()
+    }
+
+    /// Block until the store is quiescent: no spill/promote in flight
+    /// and the memory tier back under the watermark (or nothing left to
+    /// spill). Tests and benches use this to observe the post-spill
+    /// steady state the old synchronous `put` produced inline.
+    pub fn settle(&self, timeout: Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let seen = self.inner.settled.epoch();
+            let done = {
+                let idx = self.inner.index.lock().expect("tiered index poisoned");
+                idx.in_flight == 0
+                    && (idx.mem_bytes <= self.inner.cfg.mem_high_watermark
+                        || !idx.entries.values().any(|e| e.state == EntryState::Resident))
+            };
+            if done {
+                return true;
+            }
+            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+            if remaining.is_zero() {
+                return false;
+            }
+            // Make sure the spiller is awake, then wait for progress.
+            self.inner.spill_wake.notify();
+            self.inner.settled.wait_newer(seen, remaining.min(Duration::from_millis(20)));
+        }
+    }
+}
+
+fn install(
+    e: &mut Entry,
+    seq: u64,
+    size: usize,
+    sum: u64,
+    frame: Buffer,
+    expires_at: Option<Time>,
+) {
+    e.size = size;
+    e.checksum = sum;
+    e.state = EntryState::Resident;
+    e.gen = seq;
+    e.frame = Some(frame);
+    e.last_access = seq;
+    e.lru_pos = Some(seq);
+    e.expires_at = expires_at;
+}
+
+fn tier_of_state(s: EntryState) -> Tier {
+    match s {
+        EntryState::Resident | EntryState::Spilling | EntryState::Expired => Tier::Memory,
+        EntryState::OnDisk | EntryState::Promoting => Tier::Disk,
+    }
+}
+
+/// The background spiller: drains the LRU victim queue whenever the
+/// memory tier crosses the high watermark. One victim at a time: mark
+/// `Spilling` under the lock, write the spool file with the lock
+/// dropped, re-acquire to commit `OnDisk` (or abandon if the key moved
+/// on). `put` never pays disk latency; memory hits never wait on a
+/// spill.
+fn spiller_loop(inner: Arc<Inner>) {
+    loop {
+        let seen = inner.spill_wake.epoch();
+        if inner.shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        // Victim selection: pop LRU nodes until one is a fresh Resident
+        // entry (stale nodes — touched since queueing, state changes,
+        // dead generations — are re-queued or dropped).
+        let victim = {
+            let mut guard = inner.index.lock().expect("tiered index poisoned");
+            let idx = &mut *guard;
+            let mut found = None;
+            while idx.mem_bytes > inner.cfg.mem_high_watermark {
+                let Some((pos, (key, node_gen))) = idx.lru.pop_first() else {
+                    break;
+                };
+                let Some(e) = idx.entries.get_mut(&*key) else {
+                    continue; // key removed; drop the node
+                };
+                if e.gen != node_gen
+                    || e.state != EntryState::Resident
+                    || e.lru_pos != Some(pos)
+                {
+                    continue; // superseded generation or already moving
+                }
+                if e.last_access != pos {
+                    // Touched since queueing: not LRU anymore — requeue
+                    // at its current position and keep looking.
+                    let requeue = (e.key.clone(), e.gen);
+                    let at = e.last_access;
+                    e.lru_pos = Some(at);
+                    idx.lru.insert(at, requeue);
+                    continue;
+                }
+                e.state = EntryState::Spilling;
+                e.lru_pos = None;
+                // Re-stamp the generation at spill time: every spool
+                // file name is then written exactly once, so no reader
+                // can ever observe a partially-written file (the name
+                // only becomes observable at the OnDisk commit).
+                idx.seq += 1;
+                e.gen = idx.seq;
+                idx.in_flight += 1;
+                found = Some((
+                    e.key.clone(),
+                    e.gen,
+                    e.frame.clone().expect("resident entry has a frame"),
+                    e.expires_at,
+                    e.size,
+                ));
+                break;
+            }
+            found
+        };
+        let Some((key, gen, frame, expires_at, size)) = victim else {
+            inner.settled.notify();
+            inner.spill_wake.wait_newer(seen, Duration::from_millis(100));
+            continue;
+        };
+
+        // Tier I/O, no lock held: a slow disk stalls only this thread.
+        let skey = spool_key(&key, gen);
+        let wrote = inner.spool.put_entry(&skey, &frame, expires_at);
+
+        let abandon = {
+            let mut guard = inner.index.lock().expect("tiered index poisoned");
+            let idx = &mut *guard;
+            idx.in_flight -= 1;
+            match idx.entries.get_mut(&*key) {
+                Some(e) if e.gen == gen && e.state == EntryState::Spilling => match &wrote {
+                    Ok(()) => {
+                        e.state = EntryState::OnDisk;
+                        e.frame = None;
+                        idx.mem_bytes -= size;
+                        inner.stats.spills.fetch_add(1, Ordering::Relaxed);
+                        inner.stats.spilled_bytes.fetch_add(size as u64, Ordering::Relaxed);
+                        false
+                    }
+                    Err(_) => {
+                        // Spool write failed: the frame stays resident
+                        // and spillable; back off below. Counted so a
+                        // persistently failing disk (watermark no
+                        // longer enforced) is observable.
+                        inner.stats.spill_errors.fetch_add(1, Ordering::Relaxed);
+                        e.state = EntryState::Resident;
+                        let node = (e.key.clone(), e.gen);
+                        let at = e.last_access;
+                        e.lru_pos = Some(at);
+                        idx.lru.insert(at, node);
+                        false
+                    }
+                },
+                _ => wrote.is_ok(), // key moved on mid-spill: reclaim our artifact
+            }
+        };
+        if abandon {
+            let _ = inner.spool.remove(&skey);
+            inner.stats.spill_aborts.fetch_add(1, Ordering::Relaxed);
+        }
+        inner.settled.notify();
+        if wrote.is_err() {
+            // Persistent disk trouble must not spin the loop.
+            inner.spill_wake.wait_newer(seen, Duration::from_millis(50));
+        }
+    }
+}
+
+impl Drop for TieredStore {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::Relaxed);
+        self.inner.spill_wake.notify();
+        if let Some(t) = self.spiller.take() {
+            let _ = t.join();
+        }
     }
 }
 
@@ -488,6 +996,9 @@ impl TieredStore {
 mod tests {
     use super::*;
     use std::sync::atomic::Ordering::Relaxed;
+    use std::sync::Condvar;
+
+    const SETTLE: Duration = Duration::from_secs(10);
 
     fn frame(byte: u8, len: usize) -> Buffer {
         Buffer::from_vec(vec![byte; len])
@@ -508,6 +1019,7 @@ mod tests {
         let r = s.put("k", f.clone(), 0.0).unwrap();
         assert_eq!(r.size, 4096);
         assert_eq!(s.tier_of("k"), Some(Tier::Memory));
+        assert_eq!(s.state_of("k", 0.0), Some(EntryState::Resident));
         let got = s.get("k", 0.0).unwrap();
         assert!(got.same_allocation(&f), "memory tier must hand back the same allocation");
         assert_eq!(s.stats.mem_hits.load(Relaxed), 1);
@@ -521,6 +1033,7 @@ mod tests {
         // Touch a so b becomes LRU.
         s.get("a", 0.0).unwrap();
         s.put("c", frame(3, 4 << 10), 0.0).unwrap();
+        assert!(s.settle(SETTLE), "spiller must restore the watermark");
         assert_eq!(s.tier_of("b"), Some(Tier::Disk), "LRU key spills");
         assert_eq!(s.tier_of("a"), Some(Tier::Memory));
         assert_eq!(s.tier_of("c"), Some(Tier::Memory));
@@ -538,22 +1051,21 @@ mod tests {
         s.put("a", frame(1, 4 << 10), 0.0).unwrap();
         s.put("b", frame(2, 4 << 10), 0.0).unwrap();
         s.put("c", frame(3, 4 << 10), 0.0).unwrap(); // spills "a"
+        assert!(s.settle(SETTLE));
         assert_eq!(s.tier_of("a"), Some(Tier::Disk));
         s.remove("b").unwrap(); // free headroom
         s.get("a", 0.0).unwrap();
+        assert!(s.settle(SETTLE));
         assert_eq!(s.tier_of("a"), Some(Tier::Memory), "promoted into freed headroom");
         assert_eq!(s.stats.promotes.load(Relaxed), 1);
         // Without headroom the frame keeps serving from disk.
         s.put("d", frame(4, 4 << 10), 0.0).unwrap();
-        let spilled = s
-            .index
-            .lock()
-            .unwrap()
-            .entries
+        assert!(s.settle(SETTLE));
+        let spilled = ["a", "c", "d"]
             .iter()
-            .find(|(_, e)| e.tier == Tier::Disk)
-            .map(|(k, _)| k.clone())
-            .unwrap();
+            .find(|k| s.tier_of(k) == Some(Tier::Disk))
+            .expect("one key is on disk")
+            .to_string();
         s.get(&spilled, 0.0).unwrap();
         assert_eq!(s.tier_of(&spilled), Some(Tier::Disk), "no promotion without headroom");
     }
@@ -567,6 +1079,7 @@ mod tests {
         .unwrap();
         let r = s.put("k", frame(1, 64), 0.0).unwrap();
         assert!(s.get("k", 5.0).is_ok());
+        assert_eq!(s.state_of("k", 11.0), Some(EntryState::Expired));
         match s.get("k", 11.0) {
             Err(Error::NotFound(m)) => assert!(m.contains("expired"), "{m}"),
             other => panic!("expected NotFound, got {other:?}"),
@@ -611,6 +1124,70 @@ mod tests {
     }
 
     #[test]
+    fn overwrite_of_spilled_key_reclaims_the_old_spool_file() {
+        let s = store(1 << 10);
+        let stale = s.put("k", frame(1, 8 << 10), 0.0).unwrap();
+        assert!(s.settle(SETTLE));
+        assert_eq!(s.tier_of("k"), Some(Tier::Disk));
+        let fresh = s.put("k", frame(2, 128), 0.0).unwrap();
+        assert_eq!(s.get("k", 0.0).unwrap().as_slice(), frame(2, 128).as_slice());
+        // The stale ref cannot resolve the old generation's bytes.
+        assert!(s.resolve(&stale, 0.0).is_err());
+        assert!(s.resolve(&fresh, 0.0).is_ok());
+    }
+
+    /// The victim queue holds at most one node per resident entry:
+    /// overwrites, removals, and expiry delete their node instead of
+    /// leaking it until the spiller happens to pop it — an
+    /// under-watermark store (where the spiller never drains) must not
+    /// grow the queue with lifetime put count.
+    #[test]
+    fn victim_queue_is_bounded_by_resident_set() {
+        let s = store(1 << 20);
+        for _ in 0..500 {
+            s.put("hot", frame(1, 64), 0.0).unwrap();
+        }
+        assert_eq!(s.lru_len(), 1, "overwrites must replace the node, not stack new ones");
+        for i in 0..10 {
+            s.put(&format!("k{i}"), frame(2, 64), 0.0).unwrap();
+        }
+        assert_eq!(s.lru_len(), 11);
+        for i in 0..10 {
+            assert!(s.remove(&format!("k{i}")).unwrap());
+        }
+        assert_eq!(s.lru_len(), 1, "removal must delete the node");
+        s.put_with_ttl("short", frame(3, 64), Some(1.0), 0.0).unwrap();
+        assert_eq!(s.evict_expired(2.0), 1);
+        assert_eq!(s.lru_len(), 1, "expiry must delete the node");
+    }
+
+    /// A spool file damaged at rest (truncated/deleted outside the
+    /// store) fails `get` typed and fast — Corrupt after one
+    /// re-observation, not 16 blind re-reads ending in a bogus
+    /// "livelocked" error.
+    #[test]
+    fn damaged_spool_file_fails_corrupt_not_livelocked() {
+        let spool = BlockingSpool::new();
+        let s = TieredStore::with_spool_for_tests(
+            EndpointId::new(),
+            TieredConfig { mem_high_watermark: 0, default_ttl_s: 0.0, spool_dir: None },
+            spool.clone(),
+        );
+        spool.release(); // writes flow freely in this test
+        s.put("k", frame(7, 4 << 10), 0.0).unwrap();
+        assert!(s.settle(SETTLE));
+        assert_eq!(s.tier_of("k"), Some(Tier::Disk));
+        // Damage: delete the spool file behind the store's back.
+        spool.inner_damage_remove_all();
+        match s.get("k", 0.0) {
+            Err(Error::Corrupt(m)) => {
+                assert!(m.contains("verification"), "{m}");
+            }
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn owner_clock_overrides_reader_skew() {
         let vc = crate::common::time::VirtualClock::new();
         let s = TieredStore::new(
@@ -646,6 +1223,7 @@ mod tests {
             let f = frame(0x3C, 8 << 10);
             let r = s.put("k1", f.clone(), 0.0).unwrap();
             s.put("k2", frame(0x4D, 4 << 10), 0.0).unwrap();
+            assert!(s.settle(SETTLE));
             assert_eq!(s.tier_of("k1"), Some(Tier::Disk));
             let (epoch, bytes) = (s.epoch(), f.to_vec());
             std::mem::forget(s); // crash: no Drop, no cleanup
@@ -670,11 +1248,159 @@ mod tests {
     fn oversized_single_frame_spills_itself() {
         let s = store(1 << 10);
         s.put("big", frame(9, 64 << 10), 0.0).unwrap();
+        assert!(s.settle(SETTLE));
         assert_eq!(s.tier_of("big"), Some(Tier::Disk));
         assert_eq!(s.mem_bytes(), 0);
         // Serves from disk, never promotes (larger than the watermark).
         let got = s.get("big", 0.0).unwrap();
         assert_eq!(got.len(), 64 << 10);
         assert_eq!(s.tier_of("big"), Some(Tier::Disk));
+    }
+
+    /// A spool whose writes block until released: the harness for the
+    /// locking-discipline pin below.
+    struct BlockingSpool {
+        inner: DiskBackend,
+        gate: Mutex<bool>,
+        cv: Condvar,
+        writes_started: AtomicU64,
+    }
+
+    impl BlockingSpool {
+        fn new() -> Arc<Self> {
+            Arc::new(BlockingSpool {
+                inner: DiskBackend::temp().unwrap(),
+                gate: Mutex::new(false),
+                cv: Condvar::new(),
+                writes_started: AtomicU64::new(0),
+            })
+        }
+
+        fn release(&self) {
+            *self.gate.lock().unwrap() = true;
+            self.cv.notify_all();
+        }
+
+        /// Damage-at-rest: delete every frame file behind the store's
+        /// back, leaving the manifest in place.
+        fn inner_damage_remove_all(&self) {
+            for entry in std::fs::read_dir(self.inner.root()).unwrap() {
+                let p = entry.unwrap().path();
+                if p.file_name().is_some_and(|n| n != "spool.manifest") {
+                    let _ = std::fs::remove_file(&p);
+                }
+            }
+        }
+
+        /// Bounded so a failing test (which drops the store and joins
+        /// the spiller before ever calling `release`) cannot hang the
+        /// suite.
+        fn block_here(&self) {
+            let deadline = std::time::Instant::now() + Duration::from_secs(30);
+            let mut open = self.gate.lock().unwrap();
+            while !*open && std::time::Instant::now() < deadline {
+                let (g, _) = self.cv.wait_timeout(open, Duration::from_millis(100)).unwrap();
+                open = g;
+            }
+        }
+    }
+
+    impl crate::datastore::backend::StoreBackend for BlockingSpool {
+        fn name(&self) -> &'static str {
+            "blocking-fake"
+        }
+        fn put(&self, key: &str, frame: &Buffer) -> Result<()> {
+            self.inner.put(key, frame)
+        }
+        fn get(&self, key: &str) -> Result<Option<Buffer>> {
+            self.inner.get(key)
+        }
+        fn remove(&self, key: &str) -> Result<bool> {
+            crate::datastore::backend::StoreBackend::remove(&self.inner, key)
+        }
+    }
+
+    impl SpoolStore for BlockingSpool {
+        fn put_entry(&self, key: &str, frame: &Buffer, expires_at: Option<Time>) -> Result<()> {
+            self.writes_started.fetch_add(1, Ordering::SeqCst);
+            self.block_here();
+            self.inner.put_entry(key, frame, expires_at)
+        }
+    }
+
+    /// THE locking-discipline pin: with a spool whose write stalls
+    /// indefinitely, a spill in flight must not delay memory-tier gets —
+    /// neither of an untouched resident key nor of the `Spilling` victim
+    /// itself (both are served from live handles under the metadata
+    /// lock alone).
+    #[test]
+    fn stalled_spill_does_not_block_memory_hits() {
+        let spool = BlockingSpool::new();
+        let s = TieredStore::with_spool_for_tests(
+            EndpointId::new(),
+            TieredConfig { mem_high_watermark: 8 << 10, default_ttl_s: 0.0, spool_dir: None },
+            spool.clone(),
+        );
+        let old = frame(1, 6 << 10);
+        let hot = frame(2, 6 << 10);
+        s.put("victim", old.clone(), 0.0).unwrap(); // LRU → the spill victim
+        s.put("hot", hot.clone(), 0.0).unwrap(); // crosses the watermark
+        // Wait until the spiller is stuck inside the spool write.
+        let t0 = std::time::Instant::now();
+        while spool.writes_started.load(Ordering::SeqCst) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "spill never started");
+            std::thread::yield_now();
+        }
+        assert_eq!(s.state_of("victim", 0.0), Some(EntryState::Spilling));
+
+        // Memory-tier gets while the disk write is stalled: all fast,
+        // all the original allocations.
+        let t0 = std::time::Instant::now();
+        for _ in 0..100 {
+            assert!(s.get("hot", 0.0).unwrap().same_allocation(&hot));
+            assert!(
+                s.get("victim", 0.0).unwrap().same_allocation(&old),
+                "a Spilling key is served from its still-live handle"
+            );
+        }
+        let stalled_hits = t0.elapsed();
+        assert!(
+            stalled_hits < Duration::from_millis(500),
+            "memory hits waited on a stalled spill: {stalled_hits:?}"
+        );
+        assert!(s.stats.mem_hits.load(Relaxed) >= 200);
+        assert_eq!(s.stats.spills.load(Relaxed), 0, "the spill has not committed yet");
+
+        // Release the disk; the spill commits and the bytes survive.
+        spool.release();
+        assert!(s.settle(SETTLE));
+        assert_eq!(s.tier_of("victim"), Some(Tier::Disk));
+        assert_eq!(s.get("victim", 0.0).unwrap().as_slice(), old.as_slice());
+    }
+
+    /// Overwriting a key while its spill is stalled mid-write: the
+    /// spiller's commit sees the bumped generation, abandons its
+    /// artifact, and the new bytes win.
+    #[test]
+    fn overwrite_mid_spill_abandons_the_stale_artifact() {
+        let spool = BlockingSpool::new();
+        let s = TieredStore::with_spool_for_tests(
+            EndpointId::new(),
+            TieredConfig { mem_high_watermark: 4 << 10, default_ttl_s: 0.0, spool_dir: None },
+            spool.clone(),
+        );
+        s.put("k", frame(1, 6 << 10), 0.0).unwrap(); // over watermark → spill
+        let t0 = std::time::Instant::now();
+        while spool.writes_started.load(Ordering::SeqCst) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "spill never started");
+            std::thread::yield_now();
+        }
+        // Overwrite while the spool write is stalled.
+        let fresh = s.put("k", frame(2, 128), 0.0).unwrap();
+        spool.release();
+        assert!(s.settle(SETTLE));
+        assert_eq!(s.stats.spill_aborts.load(Relaxed), 1, "stale spill must abandon");
+        let got = s.resolve(&fresh, 0.0).unwrap();
+        assert_eq!(got.as_slice(), frame(2, 128).as_slice());
     }
 }

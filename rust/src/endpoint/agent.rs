@@ -108,6 +108,17 @@ fn agent_loop(link: AgentSide, mut config: AgentConfig, stats: Arc<AgentStats>) 
     let mut last_strategy_tick: Time = f64::NEG_INFINITY;
     let mut last_heartbeat: Time = f64::NEG_INFINITY;
 
+    // Advertise this endpoint's store before anything else crosses the
+    // link (§5 peer auto-discovery): the forwarder peers the service
+    // fabric with it, so `rref` results resolve without manual wiring.
+    // FIFO ordering guarantees the advertisement lands before any
+    // result that might carry a ref into that store.
+    if let Some(fabric) = &config.fabric {
+        if !link.send(Upstream::Advertise(fabric.local().clone())) {
+            return;
+        }
+    }
+
     // Pre-provision the configured minimum.
     if config.cfg.min_nodes > 0 {
         let now = config.clock.now();
@@ -129,6 +140,14 @@ fn agent_loop(link: AgentSide, mut config: AgentConfig, stats: Arc<AgentStats>) 
                 Downstream::Tasks(ts) => {
                     stats.tasks_received.fetch_add(ts.len() as u64, Ordering::Relaxed);
                     pending.extend(ts);
+                }
+                Downstream::Advertise(store) => {
+                    // The service's payload store: peer our fabric with
+                    // it so workers resolve `iref` inputs without manual
+                    // wiring.
+                    if let Some(fabric) = &config.fabric {
+                        fabric.connect_peer(store.owner(), store);
+                    }
                 }
                 Downstream::Ping => {}
                 Downstream::Shutdown => break 'outer,

@@ -16,6 +16,7 @@ use std::time::Duration;
 
 use crate::common::sync::Notify;
 use crate::common::task::{Task, TaskResult};
+use crate::datastore::TieredStore;
 
 /// Message from the forwarder down to the agent.
 ///
@@ -24,21 +25,52 @@ use crate::common::task::{Task, TaskResult};
 /// allocation (whose `input` is itself a view into the queue frame) —
 /// no payload bytes are copied between submit-side serialization and
 /// the worker.
-#[derive(Debug)]
 pub enum Downstream {
     Tasks(Vec<Arc<Task>>),
+    /// The service's payload store, advertised on connect so the
+    /// endpoint's fabric auto-peers for `iref` resolution (no manual
+    /// `connect_peer` wiring).
+    Advertise(Arc<TieredStore>),
     /// Forwarder-initiated liveness probe.
     Ping,
     /// Orderly shutdown.
     Shutdown,
 }
 
+impl std::fmt::Debug for Downstream {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Downstream::Tasks(ts) => f.debug_tuple("Tasks").field(&ts.len()).finish(),
+            Downstream::Advertise(s) => f.debug_tuple("Advertise").field(&s.owner()).finish(),
+            Downstream::Ping => f.write_str("Ping"),
+            Downstream::Shutdown => f.write_str("Shutdown"),
+        }
+    }
+}
+
 /// Message from the agent up to the forwarder.
-#[derive(Debug)]
 pub enum Upstream {
     Results(Vec<TaskResult>),
+    /// The endpoint's tiered store, advertised on agent start so the
+    /// service fabric auto-peers for `rref` resolution (§5 result
+    /// offload — no manual `connect_peer` wiring).
+    Advertise(Arc<TieredStore>),
     /// Periodic heartbeat (§4.1: 30 s default, configurable).
     Heartbeat { active_workers: usize, pending_tasks: usize },
+}
+
+impl std::fmt::Debug for Upstream {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Upstream::Results(rs) => f.debug_tuple("Results").field(&rs.len()).finish(),
+            Upstream::Advertise(s) => f.debug_tuple("Advertise").field(&s.owner()).finish(),
+            Upstream::Heartbeat { active_workers, pending_tasks } => f
+                .debug_struct("Heartbeat")
+                .field("active_workers", active_workers)
+                .field("pending_tasks", pending_tasks)
+                .finish(),
+        }
+    }
 }
 
 /// One side's endpoints of the duplex link.

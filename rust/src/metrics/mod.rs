@@ -157,6 +157,10 @@ pub struct Counters {
     /// Completed results whose output came back as a `DataRef`
     /// (`"rref"`) instead of inline bytes (§5 result offload).
     pub results_ref_offloaded: AtomicU64,
+    /// Offloaded result frames (`task-result:*`) reclaimed eagerly —
+    /// on retrieval (`get_result`) or when the chain task consuming the
+    /// ref completed — instead of lingering until TTL.
+    pub result_frames_reclaimed: AtomicU64,
     pub cold_starts: AtomicU64,
     pub warm_hits: AtomicU64,
     pub heartbeats: AtomicU64,

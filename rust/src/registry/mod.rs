@@ -12,6 +12,7 @@ use crate::common::error::{Error, Result};
 use crate::common::ids::{ContainerId, EndpointId, FunctionId, UserId};
 use crate::common::task::Payload;
 use crate::containers::ContainerTech;
+use crate::datastore::TieredStore;
 
 /// A registered function (§3 "Function registration").
 #[derive(Clone, Debug)]
@@ -63,6 +64,10 @@ struct RegistryState {
     functions: HashMap<FunctionId, FunctionRecord>,
     endpoints: HashMap<EndpointId, EndpointRecord>,
     containers: HashMap<ContainerId, ContainerRecord>,
+    /// Endpoint payload stores advertised on connect (§5 peer
+    /// auto-discovery): the service fabric peers with these to resolve
+    /// `rref`s, and reconnecting forwarders re-peer from here.
+    stores: HashMap<EndpointId, Arc<TieredStore>>,
 }
 
 /// The registry service (RDS stand-in). Clone-shareable.
@@ -179,6 +184,28 @@ impl Registry {
         self.state.read().unwrap().endpoints.values().cloned().collect()
     }
 
+    /// Record the endpoint's advertised payload store (arrives over the
+    /// agent link on connect; the service fabric auto-peers with it so
+    /// by-ref results resolve without manual wiring).
+    pub fn advertise_store(&self, id: EndpointId, store: Arc<TieredStore>) {
+        self.state.write().unwrap().stores.insert(id, store);
+    }
+
+    /// The endpoint's last advertised store, if any.
+    pub fn advertised_store(&self, id: EndpointId) -> Option<Arc<TieredStore>> {
+        self.state.read().unwrap().stores.get(&id).cloned()
+    }
+
+    /// Drop an endpoint's store advertisement (decommission: the
+    /// registry's `Arc` pins the store — its spiller thread and spool —
+    /// for as long as the advertisement stands, so operators retiring
+    /// an endpoint for good should withdraw it). Returns whether one
+    /// was recorded. Live `DataFabric` peers that already cloned the
+    /// `Arc` keep resolving in-flight refs until they disconnect.
+    pub fn withdraw_store(&self, id: EndpointId) -> bool {
+        self.state.write().unwrap().stores.remove(&id).is_some()
+    }
+
     // ---- containers ------------------------------------------------------
 
     pub fn register_container(&self, name: &str, tech: ContainerTech) -> ContainerId {
@@ -237,6 +264,27 @@ mod tests {
         assert_eq!(r.endpoint(e).unwrap().status, EndpointStatus::Online);
         assert_eq!(r.endpoints().len(), 1);
         assert!(r.set_endpoint_status(EndpointId::new(), EndpointStatus::Online).is_err());
+    }
+
+    #[test]
+    fn store_advertisement_roundtrips() {
+        use crate::datastore::TieredConfig;
+        let r = Registry::new();
+        let e = r.register_endpoint("theta-knl", "ALCF Theta", UserId::new());
+        assert!(r.advertised_store(e).is_none());
+        let store = Arc::new(TieredStore::new(e, TieredConfig::default()).unwrap());
+        r.advertise_store(e, store.clone());
+        let got = r.advertised_store(e).expect("store advertised");
+        assert_eq!(got.owner(), e);
+        assert_eq!(got.epoch(), store.epoch());
+        // Re-advertising (reconnect with a fresh store) replaces it.
+        let fresh = Arc::new(TieredStore::new(e, TieredConfig::default()).unwrap());
+        r.advertise_store(e, fresh.clone());
+        assert_eq!(r.advertised_store(e).unwrap().epoch(), fresh.epoch());
+        // Decommission: withdrawing releases the registry's pin.
+        assert!(r.withdraw_store(e));
+        assert!(!r.withdraw_store(e));
+        assert!(r.advertised_store(e).is_none());
     }
 
     #[test]

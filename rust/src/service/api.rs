@@ -1,6 +1,6 @@
 //! The REST-equivalent service API (Fig. 2 steps 1–3 and 6).
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex};
 
 use crate::auth::{AuthService, Scope, Token};
@@ -45,6 +45,23 @@ pub struct FuncXService {
     /// result hot path only touches the payload store's lock for tasks
     /// that actually dispatched by reference.
     offloaded: Arc<Mutex<HashSet<TaskId>>>,
+    /// Chain tasks (submitted via [`FuncXService::submit_by_ref`]) →
+    /// the result ref they consume: when such a task reaches a terminal
+    /// state, the consumed `task-result:*` frame is reclaimed eagerly
+    /// instead of lingering until TTL (result-frame GC, mirroring how
+    /// offloaded *inputs* are reclaimed on terminal results).
+    consumed: Arc<Mutex<HashMap<TaskId, DataRef>>>,
+    /// How many not-yet-terminal chain tasks still hold each forwarded
+    /// result ref (keyed by owner:epoch:key): a frame is only reclaimed
+    /// once its last pending consumer completes, so fanning one result
+    /// out to several chain tasks — or retrieving it while a chain task
+    /// is in flight — never pulls the bytes out from under a consumer.
+    pending_refs: Arc<Mutex<HashMap<String, usize>>>,
+}
+
+/// The identity a forwarded ref is refcounted under.
+fn ref_ident(r: &DataRef) -> String {
+    format!("{}:{}:{}", r.owner, r.epoch, r.key)
 }
 
 /// The typed error a terminal non-success result maps to (shared by
@@ -94,6 +111,8 @@ impl FuncXService {
             counters: Counters::new(),
             result_notify: Arc::new(Notify::new()),
             offloaded: Arc::new(Mutex::new(HashSet::new())),
+            consumed: Arc::new(Mutex::new(HashMap::new())),
+            pending_refs: Arc::new(Mutex::new(HashMap::new())),
         }
     }
 
@@ -291,6 +310,13 @@ impl FuncXService {
     /// caller sees the bytes whether or not they ever touched the
     /// service queues; a vanished or corrupt frame surfaces the typed
     /// [`Error::NotFound`] / [`Error::Corrupt`].
+    ///
+    /// Retrieval CONSUMES an offloaded result: the frame is reclaimed
+    /// from its owner store eagerly (result-frame GC) unless chain
+    /// tasks are still pending on it — so to forward a result into a
+    /// chain, take its ref via [`FuncXService::wait_result_ref`] /
+    /// [`FuncXService::peek_result`] and `submit_by_ref` *before* (or
+    /// instead of) retrieving the bytes.
     pub fn get_result(&self, id: TaskId) -> Result<Option<Value>> {
         let state = self.task_state(id)?;
         if !state.is_terminal() {
@@ -316,6 +342,20 @@ impl FuncXService {
                 };
                 let value = unpack(&frame)?;
                 self.kv.del(&key); // purge once actually retrieved
+                // Result-frame GC: the offloaded output has been
+                // delivered, so reclaim its frame from the owner store
+                // now instead of waiting out the TTL — unless a chain
+                // task is still pending on this very ref, in which case
+                // the last consumer's completion reclaims it instead.
+                // (The pending map stays locked through the reclaim so
+                // a racing submit_by_ref cannot adopt a ref that is
+                // being reclaimed.)
+                if let Some(r) = &result.output_ref {
+                    let pending = self.pending_refs.lock().expect("pending refs poisoned");
+                    if !pending.contains_key(&ref_ident(r)) && self.fabric.reclaim(r) {
+                        crate::metrics::Counters::incr(&self.counters.result_frames_reclaimed);
+                    }
+                }
                 Ok(Some(value))
             }
             _ => {
@@ -375,6 +415,14 @@ impl FuncXService {
     /// through the queues and the service never touches the payload —
     /// the worker resolves it endpoint-side, a local store hit when
     /// [`crate::routing::LocalityAware`] routed the task to the owner.
+    ///
+    /// Forwarding a result ref makes this chain task a *consumer* of
+    /// the frame: the frame survives at least until the last pending
+    /// consumer completes, at which point it is reclaimed (and the
+    /// producing task's stored record purged) — the result is consumed
+    /// *by the chain*. Forward before retrieving: a ref whose frame was
+    /// already reclaimed by `get_result` fails the chain task with a
+    /// typed `NotFound`, like any other dead ref.
     pub fn submit_by_ref(
         &self,
         token: &Token,
@@ -401,6 +449,23 @@ impl FuncXService {
             crate::serialize::Buffer::empty(),
         )
         .with_input_ref(input.clone());
+        // A forwarded *result* ref is consumed by this chain task: once
+        // the LAST pending consumer of the ref is terminal the frame is
+        // reclaimed eagerly (result-frame GC) — the refcount lets one
+        // result fan out to several chain tasks safely. Other refs
+        // (re-forwarded inputs, external data) are left to their owners.
+        if input.key.starts_with("task-result:") {
+            self.consumed
+                .lock()
+                .expect("consumed map poisoned")
+                .insert(task.id, input.clone());
+            *self
+                .pending_refs
+                .lock()
+                .expect("pending refs poisoned")
+                .entry(ref_ident(input))
+                .or_insert(0) += 1;
+        }
         crate::metrics::Counters::incr(&self.counters.tasks_ref_forwarded);
         self.enqueue_task(task, now)
     }
@@ -457,6 +522,39 @@ impl FuncXService {
         if self.offloaded.lock().expect("offloaded set poisoned").remove(&r.task) {
             let _ = self.fabric.local().remove(&format!("task-input:{}", r.task));
         }
+        // Result-frame GC, chain flavor: this terminal task consumed a
+        // prior result's ref (submit_by_ref). Drop its hold; when the
+        // last pending consumer of the ref completes, the
+        // `task-result:*` frame has served its purpose and is reclaimed
+        // from the owner's store eagerly. Gated on the consumed map, so
+        // ordinary results never touch it.
+        let consumed = self.consumed.lock().expect("consumed map poisoned").remove(&r.task);
+        if let Some(cref) = consumed {
+            let mut pending = self.pending_refs.lock().expect("pending refs poisoned");
+            let drained = match pending.get_mut(&ref_ident(&cref)) {
+                Some(n) if *n > 1 => {
+                    *n -= 1;
+                    false
+                }
+                _ => {
+                    pending.remove(&ref_ident(&cref));
+                    true
+                }
+            };
+            if drained {
+                if self.fabric.reclaim(&cref) {
+                    crate::metrics::Counters::incr(&self.counters.result_frames_reclaimed);
+                }
+                // The producing task's stored record now points at
+                // reclaimed bytes; purge it so a later get_result on
+                // the producer reports "purged" (consumed by the
+                // chain), not an eternal NotFound against a live
+                // record.
+                if let Some(tid) = cref.key.strip_prefix("task-result:") {
+                    self.kv.del(&format!("result:{tid}"));
+                }
+            }
+        }
         self.set_state(r.task, r.state);
         self.latency.on_result_stored(r.task, now);
         match r.state {
@@ -487,17 +585,48 @@ impl FuncXService {
         self.offloaded.lock().expect("offloaded set poisoned").retain(|id| {
             self.fabric.local().live_tier(&format!("task-input:{id}"), now).is_some()
         });
+        // Chain tasks that never produce a result would pin their
+        // consumed-ref records (and their ref holds) forever; drop
+        // records whose task is already terminal (handled at
+        // store_result) or unknown, releasing their refcounts without
+        // reclaiming (TTL owns frames nobody completes against).
+        {
+            let mut consumed = self.consumed.lock().expect("consumed map poisoned");
+            let mut pending = self.pending_refs.lock().expect("pending refs poisoned");
+            consumed.retain(|id, cref| {
+                let live = self.task_state(*id).map(|s| !s.is_terminal()).unwrap_or(false);
+                if !live {
+                    match pending.get_mut(&ref_ident(cref)) {
+                        Some(n) if *n > 1 => *n -= 1,
+                        _ => {
+                            pending.remove(&ref_ident(cref));
+                        }
+                    }
+                }
+                live
+            });
+        }
         self.kv.purge_expired(now)
     }
 
     /// Connect an endpoint's agent link: spawns the forwarder (§4.1
     /// "a unique forwarder process is created for each endpoint").
+    ///
+    /// Peer auto-discovery (§5): the agent advertises its tiered store
+    /// over the link and the forwarder peers the service fabric with it
+    /// (recorded in the registry), so `rref` results resolve without
+    /// manual `connect_peer` wiring; the forwarder advertises the
+    /// service payload store downstream symmetrically for `iref`s. On
+    /// reconnect, a previously advertised store re-peers immediately.
     pub fn connect_endpoint(
         &self,
         endpoint: EndpointId,
         link: crate::endpoint::ForwarderSide,
     ) -> Result<crate::service::ForwarderHandle> {
         self.registry.set_endpoint_status(endpoint, EndpointStatus::Online)?;
+        if let Some(store) = self.registry.advertised_store(endpoint) {
+            self.fabric.connect_peer(store.owner(), store);
+        }
         Ok(crate::service::forwarder::spawn(self.clone(), endpoint, link))
     }
 
@@ -668,6 +797,19 @@ mod tests {
         // peek leaves the record in place; get_result resolves the ref.
         let peeked = s.peek_result(r.task).unwrap().unwrap();
         assert_eq!(peeked.output_ref, Some(dref.clone()));
+        // Ref forwarding FIRST (retrieval reclaims the frame): a
+        // follow-on task carries the same ref; the service enqueues it
+        // without touching the bytes.
+        let r2 = s.submit_by_ref(&tok, f, e, &dref).unwrap();
+        let _first = s.task_queue(e).pop().unwrap().unwrap(); // r's task
+        let task = s.task_queue(e).pop().unwrap().unwrap();
+        assert_eq!(task.id, r2.task);
+        assert_eq!(task.input_ref, Some(dref.clone()));
+        assert_eq!(task.input.len(), 0);
+        assert_eq!(
+            crate::metrics::Counters::get(&s.counters.tasks_ref_forwarded),
+            1
+        );
         assert_eq!(s.get_result(r.task).unwrap(), Some(out));
         assert_eq!(
             crate::metrics::Counters::get(&s.counters.results_ref_offloaded),
@@ -678,18 +820,34 @@ mod tests {
             crate::metrics::Counters::get(&s.counters.result_bytes_through_service),
             0
         );
-        // Ref forwarding: a follow-on task carries the same ref; the
-        // service enqueues it without touching the bytes.
-        let r2 = s.submit_by_ref(&tok, f, e, &dref).unwrap();
-        let _first = s.task_queue(e).pop().unwrap().unwrap(); // r's task
-        let task = s.task_queue(e).pop().unwrap().unwrap();
-        assert_eq!(task.id, r2.task);
-        assert_eq!(task.input_ref, Some(dref));
-        assert_eq!(task.input.len(), 0);
+        // Result-frame GC, consumer-safe: the chain task r2 still holds
+        // the ref, so retrieval must NOT reclaim the frame from under
+        // it — the bytes stay resolvable for the pending consumer.
         assert_eq!(
-            crate::metrics::Counters::get(&s.counters.tasks_ref_forwarded),
-            1
+            crate::metrics::Counters::get(&s.counters.result_frames_reclaimed),
+            0
         );
+        assert!(
+            s.fabric.resolve(&dref, s.clock.now()).is_ok(),
+            "frame must survive retrieval while a chain consumer is pending"
+        );
+        // The last pending consumer's terminal result drains the hold
+        // and reclaims the frame eagerly.
+        let tr2 = TaskResult {
+            task: r2.task,
+            state: TaskState::Success,
+            output: pack(&Value::Int(1), 0).unwrap(),
+            output_ref: None,
+            exec_time_s: 0.0,
+            cold_start: false,
+        };
+        s.store_result(&tr2);
+        assert_eq!(
+            crate::metrics::Counters::get(&s.counters.result_frames_reclaimed),
+            1,
+            "chain completion must reclaim the consumed frame"
+        );
+        assert!(store.is_empty(), "task-result frame reclaimed once its consumer finished");
     }
 
     #[test]

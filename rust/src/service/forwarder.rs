@@ -58,6 +58,14 @@ impl ForwarderHandle {
             let _ = t.join();
         }
     }
+
+    /// `(signals published, waits actually woken)` on this forwarder's
+    /// latch — the watch-wakeup baseline the hotpath bench tracks so
+    /// coalescing work (ROADMAP "watch granularity") starts from
+    /// measurements, not guesses.
+    pub fn wake_counters(&self) -> (u64, u64) {
+        (self.wake.notify_count(), self.wake.wakeup_count())
+    }
 }
 
 pub(crate) fn spawn(
@@ -89,6 +97,10 @@ fn forwarder_loop(
     // `link()`), pushes to this endpoint's task queue, and shutdown.
     let wake = link.wake_handle();
     queue.watch(wake.clone());
+    // Advertise the service payload store down the link so the agent's
+    // fabric auto-peers for `iref` resolution (§5 peer auto-discovery;
+    // the agent advertises its own store upstream symmetrically).
+    let _ = link.send(Downstream::Advertise(svc.fabric.local().clone()));
     // Tasks sent to the agent but not yet completed (§4.1 ack cache).
     // Shared handles: caching a task and framing it onto the link are
     // refcount bumps on one allocation, not clones of the record (whose
@@ -182,6 +194,13 @@ fn forwarder_loop(
                         }
                         svc.store_result(&r);
                     }
+                }
+                Upstream::Advertise(store) => {
+                    // The endpoint's tiered store: record it in the
+                    // registry and peer the service fabric so `rref`
+                    // results resolve without manual wiring.
+                    svc.registry.advertise_store(endpoint, store.clone());
+                    svc.fabric.connect_peer(store.owner(), store);
                 }
                 Upstream::Heartbeat { .. } => {
                     last_heartbeat = svc.clock.now();

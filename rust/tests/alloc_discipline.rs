@@ -151,12 +151,15 @@ fn facade_allocation_discipline() {
     assert_eq!(n, 0, "memory-tier get must be a handle clone, not a copy");
     let cold_store = TieredStore::new(
         EndpointId::new(),
-        // Watermark 0: every frame spills to the disk tier immediately
-        // and never promotes back.
+        // Watermark 0: every frame spills to the disk tier (background
+        // spiller) and never promotes back.
         TieredConfig { mem_high_watermark: 0, default_ttl_s: 0.0, spool_dir: None },
     )
     .unwrap();
     cold_store.put("cold", frame.clone(), 0.0).unwrap();
+    // Wait out the background spill so the measurement below counts the
+    // disk fetch path, not the spiller's own bookkeeping.
+    assert!(cold_store.settle(std::time::Duration::from_secs(10)));
     let (n, got) = allocs_during(|| {
         (0..N).map(|_| cold_store.get("cold", 0.0).unwrap()).collect::<Vec<_>>()
     });

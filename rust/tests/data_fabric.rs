@@ -11,9 +11,7 @@ use funcx::common::config::{EndpointConfig, ServiceConfig};
 use funcx::common::ids::EndpointId;
 use funcx::common::task::Payload;
 use funcx::common::time::WallClock;
-use funcx::datastore::{
-    checksum, DataFabric, FetchPlan, Tier, TieredConfig, TieredStore, SERVICE_OWNER,
-};
+use funcx::datastore::{checksum, DataFabric, FetchPlan, Tier, TieredConfig, TieredStore};
 use funcx::endpoint::{link, EndpointBuilder};
 use funcx::metrics::Counters;
 use funcx::routing::LocalityAware;
@@ -37,7 +35,9 @@ fn spilled_frames_round_trip_byte_identical() {
     let ra = store.put("a", a.clone(), 0.0).unwrap();
     store.put("b", b.clone(), 0.0).unwrap();
 
-    // The watermark fits one frame: the older key spilled to disk.
+    // The watermark fits one frame: the background spiller moves the
+    // older key to disk.
+    assert!(store.settle(Duration::from_secs(10)), "spill must complete");
     assert_eq!(store.tier_of("a"), Some(Tier::Disk));
     assert_eq!(store.tier_of("b"), Some(Tier::Memory));
     assert!(store.stats.spills.load(Relaxed) >= 1);
@@ -74,10 +74,11 @@ fn large_payload_dispatches_by_reference_end_to_end() {
     let f = svc.register_function(&tok, "echo", Payload::Echo, None).unwrap();
     let e = svc.register_endpoint(&tok, "laptop", "").unwrap();
 
-    // Endpoint-side fabric, peered with the service's payload store.
+    // Endpoint-side fabric. No manual peering: the forwarder advertises
+    // the service store down the link (and the agent advertises this
+    // store upstream), so both fabrics auto-peer on connect.
     let local = Arc::new(TieredStore::new(e, TieredConfig::default()).unwrap());
     let fabric = Arc::new(DataFabric::new(local));
-    fabric.connect_peer(SERVICE_OWNER, svc.fabric.local().clone());
 
     let (fwd, agent_side) = link();
     let handle = EndpointBuilder::new()
@@ -124,13 +125,12 @@ fn three_task_chain_forwards_refs_and_routes_to_the_data() {
     let f = svc.register_function(&tok, "echo", Payload::Echo, None).unwrap();
     let e = svc.register_endpoint(&tok, "cluster", "").unwrap();
 
-    // Endpoint fabric, peered both ways: the endpoint resolves
+    // Endpoint fabric. Peering happens automatically in both directions
+    // on connect (§5 peer auto-discovery): the endpoint resolves
     // service-owned input refs, the service resolves endpoint-owned
-    // result refs.
+    // result refs — no manual connect_peer wiring.
     let local = Arc::new(TieredStore::new(e, TieredConfig::default()).unwrap());
     let fabric = Arc::new(DataFabric::new(local.clone()));
-    fabric.connect_peer(SERVICE_OWNER, svc.fabric.local().clone());
-    svc.fabric.connect_peer(e, local.clone());
 
     let scheduler = LocalityAware::new(0);
     let route_stats = scheduler.stats.clone();
@@ -187,6 +187,20 @@ fn three_task_chain_forwards_refs_and_routes_to_the_data() {
         fabric.stats.local_hits.load(Relaxed)
     );
 
+    // Result-frame GC: every intermediate was reclaimed the moment it
+    // was consumed — A's and B's outputs when their chain successors
+    // completed, C's on retrieval — so nothing lingers until TTL.
+    assert_eq!(Counters::get(&svc.counters.result_frames_reclaimed), 3);
+    assert!(
+        local.is_empty(),
+        "endpoint store must hold no task-result frames after the chain, has {}",
+        local.len()
+    );
+    assert!(
+        svc.fabric.local().is_empty(),
+        "service store must hold no offloaded inputs after the chain"
+    );
+
     fh.shutdown();
     handle.join();
 }
@@ -219,7 +233,8 @@ fn evicted_ref_fails_cleanly_on_dispatch() {
 
     let local = Arc::new(TieredStore::new(e, TieredConfig::default()).unwrap());
     let fabric = Arc::new(DataFabric::new(local));
-    fabric.connect_peer(SERVICE_OWNER, svc.fabric.local().clone());
+    // No manual peering: the forwarder's downstream advertisement wires
+    // the service store into this fabric on connect.
     let (fwd, agent_side) = link();
     let handle = EndpointBuilder::new()
         .config(EndpointConfig { min_nodes: 1, workers_per_node: 1, ..Default::default() })

@@ -216,8 +216,10 @@ fn crash_mid_spill_recovers_without_leaks() {
     let (spilled_ref, resident_ref) = {
         let s = TieredStore::new(owner, cfg.clone()).unwrap();
         let spilled = s.put("chain:spilled", spilled_bytes.clone(), 0.0).unwrap();
-        // The second put pushes the first to disk and stays in memory.
+        // The second put pushes the first to disk (background spiller)
+        // and stays in memory.
         let resident = s.put("chain:resident", frame(0x99, 12 << 10), 0.0).unwrap();
+        assert!(s.settle(Duration::from_secs(10)), "spill must complete before the crash");
         assert_eq!(s.tier_of("chain:spilled"), Some(funcx::datastore::Tier::Disk));
         assert_eq!(s.tier_of("chain:resident"), Some(funcx::datastore::Tier::Memory));
         std::mem::forget(s); // crash: no Drop, no cleanup
@@ -227,28 +229,84 @@ fn crash_mid_spill_recovers_without_leaks() {
     std::fs::write(dir.join("torn.0123456789abcdef"), [0u8; 64]).unwrap();
 
     let recovered = Arc::new(TieredStore::recover(owner, cfg).unwrap());
-    // Byte-identical readopt under the old epoch: the in-flight ref
-    // resolves as if the crash never happened.
-    let got = recovered.resolve(&spilled_ref, 0.0).unwrap();
-    assert_eq!(got.as_slice(), spilled_bytes.as_slice());
-    // The memory-tier frame died with the process: typed NotFound.
-    assert!(matches!(recovered.resolve(&resident_ref, 0.0), Err(Error::NotFound(_))));
-    // No leaked files: exactly the one readopted frame remains (plus
-    // the manifest).
+    // No leaked files after recovery: exactly the one readopted frame
+    // remains (plus the manifest) — the torn orphan was reclaimed.
+    // (Checked before any resolve: a resolve may promote the frame back
+    // to memory and legitimately retire the spool file.)
     let mut names: Vec<String> = std::fs::read_dir(&dir)
         .unwrap()
         .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
         .collect();
     names.sort();
     assert_eq!(names.len(), 2, "spool must hold one frame + manifest, got {names:?}");
-    assert!(names.iter().any(|n| n.starts_with("chain_spilled.")), "{names:?}");
+    assert!(names.iter().any(|n| n.starts_with("chain_spilled")), "{names:?}");
     assert!(names.contains(&"spool.manifest".to_string()), "{names:?}");
+    // Byte-identical readopt under the old epoch: the in-flight ref
+    // resolves as if the crash never happened.
+    let got = recovered.resolve(&spilled_ref, 0.0).unwrap();
+    assert_eq!(got.as_slice(), spilled_bytes.as_slice());
+    // The memory-tier frame died with the process: typed NotFound.
+    assert!(matches!(recovered.resolve(&resident_ref, 0.0), Err(Error::NotFound(_))));
 
     // And the whole fault still fails a *task* cleanly, not just a
     // direct resolve.
     let fabric = Arc::new(DataFabric::new(recovered));
     let r = run_ref_task(fabric, Arc::new(WallClock::new()), resident_ref);
     assert!(failure_message(&r).contains("not found"), "got: {}", failure_message(&r));
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Fault: crash mid-manifest-compaction. The manifest is an append-only
+/// log compacted via write-to-temp + rename; a crash that leaves a
+/// half-written `.tmp` (and a torn final append in the live log) must
+/// not cost a single committed frame: recovery replays the intact log,
+/// readopts every spilled frame byte-identical, and ignores the temp.
+#[test]
+fn crash_mid_manifest_compaction_recovers_all_frames() {
+    let dir = std::env::temp_dir().join(format!("funcx-faults-compact-{}", funcx::Uuid::new()));
+    let owner = EndpointId::new();
+    let cfg = TieredConfig {
+        mem_high_watermark: 0, // everything spills; every spill appends
+        default_ttl_s: 0.0,
+        spool_dir: Some(dir.clone()),
+    };
+    let refs: Vec<(DataRef, Buffer)> = {
+        let s = TieredStore::new(owner, cfg.clone()).unwrap();
+        let refs: Vec<(DataRef, Buffer)> = (0..8)
+            .map(|i| {
+                let f = frame(0x10 + i as u8, 4 << 10);
+                (s.put(&format!("chain:k{i}"), f.clone(), 0.0).unwrap(), f)
+            })
+            .collect();
+        assert!(s.settle(Duration::from_secs(10)), "all spills must commit");
+        std::mem::forget(s); // crash: no Drop, no cleanup
+        refs
+    };
+    // The crash struck mid-compaction: a partial snapshot that never
+    // renamed over the live log…
+    std::fs::write(dir.join("spool.manifest.tmp"), "v2 1\n+ dead-partial").unwrap();
+    // …and mid-append: a torn final record on the live log itself.
+    {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(dir.join("spool.manifest"))
+            .unwrap();
+        f.write_all(b"+ 746f726e 12").unwrap(); // no checksum/expiry/newline
+    }
+
+    let recovered = Arc::new(TieredStore::recover(owner, cfg).unwrap());
+    assert_eq!(recovered.len(), 8, "every committed spill survives the torn log");
+    for (r, bytes) in &refs {
+        let got = recovered.resolve(r, 0.0).unwrap();
+        assert_eq!(got.as_slice(), bytes.as_slice(), "byte-identical after compaction crash");
+    }
+    // And the whole fault still fails nothing at the task level: a
+    // by-ref task over a recovered frame succeeds.
+    let fabric = Arc::new(DataFabric::new(recovered));
+    let ok = run_ref_task(fabric, Arc::new(WallClock::new()), refs[0].0.clone());
+    assert_eq!(ok.state, TaskState::Success);
 
     std::fs::remove_dir_all(&dir).unwrap();
 }
