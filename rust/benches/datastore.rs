@@ -299,5 +299,110 @@ fn main() {
         );
     }
 
+    harness::section("replication & failover (survivable data fabric)");
+    {
+        // Replica push cost plus resolve-ladder latency: the healthy
+        // owner path vs failing over through a replica holder. A fresh
+        // fabric per closure invocation keeps every resolve off the
+        // verified cache — bench()'s warm-up pass would otherwise turn
+        // the timed runs into cache hits.
+        let n = 200;
+        let frame = frame_of(256 * 1024);
+        let owner = Arc::new(mem_store());
+        let replica = Arc::new(mem_store());
+
+        // Mint by-ref results in the owner store and push one replica
+        // copy of each into the peer store — the copy the service makes
+        // per Success result when replication_factor > 0.
+        let refs: Vec<_> = (0..n)
+            .map(|i| {
+                let mut r = owner.put(&format!("task-result:b{i}"), frame.clone(), 0.0).unwrap();
+                replica.put_with_ttl(&r.replica_key(), frame.clone(), None, 0.0).unwrap();
+                r.replicas = vec![replica.owner()];
+                r
+            })
+            .collect();
+
+        let rkey = refs[0].replica_key();
+        let t_push = harness::bench(&format!("replica push x{n} (256KB)"), 5, || {
+            for _ in 0..n {
+                std::hint::black_box(
+                    replica.put_with_ttl(&rkey, frame.clone(), None, 0.0).unwrap(),
+                );
+            }
+        }) / n as f64;
+        harness::record("replica push (256KB)", t_push * 1e6, "us/op");
+
+        let t_owner = harness::bench(&format!("cold resolve via owner x{n} (256KB)"), 5, || {
+            let fab = DataFabric::new(Arc::new(mem_store()));
+            fab.connect_peer(owner.owner(), owner.clone());
+            for r in &refs {
+                std::hint::black_box(fab.resolve(r, 0.0).unwrap());
+            }
+        }) / n as f64;
+        harness::record("cold resolve via owner (256KB)", t_owner * 1e6, "us/op");
+
+        let t_failover = harness::bench(&format!("cold failover resolve x{n} (256KB)"), 5, || {
+            // Owner never connected: dead or decommissioned. The ladder
+            // must fall through to the advertised replica holder on
+            // every single resolve (asserted via the failover counter).
+            let fab = DataFabric::new(Arc::new(mem_store()));
+            fab.connect_peer(replica.owner(), replica.clone());
+            for r in &refs {
+                std::hint::black_box(fab.resolve(r, 0.0).unwrap());
+            }
+            assert_eq!(fab.stats.failovers.load(Ordering::Relaxed), n as u64);
+        }) / n as f64;
+        harness::record("cold failover resolve (256KB)", t_failover * 1e6, "us/op");
+        harness::record("failover vs owner ratio", t_failover / t_owner, "x");
+        println!(
+            "  => push {:.2} us, owner resolve {:.2} us, failover resolve {:.2} us ({:.2}x)",
+            t_push * 1e6,
+            t_owner * 1e6,
+            t_failover * 1e6,
+            t_failover / t_owner
+        );
+
+        // Replication must stay off the critical path: the sim ships
+        // replica copies asynchronously, so makespan with R=2 matches
+        // R=0 exactly while the background replica bytes are accounted.
+        let mb64 = 64 * 1024 * 1024;
+        let tasks: Vec<SimTask> =
+            (0..50).map(|_| SimTask::noop().with_output_bytes(mb64)).collect();
+        let run_rep = |copies: usize| {
+            let mut ep = SimEndpoint::new(
+                SimProfile::theta(),
+                2,
+                Box::new(WarmingAware::default()),
+                true,
+                7,
+            )
+            .deterministic_cold(true)
+            .with_replication(copies);
+            ep.prewarm(&[ContainerId(funcx::Uuid::NIL)]);
+            ep.run(&tasks)
+        };
+        let base = run_rep(0);
+        let replicated = run_rep(2);
+        harness::record("sim makespan R=0 (50x64MB results)", base.completion_s, "s");
+        harness::record("sim makespan R=2 (50x64MB results)", replicated.completion_s, "s");
+        harness::record(
+            "sim replica bytes R=2",
+            replicated.replica_bytes as f64 / (1 << 20) as f64,
+            "MB",
+        );
+        println!(
+            "  => R=2 makespan {:.2} s vs R=0 {:.2} s; {} background replica pushes ({} MB)",
+            replicated.completion_s,
+            base.completion_s,
+            replicated.replica_pushes,
+            replicated.replica_bytes >> 20
+        );
+        // Acceptance: replication is asynchronous — it must not move
+        // the makespan at all, while every copy is accounted.
+        assert_eq!(replicated.completion_s, base.completion_s);
+        assert_eq!(replicated.replica_pushes, 2 * 50);
+    }
+
     harness::write_json("BENCH_datastore.json");
 }

@@ -327,6 +327,7 @@ mod tests {
             key: "task-result:x".into(),
             size: 1 << 20,
             checksum: 7,
+            replicas: Vec::new(),
         });
         rb.push(r, false);
         // The ref flushes immediately and carries the buffered inline

@@ -30,6 +30,13 @@ pub struct ServiceConfig {
     /// Max times a task is re-dispatched after agent loss before being
     /// marked [`crate::common::task::TaskState::Abandoned`].
     pub max_redispatch: u32,
+    /// Copies of each by-ref result frame pushed to *other*
+    /// registry-advertised endpoint stores when the result is stored
+    /// (survivability: the ref then resolves via a replica after its
+    /// owner dies — see `docs/data-fabric.md`). `0` disables
+    /// replication; the effective count is capped by how many peer
+    /// stores are advertised.
+    pub replication_factor: usize,
 }
 
 impl Default for ServiceConfig {
@@ -42,6 +49,7 @@ impl Default for ServiceConfig {
             heartbeat_misses_allowed: 2,
             result_ttl_s: 3600.0,
             max_redispatch: 3,
+            replication_factor: 0,
         }
     }
 }

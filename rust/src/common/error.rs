@@ -27,6 +27,12 @@ pub enum Error {
     Provider(String),
     /// Data-plane (store/transfer) failure.
     Data(String),
+    /// The store shed the write to bound memory growth (spill
+    /// backpressure): the spool is persistently failing and the memory
+    /// tier is already past its shed limit, so accepting the frame
+    /// would grow the tier unboundedly. Retryable once the spool
+    /// recovers or occupancy drains.
+    Overloaded(String),
     /// A fetched frame failed its [`crate::datastore::DataRef`]
     /// size/checksum verification (truncation or bit corruption — the
     /// bytes exist but cannot be trusted, unlike [`Error::NotFound`]).
@@ -55,6 +61,7 @@ impl fmt::Display for Error {
             Error::Shutdown(m) => write!(f, "shutdown: {m}"),
             Error::Provider(m) => write!(f, "provider: {m}"),
             Error::Data(m) => write!(f, "data: {m}"),
+            Error::Overloaded(m) => write!(f, "overloaded: {m}"),
             Error::Corrupt(m) => write!(f, "corrupt: {m}"),
             Error::Runtime(m) => write!(f, "runtime: {m}"),
             Error::Timeout(m) => write!(f, "timeout: {m}"),
@@ -91,6 +98,7 @@ mod tests {
             Error::Shutdown("x".into()),
             Error::Provider("x".into()),
             Error::Data("x".into()),
+            Error::Overloaded("x".into()),
             Error::Corrupt("x".into()),
             Error::Runtime("x".into()),
             Error::Timeout("x".into()),

@@ -502,6 +502,7 @@ mod tests {
             key: "task-input:abc".into(),
             size: 12345,
             checksum: 0xDEAD_BEEF,
+            replicas: Vec::new(),
         };
         let t = Task::new(
             FunctionId::new(),
@@ -557,6 +558,7 @@ mod tests {
             key: "task-result:abc".into(),
             size: 98765,
             checksum: 0xFEED_F00D,
+            replicas: Vec::new(),
         };
         let r = TaskResult {
             task: TaskId::new(),

@@ -41,6 +41,13 @@ pub struct DataRef {
     pub size: u64,
     /// [`checksum`] of the frame bytes.
     pub checksum: u64,
+    /// Endpoints holding a replica of the frame (under
+    /// [`DataRef::replica_key`] in *their* stores), in preference
+    /// order. Empty for unreplicated refs; resolvers fail over
+    /// owner → replicas → Globus, and routing treats replica endpoints
+    /// as data-local. Absent on the wire when empty, so refs minted by
+    /// older writers decode unchanged.
+    pub replicas: Vec<EndpointId>,
 }
 
 impl DataRef {
@@ -62,17 +69,33 @@ impl DataRef {
         }
         Ok(())
     }
+
+    /// The key a *replica* of this frame is stored under in a peer
+    /// store. Namespaced by owner + epoch so replicas of identically
+    /// named frames from different owners (or store generations) never
+    /// collide, and a stale replica can never satisfy a re-minted ref —
+    /// the checksum verify backstops even that.
+    pub fn replica_key(&self) -> String {
+        format!("replica:{}:{}:{}", self.owner, self.epoch, self.key)
+    }
 }
 
 impl Wire for DataRef {
     fn to_value(&self) -> Value {
-        Value::map([
+        let mut fields = vec![
             ("owner", self.owner.to_value()),
             ("epoch", self.epoch.to_value()),
             ("key", Value::Str(self.key.clone())),
             ("size", self.size.to_value()),
             ("sum", self.checksum.to_value()),
-        ])
+        ];
+        if !self.replicas.is_empty() {
+            fields.push((
+                "reps",
+                Value::List(self.replicas.iter().map(Wire::to_value).collect()),
+            ));
+        }
+        Value::map(fields)
     }
 
     fn from_value(v: &Value) -> Result<Self> {
@@ -80,12 +103,22 @@ impl Wire for DataRef {
             v.get(name)
                 .ok_or_else(|| Error::Serialization(format!("dataref: missing {name}")))
         };
+        // "reps" is optional on the wire: unreplicated refs (and refs
+        // from pre-replication writers) simply omit it.
+        let replicas = match v.get("reps") {
+            Some(Value::List(l)) => l.iter().map(EndpointId::from_value).collect::<Result<_>>()?,
+            Some(other) => {
+                return Err(Error::Serialization(format!("dataref: bad reps {other:?}")))
+            }
+            None => Vec::new(),
+        };
         Ok(DataRef {
             owner: EndpointId::from_value(field("owner")?)?,
             epoch: u64::from_value(field("epoch")?)?,
             key: String::from_value(field("key")?)?,
             size: u64::from_value(field("size")?)?,
             checksum: u64::from_value(field("sum")?)?,
+            replicas,
         })
     }
 }
@@ -101,6 +134,7 @@ mod tests {
             key: "k/part-0".into(),
             size: bytes.len() as u64,
             checksum: checksum(bytes),
+            replicas: Vec::new(),
         }
     }
 
@@ -109,6 +143,31 @@ mod tests {
         let r = mk_ref(&[1, 2, 3]);
         let back = DataRef::from_bytes(&r.to_bytes()).unwrap();
         assert_eq!(back, r);
+    }
+
+    #[test]
+    fn wire_roundtrip_with_replicas() {
+        let mut r = mk_ref(&[1, 2, 3]);
+        r.replicas = vec![EndpointId::new(), EndpointId::new()];
+        let back = DataRef::from_bytes(&r.to_bytes()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn wire_without_reps_decodes_empty_replica_set() {
+        // A ref encoded before replication existed has no "reps" field;
+        // it must still decode (empty replica set), not error.
+        let r = mk_ref(&[4, 5]);
+        let v = crate::serialize::Value::map([
+            ("owner", r.owner.to_value()),
+            ("epoch", r.epoch.to_value()),
+            ("key", crate::serialize::Value::Str(r.key.clone())),
+            ("size", r.size.to_value()),
+            ("sum", r.checksum.to_value()),
+        ]);
+        let back = DataRef::from_value(&v).unwrap();
+        assert_eq!(back, r);
+        assert!(back.replicas.is_empty());
     }
 
     #[test]

@@ -22,13 +22,16 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
 
 use crate::common::error::{Error, Result};
 use crate::common::ids::{EndpointId, Uuid};
+use crate::common::rng::Rng;
 use crate::common::time::Time;
 use crate::datastore::dataref::DataRef;
 use crate::datastore::tiered::{Tier, TieredStore};
+use crate::metrics::Counters;
 use crate::serialize::Buffer;
 use crate::transfer::{GlobusFile, TransferService};
 
@@ -46,6 +49,29 @@ pub struct FabricStats {
     /// Frames eagerly reclaimed from their owning store via
     /// [`DataFabric::reclaim`] (result-frame GC).
     pub frames_reclaimed: AtomicU64,
+    /// Resolutions that completed via a replica after the owner's copy
+    /// was unreachable or gone (the failover half of replication).
+    pub failovers: AtomicU64,
+    /// Transient peer-fetch failures that were retried (bounded,
+    /// jittered backoff) instead of surfacing — a flapping link is not
+    /// a missing frame.
+    pub peer_retries: AtomicU64,
+}
+
+/// Peer-fetch attempts before a transient failure surfaces: the first
+/// try plus two retries under jittered exponential backoff.
+const PEER_FETCH_ATTEMPTS: u32 = 3;
+
+/// Base backoff before the first retry, milliseconds (doubled per
+/// attempt, jittered ×[0.5, 1.5)).
+const RETRY_BASE_MS: f64 = 2.0;
+
+/// Transient fetch failures worth retrying: I/O trouble, index
+/// livelock, timeouts — the flapping-link shapes. `NotFound` and
+/// `Corrupt` are authoritative answers about the frame itself and
+/// retrying them cannot help.
+fn is_transient(e: &Error) -> bool {
+    matches!(e, Error::Io(_) | Error::Data(_) | Error::Timeout(_))
 }
 
 /// How a given ref would be (or was) fetched — the ladder decision.
@@ -101,6 +127,10 @@ pub struct DataFabric {
     cache_seq: AtomicU64,
     peers: Mutex<HashMap<EndpointId, Arc<TieredStore>>>,
     wide_area: Mutex<Option<WideArea>>,
+    /// Deployment-wide metrics sink (failover resolutions, shed puts):
+    /// endpoint-side fabric events land in the same `Counters` the
+    /// service asserts on.
+    counters: OnceLock<Arc<Counters>>,
     pub stats: FabricStats,
 }
 
@@ -116,8 +146,15 @@ impl DataFabric {
             cache_seq: AtomicU64::new(0),
             peers: Mutex::new(HashMap::new()),
             wide_area: Mutex::new(None),
+            counters: OnceLock::new(),
             stats: FabricStats::default(),
         }
+    }
+
+    /// Sink endpoint-side fabric events (failover resolutions, shed
+    /// puts) into a deployment-wide [`Counters`]. First call wins.
+    pub fn with_counters(&self, counters: Arc<Counters>) {
+        let _ = self.counters.set(counters);
     }
 
     /// This endpoint's own tiered store.
@@ -155,24 +192,41 @@ impl DataFabric {
     }
 
     /// Store a frame in the local store; returns the ref to dispatch.
+    /// A shed write (spill backpressure, [`Error::Overloaded`]) is
+    /// counted into the deployment-wide sink before it surfaces.
     pub fn put(&self, key: &str, frame: Buffer, now: Time) -> Result<DataRef> {
-        self.local.put(key, frame, now)
+        let out = self.local.put(key, frame, now);
+        if matches!(&out, Err(Error::Overloaded(_))) {
+            if let Some(c) = self.counters.get() {
+                Counters::incr(&c.shed_puts);
+            }
+        }
+        out
     }
 
-    /// Resolve a ref down the fetch ladder (see module docs).
+    /// Resolve a ref down the fetch ladder (see module docs), failing
+    /// over to replicas when the owner's copy is gone or unreachable:
+    /// local/cached copy → owner (peer forward with bounded retry /
+    /// Globus) → listed replicas → replica scan over connected peers.
     pub fn resolve(&self, r: &DataRef, now: Time) -> Result<Buffer> {
         // 1. Local store.
         if r.owner == self.local.owner() && r.epoch == self.local.epoch() {
-            let out = self.local.resolve(r, now);
-            match &out {
-                Ok(_) => {
+            match self.local.resolve(r, now) {
+                Ok(f) => {
                     self.stats.local_hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(f);
                 }
-                Err(_) => {
+                Err(e) => {
+                    // The owner's own copy is gone (evicted, expired,
+                    // damaged): replicas are the last word before the
+                    // typed error surfaces.
+                    if let Some(f) = self.resolve_replicas(r, now) {
+                        return Ok(f);
+                    }
                     self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                    return Err(e);
                 }
             }
-            return out;
         }
         // 2. Hit-counting resolve cache.
         if let Some(frame) = self.cache_lookup(r) {
@@ -182,9 +236,12 @@ impl DataFabric {
         // 3. Peer forward (raw frame handle) / 4. Globus model.
         let peer = self.peers.lock().expect("fabric peers poisoned").get(&r.owner).cloned();
         if let Some(peer) = peer {
-            let frame = match peer.resolve(r, now) {
+            let frame = match self.peer_fetch_with_retry(&peer, r, now) {
                 Ok(f) => f,
                 Err(e) => {
+                    if let Some(f) = self.resolve_replicas(r, now) {
+                        return Ok(f);
+                    }
                     self.stats.misses.fetch_add(1, Ordering::Relaxed);
                     return Err(e);
                 }
@@ -198,11 +255,116 @@ impl DataFabric {
             self.cache_insert(r, frame.clone());
             return Ok(frame);
         }
+        // Owner not connected at all (dead or decommissioned): replicas
+        // are the only path left.
+        if let Some(f) = self.resolve_replicas(r, now) {
+            return Ok(f);
+        }
         self.stats.misses.fetch_add(1, Ordering::Relaxed);
         Err(Error::NotFound(format!(
             "ref {}: owner {} unreachable from this endpoint",
             r.key, r.owner
         )))
+    }
+
+    /// Fetch from the owning peer with bounded, jittered retry:
+    /// transient failures (I/O, index livelock, timeout — the
+    /// flapping-link shapes) are retried up to [`PEER_FETCH_ATTEMPTS`]
+    /// before the error surfaces; authoritative answers (`NotFound`,
+    /// `Corrupt`) return immediately.
+    fn peer_fetch_with_retry(
+        &self,
+        peer: &Arc<TieredStore>,
+        r: &DataRef,
+        now: Time,
+    ) -> Result<Buffer> {
+        let mut rng = Rng::from_entropy();
+        let mut last: Option<Error> = None;
+        for attempt in 0..PEER_FETCH_ATTEMPTS {
+            if attempt > 0 {
+                self.stats.peer_retries.fetch_add(1, Ordering::Relaxed);
+                let backoff_ms =
+                    RETRY_BASE_MS * f64::from(1 << (attempt - 1)) * rng.range_f64(0.5, 1.5);
+                std::thread::sleep(Duration::from_micros((backoff_ms * 1000.0) as u64));
+            }
+            match peer.resolve(r, now) {
+                Ok(f) => return Ok(f),
+                Err(e) if is_transient(&e) => last = Some(e),
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last.expect("at least one attempt ran"))
+    }
+
+    /// The failover half of replication: try every endpoint holding a
+    /// replica of `r` — the ref's listed replica set first (preference
+    /// order), then a scan over this endpoint's own store and every
+    /// connected peer, because a decommission drain may have re-homed
+    /// the frame to an endpoint the ref was minted before knowing
+    /// about. Replica frames live under [`DataRef::replica_key`] in the
+    /// *holder's* store (the holder's own owner/epoch), so fetches go
+    /// through `get` plus the ref's size/checksum verify rather than
+    /// the owner/epoch-gated `resolve`.
+    fn resolve_replicas(&self, r: &DataRef, now: Time) -> Option<Buffer> {
+        let rkey = r.replica_key();
+        let fetch = |store: &TieredStore| -> Option<Buffer> {
+            let f = store.get(&rkey, now).ok()?;
+            r.verify(f.as_slice()).ok()?;
+            Some(f)
+        };
+        // `None` source = served from this endpoint's own store.
+        let mut hit: Option<(Option<EndpointId>, Buffer)> = None;
+        for rep in &r.replicas {
+            if *rep == self.local.owner() {
+                if let Some(f) = fetch(&self.local) {
+                    hit = Some((None, f));
+                    break;
+                }
+            } else {
+                let peer =
+                    self.peers.lock().expect("fabric peers poisoned").get(rep).cloned();
+                if let Some(p) = peer {
+                    if let Some(f) = fetch(&p) {
+                        hit = Some((Some(*rep), f));
+                        break;
+                    }
+                }
+            }
+        }
+        if hit.is_none() && !r.replicas.contains(&self.local.owner()) {
+            if let Some(f) = fetch(&self.local) {
+                hit = Some((None, f));
+            }
+        }
+        if hit.is_none() {
+            let peers: Vec<(EndpointId, Arc<TieredStore>)> = self
+                .peers
+                .lock()
+                .expect("fabric peers poisoned")
+                .iter()
+                .map(|(id, p)| (*id, p.clone()))
+                .collect();
+            for (id, p) in peers {
+                if r.replicas.contains(&id) {
+                    continue; // already tried above
+                }
+                if let Some(f) = fetch(&p) {
+                    hit = Some((Some(id), f));
+                    break;
+                }
+            }
+        }
+        let (src, frame) = hit?;
+        self.stats.failovers.fetch_add(1, Ordering::Relaxed);
+        if let Some(c) = self.counters.get() {
+            Counters::incr(&c.failover_resolutions);
+        }
+        if src.is_some() {
+            self.stats.frames_forwarded.fetch_add(1, Ordering::Relaxed);
+            self.stats.bytes_forwarded.fetch_add(r.size, Ordering::Relaxed);
+        }
+        self.cache_insert(r, frame.clone());
+        Some(frame)
     }
 
     /// Eagerly reclaim the frame behind `r` from its owning store — the
@@ -422,6 +584,7 @@ mod tests {
             key: "k".into(),
             size: 1,
             checksum: 0,
+            replicas: Vec::new(),
         };
         assert!(matches!(fab.resolve(&r, 0.0), Err(Error::NotFound(_))));
         assert_eq!(fab.plan(&r, 0.0), FetchPlan::Unavailable);
@@ -484,6 +647,143 @@ mod tests {
         assert!(fab2.reclaim(&r2), "peer reclaim removes the owner's frame");
         assert_eq!(fab2.cache_bytes(), 0, "cached copy dropped too");
         assert!(matches!(fab2.resolve(&r2, 0.0), Err(Error::NotFound(_))));
+    }
+
+    /// Killing the owner must not kill the ref: a replica listed in the
+    /// ref's replica set serves the frame (verified against the ref's
+    /// checksum) and the failover counters tick.
+    #[test]
+    fn failover_resolves_via_listed_replica() {
+        let owner = store(); // never connected: the owner is "dead"
+        let local = store();
+        let fab = DataFabric::new(local.clone());
+        let f = frame(2048);
+        let mut r = owner.put("k", f.clone(), 0.0).unwrap();
+        // Replicate the frame into the local store under the replica key.
+        local.put(&r.replica_key(), f.clone(), 0.0).unwrap();
+        r.replicas = vec![local.owner()];
+        let got = fab.resolve(&r, 0.0).unwrap();
+        assert_eq!(got.as_slice(), f.as_slice());
+        assert_eq!(fab.stats.failovers.load(Relaxed), 1);
+        assert_eq!(fab.stats.misses.load(Relaxed), 0, "failover is not a miss");
+        let counters = crate::metrics::Counters::new();
+        fab.with_counters(counters.clone());
+        fab.reclaim(&r); // drop the cached copy so failover runs again
+        local.put(&r.replica_key(), f.clone(), 0.0).unwrap();
+        fab.resolve(&r, 0.0).unwrap();
+        assert_eq!(
+            crate::metrics::Counters::get(&counters.failover_resolutions),
+            1,
+            "failovers land in the deployment-wide sink"
+        );
+    }
+
+    /// A frame re-homed by a decommission drain lives on an endpoint
+    /// the ref never listed: the replica scan over connected peers
+    /// still finds it.
+    #[test]
+    fn failover_scans_unlisted_peers_for_rehomed_frames() {
+        let owner = store(); // dead
+        let rehome = store(); // where the drain moved the frame
+        let fab = DataFabric::new(store());
+        fab.connect_peer(rehome.owner(), rehome.clone());
+        let f = frame(512);
+        let r = owner.put("k", f.clone(), 0.0).unwrap(); // empty replica set
+        rehome.put(&r.replica_key(), f.clone(), 0.0).unwrap();
+        let got = fab.resolve(&r, 0.0).unwrap();
+        assert_eq!(got.as_slice(), f.as_slice());
+        assert_eq!(fab.stats.failovers.load(Relaxed), 1);
+        assert_eq!(fab.stats.frames_forwarded.load(Relaxed), 1, "served peer-to-peer");
+    }
+
+    /// A spool whose reads fail a configured number of times before
+    /// recovering — the flapping-link fake behind the retry pins.
+    struct FlakyReadSpool {
+        inner: crate::datastore::DiskBackend,
+        failures_left: AtomicU64,
+    }
+
+    impl FlakyReadSpool {
+        fn new(failures: u64) -> Arc<Self> {
+            Arc::new(FlakyReadSpool {
+                inner: crate::datastore::DiskBackend::temp().unwrap(),
+                failures_left: AtomicU64::new(failures),
+            })
+        }
+    }
+
+    impl crate::datastore::backend::StoreBackend for FlakyReadSpool {
+        fn name(&self) -> &'static str {
+            "flaky-read-fake"
+        }
+        fn put(&self, key: &str, frame: &Buffer) -> Result<()> {
+            self.inner.put(key, frame)
+        }
+        fn get(&self, key: &str) -> Result<Option<Buffer>> {
+            let left = self.failures_left.load(Ordering::SeqCst);
+            if left > 0 {
+                self.failures_left.store(left - 1, Ordering::SeqCst);
+                return Err(Error::Io(std::io::Error::new(
+                    std::io::ErrorKind::Interrupted,
+                    "link flap",
+                )));
+            }
+            self.inner.get(key)
+        }
+        fn remove(&self, key: &str) -> Result<bool> {
+            crate::datastore::backend::StoreBackend::remove(&self.inner, key)
+        }
+    }
+
+    impl crate::datastore::backend::SpoolStore for FlakyReadSpool {
+        fn put_entry(
+            &self,
+            key: &str,
+            frame: &Buffer,
+            expires_at: Option<Time>,
+        ) -> Result<()> {
+            self.inner.put_entry(key, frame, expires_at)
+        }
+    }
+
+    /// Satellite pin: a flapping peer is retried, not reported missing.
+    /// Two transient read faults still resolve (with retries counted);
+    /// a permanently faulted peer surfaces the typed transient error —
+    /// never `NotFound` — once the bounded retries are exhausted.
+    #[test]
+    fn transient_peer_faults_retry_before_surfacing() {
+        let mk_flaky_peer = |failures: u64| {
+            let spool = FlakyReadSpool::new(0);
+            let peer = Arc::new(TieredStore::with_spool_for_tests(
+                EndpointId::new(),
+                TieredConfig { mem_high_watermark: 0, default_ttl_s: 0.0, spool_dir: None },
+                spool.clone(),
+            ));
+            let r = peer.put("k", frame(1024), 0.0).unwrap();
+            assert!(peer.settle(std::time::Duration::from_secs(10)));
+            assert_eq!(peer.tier_of("k"), Some(Tier::Disk));
+            spool.failures_left.store(failures, Ordering::SeqCst);
+            (peer, r)
+        };
+
+        // Flapping: fails twice, third attempt lands.
+        let (peer, r) = mk_flaky_peer(2);
+        let fab = DataFabric::new(store());
+        fab.connect_peer(peer.owner(), peer.clone());
+        let got = fab.resolve(&r, 0.0).unwrap();
+        assert_eq!(got.len(), 1024);
+        assert_eq!(fab.stats.peer_retries.load(Relaxed), 2);
+        assert_eq!(fab.stats.misses.load(Relaxed), 0);
+
+        // Permanently down: typed I/O error after exhausted retries.
+        let (peer2, r2) = mk_flaky_peer(u64::MAX);
+        let fab2 = DataFabric::new(store());
+        fab2.connect_peer(peer2.owner(), peer2.clone());
+        match fab2.resolve(&r2, 0.0) {
+            Err(Error::Io(_)) => {}
+            other => panic!("expected Io after exhausted retries, got {other:?}"),
+        }
+        assert_eq!(fab2.stats.peer_retries.load(Relaxed), 2);
     }
 
     #[test]

@@ -163,9 +163,25 @@ pub struct TierStats {
     /// stays resident and the spiller backs off, so a climbing count
     /// here means the watermark is not being enforced — alert on it.
     pub spill_errors: AtomicU64,
+    /// Puts refused under spill backpressure: the spool is persistently
+    /// failing and the memory tier is already past its shed limit
+    /// ([`TieredStore::with_shed_factor`] × watermark), so the write
+    /// surfaced [`Error::Overloaded`] instead of growing the tier.
+    pub shed_puts: AtomicU64,
     pub promotes: AtomicU64,
     pub expirations: AtomicU64,
 }
+
+/// Spiller threads per store: victims shard across a small pool so one
+/// slow spool write does not serialize the whole drain.
+const SPILLER_POOL: usize = 2;
+
+/// Consecutive spool-write failures before the store treats the spool
+/// as down and starts shedding over-limit puts.
+const SPOOL_FAIL_SHED_STREAK: u64 = 1;
+
+/// Default memory-tier shed limit, as a multiple of the high watermark.
+const DEFAULT_SHED_FACTOR: usize = 4;
 
 struct Entry {
     /// The key's shared handle (also the LRU queue's value — one
@@ -200,6 +216,10 @@ struct Index {
     /// Bytes held by the memory tier: `Resident` + `Spilling` frames
     /// plus `Promoting` reservations.
     mem_bytes: usize,
+    /// Bytes currently mid-spill (`Spilling` frames): victim selection
+    /// subtracts them so concurrent spillers in the pool never claim
+    /// more victims than the watermark overshoot warrants.
+    spilling_bytes: usize,
     /// Entries currently in `Spilling`/`Promoting` ([`TieredStore::settle`]).
     in_flight: usize,
 }
@@ -254,13 +274,21 @@ struct Inner {
     /// Signalled after every committed/aborted transition so
     /// [`TieredStore::settle`] can wait without polling.
     settled: Notify,
+    /// Consecutive spool-write failures (reset by any success). At
+    /// [`SPOOL_FAIL_SHED_STREAK`] the store starts shedding puts that
+    /// would push the memory tier past `shed_factor × watermark`
+    /// (spill backpressure — the spiller cannot drain, so growth must
+    /// be bounded at the admission side).
+    spool_fail_streak: AtomicU64,
+    /// Memory-tier shed limit as a watermark multiple (see above).
+    shed_factor: AtomicU64,
     shutdown: AtomicBool,
 }
 
 /// The tiered store. Thread-safe; share via `Arc`.
 pub struct TieredStore {
     inner: Arc<Inner>,
-    spiller: Option<JoinHandle<()>>,
+    spillers: Vec<JoinHandle<()>>,
     pub stats: Arc<TierStats>,
 }
 
@@ -381,20 +409,37 @@ impl TieredStore {
                 lru: BTreeMap::new(),
                 seq,
                 mem_bytes: 0,
+                spilling_bytes: 0,
                 in_flight: 0,
             }),
             owner_clock: OnceLock::new(),
             stats: stats.clone(),
             spill_wake: Notify::new(),
             settled: Notify::new(),
+            spool_fail_streak: AtomicU64::new(0),
+            shed_factor: AtomicU64::new(DEFAULT_SHED_FACTOR as u64),
             shutdown: AtomicBool::new(false),
         });
-        let worker = inner.clone();
-        let spiller = std::thread::Builder::new()
-            .name("funcx-tier-spiller".into())
-            .spawn(move || spiller_loop(worker))
-            .expect("spawn tier spiller");
-        TieredStore { inner, spiller: Some(spiller), stats }
+        let spillers = (0..SPILLER_POOL)
+            .map(|i| {
+                let worker = inner.clone();
+                std::thread::Builder::new()
+                    .name(format!("funcx-tier-spiller-{i}"))
+                    .spawn(move || spiller_loop(worker))
+                    .expect("spawn tier spiller")
+            })
+            .collect();
+        TieredStore { inner, spillers, stats }
+    }
+
+    /// Override the spill-backpressure shed limit: puts are shed (with
+    /// [`Error::Overloaded`]) once the spool is failing *and* the
+    /// memory tier would exceed `factor × mem_high_watermark`. Default
+    /// [`DEFAULT_SHED_FACTOR`]. `0` sheds every put while the spool is
+    /// down.
+    pub fn with_shed_factor(self, factor: usize) -> Self {
+        self.inner.shed_factor.store(factor as u64, Ordering::Relaxed);
+        self
     }
 
     /// Pin TTL stamps and expiry decisions to this store's own clock
@@ -430,6 +475,7 @@ impl TieredStore {
             key: key.to_string(),
             size: size as u64,
             checksum: sum,
+            replicas: Vec::new(),
         }
     }
 
@@ -460,6 +506,35 @@ impl TieredStore {
             // Reborrow as a plain `&mut Index`: field accesses below are
             // then disjoint borrows, not repeated reborrows of the guard.
             let idx = &mut *guard;
+            // Spill backpressure: with the spool persistently failing
+            // the spiller cannot drain, so past the shed limit this put
+            // is refused (typed, retryable) instead of growing the
+            // memory tier without bound. Overwrites of resident keys
+            // are exempt when they don't grow occupancy — shedding
+            // them would lose data for zero memory saved.
+            if self.inner.spool_fail_streak.load(Ordering::Relaxed) >= SPOOL_FAIL_SHED_STREAK {
+                let limit = (self.inner.shed_factor.load(Ordering::Relaxed) as usize)
+                    .saturating_mul(self.inner.cfg.mem_high_watermark);
+                let retained = match idx.entries.get(key) {
+                    Some(e)
+                        if matches!(
+                            e.state,
+                            EntryState::Resident | EntryState::Spilling | EntryState::Promoting
+                        ) =>
+                    {
+                        e.size
+                    }
+                    _ => 0,
+                };
+                if idx.mem_bytes - retained + size > limit {
+                    drop(guard);
+                    self.stats.shed_puts.fetch_add(1, Ordering::Relaxed);
+                    return Err(Error::Overloaded(format!(
+                        "put {key} ({size} bytes) shed: spool is failing and the memory \
+                         tier is at its shed limit ({limit} bytes)"
+                    )));
+                }
+            }
             let seq = idx.bump();
             let node = match idx.entries.get_mut(key) {
                 Some(e) => {
@@ -841,6 +916,46 @@ impl TieredStore {
             self.inner.settled.wait_newer(seen, remaining.min(Duration::from_millis(20)));
         }
     }
+
+    /// Snapshot of every live (unexpired) key — the decommission
+    /// drain's work list. Frames are then read off-lock one at a time;
+    /// keys that expire or vanish between the snapshot and the read are
+    /// simply skipped.
+    pub fn live_keys(&self, now: Time) -> Vec<String> {
+        let now = self.ttl_now(now);
+        let idx = self.inner.index.lock().expect("tiered index poisoned");
+        idx.entries
+            .values()
+            .filter(|e| !e.expires_at.is_some_and(|t| now >= t))
+            .map(|e| e.key.to_string())
+            .collect()
+    }
+
+    /// Drop every entry and reclaim every committed spool artifact
+    /// (decommission spool GC). In-flight spills abandon at commit and
+    /// reclaim their own artifact. Returns the number of entries
+    /// purged.
+    pub fn purge_all(&self) -> usize {
+        let (purged, reclaims) = {
+            let mut guard = self.inner.index.lock().expect("tiered index poisoned");
+            let idx = &mut *guard;
+            let keys: Vec<Arc<str>> = idx.entries.keys().cloned().collect();
+            let mut reclaims = Vec::new();
+            for k in &keys {
+                if let Some(e) = idx.entries.remove(&**k) {
+                    if let Some(skey) = idx.release(&e) {
+                        reclaims.push(skey);
+                    }
+                }
+            }
+            (keys.len(), reclaims)
+        };
+        for skey in reclaims {
+            let _ = self.inner.spool.remove(&skey);
+        }
+        self.inner.settled.notify();
+        purged
+    }
 }
 
 fn install(
@@ -868,12 +983,14 @@ fn tier_of_state(s: EntryState) -> Tier {
     }
 }
 
-/// The background spiller: drains the LRU victim queue whenever the
-/// memory tier crosses the high watermark. One victim at a time: mark
-/// `Spilling` under the lock, write the spool file with the lock
-/// dropped, re-acquire to commit `OnDisk` (or abandon if the key moved
-/// on). `put` never pays disk latency; memory hits never wait on a
-/// spill.
+/// The background spillers: a small pool (of [`SPILLER_POOL`]) drains
+/// the LRU victim queue whenever the memory tier crosses the high
+/// watermark. One victim at a time per thread: mark `Spilling` under
+/// the lock, write the spool file with the lock dropped, re-acquire to
+/// commit `OnDisk` (or abandon if the key moved on). `put` never pays
+/// disk latency; memory hits never wait on a spill. Victim selection
+/// discounts bytes already mid-spill (`spilling_bytes`) so concurrent
+/// pool members never over-spill past the watermark overshoot.
 fn spiller_loop(inner: Arc<Inner>) {
     loop {
         let seen = inner.spill_wake.epoch();
@@ -887,7 +1004,11 @@ fn spiller_loop(inner: Arc<Inner>) {
             let mut guard = inner.index.lock().expect("tiered index poisoned");
             let idx = &mut *guard;
             let mut found = None;
-            while idx.mem_bytes > inner.cfg.mem_high_watermark {
+            // `saturating_sub`: removing a Spilling key releases its
+            // mem_bytes share before the spiller returns the
+            // spilling_bytes reserve, so the difference can transiently
+            // go negative.
+            while idx.mem_bytes.saturating_sub(idx.spilling_bytes) > inner.cfg.mem_high_watermark {
                 let Some((pos, (key, node_gen))) = idx.lru.pop_first() else {
                     break;
                 };
@@ -918,6 +1039,7 @@ fn spiller_loop(inner: Arc<Inner>) {
                 idx.seq += 1;
                 e.gen = idx.seq;
                 idx.in_flight += 1;
+                idx.spilling_bytes += e.size;
                 found = Some((
                     e.key.clone(),
                     e.gen,
@@ -936,13 +1058,29 @@ fn spiller_loop(inner: Arc<Inner>) {
         };
 
         // Tier I/O, no lock held: a slow disk stalls only this thread.
+        // A *panicking* spool (satellite fault case: the backing device
+        // dies mid-storm) is contained here and treated as a failed
+        // write — the store degrades to memory-only with backpressure
+        // instead of silently losing its spiller thread.
         let skey = spool_key(&key, gen);
-        let wrote = inner.spool.put_entry(&skey, &frame, expires_at);
+        let wrote = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            inner.spool.put_entry(&skey, &frame, expires_at)
+        }))
+        .unwrap_or_else(|_| Err(Error::Data(format!("spool write for {skey} panicked"))));
+        match &wrote {
+            Ok(()) => inner.spool_fail_streak.store(0, Ordering::Relaxed),
+            Err(_) => {
+                inner.spool_fail_streak.fetch_add(1, Ordering::Relaxed);
+            }
+        }
 
         let abandon = {
             let mut guard = inner.index.lock().expect("tiered index poisoned");
             let idx = &mut *guard;
             idx.in_flight -= 1;
+            // We marked this victim Spilling, so the mid-spill reserve
+            // is ours to return regardless of how the commit resolves.
+            idx.spilling_bytes -= size;
             match idx.entries.get_mut(&*key) {
                 Some(e) if e.gen == gen && e.state == EntryState::Spilling => match &wrote {
                     Ok(()) => {
@@ -986,7 +1124,7 @@ impl Drop for TieredStore {
     fn drop(&mut self) {
         self.inner.shutdown.store(true, Ordering::Relaxed);
         self.inner.spill_wake.notify();
-        if let Some(t) = self.spiller.take() {
+        for t in self.spillers.drain(..) {
             let _ = t.join();
         }
     }
@@ -1376,6 +1514,133 @@ mod tests {
         assert!(s.settle(SETTLE));
         assert_eq!(s.tier_of("victim"), Some(Tier::Disk));
         assert_eq!(s.get("victim", 0.0).unwrap().as_slice(), old.as_slice());
+    }
+
+    /// A spool whose writes fail on demand — the spill-backpressure
+    /// harness (reads and reclaims keep working; only new spills fail).
+    struct FlakySpool {
+        inner: DiskBackend,
+        fail: AtomicBool,
+    }
+
+    impl FlakySpool {
+        fn new(fail: bool) -> Arc<Self> {
+            Arc::new(FlakySpool {
+                inner: DiskBackend::temp().unwrap(),
+                fail: AtomicBool::new(fail),
+            })
+        }
+
+        fn set_fail(&self, fail: bool) {
+            self.fail.store(fail, Ordering::SeqCst);
+        }
+    }
+
+    impl crate::datastore::backend::StoreBackend for FlakySpool {
+        fn name(&self) -> &'static str {
+            "flaky-fake"
+        }
+        fn put(&self, key: &str, frame: &Buffer) -> Result<()> {
+            self.inner.put(key, frame)
+        }
+        fn get(&self, key: &str) -> Result<Option<Buffer>> {
+            self.inner.get(key)
+        }
+        fn remove(&self, key: &str) -> Result<bool> {
+            crate::datastore::backend::StoreBackend::remove(&self.inner, key)
+        }
+    }
+
+    impl SpoolStore for FlakySpool {
+        fn put_entry(&self, key: &str, frame: &Buffer, expires_at: Option<Time>) -> Result<()> {
+            if self.fail.load(Ordering::SeqCst) {
+                return Err(Error::Data("injected spool failure".into()));
+            }
+            self.inner.put_entry(key, frame, expires_at)
+        }
+    }
+
+    /// THE backpressure pin: a permanently failing spool bounds the
+    /// memory tier at shed_factor × watermark. Over-limit puts shed
+    /// with `Error::Overloaded` (typed, no hang, no panic), accepted
+    /// keys stay readable (degraded memory-only store), and once the
+    /// spool heals the store drains and accepts puts again.
+    #[test]
+    fn failing_spool_bounds_memory_tier_with_typed_sheds() {
+        const WM: usize = 4 << 10;
+        let spool = FlakySpool::new(true);
+        let s = TieredStore::with_spool_for_tests(
+            EndpointId::new(),
+            TieredConfig { mem_high_watermark: WM, default_ttl_s: 0.0, spool_dir: None },
+            spool.clone(),
+        )
+        .with_shed_factor(4);
+        let limit = 4 * WM;
+
+        // Fill past the watermark so the spiller attempts (and fails).
+        let mut accepted = 0usize;
+        for i in 0..8 {
+            s.put(&format!("k{i}"), frame(i as u8, 1 << 10), 0.0).unwrap();
+            accepted += 1;
+        }
+        let t0 = std::time::Instant::now();
+        while s.stats.spill_errors.load(Relaxed) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "spiller never hit the bad spool");
+            std::thread::yield_now();
+        }
+
+        // Keep putting: occupancy must stay bounded at the shed limit,
+        // with over-limit puts refused typed.
+        let mut shed = 0usize;
+        for i in 8..64 {
+            match s.put(&format!("k{i}"), frame(i as u8, 1 << 10), 0.0) {
+                Ok(_) => accepted += 1,
+                Err(Error::Overloaded(m)) => {
+                    assert!(m.contains("shed"), "{m}");
+                    shed += 1;
+                }
+                Err(other) => panic!("expected Overloaded, got {other:?}"),
+            }
+            assert!(s.mem_bytes() <= limit, "memory tier exceeded the shed limit");
+        }
+        assert!(shed > 0, "a permanently failing spool must shed eventually");
+        assert_eq!(s.stats.shed_puts.load(Relaxed), shed as u64);
+        assert_eq!(s.len(), accepted, "every accepted key is retained");
+        // Degraded mode: every accepted key is still readable.
+        for i in 0..accepted {
+            let got = s.get(&format!("k{i}"), 0.0).unwrap();
+            assert_eq!(got.as_slice(), frame(i as u8, 1 << 10).as_slice());
+        }
+        // Overwriting a resident key doesn't grow occupancy, so it is
+        // exempt from shedding even at the limit.
+        s.put("k0", frame(0xEE, 1 << 10), 0.0).unwrap();
+
+        // Heal the spool: the spiller drains back under the watermark
+        // and new puts are accepted again.
+        spool.set_fail(false);
+        s.inner.spill_wake.notify();
+        assert!(s.settle(SETTLE), "healed spool must drain the backlog");
+        assert!(s.mem_bytes() <= WM);
+        s.put("after-heal", frame(0xAA, 1 << 10), 0.0).unwrap();
+        assert_eq!(s.get("k0", 0.0).unwrap().as_slice(), frame(0xEE, 1 << 10).as_slice());
+    }
+
+    /// Decommission support: `purge_all` reaps every entry and every
+    /// committed spool artifact; `live_keys` snapshots the drain list.
+    #[test]
+    fn purge_all_reaps_entries_and_spool_files() {
+        let s = store(1 << 10);
+        s.put("mem", frame(1, 128), 0.0).unwrap();
+        s.put("disk", frame(2, 8 << 10), 0.0).unwrap(); // over watermark → spills
+        assert!(s.settle(SETTLE));
+        let mut keys = s.live_keys(0.0);
+        keys.sort();
+        assert_eq!(keys, vec!["disk".to_string(), "mem".to_string()]);
+        assert_eq!(s.purge_all(), 2);
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.mem_bytes(), 0);
+        assert!(matches!(s.get("mem", 0.0), Err(Error::NotFound(_))));
+        assert!(matches!(s.get("disk", 0.0), Err(Error::NotFound(_))));
     }
 
     /// Overwriting a key while its spill is stalled mid-write: the

@@ -151,6 +151,45 @@ fn agent_loop(link: AgentSide, mut config: AgentConfig, stats: Arc<AgentStats>) 
                 }
                 Downstream::Ping => {}
                 Downstream::Shutdown => break 'outer,
+                Downstream::Decommission => {
+                    // Orderly retirement (§4.1 churn): stop taking work,
+                    // drain the managers (flushing their buffered
+                    // results first), return everything that finished,
+                    // and sign off with Deregister — the forwarder then
+                    // requeues what we never ran and retires the
+                    // endpoint service-side (frame drain, store
+                    // withdrawal, spool GC).
+                    for (_, slot) in nodes.drain() {
+                        slot.manager.flush_results();
+                        stats
+                            .cold_starts
+                            .fetch_add(slot.manager.cold_starts(), Ordering::Relaxed);
+                        stats.warm_hits.fetch_add(slot.manager.warm_hits(), Ordering::Relaxed);
+                        by_id.remove(&slot.manager.id);
+                        slot.manager.shutdown();
+                    }
+                    let mut results = Vec::new();
+                    while let Ok(mut batch) = result_rx.try_recv() {
+                        results.append(&mut batch);
+                    }
+                    if !results.is_empty() {
+                        stats
+                            .results_returned
+                            .fetch_add(results.len() as u64, Ordering::Relaxed);
+                        link.send(Upstream::Results(results));
+                    }
+                    link.send(Upstream::Deregister);
+                    // Hold our side of the link open until the
+                    // forwarder consumes the sign-off: returning now
+                    // would sever the link and discard the queued
+                    // Results/Deregister before the peer drains them.
+                    // The forwarder drops its side once it has
+                    // processed Deregister, which ends this wait.
+                    while link.is_alive() {
+                        let _ = link.recv_timeout(Duration::from_millis(20));
+                    }
+                    return;
+                }
             }
         }
         if !link.is_alive() {

@@ -35,6 +35,12 @@ pub enum Downstream {
     Ping,
     /// Orderly shutdown.
     Shutdown,
+    /// Orderly *retirement* (§4.1 churn): the agent stops accepting
+    /// work, drains its managers, flushes buffered results, answers
+    /// with [`Upstream::Deregister`], and exits — the forwarder then
+    /// runs the service-side decommission (frame drain, store
+    /// withdrawal, fabric disconnect, spool GC).
+    Decommission,
 }
 
 impl std::fmt::Debug for Downstream {
@@ -44,6 +50,7 @@ impl std::fmt::Debug for Downstream {
             Downstream::Advertise(s) => f.debug_tuple("Advertise").field(&s.owner()).finish(),
             Downstream::Ping => f.write_str("Ping"),
             Downstream::Shutdown => f.write_str("Shutdown"),
+            Downstream::Decommission => f.write_str("Decommission"),
         }
     }
 }
@@ -57,6 +64,10 @@ pub enum Upstream {
     Advertise(Arc<TieredStore>),
     /// Periodic heartbeat (§4.1: 30 s default, configurable).
     Heartbeat { active_workers: usize, pending_tasks: usize },
+    /// Final message of a decommissioned agent: everything it was going
+    /// to send has been sent (results flushed, managers drained) and it
+    /// is exiting for good — the forwarder may retire the endpoint.
+    Deregister,
 }
 
 impl std::fmt::Debug for Upstream {
@@ -69,6 +80,7 @@ impl std::fmt::Debug for Upstream {
                 .field("active_workers", active_workers)
                 .field("pending_tasks", pending_tasks)
                 .finish(),
+            Upstream::Deregister => f.write_str("Deregister"),
         }
     }
 }

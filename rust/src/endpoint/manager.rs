@@ -454,6 +454,7 @@ mod tests {
             key: "task-input:x".into(),
             size: 64,
             checksum: 0,
+            replicas: Vec::new(),
         };
         let task = Task::new(
             FunctionId::new(),

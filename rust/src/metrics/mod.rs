@@ -170,6 +170,19 @@ pub struct Counters {
     /// stays near zero for offloaded chains — pinned in
     /// `tests/data_fabric.rs`).
     pub result_bytes_through_service: AtomicU64,
+    /// Replica copies of hot result frames pushed to peer stores (§5
+    /// survivability: a ref outlives its owner endpoint).
+    pub replicas_created: AtomicU64,
+    /// Ref resolutions that completed via a replica (or the replica
+    /// scan) after the owner's copy was unreachable — the failover half
+    /// of replication.
+    pub failover_resolutions: AtomicU64,
+    /// Puts refused by a store under spill backpressure (memory tier at
+    /// its shed limit over a persistently failing spool).
+    pub shed_puts: AtomicU64,
+    /// Frames re-homed to replica stores while decommissioning their
+    /// owner endpoint.
+    pub frames_drained: AtomicU64,
 }
 
 impl Counters {

@@ -206,6 +206,18 @@ impl Registry {
         self.state.write().unwrap().stores.remove(&id).is_some()
     }
 
+    /// Every endpoint with a standing store advertisement — the
+    /// candidate pool for frame replication and decommission re-homing.
+    pub fn advertised_stores(&self) -> Vec<(EndpointId, Arc<TieredStore>)> {
+        self.state
+            .read()
+            .unwrap()
+            .stores
+            .iter()
+            .map(|(id, s)| (*id, s.clone()))
+            .collect()
+    }
+
     // ---- containers ------------------------------------------------------
 
     pub fn register_container(&self, name: &str, tech: ContainerTech) -> ContainerId {

@@ -71,19 +71,53 @@ pub struct ManagerView {
     pub endpoint: Option<EndpointId>,
 }
 
+/// Max replica endpoints carried as routing hints (keeps `RouteHints`
+/// `Copy` for the per-task hot path; refs rarely list more).
+pub const MAX_REPLICA_HINTS: usize = 3;
+
 /// Data-locality hints for one routing decision, derived from the task
-/// being routed (today: who owns its by-ref input frame).
+/// being routed: who owns its by-ref input frame, and which endpoints
+/// hold replicas of it (§5 replication) — a replica holder is exactly
+/// as data-local as the owner, since the worker's fabric resolve is a
+/// local hit at either.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct RouteHints {
     /// Endpoint owning the task's [`crate::datastore::DataRef`] input,
     /// if the task dispatches by reference.
     pub data_owner: Option<EndpointId>,
+    /// Endpoints holding replicas of the input frame (first
+    /// [`MAX_REPLICA_HINTS`] of the ref's replica set, owner excluded).
+    pub data_replicas: [Option<EndpointId>; MAX_REPLICA_HINTS],
 }
 
 impl RouteHints {
     /// Hints for a task (the agent's per-task call site).
     pub fn for_task(task: &crate::common::task::Task) -> Self {
-        RouteHints { data_owner: task.input_ref.as_ref().map(|r| r.owner) }
+        let mut h = RouteHints {
+            data_owner: task.input_ref.as_ref().map(|r| r.owner),
+            data_replicas: [None; MAX_REPLICA_HINTS],
+        };
+        if let Some(r) = &task.input_ref {
+            for (slot, rep) in h.data_replicas.iter_mut().zip(r.replicas.iter()) {
+                *slot = Some(*rep);
+            }
+        }
+        h
+    }
+
+    /// Every endpoint where the task's input frame already lives
+    /// (owner first, then replica holders in preference order).
+    pub fn locals(&self) -> impl Iterator<Item = EndpointId> + '_ {
+        self.data_owner.into_iter().chain(self.data_replicas.iter().filter_map(|r| *r))
+    }
+
+    /// Whether a manager advertising `ep` would resolve the task's
+    /// input from its node-local store.
+    pub fn is_local(&self, ep: Option<EndpointId>) -> bool {
+        match ep {
+            Some(e) => self.locals().any(|l| l == e),
+            None => false,
+        }
     }
 }
 
@@ -349,8 +383,8 @@ impl LocalityAware {
         }
     }
 
-    fn note(&self, owner: EndpointId, picked_ep: Option<EndpointId>) {
-        if picked_ep == Some(owner) {
+    fn note(&self, hints: &RouteHints, picked_ep: Option<EndpointId>) {
+        if hints.is_local(picked_ep) {
             self.stats.local_routes.fetch_add(1, Ordering::Relaxed);
         } else {
             self.stats.remote_routes.fetch_add(1, Ordering::Relaxed);
@@ -358,19 +392,21 @@ impl LocalityAware {
     }
 
     /// The reference scan (O(M)): same tiers as [`WarmingAware::route`],
-    /// with an owner-endpoint pass *inside* each tier before the global
-    /// one. Consumes RNG exactly like the inner scan (none for container
+    /// with a data-local pass *inside* each tier before the global one.
+    /// "Local" is the hint's whole local set — the ref owner and every
+    /// replica holder rank equally; the tier key breaks ties among them.
+    /// Consumes RNG exactly like the inner scan (none for container
     /// tasks; one draw for the container-less random fallback).
     fn route_scan(
         &self,
         container: Option<ContainerId>,
-        owner: EndpointId,
+        hints: &RouteHints,
         managers: &[ManagerView],
         rng: &mut Rng,
     ) -> Option<ManagerId> {
         let prefetch = self.inner.prefetch;
         if let Some(c) = container {
-            // Tier 1: warm idle container of the type — owner-endpoint
+            // Tier 1: warm idle container of the type — data-local
             // candidates win the tier; the keys match the scan within
             // each pass, so indexed lookups reproduce this exactly.
             for local_only in [true, false] {
@@ -378,7 +414,7 @@ impl LocalityAware {
                     .iter()
                     .filter(|m| m.warm_idle.get(&c).copied().unwrap_or(0) > 0)
                     .filter(|m| m.has_capacity(prefetch))
-                    .filter(|m| !local_only || m.endpoint == Some(owner))
+                    .filter(|m| !local_only || hints.is_local(m.endpoint))
                     .max_by_key(|m| {
                         (
                             m.warm_idle.get(&c).copied().unwrap_or(0),
@@ -397,7 +433,7 @@ impl LocalityAware {
                     .iter()
                     .filter(|m| m.deployed.get(&c).copied().unwrap_or(0) > 0)
                     .filter(|m| m.has_capacity(prefetch))
-                    .filter(|m| !local_only || m.endpoint == Some(owner))
+                    .filter(|m| !local_only || hints.is_local(m.endpoint))
                     .max_by_key(|m| {
                         (
                             m.deployed.get(&c).copied().unwrap_or(0),
@@ -411,31 +447,55 @@ impl LocalityAware {
                 }
             }
             // Tier 3: the type is nowhere — every placement cold-starts,
-            // so data gravity decides: any owner-endpoint manager with
+            // so data gravity decides: any data-local manager with
             // capacity (most capacity first), then the type-consistent
             // probe.
             if let Some(m) = managers
                 .iter()
                 .filter(|m| m.has_capacity(prefetch))
-                .filter(|m| m.endpoint == Some(owner))
+                .filter(|m| hints.is_local(m.endpoint))
                 .max_by_key(|m| (m.effective_capacity(), m.id))
             {
                 return Some(m.id);
             }
             return hash_probe(c, managers, prefetch);
         }
-        // Container-less: owner-endpoint manager with the most capacity,
+        // Container-less: data-local manager with the most capacity,
         // else the inner policy's random fallback (one RNG draw).
         if let Some(m) = managers
             .iter()
             .filter(|m| m.has_capacity(prefetch))
-            .filter(|m| m.endpoint == Some(owner))
+            .filter(|m| hints.is_local(m.endpoint))
             .max_by_key(|m| (m.effective_capacity(), m.id))
         {
             return Some(m.id);
         }
         random_with_capacity(managers, prefetch, rng)
     }
+}
+
+/// Max over the hint's local endpoints (owner + replica holders) of
+/// each per-endpoint index's best candidate, compared under the tier's
+/// own ordering key recomputed from the view: the indexed analogue of
+/// the scan's `hints.is_local` pass, still O(R log M) with R bounded by
+/// [`MAX_REPLICA_HINTS`] + 1. A single-endpoint hint degenerates to the
+/// plain owner-index lookup.
+fn best_over_locals<K: Ord>(
+    table: &RoutingTable,
+    hints: &RouteHints,
+    mut pick: impl FnMut(EndpointId) -> Option<ManagerId>,
+    mut key: impl FnMut(&ManagerView) -> K,
+) -> Option<ManagerId> {
+    let mut best: Option<(K, ManagerId)> = None;
+    for ep in hints.locals() {
+        let Some(id) = pick(ep) else { continue };
+        let Some(v) = table.view(id) else { continue };
+        let k = key(v);
+        if best.as_ref().map_or(true, |(bk, _)| k > *bk) {
+            best = Some((k, id));
+        }
+    }
+    best.map(|(_, id)| id)
 }
 
 impl Scheduler for LocalityAware {
@@ -476,13 +536,13 @@ impl Scheduler for LocalityAware {
         managers: &[ManagerView],
         rng: &mut Rng,
     ) -> Option<ManagerId> {
-        let Some(owner) = hints.data_owner else {
+        if hints.data_owner.is_none() {
             return self.inner.route(container, managers, rng);
-        };
-        let picked = self.route_scan(container, owner, managers, rng);
+        }
+        let picked = self.route_scan(container, &hints, managers, rng);
         if let Some(id) = picked {
             let ep = managers.iter().find(|m| m.id == id).and_then(|m| m.endpoint);
-            self.note(owner, ep);
+            self.note(&hints, ep);
         }
         picked
     }
@@ -497,9 +557,9 @@ impl Scheduler for LocalityAware {
         table: &RoutingTable,
         rng: &mut Rng,
     ) -> Option<ManagerId> {
-        let Some(owner) = hints.data_owner else {
+        if hints.data_owner.is_none() {
             return self.inner.route_indexed(container, table, rng);
-        };
+        }
         debug_assert_eq!(
             table.prefetch(),
             self.inner.prefetch,
@@ -509,26 +569,60 @@ impl Scheduler for LocalityAware {
         let picked = if let Some(c) = container {
             if !table.any_capacity() {
                 None
-            } else if let Some(m) = table.best_warm_local(owner, c) {
+            } else if let Some(m) = best_over_locals(
+                table,
+                &hints,
+                |ep| table.best_warm_local(ep, c),
+                |v| {
+                    (
+                        v.warm_idle.get(&c).copied().unwrap_or(0),
+                        v.effective_capacity(),
+                        Reverse(v.queued),
+                        v.id,
+                    )
+                },
+            ) {
                 Some(m)
             } else if let Some(m) = table.best_warm(c) {
                 Some(m)
-            } else if let Some(m) = table.best_deployed_local(owner, c) {
+            } else if let Some(m) = best_over_locals(
+                table,
+                &hints,
+                |ep| table.best_deployed_local(ep, c),
+                |v| {
+                    (
+                        v.deployed.get(&c).copied().unwrap_or(0),
+                        v.effective_capacity(),
+                        type_salt(c, v.id),
+                        v.id,
+                    )
+                },
+            ) {
                 Some(m)
             } else if let Some(m) = table.best_deployed(c) {
                 Some(m)
-            } else if let Some(m) = table.max_capacity_local(owner) {
+            } else if let Some(m) = best_over_locals(
+                table,
+                &hints,
+                |ep| table.max_capacity_local(ep),
+                |v| (v.effective_capacity(), v.id),
+            ) {
                 Some(m)
             } else {
                 hash_probe(c, table.views(), prefetch)
             }
-        } else if let Some(m) = table.max_capacity_local(owner) {
+        } else if let Some(m) = best_over_locals(
+            table,
+            &hints,
+            |ep| table.max_capacity_local(ep),
+            |v| (v.effective_capacity(), v.id),
+        ) {
             Some(m)
         } else {
             random_with_capacity(table.views(), prefetch, rng)
         };
         if let Some(id) = picked {
-            self.note(owner, table.view(id).and_then(|v| v.endpoint));
+            self.note(&hints, table.view(id).and_then(|v| v.endpoint));
         }
         picked
     }
@@ -1177,7 +1271,7 @@ mod tests {
     #[test]
     fn locality_prefers_owner_endpoint_within_a_tier() {
         let owner = EndpointId::from_bits(9);
-        let hints = RouteHints { data_owner: Some(owner) };
+        let hints = RouteHints { data_owner: Some(owner), ..Default::default() };
         // Both managers have warm type-7 and capacity; manager 1 is on
         // the owner endpoint, manager 2 (more capacity) is not: the
         // warming tiers tie, so locality decides.
@@ -1206,7 +1300,7 @@ mod tests {
     #[test]
     fn locality_never_trades_warmth_for_distance() {
         let owner = EndpointId::from_bits(9);
-        let hints = RouteHints { data_owner: Some(owner) };
+        let hints = RouteHints { data_owner: Some(owner), ..Default::default() };
         // Only the remote manager has the warm container: warmth wins
         // the tier, locality does not override it.
         let managers = vec![on_ep(mgr(1, &[], 5, 10), 9), on_ep(mgr(2, &[(7, 1)], 5, 10), 5)];
@@ -1225,7 +1319,7 @@ mod tests {
     #[test]
     fn locality_routes_containerless_tasks_to_the_data() {
         let owner = EndpointId::from_bits(9);
-        let hints = RouteHints { data_owner: Some(owner) };
+        let hints = RouteHints { data_owner: Some(owner), ..Default::default() };
         let managers = vec![
             on_ep(mgr(1, &[], 3, 10), 9),
             on_ep(mgr(2, &[], 9, 10), 5),
@@ -1257,6 +1351,38 @@ mod tests {
         );
         assert_eq!(s.stats.local_routes.load(Ordering::Relaxed), 2);
         assert_eq!(s.stats.remote_routes.load(Ordering::Relaxed), 1);
+    }
+
+    /// Replica holders count as data-local (§5 replication): with the
+    /// owner's endpoint saturated, a manager on a replica holder beats
+    /// the globally freest manager — and the pick is noted as a local
+    /// route, on both the scan and the indexed path.
+    #[test]
+    fn locality_treats_replica_holders_as_local() {
+        let owner = EndpointId::from_bits(9);
+        let replica = EndpointId::from_bits(4);
+        let hints = RouteHints {
+            data_owner: Some(owner),
+            data_replicas: [Some(replica), None, None],
+        };
+        let managers = vec![
+            on_ep(mgr(1, &[], 0, 10), 9), // owner endpoint, drained
+            on_ep(mgr(2, &[], 9, 10), 5), // freest, but data-remote
+            on_ep(mgr(3, &[], 5, 10), 4), // replica holder
+        ];
+        let table = RoutingTable::with_views(0, managers.clone());
+        let mut s = LocalityAware::new(0);
+        let mut rng = Rng::new(4);
+        assert_eq!(
+            s.route_hinted(None, hints, &managers, &mut rng),
+            Some(ManagerId::from_bits(3))
+        );
+        assert_eq!(
+            s.route_hinted_indexed(None, hints, &table, &mut rng),
+            Some(ManagerId::from_bits(3))
+        );
+        assert_eq!(s.stats.local_routes.load(Ordering::Relaxed), 2);
+        assert_eq!(s.stats.remote_routes.load(Ordering::Relaxed), 0);
     }
 
     #[test]
@@ -1558,6 +1684,14 @@ mod proptests {
                 for owner in [0u128, 1, 2, 3, 7] {
                     let hints = RouteHints {
                         data_owner: (owner > 0).then(|| EndpointId::from_bits(owner)),
+                        // Endpoint 2 doubles as a replica holder, 9 is
+                        // advertised by nobody: the indexed path must
+                        // agree with the scan on multi-local hints too.
+                        data_replicas: [
+                            (owner > 0).then(|| EndpointId::from_bits(2)),
+                            (owner > 0).then(|| EndpointId::from_bits(9)),
+                            None,
+                        ],
                     };
                     for t in 0..6u128 {
                         let c = if t == 0 { None } else { Some(ContainerId::from_bits(t)) };

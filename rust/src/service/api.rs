@@ -100,15 +100,18 @@ fn build_fabric(cfg: &ServiceConfig, clock: Arc<dyn Clock>) -> Arc<DataFabric> {
 impl FuncXService {
     pub fn new(cfg: ServiceConfig) -> Self {
         let clock: Arc<dyn Clock> = Arc::new(WallClock::new());
+        let counters = Counters::new();
+        let fabric = build_fabric(&cfg, clock.clone());
+        fabric.with_counters(counters.clone());
         FuncXService {
             auth: AuthService::new(),
             registry: Registry::new(),
             kv: KvStore::new(),
-            fabric: build_fabric(&cfg, clock.clone()),
+            fabric,
             cfg,
             clock,
             latency: Arc::new(LatencyBreakdown::new()),
-            counters: Counters::new(),
+            counters,
             result_notify: Arc::new(Notify::new()),
             offloaded: Arc::new(Mutex::new(HashSet::new())),
             consumed: Arc::new(Mutex::new(HashMap::new())),
@@ -122,6 +125,7 @@ impl FuncXService {
     pub fn with_clock(mut self, clock: Arc<dyn Clock>) -> Self {
         self.clock = clock;
         self.fabric = build_fabric(&self.cfg, self.clock.clone());
+        self.fabric.with_counters(self.counters.clone());
         self
     }
 
@@ -498,6 +502,14 @@ impl FuncXService {
 
     pub(crate) fn store_result(&self, r: &TaskResult) {
         let now = self.clock.now();
+        // Replication (§5 survivability): before the record is
+        // persisted, copies of a by-ref result frame are pushed to
+        // other advertised stores and the replica set is recorded on
+        // the stored ref — everything downstream (retrieval, chain
+        // forwarding, routing hints) then knows where to fail over if
+        // the owner dies. No-op unless `replication_factor` is set.
+        let replicated = self.replicate_result(r, now);
+        let r = replicated.as_ref().unwrap_or(r);
         self.kv.set_ex(
             &format!("result:{}", r.task),
             r.to_buffer(),
@@ -545,6 +557,16 @@ impl FuncXService {
                 if self.fabric.reclaim(&cref) {
                     crate::metrics::Counters::incr(&self.counters.result_frames_reclaimed);
                 }
+                // Replica copies of the reclaimed frame die with it
+                // instead of lingering in peer stores until TTL.
+                if !cref.replicas.is_empty() {
+                    let rkey = cref.replica_key();
+                    for (ep, store) in self.registry.advertised_stores() {
+                        if cref.replicas.contains(&ep) {
+                            let _ = store.remove(&rkey);
+                        }
+                    }
+                }
                 // The producing task's stored record now points at
                 // reclaimed bytes; purge it so a later get_result on
                 // the producer reports "purged" (consumed by the
@@ -571,6 +593,48 @@ impl FuncXService {
             crate::metrics::Counters::incr(&self.counters.warm_hits);
         }
         self.result_notify.notify();
+    }
+
+    /// Push up to `replication_factor` copies of a successful by-ref
+    /// result frame into *other* registry-advertised stores, under the
+    /// ref's [`DataRef::replica_key`]. Returns a rewritten result whose
+    /// `output_ref` lists the endpoints now holding copies, or `None`
+    /// when nothing was replicated (factor 0, inline result,
+    /// already-replicated ref, unresolvable frame, or no peer stores).
+    fn replicate_result(&self, r: &TaskResult, now: Time) -> Option<TaskResult> {
+        if self.cfg.replication_factor == 0 || r.state != TaskState::Success {
+            return None;
+        }
+        let dref = r.output_ref.as_ref()?;
+        if !dref.replicas.is_empty() {
+            return None;
+        }
+        // Pull the frame through the fabric ladder (peer-forwarded from
+        // the owner's store; a per-frame cost paid once, off the inline
+        // result path — the record itself still carries zero bytes).
+        let frame = self.fabric.resolve(dref, now).ok()?;
+        let rkey = dref.replica_key();
+        let mut holders = Vec::new();
+        for (ep, store) in self.registry.advertised_stores() {
+            if holders.len() >= self.cfg.replication_factor {
+                break;
+            }
+            if ep == dref.owner {
+                continue;
+            }
+            if store.put_with_ttl(&rkey, frame.clone(), Some(self.cfg.result_ttl_s), now).is_ok() {
+                crate::metrics::Counters::incr(&self.counters.replicas_created);
+                holders.push(ep);
+            }
+        }
+        if holders.is_empty() {
+            return None;
+        }
+        let mut out = r.clone();
+        let mut dref = dref.clone();
+        dref.replicas = holders;
+        out.output_ref = Some(dref);
+        Some(out)
     }
 
     /// Periodic housekeeping: purge expired results (§4.1) and sweep
@@ -628,6 +692,65 @@ impl FuncXService {
             self.fabric.connect_peer(store.owner(), store);
         }
         Ok(crate::service::forwarder::spawn(self.clone(), endpoint, link))
+    }
+
+    /// Decommission an endpoint (§4.1 under churn): the graceful
+    /// retirement path [`crate::registry::Registry::withdraw_store`]
+    /// was built for. Live frames the endpoint's advertised store owns
+    /// are re-homed to other advertised stores under their replica
+    /// keys — in-flight refs minted against this owner keep resolving
+    /// via the fabric's replica failover — then the advertisement is
+    /// withdrawn, the service fabric drops its peer link, the spool is
+    /// GC'd, and the endpoint is marked Offline. Returns the number of
+    /// frames re-homed.
+    pub fn decommission_endpoint(&self, endpoint: EndpointId) -> Result<usize> {
+        let now = self.clock.now();
+        let store = self.registry.advertised_store(endpoint);
+        let mut drained = 0usize;
+        if let Some(store) = &store {
+            let targets: Vec<_> = self
+                .registry
+                .advertised_stores()
+                .into_iter()
+                .filter(|(ep, _)| *ep != endpoint)
+                .collect();
+            let copies = self.cfg.replication_factor.max(1);
+            for key in store.live_keys(now) {
+                // Replica copies this store held for *other* owners are
+                // not re-homed: their owner (or its remaining replicas)
+                // still serves them.
+                if key.starts_with("replica:") {
+                    continue;
+                }
+                let Ok(frame) = store.get(&key, now) else { continue };
+                let dref = DataRef {
+                    owner: store.owner(),
+                    epoch: store.epoch(),
+                    key: key.clone(),
+                    size: frame.len() as u64,
+                    checksum: crate::datastore::checksum(frame.as_slice()),
+                    replicas: Vec::new(),
+                };
+                let rkey = dref.replica_key();
+                let mut placed = false;
+                for (_, target) in targets.iter().take(copies) {
+                    placed |= target
+                        .put_with_ttl(&rkey, frame.clone(), Some(self.cfg.result_ttl_s), now)
+                        .is_ok();
+                }
+                if placed {
+                    drained += 1;
+                    crate::metrics::Counters::incr(&self.counters.frames_drained);
+                }
+            }
+        }
+        self.registry.withdraw_store(endpoint);
+        self.fabric.disconnect_peer(endpoint);
+        if let Some(store) = &store {
+            store.purge_all();
+        }
+        self.registry.set_endpoint_status(endpoint, EndpointStatus::Offline)?;
+        Ok(drained)
     }
 
     /// A ready-to-use admin identity + all-scope token (dev/test setup).
@@ -860,6 +983,7 @@ mod tests {
             key: "task-result:gone".into(),
             size: 64,
             checksum: 0,
+            replicas: Vec::new(),
         };
         let tr = TaskResult {
             task: r.task,
@@ -909,5 +1033,84 @@ mod tests {
             Err(Error::TaskFailed(m)) => assert_eq!(m, "boom"),
             other => panic!("unexpected {other:?}"),
         }
+    }
+
+    #[test]
+    fn replicated_result_fails_over_after_owner_death() {
+        let s = FuncXService::new(ServiceConfig {
+            replication_factor: 1,
+            ..ServiceConfig::default()
+        });
+        let (_u, tok) = s.bootstrap_user("alice");
+        let f = s.register_function(&tok, "noop", Payload::Noop, None).unwrap();
+        let e1 = s.register_endpoint(&tok, "owner", "dies before retrieval").unwrap();
+        let e2 = s.register_endpoint(&tok, "holder", "keeps the replica").unwrap();
+        let store1 = Arc::new(TieredStore::new(e1, TieredConfig::default()).unwrap());
+        let store2 = Arc::new(TieredStore::new(e2, TieredConfig::default()).unwrap());
+        for (ep, st) in [(e1, &store1), (e2, &store2)] {
+            s.registry.advertise_store(ep, st.clone());
+            s.fabric.connect_peer(ep, st.clone());
+        }
+        let r = s.submit(&tok, f, e1, &Value::Null).unwrap();
+        let out = Value::Bytes(vec![0x5A; 48 * 1024]);
+        let frame = pack(&out, 0).unwrap();
+        let dref = store1.put(&format!("task-result:{}", r.task), frame, 0.0).unwrap();
+        s.store_result(&TaskResult {
+            task: r.task,
+            state: TaskState::Success,
+            output: crate::serialize::Buffer::empty(),
+            output_ref: Some(dref.clone()),
+            exec_time_s: 0.0,
+            cold_start: false,
+        });
+        // The stored record's ref lists the replica holder and the copy
+        // really landed in e2's store under the replica key.
+        let stored = s.peek_result(r.task).unwrap().unwrap().output_ref.unwrap();
+        assert_eq!(stored.replicas, vec![e2]);
+        assert_eq!(crate::metrics::Counters::get(&s.counters.replicas_created), 1);
+        assert!(store2.get(&dref.replica_key(), s.clock.now()).is_ok());
+        // Owner dies before retrieval: sever its peer link and drop the
+        // fabric's cached copy (reclaim leaves the replica alone).
+        s.fabric.disconnect_peer(e1);
+        s.fabric.reclaim(&dref);
+        drop(store1);
+        assert_eq!(s.get_result(r.task).unwrap(), Some(out));
+        assert!(
+            crate::metrics::Counters::get(&s.counters.failover_resolutions) >= 1,
+            "retrieval after owner death must count a failover resolution"
+        );
+        // Still zero inline result bytes: failover stays by-reference.
+        assert_eq!(
+            crate::metrics::Counters::get(&s.counters.result_bytes_through_service),
+            0
+        );
+    }
+
+    #[test]
+    fn decommission_rehomes_frames_and_clears_advertisement() {
+        let (s, tok, _f, e) = svc();
+        let e2 = s.register_endpoint(&tok, "survivor", "takes the drain").unwrap();
+        let store = Arc::new(TieredStore::new(e, TieredConfig::default()).unwrap());
+        let store2 = Arc::new(TieredStore::new(e2, TieredConfig::default()).unwrap());
+        for (ep, st) in [(e, &store), (e2, &store2)] {
+            s.registry.advertise_store(ep, st.clone());
+            s.fabric.connect_peer(ep, st.clone());
+        }
+        let frame = pack(&Value::Bytes(vec![0x11; 8 * 1024]), 0).unwrap();
+        let dref = store.put("task-result:keep", frame.clone(), 0.0).unwrap();
+        // A replica copy this store held for some other owner is NOT
+        // re-homed — its owner still serves it.
+        store.put("replica:someone:1:other", pack(&Value::Int(1), 0).unwrap(), 0.0).unwrap();
+        assert_eq!(s.decommission_endpoint(e).unwrap(), 1);
+        // Advertisement withdrawn, spool GC'd, endpoint offline.
+        assert!(s.registry.advertised_store(e).is_none());
+        assert!(store.is_empty(), "purge_all reaps every entry");
+        assert_eq!(s.registry.endpoint(e).unwrap().status, EndpointStatus::Offline);
+        assert_eq!(crate::metrics::Counters::get(&s.counters.frames_drained), 1);
+        // The re-homed frame keeps serving the in-flight ref via the
+        // fabric's replica scan.
+        let got = s.fabric.resolve(&dref, s.clock.now()).unwrap();
+        assert_eq!(got.as_slice(), frame.as_slice());
+        assert!(crate::metrics::Counters::get(&s.counters.failover_resolutions) >= 1);
     }
 }

@@ -45,6 +45,7 @@ pub struct ForwarderStats {
 pub struct ForwarderHandle {
     pub stats: Arc<ForwarderStats>,
     stop: Arc<AtomicBool>,
+    decommission: Arc<AtomicBool>,
     wake: Arc<crate::common::sync::Notify>,
     thread: Option<JoinHandle<()>>,
 }
@@ -54,6 +55,19 @@ impl ForwarderHandle {
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Relaxed);
         self.wake.notify(); // pull the loop out of its blocking wait
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+
+    /// Retire the endpoint gracefully (§4.1 churn): ask the agent to
+    /// drain and deregister, run the service-side decommission (frame
+    /// drain to replicas, store withdrawal, fabric disconnect, spool
+    /// GC, Offline) once it signs off, and join. Tasks the agent never
+    /// finished are requeued for whichever endpoint reconnects.
+    pub fn decommission(mut self) {
+        self.decommission.store(true, Ordering::Relaxed);
+        self.wake.notify();
         if let Some(t) = self.thread.take() {
             let _ = t.join();
         }
@@ -75,14 +89,16 @@ pub(crate) fn spawn(
 ) -> ForwarderHandle {
     let stats = Arc::new(ForwarderStats::default());
     let stop = Arc::new(AtomicBool::new(false));
+    let decommission = Arc::new(AtomicBool::new(false));
     let wake = link.wake_handle();
     let st = stats.clone();
     let sp = stop.clone();
+    let dc = decommission.clone();
     let thread = std::thread::Builder::new()
         .name(format!("funcx-forwarder-{endpoint}"))
-        .spawn(move || forwarder_loop(svc, endpoint, link, st, sp))
+        .spawn(move || forwarder_loop(svc, endpoint, link, st, sp, dc))
         .expect("spawn forwarder");
-    ForwarderHandle { stats, stop, wake, thread: Some(thread) }
+    ForwarderHandle { stats, stop, decommission, wake, thread: Some(thread) }
 }
 
 fn forwarder_loop(
@@ -91,6 +107,7 @@ fn forwarder_loop(
     link: ForwarderSide,
     stats: Arc<ForwarderStats>,
     stop: Arc<AtomicBool>,
+    decommission: Arc<AtomicBool>,
 ) {
     let queue = svc.task_queue(endpoint);
     // One latch, three wake sources: upstream link traffic (wired in by
@@ -109,6 +126,9 @@ fn forwarder_loop(
     // Per-task re-dispatch counts.
     let mut redispatches: HashMap<TaskId, u32> = HashMap::new();
     let mut last_heartbeat = svc.clock.now();
+    // Decommission request relayed downstream (sent once); dispatch is
+    // fenced while we wait for the agent's Deregister sign-off.
+    let mut decommission_sent = false;
 
     loop {
         // Epoch snapshot before EVERY check below — including stop: a
@@ -118,6 +138,10 @@ fn forwarder_loop(
         if stop.load(Ordering::Relaxed) {
             let _ = link.send(Downstream::Shutdown);
             break;
+        }
+        if decommission.load(Ordering::Relaxed) && !decommission_sent {
+            decommission_sent = true;
+            let _ = link.send(Downstream::Decommission);
         }
         let mut progressed = false;
         let now = svc.clock.now();
@@ -158,8 +182,11 @@ fn forwarder_loop(
         // always-true `batch_is_empty_hint` made the loop sleep 500 µs
         // even after dispatching a *full* batch; now a non-empty batch
         // counts as progress and the loop re-runs immediately.)
-        let batch: Vec<Arc<Task>> =
-            queue.pop_n(64).unwrap_or_default().into_iter().map(Arc::new).collect();
+        let batch: Vec<Arc<Task>> = if decommission_sent {
+            Vec::new() // retiring: queued tasks wait for a successor endpoint
+        } else {
+            queue.pop_n(64).unwrap_or_default().into_iter().map(Arc::new).collect()
+        };
         if !batch.is_empty() {
             progressed = true;
             let now = svc.clock.now();
@@ -206,6 +233,22 @@ fn forwarder_loop(
                     last_heartbeat = svc.clock.now();
                     stats.heartbeats.fetch_add(1, Ordering::Relaxed);
                     crate::metrics::Counters::incr(&svc.counters.heartbeats);
+                }
+                Upstream::Deregister => {
+                    // Orderly retirement: everything the agent will ever
+                    // send has arrived (results precede Deregister in
+                    // FIFO order). Requeue what it never finished, then
+                    // run the service-side decommission — frame drain to
+                    // replicas, advertisement withdrawal, fabric
+                    // disconnect, spool GC, Offline.
+                    for (id, task) in in_flight.drain() {
+                        redispatches.remove(&id);
+                        let _ = queue.push_front(task.as_ref());
+                        svc.set_state(id, TaskState::WaitingForEndpoint);
+                        stats.requeued.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let _ = svc.decommission_endpoint(endpoint);
+                    return;
                 }
             }
         }
@@ -345,6 +388,47 @@ mod tests {
         assert_eq!(fh.stats.results.load(Ordering::Relaxed), 301);
         fh.shutdown();
         handle.join();
+    }
+
+    /// Graceful retirement end to end: the agent drains and signs off
+    /// with Deregister; the forwarder runs the service-side
+    /// decommission — advertisement withdrawn, spool GC'd, endpoint
+    /// Offline — and both threads exit.
+    #[test]
+    fn decommission_retires_endpoint_cleanly() {
+        use crate::datastore::{DataFabric, TieredConfig, TieredStore};
+        let svc = FuncXService::new(ServiceConfig::default());
+        let (_u, tok) = svc.bootstrap_user("alice");
+        let f = svc.register_function(&tok, "echo", Payload::Echo, None).unwrap();
+        let e = svc.register_endpoint(&tok, "retiring", "").unwrap();
+
+        let store = Arc::new(TieredStore::new(e, TieredConfig::default()).unwrap());
+        let fabric = Arc::new(DataFabric::new(store.clone()));
+        let (fwd_side, agent_side) = link();
+        let handle = EndpointBuilder::new()
+            .config(EndpointConfig { min_nodes: 1, workers_per_node: 2, ..Default::default() })
+            .fabric(fabric)
+            .heartbeat_period(0.05)
+            .start(agent_side);
+        let fh = svc.connect_endpoint(e, fwd_side).unwrap();
+
+        let input = Value::map([("x", Value::Int(7))]);
+        let r = svc.submit(&tok, f, e, &input).unwrap();
+        assert_eq!(svc.wait_result(r.task, Duration::from_secs(10)).unwrap(), input);
+        // The agent advertised its store on connect.
+        assert!(svc.registry.advertised_store(e).is_some());
+        // Park a frame in the endpoint store so decommission has
+        // something to GC (no peers are advertised, so it cannot be
+        // re-homed — the spool must still come out clean).
+        store
+            .put("task-result:leftover", crate::serialize::Buffer::from_vec(vec![9; 2048]), 0.0)
+            .unwrap();
+
+        fh.decommission();
+        handle.join();
+        assert_eq!(svc.registry.endpoint(e).unwrap().status, EndpointStatus::Offline);
+        assert!(svc.registry.advertised_store(e).is_none(), "advertisement withdrawn");
+        assert!(store.is_empty(), "decommission GCs the retired store");
     }
 
     /// 200-task smoke through the full stack with 4 workers.

@@ -87,6 +87,13 @@ pub struct SimReport {
     pub mean_latency_s: f64,
     /// Achieved throughput, tasks/s.
     pub throughput: f64,
+    /// Replica copies pushed for by-ref outputs (§5 survivability;
+    /// `replication × by-ref results`). Replication is asynchronous —
+    /// it never extends the makespan — so the cost is reported as
+    /// background store traffic, not completion time.
+    pub replica_pushes: u64,
+    /// Bytes of background store traffic those pushes consumed.
+    pub replica_bytes: u64,
 }
 
 struct SimManager {
@@ -112,6 +119,12 @@ pub struct SimEndpoint {
     deterministic_cold: bool,
     /// Manager-side warm matching (from the scheduler; §6.2).
     warm_match: bool,
+    /// Replica copies pushed per by-ref result (§5 survivability).
+    /// Replication is asynchronous (service-side, fabric-to-fabric), so
+    /// it contributes background store traffic — accounted in
+    /// [`SimReport`] — without occupying the serial agent wire or the
+    /// task's critical path.
+    replication: usize,
 }
 
 /// The simulator's deterministic manager ids: index `i` ↔ bits `i + 1`.
@@ -165,12 +178,21 @@ impl SimEndpoint {
             rng: Rng::new(seed),
             deterministic_cold: false,
             warm_match,
+            replication: 0,
         }
     }
 
     /// Use deterministic (mean) cold-start costs.
     pub fn deterministic_cold(mut self, on: bool) -> Self {
         self.deterministic_cold = on;
+        self
+    }
+
+    /// Push `copies` replica copies of every by-ref result (§5
+    /// survivability). Asynchronous in the live system, so the sim
+    /// charges store traffic, not wire or completion time.
+    pub fn with_replication(mut self, copies: usize) -> Self {
+        self.replication = copies;
         self
     }
 
@@ -209,6 +231,10 @@ impl SimEndpoint {
         // the next dispatch drains it (by-ref outputs contribute a ref
         // frame; inline ones their full payload — §5 result offload).
         let mut result_wire_backlog: f64 = 0.0;
+        // §5 survivability accounting: replica copies of by-ref results
+        // (background store traffic, off the wire and the makespan).
+        let mut replica_pushes: u64 = 0;
+        let mut replica_bytes: u64 = 0;
         // Per-task dispatch cost: serial agent loop; unbatched dispatch
         // pays a request RTT per task (§7.5).
         let dispatch_cost = if self.batching {
@@ -440,6 +466,13 @@ impl SimEndpoint {
                     // is off the endpoint.
                     let out_b = tasks[task].output_bytes;
                     let up_bytes = if out_b > self.profile.ref_threshold_bytes {
+                        // By-ref result: the service pushes replica
+                        // copies to peer stores asynchronously, off the
+                        // critical path (the live-stack pin is the
+                        // `chain_survives_ref_owner_death_via_replica`
+                        // test; here only the traffic is accounted).
+                        replica_pushes += self.replication as u64;
+                        replica_bytes += self.replication as u64 * out_b;
                         REF_FRAME_BYTES
                     } else {
                         out_b
@@ -474,6 +507,8 @@ impl SimEndpoint {
             evictions: evict,
             mean_latency_s: completions.iter().sum::<f64>() / tasks.len().max(1) as f64,
             throughput: tasks.len() as f64 / completion_s.max(1e-9),
+            replica_pushes,
+            replica_bytes,
         }
     }
 
@@ -694,6 +729,47 @@ mod tests {
             inline > by_ref + 0.05,
             "inline chain {inline}s must trail ref-forwarded {by_ref}s"
         );
+    }
+
+    /// §5 survivability: replication of by-ref results is asynchronous,
+    /// so it must not move the makespan at all — its cost is the
+    /// accounted background store traffic (copies × output bytes).
+    #[test]
+    fn replication_stays_off_the_critical_path() {
+        let mb64: u64 = 64 * 1024 * 1024;
+        let tasks: Vec<SimTask> =
+            (0..50).map(|_| SimTask::noop().with_output_bytes(mb64)).collect();
+        let run = |copies: usize| {
+            let mut ep =
+                SimEndpoint::new(SimProfile::theta(), 2, Box::new(WarmingAware::default()), true, 5)
+                    .deterministic_cold(true)
+                    .with_replication(copies);
+            ep.prewarm(&[ContainerId(crate::Uuid::NIL)]);
+            ep.run(&tasks)
+        };
+        let bare = run(0);
+        let replicated = run(2);
+        assert_eq!(bare.completion_s, replicated.completion_s, "replication is async");
+        assert_eq!(bare.replica_pushes, 0);
+        assert_eq!(bare.replica_bytes, 0);
+        assert_eq!(replicated.replica_pushes, 100, "2 copies × 50 by-ref results");
+        assert_eq!(replicated.replica_bytes, 100 * mb64);
+        // Inline (small) outputs are never replicated: nothing to
+        // survive — the bytes returned through the service.
+        let small = {
+            let mut ep = SimEndpoint::new(
+                SimProfile::theta(),
+                2,
+                Box::new(WarmingAware::default()),
+                true,
+                5,
+            )
+            .deterministic_cold(true)
+            .with_replication(2);
+            ep.prewarm(&[ContainerId(crate::Uuid::NIL)]);
+            ep.run(&vec![SimTask::noop().with_output_bytes(256); 50])
+        };
+        assert_eq!(small.replica_pushes, 0);
     }
 
     #[test]

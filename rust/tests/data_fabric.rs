@@ -19,6 +19,13 @@ use funcx::serialize::{pack, Value};
 use funcx::service::FuncXService;
 use funcx::transfer::TransferService;
 
+/// Seed for CI's churn kill-matrix: perturbs payload sizes so each
+/// matrix leg drives the same kill sequence through different frame
+/// shapes. Defaults to 0 under plain `cargo test`.
+fn chaos_seed() -> usize {
+    std::env::var("FUNCX_CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0)
+}
+
 /// Tier round-trip acceptance pin: a frame that spills to the disk tier
 /// reloads byte-identical (same checksum, same packed-frame bytes), and
 /// a memory-tier hit is pointer-identical to the stored frame — zero
@@ -203,6 +210,119 @@ fn three_task_chain_forwards_refs_and_routes_to_the_data() {
 
     fh.shutdown();
     handle.join();
+}
+
+/// THE churn acceptance pin (§4.1 + §5 survivability): the ref-owner
+/// endpoint is killed mid A→B→C chain with replication enabled. The
+/// chain still completes — B's input fails over to the replica copy the
+/// service pushed to the surviving endpoint when A's result was stored
+/// — with zero payload bytes ever transiting the service inline, and
+/// the failover observable in the shared counters.
+#[test]
+fn chain_survives_ref_owner_death_via_replica() {
+    let clock = Arc::new(WallClock::new());
+    let svc = FuncXService::new(ServiceConfig {
+        max_payload_bytes: 4096,
+        replication_factor: 2,
+        ..Default::default()
+    })
+    .with_clock(clock.clone());
+    let (_u, tok) = svc.bootstrap_user("alice");
+    let f = svc.register_function(&tok, "echo", Payload::Echo, None).unwrap();
+    let e1 = svc.register_endpoint(&tok, "doomed", "").unwrap();
+    let e2 = svc.register_endpoint(&tok, "survivor", "").unwrap();
+
+    // The doomed ref owner.
+    let store1 = Arc::new(TieredStore::new(e1, TieredConfig::default()).unwrap());
+    let (fwd1, agent1) = link();
+    let h1 = EndpointBuilder::new()
+        .config(EndpointConfig {
+            min_nodes: 1,
+            workers_per_node: 1,
+            max_result_bytes: 4096, // force results by-ref
+            ..Default::default()
+        })
+        .fabric(Arc::new(DataFabric::new(store1.clone())))
+        .clock(clock.clone())
+        .heartbeat_period(0.05)
+        .start(agent1);
+    let fh1 = svc.connect_endpoint(e1, fwd1).unwrap();
+
+    // The survivor, sharing the service's metrics sink so its failover
+    // resolutions land in the same counters a deployment would scrape.
+    let store2 = Arc::new(TieredStore::new(e2, TieredConfig::default()).unwrap());
+    let fabric2 = Arc::new(DataFabric::new(store2.clone()));
+    fabric2.with_counters(svc.counters.clone());
+    let scheduler = LocalityAware::new(0);
+    let route_stats = scheduler.stats.clone();
+    let (fwd2, agent2) = link();
+    let h2 = EndpointBuilder::new()
+        .config(EndpointConfig {
+            min_nodes: 1,
+            workers_per_node: 2,
+            max_result_bytes: 4096,
+            ..Default::default()
+        })
+        .fabric(fabric2.clone())
+        .scheduler(Box::new(scheduler))
+        .clock(clock)
+        .heartbeat_period(0.05)
+        .start(agent2);
+    let fh2 = svc.connect_endpoint(e2, fwd2).unwrap();
+
+    // Replication needs the survivor's store advertised before A's
+    // result lands.
+    let t0 = std::time::Instant::now();
+    while svc.registry.advertised_store(e1).is_none()
+        || svc.registry.advertised_store(e2).is_none()
+    {
+        assert!(t0.elapsed() < Duration::from_secs(5), "advertisements must arrive");
+        std::thread::yield_now();
+    }
+
+    // A on the doomed endpoint: its ~256 KB result is offloaded into
+    // store1 and replicated to the survivor at store-result time. The
+    // size is perturbed by the kill-matrix seed so each CI leg pushes a
+    // different frame shape through the replication/failover path.
+    let payload = Value::Bytes(vec![0x42; 256 * 1024 + (chaos_seed() % 16) * 1024]);
+    let a = svc.submit(&tok, f, e1, &payload).unwrap();
+    let ref_a = svc.wait_result_ref(a.task, Duration::from_secs(10)).unwrap();
+    assert_eq!(ref_a.owner, e1);
+    assert_eq!(ref_a.replicas, vec![e2], "the replica set rides on the stored ref");
+    assert_eq!(Counters::get(&svc.counters.replicas_created), 1);
+
+    // Kill the ref owner mid-chain: agent gone, its frames dead with
+    // the host, its address unreachable, the registry told. Only the
+    // survivor's replica holds A's output now.
+    fh1.shutdown();
+    h1.join();
+    store1.purge_all();
+    svc.fabric.disconnect_peer(e1);
+    svc.registry.withdraw_store(e1);
+
+    // B and C on the survivor, chained by ref. B's input resolve must
+    // fail over to the replica copy sitting in its own store.
+    let b = svc.submit_by_ref(&tok, f, e2, &ref_a).unwrap();
+    let ref_b = svc.wait_result_ref(b.task, Duration::from_secs(10)).unwrap();
+    assert_eq!(ref_b.owner, e2);
+    let c = svc.submit_by_ref(&tok, f, e2, &ref_b).unwrap();
+    let out = svc.wait_result(c.task, Duration::from_secs(10)).unwrap();
+    assert_eq!(out, payload, "the chain round-trips the payload through the owner's death");
+
+    // Failover pins: B resolved A's output from the replica...
+    assert!(fabric2.stats.failovers.load(Relaxed) >= 1, "B's input must fail over");
+    assert!(Counters::get(&svc.counters.failover_resolutions) >= 1);
+    // ...and not one payload byte crossed the service inline, in either
+    // direction (replica pushes ride the fabric, off the inline path).
+    assert_eq!(Counters::get(&svc.counters.bytes_through_service), 0);
+    assert_eq!(Counters::get(&svc.counters.result_bytes_through_service), 0);
+    // Replica-aware locality: B (hinted at a replica holder) and C
+    // (hinted at the owner) both routed to the survivor's managers.
+    assert_eq!(route_stats.local_routes.load(Relaxed), 2);
+    assert_eq!(route_stats.remote_routes.load(Relaxed), 0);
+
+    fh2.shutdown();
+    h2.join();
 }
 
 /// Satellite pin: a ref whose frame was evicted from the store (here

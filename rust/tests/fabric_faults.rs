@@ -9,20 +9,26 @@
 //! between `put` and `resolve`, and virtual clocks drive every
 //! time-dependent case.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::Duration;
 
+use funcx::common::config::{EndpointConfig, ServiceConfig};
 use funcx::common::ids::{EndpointId, FunctionId, UserId};
 use funcx::common::sync::Notify;
 use funcx::common::task::{Payload, Task, TaskResult, TaskState};
 use funcx::common::time::{Clock, VirtualClock, WallClock};
 use funcx::containers::{ContainerTech, SystemProfile, TABLE3_MODELS};
-use funcx::datastore::{DataFabric, DataRef, TieredConfig, TieredStore};
-use funcx::endpoint::{Manager, ManagerCtx};
-use funcx::metrics::LatencyBreakdown;
+use funcx::datastore::{
+    DataFabric, DataRef, DiskBackend, SpoolStore, StoreBackend, TieredConfig, TieredStore,
+};
+use funcx::endpoint::{link, EndpointBuilder, Manager, ManagerCtx};
+use funcx::metrics::{Counters, LatencyBreakdown};
+use funcx::registry::EndpointStatus;
 use funcx::runtime::PayloadExecutor;
 use funcx::serialize::{pack, unpack, Buffer, Value};
+use funcx::service::FuncXService;
 use funcx::Error;
 
 /// Drive one by-ref Echo task through a real manager + worker against
@@ -72,6 +78,13 @@ fn failure_message(r: &TaskResult) -> String {
 
 fn store() -> Arc<TieredStore> {
     Arc::new(TieredStore::new(EndpointId::new(), TieredConfig::default()).unwrap())
+}
+
+/// Seed for CI's churn kill-matrix: perturbs storm widths and payload
+/// sizes so each matrix leg drives the same fault sequence through
+/// different shapes. Defaults to 0 under plain `cargo test`.
+fn chaos_seed() -> usize {
+    std::env::var("FUNCX_CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0)
 }
 
 fn frame(byte: u8, len: usize) -> Buffer {
@@ -308,6 +321,254 @@ fn crash_mid_manifest_compaction_recovers_all_frames() {
     let ok = run_ref_task(fabric, Arc::new(WallClock::new()), refs[0].0.clone());
     assert_eq!(ok.state, TaskState::Success);
 
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A spool whose writes *panic* on demand — the spiller-thread-crash
+/// harness. Reads keep working so the disk tier stays readable while
+/// new spills die.
+struct DyingSpool {
+    inner: DiskBackend,
+    dead: AtomicBool,
+}
+
+impl StoreBackend for DyingSpool {
+    fn name(&self) -> &'static str {
+        "dying-fake"
+    }
+    fn put(&self, key: &str, frame: &Buffer) -> funcx::Result<()> {
+        self.inner.put(key, frame)
+    }
+    fn get(&self, key: &str) -> funcx::Result<Option<Buffer>> {
+        self.inner.get(key)
+    }
+    fn remove(&self, key: &str) -> funcx::Result<bool> {
+        StoreBackend::remove(&self.inner, key)
+    }
+}
+
+impl SpoolStore for DyingSpool {
+    fn put_entry(
+        &self,
+        key: &str,
+        frame: &Buffer,
+        expires_at: Option<funcx::common::time::Time>,
+    ) -> funcx::Result<()> {
+        if self.dead.load(Ordering::SeqCst) {
+            panic!("injected spiller crash mid-storm");
+        }
+        self.inner.put_entry(key, frame, expires_at)
+    }
+}
+
+/// Fault: the spiller's spool writes start *panicking* (not erroring)
+/// mid put-storm. The store must degrade to memory-only exactly as for
+/// an erroring spool — typed `Error::Overloaded` sheds bounding the
+/// memory tier at shed_factor × watermark, every live key still
+/// readable (including the pre-crash disk tier), never a hang, and the
+/// panic never escapes to a caller. After a process crash, recovery
+/// readopts the pre-crash spill byte-identical.
+#[test]
+fn spiller_crash_mid_storm_sheds_typed_and_recovers() {
+    const WM: usize = 4 << 10;
+    let dir = std::env::temp_dir().join(format!("funcx-faults-storm-{}", funcx::Uuid::new()));
+    let owner = EndpointId::new();
+    let cfg = TieredConfig {
+        mem_high_watermark: WM,
+        default_ttl_s: 0.0,
+        spool_dir: Some(dir.clone()),
+    };
+    let spool = Arc::new(DyingSpool {
+        inner: DiskBackend::new(dir.clone()).unwrap(),
+        dead: AtomicBool::new(false),
+    });
+    spool.inner.set_epoch(42).unwrap();
+    let s = TieredStore::with_spool_for_tests(owner, cfg.clone(), spool.clone())
+        .with_shed_factor(4);
+    let limit = 4 * WM;
+
+    // Healthy phase: one frame committed to the disk tier pre-crash.
+    let spilled = frame(0x21, 6 << 10);
+    s.put("storm:spilled", spilled.clone(), 0.0).unwrap();
+    s.put("storm:hot", frame(0x22, 2 << 10), 0.0).unwrap();
+    assert!(s.settle(Duration::from_secs(10)), "healthy spill must commit");
+    assert_eq!(s.tier_of("storm:spilled"), Some(funcx::datastore::Tier::Disk));
+
+    // Kill the spiller: every spool write from here on panics. Fill
+    // past the watermark so the spiller attempts (and dies).
+    spool.dead.store(true, Ordering::SeqCst);
+    let mut accepted: Vec<String> = vec!["storm:hot".into()];
+    for i in 0..8u32 {
+        let key = format!("storm:k{i}");
+        s.put(&key, frame(i as u8, 1 << 10), 0.0).unwrap();
+        accepted.push(key);
+    }
+    let t0 = std::time::Instant::now();
+    while s.stats.spill_errors.load(Ordering::Relaxed) == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "the crashed spiller must surface a spill error, not kill the store"
+        );
+        std::thread::yield_now();
+    }
+
+    // The storm: occupancy stays bounded at the shed limit, over-limit
+    // puts are refused with the typed backpressure error, and no put
+    // ever panics or hangs. The width is perturbed by the kill-matrix
+    // seed so each CI leg sheds a different number of puts.
+    let mut shed = 0usize;
+    let storm_end = 64 + (chaos_seed() % 32) as u32;
+    for i in 8..storm_end {
+        let key = format!("storm:k{i}");
+        match s.put(&key, frame(i as u8, 1 << 10), 0.0) {
+            Ok(_) => accepted.push(key),
+            Err(Error::Overloaded(m)) => {
+                assert!(m.contains("shed"), "{m}");
+                shed += 1;
+            }
+            Err(other) => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert!(s.mem_bytes() <= limit, "memory tier exceeded the shed limit");
+    }
+    assert!(shed > 0, "a dead spiller must shed eventually");
+    assert_eq!(s.stats.shed_puts.load(Ordering::Relaxed), shed as u64);
+
+    // Degraded memory-only mode: every accepted key is still readable,
+    // and so is the pre-crash disk tier (reads don't cross the dead
+    // write path).
+    for key in &accepted {
+        s.get(key, 0.0).unwrap();
+    }
+    assert_eq!(s.get("storm:spilled", 0.0).unwrap().as_slice(), spilled.as_slice());
+
+    // Process crash on top of the dead spiller: no Drop, no cleanup.
+    std::mem::forget(s);
+
+    // Recovery readopts the one committed spill byte-identical; the
+    // memory-tier storm keys died with the process.
+    let recovered = TieredStore::recover(owner, cfg).unwrap();
+    assert_eq!(recovered.len(), 1, "only the committed spill survives the crash");
+    let got = recovered.get("storm:spilled", 0.0).unwrap();
+    assert_eq!(got.as_slice(), spilled.as_slice(), "readopt must be byte-identical");
+    assert!(matches!(recovered.get("storm:hot", 0.0), Err(Error::NotFound(_))));
+
+    drop(recovered);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Decommission lifecycle (§4.1 churn): retiring an endpoint through
+/// the orderly path must leave no orphan spool files, no dangling store
+/// advertisement, and every in-flight (unretrieved) result ref must
+/// keep resolving by failing over to the replica the service placed on
+/// a surviving endpoint.
+#[test]
+fn decommission_leaves_no_orphans_and_fails_over_inflight_refs() {
+    let dir = std::env::temp_dir().join(format!("funcx-faults-decomm-{}", funcx::Uuid::new()));
+    let clock: Arc<WallClock> = Arc::new(WallClock::new());
+    let svc = FuncXService::new(ServiceConfig {
+        max_payload_bytes: 4096,
+        replication_factor: 1,
+        ..Default::default()
+    })
+    .with_clock(clock.clone());
+    let (_u, tok) = svc.bootstrap_user("alice");
+    let f = svc.register_function(&tok, "echo", Payload::Echo, None).unwrap();
+    let e = svc.register_endpoint(&tok, "retiring", "").unwrap();
+    let e2 = svc.register_endpoint(&tok, "survivor", "").unwrap();
+
+    // Retiring endpoint: a spool-backed store with a watermark below
+    // the result size, so the frame spills to disk before retirement.
+    let store_e = Arc::new(
+        TieredStore::new(
+            e,
+            TieredConfig {
+                mem_high_watermark: 16 * 1024,
+                default_ttl_s: 0.0,
+                spool_dir: Some(dir.clone()),
+            },
+        )
+        .unwrap(),
+    );
+    let (fwd_e, agent_e) = link();
+    let h_e = EndpointBuilder::new()
+        .config(EndpointConfig {
+            min_nodes: 1,
+            workers_per_node: 1,
+            max_result_bytes: 4096, // force the result by-ref
+            ..Default::default()
+        })
+        .fabric(Arc::new(DataFabric::new(store_e.clone())))
+        .clock(clock.clone())
+        .heartbeat_period(0.05)
+        .start(agent_e);
+    let fh_e = svc.connect_endpoint(e, fwd_e).unwrap();
+
+    // Survivor endpoint: advertises the store the replica lands in.
+    let store_e2 = Arc::new(TieredStore::new(e2, TieredConfig::default()).unwrap());
+    let (fwd_e2, agent_e2) = link();
+    let h_e2 = EndpointBuilder::new()
+        .config(EndpointConfig { min_nodes: 1, workers_per_node: 1, ..Default::default() })
+        .fabric(Arc::new(DataFabric::new(store_e2.clone())))
+        .clock(clock.clone())
+        .heartbeat_period(0.05)
+        .start(agent_e2);
+    let fh_e2 = svc.connect_endpoint(e2, fwd_e2).unwrap();
+
+    // Both stores must be advertised before the result is stored, or
+    // there is nowhere to replicate to.
+    let t0 = std::time::Instant::now();
+    while svc.registry.advertised_store(e).is_none()
+        || svc.registry.advertised_store(e2).is_none()
+    {
+        assert!(t0.elapsed() < Duration::from_secs(5), "advertisements must arrive");
+        std::thread::yield_now();
+    }
+
+    // Run one task on the retiring endpoint; its ~64 KB result is
+    // offloaded into the retiring store and replicated to the survivor.
+    // The size is perturbed by the kill-matrix seed (always above the
+    // 4 KB by-ref thresholds, so the lifecycle is identical per leg).
+    let input = Value::Bytes(vec![0x5C; 64 * 1024 + (chaos_seed() % 16) * 1024]);
+    let r = svc.submit(&tok, f, e, &input).unwrap();
+    let rref = svc.wait_result_ref(r.task, Duration::from_secs(10)).unwrap();
+    assert_eq!(rref.owner, e, "the result lives in the retiring endpoint's store");
+    assert_eq!(rref.replicas, vec![e2], "the stored record carries the replica set");
+    assert!(
+        store_e2.get(&rref.replica_key(), clock.now()).is_ok(),
+        "the replica frame must sit in the survivor's store"
+    );
+
+    // Retire the endpoint while the result is still unretrieved.
+    fh_e.decommission();
+    h_e.join();
+
+    // No dangling advertisement, endpoint Offline, store purged.
+    assert!(svc.registry.advertised_store(e).is_none(), "advertisement must be withdrawn");
+    assert_eq!(svc.registry.endpoint(e).unwrap().status, EndpointStatus::Offline);
+    assert!(store_e.is_empty(), "decommission must purge the retiring store");
+    assert!(Counters::get(&svc.counters.frames_drained) >= 1);
+    // No orphan spool files: only the manifest survives the purge.
+    let leftovers: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|x| x.unwrap().file_name().to_string_lossy().into_owned())
+        .filter(|n| !n.starts_with("spool.manifest"))
+        .collect();
+    assert!(leftovers.is_empty(), "orphan spool files after decommission: {leftovers:?}");
+
+    // The in-flight ref still resolves: drop the service fabric's
+    // cached copy (warmed during replication) to force the ladder, then
+    // fail over to the survivor's replica.
+    svc.fabric.reclaim(&rref);
+    let got = svc.fabric.resolve(&rref, clock.now()).unwrap();
+    assert_eq!(unpack(&got).unwrap(), input, "failover must serve the original bytes");
+    assert!(Counters::get(&svc.counters.failover_resolutions) >= 1);
+    assert_eq!(Counters::get(&svc.counters.replicas_created), 1);
+
+    // And the user-visible retrieval path works end to end.
+    assert_eq!(svc.get_result(r.task).unwrap(), Some(input));
+
+    fh_e2.shutdown();
+    h_e2.join();
     std::fs::remove_dir_all(&dir).unwrap();
 }
 

@@ -71,6 +71,7 @@ fn rref_frame_roundtrips_and_rejects_hostile_body_len() {
         key: "task-result:chain".into(),
         size: 1 << 20,
         checksum: 0xABCD_EF01,
+        replicas: Vec::new(),
     };
     let r = TaskResult {
         task: funcx::common::ids::TaskId::new(),
