@@ -291,6 +291,62 @@ fn main() {
         harness::record("watch wakeups per consumed frame (hot key)", wakeups, "wakes");
     }
 
+    harness::section("watch wakeups — coalesced producer, 64-frame bursts");
+    {
+        // Producer-side watch coalescing: the same hot key, but the
+        // producer flushes whole bursts through `rpush_many`, which
+        // appends the batch under one lock acquisition and publishes
+        // ONE notify per flush. Pinned at <= 0.25 notifies per consumed
+        // frame (a 64-frame burst should land near 1/64 ≈ 0.016) —
+        // against ~1.0 for the frame-at-a-time baseline above.
+        const FRAMES: usize = 100_000;
+        const BURST: usize = 64;
+        let kv = KvStore::new();
+        let watch = Arc::new(funcx::common::sync::Notify::new());
+        kv.add_watch("hotq", watch.clone());
+        let producer = {
+            let kv = kv.clone();
+            std::thread::spawn(move || {
+                for _ in 0..FRAMES / BURST {
+                    let burst: Vec<funcx::serialize::Buffer> =
+                        (0..BURST).map(|_| vec![0u8; 32].into()).collect();
+                    kv.rpush_many("hotq", burst);
+                }
+            })
+        };
+        let mut consumed = 0usize;
+        while consumed < FRAMES {
+            let seen = watch.epoch();
+            let got = kv.lpop_n("hotq", 256).len();
+            if got == 0 {
+                watch.wait_newer(seen, Duration::from_millis(10));
+            } else {
+                consumed += got;
+            }
+        }
+        producer.join().unwrap();
+        let notifies = watch.notify_count() as f64 / FRAMES as f64;
+        let wakeups = watch.wakeup_count() as f64 / FRAMES as f64;
+        println!(
+            "  {FRAMES} frames in {BURST}-frame bursts: {notifies:.4} notifies/frame, {wakeups:.4} wakeups/frame"
+        );
+        harness::record(
+            "watch notifies per consumed frame (coalesced 64-frame bursts)",
+            notifies,
+            "signals",
+        );
+        harness::record(
+            "watch wakeups per consumed frame (coalesced 64-frame bursts)",
+            wakeups,
+            "wakes",
+        );
+        assert!(
+            notifies <= 0.25,
+            "producer-side coalescing regressed: {notifies:.4} notifies/frame under a \
+             {BURST}-frame burst (pin: <= 0.25)"
+        );
+    }
+
     harness::section("live end-to-end dispatch overhead");
     let svc = Arc::new(FuncXService::new(ServiceConfig::default()));
     let (_u, tok) = svc.bootstrap_user("bench");
@@ -316,13 +372,17 @@ fn main() {
     fh.shutdown();
     agent.join();
 
-    harness::section("live multi-endpoint — 4 forwarders × 4 agents, concurrent submitters");
+    harness::section("live fleet — 8 forwarders × 128 managers, concurrent submitters");
     {
-        // One service, N endpoints each with its own forwarder + agent:
-        // exercises store sharding (distinct queue keys), the watch/latch
-        // wakeups, Arc task dispatch, and batched result upload end to
-        // end — the topology the per-endpoint benches can't.
-        const ENDPOINTS: usize = 4;
+        // One service, N endpoints each with its own forwarder + agent,
+        // and each agent provisioning 16 nodes (managers) × 2 workers —
+        // 128 managers fleet-wide, the §6 "hundreds of managers" scale
+        // direction. Exercises store sharding (distinct queue keys),
+        // the watch/latch wakeups, Arc task dispatch, and batched
+        // result upload end to end — the topology the per-endpoint
+        // benches can't.
+        const ENDPOINTS: usize = 8;
+        const NODES_PER_EP: usize = 16;
         const TASKS_PER_EP: usize = 2000;
         let svc = Arc::new(FuncXService::new(ServiceConfig::default()));
         let (_u, tok) = svc.bootstrap_user("fleet");
@@ -333,8 +393,8 @@ fn main() {
             let (fwd, agent_side) = link();
             let agent = EndpointBuilder::new()
                 .config(EndpointConfig {
-                    min_nodes: 2,
-                    workers_per_node: 4,
+                    min_nodes: NODES_PER_EP,
+                    workers_per_node: 2,
                     ..Default::default()
                 })
                 .heartbeat_period(0.05)
@@ -368,7 +428,7 @@ fn main() {
         let secs = (0..3).map(|_| run()).fold(f64::INFINITY, f64::min);
         let total = (ENDPOINTS * TASKS_PER_EP) as f64;
         println!(
-            "  {ENDPOINTS} endpoints x {TASKS_PER_EP} no-ops: {:.3} s, {:>8.0} tasks/s fleet-wide",
+            "  {ENDPOINTS} endpoints x {NODES_PER_EP} nodes x {TASKS_PER_EP} no-ops: {:.3} s, {:>8.0} tasks/s fleet-wide",
             secs,
             total / secs
         );
@@ -396,6 +456,105 @@ fn main() {
             fh.shutdown();
             agent.join();
         }
+    }
+
+    harness::section("service-plane shard scaling (tasks/s per shard count)");
+    {
+        // Tentpole curve: the same fleet driven through a service plane
+        // sharded N ways behind the consistent-hash ring. Each shard
+        // owns its KV rows, fabric store, offload set, and result
+        // latch, so the single-shard serializers — the "tasks"/
+        // "task_state" hset stripes, the per-poll offload-set mutex,
+        // and the one result `Notify` every waiter herds on — split N
+        // ways. 32 submitter threads keep the service plane, not the
+        // worker pool, the contended layer.
+        const EPS: usize = 8;
+        const SUBMITTERS_PER_EP: usize = 4;
+        const TASKS_PER_SUBMITTER: usize = 500;
+        const TOTAL: usize = EPS * SUBMITTERS_PER_EP * TASKS_PER_SUBMITTER;
+        let run_n = |shards: usize| -> f64 {
+            let svc = Arc::new(FuncXService::new(ServiceConfig {
+                service_shards: shards,
+                ..Default::default()
+            }));
+            let (_u, tok) = svc.bootstrap_user("scale");
+            let fc = FuncXClient::new(svc.clone(), tok);
+            let mut stacks = Vec::new();
+            for i in 0..EPS {
+                let ep = fc.register_endpoint(&format!("ep{i}"), "").unwrap();
+                let (fwd, agent_side) = link();
+                let agent = EndpointBuilder::new()
+                    .config(EndpointConfig {
+                        min_nodes: 2,
+                        workers_per_node: 2,
+                        ..Default::default()
+                    })
+                    .heartbeat_period(0.05)
+                    .seed(500 + i as u64)
+                    .start(agent_side);
+                let fh = svc.connect_endpoint(ep, fwd).unwrap();
+                let f = fc.register_function(&format!("noop{i}"), Payload::Noop).unwrap();
+                stacks.push((ep, f, fh, agent));
+            }
+            let run = || {
+                let t0 = std::time::Instant::now();
+                let handles: Vec<_> = stacks
+                    .iter()
+                    .flat_map(|(ep, f, _, _)| {
+                        (0..SUBMITTERS_PER_EP).map({
+                            let fc = fc.clone();
+                            let (ep, f) = (*ep, *f);
+                            move |_| {
+                                let fc = fc.clone();
+                                std::thread::spawn(move || {
+                                    let inputs: Vec<Value> = (0..TASKS_PER_SUBMITTER)
+                                        .map(|_| Value::Null)
+                                        .collect();
+                                    let tasks = fc.run_batch(f, ep, &inputs).unwrap();
+                                    fc.get_batch_results(&tasks, Duration::from_secs(120))
+                                        .unwrap();
+                                })
+                            }
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().unwrap();
+                }
+                t0.elapsed().as_secs_f64()
+            };
+            run(); // warm-up
+            let secs = (0..2).map(|_| run()).fold(f64::INFINITY, f64::min);
+            for (_, _, fh, agent) in stacks {
+                fh.shutdown();
+                agent.join();
+            }
+            TOTAL as f64 / secs
+        };
+        let mut curve = Vec::new();
+        for n in [1usize, 2, 4, 8] {
+            let tps = run_n(n);
+            println!(
+                "  N={n}: {tps:>8.0} tasks/s fleet-wide  ({:>8.0} tasks/s per shard)",
+                tps / n as f64
+            );
+            harness::record(&format!("fleet tasks/s @ {n} shards"), tps, "tasks/s");
+            harness::record(
+                &format!("fleet tasks/s per shard @ {n} shards"),
+                tps / n as f64,
+                "tasks/s",
+            );
+            curve.push((n, tps));
+        }
+        let t1 = curve[0].1;
+        let t4 = curve[2].1;
+        println!("  => N=4 vs N=1: {:.2}x (pin: >= 2.5x)", t4 / t1);
+        harness::record("shard scaling N=4 over N=1", t4 / t1, "x");
+        assert!(
+            t4 >= 2.5 * t1,
+            "shard scaling regressed: N=4 gives {t4:.0} tasks/s, \
+             less than 2.5x the N=1 baseline of {t1:.0} tasks/s"
+        );
     }
 
     harness::section("PJRT artifact execution (the compute hot path)");

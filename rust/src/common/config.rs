@@ -37,6 +37,13 @@ pub struct ServiceConfig {
     /// replication; the effective count is capped by how many peer
     /// stores are advertised.
     pub replication_factor: usize,
+    /// Shards the service plane is split into (§4.1 "the funcX service
+    /// is designed to scale horizontally"): each shard owns its own KV
+    /// store, payload store, result latch, and forwarder loops, with
+    /// tasks/endpoints placed by the consistent-hash
+    /// [`crate::service::ShardMap`]. 1 reproduces the unsharded
+    /// service exactly.
+    pub service_shards: usize,
 }
 
 impl Default for ServiceConfig {
@@ -50,6 +57,7 @@ impl Default for ServiceConfig {
             result_ttl_s: 3600.0,
             max_redispatch: 3,
             replication_factor: 0,
+            service_shards: 1,
         }
     }
 }

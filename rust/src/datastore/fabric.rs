@@ -19,6 +19,13 @@
 //! An unreachable owner, a stale epoch, or an evicted/expired key
 //! surfaces [`Error::NotFound`] — never a panic — so a re-dispatched
 //! task whose input aged out fails cleanly at the worker.
+//!
+//! Under the sharded service plane (see `docs/architecture.md`), each
+//! forwarder shard carries its own fabric: the shard stores are
+//! full-mesh peered with each other at service build, and every
+//! endpoint store advertised up any link is peered into *every* shard's
+//! fabric — so the ladder above resolves refs across shard boundaries
+//! without the bytes ever transiting the service inline.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -176,6 +176,12 @@ pub struct TierStats {
 /// slow spool write does not serialize the whole drain.
 const SPILLER_POOL: usize = 2;
 
+/// Victims claimed per spiller lock pass: under a put storm each pool
+/// member drains a small batch per index round-trip (write-coalescing),
+/// so the index lock is taken twice per `SPILL_BATCH` spool writes
+/// instead of twice per write.
+const SPILL_BATCH: usize = 4;
+
 /// Consecutive spool-write failures before the store treats the spool
 /// as down and starts shedding over-limit puts.
 const SPOOL_FAIL_SHED_STREAK: u64 = 1;
@@ -985,30 +991,37 @@ fn tier_of_state(s: EntryState) -> Tier {
 
 /// The background spillers: a small pool (of [`SPILLER_POOL`]) drains
 /// the LRU victim queue whenever the memory tier crosses the high
-/// watermark. One victim at a time per thread: mark `Spilling` under
-/// the lock, write the spool file with the lock dropped, re-acquire to
-/// commit `OnDisk` (or abandon if the key moved on). `put` never pays
-/// disk latency; memory hits never wait on a spill. Victim selection
-/// discounts bytes already mid-spill (`spilling_bytes`) so concurrent
-/// pool members never over-spill past the watermark overshoot.
+/// watermark. Each thread claims up to [`SPILL_BATCH`] victims per
+/// index pass: mark them `Spilling` under the lock, write all their
+/// spool files with the lock dropped (write-coalescing), re-acquire
+/// once to commit the batch `OnDisk` (abandoning any key that moved
+/// on). `put` never pays disk latency; memory hits never wait on a
+/// spill — the index lock only ever covers map operations. Victim
+/// selection discounts bytes already mid-spill (`spilling_bytes`) so
+/// concurrent pool members never over-spill past the watermark
+/// overshoot.
 fn spiller_loop(inner: Arc<Inner>) {
     loop {
         let seen = inner.spill_wake.epoch();
         if inner.shutdown.load(Ordering::Relaxed) {
             return;
         }
-        // Victim selection: pop LRU nodes until one is a fresh Resident
-        // entry (stale nodes — touched since queueing, state changes,
-        // dead generations — are re-queued or dropped).
-        let victim = {
+        // Victim selection: pop LRU nodes until the watermark is met or
+        // the batch is full, claiming each fresh Resident entry (stale
+        // nodes — touched since queueing, state changes, dead
+        // generations — are re-queued or dropped).
+        let victims = {
             let mut guard = inner.index.lock().expect("tiered index poisoned");
             let idx = &mut *guard;
-            let mut found = None;
+            let mut found = Vec::new();
             // `saturating_sub`: removing a Spilling key releases its
             // mem_bytes share before the spiller returns the
             // spilling_bytes reserve, so the difference can transiently
             // go negative.
-            while idx.mem_bytes.saturating_sub(idx.spilling_bytes) > inner.cfg.mem_high_watermark {
+            while found.len() < SPILL_BATCH
+                && idx.mem_bytes.saturating_sub(idx.spilling_bytes)
+                    > inner.cfg.mem_high_watermark
+            {
                 let Some((pos, (key, node_gen))) = idx.lru.pop_first() else {
                     break;
                 };
@@ -1040,80 +1053,104 @@ fn spiller_loop(inner: Arc<Inner>) {
                 e.gen = idx.seq;
                 idx.in_flight += 1;
                 idx.spilling_bytes += e.size;
-                found = Some((
+                found.push((
                     e.key.clone(),
                     e.gen,
                     e.frame.clone().expect("resident entry has a frame"),
                     e.expires_at,
                     e.size,
                 ));
-                break;
             }
             found
         };
-        let Some((key, gen, frame, expires_at, size)) = victim else {
+        if victims.is_empty() {
             inner.settled.notify();
             inner.spill_wake.wait_newer(seen, Duration::from_millis(100));
             continue;
-        };
-
-        // Tier I/O, no lock held: a slow disk stalls only this thread.
-        // A *panicking* spool (satellite fault case: the backing device
-        // dies mid-storm) is contained here and treated as a failed
-        // write — the store degrades to memory-only with backpressure
-        // instead of silently losing its spiller thread.
-        let skey = spool_key(&key, gen);
-        let wrote = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            inner.spool.put_entry(&skey, &frame, expires_at)
-        }))
-        .unwrap_or_else(|_| Err(Error::Data(format!("spool write for {skey} panicked"))));
-        match &wrote {
-            Ok(()) => inner.spool_fail_streak.store(0, Ordering::Relaxed),
-            Err(_) => {
-                inner.spool_fail_streak.fetch_add(1, Ordering::Relaxed);
-            }
         }
 
-        let abandon = {
+        // Tier I/O, no lock held: a slow disk stalls only this thread,
+        // and the whole batch is written before the index is touched
+        // again. A *panicking* spool (satellite fault case: the backing
+        // device dies mid-storm) is contained here and treated as a
+        // failed write — the store degrades to memory-only with
+        // backpressure instead of silently losing its spiller thread.
+        let mut any_err = false;
+        let written: Vec<_> = victims
+            .into_iter()
+            .map(|(key, gen, frame, expires_at, size)| {
+                let skey = spool_key(&key, gen);
+                let wrote = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    inner.spool.put_entry(&skey, &frame, expires_at)
+                }))
+                .unwrap_or_else(|_| {
+                    Err(Error::Data(format!("spool write for {skey} panicked")))
+                });
+                match &wrote {
+                    Ok(()) => inner.spool_fail_streak.store(0, Ordering::Relaxed),
+                    Err(_) => {
+                        any_err = true;
+                        inner.spool_fail_streak.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                (key, gen, skey, size, wrote)
+            })
+            .collect();
+
+        // One re-lock pass commits the whole batch.
+        let mut abandoned = Vec::new();
+        {
             let mut guard = inner.index.lock().expect("tiered index poisoned");
             let idx = &mut *guard;
-            idx.in_flight -= 1;
-            // We marked this victim Spilling, so the mid-spill reserve
-            // is ours to return regardless of how the commit resolves.
-            idx.spilling_bytes -= size;
-            match idx.entries.get_mut(&*key) {
-                Some(e) if e.gen == gen && e.state == EntryState::Spilling => match &wrote {
-                    Ok(()) => {
-                        e.state = EntryState::OnDisk;
-                        e.frame = None;
-                        idx.mem_bytes -= size;
-                        inner.stats.spills.fetch_add(1, Ordering::Relaxed);
-                        inner.stats.spilled_bytes.fetch_add(size as u64, Ordering::Relaxed);
-                        false
+            for (key, gen, skey, size, wrote) in written {
+                idx.in_flight -= 1;
+                // We marked this victim Spilling, so the mid-spill
+                // reserve is ours to return regardless of how the
+                // commit resolves.
+                idx.spilling_bytes -= size;
+                let abandon = match idx.entries.get_mut(&*key) {
+                    Some(e) if e.gen == gen && e.state == EntryState::Spilling => {
+                        match &wrote {
+                            Ok(()) => {
+                                e.state = EntryState::OnDisk;
+                                e.frame = None;
+                                idx.mem_bytes -= size;
+                                inner.stats.spills.fetch_add(1, Ordering::Relaxed);
+                                inner
+                                    .stats
+                                    .spilled_bytes
+                                    .fetch_add(size as u64, Ordering::Relaxed);
+                                false
+                            }
+                            Err(_) => {
+                                // Spool write failed: the frame stays
+                                // resident and spillable; back off
+                                // below. Counted so a persistently
+                                // failing disk (watermark no longer
+                                // enforced) is observable.
+                                inner.stats.spill_errors.fetch_add(1, Ordering::Relaxed);
+                                e.state = EntryState::Resident;
+                                let node = (e.key.clone(), e.gen);
+                                let at = e.last_access;
+                                e.lru_pos = Some(at);
+                                idx.lru.insert(at, node);
+                                false
+                            }
+                        }
                     }
-                    Err(_) => {
-                        // Spool write failed: the frame stays resident
-                        // and spillable; back off below. Counted so a
-                        // persistently failing disk (watermark no
-                        // longer enforced) is observable.
-                        inner.stats.spill_errors.fetch_add(1, Ordering::Relaxed);
-                        e.state = EntryState::Resident;
-                        let node = (e.key.clone(), e.gen);
-                        let at = e.last_access;
-                        e.lru_pos = Some(at);
-                        idx.lru.insert(at, node);
-                        false
-                    }
-                },
-                _ => wrote.is_ok(), // key moved on mid-spill: reclaim our artifact
+                    _ => wrote.is_ok(), // key moved on mid-spill: reclaim our artifact
+                };
+                if abandon {
+                    abandoned.push(skey);
+                }
             }
-        };
-        if abandon {
+        }
+        for skey in abandoned {
             let _ = inner.spool.remove(&skey);
             inner.stats.spill_aborts.fetch_add(1, Ordering::Relaxed);
         }
         inner.settled.notify();
-        if wrote.is_err() {
+        if any_err {
             // Persistent disk trouble must not spin the loop.
             inner.spill_wake.wait_newer(seen, Duration::from_millis(50));
         }

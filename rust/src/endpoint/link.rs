@@ -27,9 +27,11 @@ use crate::datastore::TieredStore;
 /// the worker.
 pub enum Downstream {
     Tasks(Vec<Arc<Task>>),
-    /// The service's payload store, advertised on connect so the
-    /// endpoint's fabric auto-peers for `iref` resolution (no manual
-    /// `connect_peer` wiring).
+    /// A service payload store, advertised on connect so the endpoint's
+    /// fabric auto-peers for `iref` resolution (no manual
+    /// `connect_peer` wiring). A sharded service plane sends one of
+    /// these per shard store; the agent needs no shard awareness
+    /// because each store is keyed by its own owner id.
     Advertise(Arc<TieredStore>),
     /// Forwarder-initiated liveness probe.
     Ping,
@@ -60,7 +62,9 @@ pub enum Upstream {
     Results(Vec<TaskResult>),
     /// The endpoint's tiered store, advertised on agent start so the
     /// service fabric auto-peers for `rref` resolution (§5 result
-    /// offload — no manual `connect_peer` wiring).
+    /// offload — no manual `connect_peer` wiring). The service wires
+    /// this store into EVERY shard's fabric, so a task on any shard can
+    /// resolve refs owned by this endpoint.
     Advertise(Arc<TieredStore>),
     /// Periodic heartbeat (§4.1: 30 s default, configurable).
     Heartbeat { active_workers: usize, pending_tasks: usize },

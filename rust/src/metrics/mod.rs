@@ -61,10 +61,25 @@ pub fn summarize(samples: &[f64]) -> Summary {
     }
 }
 
-/// Collects per-task stage timings (Fig. 3 harness).
-#[derive(Clone, Default)]
+/// Lock stripes for the stage-timing map: six stamps land per task from
+/// submitter, forwarder, and agent threads across every service shard,
+/// so one global mutex here would quietly re-serialize a sharded
+/// service plane.
+const N_STRIPES: usize = 16;
+
+/// Collects per-task stage timings (Fig. 3 harness). Internally striped
+/// by task-id hash; the public API is unchanged.
+#[derive(Clone)]
 pub struct LatencyBreakdown {
-    inner: Arc<Mutex<HashMap<TaskId, StageRecord>>>,
+    stripes: Arc<Vec<Mutex<HashMap<TaskId, StageRecord>>>>,
+}
+
+impl Default for LatencyBreakdown {
+    fn default() -> Self {
+        LatencyBreakdown {
+            stripes: Arc::new((0..N_STRIPES).map(|_| Mutex::default()).collect()),
+        }
+    }
 }
 
 #[derive(Default, Clone, Copy)]
@@ -82,38 +97,43 @@ impl LatencyBreakdown {
         Self::default()
     }
 
+    fn stripe(&self, t: TaskId) -> &Mutex<HashMap<TaskId, StageRecord>> {
+        let x = (t.0 .0 as u64) ^ ((t.0 .0 >> 64) as u64);
+        &self.stripes[(x.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize % N_STRIPES]
+    }
+
     pub fn on_submit(&self, t: TaskId, now: Time) {
-        self.inner.lock().unwrap().entry(t).or_default().submit = Some(now);
+        self.stripe(t).lock().unwrap().entry(t).or_default().submit = Some(now);
     }
 
     /// Task persisted + appended to the endpoint queue (end of t_s).
     pub fn on_queued(&self, t: TaskId, now: Time) {
-        self.inner.lock().unwrap().entry(t).or_default().queued = Some(now);
+        self.stripe(t).lock().unwrap().entry(t).or_default().queued = Some(now);
     }
 
     /// Forwarder handed the task to the agent (end of forwarder's send half).
     pub fn on_forwarded(&self, t: TaskId, now: Time) {
-        self.inner.lock().unwrap().entry(t).or_default().forwarded = Some(now);
+        self.stripe(t).lock().unwrap().entry(t).or_default().forwarded = Some(now);
     }
 
     /// Worker began executing (end of t_e's dispatch half).
     pub fn on_started(&self, t: TaskId, now: Time) {
-        self.inner.lock().unwrap().entry(t).or_default().started = Some(now);
+        self.stripe(t).lock().unwrap().entry(t).or_default().started = Some(now);
     }
 
     /// Worker finished (t_w = started..finished).
     pub fn on_finished(&self, t: TaskId, now: Time) {
-        self.inner.lock().unwrap().entry(t).or_default().finished = Some(now);
+        self.stripe(t).lock().unwrap().entry(t).or_default().finished = Some(now);
     }
 
     /// Result written back to the store (closes t_f's return half).
     pub fn on_result_stored(&self, t: TaskId, now: Time) {
-        self.inner.lock().unwrap().entry(t).or_default().result_stored = Some(now);
+        self.stripe(t).lock().unwrap().entry(t).or_default().result_stored = Some(now);
     }
 
     /// Stage decomposition for one task, if all stamps are present.
     pub fn breakdown(&self, t: TaskId) -> Option<StageTimes> {
-        let g = self.inner.lock().unwrap();
+        let g = self.stripe(t).lock().unwrap();
         let r = g.get(&t)?;
         let (submit, queued, forwarded, started, finished, stored) = (
             r.submit?,
@@ -132,9 +152,11 @@ impl LatencyBreakdown {
     }
 
     pub fn all_breakdowns(&self) -> Vec<StageTimes> {
-        let g = self.inner.lock().unwrap();
-        let keys: Vec<TaskId> = g.keys().copied().collect();
-        drop(g);
+        let keys: Vec<TaskId> = self
+            .stripes
+            .iter()
+            .flat_map(|s| s.lock().unwrap().keys().copied().collect::<Vec<_>>())
+            .collect();
         keys.into_iter().filter_map(|k| self.breakdown(k)).collect()
     }
 }

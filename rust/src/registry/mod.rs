@@ -4,15 +4,30 @@
 //! Functions are registered with a name, serialized body, optional
 //! container image and sharing list; endpoints with descriptive metadata.
 //! Every entity gets a UUID used for subsequent management/invocation.
+//!
+//! # Striping
+//!
+//! Internally the registry is split into [`N_STRIPES`] lock stripes
+//! keyed by an id hash, so the per-submit lookups (function, endpoint)
+//! issued concurrently by every service shard don't serialize behind one
+//! `RwLock`. The registry itself is a single shared object handed to all
+//! service shards — that sharing IS the cross-shard advertisement
+//! replication: a store advertised via any shard's forwarder is
+//! immediately visible to replica placement, locality routing, and
+//! decommission drains running on every other shard.
 
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
 
 use crate::common::error::{Error, Result};
-use crate::common::ids::{ContainerId, EndpointId, FunctionId, UserId};
+use crate::common::ids::{ContainerId, EndpointId, FunctionId, UserId, Uuid};
 use crate::common::task::Payload;
 use crate::containers::ContainerTech;
 use crate::datastore::TieredStore;
+
+/// Lock stripes. A small power of two: plenty for the handful of
+/// service shards contending, cheap to scan for aggregate reads.
+const N_STRIPES: usize = 8;
 
 /// A registered function (§3 "Function registration").
 #[derive(Clone, Debug)]
@@ -65,20 +80,42 @@ struct RegistryState {
     endpoints: HashMap<EndpointId, EndpointRecord>,
     containers: HashMap<ContainerId, ContainerRecord>,
     /// Endpoint payload stores advertised on connect (§5 peer
-    /// auto-discovery): the service fabric peers with these to resolve
+    /// auto-discovery): the service fabrics peer with these to resolve
     /// `rref`s, and reconnecting forwarders re-peer from here.
     stores: HashMap<EndpointId, Arc<TieredStore>>,
 }
 
 /// The registry service (RDS stand-in). Clone-shareable.
-#[derive(Clone, Default)]
+#[derive(Clone)]
 pub struct Registry {
-    state: Arc<RwLock<RegistryState>>,
+    stripes: Arc<Vec<RwLock<RegistryState>>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry {
+            stripes: Arc::new((0..N_STRIPES).map(|_| RwLock::default()).collect()),
+        }
+    }
+}
+
+/// The stripe an id hashes to (mixed fold of the 128-bit id).
+fn stripe_of(u: Uuid) -> usize {
+    let x = (u.0 as u64) ^ ((u.0 >> 64) as u64);
+    (x.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize % N_STRIPES
 }
 
 impl Registry {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    fn read(&self, u: Uuid) -> std::sync::RwLockReadGuard<'_, RegistryState> {
+        self.stripes[stripe_of(u)].read().unwrap()
+    }
+
+    fn write(&self, u: Uuid) -> std::sync::RwLockWriteGuard<'_, RegistryState> {
+        self.stripes[stripe_of(u)].write().unwrap()
     }
 
     // ---- functions -------------------------------------------------------
@@ -91,7 +128,7 @@ impl Registry {
         container: Option<ContainerId>,
     ) -> FunctionId {
         let id = FunctionId::new();
-        self.state.write().unwrap().functions.insert(
+        self.write(id.0).functions.insert(
             id,
             FunctionRecord {
                 id,
@@ -106,9 +143,7 @@ impl Registry {
     }
 
     pub fn function(&self, id: FunctionId) -> Result<FunctionRecord> {
-        self.state
-            .read()
-            .unwrap()
+        self.read(id.0)
             .functions
             .get(&id)
             .cloned()
@@ -122,7 +157,7 @@ impl Registry {
         by: UserId,
         payload: Payload,
     ) -> Result<()> {
-        let mut st = self.state.write().unwrap();
+        let mut st = self.write(id.0);
         let f = st
             .functions
             .get_mut(&id)
@@ -135,7 +170,7 @@ impl Registry {
     }
 
     pub fn function_count(&self) -> usize {
-        self.state.read().unwrap().functions.len()
+        self.stripes.iter().map(|s| s.read().unwrap().functions.len()).sum()
     }
 
     // ---- endpoints -------------------------------------------------------
@@ -147,7 +182,7 @@ impl Registry {
         owner: UserId,
     ) -> EndpointId {
         let id = EndpointId::new();
-        self.state.write().unwrap().endpoints.insert(
+        self.write(id.0).endpoints.insert(
             id,
             EndpointRecord {
                 id,
@@ -161,9 +196,7 @@ impl Registry {
     }
 
     pub fn endpoint(&self, id: EndpointId) -> Result<EndpointRecord> {
-        self.state
-            .read()
-            .unwrap()
+        self.read(id.0)
             .endpoints
             .get(&id)
             .cloned()
@@ -171,7 +204,7 @@ impl Registry {
     }
 
     pub fn set_endpoint_status(&self, id: EndpointId, status: EndpointStatus) -> Result<()> {
-        let mut st = self.state.write().unwrap();
+        let mut st = self.write(id.0);
         let e = st
             .endpoints
             .get_mut(&id)
@@ -181,19 +214,22 @@ impl Registry {
     }
 
     pub fn endpoints(&self) -> Vec<EndpointRecord> {
-        self.state.read().unwrap().endpoints.values().cloned().collect()
+        self.stripes
+            .iter()
+            .flat_map(|s| s.read().unwrap().endpoints.values().cloned().collect::<Vec<_>>())
+            .collect()
     }
 
     /// Record the endpoint's advertised payload store (arrives over the
-    /// agent link on connect; the service fabric auto-peers with it so
-    /// by-ref results resolve without manual wiring).
+    /// agent link on connect; every service shard's fabric auto-peers
+    /// with it so by-ref results resolve without manual wiring).
     pub fn advertise_store(&self, id: EndpointId, store: Arc<TieredStore>) {
-        self.state.write().unwrap().stores.insert(id, store);
+        self.write(id.0).stores.insert(id, store);
     }
 
     /// The endpoint's last advertised store, if any.
     pub fn advertised_store(&self, id: EndpointId) -> Option<Arc<TieredStore>> {
-        self.state.read().unwrap().stores.get(&id).cloned()
+        self.read(id.0).stores.get(&id).cloned()
     }
 
     /// Drop an endpoint's store advertisement (decommission: the
@@ -203,18 +239,24 @@ impl Registry {
     /// was recorded. Live `DataFabric` peers that already cloned the
     /// `Arc` keep resolving in-flight refs until they disconnect.
     pub fn withdraw_store(&self, id: EndpointId) -> bool {
-        self.state.write().unwrap().stores.remove(&id).is_some()
+        self.write(id.0).stores.remove(&id).is_some()
     }
 
     /// Every endpoint with a standing store advertisement — the
-    /// candidate pool for frame replication and decommission re-homing.
+    /// candidate pool for frame replication and decommission re-homing,
+    /// aggregated across stripes (advertisements made via any service
+    /// shard are visible here).
     pub fn advertised_stores(&self) -> Vec<(EndpointId, Arc<TieredStore>)> {
-        self.state
-            .read()
-            .unwrap()
-            .stores
+        self.stripes
             .iter()
-            .map(|(id, s)| (*id, s.clone()))
+            .flat_map(|s| {
+                s.read()
+                    .unwrap()
+                    .stores
+                    .iter()
+                    .map(|(id, st)| (*id, st.clone()))
+                    .collect::<Vec<_>>()
+            })
             .collect()
     }
 
@@ -222,18 +264,14 @@ impl Registry {
 
     pub fn register_container(&self, name: &str, tech: ContainerTech) -> ContainerId {
         let id = ContainerId::new();
-        self.state
-            .write()
-            .unwrap()
+        self.write(id.0)
             .containers
             .insert(id, ContainerRecord { id, name: name.to_string(), tech });
         id
     }
 
     pub fn container(&self, id: ContainerId) -> Result<ContainerRecord> {
-        self.state
-            .read()
-            .unwrap()
+        self.read(id.0)
             .containers
             .get(&id)
             .cloned()
@@ -305,5 +343,26 @@ mod tests {
         let c = r.register_container("dials-env", ContainerTech::Singularity);
         assert_eq!(r.container(c).unwrap().tech, ContainerTech::Singularity);
         assert!(r.container(ContainerId::new()).is_err());
+    }
+
+    /// Aggregate reads see every stripe: records registered under ids
+    /// that hash to different stripes all come back.
+    #[test]
+    fn aggregates_span_stripes() {
+        use crate::datastore::TieredConfig;
+        let r = Registry::new();
+        let owner = UserId::new();
+        let eps: Vec<_> =
+            (0..64).map(|i| r.register_endpoint(&format!("ep{i}"), "", owner)).collect();
+        for _ in 0..64 {
+            r.register_function("f", owner, Payload::Noop, None);
+        }
+        assert_eq!(r.endpoints().len(), 64);
+        assert_eq!(r.function_count(), 64);
+        for e in &eps[..8] {
+            let store = Arc::new(TieredStore::new(*e, TieredConfig::default()).unwrap());
+            r.advertise_store(*e, store);
+        }
+        assert_eq!(r.advertised_stores().len(), 8);
     }
 }

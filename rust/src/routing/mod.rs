@@ -38,6 +38,13 @@
 //! [`WarmingAware`] overrides it with the O(log M) lookups and — by
 //! construction of the keys — makes **identical decisions** to its scan
 //! path (a property test pins this).
+//!
+//! Routing here is *within* an endpoint (task → manager). One layer up,
+//! the service plane routes tasks and endpoints onto forwarder shards
+//! with [`crate::service::ShardMap`]'s consistent-hash ring; the
+//! locality hints these schedulers consume ride on the task regardless
+//! of which shard brokered it, because store advertisements are shared
+//! across shards (see `docs/architecture.md`).
 
 use std::cmp::Reverse;
 use std::collections::{BTreeSet, HashMap};

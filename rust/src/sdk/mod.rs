@@ -16,8 +16,9 @@ use crate::batching::BatchRequest;
 use crate::common::error::Result;
 use crate::common::ids::{ContainerId, EndpointId, FunctionId, TaskId};
 use crate::common::task::Payload;
+use crate::datastore::DataRef;
 use crate::serialize::Value;
-use crate::service::FuncXService;
+use crate::service::{FuncXService, ShardMap};
 
 /// A user-facing client bound to one authenticated identity.
 #[derive(Clone)]
@@ -83,6 +84,17 @@ impl FuncXClient {
             .collect())
     }
 
+    /// Invoke a function whose input is a prior task's [`DataRef`]
+    /// (ref forwarding — the payload bytes never transit the service).
+    pub fn run_by_ref(
+        &self,
+        function: FunctionId,
+        endpoint: EndpointId,
+        input: &DataRef,
+    ) -> Result<TaskId> {
+        Ok(self.service.submit_by_ref(&self.token, function, endpoint, input)?.task)
+    }
+
     /// Non-blocking result fetch; `None` while still running.
     pub fn try_get_result(&self, task: TaskId) -> Result<Option<Value>> {
         self.service.get_result(task)
@@ -109,6 +121,29 @@ impl FuncXClient {
                 self.service.wait_result(*t, remaining)
             })
             .collect()
+    }
+
+    /// The service plane's consistent-hash shard map (client shard map).
+    ///
+    /// `run`/`run_by_ref`, `try_get_result`, and `get_result` already
+    /// route through this same map inside the service, so every hot-path
+    /// call lands directly on the shard that owns the task's state — no
+    /// cross-shard hop. The map is exposed so a distributed deployment
+    /// can address the owning shard's frontend straight from the client
+    /// (and so tests can pin assignment parity with the service plane).
+    pub fn shard_map(&self) -> ShardMap {
+        self.service.shard_map()
+    }
+
+    /// Which service shard owns `task`'s queue rows, result slot, and
+    /// completion notify.
+    pub fn shard_of_task(&self, task: TaskId) -> usize {
+        self.service.shard_map().shard_for_task(task)
+    }
+
+    /// Which service shard owns `endpoint`'s dispatch queue.
+    pub fn shard_of_endpoint(&self, endpoint: EndpointId) -> usize {
+        self.service.shard_map().shard_for_endpoint(endpoint)
     }
 
     pub fn service(&self) -> &Arc<FuncXService> {
@@ -154,6 +189,21 @@ mod tests {
         assert_eq!(res, input);
         fh.shutdown();
         handle.join();
+    }
+
+    #[test]
+    fn client_shard_map_matches_service_plane() {
+        let svc = Arc::new(FuncXService::new(ServiceConfig {
+            service_shards: 4,
+            ..Default::default()
+        }));
+        let (_u, tok) = svc.bootstrap_user("alice");
+        let client = FuncXClient::new(svc.clone(), tok);
+        assert_eq!(client.shard_map().shards(), 4);
+        let t = TaskId::new();
+        let e = EndpointId::new();
+        assert_eq!(client.shard_of_task(t), svc.shard_map().shard_for_task(t));
+        assert_eq!(client.shard_of_endpoint(e), svc.shard_map().shard_for_endpoint(e));
     }
 
     #[test]

@@ -1,4 +1,15 @@
 //! The REST-equivalent service API (Fig. 2 steps 1–3 and 6).
+//!
+//! The service plane is sharded N ways behind the consistent-hash
+//! [`ShardMap`] (§4.1 "designed to scale horizontally"): each
+//! [`ServiceShard`] owns its own KV store, payload store, and result
+//! latch, so shards share no locks on the hot path. Tasks hash by task
+//! id, endpoints by endpoint id, and forwarded-ref refcounts by ref
+//! identity; auth, the registry, and counters are shared (the registry
+//! *is* the cross-shard advertisement replication — every shard reads
+//! the same store/endpoint advertisements). With the default
+//! `service_shards = 1` the service behaves exactly like the unsharded
+//! original.
 
 use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex};
@@ -7,14 +18,15 @@ use crate::auth::{AuthService, Scope, Token};
 use crate::batching::BatchRequest;
 use crate::common::config::ServiceConfig;
 use crate::common::error::{Error, Result};
-use crate::common::ids::{EndpointId, FunctionId, TaskId, UserId};
+use crate::common::ids::{EndpointId, FunctionId, TaskId, UserId, Uuid};
 use crate::common::sync::Notify;
 use crate::common::task::{Payload, Task, TaskResult, TaskState};
 use crate::common::time::{Clock, Time, WallClock};
-use crate::datastore::{DataFabric, DataRef, TieredConfig, TieredStore, SERVICE_OWNER};
+use crate::datastore::{DataFabric, DataRef, TieredConfig, TieredStore};
 use crate::metrics::{Counters, LatencyBreakdown};
 use crate::registry::{EndpointStatus, Registry};
 use crate::serialize::{pack, unpack, Value, Wire};
+use crate::service::shard::{shard_owner, ShardMap};
 use crate::store::{KvStore, TaskQueue};
 
 /// Receipt for a submitted task.
@@ -23,40 +35,58 @@ pub struct SubmitReceipt {
     pub task: TaskId,
 }
 
+/// One slice of the service plane: private KV store, private payload
+/// store, private result latch. Everything keyed by a task, endpoint,
+/// or ref identity lives on exactly one shard (see [`ShardMap`]).
+struct ServiceShard {
+    kv: KvStore,
+    /// The shard's slice of the data fabric. Its local store advertises
+    /// frames under [`shard_owner`]`(i)`; at construction every shard's
+    /// fabric is peered with every *other* shard's local store, so a ref
+    /// minted on one shard resolves from any shard.
+    fabric: Arc<DataFabric>,
+    /// Signalled on every result stored on this shard, so
+    /// [`FuncXService::wait_result`] waiters only wake for results that
+    /// can be theirs.
+    result_notify: Arc<Notify>,
+    /// Task ids whose inputs were offloaded to this shard's fabric — so
+    /// the result hot path only touches the payload store's lock for
+    /// tasks that actually dispatched by reference.
+    offloaded: Mutex<HashSet<TaskId>>,
+    /// Chain tasks (submitted via [`FuncXService::submit_by_ref`]) →
+    /// the result ref they consume: when such a task reaches a terminal
+    /// state, the consumed `task-result:*` frame is reclaimed eagerly
+    /// instead of lingering until TTL (result-frame GC, mirroring how
+    /// offloaded *inputs* are reclaimed on terminal results). Keyed by
+    /// the chain task's shard.
+    consumed: Mutex<HashMap<TaskId, DataRef>>,
+    /// How many not-yet-terminal chain tasks still hold each forwarded
+    /// result ref (keyed by owner:epoch:key): a frame is only reclaimed
+    /// once its last pending consumer completes. Keyed by the *ref's*
+    /// identity hash — producer and consumer tasks may live on different
+    /// shards, but both reach the same refcount row this way.
+    pending_refs: Mutex<HashMap<String, usize>>,
+}
+
 /// The cloud-hosted service. Clone-shareable across threads.
 #[derive(Clone)]
 pub struct FuncXService {
     pub auth: AuthService,
     pub registry: Registry,
-    pub kv: KvStore,
-    /// The service-side data fabric: oversized task inputs are `put()`
-    /// here and dispatched as [`crate::datastore::DataRef`]s (§5).
-    /// Endpoint fabrics peer with `fabric.local()` (owner
-    /// [`SERVICE_OWNER`]) to resolve them.
+    /// Shard 0's slice of the service data fabric, kept as a public
+    /// handle: with the default single shard this *is* the service-side
+    /// fabric of old (oversized inputs are `put()` here and endpoint
+    /// fabrics peer with `fabric.local()`, owner
+    /// [`crate::datastore::SERVICE_OWNER`], to resolve them — §5).
+    /// Multi-shard wiring peers endpoint stores into every shard's
+    /// fabric via [`FuncXService::peer_store`].
     pub fabric: Arc<DataFabric>,
     pub cfg: ServiceConfig,
     pub clock: Arc<dyn Clock>,
     pub latency: Arc<LatencyBreakdown>,
     pub counters: Arc<Counters>,
-    /// Signalled on every stored result so [`FuncXService::wait_result`]
-    /// blocks instead of polling.
-    result_notify: Arc<Notify>,
-    /// Task ids whose inputs were offloaded to the fabric — so the
-    /// result hot path only touches the payload store's lock for tasks
-    /// that actually dispatched by reference.
-    offloaded: Arc<Mutex<HashSet<TaskId>>>,
-    /// Chain tasks (submitted via [`FuncXService::submit_by_ref`]) →
-    /// the result ref they consume: when such a task reaches a terminal
-    /// state, the consumed `task-result:*` frame is reclaimed eagerly
-    /// instead of lingering until TTL (result-frame GC, mirroring how
-    /// offloaded *inputs* are reclaimed on terminal results).
-    consumed: Arc<Mutex<HashMap<TaskId, DataRef>>>,
-    /// How many not-yet-terminal chain tasks still hold each forwarded
-    /// result ref (keyed by owner:epoch:key): a frame is only reclaimed
-    /// once its last pending consumer completes, so fanning one result
-    /// out to several chain tasks — or retrieving it while a chain task
-    /// is in flight — never pulls the bytes out from under a consumer.
-    pending_refs: Arc<Mutex<HashMap<String, usize>>>,
+    shard_map: ShardMap,
+    shards: Arc<Vec<ServiceShard>>,
 }
 
 /// The identity a forwarded ref is refcounted under.
@@ -80,53 +110,121 @@ fn terminal_error(r: &TaskResult) -> Error {
     }
 }
 
-/// The service payload store, TTL-pinned to the service's own clock
-/// (owner-stamped expiry): endpoint fabrics resolving against it with
-/// skewed clocks cannot mis-expire offloaded frames.
-fn build_fabric(cfg: &ServiceConfig, clock: Arc<dyn Clock>) -> Arc<DataFabric> {
-    let store = TieredStore::new(
-        SERVICE_OWNER,
-        TieredConfig {
-            mem_high_watermark: cfg.store_mem_watermark_bytes,
-            default_ttl_s: cfg.result_ttl_s,
-            spool_dir: None,
-        },
-    )
-    .expect("create service payload spool")
-    .with_owner_clock(clock);
-    Arc::new(DataFabric::new(Arc::new(store)))
+/// Build the N service shards. Each payload store is TTL-pinned to the
+/// service's own clock (owner-stamped expiry): endpoint fabrics
+/// resolving against it with skewed clocks cannot mis-expire offloaded
+/// frames. The shards' fabrics are cross-peered into a full mesh so a
+/// frame owned by any shard resolves from every shard.
+fn build_shards(
+    cfg: &ServiceConfig,
+    clock: &Arc<dyn Clock>,
+    counters: &Arc<Counters>,
+) -> Arc<Vec<ServiceShard>> {
+    let n = cfg.service_shards.max(1);
+    let shards: Vec<ServiceShard> = (0..n)
+        .map(|i| {
+            let store = TieredStore::new(
+                shard_owner(i),
+                TieredConfig {
+                    mem_high_watermark: cfg.store_mem_watermark_bytes,
+                    default_ttl_s: cfg.result_ttl_s,
+                    spool_dir: None,
+                },
+            )
+            .expect("create service payload spool")
+            .with_owner_clock(clock.clone());
+            let fabric = Arc::new(DataFabric::new(Arc::new(store)));
+            fabric.with_counters(counters.clone());
+            ServiceShard {
+                kv: KvStore::new(),
+                fabric,
+                result_notify: Arc::new(Notify::new()),
+                offloaded: Mutex::new(HashSet::new()),
+                consumed: Mutex::new(HashMap::new()),
+                pending_refs: Mutex::new(HashMap::new()),
+            }
+        })
+        .collect();
+    for (i, a) in shards.iter().enumerate() {
+        for (j, b) in shards.iter().enumerate() {
+            if i != j {
+                a.fabric.connect_peer(shard_owner(j), b.fabric.local().clone());
+            }
+        }
+    }
+    Arc::new(shards)
 }
 
 impl FuncXService {
     pub fn new(cfg: ServiceConfig) -> Self {
         let clock: Arc<dyn Clock> = Arc::new(WallClock::new());
         let counters = Counters::new();
-        let fabric = build_fabric(&cfg, clock.clone());
-        fabric.with_counters(counters.clone());
+        let shards = build_shards(&cfg, &clock, &counters);
+        let shard_map = ShardMap::new(cfg.service_shards.max(1));
         FuncXService {
             auth: AuthService::new(),
             registry: Registry::new(),
-            kv: KvStore::new(),
-            fabric,
+            fabric: shards[0].fabric.clone(),
             cfg,
             clock,
             latency: Arc::new(LatencyBreakdown::new()),
             counters,
-            result_notify: Arc::new(Notify::new()),
-            offloaded: Arc::new(Mutex::new(HashSet::new())),
-            consumed: Arc::new(Mutex::new(HashMap::new())),
-            pending_refs: Arc::new(Mutex::new(HashMap::new())),
+            shard_map,
+            shards,
         }
     }
 
-    /// Replace the service clock (construction-time only: the payload
-    /// store is rebuilt so its owner-stamped TTLs follow the new clock,
-    /// dropping any peers already wired into the old fabric).
+    /// Replace the service clock (construction-time only: the shard
+    /// payload stores are rebuilt so their owner-stamped TTLs follow
+    /// the new clock, dropping any peers already wired into the old
+    /// fabrics).
     pub fn with_clock(mut self, clock: Arc<dyn Clock>) -> Self {
         self.clock = clock;
-        self.fabric = build_fabric(&self.cfg, self.clock.clone());
-        self.fabric.with_counters(self.counters.clone());
+        self.shards = build_shards(&self.cfg, &self.clock, &self.counters);
+        self.fabric = self.shards[0].fabric.clone();
         self
+    }
+
+    // ---- shard routing -----------------------------------------------------
+
+    /// The consistent-hash shard map, shared verbatim with clients (the
+    /// SDK exposes it as the client shard map) and the simulator.
+    pub fn shard_map(&self) -> ShardMap {
+        self.shard_map
+    }
+
+    /// Number of service-plane shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn task_shard(&self, id: TaskId) -> &ServiceShard {
+        &self.shards[self.shard_map.shard_for_task(id)]
+    }
+
+    fn endpoint_shard(&self, ep: EndpointId) -> &ServiceShard {
+        &self.shards[self.shard_map.shard_for_endpoint(ep)]
+    }
+
+    fn ref_shard(&self, r: &DataRef) -> &ServiceShard {
+        &self.shards[self.shard_map.shard_for_key(&ref_ident(r))]
+    }
+
+    /// Every shard's service payload store, in shard order — the
+    /// forwarder advertises each downstream so agents can resolve
+    /// `iref`s no matter which shard offloaded them.
+    pub(crate) fn shard_stores(&self) -> Vec<Arc<TieredStore>> {
+        self.shards.iter().map(|s| s.fabric.local().clone()).collect()
+    }
+
+    /// Peer an endpoint's advertised store into EVERY shard's fabric:
+    /// result refs resolve on the owning task shard, replica routing
+    /// scans from any shard, and decommission drains can land on peers
+    /// registered via any shard.
+    pub(crate) fn peer_store(&self, owner: EndpointId, store: Arc<TieredStore>) {
+        for sh in self.shards.iter() {
+            sh.fabric.connect_peer(owner, store.clone());
+        }
     }
 
     // ---- registration (§3) -----------------------------------------------
@@ -182,10 +280,10 @@ impl FuncXService {
 
     /// Build the task record for one invocation, enforcing the inline
     /// data cap: inputs above `max_payload_bytes` are offloaded to the
-    /// data fabric and the task carries a compact `DataRef` in its
-    /// trailer meta (§5 pass-by-reference dispatch) — or, with
-    /// `ref_dispatch` disabled, are rejected as in the original
-    /// 10 MB-capped service.
+    /// owning task shard's fabric and the task carries a compact
+    /// `DataRef` in its trailer meta (§5 pass-by-reference dispatch) —
+    /// or, with `ref_dispatch` disabled, are rejected as in the
+    /// original 10 MB-capped service.
     #[allow(clippy::too_many_arguments)]
     fn make_task(
         &self,
@@ -206,8 +304,9 @@ impl FuncXService {
                 });
             }
             let size = input.len() as u64;
-            let r = self.fabric.put(&format!("task-input:{id}"), input, now)?;
-            self.offloaded.lock().expect("offloaded set poisoned").insert(id);
+            let shard = self.task_shard(id);
+            let r = shard.fabric.put(&format!("task-input:{id}"), input, now)?;
+            shard.offloaded.lock().expect("offloaded set poisoned").insert(id);
             crate::metrics::Counters::incr(&self.counters.tasks_ref_dispatched);
             crate::metrics::Counters::add(&self.counters.bytes_offloaded, size);
             return Ok(Task {
@@ -272,14 +371,14 @@ impl FuncXService {
                 )
             })
             .collect::<Result<_>>()?;
-        tasks.into_iter().map(|task| self.enqueue_task(task, now)).collect()
+        self.enqueue_batch(batch.endpoint, tasks, now)
     }
 
     fn enqueue_task(&self, task: Task, now: f64) -> Result<SubmitReceipt> {
         let id = task.id;
         self.latency.on_submit(id, now);
-        // Persist task state (Redis hashset; §4.1).
-        self.kv.hset("tasks", &id.to_string(), task.to_buffer());
+        // Persist task state on the owning shard (Redis hashset; §4.1).
+        self.task_shard(id).kv.hset("tasks", &id.to_string(), task.to_buffer());
         self.set_state(id, TaskState::Received);
         crate::metrics::Counters::incr(&self.counters.tasks_submitted);
         crate::metrics::Counters::add(
@@ -293,10 +392,43 @@ impl FuncXService {
         Ok(SubmitReceipt { task: id })
     }
 
+    /// Enqueue a pre-built batch: per-task records first, then ONE
+    /// queue append for the whole batch ([`TaskQueue::push_all`]) so the
+    /// forwarder's watch latch fires once per flush, not once per frame
+    /// (producer-side watch coalescing).
+    fn enqueue_batch(
+        &self,
+        endpoint: EndpointId,
+        tasks: Vec<Task>,
+        now: f64,
+    ) -> Result<Vec<SubmitReceipt>> {
+        for task in &tasks {
+            let id = task.id;
+            self.latency.on_submit(id, now);
+            self.task_shard(id).kv.hset("tasks", &id.to_string(), task.to_buffer());
+            self.set_state(id, TaskState::Received);
+            crate::metrics::Counters::incr(&self.counters.tasks_submitted);
+            crate::metrics::Counters::add(
+                &self.counters.bytes_through_service,
+                task.input.len() as u64,
+            );
+        }
+        self.task_queue(endpoint).push_all(&tasks)?;
+        let queued_at = self.clock.now();
+        let mut receipts = Vec::with_capacity(tasks.len());
+        for task in &tasks {
+            self.set_state(task.id, TaskState::WaitingForEndpoint);
+            self.latency.on_queued(task.id, queued_at);
+            receipts.push(SubmitReceipt { task: task.id });
+        }
+        Ok(receipts)
+    }
+
     // ---- status & results (Fig. 2 step 6) ----------------------------------
 
     pub fn task_state(&self, id: TaskId) -> Result<TaskState> {
         let raw = self
+            .task_shard(id)
             .kv
             .hget("task_state", &id.to_string())
             .ok_or_else(|| Error::NotFound(format!("task {id}")))?;
@@ -304,14 +436,14 @@ impl FuncXService {
     }
 
     pub(crate) fn set_state(&self, id: TaskId, state: TaskState) {
-        self.kv.hset("task_state", &id.to_string(), state.name().as_bytes());
+        self.task_shard(id).kv.hset("task_state", &id.to_string(), state.name().as_bytes());
     }
 
     /// Retrieve a completed task's output; `None` while still running.
     /// Results are purged after retrieval (§4.1 cost control). A by-ref
-    /// result (`"rref"`) resolves through the service fabric's fetch
-    /// ladder — local store, cache, peer forward, Globus model — so the
-    /// caller sees the bytes whether or not they ever touched the
+    /// result (`"rref"`) resolves through the owning shard fabric's
+    /// fetch ladder — local store, cache, peer forward, Globus model —
+    /// so the caller sees the bytes whether or not they ever touched the
     /// service queues; a vanished or corrupt frame surfaces the typed
     /// [`Error::NotFound`] / [`Error::Corrupt`].
     ///
@@ -326,8 +458,9 @@ impl FuncXService {
         if !state.is_terminal() {
             return Ok(None);
         }
+        let shard = self.task_shard(id);
         let key = format!("result:{id}");
-        let raw = self
+        let raw = shard
             .kv
             .get_at(&key, self.clock.now())
             .ok_or_else(|| Error::NotFound(format!("result for {id} (purged?)")))?;
@@ -341,29 +474,31 @@ impl FuncXService {
                 // still propagates — wait_result surfaces it rather
                 // than blocking on a ref that may be gone for good.)
                 let frame = match &result.output_ref {
-                    Some(r) => self.fabric.resolve(r, self.clock.now())?,
+                    Some(r) => shard.fabric.resolve(r, self.clock.now())?,
                     None => result.output.clone(),
                 };
                 let value = unpack(&frame)?;
-                self.kv.del(&key); // purge once actually retrieved
+                shard.kv.del(&key); // purge once actually retrieved
                 // Result-frame GC: the offloaded output has been
                 // delivered, so reclaim its frame from the owner store
                 // now instead of waiting out the TTL — unless a chain
                 // task is still pending on this very ref, in which case
                 // the last consumer's completion reclaims it instead.
-                // (The pending map stays locked through the reclaim so
-                // a racing submit_by_ref cannot adopt a ref that is
-                // being reclaimed.)
+                // (The pending map — on the REF's shard, reachable from
+                // producer and consumers alike — stays locked through
+                // the reclaim so a racing submit_by_ref cannot adopt a
+                // ref that is being reclaimed.)
                 if let Some(r) = &result.output_ref {
-                    let pending = self.pending_refs.lock().expect("pending refs poisoned");
-                    if !pending.contains_key(&ref_ident(r)) && self.fabric.reclaim(r) {
+                    let pending =
+                        self.ref_shard(r).pending_refs.lock().expect("pending refs poisoned");
+                    if !pending.contains_key(&ref_ident(r)) && shard.fabric.reclaim(r) {
                         crate::metrics::Counters::incr(&self.counters.result_frames_reclaimed);
                     }
                 }
                 Ok(Some(value))
             }
             _ => {
-                self.kv.del(&key); // purge once retrieved
+                shard.kv.del(&key); // purge once retrieved
                 Err(terminal_error(&result))
             }
         }
@@ -378,6 +513,7 @@ impl FuncXService {
             return Ok(None);
         }
         let raw = self
+            .task_shard(id)
             .kv
             .get_at(&format!("result:{id}"), self.clock.now())
             .ok_or_else(|| Error::NotFound(format!("result for {id} (purged?)")))?;
@@ -394,8 +530,9 @@ impl FuncXService {
     /// [`FuncXService::get_result`]).
     pub fn wait_result_ref(&self, id: TaskId, timeout: std::time::Duration) -> Result<DataRef> {
         let deadline = std::time::Instant::now() + timeout;
+        let notify = &self.task_shard(id).result_notify;
         loop {
-            let seen = self.result_notify.epoch();
+            let seen = notify.epoch();
             if let Some(r) = self.peek_result(id)? {
                 return match r.state {
                     TaskState::Success => r.output_ref.ok_or_else(|| {
@@ -410,7 +547,7 @@ impl FuncXService {
             if remaining.is_zero() {
                 return Err(Error::Timeout(format!("task {id}")));
             }
-            self.result_notify.wait_newer(seen, remaining);
+            notify.wait_newer(seen, remaining);
         }
     }
 
@@ -458,12 +595,17 @@ impl FuncXService {
         // reclaimed eagerly (result-frame GC) — the refcount lets one
         // result fan out to several chain tasks safely. Other refs
         // (re-forwarded inputs, external data) are left to their owners.
+        // The consumed record lives on the CHAIN task's shard; the
+        // refcount lives on the REF's shard (the producer may hash
+        // elsewhere — both sides must see the same row).
         if input.key.starts_with("task-result:") {
-            self.consumed
+            self.task_shard(task.id)
+                .consumed
                 .lock()
                 .expect("consumed map poisoned")
                 .insert(task.id, input.clone());
             *self
+                .ref_shard(input)
                 .pending_refs
                 .lock()
                 .expect("pending refs poisoned")
@@ -475,14 +617,16 @@ impl FuncXService {
     }
 
     /// Block until the task reaches a terminal state (test/SDK helper).
-    /// Wakeup-driven: waiters sleep on the service's result latch and are
-    /// woken by [`FuncXService::store_result`] — no poll interval.
+    /// Wakeup-driven: waiters sleep on the owning shard's result latch
+    /// and are woken by [`FuncXService::store_result`] — no poll
+    /// interval, and no cross-shard wakeup herd.
     pub fn wait_result(&self, id: TaskId, timeout: std::time::Duration) -> Result<Value> {
         let deadline = std::time::Instant::now() + timeout;
+        let notify = &self.task_shard(id).result_notify;
         loop {
             // Snapshot the epoch *before* checking so a result stored
             // between the check and the wait still wakes us.
-            let seen = self.result_notify.epoch();
+            let seen = notify.epoch();
             if let Some(v) = self.get_result(id)? {
                 return Ok(v);
             }
@@ -490,18 +634,19 @@ impl FuncXService {
             if remaining.is_zero() {
                 return Err(Error::Timeout(format!("task {id}")));
             }
-            self.result_notify.wait_newer(seen, remaining);
+            notify.wait_newer(seen, remaining);
         }
     }
 
     // ---- internals shared with the forwarder -------------------------------
 
     pub(crate) fn task_queue(&self, ep: EndpointId) -> TaskQueue<Task> {
-        TaskQueue::new(self.kv.clone(), format!("ep:{ep}:tasks"))
+        TaskQueue::new(self.endpoint_shard(ep).kv.clone(), format!("ep:{ep}:tasks"))
     }
 
     pub(crate) fn store_result(&self, r: &TaskResult) {
         let now = self.clock.now();
+        let shard = self.task_shard(r.task);
         // Replication (§5 survivability): before the record is
         // persisted, copies of a by-ref result frame are pushed to
         // other advertised stores and the replica set is recorded on
@@ -510,7 +655,7 @@ impl FuncXService {
         // the owner dies. No-op unless `replication_factor` is set.
         let replicated = self.replicate_result(r, now);
         let r = replicated.as_ref().unwrap_or(r);
-        self.kv.set_ex(
+        shard.kv.set_ex(
             &format!("result:{}", r.task),
             r.to_buffer(),
             self.cfg.result_ttl_s,
@@ -531,8 +676,8 @@ impl FuncXService {
         // case) never touch the payload store's lock. (Re-dispatch
         // after agent loss never reaches here non-terminal, so
         // in-flight refs stay resolvable.)
-        if self.offloaded.lock().expect("offloaded set poisoned").remove(&r.task) {
-            let _ = self.fabric.local().remove(&format!("task-input:{}", r.task));
+        if shard.offloaded.lock().expect("offloaded set poisoned").remove(&r.task) {
+            let _ = shard.fabric.local().remove(&format!("task-input:{}", r.task));
         }
         // Result-frame GC, chain flavor: this terminal task consumed a
         // prior result's ref (submit_by_ref). Drop its hold; when the
@@ -540,9 +685,10 @@ impl FuncXService {
         // `task-result:*` frame has served its purpose and is reclaimed
         // from the owner's store eagerly. Gated on the consumed map, so
         // ordinary results never touch it.
-        let consumed = self.consumed.lock().expect("consumed map poisoned").remove(&r.task);
+        let consumed = shard.consumed.lock().expect("consumed map poisoned").remove(&r.task);
         if let Some(cref) = consumed {
-            let mut pending = self.pending_refs.lock().expect("pending refs poisoned");
+            let mut pending =
+                self.ref_shard(&cref).pending_refs.lock().expect("pending refs poisoned");
             let drained = match pending.get_mut(&ref_ident(&cref)) {
                 Some(n) if *n > 1 => {
                     *n -= 1;
@@ -554,7 +700,7 @@ impl FuncXService {
                 }
             };
             if drained {
-                if self.fabric.reclaim(&cref) {
+                if shard.fabric.reclaim(&cref) {
                     crate::metrics::Counters::incr(&self.counters.result_frames_reclaimed);
                 }
                 // Replica copies of the reclaimed frame die with it
@@ -571,9 +717,12 @@ impl FuncXService {
                 // reclaimed bytes; purge it so a later get_result on
                 // the producer reports "purged" (consumed by the
                 // chain), not an eternal NotFound against a live
-                // record.
+                // record. The producer may live on another shard —
+                // route by its parsed task id.
                 if let Some(tid) = cref.key.strip_prefix("task-result:") {
-                    self.kv.del(&format!("result:{tid}"));
+                    if let Ok(uuid) = tid.parse::<Uuid>() {
+                        self.task_shard(TaskId(uuid)).kv.del(&format!("result:{tid}"));
+                    }
                 }
             }
         }
@@ -592,7 +741,7 @@ impl FuncXService {
         } else {
             crate::metrics::Counters::incr(&self.counters.warm_hits);
         }
-        self.result_notify.notify();
+        shard.result_notify.notify();
     }
 
     /// Push up to `replication_factor` copies of a successful by-ref
@@ -601,6 +750,8 @@ impl FuncXService {
     /// `output_ref` lists the endpoints now holding copies, or `None`
     /// when nothing was replicated (factor 0, inline result,
     /// already-replicated ref, unresolvable frame, or no peer stores).
+    /// Replica targets come from the shared registry, so copies may
+    /// land on peers whose endpoints registered via any shard.
     fn replicate_result(&self, r: &TaskResult, now: Time) -> Option<TaskResult> {
         if self.cfg.replication_factor == 0 || r.state != TaskState::Success {
             return None;
@@ -612,7 +763,7 @@ impl FuncXService {
         // Pull the frame through the fabric ladder (peer-forwarded from
         // the owner's store; a per-frame cost paid once, off the inline
         // result path — the record itself still carries zero bytes).
-        let frame = self.fabric.resolve(dref, now).ok()?;
+        let frame = self.task_shard(r.task).fabric.resolve(dref, now).ok()?;
         let rkey = dref.replica_key();
         let mut holders = Vec::new();
         for (ep, store) in self.registry.advertised_stores() {
@@ -637,50 +788,66 @@ impl FuncXService {
         Some(out)
     }
 
-    /// Periodic housekeeping: purge expired results (§4.1) and sweep
-    /// expired offloaded inputs out of the payload store (frames whose
-    /// tasks never produced a result would otherwise only expire
-    /// lazily on access — i.e. never). The offloaded-id set is pruned
-    /// in the same pass so ids of never-completing tasks don't
-    /// accumulate across the service's lifetime.
+    /// Periodic housekeeping across every shard: purge expired results
+    /// (§4.1) and sweep expired offloaded inputs out of the payload
+    /// stores (frames whose tasks never produced a result would
+    /// otherwise only expire lazily on access — i.e. never). The
+    /// offloaded-id sets are pruned in the same pass so ids of
+    /// never-completing tasks don't accumulate across the service's
+    /// lifetime.
     pub fn purge_expired_results(&self) -> usize {
         let now = self.clock.now();
-        self.fabric.local().evict_expired(now);
-        self.offloaded.lock().expect("offloaded set poisoned").retain(|id| {
-            self.fabric.local().live_tier(&format!("task-input:{id}"), now).is_some()
-        });
-        // Chain tasks that never produce a result would pin their
-        // consumed-ref records (and their ref holds) forever; drop
-        // records whose task is already terminal (handled at
-        // store_result) or unknown, releasing their refcounts without
-        // reclaiming (TTL owns frames nobody completes against).
-        {
-            let mut consumed = self.consumed.lock().expect("consumed map poisoned");
-            let mut pending = self.pending_refs.lock().expect("pending refs poisoned");
-            consumed.retain(|id, cref| {
-                let live = self.task_state(*id).map(|s| !s.is_terminal()).unwrap_or(false);
-                if !live {
-                    match pending.get_mut(&ref_ident(cref)) {
-                        Some(n) if *n > 1 => *n -= 1,
-                        _ => {
-                            pending.remove(&ref_ident(cref));
-                        }
+        let mut purged = 0usize;
+        for sh in self.shards.iter() {
+            sh.fabric.local().evict_expired(now);
+            sh.offloaded.lock().expect("offloaded set poisoned").retain(|id| {
+                sh.fabric.local().live_tier(&format!("task-input:{id}"), now).is_some()
+            });
+            // Chain tasks that never produce a result would pin their
+            // consumed-ref records (and their ref holds) forever; drop
+            // records whose task is already terminal (handled at
+            // store_result) or unknown, releasing their refcounts
+            // without reclaiming (TTL owns frames nobody completes
+            // against). The refcount rows live on the REF's shard, so
+            // dead entries are collected under the consumed lock and
+            // the cross-shard decrements run after it drops.
+            let dead: Vec<DataRef> = {
+                let mut consumed = sh.consumed.lock().expect("consumed map poisoned");
+                let mut dead = Vec::new();
+                consumed.retain(|id, cref| {
+                    let live = self.task_state(*id).map(|s| !s.is_terminal()).unwrap_or(false);
+                    if !live {
+                        dead.push(cref.clone());
+                    }
+                    live
+                });
+                dead
+            };
+            for cref in dead {
+                let mut pending =
+                    self.ref_shard(&cref).pending_refs.lock().expect("pending refs poisoned");
+                match pending.get_mut(&ref_ident(&cref)) {
+                    Some(n) if *n > 1 => *n -= 1,
+                    _ => {
+                        pending.remove(&ref_ident(&cref));
                     }
                 }
-                live
-            });
+            }
+            purged += sh.kv.purge_expired(now);
         }
-        self.kv.purge_expired(now)
+        purged
     }
 
     /// Connect an endpoint's agent link: spawns the forwarder (§4.1
-    /// "a unique forwarder process is created for each endpoint").
+    /// "a unique forwarder process is created for each endpoint") on
+    /// the endpoint's owning shard.
     ///
     /// Peer auto-discovery (§5): the agent advertises its tiered store
-    /// over the link and the forwarder peers the service fabric with it
-    /// (recorded in the registry), so `rref` results resolve without
-    /// manual `connect_peer` wiring; the forwarder advertises the
-    /// service payload store downstream symmetrically for `iref`s. On
+    /// over the link and the forwarder peers EVERY shard fabric with it
+    /// (recorded in the shared registry — the cross-shard advertisement
+    /// replication), so `rref` results resolve on whichever shard owns
+    /// the producing task; the forwarder advertises each shard's
+    /// payload store downstream symmetrically for `iref`s. On
     /// reconnect, a previously advertised store re-peers immediately.
     pub fn connect_endpoint(
         &self,
@@ -689,7 +856,7 @@ impl FuncXService {
     ) -> Result<crate::service::ForwarderHandle> {
         self.registry.set_endpoint_status(endpoint, EndpointStatus::Online)?;
         if let Some(store) = self.registry.advertised_store(endpoint) {
-            self.fabric.connect_peer(store.owner(), store);
+            self.peer_store(store.owner(), store);
         }
         Ok(crate::service::forwarder::spawn(self.clone(), endpoint, link))
     }
@@ -700,9 +867,12 @@ impl FuncXService {
     /// are re-homed to other advertised stores under their replica
     /// keys — in-flight refs minted against this owner keep resolving
     /// via the fabric's replica failover — then the advertisement is
-    /// withdrawn, the service fabric drops its peer link, the spool is
-    /// GC'd, and the endpoint is marked Offline. Returns the number of
-    /// frames re-homed.
+    /// withdrawn, every shard fabric drops its peer link, the spool is
+    /// GC'd, and the endpoint is marked Offline. Requeue + drain stay
+    /// within the owning shard (the forwarder and queue live there),
+    /// while drain targets come from the shared registry, so replicas
+    /// may land on peers registered via any shard. Returns the number
+    /// of frames re-homed.
     pub fn decommission_endpoint(&self, endpoint: EndpointId) -> Result<usize> {
         let now = self.clock.now();
         let store = self.registry.advertised_store(endpoint);
@@ -745,7 +915,9 @@ impl FuncXService {
             }
         }
         self.registry.withdraw_store(endpoint);
-        self.fabric.disconnect_peer(endpoint);
+        for sh in self.shards.iter() {
+            sh.fabric.disconnect_peer(endpoint);
+        }
         if let Some(store) = &store {
             store.purge_all();
         }
@@ -767,6 +939,7 @@ impl FuncXService {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::datastore::SERVICE_OWNER;
 
     fn svc() -> (FuncXService, Token, FunctionId, EndpointId) {
         let s = FuncXService::new(ServiceConfig::default());
@@ -822,7 +995,7 @@ mod tests {
         let task = s.task_queue(e).pop().unwrap().unwrap();
         let dref = task.input_ref.expect("oversized input must go by reference");
         assert!(dref.size > 10 * 1024 * 1024);
-        assert_eq!(dref.owner, crate::datastore::SERVICE_OWNER);
+        assert_eq!(dref.owner, SERVICE_OWNER);
         assert!(task.input.len() < 100, "placeholder input only");
         // The frame resolves from the service store bit-for-bit.
         let frame = s.fabric.resolve(&dref, s.clock.now()).unwrap();
@@ -1112,5 +1285,47 @@ mod tests {
         let got = s.fabric.resolve(&dref, s.clock.now()).unwrap();
         assert_eq!(got.as_slice(), frame.as_slice());
         assert!(crate::metrics::Counters::get(&s.counters.failover_resolutions) >= 1);
+    }
+
+    #[test]
+    fn sharded_service_routes_and_cross_resolves() {
+        let s = FuncXService::new(ServiceConfig { service_shards: 4, ..Default::default() });
+        assert_eq!(s.shard_count(), 4);
+        let (_u, tok) = s.bootstrap_user("alice");
+        let f = s.register_function(&tok, "noop", Payload::Noop, None).unwrap();
+        let e = s.register_endpoint(&tok, "laptop", "sharded endpoint").unwrap();
+        // Small tasks land spread across shards but queue on the one
+        // endpoint queue (owned by the endpoint's shard).
+        for _ in 0..16 {
+            s.submit(&tok, f, e, &Value::Null).unwrap();
+        }
+        assert_eq!(s.task_queue(e).len(), 16);
+        // An oversized input offloads into its TASK shard's store; any
+        // shard's fabric resolves it through the cross-shard peer mesh
+        // (here: shard 0's public handle).
+        let big = Value::Bytes(vec![0xCD; 11 * 1024 * 1024]);
+        let r = s.submit(&tok, f, e, &big).unwrap();
+        let q = s.task_queue(e);
+        let mut dref = None;
+        while let Some(t) = q.pop().unwrap() {
+            if t.id == r.task {
+                dref = t.input_ref.clone();
+            }
+        }
+        let dref = dref.expect("oversized input must go by reference");
+        let own_shard = s.shard_map().shard_for_task(r.task);
+        assert_eq!(dref.owner, shard_owner(own_shard));
+        let frame = s.fabric.resolve(&dref, s.clock.now()).unwrap();
+        assert_eq!(frame.len() as u64, dref.size);
+        // The result round-trips through the owning shard.
+        s.store_result(&TaskResult {
+            task: r.task,
+            state: TaskState::Success,
+            output: pack(&Value::Int(9), 0).unwrap(),
+            output_ref: None,
+            exec_time_s: 0.0,
+            cold_start: false,
+        });
+        assert_eq!(s.get_result(r.task).unwrap(), Some(Value::Int(9)));
     }
 }

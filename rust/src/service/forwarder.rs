@@ -114,10 +114,15 @@ fn forwarder_loop(
     // `link()`), pushes to this endpoint's task queue, and shutdown.
     let wake = link.wake_handle();
     queue.watch(wake.clone());
-    // Advertise the service payload store down the link so the agent's
-    // fabric auto-peers for `iref` resolution (§5 peer auto-discovery;
-    // the agent advertises its own store upstream symmetrically).
-    let _ = link.send(Downstream::Advertise(svc.fabric.local().clone()));
+    // Advertise EVERY shard's payload store down the link so the
+    // agent's fabric auto-peers for `iref` resolution no matter which
+    // shard offloaded the input (§5 peer auto-discovery; the agent
+    // advertises its own store upstream symmetrically). Each store
+    // carries its own shard-owner id, so the agent-side handler needs
+    // no shard awareness — one Advertise per store, keyed by owner.
+    for store in svc.shard_stores() {
+        let _ = link.send(Downstream::Advertise(store));
+    }
     // Tasks sent to the agent but not yet completed (§4.1 ack cache).
     // Shared handles: caching a task and framing it onto the link are
     // refcount bumps on one allocation, not clones of the record (whose
@@ -224,10 +229,12 @@ fn forwarder_loop(
                 }
                 Upstream::Advertise(store) => {
                     // The endpoint's tiered store: record it in the
-                    // registry and peer the service fabric so `rref`
-                    // results resolve without manual wiring.
+                    // shared registry (visible to every shard — the
+                    // cross-shard advertisement replication) and peer
+                    // EVERY shard's fabric so `rref` results resolve on
+                    // whichever shard owns the producing task.
                     svc.registry.advertise_store(endpoint, store.clone());
-                    svc.fabric.connect_peer(store.owner(), store);
+                    svc.peer_store(store.owner(), store);
                 }
                 Upstream::Heartbeat { .. } => {
                     last_heartbeat = svc.clock.now();

@@ -5,9 +5,16 @@
 //! queue + result store per endpoint, and runs a *forwarder* per
 //! connected endpoint that dispatches tasks over the agent link and
 //! persists returned results (Fig. 2's lifecycle).
+//!
+//! The plane is sharded N ways behind the consistent-hash
+//! [`ShardMap`] (see `docs/architecture.md`): each shard owns a private
+//! KV store, payload store, and result latch; forwarders run on the
+//! shard owning their endpoint.
 
 mod api;
 mod forwarder;
+pub mod shard;
 
 pub use api::{FuncXService, SubmitReceipt};
 pub use forwarder::ForwarderHandle;
+pub use shard::{shard_owner, ShardMap};

@@ -1,0 +1,141 @@
+//! Fleet-level simulation: a sharded service plane in front of many
+//! simulated endpoints.
+//!
+//! The live stack shards its service plane behind a consistent-hash
+//! ring ([`crate::service::ShardMap`]); this module drives the *same*
+//! map under virtual time, so the simulator's shard assignment is
+//! bit-identical to the live forwarder's. The cost model is the
+//! pipeline bottleneck bound: each shard is a serial broker charging
+//! `broker_cost_s` per task (the service-side hset/queue/notify work a
+//! forwarder shard performs), each endpoint runs its tasks through the
+//! full [`SimEndpoint`] model, and the fleet makespan is the slower of
+//! the two layers. Sharding N ways divides the broker layer's serial
+//! cost by the ring's balance — the simulated counterpart of the
+//! tasks/s-per-shard curve pinned in `benches/hotpath.rs`.
+
+use crate::common::ids::TaskId;
+use crate::service::ShardMap;
+use crate::sim::endpoint::{SimEndpoint, SimTask};
+
+/// Results of one fleet run.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    /// Fleet makespan: the slower of the broker layer and the slowest
+    /// endpoint, seconds.
+    pub completion_s: f64,
+    pub tasks: usize,
+    /// Achieved fleet-wide throughput, tasks/s.
+    pub throughput: f64,
+    /// Tasks brokered by each service shard (ring balance).
+    pub shard_tasks: Vec<usize>,
+    /// Serial brokering time of the most loaded shard, seconds.
+    pub broker_bound_s: f64,
+    /// Completion time of the slowest endpoint, seconds.
+    pub endpoint_bound_s: f64,
+}
+
+/// A sharded service plane over a set of simulated endpoints.
+pub struct SimFleet {
+    map: ShardMap,
+    endpoints: Vec<SimEndpoint>,
+    /// Serial per-task brokering cost at one forwarder shard, seconds.
+    broker_cost_s: f64,
+}
+
+impl SimFleet {
+    pub fn new(shards: usize, endpoints: Vec<SimEndpoint>, broker_cost_s: f64) -> Self {
+        SimFleet { map: ShardMap::new(shards), endpoints, broker_cost_s }
+    }
+
+    pub fn shard_map(&self) -> ShardMap {
+        self.map
+    }
+
+    /// Run `per_endpoint` copies of `task` on every endpoint, tasks
+    /// hashed onto the shard ring exactly as the live service plane
+    /// hashes them.
+    pub fn run(&mut self, task: SimTask, per_endpoint: usize) -> FleetReport {
+        let total = per_endpoint * self.endpoints.len();
+        let mut shard_tasks = vec![0usize; self.map.shards()];
+        for _ in 0..total {
+            shard_tasks[self.map.shard_for_task(TaskId::new())] += 1;
+        }
+        let broker_bound_s =
+            shard_tasks.iter().copied().max().unwrap_or(0) as f64 * self.broker_cost_s;
+        let batch: Vec<SimTask> = vec![task; per_endpoint];
+        let endpoint_bound_s = self
+            .endpoints
+            .iter_mut()
+            .map(|e| e.run(&batch).completion_s)
+            .fold(0.0f64, f64::max);
+        let completion_s = broker_bound_s.max(endpoint_bound_s);
+        FleetReport {
+            completion_s,
+            tasks: total,
+            throughput: if completion_s > 0.0 { total as f64 / completion_s } else { 0.0 },
+            shard_tasks,
+            broker_bound_s,
+            endpoint_bound_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::Randomized;
+    use crate::sim::profile::SimProfile;
+
+    fn fleet(shards: usize, endpoints: usize) -> SimFleet {
+        let eps = (0..endpoints)
+            .map(|i| {
+                SimEndpoint::new(
+                    SimProfile::theta(),
+                    8,
+                    Box::new(Randomized { prefetch: 10 }),
+                    true,
+                    7 + i as u64,
+                )
+            })
+            .collect();
+        // 1 ms serial brokering per task: broker-bound for no-op
+        // batches, so the shard count is what the makespan measures.
+        SimFleet::new(shards, eps, 1e-3)
+    }
+
+    #[test]
+    fn ring_balance_matches_the_live_map() {
+        let mut f = fleet(4, 4);
+        let r = f.run(SimTask::noop(), 2000);
+        assert_eq!(r.tasks, 8000);
+        assert_eq!(r.shard_tasks.len(), 4);
+        let ideal = r.tasks / 4;
+        for (i, n) in r.shard_tasks.iter().enumerate() {
+            assert!(
+                *n <= 2 * ideal && *n > 0,
+                "shard {i} brokered {n} of {} tasks — ring badly unbalanced",
+                r.tasks
+            );
+        }
+    }
+
+    #[test]
+    fn broker_bound_fleet_scales_with_shard_count() {
+        let t1 = fleet(1, 4).run(SimTask::noop(), 2000).throughput;
+        let t4 = fleet(4, 4).run(SimTask::noop(), 2000).throughput;
+        assert!(
+            t4 >= 2.5 * t1,
+            "simulated shard scaling: N=4 gives {t4:.0} tasks/s vs {t1:.0} at N=1"
+        );
+    }
+
+    #[test]
+    fn endpoint_bound_fleet_ignores_extra_shards() {
+        // Long tasks: the endpoint layer dominates and more shards
+        // cannot help — the report must say which bound is active.
+        let mut f = fleet(8, 2);
+        let r = f.run(SimTask::sleep(1.0), 64);
+        assert!(r.endpoint_bound_s > r.broker_bound_s);
+        assert!((r.completion_s - r.endpoint_bound_s).abs() < 1e-9);
+    }
+}

@@ -21,8 +21,10 @@
 
 mod endpoint;
 mod events;
+mod fleet;
 mod profile;
 
 pub use endpoint::{SimEndpoint, SimReport, SimTask};
 pub use events::{Event, EventQueue};
+pub use fleet::{FleetReport, SimFleet};
 pub use profile::SimProfile;

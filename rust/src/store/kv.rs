@@ -229,6 +229,33 @@ impl KvStore {
         n
     }
 
+    /// Batched RPUSH: append several values under ONE lock acquisition
+    /// and issue ONE wakeup set for the whole flush — producer-side
+    /// watch coalescing. A burst of B frames costs each watcher one
+    /// `Notify` instead of B (and blocked poppers one condvar broadcast),
+    /// so a producer flushing batches cannot drown its consumers in
+    /// redundant wakeups. Returns the list length after the append; a
+    /// no-op (no lock, no wakeup) for an empty batch.
+    pub fn rpush_many(&self, key: &str, values: Vec<Buffer>) -> usize {
+        if values.is_empty() {
+            return self.llen(key);
+        }
+        let cell = self.cell(key);
+        let mut g = cell.data.lock().expect("kv store poisoned");
+        let l = g.lists.entry(key.to_string()).or_default();
+        for v in values {
+            l.push_back(v);
+        }
+        let n = l.len();
+        let watchers = g.live_watchers(key);
+        drop(g);
+        cell.cv.notify_all();
+        for w in watchers {
+            w.notify();
+        }
+        n
+    }
+
     /// LPUSH: prepend to the head (used to *return* undelivered tasks to
     /// the front of the queue on agent loss; §4.1).
     pub fn lpush(&self, key: &str, value: impl Into<Buffer>) -> usize {
@@ -429,6 +456,36 @@ mod tests {
         let t0 = std::time::Instant::now();
         assert_eq!(kv.blpop("q", Duration::from_millis(30)), None);
         assert!(t0.elapsed() >= Duration::from_millis(30));
+    }
+
+    #[test]
+    fn rpush_many_appends_in_order_with_one_notify() {
+        let kv = KvStore::new();
+        let n = Arc::new(Notify::new());
+        kv.add_watch("q", n.clone());
+        kv.rpush("q", b"a".to_vec());
+        let before = n.notify_count();
+        let batch = vec![b"b".to_vec().into(), b"c".to_vec().into(), b"d".to_vec().into()];
+        let len = kv.rpush_many("q", batch);
+        assert_eq!(len, 4);
+        assert_eq!(n.notify_count(), before + 1, "one notify per flush, not per frame");
+        let raw: Vec<Vec<u8>> = kv.lpop_n("q", 10).iter().map(|b| b.to_vec()).collect();
+        assert_eq!(raw, vec![b"a".to_vec(), b"b".to_vec(), b"c".to_vec(), b"d".to_vec()]);
+        // Empty flush: no wakeup at all.
+        let before = n.notify_count();
+        assert_eq!(kv.rpush_many("q", Vec::new()), 0);
+        assert_eq!(n.notify_count(), before);
+    }
+
+    #[test]
+    fn rpush_many_wakes_blocked_popper() {
+        let kv = KvStore::new();
+        let kv2 = kv.clone();
+        let h = thread::spawn(move || kv2.blpop_n("q", 8, Duration::from_secs(5)));
+        thread::sleep(Duration::from_millis(20));
+        kv.rpush_many("q", vec![b"x".to_vec().into(), b"y".to_vec().into()]);
+        let got = h.join().unwrap();
+        assert_eq!(got.len(), 2);
     }
 
     #[test]

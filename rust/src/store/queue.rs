@@ -38,6 +38,14 @@ impl<T: Wire> TaskQueue<T> {
         Ok(self.kv.rpush(&self.key, item.to_buffer()))
     }
 
+    /// Append a whole batch under one lock acquisition with ONE watcher
+    /// wakeup for the flush ([`KvStore::rpush_many`] — producer-side
+    /// watch coalescing): the batch-submit path enqueues B tasks for the
+    /// cost of a single notify.
+    pub fn push_all(&self, items: &[T]) -> Result<usize> {
+        Ok(self.kv.rpush_many(&self.key, items.iter().map(Wire::to_buffer).collect()))
+    }
+
     /// Return an item to the *front* (re-dispatch after agent loss; §4.1).
     pub fn push_front(&self, item: &T) -> Result<usize> {
         Ok(self.kv.lpush(&self.key, item.to_buffer()))
@@ -137,6 +145,18 @@ mod tests {
         }
         assert_eq!(q.pop_n(4).unwrap(), vec![0, 1, 2, 3]);
         assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn push_all_preserves_order_and_coalesces_wakeups() {
+        let kv = KvStore::new();
+        let q: TaskQueue<u32> = TaskQueue::new(kv, "q");
+        let n = std::sync::Arc::new(crate::common::sync::Notify::new());
+        q.watch(n.clone());
+        let before = n.notify_count();
+        q.push_all(&[1, 2, 3, 4]).unwrap();
+        assert_eq!(n.notify_count(), before + 1, "one notify for the whole batch");
+        assert_eq!(q.pop_n(8).unwrap(), vec![1, 2, 3, 4]);
     }
 
     #[test]

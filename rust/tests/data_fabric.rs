@@ -212,6 +212,130 @@ fn three_task_chain_forwards_refs_and_routes_to_the_data() {
     handle.join();
 }
 
+/// THE cross-shard acceptance pin for the sharded service plane: the
+/// A→B→C ref chain through a FOUR-shard service, with the data-owner
+/// endpoint and the consumer endpoint deliberately hashing to
+/// *different* shards. A runs on the owner; B and C run on the
+/// consumer with their inputs passed by ref. Every hop crosses shard
+/// boundaries — the offloaded frames live behind one shard's fabric
+/// while the consuming tasks' state lives behind another — and still
+/// not one payload byte transits the service inline, because shard
+/// fabrics are full-mesh peered and every endpoint store is wired into
+/// every shard on advertisement.
+#[test]
+fn cross_shard_chain_moves_zero_payload_bytes_through_the_service() {
+    let clock = Arc::new(WallClock::new());
+    let svc = FuncXService::new(ServiceConfig {
+        max_payload_bytes: 4096,
+        service_shards: 4,
+        ..Default::default()
+    })
+    .with_clock(clock.clone());
+    let (_u, tok) = svc.bootstrap_user("alice");
+    let f = svc.register_function(&tok, "echo", Payload::Echo, None).unwrap();
+
+    // Endpoint ids are random, so draw consumers until one lands on a
+    // different shard than the owner (P(miss) = 1/4 per draw).
+    let map = svc.shard_map();
+    let e_owner = svc.register_endpoint(&tok, "owner", "").unwrap();
+    let mut e_consumer = svc.register_endpoint(&tok, "consumer", "").unwrap();
+    let mut draws = 0;
+    while map.shard_for_endpoint(e_consumer) == map.shard_for_endpoint(e_owner) {
+        draws += 1;
+        assert!(draws < 256, "could not draw a distinct shard in 256 tries");
+        e_consumer = svc.register_endpoint(&tok, &format!("consumer{draws}"), "").unwrap();
+    }
+    assert_ne!(
+        map.shard_for_endpoint(e_owner),
+        map.shard_for_endpoint(e_consumer),
+        "the chain must cross shards"
+    );
+
+    // Owner stack: A executes here; its oversized result is offloaded
+    // into this endpoint's store.
+    let store_owner = Arc::new(TieredStore::new(e_owner, TieredConfig::default()).unwrap());
+    let (fwd1, agent1) = link();
+    let h1 = EndpointBuilder::new()
+        .config(EndpointConfig {
+            min_nodes: 1,
+            workers_per_node: 2,
+            max_result_bytes: 4096,
+            ..Default::default()
+        })
+        .fabric(Arc::new(DataFabric::new(store_owner.clone())))
+        .clock(clock.clone())
+        .heartbeat_period(0.05)
+        .start(agent1);
+    let fh1 = svc.connect_endpoint(e_owner, fwd1).unwrap();
+
+    // Consumer stack: B and C execute here, resolving their by-ref
+    // inputs straight from the owner's store (endpoint-to-endpoint
+    // peering, like the fetch ladder) — off the service's inline path.
+    let store_consumer =
+        Arc::new(TieredStore::new(e_consumer, TieredConfig::default()).unwrap());
+    let fabric_consumer = Arc::new(DataFabric::new(store_consumer.clone()));
+    fabric_consumer.connect_peer(e_owner, store_owner.clone());
+    let (fwd2, agent2) = link();
+    let h2 = EndpointBuilder::new()
+        .config(EndpointConfig {
+            min_nodes: 1,
+            workers_per_node: 2,
+            max_result_bytes: 4096,
+            ..Default::default()
+        })
+        .fabric(fabric_consumer.clone())
+        .clock(clock)
+        .heartbeat_period(0.05)
+        .start(agent2);
+    let fh2 = svc.connect_endpoint(e_consumer, fwd2).unwrap();
+
+    // A on the owner: 256 KB in (offloaded at submit), 256 KB out
+    // (offloaded into the owner's store).
+    let payload = Value::Bytes(vec![0x42; 256 * 1024]);
+    let a = svc.submit(&tok, f, e_owner, &payload).unwrap();
+    let ref_a = svc.wait_result_ref(a.task, Duration::from_secs(10)).unwrap();
+    assert_eq!(ref_a.owner, e_owner, "A's result lives in the owner's store");
+
+    // B and C on the consumer, chained by ref across the shard split.
+    let b = svc.submit_by_ref(&tok, f, e_consumer, &ref_a).unwrap();
+    let ref_b = svc.wait_result_ref(b.task, Duration::from_secs(10)).unwrap();
+    assert_eq!(ref_b.owner, e_consumer, "B's result lives in the consumer's store");
+    let c = svc.submit_by_ref(&tok, f, e_consumer, &ref_b).unwrap();
+    let out = svc.wait_result(c.task, Duration::from_secs(10)).unwrap();
+    assert_eq!(out, payload, "the chain round-trips the payload across shards");
+
+    // Byte pins: zero inline payload bytes through the service in
+    // either direction, exactly as in the single-shard chain.
+    assert_eq!(Counters::get(&svc.counters.bytes_through_service), 0);
+    assert_eq!(Counters::get(&svc.counters.result_bytes_through_service), 0);
+    assert_eq!(Counters::get(&svc.counters.results_ref_offloaded), 3);
+    assert_eq!(Counters::get(&svc.counters.tasks_ref_forwarded), 2);
+
+    // The cross-endpoint hop happened endpoint-side: B's input was
+    // forwarded from the owner's store into the consumer's fabric, and
+    // C's input (B's own output) was a local hit.
+    assert!(
+        fabric_consumer.stats.frames_forwarded.load(Relaxed)
+            + fabric_consumer.stats.cache_hits.load(Relaxed)
+            >= 1,
+        "B's input must resolve through the consumer's fabric, not the service"
+    );
+    assert!(
+        fabric_consumer.stats.local_hits.load(Relaxed) >= 1,
+        "C's input must be a local hit in the consumer's store"
+    );
+
+    // Eager result GC still closes the loop across shards: A's and B's
+    // outputs reclaimed when their consumers completed, C's on
+    // retrieval.
+    assert_eq!(Counters::get(&svc.counters.result_frames_reclaimed), 3);
+
+    fh1.shutdown();
+    h1.join();
+    fh2.shutdown();
+    h2.join();
+}
+
 /// THE churn acceptance pin (§4.1 + §5 survivability): the ref-owner
 /// endpoint is killed mid A→B→C chain with replication enabled. The
 /// chain still completes — B's input fails over to the replica copy the
