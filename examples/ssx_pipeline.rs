@@ -153,18 +153,14 @@ fn main() {
     );
 
     // Fig. 3-style latency breakdown for the batch.
-    let breakdowns = svc.latency.all_breakdowns();
-    if !breakdowns.is_empty() {
-        let n = breakdowns.len() as f64;
-        let sum = breakdowns.iter().fold([0.0; 4], |acc, b| {
-            [acc[0] + b.t_s, acc[1] + b.t_f, acc[2] + b.t_e, acc[3] + b.t_w]
-        });
+    let b = svc.latency.stage_summaries();
+    if b.completed > 0 {
         println!(
             "mean stage latency (ms): t_s {:.2}  t_f {:.2}  t_e {:.2}  t_w {:.2}",
-            1e3 * sum[0] / n,
-            1e3 * sum[1] / n,
-            1e3 * sum[2] / n,
-            1e3 * sum[3] / n
+            1e3 * b.t_s.mean,
+            1e3 * b.t_f.mean,
+            1e3 * b.t_e.mean,
+            1e3 * b.t_w.mean
         );
     }
 

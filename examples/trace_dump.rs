@@ -1,0 +1,97 @@
+//! Flight-recorder walkthrough: a 3-task ref chain over a 2-shard
+//! service plane, then dump each task's assembled timeline.
+//!
+//! Task A carries an oversized input, so the service offloads it to the
+//! data fabric and dispatches a `DataRef`; its oversized result is
+//! likewise stored by ref. B consumes A's result ref, C consumes B's —
+//! the payload bytes never transit the service queues. Every hop
+//! (submit, shard enqueue, forward, worker start/finish, ref resolve,
+//! result store) lands in the flight recorder's per-component rings,
+//! and `client.trace(task)` assembles one cross-component timeline per
+//! task. The rendered output here is the worked example in
+//! `docs/observability.md`.
+//!
+//! ```text
+//! cargo run --release --example trace_dump
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use funcx::common::config::{EndpointConfig, ServiceConfig};
+use funcx::common::task::Payload;
+use funcx::datastore::{DataFabric, TieredConfig, TieredStore};
+use funcx::endpoint::{link, EndpointBuilder};
+use funcx::sdk::FuncXClient;
+use funcx::serialize::Value;
+use funcx::service::FuncXService;
+
+fn main() {
+    // 2 service shards: task state and endpoint queues hash across the
+    // shard ring, so one chain's timeline spans shard components.
+    let svc = Arc::new(FuncXService::new(ServiceConfig {
+        service_shards: 2,
+        max_payload_bytes: 4096, // force A's 64 KB input by-ref
+        ..Default::default()
+    }));
+    let (_user, token) = svc.bootstrap_user("trace@demo");
+    let fc = FuncXClient::new(svc.clone(), token);
+
+    // One live endpoint with its own tiered store + fabric; results
+    // over 4 KB are offloaded, so the chain links by DataRef.
+    let ep = fc.register_endpoint("chain-ep", "").unwrap();
+    let store = Arc::new(TieredStore::new(ep, TieredConfig::default()).unwrap());
+    let (fwd, agent_side) = link();
+    let agent = EndpointBuilder::new()
+        .config(EndpointConfig {
+            min_nodes: 1,
+            workers_per_node: 2,
+            max_result_bytes: 4096,
+            ..Default::default()
+        })
+        .fabric(Arc::new(DataFabric::new(store)))
+        .latency(svc.latency.clone())
+        .clock(svc.clock.clone())
+        .recorder(svc.recorder.clone())
+        .heartbeat_period(0.05)
+        .start(agent_side);
+    let fh = svc.connect_endpoint(ep, fwd).unwrap();
+    let echo = fc.register_function("echo", Payload::Echo).unwrap();
+
+    // A -> B -> C: B and C are submitted by ref against the previous
+    // task's result, so their inputs resolve through the data fabric.
+    let payload = Value::Bytes(vec![0x5a; 64 * 1024]);
+    let a = fc.run(echo, ep, &payload).unwrap();
+    let ref_a = svc.wait_result_ref(a, Duration::from_secs(15)).unwrap();
+    let b = fc.run_by_ref(echo, ep, &ref_a).unwrap();
+    let ref_b = svc.wait_result_ref(b, Duration::from_secs(15)).unwrap();
+    let c = fc.run_by_ref(echo, ep, &ref_b).unwrap();
+    let out = fc.get_result(c, Duration::from_secs(15)).unwrap();
+    assert_eq!(out, payload, "the chain must round-trip the payload");
+
+    // Dump each task's assembled cross-component timeline.
+    for (name, task) in [("A", a), ("B", b), ("C", c)] {
+        let trace = fc.trace(task).expect("completed task must have a trace");
+        println!("--- task {name} ---");
+        print!("{}", trace.render());
+        println!(
+            "    ({} events across {} components)",
+            trace.events.len(),
+            trace.components().len()
+        );
+    }
+
+    // The same plane, summarized: a few registry numbers for the chain.
+    let snap = fc.metrics();
+    println!(
+        "registry: submitted={} completed={} ref_dispatched={} bytes_offloaded={}",
+        snap.counter_total("funcx_tasks_submitted_total"),
+        snap.counter_total("funcx_tasks_completed_total"),
+        snap.counter_total("funcx_tasks_ref_dispatched_total"),
+        snap.counter_total("funcx_bytes_offloaded_total"),
+    );
+
+    fh.shutdown();
+    agent.join();
+    println!("trace_dump OK");
+}

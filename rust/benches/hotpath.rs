@@ -557,6 +557,93 @@ fn main() {
         );
     }
 
+    harness::section("flight recorder overhead (tracing on vs off)");
+    {
+        // The observability acceptance pin: the registry + flight
+        // recorder must stay off the hot path. Drive the same 4-endpoint
+        // fleet twice — once with `trace_ring_capacity: 0` (the PR 7
+        // baseline: no recorder anywhere) and once with the default
+        // rings wired through service, forwarders, and agents — and
+        // assert the traced run keeps >= 95% of baseline throughput.
+        // The traced run's full registry exposition lands in
+        // BENCH_metrics.json for the CI artifact.
+        const EPS: usize = 4;
+        const TASKS_PER_EP: usize = 2000;
+        let run_cfg = |ring: usize| -> (f64, Option<String>) {
+            let svc = Arc::new(FuncXService::new(ServiceConfig {
+                trace_ring_capacity: ring,
+                ..Default::default()
+            }));
+            let (_u, tok) = svc.bootstrap_user("trace");
+            let fc = FuncXClient::new(svc.clone(), tok);
+            let mut stacks = Vec::new();
+            for i in 0..EPS {
+                let ep = fc.register_endpoint(&format!("ep{i}"), "").unwrap();
+                let (fwd, agent_side) = link();
+                let mut builder = EndpointBuilder::new()
+                    .config(EndpointConfig {
+                        min_nodes: 2,
+                        workers_per_node: 2,
+                        ..Default::default()
+                    })
+                    .latency(svc.latency.clone())
+                    .clock(svc.clock.clone())
+                    .heartbeat_period(0.05)
+                    .seed(900 + i as u64);
+                if ring > 0 {
+                    builder = builder.recorder(svc.recorder.clone());
+                }
+                let agent = builder.start(agent_side);
+                let fh = svc.connect_endpoint(ep, fwd).unwrap();
+                let f = fc.register_function(&format!("noop{i}"), Payload::Noop).unwrap();
+                stacks.push((ep, f, fh, agent));
+            }
+            let run = || {
+                let t0 = std::time::Instant::now();
+                let handles: Vec<_> = stacks
+                    .iter()
+                    .map(|(ep, f, _, _)| {
+                        let fc = fc.clone();
+                        let (ep, f) = (*ep, *f);
+                        std::thread::spawn(move || {
+                            let inputs: Vec<Value> =
+                                (0..TASKS_PER_EP).map(|_| Value::Null).collect();
+                            let tasks = fc.run_batch(f, ep, &inputs).unwrap();
+                            fc.get_batch_results(&tasks, Duration::from_secs(120)).unwrap();
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().unwrap();
+                }
+                t0.elapsed().as_secs_f64()
+            };
+            run(); // warm-up
+            let secs = (0..3).map(|_| run()).fold(f64::INFINITY, f64::min);
+            for (_, _, fh, agent) in stacks {
+                fh.shutdown();
+                agent.join();
+            }
+            let snapshot = (ring > 0).then(|| svc.metrics_snapshot().to_json());
+            ((EPS * TASKS_PER_EP) as f64 / secs, snapshot)
+        };
+        let (off, _) = run_cfg(0);
+        let (on, snapshot) = run_cfg(funcx::metrics::DEFAULT_RING_CAPACITY);
+        println!("  tracing off: {off:>8.0} tasks/s");
+        println!("  tracing on:  {on:>8.0} tasks/s  ({:.1}% of baseline)", 100.0 * on / off);
+        harness::record("fleet tasks/s tracing off", off, "tasks/s");
+        harness::record("fleet tasks/s tracing on", on, "tasks/s");
+        harness::record("tracing throughput ratio (on/off)", on / off, "x");
+        let json = snapshot.expect("traced run produces a snapshot");
+        std::fs::write("BENCH_metrics.json", &json).unwrap();
+        println!("  wrote BENCH_metrics.json ({} bytes)", json.len());
+        assert!(
+            on >= 0.95 * off,
+            "flight recorder regressed the hot path: {on:.0} tasks/s traced vs \
+             {off:.0} tasks/s baseline (pin: >= 0.95x)"
+        );
+    }
+
     harness::section("PJRT artifact execution (the compute hot path)");
     let dir = std::path::Path::new("artifacts");
     if dir.join("manifest.json").exists() {

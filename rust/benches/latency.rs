@@ -51,18 +51,21 @@ fn main() {
         1e3 * s.p99,
         1e3 * s.min
     );
-    let breakdowns = svc.latency.all_breakdowns();
-    let n = breakdowns.len() as f64;
-    let sum = breakdowns.iter().fold([0.0f64; 4], |acc, b| {
-        [acc[0] + b.t_s, acc[1] + b.t_f, acc[2] + b.t_e, acc[3] + b.t_w]
-    });
+    let b = svc.latency.stage_summaries();
     println!(
         "stage means over {} tasks (ms): t_s {:.3}  t_f {:.3}  t_e {:.3}  t_w {:.3}",
-        breakdowns.len(),
-        1e3 * sum[0] / n,
-        1e3 * sum[1] / n,
-        1e3 * sum[2] / n,
-        1e3 * sum[3] / n
+        b.completed,
+        1e3 * b.t_s.mean,
+        1e3 * b.t_f.mean,
+        1e3 * b.t_e.mean,
+        1e3 * b.t_w.mean
+    );
+    println!(
+        "stage p99 (ms):                 t_s {:.3}  t_f {:.3}  t_e {:.3}  t_w {:.3}",
+        1e3 * b.t_s.p99,
+        1e3 * b.t_f.p99,
+        1e3 * b.t_e.p99,
+        1e3 * b.t_w.p99
     );
     println!("(paper, Theta endpoint w/ 18 ms WAN: t_s ~ tens of ms dominated by auth; t_w smallest)");
     fh.shutdown();

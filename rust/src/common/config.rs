@@ -44,6 +44,12 @@ pub struct ServiceConfig {
     /// [`crate::service::ShardMap`]. 1 reproduces the unsharded
     /// service exactly.
     pub service_shards: usize,
+    /// Per-component ring capacity of the task flight recorder
+    /// ([`crate::metrics::FlightRecorder`]): each component (shard,
+    /// endpoint, fabric, store) keeps at most this many trace events,
+    /// oldest dropped. `0` disables recording entirely (the bench
+    /// baseline for measuring observability overhead).
+    pub trace_ring_capacity: usize,
 }
 
 impl Default for ServiceConfig {
@@ -58,6 +64,7 @@ impl Default for ServiceConfig {
             max_redispatch: 3,
             replication_factor: 0,
             service_shards: 1,
+            trace_ring_capacity: crate::metrics::trace::DEFAULT_RING_CAPACITY,
         }
     }
 }

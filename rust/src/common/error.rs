@@ -45,6 +45,32 @@ pub enum Error {
     Io(std::io::Error),
 }
 
+impl Error {
+    /// The variant name — the stable vocabulary used by typed trace
+    /// terminals ([`crate::metrics::TraceKind::TaskFailed`] and
+    /// `ResolveFailed` carry exactly these strings).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Error::InvalidArgument(_) => "InvalidArgument",
+            Error::NotFound(_) => "NotFound",
+            Error::Unauthenticated(_) => "Unauthenticated",
+            Error::Forbidden(_) => "Forbidden",
+            Error::PayloadTooLarge { .. } => "PayloadTooLarge",
+            Error::Serialization(_) => "Serialization",
+            Error::EndpointDisconnected(_) => "EndpointDisconnected",
+            Error::TaskFailed(_) => "TaskFailed",
+            Error::Shutdown(_) => "Shutdown",
+            Error::Provider(_) => "Provider",
+            Error::Data(_) => "Data",
+            Error::Overloaded(_) => "Overloaded",
+            Error::Corrupt(_) => "Corrupt",
+            Error::Runtime(_) => "Runtime",
+            Error::Timeout(_) => "Timeout",
+            Error::Io(_) => "Io",
+        }
+    }
+}
+
 impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {

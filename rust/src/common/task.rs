@@ -177,6 +177,10 @@ pub struct Task {
     /// [`crate::datastore::DataFabric`] handle; `input` is an empty
     /// placeholder frame in that case.
     pub input_ref: Option<DataRef>,
+    /// Flight-recorder trace id minted at submit (rides the trailer
+    /// meta as `"trc"`); `None` for tasks built outside the service
+    /// path or decoded from pre-extension frames.
+    pub trace: Option<crate::metrics::TraceId>,
 }
 
 impl Task {
@@ -197,6 +201,7 @@ impl Task {
             payload,
             input,
             input_ref: None,
+            trace: None,
         }
     }
 
@@ -241,6 +246,9 @@ impl Task {
         if let Some(r) = &self.input_ref {
             m.insert("iref".into(), r.to_value());
         }
+        if let Some(t) = &self.trace {
+            m.insert("trc".into(), Value::Str(t.to_string()));
+        }
         Value::Map(m)
     }
 
@@ -257,6 +265,10 @@ impl Task {
             Some(rv) => Some(DataRef::from_value(rv)?),
             None => None,
         };
+        let trace = v
+            .get("trc")
+            .and_then(Value::as_str)
+            .and_then(|s| s.parse::<crate::metrics::TraceId>().ok());
         Ok(Task {
             id: TaskId::from_value(field("id")?)?,
             function: FunctionId::from_value(field("fn")?)?,
@@ -266,6 +278,7 @@ impl Task {
             payload: Payload::from_value(field("payload")?)?,
             input,
             input_ref,
+            trace,
         })
     }
 }

@@ -38,7 +38,7 @@ use crate::common::rng::Rng;
 use crate::common::time::Time;
 use crate::datastore::dataref::DataRef;
 use crate::datastore::tiered::{Tier, TieredStore};
-use crate::metrics::Counters;
+use crate::metrics::{Counters, FlightRecorder, ResolveSource, SnapshotBuilder, TraceKind};
 use crate::serialize::Buffer;
 use crate::transfer::{GlobusFile, TransferService};
 
@@ -63,6 +63,42 @@ pub struct FabricStats {
     /// jittered backoff) instead of surfacing — a flapping link is not
     /// a missing frame.
     pub peer_retries: AtomicU64,
+}
+
+impl FabricStats {
+    /// Export every fabric counter into a metrics snapshot under the
+    /// given dimensions (the registry-source adapter).
+    pub fn fill(&self, b: &mut SnapshotBuilder, dims: &[(&str, &str)]) {
+        b.counter("funcx_fabric_local_hits_total", dims, self.local_hits.load(Ordering::Relaxed));
+        b.counter("funcx_fabric_cache_hits_total", dims, self.cache_hits.load(Ordering::Relaxed));
+        b.counter(
+            "funcx_fabric_frames_forwarded_total",
+            dims,
+            self.frames_forwarded.load(Ordering::Relaxed),
+        );
+        b.counter(
+            "funcx_fabric_bytes_forwarded_total",
+            dims,
+            self.bytes_forwarded.load(Ordering::Relaxed),
+        );
+        b.counter(
+            "funcx_fabric_globus_transfers_total",
+            dims,
+            self.globus_transfers.load(Ordering::Relaxed),
+        );
+        b.counter("funcx_fabric_misses_total", dims, self.misses.load(Ordering::Relaxed));
+        b.counter(
+            "funcx_fabric_frames_reclaimed_total",
+            dims,
+            self.frames_reclaimed.load(Ordering::Relaxed),
+        );
+        b.counter("funcx_fabric_failovers_total", dims, self.failovers.load(Ordering::Relaxed));
+        b.counter(
+            "funcx_fabric_peer_retries_total",
+            dims,
+            self.peer_retries.load(Ordering::Relaxed),
+        );
+    }
 }
 
 /// Peer-fetch attempts before a transient failure surfaces: the first
@@ -138,6 +174,11 @@ pub struct DataFabric {
     /// endpoint-side fabric events land in the same `Counters` the
     /// service asserts on.
     counters: OnceLock<Arc<Counters>>,
+    /// Flight recorder plus this fabric's prebuilt component name
+    /// (`fabric-<owner>`): resolve-ladder outcomes become trace events,
+    /// attributed to the ambient [`crate::metrics::TraceCtx`] when the
+    /// resolve runs under a task.
+    recorder: OnceLock<(Arc<FlightRecorder>, String)>,
     pub stats: FabricStats,
 }
 
@@ -154,6 +195,7 @@ impl DataFabric {
             peers: Mutex::new(HashMap::new()),
             wide_area: Mutex::new(None),
             counters: OnceLock::new(),
+            recorder: OnceLock::new(),
             stats: FabricStats::default(),
         }
     }
@@ -162,6 +204,20 @@ impl DataFabric {
     /// puts) into a deployment-wide [`Counters`]. First call wins.
     pub fn with_counters(&self, counters: Arc<Counters>) {
         let _ = self.counters.set(counters);
+    }
+
+    /// Attach the task flight recorder: every resolve-ladder outcome
+    /// (hit and where, bounded retry, replica failover, exhausted miss,
+    /// shed put) is recorded on component `fabric-<owner>`. First call
+    /// wins.
+    pub fn with_recorder(&self, rec: Arc<FlightRecorder>) {
+        let _ = self.recorder.set((rec, format!("fabric-{}", self.local.owner())));
+    }
+
+    fn trace_event(&self, at: Time, kind: TraceKind) {
+        if let Some((rec, component)) = self.recorder.get() {
+            rec.record_ambient(component, at, kind);
+        }
     }
 
     /// This endpoint's own tiered store.
@@ -221,6 +277,13 @@ impl DataFabric {
             match self.local.resolve(r, now) {
                 Ok(f) => {
                     self.stats.local_hits.fetch_add(1, Ordering::Relaxed);
+                    self.trace_event(
+                        now,
+                        TraceKind::RefResolved {
+                            key: r.key.clone(),
+                            source: ResolveSource::Local,
+                        },
+                    );
                     return Ok(f);
                 }
                 Err(e) => {
@@ -231,6 +294,10 @@ impl DataFabric {
                         return Ok(f);
                     }
                     self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                    self.trace_event(
+                        now,
+                        TraceKind::ResolveFailed { key: r.key.clone(), error: e.kind() },
+                    );
                     return Err(e);
                 }
             }
@@ -238,6 +305,10 @@ impl DataFabric {
         // 2. Hit-counting resolve cache.
         if let Some(frame) = self.cache_lookup(r) {
             self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+            self.trace_event(
+                now,
+                TraceKind::RefResolved { key: r.key.clone(), source: ResolveSource::Cache },
+            );
             return Ok(frame);
         }
         // 3. Peer forward (raw frame handle) / 4. Globus model.
@@ -250,14 +321,26 @@ impl DataFabric {
                         return Ok(f);
                     }
                     self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                    self.trace_event(
+                        now,
+                        TraceKind::ResolveFailed { key: r.key.clone(), error: e.kind() },
+                    );
                     return Err(e);
                 }
             };
             if self.submit_globus(r, now).is_some() {
                 self.stats.globus_transfers.fetch_add(1, Ordering::Relaxed);
+                self.trace_event(
+                    now,
+                    TraceKind::RefResolved { key: r.key.clone(), source: ResolveSource::Globus },
+                );
             } else {
                 self.stats.frames_forwarded.fetch_add(1, Ordering::Relaxed);
                 self.stats.bytes_forwarded.fetch_add(r.size, Ordering::Relaxed);
+                self.trace_event(
+                    now,
+                    TraceKind::RefResolved { key: r.key.clone(), source: ResolveSource::Peer },
+                );
             }
             self.cache_insert(r, frame.clone());
             return Ok(frame);
@@ -268,6 +351,7 @@ impl DataFabric {
             return Ok(f);
         }
         self.stats.misses.fetch_add(1, Ordering::Relaxed);
+        self.trace_event(now, TraceKind::ResolveFailed { key: r.key.clone(), error: "NotFound" });
         Err(Error::NotFound(format!(
             "ref {}: owner {} unreachable from this endpoint",
             r.key, r.owner
@@ -290,6 +374,7 @@ impl DataFabric {
         for attempt in 0..PEER_FETCH_ATTEMPTS {
             if attempt > 0 {
                 self.stats.peer_retries.fetch_add(1, Ordering::Relaxed);
+                self.trace_event(now, TraceKind::PeerRetry { key: r.key.clone(), attempt });
                 let backoff_ms =
                     RETRY_BASE_MS * f64::from(1 << (attempt - 1)) * rng.range_f64(0.5, 1.5);
                 std::thread::sleep(Duration::from_micros((backoff_ms * 1000.0) as u64));
@@ -370,6 +455,11 @@ impl DataFabric {
             self.stats.frames_forwarded.fetch_add(1, Ordering::Relaxed);
             self.stats.bytes_forwarded.fetch_add(r.size, Ordering::Relaxed);
         }
+        self.trace_event(now, TraceKind::ReplicaFailover { key: r.key.clone() });
+        self.trace_event(
+            now,
+            TraceKind::RefResolved { key: r.key.clone(), source: ResolveSource::Replica },
+        );
         self.cache_insert(r, frame.clone());
         Some(frame)
     }

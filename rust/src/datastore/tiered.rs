@@ -96,6 +96,7 @@ use crate::common::sync::Notify;
 use crate::common::time::{Clock, Time};
 use crate::datastore::backend::{DiskBackend, SpoolStore, StoreBackend};
 use crate::datastore::dataref::{checksum, DataRef};
+use crate::metrics::{FlightRecorder, SnapshotBuilder, TraceKind};
 use crate::serialize::Buffer;
 
 /// Which tier currently holds a frame (the coarse, two-valued view of
@@ -170,6 +171,39 @@ pub struct TierStats {
     pub shed_puts: AtomicU64,
     pub promotes: AtomicU64,
     pub expirations: AtomicU64,
+}
+
+impl TierStats {
+    /// Export every tier counter into a metrics snapshot under the
+    /// given dimensions (the registry-source adapter).
+    pub fn fill(&self, b: &mut SnapshotBuilder, dims: &[(&str, &str)]) {
+        b.counter("funcx_store_puts_total", dims, self.puts.load(Ordering::Relaxed));
+        b.counter("funcx_store_mem_hits_total", dims, self.mem_hits.load(Ordering::Relaxed));
+        b.counter("funcx_store_disk_hits_total", dims, self.disk_hits.load(Ordering::Relaxed));
+        b.counter("funcx_store_spills_total", dims, self.spills.load(Ordering::Relaxed));
+        b.counter(
+            "funcx_store_spilled_bytes_total",
+            dims,
+            self.spilled_bytes.load(Ordering::Relaxed),
+        );
+        b.counter(
+            "funcx_store_spill_aborts_total",
+            dims,
+            self.spill_aborts.load(Ordering::Relaxed),
+        );
+        b.counter(
+            "funcx_store_spill_errors_total",
+            dims,
+            self.spill_errors.load(Ordering::Relaxed),
+        );
+        b.counter("funcx_store_shed_puts_total", dims, self.shed_puts.load(Ordering::Relaxed));
+        b.counter("funcx_store_promotes_total", dims, self.promotes.load(Ordering::Relaxed));
+        b.counter(
+            "funcx_store_expirations_total",
+            dims,
+            self.expirations.load(Ordering::Relaxed),
+        );
+    }
 }
 
 /// Spiller threads per store: victims shard across a small pool so one
@@ -274,6 +308,11 @@ struct Inner {
     /// ignore callers' `now` arguments (owner-stamped expiry — see the
     /// module's clock contract).
     owner_clock: OnceLock<Arc<dyn Clock>>,
+    /// Flight recorder, the clock stamping its events, and this store's
+    /// prebuilt component name (`store-<owner>`): spill/shed decisions
+    /// become trace events — key-only from the background spiller,
+    /// joined into task timelines by ref key at assembly.
+    recorder: OnceLock<(Arc<FlightRecorder>, Arc<dyn Clock>, String)>,
     stats: Arc<TierStats>,
     /// Nudged when the watermark is crossed (and on shutdown).
     spill_wake: Notify,
@@ -419,6 +458,7 @@ impl TieredStore {
                 in_flight: 0,
             }),
             owner_clock: OnceLock::new(),
+            recorder: OnceLock::new(),
             stats: stats.clone(),
             spill_wake: Notify::new(),
             settled: Notify::new(),
@@ -455,6 +495,15 @@ impl TieredStore {
     pub fn with_owner_clock(self, clock: Arc<dyn Clock>) -> Self {
         let _ = self.inner.owner_clock.set(clock);
         self
+    }
+
+    /// Attach the task flight recorder: spill commits and shed puts are
+    /// recorded on component `store-<owner>`, stamped by `clock` (pass
+    /// the deployment's shared clock so store events order correctly
+    /// against service/endpoint hops). First call wins.
+    pub fn with_recorder(&self, rec: Arc<FlightRecorder>, clock: Arc<dyn Clock>) {
+        let component = format!("store-{}", self.inner.owner);
+        let _ = self.inner.recorder.set((rec, clock, component));
     }
 
     /// The clock reading expiry logic should use: the owner clock when
@@ -535,6 +584,13 @@ impl TieredStore {
                 if idx.mem_bytes - retained + size > limit {
                     drop(guard);
                     self.stats.shed_puts.fetch_add(1, Ordering::Relaxed);
+                    if let Some((rec, clock, component)) = self.inner.recorder.get() {
+                        rec.record_ambient(
+                            component,
+                            clock.now(),
+                            TraceKind::ShedPut { key: key.to_string() },
+                        );
+                    }
                     return Err(Error::Overloaded(format!(
                         "put {key} ({size} bytes) shed: spool is failing and the memory \
                          tier is at its shed limit ({limit} bytes)"
@@ -1099,6 +1155,7 @@ fn spiller_loop(inner: Arc<Inner>) {
 
         // One re-lock pass commits the whole batch.
         let mut abandoned = Vec::new();
+        let mut spilled: Vec<String> = Vec::new();
         {
             let mut guard = inner.index.lock().expect("tiered index poisoned");
             let idx = &mut *guard;
@@ -1120,6 +1177,7 @@ fn spiller_loop(inner: Arc<Inner>) {
                                     .stats
                                     .spilled_bytes
                                     .fetch_add(size as u64, Ordering::Relaxed);
+                                spilled.push(key.to_string());
                                 false
                             }
                             Err(_) => {
@@ -1148,6 +1206,15 @@ fn spiller_loop(inner: Arc<Inner>) {
         for skey in abandoned {
             let _ = inner.spool.remove(&skey);
             inner.stats.spill_aborts.fetch_add(1, Ordering::Relaxed);
+        }
+        // Trace the committed spills off-lock: the spiller has no task
+        // context, so these are key-only events joined into timelines
+        // by ref key at assembly.
+        if let Some((rec, clock, component)) = inner.recorder.get() {
+            let at = clock.now();
+            for k in spilled {
+                rec.record(component, None, None, at, TraceKind::Spilled { key: k });
+            }
         }
         inner.settled.notify();
         if any_err {

@@ -19,7 +19,7 @@ use crate::containers::StartCostModel;
 use crate::datastore::DataFabric;
 use crate::endpoint::link::{AgentSide, Downstream, Upstream};
 use crate::endpoint::manager::{Manager, ManagerCtx};
-use crate::metrics::LatencyBreakdown;
+use crate::metrics::{FlightRecorder, LatencyBreakdown, SnapshotBuilder, TraceKind};
 use crate::provider::{NodeHandle, Provider, ScaleDecision, Strategy, StrategyInputs};
 use crate::routing::{RouteHints, RoutingTable, Scheduler};
 use crate::runtime::PayloadExecutor;
@@ -37,6 +37,22 @@ pub struct AgentStats {
     pub heartbeats_sent: AtomicU64,
 }
 
+impl AgentStats {
+    /// Export every counter into a metrics snapshot under the given
+    /// dimensions (typically `[("endpoint", <id>)]`).
+    pub fn fill(&self, b: &mut SnapshotBuilder, dims: &[(&str, &str)]) {
+        let o = Ordering::Relaxed;
+        b.counter("funcx_agent_tasks_received_total", dims, self.tasks_received.load(o));
+        b.counter("funcx_agent_tasks_dispatched_total", dims, self.tasks_dispatched.load(o));
+        b.counter("funcx_agent_results_returned_total", dims, self.results_returned.load(o));
+        b.counter("funcx_agent_cold_starts_total", dims, self.cold_starts.load(o));
+        b.counter("funcx_agent_warm_hits_total", dims, self.warm_hits.load(o));
+        b.counter("funcx_agent_nodes_provisioned_total", dims, self.nodes_provisioned.load(o));
+        b.counter("funcx_agent_nodes_released_total", dims, self.nodes_released.load(o));
+        b.counter("funcx_agent_heartbeats_sent_total", dims, self.heartbeats_sent.load(o));
+    }
+}
+
 /// Everything the agent needs at spawn time.
 pub struct AgentConfig {
     pub cfg: EndpointConfig,
@@ -48,6 +64,9 @@ pub struct AgentConfig {
     pub fabric: Option<Arc<DataFabric>>,
     pub clock: Arc<dyn Clock>,
     pub latency: Arc<LatencyBreakdown>,
+    /// Flight recorder for agent/worker-side trace events; a disabled
+    /// recorder (the builder default) makes every record a no-op.
+    pub recorder: Arc<FlightRecorder>,
     pub start_model: StartCostModel,
     pub cold_start_scale: f64,
     pub heartbeat_period_s: f64,
@@ -209,6 +228,7 @@ fn agent_loop(link: AgentSide, mut config: AgentConfig, stats: Arc<AgentStats>) 
                 max_result_bytes: config.cfg.max_result_bytes,
                 clock: config.clock.clone(),
                 latency: config.latency.clone(),
+                recorder: config.recorder.clone(),
                 start_model: config.start_model,
                 cold_start_scale: config.cold_start_scale,
             };
@@ -245,6 +265,15 @@ fn agent_loop(link: AgentSide, mut config: AgentConfig, stats: Arc<AgentStats>) 
                         // counts only shrink on eviction, which the
                         // manager reports via its next view.)
                         table.update(mid, |v| v.queued += 1);
+                        if config.recorder.enabled() {
+                            config.recorder.record(
+                                &format!("endpoint-{}", task.endpoint),
+                                task.trace,
+                                Some(task.id),
+                                now,
+                                TraceKind::AgentDispatched { endpoint: task.endpoint },
+                            );
+                        }
                         nodes[&h].manager.enqueue(vec![task]);
                         stats.tasks_dispatched.fetch_add(1, Ordering::Relaxed);
                     }

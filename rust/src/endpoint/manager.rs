@@ -23,7 +23,7 @@ use crate::common::task::{Task, TaskResult, TaskState};
 use crate::common::time::{Clock, Time};
 use crate::containers::{StartCostModel, WarmPool};
 use crate::datastore::DataFabric;
-use crate::metrics::LatencyBreakdown;
+use crate::metrics::{FlightRecorder, LatencyBreakdown, TraceCtx, TraceKind};
 use crate::routing::ManagerView;
 use crate::runtime::PayloadExecutor;
 use crate::serialize::{unpack, Buffer, Value};
@@ -78,6 +78,11 @@ pub struct ManagerCtx {
     pub max_result_bytes: usize,
     pub clock: Arc<dyn Clock>,
     pub latency: Arc<LatencyBreakdown>,
+    /// Flight recorder sink for worker-side trace events
+    /// ([`TraceKind::WorkerStarted`] / [`TraceKind::WorkerFinished`] and
+    /// typed failure terminals). A disabled recorder (capacity 0) makes
+    /// every record a no-op.
+    pub recorder: Arc<FlightRecorder>,
     pub start_model: StartCostModel,
     /// Multiplier on sampled cold-start times (1.0 = Table-3 realism;
     /// examples/tests use ~0.001 to keep wall-clock short).
@@ -196,6 +201,15 @@ fn worker_loop(shared: Arc<Shared>, ctx: ManagerCtx, rng: &mut Rng) {
 
         let now = ctx.clock.now();
         ctx.latency.on_started(task.id, now);
+        if ctx.recorder.enabled() {
+            ctx.recorder.record(
+                &format!("endpoint-{}", task.endpoint),
+                task.trace,
+                Some(task.id),
+                now,
+                TraceKind::WorkerStarted { endpoint: task.endpoint },
+            );
+        }
 
         // Container acquisition: warm hit is free; cold start costs time.
         // Bare tasks share the nil "container" (the worker's own env).
@@ -234,6 +248,10 @@ fn worker_loop(shared: Arc<Shared>, ctx: ManagerCtx, rng: &mut Rng) {
         let input_frame: Result<Buffer, Error> = if !task.payload.reads_input() {
             Ok(Buffer::empty())
         } else {
+            // Scope the trace context over the resolve so fabric-level
+            // events (hit tier, peer retries, replica failover) land in
+            // this task's trace instead of as anonymous background noise.
+            let _trc = TraceCtx::enter(task.trace, task.id);
             match (&task.input_ref, ctx.fabric.as_ref()) {
                 (Some(r), Some(fabric)) => fabric.resolve(r, ctx.clock.now()),
                 (Some(r), None) => Err(Error::Data(format!(
@@ -248,6 +266,18 @@ fn worker_loop(shared: Arc<Shared>, ctx: ManagerCtx, rng: &mut Rng) {
         // and only when the payload actually reads it), execute,
         // serialize output (§4.3 worker).
         let fail = |e: &Error| {
+            // Worker-side typed terminal: the concrete error kind
+            // (NotFound, Corrupt, Data, ...) is only known here, before
+            // the result is flattened into a Failed state + message.
+            if ctx.recorder.enabled() {
+                ctx.recorder.record(
+                    &format!("endpoint-{}", task.endpoint),
+                    task.trace,
+                    Some(task.id),
+                    ctx.clock.now(),
+                    TraceKind::TaskFailed { error: e.kind() },
+                );
+            }
             (
                 TaskState::Failed,
                 crate::serialize::pack(&Value::Str(e.to_string()), 0).unwrap(),
@@ -274,6 +304,18 @@ fn worker_loop(shared: Arc<Shared>, ctx: ManagerCtx, rng: &mut Rng) {
 
         let done = ctx.clock.now();
         ctx.latency.on_finished(task.id, done);
+        if ctx.recorder.enabled() {
+            ctx.recorder.record(
+                &format!("endpoint-{}", task.endpoint),
+                task.trace,
+                Some(task.id),
+                done,
+                TraceKind::WorkerFinished {
+                    endpoint: task.endpoint,
+                    success: state == TaskState::Success,
+                },
+            );
+        }
         shared.pool.lock().unwrap().release(slot, done);
         // Wake siblings blocked on a transient acquire failure.
         shared.cv.notify_all();
@@ -286,6 +328,7 @@ fn worker_loop(shared: Arc<Shared>, ctx: ManagerCtx, rng: &mut Rng) {
         // falls back to inline rather than failing the task.
         let (output, output_ref) = match (&ctx.fabric, state) {
             (Some(fabric), TaskState::Success) if output.len() > ctx.max_result_bytes => {
+                let _trc = TraceCtx::enter(task.trace, task.id);
                 match fabric.put(&format!("task-result:{}", task.id), output.clone(), done) {
                     Ok(r) => (Buffer::empty(), Some(r)),
                     Err(_) => (output, None),
@@ -332,6 +375,7 @@ mod tests {
             max_result_bytes: 10 * 1024 * 1024,
             clock: Arc::new(WallClock::new()),
             latency: Arc::new(LatencyBreakdown::new()),
+            recorder: FlightRecorder::disabled(),
             start_model: TABLE3_MODELS.lookup(SystemProfile::Local, ContainerTech::None),
             cold_start_scale: 0.001,
         }

@@ -20,7 +20,7 @@ use crate::common::time::{Clock, WallClock};
 use crate::containers::{ContainerTech, SystemProfile, TABLE3_MODELS};
 use crate::data::DataChannel;
 use crate::datastore::DataFabric;
-use crate::metrics::LatencyBreakdown;
+use crate::metrics::{FlightRecorder, LatencyBreakdown};
 use crate::provider::{Provider, SimProvider};
 use crate::routing::{Scheduler, WarmingAware};
 use crate::runtime::{PayloadExecutor, PjrtRuntime};
@@ -37,6 +37,7 @@ pub struct EndpointBuilder {
     fabric: Option<Arc<DataFabric>>,
     clock: Option<Arc<dyn Clock>>,
     latency: Option<Arc<LatencyBreakdown>>,
+    recorder: Option<Arc<FlightRecorder>>,
     cold_start_scale: f64,
     heartbeat_period_s: f64,
     seed: u64,
@@ -61,6 +62,7 @@ impl EndpointBuilder {
             fabric: None,
             clock: None,
             latency: None,
+            recorder: None,
             cold_start_scale: 0.001,
             heartbeat_period_s: 1.0,
             seed: 42,
@@ -118,6 +120,15 @@ impl EndpointBuilder {
         self
     }
 
+    /// Attach a shared flight recorder so this endpoint's agent,
+    /// workers, fabric, and store append trace events into the same
+    /// rings the service assembles from. Without one, tracing is a
+    /// no-op at this endpoint.
+    pub fn recorder(mut self, r: Arc<FlightRecorder>) -> Self {
+        self.recorder = Some(r);
+        self
+    }
+
     /// Scale factor on sampled cold-start durations (1.0 = realistic).
     pub fn cold_start_scale(mut self, s: f64) -> Self {
         self.cold_start_scale = s;
@@ -138,6 +149,18 @@ impl EndpointBuilder {
     pub fn start(self, link: AgentSide) -> AgentHandle {
         let clock = self.clock.unwrap_or_else(|| Arc::new(WallClock::new()));
         let latency = self.latency.unwrap_or_default();
+        let recorder = self.recorder.unwrap_or_else(FlightRecorder::disabled);
+        // Sink the recorder into the endpoint's fabric and store so
+        // resolve/spill/shed events from worker-driven I/O land in the
+        // same rings as the agent's dispatch events. First-call-wins:
+        // a fabric already wired (e.g. to the service recorder) keeps
+        // its original sink.
+        if recorder.enabled() {
+            if let Some(fabric) = &self.fabric {
+                fabric.with_recorder(recorder.clone());
+                fabric.local().with_recorder(recorder.clone(), clock.clone());
+            }
+        }
         let executor = Arc::new(PayloadExecutor::new(self.runtime, self.channel));
         let config = AgentConfig {
             start_model: TABLE3_MODELS.lookup(self.system, self.tech),
@@ -147,6 +170,7 @@ impl EndpointBuilder {
             fabric: self.fabric,
             clock,
             latency,
+            recorder,
             cold_start_scale: self.cold_start_scale,
             heartbeat_period_s: self.heartbeat_period_s,
             cfg: self.cfg,

@@ -148,21 +148,13 @@ fn bench_latency() -> i32 {
         let t = client.run(f, ep, &Value::Null).unwrap();
         client.get_result(t, Duration::from_secs(10)).unwrap();
     }
-    let breakdowns = svc.latency.all_breakdowns();
-    let n = breakdowns.len() as f64;
-    let (mut ts, mut tf, mut te, mut tw) = (0.0, 0.0, 0.0, 0.0);
-    for b in &breakdowns {
-        ts += b.t_s;
-        tf += b.t_f;
-        te += b.t_e;
-        tw += b.t_w;
-    }
-    println!("Fig. 3 — latency decomposition over {} warm tasks (ms):", breakdowns.len());
-    println!("  t_s (service)   {:8.3}", 1e3 * ts / n);
-    println!("  t_f (forwarder) {:8.3}", 1e3 * tf / n);
-    println!("  t_e (endpoint)  {:8.3}", 1e3 * te / n);
-    println!("  t_w (function)  {:8.3}", 1e3 * tw / n);
-    println!("  total           {:8.3}", 1e3 * (ts + tf + te + tw) / n);
+    let s = svc.latency.stage_summaries();
+    println!("Fig. 3 — latency decomposition over {} warm tasks (ms):", s.completed);
+    println!("  t_s (service)   {:8.3}  p99 {:8.3}", 1e3 * s.t_s.mean, 1e3 * s.t_s.p99);
+    println!("  t_f (forwarder) {:8.3}  p99 {:8.3}", 1e3 * s.t_f.mean, 1e3 * s.t_f.p99);
+    println!("  t_e (endpoint)  {:8.3}  p99 {:8.3}", 1e3 * s.t_e.mean, 1e3 * s.t_e.p99);
+    println!("  t_w (function)  {:8.3}  p99 {:8.3}", 1e3 * s.t_w.mean, 1e3 * s.t_w.p99);
+    println!("  total           {:8.3}  p99 {:8.3}", 1e3 * s.total.mean, 1e3 * s.total.p99);
     fh.shutdown();
     handle.join();
     0

@@ -1,4 +1,5 @@
-//! Instrumentation: the Fig. 3 latency decomposition and system counters.
+//! Instrumentation: the Fig. 3 latency decomposition, system counters,
+//! the dimensioned instrument registry, and the task flight recorder.
 //!
 //! Fig. 3 splits a task's round trip into:
 //! * `t_s` — web-service latency (auth + Redis store + queue append),
@@ -6,9 +7,24 @@
 //! * `t_e` — endpoint latency (agent/manager queuing + dispatch),
 //! * `t_w` — function execution on the worker.
 //!
-//! Stages are recorded per task; [`LatencyBreakdown`] aggregates them.
+//! Stages are recorded per task; [`LatencyBreakdown`] folds completed
+//! tasks into per-stage [`registry::Histogram`]s and evicts the
+//! record, so a long-running fleet holds O(in-flight) records instead
+//! of O(all-time tasks). See `docs/observability.md`.
 
-use std::collections::HashMap;
+pub mod registry;
+pub mod trace;
+
+pub use registry::{
+    Counter, Gauge, Histogram, MetricsRegistry, MetricsSnapshot, Sample, SampleValue,
+    SnapshotBuilder,
+};
+pub use trace::{
+    FlightRecorder, ResolveSource, TaskTrace, TraceCtx, TraceEvent, TraceId, TraceKind,
+    DEFAULT_RING_CAPACITY,
+};
+
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -40,24 +56,40 @@ pub struct Summary {
     pub min: f64,
     pub max: f64,
     pub p50: f64,
+    pub p90: f64,
     pub p99: f64,
+    pub p999: f64,
 }
 
-/// Compute summary stats for a sample.
+/// Compute summary stats for a sample. Percentiles interpolate at the
+/// continuous rank `p·(n-1)` — the same convention as
+/// [`registry::Histogram::quantile`] — so small samples are not
+/// misreported (nearest-rank rounding made p99 of 4 samples == max).
 pub fn summarize(samples: &[f64]) -> Summary {
     if samples.is_empty() {
         return Summary::default();
     }
     let mut sorted = samples.to_vec();
     sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| sorted[((sorted.len() - 1) as f64 * p).round() as usize];
+    let pct = |p: f64| {
+        let rank = (sorted.len() - 1) as f64 * p;
+        let lo = rank.floor() as usize;
+        let frac = rank - lo as f64;
+        if frac == 0.0 || lo + 1 >= sorted.len() {
+            sorted[lo]
+        } else {
+            sorted[lo] + frac * (sorted[lo + 1] - sorted[lo])
+        }
+    };
     Summary {
         count: sorted.len(),
         mean: sorted.iter().sum::<f64>() / sorted.len() as f64,
         min: sorted[0],
         max: *sorted.last().unwrap(),
         p50: pct(0.50),
+        p90: pct(0.90),
         p99: pct(0.99),
+        p999: pct(0.999),
     }
 }
 
@@ -67,17 +99,63 @@ pub fn summarize(samples: &[f64]) -> Summary {
 /// service plane.
 const N_STRIPES: usize = 16;
 
+/// Cap on records per stripe. A record is ~100 bytes, so the whole
+/// tracker tops out near `16 × 4096` records (~6 MB) no matter how
+/// many tasks ever ran: completed tasks fold into the stage histograms
+/// and evict; stale incomplete records (a crashed component never
+/// stamped the terminal) are FIFO-evicted past the cap.
+pub const MAX_TRACKED_PER_STRIPE: usize = 4096;
+
+/// Per-stage aggregate histograms (bounded, mergeable).
+struct StageHists {
+    t_s: Histogram,
+    t_f: Histogram,
+    t_e: Histogram,
+    t_w: Histogram,
+    total: Histogram,
+    completed: AtomicU64,
+}
+
+/// The per-stage summaries a fleet keeps after folding.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageSummaries {
+    pub t_s: Summary,
+    pub t_f: Summary,
+    pub t_e: Summary,
+    pub t_w: Summary,
+    pub total: Summary,
+    /// Tasks folded (had all six stamps at terminal time).
+    pub completed: u64,
+}
+
+#[derive(Default)]
+struct Stripe {
+    map: HashMap<TaskId, StageRecord>,
+    /// FIFO insertion order; may hold ids already folded out of `map`.
+    order: VecDeque<TaskId>,
+}
+
 /// Collects per-task stage timings (Fig. 3 harness). Internally striped
-/// by task-id hash; the public API is unchanged.
+/// by task-id hash; completed tasks fold into per-stage histograms and
+/// evict, bounding the tracker at O(in-flight).
 #[derive(Clone)]
 pub struct LatencyBreakdown {
-    stripes: Arc<Vec<Mutex<HashMap<TaskId, StageRecord>>>>,
+    stripes: Arc<Vec<Mutex<Stripe>>>,
+    hists: Arc<StageHists>,
 }
 
 impl Default for LatencyBreakdown {
     fn default() -> Self {
         LatencyBreakdown {
             stripes: Arc::new((0..N_STRIPES).map(|_| Mutex::default()).collect()),
+            hists: Arc::new(StageHists {
+                t_s: Histogram::new(),
+                t_f: Histogram::new(),
+                t_e: Histogram::new(),
+                t_w: Histogram::new(),
+                total: Histogram::new(),
+                completed: AtomicU64::new(0),
+            }),
         }
     }
 }
@@ -92,56 +170,15 @@ struct StageRecord {
     result_stored: Option<Time>,
 }
 
-impl LatencyBreakdown {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    fn stripe(&self, t: TaskId) -> &Mutex<HashMap<TaskId, StageRecord>> {
-        let x = (t.0 .0 as u64) ^ ((t.0 .0 >> 64) as u64);
-        &self.stripes[(x.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize % N_STRIPES]
-    }
-
-    pub fn on_submit(&self, t: TaskId, now: Time) {
-        self.stripe(t).lock().unwrap().entry(t).or_default().submit = Some(now);
-    }
-
-    /// Task persisted + appended to the endpoint queue (end of t_s).
-    pub fn on_queued(&self, t: TaskId, now: Time) {
-        self.stripe(t).lock().unwrap().entry(t).or_default().queued = Some(now);
-    }
-
-    /// Forwarder handed the task to the agent (end of forwarder's send half).
-    pub fn on_forwarded(&self, t: TaskId, now: Time) {
-        self.stripe(t).lock().unwrap().entry(t).or_default().forwarded = Some(now);
-    }
-
-    /// Worker began executing (end of t_e's dispatch half).
-    pub fn on_started(&self, t: TaskId, now: Time) {
-        self.stripe(t).lock().unwrap().entry(t).or_default().started = Some(now);
-    }
-
-    /// Worker finished (t_w = started..finished).
-    pub fn on_finished(&self, t: TaskId, now: Time) {
-        self.stripe(t).lock().unwrap().entry(t).or_default().finished = Some(now);
-    }
-
-    /// Result written back to the store (closes t_f's return half).
-    pub fn on_result_stored(&self, t: TaskId, now: Time) {
-        self.stripe(t).lock().unwrap().entry(t).or_default().result_stored = Some(now);
-    }
-
-    /// Stage decomposition for one task, if all stamps are present.
-    pub fn breakdown(&self, t: TaskId) -> Option<StageTimes> {
-        let g = self.stripe(t).lock().unwrap();
-        let r = g.get(&t)?;
+impl StageRecord {
+    fn breakdown(&self) -> Option<StageTimes> {
         let (submit, queued, forwarded, started, finished, stored) = (
-            r.submit?,
-            r.queued?,
-            r.forwarded?,
-            r.started?,
-            r.finished?,
-            r.result_stored?,
+            self.submit?,
+            self.queued?,
+            self.forwarded?,
+            self.started?,
+            self.finished?,
+            self.result_stored?,
         );
         Some(StageTimes {
             t_s: queued - submit,
@@ -150,14 +187,119 @@ impl LatencyBreakdown {
             t_w: finished - started,
         })
     }
+}
 
-    pub fn all_breakdowns(&self) -> Vec<StageTimes> {
-        let keys: Vec<TaskId> = self
-            .stripes
-            .iter()
-            .flat_map(|s| s.lock().unwrap().keys().copied().collect::<Vec<_>>())
-            .collect();
-        keys.into_iter().filter_map(|k| self.breakdown(k)).collect()
+impl LatencyBreakdown {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn stripe(&self, t: TaskId) -> &Mutex<Stripe> {
+        let x = (t.0 .0 as u64) ^ ((t.0 .0 >> 64) as u64);
+        &self.stripes[(x.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize % N_STRIPES]
+    }
+
+    fn stamp(&self, t: TaskId, f: impl FnOnce(&mut StageRecord)) {
+        let mut g = self.stripe(t).lock().unwrap();
+        if !g.map.contains_key(&t) {
+            g.order.push_back(t);
+        }
+        f(g.map.entry(t).or_default());
+        // Evict oldest live records past the cap; folded ids in
+        // `order` pop through without effect (amortized O(1)).
+        while g.map.len() > MAX_TRACKED_PER_STRIPE {
+            match g.order.pop_front() {
+                Some(old) => {
+                    g.map.remove(&old);
+                }
+                None => break,
+            }
+        }
+        // Folded/evicted tasks leave stale ids behind in `order`;
+        // compact once it doubles so it too stays O(in-flight).
+        if g.order.len() > 2 * MAX_TRACKED_PER_STRIPE {
+            let Stripe { map, order } = &mut *g;
+            order.retain(|id| map.contains_key(id));
+        }
+    }
+
+    pub fn on_submit(&self, t: TaskId, now: Time) {
+        self.stamp(t, |r| r.submit = Some(now));
+    }
+
+    /// Task persisted + appended to the endpoint queue (end of t_s).
+    pub fn on_queued(&self, t: TaskId, now: Time) {
+        self.stamp(t, |r| r.queued = Some(now));
+    }
+
+    /// Forwarder handed the task to the agent (end of forwarder's send half).
+    pub fn on_forwarded(&self, t: TaskId, now: Time) {
+        self.stamp(t, |r| r.forwarded = Some(now));
+    }
+
+    /// Worker began executing (end of t_e's dispatch half).
+    pub fn on_started(&self, t: TaskId, now: Time) {
+        self.stamp(t, |r| r.started = Some(now));
+    }
+
+    /// Worker finished (t_w = started..finished).
+    pub fn on_finished(&self, t: TaskId, now: Time) {
+        self.stamp(t, |r| r.finished = Some(now));
+    }
+
+    /// Result written back to the store (closes t_f's return half).
+    /// Terminal: folds the completed decomposition into the per-stage
+    /// histograms, evicts the record, and returns the decomposition.
+    pub fn on_result_stored(&self, t: TaskId, now: Time) -> Option<StageTimes> {
+        let record = {
+            let mut g = self.stripe(t).lock().unwrap();
+            let mut r = g.map.remove(&t).unwrap_or_default();
+            r.result_stored = Some(now);
+            r
+        };
+        let b = record.breakdown()?;
+        self.hists.t_s.record(b.t_s);
+        self.hists.t_f.record(b.t_f);
+        self.hists.t_e.record(b.t_e);
+        self.hists.t_w.record(b.t_w);
+        self.hists.total.record(b.total());
+        self.hists.completed.fetch_add(1, Ordering::Relaxed);
+        Some(b)
+    }
+
+    /// Stage decomposition for one still-tracked task, if all stamps
+    /// are present (terminal tasks have folded and evicted).
+    pub fn breakdown(&self, t: TaskId) -> Option<StageTimes> {
+        self.stripe(t).lock().unwrap().map.get(&t)?.breakdown()
+    }
+
+    /// Records still tracked — exactly the submitted-but-unterminated
+    /// tasks (every terminal `store_result` folds and evicts), which
+    /// makes this the fleet's in-flight gauge.
+    pub fn in_flight(&self) -> usize {
+        self.stripes.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    /// Per-stage summaries over every task folded so far.
+    pub fn stage_summaries(&self) -> StageSummaries {
+        StageSummaries {
+            t_s: self.hists.t_s.summary(),
+            t_f: self.hists.t_f.summary(),
+            t_e: self.hists.t_e.summary(),
+            t_w: self.hists.t_w.summary(),
+            total: self.hists.total.summary(),
+            completed: self.hists.completed.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Export the stage histograms + in-flight gauge into a snapshot.
+    pub fn fill(&self, b: &mut SnapshotBuilder) {
+        b.histogram("funcx_stage_seconds", &[("stage", "t_s")], self.hists.t_s.summary());
+        b.histogram("funcx_stage_seconds", &[("stage", "t_f")], self.hists.t_f.summary());
+        b.histogram("funcx_stage_seconds", &[("stage", "t_e")], self.hists.t_e.summary());
+        b.histogram("funcx_stage_seconds", &[("stage", "t_w")], self.hists.t_w.summary());
+        b.histogram("funcx_stage_seconds", &[("stage", "total")], self.hists.total.summary());
+        b.gauge("funcx_tasks_in_flight", &[], self.in_flight() as i64);
     }
 }
 
@@ -223,6 +365,33 @@ impl Counters {
     pub fn get(counter: &AtomicU64) -> u64 {
         counter.load(Ordering::Relaxed)
     }
+
+    /// Export every counter into a snapshot under its registry name.
+    pub fn fill(&self, b: &mut SnapshotBuilder) {
+        let dims: &[(&str, &str)] = &[];
+        for (name, cell) in [
+            ("funcx_tasks_submitted_total", &self.tasks_submitted),
+            ("funcx_tasks_completed_total", &self.tasks_completed),
+            ("funcx_tasks_failed_total", &self.tasks_failed),
+            ("funcx_tasks_redispatched_total", &self.tasks_redispatched),
+            ("funcx_tasks_ref_dispatched_total", &self.tasks_ref_dispatched),
+            ("funcx_bytes_offloaded_total", &self.bytes_offloaded),
+            ("funcx_tasks_ref_forwarded_total", &self.tasks_ref_forwarded),
+            ("funcx_results_ref_offloaded_total", &self.results_ref_offloaded),
+            ("funcx_result_frames_reclaimed_total", &self.result_frames_reclaimed),
+            ("funcx_cold_starts_total", &self.cold_starts),
+            ("funcx_warm_hits_total", &self.warm_hits),
+            ("funcx_heartbeats_total", &self.heartbeats),
+            ("funcx_bytes_through_service_total", &self.bytes_through_service),
+            ("funcx_result_bytes_through_service_total", &self.result_bytes_through_service),
+            ("funcx_replicas_created_total", &self.replicas_created),
+            ("funcx_failover_resolutions_total", &self.failover_resolutions),
+            ("funcx_shed_puts_total", &self.shed_puts),
+            ("funcx_frames_drained_total", &self.frames_drained),
+        ] {
+            b.counter(name, dims, Self::get(cell));
+        }
+    }
 }
 
 #[cfg(test)]
@@ -240,6 +409,22 @@ mod tests {
     }
 
     #[test]
+    fn summarize_interpolates_percentiles() {
+        // 4 samples: p50 sits between the middle two, p99 is *not*
+        // simply the max (the old nearest-rank round() bug).
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.p50 - 2.5).abs() < 1e-12, "p50 {}", s.p50);
+        assert!((s.p90 - 3.7).abs() < 1e-12, "p90 {}", s.p90);
+        assert!((s.p99 - 3.97).abs() < 1e-12, "p99 {}", s.p99);
+        assert!(s.p99 < s.max);
+        assert!(s.p999 < s.max && s.p999 > s.p99);
+        // Degenerate cases stay exact.
+        let one = summarize(&[5.0]);
+        assert_eq!(one.p50, 5.0);
+        assert_eq!(one.p999, 5.0);
+    }
+
+    #[test]
     fn breakdown_stages() {
         let lb = LatencyBreakdown::new();
         let t = TaskId::new();
@@ -248,13 +433,20 @@ mod tests {
         lb.on_forwarded(t, 0.015); // forward leg 5 ms
         lb.on_started(t, 0.035); // t_e = 20 ms
         lb.on_finished(t, 0.055); // t_w = 20 ms
-        lb.on_result_stored(t, 0.060); // return leg 5 ms
-        let b = lb.breakdown(t).unwrap();
+        let b = lb.on_result_stored(t, 0.060).unwrap(); // return leg 5 ms
         assert!((b.t_s - 0.010).abs() < 1e-9);
         assert!((b.t_f - 0.010).abs() < 1e-9);
         assert!((b.t_e - 0.020).abs() < 1e-9);
         assert!((b.t_w - 0.020).abs() < 1e-9);
         assert!((b.total() - 0.060).abs() < 1e-9);
+        // Terminal folded + evicted: no per-task record remains, the
+        // aggregate histograms hold the stages.
+        assert!(lb.breakdown(t).is_none());
+        assert_eq!(lb.in_flight(), 0);
+        let s = lb.stage_summaries();
+        assert_eq!(s.completed, 1);
+        assert!((s.t_w.mean - 0.020).abs() < 1e-9);
+        assert!((s.total.mean - 0.060).abs() < 1e-9);
     }
 
     #[test]
@@ -264,6 +456,22 @@ mod tests {
         lb.on_submit(t, 0.0);
         assert!(lb.breakdown(t).is_none());
         assert!(lb.breakdown(TaskId::new()).is_none());
+        assert_eq!(lb.in_flight(), 1);
+        // A terminal without the middle stamps still evicts the record
+        // (conservation: submitted == completed + failed + in-flight).
+        assert!(lb.on_result_stored(t, 1.0).is_none());
+        assert_eq!(lb.in_flight(), 0);
+        assert_eq!(lb.stage_summaries().completed, 0);
+    }
+
+    #[test]
+    fn tracker_is_bounded() {
+        let lb = LatencyBreakdown::new();
+        // Submit far more never-completing tasks than the cap.
+        for _ in 0..(N_STRIPES * MAX_TRACKED_PER_STRIPE + 10_000) {
+            lb.on_submit(TaskId::new(), 0.0);
+        }
+        assert!(lb.in_flight() <= N_STRIPES * MAX_TRACKED_PER_STRIPE);
     }
 
     #[test]
@@ -274,5 +482,16 @@ mod tests {
         Counters::add(&c.bytes_through_service, 100);
         assert_eq!(Counters::get(&c.tasks_submitted), 2);
         assert_eq!(Counters::get(&c.bytes_through_service), 100);
+    }
+
+    #[test]
+    fn counters_fill_exports_all() {
+        let c = Counters::new();
+        Counters::incr(&c.tasks_submitted);
+        let reg = MetricsRegistry::new();
+        reg.register_source(move |b| c.fill(b));
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter_total("funcx_tasks_submitted_total"), 1);
+        assert_eq!(snap.counter_total("funcx_frames_drained_total"), 0);
     }
 }

@@ -1,0 +1,580 @@
+//! Dimensioned instrument registry: counters, gauges, and log-linear
+//! histograms behind one snapshot/exposition facade.
+//!
+//! Hot paths keep writing their existing relaxed-atomic stats structs
+//! ([`crate::metrics::Counters`], `TierStats`, `FabricStats`, …); the
+//! registry owns *instruments* (created once, written via cheap atomic
+//! handles) plus *sources* — collector closures over those legacy
+//! structs that are polled only when [`MetricsRegistry::snapshot`] runs.
+//! Nothing on the task hot path ever takes the registry lock.
+//!
+//! Histograms are fixed-bucket log-linear: the f64 exponent selects an
+//! octave and the top 4 mantissa bits a sub-bucket (16 per octave,
+//! ≤ ~4.4% relative error), covering 2^-40..2^40 in 1297 atomic
+//! buckets (~10 KB, bounded, mergeable). Quantiles interpolate at the
+//! continuous rank `q·(n-1)` — the same convention as
+//! [`crate::metrics::summarize`].
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::Summary;
+
+/// Sub-buckets per octave (top 4 mantissa bits).
+const SUB_BITS: u32 = 4;
+const SUBS: usize = 1 << SUB_BITS;
+/// Histogram value range: 2^MIN_EXP ..= 2^MAX_EXP (≈1e-12 .. 1e12).
+const MIN_EXP: i64 = -40;
+const MAX_EXP: i64 = 40;
+const N_OCTAVES: usize = (MAX_EXP - MIN_EXP) as usize + 1;
+/// Bucket 0 is the underflow bucket (zero, negative, < 2^MIN_EXP).
+const N_BUCKETS: usize = 1 + N_OCTAVES * SUBS;
+
+fn bucket_of(v: f64) -> usize {
+    if v.is_nan() || v < f64::powi(2.0, MIN_EXP as i32) {
+        return 0;
+    }
+    let bits = v.to_bits();
+    let exp = ((bits >> 52) & 0x7ff) as i64 - 1023;
+    let exp = exp.clamp(MIN_EXP, MAX_EXP);
+    let sub = ((bits >> (52 - SUB_BITS)) & (SUBS as u64 - 1)) as usize;
+    1 + ((exp - MIN_EXP) as usize * SUBS + sub).min(N_OCTAVES * SUBS - 1)
+}
+
+/// `[lo, hi)` value bounds of a bucket index.
+fn bucket_bounds(idx: usize) -> (f64, f64) {
+    if idx == 0 {
+        return (0.0, f64::powi(2.0, MIN_EXP as i32));
+    }
+    let i = idx - 1;
+    let exp = MIN_EXP + (i / SUBS) as i64;
+    let sub = (i % SUBS) as f64;
+    let base = f64::powi(2.0, exp as i32);
+    let lo = base * (1.0 + sub / SUBS as f64);
+    let hi = base * (1.0 + (sub + 1.0) / SUBS as f64);
+    (lo, hi)
+}
+
+/// A mergeable fixed-memory log-linear histogram. All writes are
+/// relaxed atomics; `record` never allocates or locks.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// f64 bits, CAS-accumulated.
+    sum: AtomicU64,
+    /// f64 bits of the observed min/max (exact, not bucket-quantized).
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0f64.to_bits()),
+            min: AtomicU64::new(f64::INFINITY.to_bits()),
+            max: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, v: f64) {
+        if v.is_nan() {
+            return;
+        }
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+        update_extreme(&self.min, v, |new, old| new < old);
+        update_extreme(&self.max, v, |new, old| new > old);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Fold another histogram's buckets into this one.
+    pub fn merge(&self, other: &Histogram) {
+        for (b, o) in self.buckets.iter().zip(other.buckets.iter()) {
+            let n = o.load(Ordering::Relaxed);
+            if n > 0 {
+                b.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        let osum = f64::from_bits(other.sum.load(Ordering::Relaxed));
+        let mut cur = self.sum.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + osum).to_bits();
+            match self.sum.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+        update_extreme(&self.min, f64::from_bits(other.min.load(Ordering::Relaxed)), |n, o| n < o);
+        update_extreme(&self.max, f64::from_bits(other.max.load(Ordering::Relaxed)), |n, o| n > o);
+    }
+
+    /// Interpolated quantile at the continuous rank `q·(count-1)`,
+    /// clamped to the exactly-observed [min, max].
+    pub fn quantile(&self, q: f64) -> f64 {
+        let count = self.count();
+        if count == 0 {
+            return 0.0;
+        }
+        let (min, max) = (
+            f64::from_bits(self.min.load(Ordering::Relaxed)),
+            f64::from_bits(self.max.load(Ordering::Relaxed)),
+        );
+        let rank = q.clamp(0.0, 1.0) * (count - 1) as f64;
+        let mut cum = 0u64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            if (cum + c) as f64 > rank {
+                let (lo, hi) = bucket_bounds(idx);
+                let frac = (rank - cum as f64) / c as f64;
+                return (lo + frac * (hi - lo)).clamp(min, max);
+            }
+            cum += c;
+        }
+        max
+    }
+
+    pub fn summary(&self) -> Summary {
+        let count = self.count();
+        if count == 0 {
+            return Summary::default();
+        }
+        Summary {
+            count: count as usize,
+            mean: f64::from_bits(self.sum.load(Ordering::Relaxed)) / count as f64,
+            min: f64::from_bits(self.min.load(Ordering::Relaxed)),
+            max: f64::from_bits(self.max.load(Ordering::Relaxed)),
+            p50: self.quantile(0.50),
+            p90: self.quantile(0.90),
+            p99: self.quantile(0.99),
+            p999: self.quantile(0.999),
+        }
+    }
+}
+
+fn update_extreme(slot: &AtomicU64, v: f64, better: impl Fn(f64, f64) -> bool) {
+    let mut cur = slot.load(Ordering::Relaxed);
+    while better(v, f64::from_bits(cur)) {
+        match slot.compare_exchange_weak(cur, v.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => break,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Write handle for a registry counter. Clones share the cell.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn incr(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Write handle for a registry gauge (a settable signed level).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instrument identity: name plus sorted `(dimension, value)` pairs.
+type Key = (String, Vec<(String, String)>);
+
+fn key_of(name: &str, dims: &[(&str, &str)]) -> Key {
+    let mut d: Vec<(String, String)> =
+        dims.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    d.sort();
+    (name.to_string(), d)
+}
+
+/// One exported value in a snapshot.
+#[derive(Clone, Debug)]
+pub enum SampleValue {
+    Counter(u64),
+    Gauge(i64),
+    Histogram(Summary),
+}
+
+/// One named, dimensioned sample.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub dims: Vec<(String, String)>,
+    pub value: SampleValue,
+}
+
+/// Accumulates samples during a snapshot; sources push their stats
+/// struct reads through this.
+#[derive(Default)]
+pub struct SnapshotBuilder {
+    samples: Vec<Sample>,
+}
+
+impl SnapshotBuilder {
+    pub fn counter(&mut self, name: &str, dims: &[(&str, &str)], v: u64) {
+        let (name, dims) = key_of(name, dims);
+        self.samples.push(Sample { name, dims, value: SampleValue::Counter(v) });
+    }
+
+    pub fn gauge(&mut self, name: &str, dims: &[(&str, &str)], v: i64) {
+        let (name, dims) = key_of(name, dims);
+        self.samples.push(Sample { name, dims, value: SampleValue::Gauge(v) });
+    }
+
+    pub fn histogram(&mut self, name: &str, dims: &[(&str, &str)], s: Summary) {
+        let (name, dims) = key_of(name, dims);
+        self.samples.push(Sample { name, dims, value: SampleValue::Histogram(s) });
+    }
+}
+
+type Source = Box<dyn Fn(&mut SnapshotBuilder) + Send + Sync>;
+
+/// Registry of named, dimensioned instruments plus snapshot-time
+/// collector sources. `snapshot()` is the only operation that walks
+/// everything; instrument writes go through the returned handles.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<Key, Arc<AtomicU64>>>,
+    gauges: Mutex<BTreeMap<Key, Arc<AtomicI64>>>,
+    histograms: Mutex<BTreeMap<Key, Arc<Histogram>>>,
+    sources: Mutex<Vec<Source>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Get-or-create a counter. Cache the handle; creation locks.
+    pub fn counter(&self, name: &str, dims: &[(&str, &str)]) -> Counter {
+        let mut g = self.counters.lock().unwrap();
+        Counter(g.entry(key_of(name, dims)).or_default().clone())
+    }
+
+    pub fn gauge(&self, name: &str, dims: &[(&str, &str)]) -> Gauge {
+        let mut g = self.gauges.lock().unwrap();
+        Gauge(g.entry(key_of(name, dims)).or_default().clone())
+    }
+
+    pub fn histogram(&self, name: &str, dims: &[(&str, &str)]) -> Arc<Histogram> {
+        let mut g = self.histograms.lock().unwrap();
+        g.entry(key_of(name, dims)).or_default().clone()
+    }
+
+    /// Register a collector polled at every `snapshot()`. Sources adapt
+    /// the pre-existing hot-path stats structs (Counters, TierStats,
+    /// FabricStats, LocalityStats, AgentStats) into the one facade.
+    pub fn register_source(&self, f: impl Fn(&mut SnapshotBuilder) + Send + Sync + 'static) {
+        self.sources.lock().unwrap().push(Box::new(f));
+    }
+
+    /// Read every owned instrument and poll every source.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut b = SnapshotBuilder::default();
+        for ((name, dims), c) in self.counters.lock().unwrap().iter() {
+            b.samples.push(Sample {
+                name: name.clone(),
+                dims: dims.clone(),
+                value: SampleValue::Counter(c.load(Ordering::Relaxed)),
+            });
+        }
+        for ((name, dims), g) in self.gauges.lock().unwrap().iter() {
+            b.samples.push(Sample {
+                name: name.clone(),
+                dims: dims.clone(),
+                value: SampleValue::Gauge(g.load(Ordering::Relaxed)),
+            });
+        }
+        for ((name, dims), h) in self.histograms.lock().unwrap().iter() {
+            b.samples.push(Sample {
+                name: name.clone(),
+                dims: dims.clone(),
+                value: SampleValue::Histogram(h.summary()),
+            });
+        }
+        for src in self.sources.lock().unwrap().iter() {
+            src(&mut b);
+        }
+        let mut samples = b.samples;
+        samples.sort_by(|a, b| (&a.name, &a.dims).cmp(&(&b.name, &b.dims)));
+        MetricsSnapshot { samples }
+    }
+}
+
+/// A point-in-time serializable reading of the whole registry.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub samples: Vec<Sample>,
+}
+
+impl MetricsSnapshot {
+    pub fn get(&self, name: &str, dims: &[(&str, &str)]) -> Option<&SampleValue> {
+        let (n, d) = key_of(name, dims);
+        self.samples.iter().find(|s| s.name == n && s.dims == d).map(|s| &s.value)
+    }
+
+    /// Counter value summed across all dimension combinations.
+    pub fn counter_total(&self, name: &str) -> u64 {
+        self.samples
+            .iter()
+            .filter(|s| s.name == name)
+            .filter_map(|s| match s.value {
+                SampleValue::Counter(v) => Some(v),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Gauge value summed across all dimension combinations.
+    pub fn gauge_total(&self, name: &str) -> i64 {
+        self.samples
+            .iter()
+            .filter(|s| s.name == name)
+            .filter_map(|s| match s.value {
+                SampleValue::Gauge(v) => Some(v),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// JSON exposition: `{"metrics": [{"name": .., "dims": {..}, ..}]}`.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"metrics\": [\n");
+        for (i, s) in self.samples.iter().enumerate() {
+            out.push_str("    {\"name\": ");
+            out.push_str(&json_str(&s.name));
+            out.push_str(", \"dims\": {");
+            for (j, (k, v)) in s.dims.iter().enumerate() {
+                if j > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(&json_str(k));
+                out.push_str(": ");
+                out.push_str(&json_str(v));
+            }
+            out.push_str("}, ");
+            match &s.value {
+                SampleValue::Counter(v) => {
+                    out.push_str(&format!("\"type\": \"counter\", \"value\": {v}"))
+                }
+                SampleValue::Gauge(v) => {
+                    out.push_str(&format!("\"type\": \"gauge\", \"value\": {v}"))
+                }
+                SampleValue::Histogram(h) => out.push_str(&format!(
+                    "\"type\": \"histogram\", \"count\": {}, \"mean\": {:.9}, \"min\": {:.9}, \
+                     \"max\": {:.9}, \"p50\": {:.9}, \"p90\": {:.9}, \"p99\": {:.9}, \
+                     \"p999\": {:.9}",
+                    h.count, h.mean, h.min, h.max, h.p50, h.p90, h.p99, h.p999
+                )),
+            }
+            out.push('}');
+            if i + 1 < self.samples.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Text exposition, one `name{dim="v",..} value` line per sample;
+    /// histograms expand into `_count`/`_mean`/`_p50`… lines.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        let dims_str = |dims: &[(String, String)]| -> String {
+            if dims.is_empty() {
+                return String::new();
+            }
+            let body: Vec<String> =
+                dims.iter().map(|(k, v)| format!("{k}={}", json_str(v))).collect();
+            format!("{{{}}}", body.join(","))
+        };
+        for s in &self.samples {
+            let d = dims_str(&s.dims);
+            match &s.value {
+                SampleValue::Counter(v) => out.push_str(&format!("{}{d} {v}\n", s.name)),
+                SampleValue::Gauge(v) => out.push_str(&format!("{}{d} {v}\n", s.name)),
+                SampleValue::Histogram(h) => {
+                    out.push_str(&format!("{}_count{d} {}\n", s.name, h.count));
+                    for (suffix, v) in [
+                        ("mean", h.mean),
+                        ("min", h.min),
+                        ("max", h.max),
+                        ("p50", h.p50),
+                        ("p90", h.p90),
+                        ("p99", h.p99),
+                        ("p999", h.p999),
+                    ] {
+                        out.push_str(&format!("{}_{suffix}{d} {v:.9}\n", s.name));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_monotone_and_bounded() {
+        let mut last = 0;
+        for v in [0.0, 1e-15, 1e-9, 1e-6, 0.5, 1.0, 1.5, 2.0, 1e3, 1e9, 1e15] {
+            let b = bucket_of(v);
+            assert!(b >= last, "bucket_of({v}) went backwards");
+            assert!(b < N_BUCKETS);
+            last = b;
+        }
+        // Bounds invert the index mapping.
+        for v in [1e-6, 0.37, 1.0, 42.0, 9e8] {
+            let (lo, hi) = bucket_bounds(bucket_of(v));
+            assert!(lo <= v && v < hi, "{v} outside [{lo},{hi})");
+        }
+    }
+
+    #[test]
+    fn histogram_quantiles_interpolate() {
+        let h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 / 1000.0); // uniform on (0, 1]
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 1000);
+        assert!((s.mean - 0.5005).abs() < 1e-9);
+        assert!((s.p50 - 0.5).abs() < 0.05, "p50 {}", s.p50);
+        assert!((s.p90 - 0.9).abs() < 0.09, "p90 {}", s.p90);
+        assert!((s.p99 - 0.99).abs() < 0.1, "p99 {}", s.p99);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p99 && s.p99 <= s.p999);
+        assert!(s.p999 <= s.max && s.min <= s.p50);
+    }
+
+    #[test]
+    fn histogram_single_sample_is_exact() {
+        let h = Histogram::new();
+        h.record(0.125);
+        let s = h.summary();
+        // One sample: every quantile clamps to the observed value.
+        assert_eq!(s.p50, 0.125);
+        assert_eq!(s.p99, 0.125);
+        assert_eq!(s.min, 0.125);
+        assert_eq!(s.max, 0.125);
+    }
+
+    #[test]
+    fn histogram_merge_adds() {
+        let (a, b) = (Histogram::new(), Histogram::new());
+        for i in 0..100 {
+            a.record(1.0 + i as f64);
+            b.record(1000.0 + i as f64);
+        }
+        a.merge(&b);
+        let s = a.summary();
+        assert_eq!(s.count, 200);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 1099.0);
+        assert!(s.p90 > 900.0, "p90 {}", s.p90);
+    }
+
+    #[test]
+    fn registry_snapshot_and_exposition() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("funcx_tasks_submitted_total", &[]);
+        c.add(7);
+        let g = reg.gauge("funcx_tasks_in_flight", &[("shard", "0")]);
+        g.set(3);
+        reg.histogram("funcx_stage_seconds", &[("stage", "t_w")]).record(0.25);
+        reg.register_source(|b| b.counter("funcx_tier_puts_total", &[("shard", "1")], 11));
+
+        let snap = reg.snapshot();
+        assert!(matches!(snap.get("funcx_tasks_submitted_total", &[]), Some(SampleValue::Counter(7))));
+        assert_eq!(snap.counter_total("funcx_tier_puts_total"), 11);
+        assert_eq!(snap.gauge_total("funcx_tasks_in_flight"), 3);
+        let json = snap.to_json();
+        assert!(json.contains("\"funcx_stage_seconds\""));
+        assert!(json.contains("\"type\": \"histogram\""));
+        let text = snap.to_text();
+        assert!(text.contains("funcx_tasks_submitted_total 7"));
+        assert!(text.contains("funcx_tasks_in_flight{shard=\"0\"} 3"));
+        assert!(text.contains("funcx_stage_seconds_count{stage=\"t_w\"} 1"));
+    }
+
+    #[test]
+    fn same_key_shares_the_cell() {
+        let reg = MetricsRegistry::new();
+        reg.counter("x", &[("a", "1"), ("b", "2")]).incr();
+        // Dimension order must not matter.
+        reg.counter("x", &[("b", "2"), ("a", "1")]).incr();
+        assert_eq!(reg.counter("x", &[("a", "1"), ("b", "2")]).get(), 2);
+    }
+
+    #[test]
+    fn histogram_memory_is_fixed() {
+        // The bucket vector never grows with sample count or range.
+        let h = Histogram::new();
+        let before = h.buckets.len();
+        for i in 0..100_000 {
+            h.record((i as f64).exp().min(1e300));
+        }
+        assert_eq!(h.buckets.len(), before);
+        assert_eq!(h.count(), 100_000);
+    }
+}

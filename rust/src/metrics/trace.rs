@@ -1,0 +1,607 @@
+//! Task flight recorder: typed per-hop trace events in bounded
+//! per-component ring buffers, assembled on demand into one
+//! cross-shard, cross-endpoint timeline.
+//!
+//! A [`TraceId`] is minted when a task is submitted and rides the wire
+//! in the task's trailer meta (a `"trc"` field beside `"iref"`), so
+//! every component that touches the task — shard, forwarder, agent,
+//! worker, fabric, store — can stamp events against the same trace.
+//! Components that run *under* a task but never see it (the fabric
+//! resolve ladder, the store's put path) pick the identity up from a
+//! thread-local [`TraceCtx`] set by the caller. Background work with no
+//! task at all (the spiller, shed decisions) records key-only events;
+//! [`FlightRecorder::assemble`] joins those in by data-ref key.
+//!
+//! Memory is bounded three ways: each component ring holds at most
+//! `capacity` events (oldest dropped, drop count kept), the task→trace
+//! index is a FIFO of [`INDEX_CAPACITY`] entries, and event payloads
+//! are fixed-size apart from the ref key strings they already carried.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::common::ids::{EndpointId, TaskId, Uuid};
+use crate::common::time::Time;
+
+/// Identity of one task's journey through the system.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TraceId(pub Uuid);
+
+impl TraceId {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        TraceId(Uuid::new())
+    }
+}
+
+impl fmt::Display for TraceId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.0.fmt(f)
+    }
+}
+
+impl std::str::FromStr for TraceId {
+    type Err = <Uuid as std::str::FromStr>::Err;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(TraceId(s.parse()?))
+    }
+}
+
+/// Where a ref resolve was satisfied in the fabric ladder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResolveSource {
+    /// Owner's local tiered store (memory or disk).
+    Local,
+    /// The fabric's byte-bounded frame cache.
+    Cache,
+    /// Fetched from a peer store.
+    Peer,
+    /// Served by a replica after the owner's copy was unreachable.
+    Replica,
+    /// Wide-area (Globus cost model) transfer.
+    Globus,
+}
+
+impl ResolveSource {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ResolveSource::Local => "local",
+            ResolveSource::Cache => "cache",
+            ResolveSource::Peer => "peer",
+            ResolveSource::Replica => "replica",
+            ResolveSource::Globus => "globus",
+        }
+    }
+}
+
+/// The typed per-hop event vocabulary (see docs/observability.md).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceKind {
+    /// Accepted by the service API (start of `t_s`).
+    Submitted { endpoint: EndpointId },
+    /// Persisted and appended to the owning shard's dispatch queue.
+    ShardEnqueued { shard: u32 },
+    /// Forwarder handed the task down the endpoint link.
+    Forwarded { endpoint: EndpointId },
+    /// Agent routed the task to a manager's queue.
+    AgentDispatched { endpoint: EndpointId },
+    /// A worker began executing (start of `t_w`).
+    WorkerStarted { endpoint: EndpointId },
+    /// The worker finished (success or typed failure already decided).
+    WorkerFinished { endpoint: EndpointId, success: bool },
+    /// A data-ref resolve was satisfied, and where.
+    RefResolved { key: String, source: ResolveSource },
+    /// One bounded-backoff retry against a peer store.
+    PeerRetry { key: String, attempt: u32 },
+    /// The owner's copy was unreachable; a replica served the frame.
+    ReplicaFailover { key: String },
+    /// The resolve ladder was exhausted; `error` is the typed
+    /// [`crate::Error`] variant name.
+    ResolveFailed { key: String, error: &'static str },
+    /// Background spiller moved the frame from memory to disk.
+    Spilled { key: String },
+    /// The store refused the put under spill backpressure.
+    ShedPut { key: String },
+    /// Agent lost; the task went back to the front of the shard queue.
+    Redispatched { attempt: u32 },
+    /// Requeued because its endpoint was decommissioned.
+    DecommissionRequeued { endpoint: EndpointId },
+    /// A frame was re-homed to a surviving store during decommission.
+    FrameDrained { key: String },
+    /// Terminal: the result was written to the owning shard's store.
+    ResultStored { shard: u32, state: &'static str },
+    /// Terminal: the task failed; `error` is the typed [`crate::Error`]
+    /// variant name (or the task state for service-side abandons).
+    TaskFailed { error: &'static str },
+}
+
+impl TraceKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceKind::Submitted { .. } => "Submitted",
+            TraceKind::ShardEnqueued { .. } => "ShardEnqueued",
+            TraceKind::Forwarded { .. } => "Forwarded",
+            TraceKind::AgentDispatched { .. } => "AgentDispatched",
+            TraceKind::WorkerStarted { .. } => "WorkerStarted",
+            TraceKind::WorkerFinished { .. } => "WorkerFinished",
+            TraceKind::RefResolved { .. } => "RefResolved",
+            TraceKind::PeerRetry { .. } => "PeerRetry",
+            TraceKind::ReplicaFailover { .. } => "ReplicaFailover",
+            TraceKind::ResolveFailed { .. } => "ResolveFailed",
+            TraceKind::Spilled { .. } => "Spilled",
+            TraceKind::ShedPut { .. } => "ShedPut",
+            TraceKind::Redispatched { .. } => "Redispatched",
+            TraceKind::DecommissionRequeued { .. } => "DecommissionRequeued",
+            TraceKind::FrameDrained { .. } => "FrameDrained",
+            TraceKind::ResultStored { .. } => "ResultStored",
+            TraceKind::TaskFailed { .. } => "TaskFailed",
+        }
+    }
+
+    /// The data-ref key this event is about, if any (used to join
+    /// key-only background events into a task's timeline).
+    pub fn key(&self) -> Option<&str> {
+        match self {
+            TraceKind::RefResolved { key, .. }
+            | TraceKind::PeerRetry { key, .. }
+            | TraceKind::ReplicaFailover { key }
+            | TraceKind::ResolveFailed { key, .. }
+            | TraceKind::Spilled { key }
+            | TraceKind::ShedPut { key }
+            | TraceKind::FrameDrained { key } => Some(key),
+            _ => None,
+        }
+    }
+
+    /// Terminal events close a timeline.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, TraceKind::ResultStored { .. } | TraceKind::TaskFailed { .. })
+    }
+
+    fn detail(&self) -> String {
+        match self {
+            TraceKind::Submitted { endpoint } => format!("endpoint={endpoint}"),
+            TraceKind::ShardEnqueued { shard } => format!("shard={shard}"),
+            TraceKind::Forwarded { endpoint } => format!("endpoint={endpoint}"),
+            TraceKind::AgentDispatched { endpoint } => format!("endpoint={endpoint}"),
+            TraceKind::WorkerStarted { endpoint } => format!("endpoint={endpoint}"),
+            TraceKind::WorkerFinished { endpoint, success } => {
+                format!("endpoint={endpoint} success={success}")
+            }
+            TraceKind::RefResolved { key, source } => {
+                format!("key={key} source={}", source.as_str())
+            }
+            TraceKind::PeerRetry { key, attempt } => format!("key={key} attempt={attempt}"),
+            TraceKind::ReplicaFailover { key } => format!("key={key}"),
+            TraceKind::ResolveFailed { key, error } => format!("key={key} error={error}"),
+            TraceKind::Spilled { key } => format!("key={key}"),
+            TraceKind::ShedPut { key } => format!("key={key}"),
+            TraceKind::Redispatched { attempt } => format!("attempt={attempt}"),
+            TraceKind::DecommissionRequeued { endpoint } => format!("endpoint={endpoint}"),
+            TraceKind::FrameDrained { key } => format!("key={key}"),
+            TraceKind::ResultStored { shard, state } => format!("shard={shard} state={state}"),
+            TraceKind::TaskFailed { error } => format!("error={error}"),
+        }
+    }
+}
+
+/// One recorded hop.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Global record order (monotone across all components).
+    pub seq: u64,
+    pub at: Time,
+    /// Recording component, e.g. `shard-0`, `endpoint-<id>`,
+    /// `fabric-<owner>`, `store-<owner>`.
+    pub component: String,
+    pub trace: Option<TraceId>,
+    pub task: Option<TaskId>,
+    pub kind: TraceKind,
+}
+
+struct Ring {
+    events: VecDeque<TraceEvent>,
+    dropped: u64,
+}
+
+/// Bounded task→trace FIFO index.
+const INDEX_CAPACITY: usize = 65_536;
+
+struct TraceIndex {
+    map: HashMap<TaskId, TraceId>,
+    order: VecDeque<TaskId>,
+}
+
+/// Default per-component ring capacity.
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// The recorder: one bounded ring per component plus the task index.
+pub struct FlightRecorder {
+    capacity: usize,
+    seq: AtomicU64,
+    rings: Mutex<BTreeMap<String, Arc<Mutex<Ring>>>>,
+    index: Mutex<TraceIndex>,
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_RING_CAPACITY)
+    }
+}
+
+impl FlightRecorder {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    pub fn with_capacity(capacity: usize) -> Self {
+        FlightRecorder {
+            capacity,
+            seq: AtomicU64::new(0),
+            rings: Mutex::new(BTreeMap::new()),
+            index: Mutex::new(TraceIndex { map: HashMap::new(), order: VecDeque::new() }),
+        }
+    }
+
+    /// A recorder that drops everything (capacity 0) — the bench
+    /// baseline for measuring recording overhead.
+    pub fn disabled() -> Arc<Self> {
+        Arc::new(Self::with_capacity(0))
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    /// Mint a trace id for a freshly submitted task.
+    pub fn mint(&self, task: TaskId) -> TraceId {
+        let trace = TraceId::new();
+        if self.capacity == 0 {
+            return trace;
+        }
+        let mut idx = self.index.lock().unwrap();
+        if idx.map.insert(task, trace).is_none() {
+            idx.order.push_back(task);
+        }
+        while idx.map.len() > INDEX_CAPACITY {
+            match idx.order.pop_front() {
+                Some(old) => {
+                    idx.map.remove(&old);
+                }
+                None => break,
+            }
+        }
+        trace
+    }
+
+    /// The trace minted for a task, if still indexed.
+    pub fn trace_id(&self, task: TaskId) -> Option<TraceId> {
+        if self.capacity == 0 {
+            return None;
+        }
+        self.index.lock().unwrap().map.get(&task).copied()
+    }
+
+    fn ring(&self, component: &str) -> Arc<Mutex<Ring>> {
+        let mut g = self.rings.lock().unwrap();
+        match g.get(component) {
+            Some(r) => r.clone(),
+            None => {
+                let r = Arc::new(Mutex::new(Ring {
+                    events: VecDeque::with_capacity(self.capacity.min(256)),
+                    dropped: 0,
+                }));
+                g.insert(component.to_string(), r.clone());
+                r
+            }
+        }
+    }
+
+    /// Append one event to a component's ring.
+    pub fn record(
+        &self,
+        component: &str,
+        trace: Option<TraceId>,
+        task: Option<TaskId>,
+        at: Time,
+        kind: TraceKind,
+    ) {
+        if self.capacity == 0 {
+            return;
+        }
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let ring = self.ring(component);
+        let mut g = ring.lock().unwrap();
+        if g.events.len() >= self.capacity {
+            g.events.pop_front();
+            g.dropped += 1;
+        }
+        g.events.push_back(TraceEvent {
+            seq,
+            at,
+            component: component.to_string(),
+            trace,
+            task,
+            kind,
+        });
+    }
+
+    /// Record an event under the ambient thread-local [`TraceCtx`], if
+    /// one is set (no-op otherwise — untraced background work).
+    pub fn record_ctx(&self, component: &str, at: Time, kind: TraceKind) {
+        if let Some((trace, task)) = TraceCtx::current() {
+            self.record(component, trace, Some(task), at, kind);
+        }
+    }
+
+    /// Record an event attributed to the ambient [`TraceCtx`] when one
+    /// is set, and anonymously (task/trace `None`) otherwise — the
+    /// anonymous form is what [`FlightRecorder::assemble`] later joins
+    /// back into task timelines by ref key (spills, sheds, drains from
+    /// background threads).
+    pub fn record_ambient(&self, component: &str, at: Time, kind: TraceKind) {
+        match TraceCtx::current() {
+            Some((trace, task)) => self.record(component, trace, Some(task), at, kind),
+            None => self.record(component, None, None, at, kind),
+        }
+    }
+
+    /// Events dropped from rings so far (ring overflow, all components).
+    pub fn dropped(&self) -> u64 {
+        self.rings
+            .lock()
+            .unwrap()
+            .values()
+            .map(|r| r.lock().unwrap().dropped)
+            .sum()
+    }
+
+    /// Total events currently resident across all rings.
+    pub fn resident(&self) -> usize {
+        self.rings
+            .lock()
+            .unwrap()
+            .values()
+            .map(|r| r.lock().unwrap().events.len())
+            .sum()
+    }
+
+    /// Assemble one task's cross-component timeline: every event
+    /// stamped with the task id or its trace id, plus key-only
+    /// background events (spill/shed/drain) for any ref key the task's
+    /// own events mention, ordered by global sequence.
+    pub fn assemble(&self, task: TaskId) -> Option<TaskTrace> {
+        let trace = self.trace_id(task);
+        let rings: Vec<Arc<Mutex<Ring>>> =
+            self.rings.lock().unwrap().values().cloned().collect();
+        let mut events: Vec<TraceEvent> = Vec::new();
+        for ring in &rings {
+            let g = ring.lock().unwrap();
+            for e in &g.events {
+                let owned = e.task == Some(task)
+                    || (trace.is_some() && e.trace == trace);
+                if owned {
+                    events.push(e.clone());
+                }
+            }
+        }
+        if events.is_empty() {
+            return None;
+        }
+        let keys: BTreeSet<String> = events
+            .iter()
+            .filter_map(|e| e.kind.key().map(|k| k.to_string()))
+            .collect();
+        if !keys.is_empty() {
+            for ring in &rings {
+                let g = ring.lock().unwrap();
+                for e in &g.events {
+                    if e.task.is_none()
+                        && e.trace.is_none()
+                        && e.kind.key().is_some_and(|k| keys.contains(k))
+                    {
+                        events.push(e.clone());
+                    }
+                }
+            }
+        }
+        events.sort_by_key(|e| e.seq);
+        events.dedup_by_key(|e| e.seq);
+        Some(TaskTrace { task, trace, events })
+    }
+}
+
+/// Thread-local trace context: lets components that never see the task
+/// (fabric resolve, store put) stamp events against it.
+pub struct TraceCtx;
+
+thread_local! {
+    static CTX: std::cell::Cell<Option<(Option<TraceId>, TaskId)>> =
+        const { std::cell::Cell::new(None) };
+}
+
+impl TraceCtx {
+    /// Set the ambient (trace, task) for the current thread; restored
+    /// to the previous value when the guard drops.
+    pub fn enter(trace: Option<TraceId>, task: TaskId) -> TraceCtxGuard {
+        let prev = CTX.with(|c| c.replace(Some((trace, task))));
+        TraceCtxGuard { prev }
+    }
+
+    pub fn current() -> Option<(Option<TraceId>, TaskId)> {
+        CTX.with(|c| c.get())
+    }
+}
+
+pub struct TraceCtxGuard {
+    prev: Option<(Option<TraceId>, TaskId)>,
+}
+
+impl Drop for TraceCtxGuard {
+    fn drop(&mut self) {
+        CTX.with(|c| c.set(self.prev));
+    }
+}
+
+/// One task's assembled timeline.
+#[derive(Clone, Debug)]
+pub struct TaskTrace {
+    pub task: TaskId,
+    pub trace: Option<TraceId>,
+    /// Events in global record order.
+    pub events: Vec<TraceEvent>,
+}
+
+impl TaskTrace {
+    /// Distinct components that contributed events.
+    pub fn components(&self) -> BTreeSet<&str> {
+        self.events.iter().map(|e| e.component.as_str()).collect()
+    }
+
+    /// The last terminal event, if the timeline closed.
+    pub fn terminal(&self) -> Option<&TraceEvent> {
+        self.events.iter().rev().find(|e| e.kind.is_terminal())
+    }
+
+    /// Pretty-print the timeline, times relative to the first event.
+    pub fn render(&self) -> String {
+        let t0 = self.events.first().map(|e| e.at).unwrap_or(0.0);
+        let mut out = match self.trace {
+            Some(t) => format!("trace {t} task {}\n", self.task),
+            None => format!("trace (unminted) task {}\n", self.task),
+        };
+        for e in &self.events {
+            out.push_str(&format!(
+                "  +{:>9.3}ms  {:<22} {:<20} {}\n",
+                1e3 * (e.at - t0),
+                e.component,
+                e.kind.name(),
+                e.kind.detail()
+            ));
+        }
+        match self.terminal() {
+            Some(t) => out.push_str(&format!("  terminal: {} ({})\n", t.kind.name(), t.kind.detail())),
+            None => out.push_str("  terminal: (still in flight)\n"),
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_assemble_orders_by_seq() {
+        let rec = FlightRecorder::new();
+        let task = TaskId::new();
+        let trc = rec.mint(task);
+        let ep = EndpointId::new();
+        rec.record("shard-0", Some(trc), Some(task), 0.0, TraceKind::Submitted { endpoint: ep });
+        rec.record("shard-0", Some(trc), Some(task), 0.001, TraceKind::ShardEnqueued { shard: 0 });
+        rec.record(
+            "endpoint-x",
+            Some(trc),
+            Some(task),
+            0.002,
+            TraceKind::WorkerStarted { endpoint: ep },
+        );
+        rec.record(
+            "shard-0",
+            Some(trc),
+            Some(task),
+            0.003,
+            TraceKind::ResultStored { shard: 0, state: "Success" },
+        );
+        let t = rec.assemble(task).expect("trace");
+        assert_eq!(t.trace, Some(trc));
+        assert_eq!(t.events.len(), 4);
+        assert!(t.events.windows(2).all(|w| w[0].seq < w[1].seq));
+        assert_eq!(t.components().len(), 2);
+        assert_eq!(t.terminal().unwrap().kind.name(), "ResultStored");
+        assert!(t.render().contains("ResultStored"));
+    }
+
+    #[test]
+    fn key_only_events_join_by_ref_key() {
+        let rec = FlightRecorder::new();
+        let task = TaskId::new();
+        let trc = rec.mint(task);
+        // Background spill of the frame this task later resolves.
+        rec.record("store-a", None, None, 0.5, TraceKind::Spilled { key: "k1".into() });
+        rec.record("store-a", None, None, 0.6, TraceKind::Spilled { key: "other".into() });
+        rec.record(
+            "fabric-b",
+            Some(trc),
+            Some(task),
+            1.0,
+            TraceKind::RefResolved { key: "k1".into(), source: ResolveSource::Local },
+        );
+        let t = rec.assemble(task).unwrap();
+        assert_eq!(t.events.len(), 2, "only k1's spill joins");
+        assert_eq!(t.events[0].kind, TraceKind::Spilled { key: "k1".into() });
+    }
+
+    #[test]
+    fn rings_are_bounded() {
+        let rec = FlightRecorder::with_capacity(8);
+        let task = TaskId::new();
+        for i in 0..100 {
+            rec.record("c", None, Some(task), i as f64, TraceKind::Redispatched { attempt: i });
+        }
+        assert_eq!(rec.resident(), 8);
+        assert_eq!(rec.dropped(), 92);
+        let t = rec.assemble(task).unwrap();
+        assert_eq!(t.events.len(), 8);
+        assert_eq!(t.events.last().unwrap().kind, TraceKind::Redispatched { attempt: 99 });
+    }
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let rec = FlightRecorder::disabled();
+        let task = TaskId::new();
+        let _ = rec.mint(task);
+        rec.record("c", None, Some(task), 0.0, TraceKind::Redispatched { attempt: 0 });
+        assert!(!rec.enabled());
+        assert_eq!(rec.resident(), 0);
+        assert!(rec.assemble(task).is_none());
+    }
+
+    #[test]
+    fn index_is_bounded_fifo() {
+        let rec = FlightRecorder::with_capacity(4);
+        let first = TaskId::new();
+        rec.mint(first);
+        for _ in 0..INDEX_CAPACITY {
+            rec.mint(TaskId::new());
+        }
+        assert!(rec.trace_id(first).is_none(), "oldest entry evicted");
+        assert_eq!(rec.index.lock().unwrap().map.len(), INDEX_CAPACITY);
+    }
+
+    #[test]
+    fn trace_ctx_nests_and_restores() {
+        let task = TaskId::new();
+        assert!(TraceCtx::current().is_none());
+        {
+            let _g = TraceCtx::enter(None, task);
+            assert_eq!(TraceCtx::current(), Some((None, task)));
+            let inner = TaskId::new();
+            {
+                let _g2 = TraceCtx::enter(Some(TraceId::new()), inner);
+                assert_eq!(TraceCtx::current().unwrap().1, inner);
+            }
+            assert_eq!(TraceCtx::current(), Some((None, task)));
+        }
+        assert!(TraceCtx::current().is_none());
+    }
+
+    #[test]
+    fn trace_id_roundtrips_as_string() {
+        let t = TraceId::new();
+        let s = t.to_string();
+        assert_eq!(s.parse::<TraceId>().unwrap(), t);
+    }
+}

@@ -364,6 +364,22 @@ pub struct LocalityStats {
     pub remote_routes: AtomicU64,
 }
 
+impl LocalityStats {
+    /// Export both counters into a metrics snapshot.
+    pub fn fill(&self, b: &mut crate::metrics::SnapshotBuilder, dims: &[(&str, &str)]) {
+        b.counter(
+            "funcx_route_local_total",
+            dims,
+            self.local_routes.load(Ordering::Relaxed),
+        );
+        b.counter(
+            "funcx_route_remote_total",
+            dims,
+            self.remote_routes.load(Ordering::Relaxed),
+        );
+    }
+}
+
 /// Locality-aware routing (§5 + FDN "data-aware delivery"): wraps
 /// [`WarmingAware`] and, for tasks carrying a by-ref input, prefers
 /// managers on the ref owner's endpoint *within* each warming tier — a

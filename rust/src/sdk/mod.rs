@@ -17,6 +17,7 @@ use crate::common::error::Result;
 use crate::common::ids::{ContainerId, EndpointId, FunctionId, TaskId};
 use crate::common::task::Payload;
 use crate::datastore::DataRef;
+use crate::metrics::{MetricsSnapshot, TaskTrace};
 use crate::serialize::Value;
 use crate::service::{FuncXService, ShardMap};
 
@@ -146,6 +147,21 @@ impl FuncXClient {
         self.service.shard_map().shard_for_endpoint(endpoint)
     }
 
+    /// Assemble the cross-shard, cross-endpoint flight trace for one of
+    /// this client's tasks (the introspection half of §4.4's task-state
+    /// visibility). `None` if tracing is disabled service-side or the
+    /// task's events have aged out of the bounded rings.
+    pub fn trace(&self, task: TaskId) -> Option<TaskTrace> {
+        self.service.trace(task)
+    }
+
+    /// One consistent point-in-time snapshot of the service's metrics
+    /// registry (counters, gauges, stage histograms across every shard,
+    /// store, and advertised endpoint).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.service.metrics_snapshot()
+    }
+
     pub fn service(&self) -> &Arc<FuncXService> {
         &self.service
     }
@@ -204,6 +220,21 @@ mod tests {
         let e = EndpointId::new();
         assert_eq!(client.shard_of_task(t), svc.shard_map().shard_for_task(t));
         assert_eq!(client.shard_of_endpoint(e), svc.shard_map().shard_for_endpoint(e));
+    }
+
+    #[test]
+    fn trace_and_metrics_surface_through_client() {
+        let (client, e, fh, handle) = stack();
+        let f = client.register_function("echo", Payload::Echo).unwrap();
+        let task = client.run(f, e, &Value::Int(7)).unwrap();
+        client.get_result(task, Duration::from_secs(10)).unwrap();
+        let trace = client.trace(task).expect("tracing is on by default");
+        assert!(trace.terminal().is_some(), "completed task's trace must close");
+        let snap = client.metrics();
+        assert!(snap.counter_total("funcx_tasks_submitted_total") >= 1);
+        assert!(snap.counter_total("funcx_tasks_completed_total") >= 1);
+        fh.shutdown();
+        handle.join();
     }
 
     #[test]

@@ -23,7 +23,10 @@ use crate::common::sync::Notify;
 use crate::common::task::{Payload, Task, TaskResult, TaskState};
 use crate::common::time::{Clock, Time, WallClock};
 use crate::datastore::{DataFabric, DataRef, TieredConfig, TieredStore};
-use crate::metrics::{Counters, LatencyBreakdown};
+use crate::metrics::{
+    Counters, FlightRecorder, LatencyBreakdown, MetricsRegistry, MetricsSnapshot, TaskTrace,
+    TraceCtx, TraceId, TraceKind,
+};
 use crate::registry::{EndpointStatus, Registry};
 use crate::serialize::{pack, unpack, Value, Wire};
 use crate::service::shard::{shard_owner, ShardMap};
@@ -85,6 +88,16 @@ pub struct FuncXService {
     pub clock: Arc<dyn Clock>,
     pub latency: Arc<LatencyBreakdown>,
     pub counters: Arc<Counters>,
+    /// The unified metrics facade: every pre-existing stats struct
+    /// (Counters, LatencyBreakdown, per-shard Tier/FabricStats,
+    /// per-endpoint TierStats) is polled into one dimensioned snapshot
+    /// tree at [`MetricsRegistry::snapshot`] — zero hot-path cost.
+    pub metrics: Arc<MetricsRegistry>,
+    /// The task flight recorder (see `docs/observability.md`): every
+    /// hop of every task appends a typed event; assemble timelines via
+    /// [`FuncXService::trace`]. Ring capacity comes from
+    /// [`ServiceConfig::trace_ring_capacity`] (0 disables).
+    pub recorder: Arc<FlightRecorder>,
     shard_map: ShardMap,
     shards: Arc<Vec<ServiceShard>>,
 }
@@ -119,22 +132,27 @@ fn build_shards(
     cfg: &ServiceConfig,
     clock: &Arc<dyn Clock>,
     counters: &Arc<Counters>,
+    recorder: &Arc<FlightRecorder>,
 ) -> Arc<Vec<ServiceShard>> {
     let n = cfg.service_shards.max(1);
     let shards: Vec<ServiceShard> = (0..n)
         .map(|i| {
-            let store = TieredStore::new(
-                shard_owner(i),
-                TieredConfig {
-                    mem_high_watermark: cfg.store_mem_watermark_bytes,
-                    default_ttl_s: cfg.result_ttl_s,
-                    spool_dir: None,
-                },
-            )
-            .expect("create service payload spool")
-            .with_owner_clock(clock.clone());
-            let fabric = Arc::new(DataFabric::new(Arc::new(store)));
+            let store = Arc::new(
+                TieredStore::new(
+                    shard_owner(i),
+                    TieredConfig {
+                        mem_high_watermark: cfg.store_mem_watermark_bytes,
+                        default_ttl_s: cfg.result_ttl_s,
+                        spool_dir: None,
+                    },
+                )
+                .expect("create service payload spool")
+                .with_owner_clock(clock.clone()),
+            );
+            store.with_recorder(recorder.clone(), clock.clone());
+            let fabric = Arc::new(DataFabric::new(store));
             fabric.with_counters(counters.clone());
+            fabric.with_recorder(recorder.clone());
             ServiceShard {
                 kv: KvStore::new(),
                 fabric,
@@ -159,9 +177,10 @@ impl FuncXService {
     pub fn new(cfg: ServiceConfig) -> Self {
         let clock: Arc<dyn Clock> = Arc::new(WallClock::new());
         let counters = Counters::new();
-        let shards = build_shards(&cfg, &clock, &counters);
+        let recorder = Arc::new(FlightRecorder::with_capacity(cfg.trace_ring_capacity));
+        let shards = build_shards(&cfg, &clock, &counters, &recorder);
         let shard_map = ShardMap::new(cfg.service_shards.max(1));
-        FuncXService {
+        let svc = FuncXService {
             auth: AuthService::new(),
             registry: Registry::new(),
             fabric: shards[0].fabric.clone(),
@@ -169,9 +188,13 @@ impl FuncXService {
             clock,
             latency: Arc::new(LatencyBreakdown::new()),
             counters,
+            metrics: MetricsRegistry::new(),
+            recorder,
             shard_map,
             shards,
-        }
+        };
+        svc.register_metric_sources();
+        svc
     }
 
     /// Replace the service clock (construction-time only: the shard
@@ -180,9 +203,75 @@ impl FuncXService {
     /// fabrics).
     pub fn with_clock(mut self, clock: Arc<dyn Clock>) -> Self {
         self.clock = clock;
-        self.shards = build_shards(&self.cfg, &self.clock, &self.counters);
+        self.shards = build_shards(&self.cfg, &self.clock, &self.counters, &self.recorder);
         self.fabric = self.shards[0].fabric.clone();
+        // The old registry's per-shard sources capture the replaced
+        // shard fabrics; start a fresh registry over the new ones.
+        self.metrics = MetricsRegistry::new();
+        self.register_metric_sources();
         self
+    }
+
+    /// Adapt every pre-existing stats surface into the metrics facade:
+    /// polled only at [`MetricsRegistry::snapshot`], so the hot paths
+    /// keep their relaxed-atomic structs untouched.
+    fn register_metric_sources(&self) {
+        let counters = self.counters.clone();
+        self.metrics.register_source(move |b| counters.fill(b));
+        let latency = self.latency.clone();
+        self.metrics.register_source(move |b| latency.fill(b));
+        let recorder = self.recorder.clone();
+        self.metrics.register_source(move |b| {
+            b.gauge("funcx_trace_events_resident", &[], recorder.resident() as i64);
+            b.counter("funcx_trace_events_dropped_total", &[], recorder.dropped());
+        });
+        for (i, sh) in self.shards.iter().enumerate() {
+            let fabric = sh.fabric.clone();
+            let shard = i.to_string();
+            self.metrics.register_source(move |b| {
+                let dims = [("shard", shard.as_str())];
+                fabric.stats.fill(b, &dims);
+                fabric.local().stats.fill(b, &dims);
+            });
+        }
+        // Endpoint membership is dynamic: enumerate advertised stores
+        // at snapshot time rather than capturing today's set.
+        let registry = self.registry.clone();
+        self.metrics.register_source(move |b| {
+            for (ep, store) in registry.advertised_stores() {
+                let id = ep.to_string();
+                store.stats.fill(b, &[("endpoint", id.as_str())]);
+            }
+        });
+    }
+
+    /// Record a trace event on a service-shard component. The
+    /// `enabled()` gate keeps the disabled path free of the component
+    /// string allocation.
+    fn record_shard(
+        &self,
+        shard: usize,
+        trace: Option<TraceId>,
+        task: TaskId,
+        at: Time,
+        kind: TraceKind,
+    ) {
+        if self.recorder.enabled() {
+            self.recorder.record(&format!("shard-{shard}"), trace, Some(task), at, kind);
+        }
+    }
+
+    /// Assemble one task's cross-shard, cross-endpoint flight-recorder
+    /// timeline (`None` if no events were recorded for it — recorder
+    /// disabled, or the events aged out of every ring).
+    pub fn trace(&self, id: TaskId) -> Option<TaskTrace> {
+        self.recorder.assemble(id)
+    }
+
+    /// One coherent snapshot of every registered metric (see
+    /// `docs/observability.md` for the catalog).
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
     }
 
     // ---- shard routing -----------------------------------------------------
@@ -296,6 +385,7 @@ impl FuncXService {
         now: Time,
     ) -> Result<Task> {
         let id = TaskId::new();
+        let trace = self.recorder.enabled().then(|| self.recorder.mint(id));
         if input.len() > self.cfg.max_payload_bytes {
             if !self.cfg.ref_dispatch {
                 return Err(Error::PayloadTooLarge {
@@ -305,7 +395,12 @@ impl FuncXService {
             }
             let size = input.len() as u64;
             let shard = self.task_shard(id);
-            let r = shard.fabric.put(&format!("task-input:{id}"), input, now)?;
+            // Offload under the task's trace context: a shed put
+            // (spill backpressure) then lands in this task's timeline.
+            let r = {
+                let _ctx = TraceCtx::enter(trace, id);
+                shard.fabric.put(&format!("task-input:{id}"), input, now)?
+            };
             shard.offloaded.lock().expect("offloaded set poisoned").insert(id);
             crate::metrics::Counters::incr(&self.counters.tasks_ref_dispatched);
             crate::metrics::Counters::add(&self.counters.bytes_offloaded, size);
@@ -318,9 +413,10 @@ impl FuncXService {
                 payload,
                 input: crate::serialize::Buffer::empty(),
                 input_ref: Some(r),
+                trace,
             });
         }
-        Ok(Task { id, function, endpoint, user, container, payload, input, input_ref: None })
+        Ok(Task { id, function, endpoint, user, container, payload, input, input_ref: None, trace })
     }
 
     /// Submit a user-facing batch (§4.6): one authenticated call, many
@@ -374,9 +470,22 @@ impl FuncXService {
         self.enqueue_batch(batch.endpoint, tasks, now)
     }
 
-    fn enqueue_task(&self, task: Task, now: f64) -> Result<SubmitReceipt> {
+    fn enqueue_task(&self, mut task: Task, now: f64) -> Result<SubmitReceipt> {
         let id = task.id;
+        // Tasks built outside make_task (submit_by_ref chains) have no
+        // trace yet — mint at the enqueue boundary so every submitted
+        // task is traceable.
+        if task.trace.is_none() && self.recorder.enabled() {
+            task.trace = Some(self.recorder.mint(id));
+        }
         self.latency.on_submit(id, now);
+        self.record_shard(
+            self.shard_map.shard_for_task(id),
+            task.trace,
+            id,
+            now,
+            TraceKind::Submitted { endpoint: task.endpoint },
+        );
         // Persist task state on the owning shard (Redis hashset; §4.1).
         self.task_shard(id).kv.hset("tasks", &id.to_string(), task.to_buffer());
         self.set_state(id, TaskState::Received);
@@ -388,7 +497,18 @@ impl FuncXService {
         // Append to the endpoint's task queue (Redis list; §4.1).
         self.task_queue(task.endpoint).push(&task)?;
         self.set_state(id, TaskState::WaitingForEndpoint);
-        self.latency.on_queued(id, self.clock.now());
+        let queued_at = self.clock.now();
+        self.latency.on_queued(id, queued_at);
+        // The dispatch queue lives on the ENDPOINT's shard (which may
+        // differ from the task's) — record where the task actually sits.
+        let qshard = self.shard_map.shard_for_endpoint(task.endpoint);
+        self.record_shard(
+            qshard,
+            task.trace,
+            id,
+            queued_at,
+            TraceKind::ShardEnqueued { shard: qshard as u32 },
+        );
         Ok(SubmitReceipt { task: id })
     }
 
@@ -399,12 +519,22 @@ impl FuncXService {
     fn enqueue_batch(
         &self,
         endpoint: EndpointId,
-        tasks: Vec<Task>,
+        mut tasks: Vec<Task>,
         now: f64,
     ) -> Result<Vec<SubmitReceipt>> {
-        for task in &tasks {
+        for task in &mut tasks {
             let id = task.id;
+            if task.trace.is_none() && self.recorder.enabled() {
+                task.trace = Some(self.recorder.mint(id));
+            }
             self.latency.on_submit(id, now);
+            self.record_shard(
+                self.shard_map.shard_for_task(id),
+                task.trace,
+                id,
+                now,
+                TraceKind::Submitted { endpoint },
+            );
             self.task_shard(id).kv.hset("tasks", &id.to_string(), task.to_buffer());
             self.set_state(id, TaskState::Received);
             crate::metrics::Counters::incr(&self.counters.tasks_submitted);
@@ -415,10 +545,18 @@ impl FuncXService {
         }
         self.task_queue(endpoint).push_all(&tasks)?;
         let queued_at = self.clock.now();
+        let qshard = self.shard_map.shard_for_endpoint(endpoint);
         let mut receipts = Vec::with_capacity(tasks.len());
         for task in &tasks {
             self.set_state(task.id, TaskState::WaitingForEndpoint);
             self.latency.on_queued(task.id, queued_at);
+            self.record_shard(
+                qshard,
+                task.trace,
+                task.id,
+                queued_at,
+                TraceKind::ShardEnqueued { shard: qshard as u32 },
+            );
             receipts.push(SubmitReceipt { task: task.id });
         }
         Ok(receipts)
@@ -474,7 +612,13 @@ impl FuncXService {
                 // still propagates — wait_result surfaces it rather
                 // than blocking on a ref that may be gone for good.)
                 let frame = match &result.output_ref {
-                    Some(r) => shard.fabric.resolve(r, self.clock.now())?,
+                    Some(r) => {
+                        // Resolve under the task's trace context so the
+                        // ladder outcome (hit tier, retries, replica
+                        // failover) lands in this task's timeline.
+                        let _ctx = TraceCtx::enter(self.recorder.trace_id(id), id);
+                        shard.fabric.resolve(r, self.clock.now())?
+                    }
                     None => result.output.clone(),
                 };
                 let value = unpack(&frame)?;
@@ -647,6 +791,10 @@ impl FuncXService {
     pub(crate) fn store_result(&self, r: &TaskResult) {
         let now = self.clock.now();
         let shard = self.task_shard(r.task);
+        // Everything below — replication's ladder pull, the GC
+        // reclaims — runs under this task's trace context.
+        let trace = self.recorder.trace_id(r.task);
+        let _ctx = TraceCtx::enter(trace, r.task);
         // Replication (§5 survivability): before the record is
         // persisted, copies of a by-ref result frame are pushed to
         // other advertised stores and the replica set is recorded on
@@ -728,11 +876,24 @@ impl FuncXService {
         }
         self.set_state(r.task, r.state);
         self.latency.on_result_stored(r.task, now);
+        let shard_no = self.shard_map.shard_for_task(r.task);
+        self.record_shard(
+            shard_no,
+            trace,
+            r.task,
+            now,
+            TraceKind::ResultStored { shard: shard_no as u32, state: r.state.name() },
+        );
         match r.state {
             TaskState::Success => {
                 crate::metrics::Counters::incr(&self.counters.tasks_completed);
             }
             _ => {
+                let error = match r.state {
+                    TaskState::Abandoned => "Abandoned",
+                    _ => "TaskFailed",
+                };
+                self.record_shard(shard_no, trace, r.task, now, TraceKind::TaskFailed { error });
                 crate::metrics::Counters::incr(&self.counters.tasks_failed);
             }
         }
@@ -911,6 +1072,17 @@ impl FuncXService {
                 if placed {
                     drained += 1;
                     crate::metrics::Counters::incr(&self.counters.frames_drained);
+                    // Key-only event: the drain has no task identity —
+                    // assembly joins it into timelines by ref key.
+                    if self.recorder.enabled() {
+                        self.recorder.record(
+                            &format!("shard-{}", self.shard_map.shard_for_endpoint(endpoint)),
+                            None,
+                            None,
+                            now,
+                            TraceKind::FrameDrained { key: key.clone() },
+                        );
+                    }
                 }
             }
         }

@@ -22,6 +22,7 @@ use std::time::Duration;
 use crate::common::ids::{EndpointId, TaskId};
 use crate::common::task::{Task, TaskState};
 use crate::endpoint::{Downstream, ForwarderSide, Upstream};
+use crate::metrics::TraceKind;
 use crate::registry::EndpointStatus;
 use crate::service::api::FuncXService;
 
@@ -110,6 +111,9 @@ fn forwarder_loop(
     decommission: Arc<AtomicBool>,
 ) {
     let queue = svc.task_queue(endpoint);
+    // This forwarder's flight-recorder component: it runs on the
+    // endpoint's owning shard.
+    let component = format!("shard-{}", svc.shard_map().shard_for_endpoint(endpoint));
     // One latch, three wake sources: upstream link traffic (wired in by
     // `link()`), pushes to this endpoint's task queue, and shutdown.
     let wake = link.wake_handle();
@@ -178,6 +182,15 @@ fn forwarder_loop(
                     svc.set_state(id, TaskState::WaitingForEndpoint);
                     stats.requeued.fetch_add(1, Ordering::Relaxed);
                     crate::metrics::Counters::incr(&svc.counters.tasks_redispatched);
+                    if svc.recorder.enabled() {
+                        svc.recorder.record(
+                            &component,
+                            task.trace,
+                            Some(id),
+                            now,
+                            TraceKind::Redispatched { attempt: *n },
+                        );
+                    }
                 }
             }
             break; // this forwarder's link is done; reconnect spawns a new one
@@ -199,6 +212,15 @@ fn forwarder_loop(
                 in_flight.insert(t.id, t.clone());
                 svc.set_state(t.id, TaskState::WaitingForNodes);
                 svc.latency.on_forwarded(t.id, now);
+                if svc.recorder.enabled() {
+                    svc.recorder.record(
+                        &component,
+                        t.trace,
+                        Some(t.id),
+                        now,
+                        TraceKind::Forwarded { endpoint },
+                    );
+                }
             }
             stats.dispatched.fetch_add(batch.len() as u64, Ordering::Relaxed);
             let refs = batch.iter().filter(|t| t.dispatches_by_ref()).count() as u64;
@@ -253,6 +275,15 @@ fn forwarder_loop(
                         let _ = queue.push_front(task.as_ref());
                         svc.set_state(id, TaskState::WaitingForEndpoint);
                         stats.requeued.fetch_add(1, Ordering::Relaxed);
+                        if svc.recorder.enabled() {
+                            svc.recorder.record(
+                                &component,
+                                task.trace,
+                                Some(id),
+                                svc.clock.now(),
+                                TraceKind::DecommissionRequeued { endpoint },
+                            );
+                        }
                     }
                     let _ = svc.decommission_endpoint(endpoint);
                     return;

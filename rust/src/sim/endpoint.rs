@@ -85,6 +85,10 @@ pub struct SimReport {
     pub evictions: u64,
     /// Mean per-task latency (submit→done).
     pub mean_latency_s: f64,
+    /// Full distribution of per-task completion times (interpolated
+    /// percentiles from [`crate::metrics::summarize`]); the mean above
+    /// is kept for call-site compatibility.
+    pub latency: crate::metrics::Summary,
     /// Achieved throughput, tasks/s.
     pub throughput: f64,
     /// Replica copies pushed for by-ref outputs (§5 survivability;
@@ -506,6 +510,7 @@ impl SimEndpoint {
             warm_hits: warm,
             evictions: evict,
             mean_latency_s: completions.iter().sum::<f64>() / tasks.len().max(1) as f64,
+            latency: crate::metrics::summarize(&completions),
             throughput: tasks.len() as f64 / completion_s.max(1e-9),
             replica_pushes,
             replica_bytes,

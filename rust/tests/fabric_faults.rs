@@ -24,7 +24,7 @@ use funcx::datastore::{
     DataFabric, DataRef, DiskBackend, SpoolStore, StoreBackend, TieredConfig, TieredStore,
 };
 use funcx::endpoint::{link, EndpointBuilder, Manager, ManagerCtx};
-use funcx::metrics::{Counters, LatencyBreakdown};
+use funcx::metrics::{Counters, FlightRecorder, LatencyBreakdown, TaskTrace, TraceKind};
 use funcx::registry::EndpointStatus;
 use funcx::runtime::PayloadExecutor;
 use funcx::serialize::{pack, unpack, Buffer, Value};
@@ -35,6 +35,20 @@ use funcx::Error;
 /// `fabric`, and return its result within a bounded wait. The harness
 /// itself asserts the no-hang half of every scenario.
 fn run_ref_task(fabric: Arc<DataFabric>, clock: Arc<dyn Clock>, dref: DataRef) -> TaskResult {
+    run_ref_task_traced(fabric, clock, dref).0
+}
+
+/// Same harness with a live flight recorder wired through worker and
+/// fabric: every scenario also gets its task's assembled trace, so the
+/// fault tests can pin that the *timeline* ends in the matching typed
+/// error — not just that some failure string came back.
+fn run_ref_task_traced(
+    fabric: Arc<DataFabric>,
+    clock: Arc<dyn Clock>,
+    dref: DataRef,
+) -> (TaskResult, TaskTrace) {
+    let recorder = Arc::new(FlightRecorder::default());
+    fabric.with_recorder(recorder.clone());
     let (tx, rx) = channel();
     let ctx = ManagerCtx {
         executor: Arc::new(PayloadExecutor::bare()),
@@ -46,11 +60,12 @@ fn run_ref_task(fabric: Arc<DataFabric>, clock: Arc<dyn Clock>, dref: DataRef) -
         max_result_bytes: usize::MAX,
         clock,
         latency: Arc::new(LatencyBreakdown::new()),
+        recorder: recorder.clone(),
         start_model: TABLE3_MODELS.lookup(SystemProfile::Local, ContainerTech::None),
         cold_start_scale: 0.001,
     };
     let m = Manager::spawn(1, 600.0, ctx, 1);
-    let task = Task::new(
+    let mut task = Task::new(
         FunctionId::new(),
         EndpointId::new(),
         UserId::new(),
@@ -59,12 +74,36 @@ fn run_ref_task(fabric: Arc<DataFabric>, clock: Arc<dyn Clock>, dref: DataRef) -
         Buffer::empty(),
     )
     .with_input_ref(dref);
+    task.trace = Some(recorder.mint(task.id));
+    let id = task.id;
     m.enqueue(vec![Arc::new(task)]);
     let batch = rx
         .recv_timeout(Duration::from_secs(10))
         .expect("faulted task must produce a result, not hang");
     m.shutdown();
-    batch.into_iter().next().expect("one result")
+    let r = batch.into_iter().next().expect("one result");
+    let trace = recorder.assemble(id).expect("a traced task must assemble a timeline");
+    (r, trace)
+}
+
+/// Assert the trace's terminal event is a worker-side `TaskFailed`
+/// carrying exactly the injected typed error kind, and that the fabric
+/// also logged a `ResolveFailed` with the same kind on the way down.
+fn assert_fault_trace(trace: &TaskTrace, kind: &str) {
+    match &trace.terminal().expect("faulted task's trace must close").kind {
+        TraceKind::TaskFailed { error } => {
+            assert_eq!(*error, kind, "terminal error kind\n{}", trace.render())
+        }
+        other => panic!("terminal must be TaskFailed, got {other:?}\n{}", trace.render()),
+    }
+    assert!(
+        trace
+            .events
+            .iter()
+            .any(|e| matches!(&e.kind, TraceKind::ResolveFailed { error, .. } if *error == kind)),
+        "fabric must log ResolveFailed({kind})\n{}",
+        trace.render()
+    );
 }
 
 /// The failure message a faulted task carries back to the caller.
@@ -101,8 +140,9 @@ fn ref_evicted_mid_flight_fails_typed() {
     // Mid-flight eviction, after the ref was minted and "dispatched".
     assert!(s.remove("task-input:victim").unwrap());
     assert!(matches!(fabric.resolve(&dref, 0.0), Err(Error::NotFound(_))));
-    let r = run_ref_task(fabric, Arc::new(WallClock::new()), dref);
+    let (r, trace) = run_ref_task_traced(fabric, Arc::new(WallClock::new()), dref);
     assert!(failure_message(&r).contains("not found"), "got: {}", failure_message(&r));
+    assert_fault_trace(&trace, "NotFound");
 }
 
 /// Fault: the owning endpoint disconnects before the fetch. Peer-held
@@ -127,8 +167,9 @@ fn owner_disconnected_before_fetch_fails_typed() {
     }
     assert!(fabric.resolve(&cached, 0.0).is_ok(), "verified cache entries survive peer loss");
 
-    let r = run_ref_task(fabric, Arc::new(WallClock::new()), uncached);
+    let (r, trace) = run_ref_task_traced(fabric, Arc::new(WallClock::new()), uncached);
     assert!(failure_message(&r).contains("not found"), "got: {}", failure_message(&r));
+    assert_fault_trace(&trace, "NotFound");
 }
 
 /// Fault: the frame fetched from a peer no longer matches the ref's
@@ -149,8 +190,9 @@ fn checksum_mismatch_on_peer_forward_is_corrupt() {
         Err(Error::Corrupt(m)) => assert!(m.contains("checksum"), "{m}"),
         other => panic!("expected Corrupt, got {other:?}"),
     }
-    let r = run_ref_task(fabric, Arc::new(WallClock::new()), stale);
+    let (r, trace) = run_ref_task_traced(fabric, Arc::new(WallClock::new()), stale);
     assert!(failure_message(&r).contains("corrupt"), "got: {}", failure_message(&r));
+    assert_fault_trace(&trace, "Corrupt");
 }
 
 /// Fault: the ref's TTL lapses between `put` and the worker's resolve
@@ -171,8 +213,9 @@ fn ttl_expiry_between_put_and_resolve_fails_typed() {
     assert!(fabric.resolve(&dref, vc.now()).is_ok(), "live before expiry");
     vc.advance_to(6.0);
     assert!(matches!(fabric.resolve(&dref, vc.now()), Err(Error::NotFound(_))));
-    let r = run_ref_task(fabric, Arc::new(vc), dref);
+    let (r, trace) = run_ref_task_traced(fabric, Arc::new(vc), dref);
     assert!(failure_message(&r).contains("not found"), "got: {}", failure_message(&r));
+    assert_fault_trace(&trace, "NotFound");
 }
 
 /// Fix pin (ROADMAP "store-owned clocks"): with owner-stamped expiry, a
@@ -262,10 +305,11 @@ fn crash_mid_spill_recovers_without_leaks() {
     assert!(matches!(recovered.resolve(&resident_ref, 0.0), Err(Error::NotFound(_))));
 
     // And the whole fault still fails a *task* cleanly, not just a
-    // direct resolve.
+    // direct resolve — with a trace closing on the typed NotFound.
     let fabric = Arc::new(DataFabric::new(recovered));
-    let r = run_ref_task(fabric, Arc::new(WallClock::new()), resident_ref);
+    let (r, trace) = run_ref_task_traced(fabric, Arc::new(WallClock::new()), resident_ref);
     assert!(failure_message(&r).contains("not found"), "got: {}", failure_message(&r));
+    assert_fault_trace(&trace, "NotFound");
 
     std::fs::remove_dir_all(&dir).unwrap();
 }
@@ -566,6 +610,21 @@ fn decommission_leaves_no_orphans_and_fails_over_inflight_refs() {
 
     // And the user-visible retrieval path works end to end.
     assert_eq!(svc.get_result(r.task).unwrap(), Some(input));
+
+    // The whole churn episode is visible in the task's flight trace:
+    // the decommission drain re-homed its result frame, and the
+    // post-retirement resolve failed over to the replica.
+    let trace = svc.trace(r.task).expect("service-submitted tasks are traced by default");
+    assert!(
+        trace.events.iter().any(|e| matches!(e.kind, TraceKind::FrameDrained { .. })),
+        "trace must show the decommission drain\n{}",
+        trace.render()
+    );
+    assert!(
+        trace.events.iter().any(|e| matches!(e.kind, TraceKind::ReplicaFailover { .. })),
+        "trace must show the replica failover\n{}",
+        trace.render()
+    );
 
     fh_e2.shutdown();
     h_e2.join();

@@ -1,0 +1,317 @@
+//! Integration pins for the observability plane: the cross-shard
+//! flight-recorder acceptance trace, the snapshot-only task
+//! conservation invariant, and the bounded-memory soak for the
+//! latency breakdown and the recorder rings.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use funcx::common::config::{EndpointConfig, ServiceConfig};
+use funcx::common::ids::TaskId;
+use funcx::common::task::Payload;
+use funcx::common::time::WallClock;
+use funcx::datastore::{DataFabric, Tier, TieredConfig, TieredStore};
+use funcx::endpoint::{link, EndpointBuilder};
+use funcx::metrics::{FlightRecorder, LatencyBreakdown, TraceKind, MAX_TRACKED_PER_STRIPE};
+use funcx::sdk::FuncXClient;
+use funcx::serialize::Value;
+use funcx::service::FuncXService;
+
+/// THE flight-recorder acceptance pin: a cross-shard A→B→C ref chain
+/// with an injected replica failover assembles into a SINGLE trace
+/// (B's) whose events span two service shards, two physical endpoints,
+/// and the data fabric — with the `ReplicaFailover` event present.
+///
+/// Topology: A runs on the owner endpoint and its oversized result is
+/// offloaded into the owner's store (where the background spiller
+/// pushes it to the disk tier — a key-only `Spilled` event). The owner
+/// is then decommissioned: the frame is re-homed to the survivor (a
+/// key-only `FrameDrained` event on the owner's shard) and the peer
+/// link dropped. B, submitted by ref to the survivor, resolves A's
+/// output through its own fabric's replica scan — the failover — and C
+/// closes the chain. Assembling B's timeline joins the anonymous
+/// spill/drain events back in by ref key, which is exactly what makes
+/// the one trace span both endpoints and both shards.
+#[test]
+fn cross_shard_chain_with_failover_assembles_one_trace() {
+    let clock = Arc::new(WallClock::new());
+    let svc = FuncXService::new(ServiceConfig {
+        max_payload_bytes: 4096, // force A's input by-ref
+        service_shards: 4,
+        replication_factor: 1,
+        ..Default::default()
+    })
+    .with_clock(clock.clone());
+    let (_u, tok) = svc.bootstrap_user("alice");
+    let f = svc.register_function(&tok, "echo", Payload::Echo, None).unwrap();
+
+    // Owner and survivor must hash to DIFFERENT shards so the chain's
+    // trace provably crosses the shard split (endpoint ids are random;
+    // redraw until they differ).
+    let map = svc.shard_map();
+    let e_owner = svc.register_endpoint(&tok, "owner", "").unwrap();
+    let mut e_survivor = svc.register_endpoint(&tok, "survivor", "").unwrap();
+    let mut draws = 0;
+    while map.shard_for_endpoint(e_survivor) == map.shard_for_endpoint(e_owner) {
+        draws += 1;
+        assert!(draws < 256, "could not draw a distinct shard in 256 tries");
+        e_survivor = svc.register_endpoint(&tok, &format!("survivor{draws}"), "").unwrap();
+    }
+
+    // Owner stack. The tiny memory watermark forces A's 256 KB result
+    // frame to spill to the disk tier — the background spiller records
+    // a key-only `Spilled` event on `store-<owner>`.
+    let store1 = Arc::new(
+        TieredStore::new(
+            e_owner,
+            TieredConfig { mem_high_watermark: 64 * 1024, default_ttl_s: 0.0, spool_dir: None },
+        )
+        .unwrap(),
+    );
+    let (fwd1, agent1) = link();
+    let h1 = EndpointBuilder::new()
+        .config(EndpointConfig {
+            min_nodes: 1,
+            workers_per_node: 2,
+            max_result_bytes: 4096, // force results by-ref
+            ..Default::default()
+        })
+        .fabric(Arc::new(DataFabric::new(store1.clone())))
+        .clock(clock.clone())
+        .recorder(svc.recorder.clone())
+        .heartbeat_period(0.05)
+        .start(agent1);
+    let fh1 = svc.connect_endpoint(e_owner, fwd1).unwrap();
+
+    // Survivor stack: B and C execute here.
+    let store2 = Arc::new(TieredStore::new(e_survivor, TieredConfig::default()).unwrap());
+    let fabric2 = Arc::new(DataFabric::new(store2.clone()));
+    let (fwd2, agent2) = link();
+    let h2 = EndpointBuilder::new()
+        .config(EndpointConfig {
+            min_nodes: 1,
+            workers_per_node: 2,
+            max_result_bytes: 4096,
+            ..Default::default()
+        })
+        .fabric(fabric2.clone())
+        .clock(clock)
+        .recorder(svc.recorder.clone())
+        .heartbeat_period(0.05)
+        .start(agent2);
+    let fh2 = svc.connect_endpoint(e_survivor, fwd2).unwrap();
+
+    // Replication (and the later drain) need both stores advertised
+    // before A's result lands.
+    let t0 = std::time::Instant::now();
+    while svc.registry.advertised_store(e_owner).is_none()
+        || svc.registry.advertised_store(e_survivor).is_none()
+    {
+        assert!(t0.elapsed() < Duration::from_secs(5), "advertisements must arrive");
+        std::thread::yield_now();
+    }
+
+    // A on the owner: 256 KB in, 256 KB out — the output offloaded
+    // into the owner's store and replicated to the survivor.
+    let payload = Value::Bytes(vec![0x42; 256 * 1024]);
+    let a = svc.submit(&tok, f, e_owner, &payload).unwrap();
+    let ref_a = svc.wait_result_ref(a.task, Duration::from_secs(10)).unwrap();
+    assert_eq!(ref_a.owner, e_owner);
+    assert_eq!(ref_a.replicas, vec![e_survivor], "A's ref must list the replica holder");
+    let key_a = ref_a.key.clone();
+
+    // Wait for the spiller: A's frame exceeds the watermark, so it must
+    // land on the disk tier (recording the key-only Spilled event).
+    assert!(store1.settle(Duration::from_secs(10)), "spill must complete");
+    assert_eq!(store1.tier_of(&key_a), Some(Tier::Disk));
+
+    // Inject the failure: kill the owner's agent, then decommission the
+    // endpoint — the drain re-homes A's frame to the survivor (key-only
+    // FrameDrained on the owner's shard) and severs the peer links.
+    fh1.shutdown();
+    h1.join();
+    let drained = svc.decommission_endpoint(e_owner).unwrap();
+    assert!(drained >= 1, "A's result frame must be re-homed");
+
+    // B on the survivor, by ref: its input resolve cannot reach the
+    // dead owner and must fail over to the replica copy. C closes the
+    // chain and round-trips the payload.
+    let b = svc.submit_by_ref(&tok, f, e_survivor, &ref_a).unwrap();
+    let ref_b = svc.wait_result_ref(b.task, Duration::from_secs(10)).unwrap();
+    assert_eq!(ref_b.owner, e_survivor);
+    let c = svc.submit_by_ref(&tok, f, e_survivor, &ref_b).unwrap();
+    let out = svc.wait_result(c.task, Duration::from_secs(10)).unwrap();
+    assert_eq!(out, payload, "the chain must survive the owner's death");
+
+    // THE pin: one assembled trace spanning shards, endpoints, fabric.
+    let trace = svc.trace(b.task).expect("B must have an assembled trace");
+    let rendered = trace.render();
+    let components = trace.components();
+
+    // ≥2 shard components: B's own enqueue on the survivor's shard,
+    // plus the FrameDrained join on the owner's shard.
+    let shards: Vec<&&str> = components.iter().filter(|c| c.starts_with("shard-")).collect();
+    assert!(shards.len() >= 2, "trace must span >= 2 shards, got {shards:?}\n{rendered}");
+
+    // ≥2 endpoints: the survivor's worker events plus the owner's
+    // store-side spill, joined by ref key.
+    let owner_s = e_owner.to_string();
+    let survivor_s = e_survivor.to_string();
+    assert!(
+        components.iter().any(|c| c.contains(&survivor_s)),
+        "trace must carry the survivor's events\n{rendered}"
+    );
+    assert!(
+        components.iter().any(|c| c.contains(&owner_s)),
+        "trace must carry the dead owner's events (spill join)\n{rendered}"
+    );
+
+    // The fabric's failover is visible and attributed to B, and the
+    // anonymous spill/drain events joined in by ref key.
+    let mut saw_failover = false;
+    let mut saw_drain = false;
+    let mut saw_spill = false;
+    let mut saw_success = false;
+    for e in &trace.events {
+        match &e.kind {
+            TraceKind::ReplicaFailover { key } => {
+                saw_failover |= *key == key_a && e.component.starts_with("fabric-");
+            }
+            TraceKind::FrameDrained { key } => saw_drain |= *key == key_a,
+            TraceKind::Spilled { key } => saw_spill |= *key == key_a,
+            TraceKind::WorkerFinished { success, .. } => saw_success |= *success,
+            _ => {}
+        }
+    }
+    assert!(saw_failover, "trace must contain the fabric's ReplicaFailover\n{rendered}");
+    assert!(saw_drain, "the decommission drain must join B's timeline by ref key\n{rendered}");
+    assert!(saw_spill, "the owner-side spill must join B's timeline by ref key\n{rendered}");
+    assert!(saw_success, "B's worker events must be present\n{rendered}");
+    match &trace.terminal().expect("B's timeline must close").kind {
+        TraceKind::ResultStored { state, .. } => assert_eq!(*state, "success"),
+        other => panic!("B's terminal must be ResultStored, got {other:?}\n{rendered}"),
+    }
+
+    fh2.shutdown();
+    h2.join();
+}
+
+/// The CI conservation invariant, proven from ONE metrics snapshot and
+/// nothing else: `tasks_submitted == completed + failed + in_flight`.
+/// When `FUNCX_METRICS_OUT` is set (the CI churn job), the snapshot's
+/// JSON exposition is written there for upload as an artifact.
+#[test]
+fn snapshot_alone_proves_task_conservation() {
+    let svc = Arc::new(FuncXService::new(ServiceConfig::default()));
+    let (_u, tok) = svc.bootstrap_user("alice");
+    let fc = FuncXClient::new(svc.clone(), tok);
+    let ep = fc.register_endpoint("live", "").unwrap();
+    let (fwd, agent_side) = link();
+    let agent = EndpointBuilder::new()
+        .config(EndpointConfig { min_nodes: 1, workers_per_node: 2, ..Default::default() })
+        .latency(svc.latency.clone())
+        .clock(svc.clock.clone())
+        .recorder(svc.recorder.clone())
+        .heartbeat_period(0.05)
+        .start(agent_side);
+    let fh = svc.connect_endpoint(ep, fwd).unwrap();
+    let f = fc.register_function("echo", Payload::Echo).unwrap();
+
+    // 20 completed...
+    let tasks: Vec<_> = (0..20i64).map(|i| fc.run(f, ep, &Value::Int(i)).unwrap()).collect();
+    for t in &tasks {
+        fc.get_result(*t, Duration::from_secs(15)).unwrap();
+    }
+    // ...plus 5 stranded in flight on an endpoint with no agent.
+    let dark = fc.register_endpoint("dark", "").unwrap();
+    for _ in 0..5 {
+        fc.run(f, dark, &Value::Null).unwrap();
+    }
+
+    let snap = svc.metrics_snapshot();
+    let submitted = snap.counter_total("funcx_tasks_submitted_total");
+    let completed = snap.counter_total("funcx_tasks_completed_total");
+    let failed = snap.counter_total("funcx_tasks_failed_total");
+    let in_flight = snap.gauge_total("funcx_tasks_in_flight");
+    assert_eq!(submitted, 25);
+    assert!(in_flight >= 0, "in-flight gauge cannot go negative");
+    assert_eq!(
+        submitted,
+        completed + failed + in_flight as u64,
+        "conservation: submitted ({submitted}) != completed ({completed}) + \
+         failed ({failed}) + in_flight ({in_flight})"
+    );
+
+    // Both exposition writers carry the invariant's inputs.
+    let json = snap.to_json();
+    let text = snap.to_text();
+    let names =
+        ["funcx_tasks_submitted_total", "funcx_tasks_completed_total", "funcx_tasks_in_flight"];
+    for name in names {
+        assert!(json.contains(name), "JSON exposition must list {name}");
+        assert!(text.contains(name), "text exposition must list {name}");
+    }
+    if let Ok(path) = std::env::var("FUNCX_METRICS_OUT") {
+        std::fs::write(&path, &json).expect("write metrics snapshot artifact");
+    }
+
+    // The SDK surfaces the same snapshot and the per-task trace.
+    let client_snap = fc.metrics();
+    assert_eq!(client_snap.counter_total("funcx_tasks_submitted_total"), submitted);
+    let t = fc.trace(tasks[0]).expect("completed task must have a trace");
+    assert!(t.terminal().is_some(), "completed task's timeline must close");
+
+    fh.shutdown();
+    agent.join();
+}
+
+/// 100k-task soak: the latency breakdown retains O(in-flight) records
+/// (never the all-time task count) and the recorder's rings stay
+/// bounded at capacity × components while counting their drops.
+#[test]
+fn latency_breakdown_and_recorder_are_bounded_under_soak() {
+    let lb = LatencyBreakdown::new();
+    let mut completed = 0u64;
+    for i in 0..100_000u64 {
+        let id = TaskId::new();
+        let t = i as f64 * 1e-3;
+        lb.on_submit(id, t);
+        lb.on_queued(id, t + 1e-4);
+        lb.on_forwarded(id, t + 2e-4);
+        lb.on_started(id, t + 3e-4);
+        lb.on_finished(id, t + 4e-4);
+        // Only 1 in 10 completes: 90k stampings stay "in flight", far
+        // beyond the per-stripe cap — eviction must bound the map.
+        if i % 10 == 0 {
+            assert!(lb.on_result_stored(id, t + 5e-4).is_some());
+            completed += 1;
+        }
+    }
+    assert_eq!(completed, 10_000);
+    // 16 stripes × MAX_TRACKED_PER_STRIPE is the hard ceiling; the
+    // all-time count (90k live stampings) must NOT be retained.
+    assert!(
+        lb.in_flight() <= 16 * MAX_TRACKED_PER_STRIPE,
+        "latency map must stay bounded, holds {}",
+        lb.in_flight()
+    );
+    // The folded histograms still summarize every completed task.
+    let s = lb.stage_summaries();
+    assert_eq!(s.completed, 10_000);
+    assert!(s.total.p99 > 0.0 && s.total.count == 10_000);
+
+    // Recorder rings: 100k events over 4 components at capacity 512.
+    let rec = FlightRecorder::with_capacity(512);
+    for i in 0..100_000u32 {
+        let id = TaskId::new();
+        rec.record(
+            &format!("shard-{}", i % 4),
+            None,
+            Some(id),
+            f64::from(i),
+            TraceKind::Redispatched { attempt: i },
+        );
+    }
+    assert!(rec.resident() <= 4 * 512, "rings must stay bounded, hold {}", rec.resident());
+    assert_eq!(rec.dropped(), 100_000 - rec.resident() as u64, "drops must be accounted");
+}

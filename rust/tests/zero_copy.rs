@@ -160,6 +160,7 @@ fn dispatch_forwarder_link_manager_is_zero_copy() {
         max_result_bytes: 10 * 1024 * 1024,
         clock: Arc::new(WallClock::new()),
         latency: Arc::new(LatencyBreakdown::new()),
+        recorder: funcx::metrics::FlightRecorder::disabled(),
         start_model: TABLE3_MODELS.lookup(SystemProfile::Local, ContainerTech::None),
         cold_start_scale: 0.001,
     };
