@@ -1,12 +1,70 @@
 //! E8 / Table 3 — cold container instantiation across (system, tech)
-//! pairs, plus live warm-pool micro-benches.
+//! pairs, live warm-pool micro-benches, and the process-executor
+//! measured-cold-start section: real forked worker children feed their
+//! spawn cost into the routing comparison, and warming-aware routing
+//! must beat random on that measured cost (asserted in-bench).
 
 mod harness;
 
-use funcx::common::ids::ContainerId;
+use funcx::common::ids::{ContainerId, ManagerId};
 use funcx::common::rng::Rng;
-use funcx::containers::WarmPool;
+use funcx::containers::{WarmPool, TABLE3_MODELS};
 use funcx::experiments as exp;
+use funcx::routing::{ManagerView, Randomized, Scheduler, WarmingAware};
+use funcx::runtime::{ProcessExecutor, ProcessExecutorConfig, WorkerExecutor};
+
+/// Cold-start outcome of one routed 3000-task workload.
+struct RunStats {
+    cold_starts: u64,
+    cold_seconds: f64,
+}
+
+/// Route a fixed 3000-task, 10-type workload across 10 managers x 10
+/// slots, charging each cold start the *measured* child spawn cost and
+/// feeding it back into the pools' EWMAs (what the live agent does).
+/// Tasks are short, so execution overlaps are ignored and the policies
+/// differ only in where cold starts land.
+fn run_routing(mut sched: Box<dyn Scheduler>, start_cost: f64) -> RunStats {
+    const MANAGERS: usize = 10;
+    const SLOTS: usize = 10;
+    const TYPES: u128 = 10;
+    const TASKS: usize = 3000;
+    let ids: Vec<ManagerId> = (1..=MANAGERS as u128).map(ManagerId::from_bits).collect();
+    let mut pools: Vec<WarmPool> = (0..MANAGERS).map(|_| WarmPool::new(SLOTS, 600.0)).collect();
+    let types: Vec<ContainerId> = (1..=TYPES).map(ContainerId::from_bits).collect();
+    let mut task_rng = Rng::new(7); // same task sequence for every policy
+    let mut route_rng = Rng::new(11);
+    let mut stats = RunStats { cold_starts: 0, cold_seconds: 0.0 };
+    for i in 0..TASKS {
+        let now = i as f64 * 1e-3;
+        let ct = types[task_rng.below(types.len())];
+        let views: Vec<ManagerView> = ids
+            .iter()
+            .zip(&pools)
+            .map(|(id, p)| ManagerView {
+                id: *id,
+                deployed: p.deployed_census(),
+                warm_idle: p.warm_census(),
+                available_slots: p.available_slots(),
+                total_slots: p.capacity(),
+                queued: 0,
+                endpoint: None,
+                cold_start_est_s: p.start_cost_estimate().unwrap_or(start_cost),
+            })
+            .collect();
+        let routed = sched.route(Some(ct), &views, &mut route_rng);
+        let mid = routed.expect("all managers have free slots");
+        let idx = ids.iter().position(|x| *x == mid).unwrap();
+        let (slot, cold) = pools[idx].acquire_with_origin(ct, now).expect("slots free");
+        if cold {
+            stats.cold_starts += 1;
+            stats.cold_seconds += start_cost;
+            pools[idx].note_start_cost(start_cost);
+        }
+        pools[idx].release(slot, now + 1e-4).unwrap();
+    }
+    stats
+}
 
 fn main() {
     harness::section("Table 3 — cold instantiation samples (10k per model)");
@@ -19,6 +77,20 @@ fn main() {
     }
     println!("(paper: 9.83/14.06/10.40, 7.25/31.26/8.49, 1.74/1.88/1.79, 1.19/1.26/1.22)");
 
+    harness::section("Table 3 — statistical pin (sample mean within 2% of the row)");
+    for (i, model) in TABLE3_MODELS.all().into_iter().enumerate() {
+        let mut rng = Rng::new(0xC0FFEE ^ i as u64);
+        let n = 10_000;
+        let sampled: f64 = (0..n).map(|_| model.sample(&mut rng)).sum::<f64>() / n as f64;
+        let target = model.mean_s;
+        let rel = ((sampled - target) / target).abs();
+        let label = format!("{}/{}", model.system.name(), model.tech.name());
+        println!("  {label:<16} sampled {sampled:>6.2} s  target {target:>6.2} s  rel {rel:.4}");
+        harness::record(&format!("{label} rel mean error"), rel, "ratio");
+        assert!(rel < 0.02, "{label}: sampled mean {sampled} vs {target}, rel {rel}");
+    }
+    println!("  all four models within the 2% statistical pin");
+
     harness::section("warm-pool operations (hot path of every dispatch)");
     let types: Vec<ContainerId> = (1..=16).map(ContainerId::from_bits).collect();
     harness::bench("1M acquire/release on a 64-slot pool", 3, || {
@@ -28,7 +100,7 @@ fn main() {
         for i in 0..1_000_000u64 {
             if held.len() >= 64 || (i % 3 == 0 && !held.is_empty()) {
                 let slot = held.swap_remove(rng.below(held.len()));
-                pool.release(slot, i as f64 * 1e-6);
+                pool.release(slot, i as f64 * 1e-6).unwrap();
             } else {
                 let c = types[rng.below(types.len())];
                 if let Some(s) = pool.acquire(c, i as f64 * 1e-6) {
@@ -38,4 +110,41 @@ fn main() {
         }
         std::hint::black_box(pool.cold_starts());
     });
+
+    harness::section("process executor — measured cold starts (real forks)");
+    let ex = ProcessExecutor::new(ProcessExecutorConfig::new(env!("CARGO_BIN_EXE_funcx")));
+    let mut costs = Vec::new();
+    for slot in 0..8 {
+        let measured = ex.start_slot(1, slot).unwrap();
+        costs.push(measured.expect("process backend measures starts"));
+    }
+    for slot in 0..8 {
+        ex.stop_slot(1, slot);
+    }
+    let mean_start = costs.iter().sum::<f64>() / costs.len() as f64;
+    let min_start = costs.iter().copied().fold(f64::INFINITY, f64::min);
+    let mean_ms = mean_start * 1e3;
+    let min_ms = min_start * 1e3;
+    println!("  8 forks: spawn + handshake mean {mean_ms:.2} ms   min {min_ms:.2} ms");
+    harness::record("measured child start (mean)", mean_start, "s");
+    harness::record("measured child start (min)", min_start, "s");
+
+    harness::section("warming-aware vs random routing on measured cold starts");
+    let wa = run_routing(Box::new(WarmingAware { prefetch: 10 }), mean_start);
+    let rnd = run_routing(Box::new(Randomized { prefetch: 10 }), mean_start);
+    let wa_n = wa.cold_starts;
+    let rnd_n = rnd.cold_starts;
+    let wa_s = wa.cold_seconds;
+    let rnd_s = rnd.cold_seconds;
+    println!("  warming-aware: {wa_n:>4} cold starts = {wa_s:>7.2} s of measured start cost");
+    println!("  randomized:    {rnd_n:>4} cold starts = {rnd_s:>7.2} s of measured start cost");
+    harness::record("warming-aware cold starts", wa_n as f64, "count");
+    harness::record("randomized cold starts", rnd_n as f64, "count");
+    harness::record("warming-aware cold seconds", wa_s, "s");
+    harness::record("randomized cold seconds", rnd_s, "s");
+    assert!(wa_s < rnd_s, "warming-aware must beat random: {wa_s} s vs {rnd_s} s");
+    let saved = 100.0 * (rnd_s - wa_s) / rnd_s;
+    println!("  warming-aware saves {saved:.1}% of the measured cold-start cost");
+
+    harness::write_json("BENCH_container.json");
 }

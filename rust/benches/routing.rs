@@ -88,6 +88,7 @@ fn main() {
                         total_slots: 10,
                         queued: 0,
                         endpoint: None,
+                        cold_start_est_s: 0.0,
                     }
                 })
                 .collect()

@@ -106,6 +106,27 @@ pub struct EndpointConfig {
     /// service-side fabric ladder. Endpoints without a fabric attached
     /// always return results inline.
     pub max_result_bytes: usize,
+    /// Per-task wall-clock budget enforced by the process executor
+    /// backend; an overrunning task gets its worker child killed and
+    /// fails with [`crate::common::error::Error::Timeout`].
+    pub task_timeout_s: f64,
+    /// Predictive warm-pool sizing (see `docs/containers.md`): the
+    /// agent keeps a per-container-type arrival-rate EWMA and prewarms
+    /// slots ahead of the predicted load / reaps idle slots above the
+    /// predicted floor. Disabled, pools only warm on demand and reap on
+    /// the idle timeout.
+    pub predictive_sizing: bool,
+    /// Smoothing factor of the per-type arrival-rate EWMA (0–1; higher
+    /// chases bursts faster).
+    pub arrival_ewma_alpha: f64,
+    /// Safety multiplier on the predicted warm floor
+    /// (`ceil(rate × cold_start × safety)` slots per type): headroom so
+    /// a small rate underestimate doesn't force a cold start.
+    pub warm_floor_safety: f64,
+    /// Idle grace before a slot above the predicted floor may be
+    /// reaped — much shorter than `container_idle_timeout_s`, which
+    /// stays the backstop for non-predictive reaping.
+    pub predictive_reap_grace_s: f64,
 }
 
 impl Default for EndpointConfig {
@@ -122,6 +143,11 @@ impl Default for EndpointConfig {
             internal_batching: true,
             result_batch: 32,
             max_result_bytes: 10 * 1024 * 1024,
+            task_timeout_s: 300.0,
+            predictive_sizing: true,
+            arrival_ewma_alpha: 0.3,
+            warm_floor_safety: 1.5,
+            predictive_reap_grace_s: 5.0,
         }
     }
 }

@@ -41,6 +41,12 @@ pub enum Error {
     Runtime(String),
     /// Operation timed out.
     Timeout(String),
+    /// A worker child process exited with a non-zero status while a
+    /// task was in flight (process executor backend).
+    WorkerExited { code: i32 },
+    /// A worker child process was killed by a signal (crash/OOM/abort)
+    /// while a task was in flight.
+    WorkerSignaled { signal: i32 },
     /// I/O error wrapper.
     Io(std::io::Error),
 }
@@ -66,6 +72,8 @@ impl Error {
             Error::Corrupt(_) => "Corrupt",
             Error::Runtime(_) => "Runtime",
             Error::Timeout(_) => "Timeout",
+            Error::WorkerExited { .. } => "WorkerExited",
+            Error::WorkerSignaled { .. } => "WorkerSignaled",
             Error::Io(_) => "Io",
         }
     }
@@ -91,6 +99,12 @@ impl fmt::Display for Error {
             Error::Corrupt(m) => write!(f, "corrupt: {m}"),
             Error::Runtime(m) => write!(f, "runtime: {m}"),
             Error::Timeout(m) => write!(f, "timeout: {m}"),
+            Error::WorkerExited { code } => {
+                write!(f, "worker process exited with status {code}")
+            }
+            Error::WorkerSignaled { signal } => {
+                write!(f, "worker process killed by signal {signal}")
+            }
             Error::Io(e) => write!(f, "io: {e}"),
         }
     }
@@ -128,6 +142,8 @@ mod tests {
             Error::Corrupt("x".into()),
             Error::Runtime("x".into()),
             Error::Timeout("x".into()),
+            Error::WorkerExited { code: 3 },
+            Error::WorkerSignaled { signal: 9 },
             Error::Io(std::io::Error::new(std::io::ErrorKind::Other, "x")),
         ];
         for c in cases {

@@ -80,6 +80,13 @@ pub enum Payload {
     /// Simulated opaque function body with a fixed duration (used by the
     /// discrete-event simulator, where nothing actually executes).
     Simulated { duration_s: f64 },
+    /// Fault-injection body: the executing worker process exits with
+    /// the given status code mid-task (crash testing the process
+    /// executor's typed exit-status errors).
+    Exit(i32),
+    /// Fault-injection body: the executing worker process aborts
+    /// (SIGABRT), exercising the killed-by-signal error path.
+    Abort,
 }
 
 impl Payload {
@@ -90,6 +97,7 @@ impl Payload {
             Payload::Sleep(s) | Payload::Stress(s) => *s,
             Payload::Artifact(_) => 0.005,
             Payload::Simulated { duration_s } => *duration_s,
+            Payload::Exit(_) | Payload::Abort => 0.0,
         }
     }
 
@@ -98,9 +106,12 @@ impl Payload {
     /// (no-op/sleep/stress storms are the §7.2 throughput workloads).
     pub fn reads_input(&self) -> bool {
         match self {
-            Payload::Noop | Payload::Sleep(_) | Payload::Stress(_) | Payload::Simulated { .. } => {
-                false
-            }
+            Payload::Noop
+            | Payload::Sleep(_)
+            | Payload::Stress(_)
+            | Payload::Simulated { .. }
+            | Payload::Exit(_)
+            | Payload::Abort => false,
             Payload::Echo | Payload::Artifact(_) | Payload::DataOp => true,
         }
     }
@@ -126,6 +137,10 @@ impl Wire for Payload {
                 ("k", Value::Str("sim".into())),
                 ("s", Value::Float(*duration_s)),
             ]),
+            Payload::Exit(code) => {
+                Value::map([("k", Value::Str("exit".into())), ("c", Value::Int(*code as i64))])
+            }
+            Payload::Abort => Value::map([("k", Value::Str("abort".into()))]),
         }
     }
 
@@ -152,6 +167,13 @@ impl Wire for Payload {
             ),
             "dataop" => Payload::DataOp,
             "sim" => Payload::Simulated { duration_s: secs()? },
+            "exit" => Payload::Exit(
+                v.get("c")
+                    .and_then(Value::as_int)
+                    .ok_or_else(|| Error::Serialization("payload: missing code".into()))?
+                    as i32,
+            ),
+            "abort" => Payload::Abort,
             k => return Err(Error::Serialization(format!("payload: bad kind {k}"))),
         })
     }
@@ -470,6 +492,8 @@ mod tests {
             Payload::Artifact("surrogate".into()),
             Payload::DataOp,
             Payload::Simulated { duration_s: 0.25 },
+            Payload::Exit(3),
+            Payload::Abort,
         ] {
             assert_eq!(Payload::from_value(&p.to_value()).unwrap(), p);
         }

@@ -37,7 +37,7 @@ mod proptests {
                     1 => {
                         // release something busy if any
                         if let Some(slot) = pool.busy_slots().first().copied() {
-                            pool.release(slot, now);
+                            pool.release(slot, now).unwrap();
                         }
                     }
                     _ => {
@@ -58,7 +58,7 @@ mod proptests {
             let c = ContainerId::from_bits(1);
             let now = g.f64(0.0, 100.0);
             let slot = pool.acquire(c, now).expect("capacity available");
-            pool.release(slot, now); // now warm+idle
+            pool.release(slot, now).unwrap(); // now warm+idle
             let warm_before = pool.warm_idle_count(c);
             assert_eq!(warm_before, 1);
             let (slot2, cold) = pool.acquire_with_origin(c, now + 1.0).unwrap();

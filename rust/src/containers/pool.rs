@@ -9,8 +9,14 @@
 
 use std::collections::HashMap;
 
+use crate::common::error::{Error, Result};
 use crate::common::ids::ContainerId;
 use crate::common::time::Time;
+
+/// EWMA smoothing for the measured start-cost estimate fed back by the
+/// executor backend (§6.1 economics: predictive sizing works off what
+/// starts *actually* cost here, not the Table-3 prior).
+const START_COST_ALPHA: f64 = 0.3;
 
 /// Slot index within a manager.
 pub type ContainerSlot = usize;
@@ -48,6 +54,15 @@ pub struct WarmPool {
     cold_starts: u64,
     warm_hits: u64,
     evictions: u64,
+    /// Releases of non-busy/out-of-range slots refused (would have
+    /// minted typeless "warm" zombies; see [`WarmPool::release`]).
+    bad_releases: u64,
+    /// Slots warmed ahead of demand ([`WarmPool::prewarm`] /
+    /// [`WarmPool::warm_slot`]).
+    prewarmed: u64,
+    /// EWMA of start costs reported by the executor backend (seconds);
+    /// `None` until the first cold start is observed.
+    start_cost_ewma: Option<f64>,
 }
 
 impl WarmPool {
@@ -58,6 +73,9 @@ impl WarmPool {
             cold_starts: 0,
             warm_hits: 0,
             evictions: 0,
+            bad_releases: 0,
+            prewarmed: 0,
+            start_cost_ewma: None,
         }
     }
 
@@ -181,7 +199,9 @@ impl WarmPool {
                 _ => None,
             })
             // Unprotected types first, then least-recently-used.
-            .min_by(|a, b| a.2.cmp(&b.2).then(a.1.partial_cmp(&b.1).unwrap()))
+            // total_cmp: a NaN idle timestamp must not panic the worker
+            // holding the pool lock (it orders last instead).
+            .min_by(|a, b| a.2.cmp(&b.2).then(a.1.total_cmp(&b.1)))
             .map(|(i, since, _)| (i, since));
         if let Some((i, _)) = lru {
             self.evictions += 1;
@@ -201,41 +221,157 @@ impl WarmPool {
     /// Pre-warm every slot with containers of the given types,
     /// round-robin (the paper pre-warms all containers for the scaling
     /// runs; §7.2 "We pre-warmed all containers in these experiments").
+    /// Round-robin is over the *filled count*, not the absolute slot
+    /// index: indexing by slot position skewed the type mix whenever
+    /// the pool was partially occupied (busy slots skipped a type's
+    /// turn without consuming it).
     pub fn prewarm(&mut self, types: &[ContainerId], now: Time) {
         if types.is_empty() {
             return;
         }
-        for (i, s) in self.slots.iter_mut().enumerate() {
+        let mut filled = 0usize;
+        for s in self.slots.iter_mut() {
             if s.state == SlotState::Empty {
                 *s = Slot {
-                    ctype: Some(types[i % types.len()]),
+                    ctype: Some(types[filled % types.len()]),
                     state: SlotState::WarmIdle { since: now },
                 };
+                filled += 1;
             }
+        }
+        self.prewarmed += filled as u64;
+    }
+
+    /// Warm one empty slot with `ctype` ahead of demand (predictive
+    /// prewarm). Returns the slot, or `None` when no slot is empty.
+    pub fn warm_slot(&mut self, ctype: ContainerId, now: Time) -> Option<ContainerSlot> {
+        let i = self.slots.iter().position(|s| s.state == SlotState::Empty)?;
+        self.slots[i] = Slot { ctype: Some(ctype), state: SlotState::WarmIdle { since: now } };
+        self.prewarmed += 1;
+        Some(i)
+    }
+
+    /// Empty a slot without counting an eviction — the undo for a
+    /// [`WarmPool::warm_slot`] / cold acquire whose backend start
+    /// failed (the slot never actually hosted a container).
+    pub fn vacate(&mut self, slot: ContainerSlot) {
+        if let Some(s) = self.slots.get_mut(slot) {
+            *s = Slot { ctype: None, state: SlotState::Empty };
         }
     }
 
     /// Mark a slot's task finished; the container stays warm (§6.1).
-    pub fn release(&mut self, slot: ContainerSlot, now: Time) {
-        let s = &mut self.slots[slot];
-        debug_assert_eq!(s.state, SlotState::Busy, "release of non-busy slot");
-        s.state = SlotState::WarmIdle { since: now };
+    ///
+    /// Releasing a slot that is not busy is a hard, typed error — the
+    /// seed's `debug_assert_eq!` compiled out in release builds, so a
+    /// double release (or a stale slot index) silently overwrote an
+    /// `Empty` slot with `WarmIdle`, minting a typeless "warm" zombie
+    /// that matched no acquire and pinned a capacity slot forever. The
+    /// state is left untouched and the refusal counted.
+    pub fn release(&mut self, slot: ContainerSlot, now: Time) -> Result<()> {
+        match self.slots.get_mut(slot) {
+            Some(s) if s.state == SlotState::Busy => {
+                s.state = SlotState::WarmIdle { since: now };
+                Ok(())
+            }
+            Some(s) => {
+                self.bad_releases += 1;
+                Err(Error::InvalidArgument(format!(
+                    "release of non-busy slot {slot} (state {:?})",
+                    s.state
+                )))
+            }
+            None => {
+                self.bad_releases += 1;
+                Err(Error::InvalidArgument(format!(
+                    "release of out-of-range slot {slot} (capacity {})",
+                    self.slots.len()
+                )))
+            }
+        }
     }
 
     /// Tear down warm containers idle longer than the timeout (§6.1).
     /// Returns how many were reaped.
     pub fn reap_idle(&mut self, now: Time) -> usize {
+        self.reap_idle_slots(now).len()
+    }
+
+    /// Like [`WarmPool::reap_idle`], but reports which slots (and
+    /// container types) were torn down so an executor backend can stop
+    /// the processes behind them.
+    pub fn reap_idle_slots(&mut self, now: Time) -> Vec<(ContainerSlot, ContainerId)> {
         let timeout = self.idle_timeout_s;
-        let mut reaped = 0;
-        for s in &mut self.slots {
-            if let SlotState::WarmIdle { since } = s.state {
+        let mut reaped = Vec::new();
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            if let (Some(c), SlotState::WarmIdle { since }) = (s.ctype, s.state) {
                 if now - since >= timeout {
                     *s = Slot { ctype: None, state: SlotState::Empty };
-                    reaped += 1;
+                    reaped.push((i, c));
                 }
             }
         }
         reaped
+    }
+
+    /// Predictive reap (the scale-in half of EWMA pool sizing): tear
+    /// down warm-idle containers *in excess of the per-type floor*,
+    /// oldest first, keeping anything idle for less than `grace_s`
+    /// (protects just-released containers from flapping). Types absent
+    /// from `floors` have floor 0. Returns the reaped slots so the
+    /// executor backend can stop their processes.
+    pub fn reap_excess(
+        &mut self,
+        floors: &HashMap<ContainerId, usize>,
+        grace_s: f64,
+        now: Time,
+    ) -> Vec<(ContainerSlot, ContainerId)> {
+        // Oldest-first per type: collect idle slots, sort by since.
+        let mut idle: Vec<(ContainerSlot, ContainerId, Time)> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| match (s.ctype, s.state) {
+                (Some(c), SlotState::WarmIdle { since }) if now - since >= grace_s => {
+                    Some((i, c, since))
+                }
+                _ => None,
+            })
+            .collect();
+        idle.sort_by(|a, b| a.2.total_cmp(&b.2));
+        let mut keep: HashMap<ContainerId, usize> = HashMap::new();
+        for s in &self.slots {
+            if let (Some(c), SlotState::WarmIdle { .. }) = (s.ctype, s.state) {
+                *keep.entry(c).or_insert(0) += 1;
+            }
+        }
+        let mut reaped = Vec::new();
+        for (i, c, _) in idle {
+            let floor = floors.get(&c).copied().unwrap_or(0);
+            let have = keep.get(&c).copied().unwrap_or(0);
+            if have > floor {
+                self.slots[i] = Slot { ctype: None, state: SlotState::Empty };
+                *keep.get_mut(&c).unwrap() -= 1;
+                reaped.push((i, c));
+            }
+        }
+        reaped
+    }
+
+    /// Fold a measured (or charged) start cost into the pool's EWMA.
+    pub fn note_start_cost(&mut self, seconds: f64) {
+        if !seconds.is_finite() || seconds < 0.0 {
+            return;
+        }
+        self.start_cost_ewma = Some(match self.start_cost_ewma {
+            Some(prev) => prev + START_COST_ALPHA * (seconds - prev),
+            None => seconds,
+        });
+    }
+
+    /// Smoothed observed start cost, once at least one start was noted.
+    pub fn start_cost_estimate(&self) -> Option<f64> {
+        self.start_cost_ewma
     }
 
     /// Fair spawn plan (§6.2 manager side): given the type histogram of
@@ -263,16 +399,26 @@ impl WarmPool {
         let assigned: usize = plan.iter().map(|(_, n, _)| n).sum();
         let mut leftover = capacity.saturating_sub(assigned);
         // Hand leftovers to the largest remainders (stable by id for
-        // determinism).
-        plan.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap().then(a.0 .0.cmp(&b.0 .0)));
-        for p in plan.iter_mut() {
-            if leftover == 0 {
-                break;
+        // determinism; total_cmp so a NaN remainder cannot panic).
+        // Loop until nothing is eligible: a single pass hands each type
+        // at most +1, stranding capacity whenever a high-remainder type
+        // is demand-capped while another type still has headroom.
+        plan.sort_by(|a, b| b.2.total_cmp(&a.2).then(a.0 .0.cmp(&b.0 .0)));
+        while leftover > 0 {
+            let mut gave = false;
+            for p in plan.iter_mut() {
+                if leftover == 0 {
+                    break;
+                }
+                // Never plan more containers of a type than it has demand.
+                if p.1 < *demand.get(&p.0).unwrap_or(&0) {
+                    p.1 += 1;
+                    leftover -= 1;
+                    gave = true;
+                }
             }
-            // Never plan more containers of a type than it has demand.
-            if p.1 < *demand.get(&p.0).unwrap_or(&0) {
-                p.1 += 1;
-                leftover -= 1;
+            if !gave {
+                break; // every type demand-capped; remaining capacity unusable
             }
         }
         plan.into_iter()
@@ -292,6 +438,14 @@ impl WarmPool {
     pub fn evictions(&self) -> u64 {
         self.evictions
     }
+
+    pub fn bad_releases(&self) -> u64 {
+        self.bad_releases
+    }
+
+    pub fn prewarmed(&self) -> u64 {
+        self.prewarmed
+    }
 }
 
 #[cfg(test)]
@@ -307,7 +461,7 @@ mod tests {
         let mut p = WarmPool::new(2, 600.0);
         let (s, cold) = p.acquire_with_origin(ct(1), 0.0).unwrap();
         assert!(cold);
-        p.release(s, 1.0);
+        p.release(s, 1.0).unwrap();
         let (s2, cold2) = p.acquire_with_origin(ct(1), 2.0).unwrap();
         assert!(!cold2);
         assert_eq!(s, s2);
@@ -320,8 +474,8 @@ mod tests {
         let mut p = WarmPool::new(2, 600.0);
         let a = p.acquire(ct(1), 0.0).unwrap();
         let b = p.acquire(ct(1), 0.0).unwrap();
-        p.release(a, 1.0); // idle since 1.0 (LRU)
-        p.release(b, 2.0); // idle since 2.0
+        p.release(a, 1.0).unwrap(); // idle since 1.0 (LRU)
+        p.release(b, 2.0).unwrap(); // idle since 2.0
         // Different type: must evict LRU (slot a).
         let (s, cold) = p.acquire_with_origin(ct(2), 3.0).unwrap();
         assert!(cold);
@@ -344,8 +498,8 @@ mod tests {
         let mut p = WarmPool::new(3, 10.0);
         let a = p.acquire(ct(1), 0.0).unwrap();
         let b = p.acquire(ct(2), 0.0).unwrap();
-        p.release(a, 0.0);
-        p.release(b, 5.0);
+        p.release(a, 0.0).unwrap();
+        p.release(b, 5.0).unwrap();
         assert_eq!(p.reap_idle(9.9), 0);
         assert_eq!(p.reap_idle(10.0), 1); // a idle 10s
         assert_eq!(p.reap_idle(15.0), 1); // b idle 10s
@@ -357,7 +511,7 @@ mod tests {
         let mut p = WarmPool::new(4, 600.0);
         let a = p.acquire(ct(1), 0.0).unwrap();
         let _b = p.acquire(ct(2), 0.0).unwrap();
-        p.release(a, 1.0);
+        p.release(a, 1.0).unwrap();
         let census = p.warm_census();
         assert_eq!(census.get(&ct(1)), Some(&1));
         assert_eq!(census.get(&ct(2)), None); // busy, not idle
@@ -398,5 +552,144 @@ mod tests {
     #[test]
     fn fair_spawn_empty_demand() {
         assert!(WarmPool::fair_spawn_plan(10, &HashMap::new()).is_empty());
+    }
+
+    /// The leftover loop invariant: the plan always totals
+    /// `min(capacity, total demand)` — no capacity stranded while some
+    /// type still has unmet demand — and never over-plans any type.
+    #[test]
+    fn fair_spawn_never_strands_capacity() {
+        let mut g = crate::testing::Gen::new(11);
+        for _ in 0..500 {
+            let capacity = g.usize(0, 40);
+            let ntypes = g.usize(1, 6);
+            let mut demand = HashMap::new();
+            for i in 0..ntypes {
+                demand.insert(ct(i as u128 + 1), g.usize(0, 30));
+            }
+            let total: usize = demand.values().sum();
+            let plan = WarmPool::fair_spawn_plan(capacity, &demand);
+            let planned: usize = plan.values().sum();
+            assert_eq!(
+                planned,
+                capacity.min(total),
+                "stranded capacity: cap={capacity} demand={demand:?} plan={plan:?}"
+            );
+            for (c, n) in &plan {
+                assert!(n <= demand.get(c).unwrap(), "over-planned {c:?}");
+            }
+        }
+    }
+
+    /// Release of a non-busy or out-of-range slot is a typed error that
+    /// leaves the pool untouched (no typeless "warm" zombie) and counts
+    /// the refusal; a legal release still works afterwards.
+    #[test]
+    fn bad_release_is_typed_and_harmless() {
+        let mut p = WarmPool::new(2, 600.0);
+        // Empty slot: refused.
+        assert!(p.release(0, 1.0).is_err());
+        assert_eq!(p.total(), 0, "refused release must not mint a warm slot");
+        // Out of range: refused, no panic.
+        assert!(p.release(7, 1.0).is_err());
+        // Double release: first ok, second refused.
+        let s = p.acquire(ct(1), 0.0).unwrap();
+        p.release(s, 1.0).unwrap();
+        let err = p.release(s, 2.0).unwrap_err();
+        assert_eq!(err.kind(), "InvalidArgument");
+        assert_eq!(p.bad_releases(), 3);
+        assert_eq!(p.warm_idle_count(ct(1)), 1, "state unchanged by bad releases");
+        // The pool still works.
+        let (s2, cold) = p.acquire_with_origin(ct(1), 3.0).unwrap();
+        assert!(!cold);
+        p.release(s2, 4.0).unwrap();
+    }
+
+    /// Prewarm round-robins over the *filled count*: with busy slots in
+    /// the way, the absolute-index version skewed the type mix (e.g.
+    /// busy slots 0 and 2 left types [a, b] warming as [b, b]).
+    #[test]
+    fn prewarm_balances_types_in_partially_busy_pool() {
+        let mut p = WarmPool::new(4, 600.0);
+        // Occupy slots 0 and 2, leaving 1 and 3 empty (acquire fills
+        // lowest empty first; vacate empties slot 1 again).
+        let _s0 = p.acquire(ct(9), 0.0).unwrap();
+        let s1 = p.acquire(ct(9), 0.0).unwrap();
+        let _s2 = p.acquire(ct(9), 0.0).unwrap();
+        p.release(s1, 0.5).unwrap();
+        p.vacate(s1);
+        // Empty slots are 1 and 3 — both odd. The absolute-index
+        // round-robin warmed types[1] twice ([b, b]); filled-count
+        // round-robin warms [a, b].
+        p.prewarm(&[ct(1), ct(2)], 1.0);
+        assert_eq!(p.warm_idle_count(ct(1)), 1, "first empty slot warms type 1");
+        assert_eq!(p.warm_idle_count(ct(2)), 1, "second empty slot warms type 2");
+        assert!(p.prewarmed() >= 2);
+    }
+
+    #[test]
+    fn warm_slot_and_vacate() {
+        let mut p = WarmPool::new(2, 600.0);
+        let s = p.warm_slot(ct(1), 0.0).unwrap();
+        assert_eq!(p.warm_idle_count(ct(1)), 1);
+        // A warm acquire hits the prewarmed slot.
+        let (s2, cold) = p.acquire_with_origin(ct(1), 1.0).unwrap();
+        assert!(!cold);
+        assert_eq!(s, s2);
+        p.release(s2, 2.0).unwrap();
+        p.vacate(s2);
+        assert_eq!(p.total(), 0);
+        // Full pool: no empty slot to warm.
+        let _a = p.acquire(ct(3), 3.0).unwrap();
+        let _b = p.acquire(ct(3), 3.0).unwrap();
+        assert!(p.warm_slot(ct(1), 3.0).is_none());
+    }
+
+    /// Predictive reap: warm-idle beyond the per-type floor is torn
+    /// down oldest-first; the floor and anything inside the grace
+    /// window survive.
+    #[test]
+    fn reap_excess_respects_floors_and_grace() {
+        let mut p = WarmPool::new(6, 600.0);
+        // Four type-1 containers idle since 0, 2, 3, 4 (acquire all
+        // first so each lands in its own slot).
+        let slots: Vec<_> = (0..4).map(|_| p.acquire(ct(1), 0.0).unwrap()).collect();
+        for (i, s) in slots.iter().enumerate() {
+            let since = if i == 0 { 0.0 } else { (i + 1) as f64 };
+            p.release(*s, since).unwrap();
+        }
+        let s = p.acquire(ct(2), 0.0).unwrap();
+        p.release(s, 2.0).unwrap();
+        let mut floors = HashMap::new();
+        floors.insert(ct(1), 2);
+        floors.insert(ct(2), 1);
+        // Grace 5s at now=6: slots idle since >1 are protected.
+        let reaped = p.reap_excess(&floors, 5.0, 6.0);
+        assert_eq!(reaped.len(), 1, "only the oldest excess slot is past grace");
+        assert_eq!(p.warm_idle_count(ct(1)), 3);
+        // No grace: reap down to the floors exactly, oldest first.
+        let reaped = p.reap_excess(&floors, 0.0, 6.0);
+        assert_eq!(reaped.len(), 1);
+        assert_eq!(p.warm_idle_count(ct(1)), 2);
+        assert_eq!(p.warm_idle_count(ct(2)), 1);
+        // Types with no floor entry reap to zero.
+        let reaped = p.reap_excess(&HashMap::new(), 0.0, 7.0);
+        assert_eq!(reaped.len(), 3);
+        assert_eq!(p.total(), 0);
+    }
+
+    #[test]
+    fn start_cost_ewma_tracks_measured_costs() {
+        let mut p = WarmPool::new(2, 600.0);
+        assert!(p.start_cost_estimate().is_none());
+        p.note_start_cost(1.0);
+        assert_eq!(p.start_cost_estimate(), Some(1.0));
+        p.note_start_cost(2.0);
+        let e = p.start_cost_estimate().unwrap();
+        assert!(e > 1.0 && e < 2.0, "EWMA between old and new: {e}");
+        // Garbage is ignored.
+        p.note_start_cost(f64::NAN);
+        p.note_start_cost(-1.0);
+        assert_eq!(p.start_cost_estimate(), Some(e));
     }
 }

@@ -11,7 +11,7 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::common::config::EndpointConfig;
-use crate::common::ids::ManagerId;
+use crate::common::ids::{ContainerId, ManagerId};
 use crate::common::rng::Rng;
 use crate::common::task::{Task, TaskResult};
 use crate::common::time::{Clock, Time};
@@ -22,7 +22,7 @@ use crate::endpoint::manager::{Manager, ManagerCtx};
 use crate::metrics::{FlightRecorder, LatencyBreakdown, SnapshotBuilder, TraceKind};
 use crate::provider::{NodeHandle, Provider, ScaleDecision, Strategy, StrategyInputs};
 use crate::routing::{RouteHints, RoutingTable, Scheduler};
-use crate::runtime::PayloadExecutor;
+use crate::runtime::WorkerExecutor;
 
 /// Shared, externally-readable agent statistics.
 #[derive(Default)]
@@ -35,6 +35,11 @@ pub struct AgentStats {
     pub nodes_provisioned: AtomicU64,
     pub nodes_released: AtomicU64,
     pub heartbeats_sent: AtomicU64,
+    /// Slots warmed ahead of demand by predictive pool sizing.
+    pub prewarmed: AtomicU64,
+    /// Warm slots reaped below the predicted floor (scale-in half of
+    /// predictive sizing; the idle-timeout reaper counts separately).
+    pub predictive_reaps: AtomicU64,
 }
 
 impl AgentStats {
@@ -50,6 +55,84 @@ impl AgentStats {
         b.counter("funcx_agent_nodes_provisioned_total", dims, self.nodes_provisioned.load(o));
         b.counter("funcx_agent_nodes_released_total", dims, self.nodes_released.load(o));
         b.counter("funcx_agent_heartbeats_sent_total", dims, self.heartbeats_sent.load(o));
+        b.counter("funcx_agent_prewarmed_total", dims, self.prewarmed.load(o));
+        b.counter("funcx_agent_predictive_reaps_total", dims, self.predictive_reaps.load(o));
+    }
+}
+
+/// Per-container-type arrival-rate EWMA (tasks/second) — the demand
+/// signal behind predictive warm-pool sizing (see `docs/containers.md`).
+/// Arrivals are counted on intake; each strategy tick folds the window's
+/// instantaneous rate into the EWMA, with silent types folding zero so
+/// stale demand decays and its floors release their slots.
+struct ArrivalPredictor {
+    alpha: f64,
+    counts: HashMap<ContainerId, u64>,
+    rates: HashMap<ContainerId, f64>,
+    last_tick: Option<Time>,
+}
+
+impl ArrivalPredictor {
+    fn new(alpha: f64) -> Self {
+        ArrivalPredictor {
+            alpha: alpha.clamp(0.0, 1.0),
+            counts: HashMap::new(),
+            rates: HashMap::new(),
+            last_tick: None,
+        }
+    }
+
+    /// Count a task arrival for `ctype` (the nil id stands for bare
+    /// tasks sharing the worker's own environment).
+    fn observe(&mut self, ctype: ContainerId) {
+        *self.counts.entry(ctype).or_insert(0) += 1;
+    }
+
+    /// Fold the window since the last tick into the per-type EWMAs.
+    fn tick(&mut self, now: Time) {
+        let dt = match self.last_tick {
+            Some(t) if now > t => now - t,
+            Some(_) => return,
+            None => {
+                self.last_tick = Some(now);
+                self.counts.clear();
+                return;
+            }
+        };
+        self.last_tick = Some(now);
+        for &c in self.counts.keys() {
+            self.rates.entry(c).or_insert(0.0);
+        }
+        for (c, r) in self.rates.iter_mut() {
+            let inst = self.counts.get(c).copied().unwrap_or(0) as f64 / dt;
+            *r += self.alpha * (inst - *r);
+        }
+        self.rates.retain(|_, r| *r > 1e-6);
+        self.counts.clear();
+    }
+
+    /// Predicted per-manager warm floors: `ceil(rate × cold_start ×
+    /// safety)` slots endpoint-wide per type — enough warm capacity to
+    /// absorb the arrivals that land during one cold start — split
+    /// evenly across `managers`.
+    fn floors(
+        &self,
+        cold_start_est_s: f64,
+        safety: f64,
+        managers: usize,
+    ) -> HashMap<ContainerId, usize> {
+        let mut floors = HashMap::new();
+        if managers == 0 {
+            return floors;
+        }
+        for (&c, &r) in &self.rates {
+            let want = (r * cold_start_est_s.max(0.0) * safety).ceil() as usize;
+            let per = want.div_ceil(managers);
+            if per > 0 {
+                floors.insert(c, per);
+            }
+        }
+        floors
     }
 }
 
@@ -58,7 +141,9 @@ pub struct AgentConfig {
     pub cfg: EndpointConfig,
     pub provider: Box<dyn Provider>,
     pub scheduler: Box<dyn Scheduler>,
-    pub executor: Arc<PayloadExecutor>,
+    /// Worker backend threaded into every manager: in-process (modeled
+    /// start costs) or forked worker children (measured start costs).
+    pub executor: Arc<dyn WorkerExecutor>,
     /// Data-fabric handle for resolving by-ref task inputs (§5);
     /// threaded into every manager's worker context.
     pub fabric: Option<Arc<DataFabric>>,
@@ -124,6 +209,9 @@ fn agent_loop(link: AgentSide, mut config: AgentConfig, stats: Arc<AgentStats>) 
     let mut table = RoutingTable::new(config.scheduler.prefetch());
     let strategy = Strategy::new(config.cfg.clone());
     let mut rng = Rng::new(config.seed);
+    let mut predictor = ArrivalPredictor::new(config.cfg.arrival_ewma_alpha);
+    let nil_container = ContainerId(crate::Uuid::NIL);
+    let endpoint_id = config.fabric.as_ref().map(|f| f.local().owner());
     let mut last_strategy_tick: Time = f64::NEG_INFINITY;
     let mut last_heartbeat: Time = f64::NEG_INFINITY;
 
@@ -158,6 +246,9 @@ fn agent_loop(link: AgentSide, mut config: AgentConfig, stats: Arc<AgentStats>) 
             match msg {
                 Downstream::Tasks(ts) => {
                     stats.tasks_received.fetch_add(ts.len() as u64, Ordering::Relaxed);
+                    for t in &ts {
+                        predictor.observe(t.container.unwrap_or(nil_container));
+                    }
                     pending.extend(ts);
                 }
                 Downstream::Advertise(store) => {
@@ -341,6 +432,49 @@ fn agent_loop(link: AgentSide, mut config: AgentConfig, stats: Arc<AgentStats>) 
                     slot.manager.shutdown();
                     config.provider.release_node(h, now);
                     stats.nodes_released.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+
+            // Predictive warm-pool sizing (§6.1 economics, see
+            // docs/containers.md): fold this tick's arrivals into the
+            // per-type rate EWMAs, then size every surviving manager's
+            // warm floor off its *own* cold-start estimate — measured
+            // starts where the backend reports them, the Table-3 prior
+            // otherwise — prewarming ahead of routed load and reaping
+            // idle slots the prediction no longer justifies.
+            if config.cfg.predictive_sizing && !nodes.is_empty() {
+                predictor.tick(now);
+                let n_managers = nodes.len();
+                for slot in nodes.values() {
+                    let v = slot.manager.view();
+                    let floors = predictor.floors(
+                        v.cold_start_est_s,
+                        config.cfg.warm_floor_safety,
+                        n_managers,
+                    );
+                    let (warmed, reaped) = slot.manager.apply_warm_plan(
+                        &floors,
+                        config.cfg.predictive_reap_grace_s,
+                        now,
+                    );
+                    if warmed > 0 {
+                        stats.prewarmed.fetch_add(warmed as u64, Ordering::Relaxed);
+                        if config.recorder.enabled() {
+                            if let Some(ep) = endpoint_id {
+                                config.recorder.record(
+                                    &format!("endpoint-{ep}"),
+                                    None,
+                                    None,
+                                    now,
+                                    TraceKind::Prewarmed { endpoint: ep, count: warmed as u32 },
+                                );
+                            }
+                        }
+                    }
+                    if reaped > 0 {
+                        let n = reaped as u64;
+                        stats.predictive_reaps.fetch_add(n, Ordering::Relaxed);
+                    }
                 }
             }
         }

@@ -7,8 +7,8 @@
 //! (system, tech) profile, scaled by `cold_start_scale` so tests and
 //! examples can run the same code path quickly.
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -16,7 +16,7 @@ use std::time::Duration;
 
 use crate::batching::ResultBuffer;
 use crate::common::error::Error;
-use crate::common::ids::{EndpointId, ManagerId};
+use crate::common::ids::{ContainerId, EndpointId, ManagerId};
 use crate::common::rng::Rng;
 use crate::common::sync::Notify;
 use crate::common::task::{Task, TaskResult, TaskState};
@@ -25,10 +25,17 @@ use crate::containers::{StartCostModel, WarmPool};
 use crate::datastore::DataFabric;
 use crate::metrics::{FlightRecorder, LatencyBreakdown, TraceCtx, TraceKind};
 use crate::routing::ManagerView;
-use crate::runtime::PayloadExecutor;
+use crate::runtime::WorkerExecutor;
 use crate::serialize::{unpack, Buffer, Value};
 
+/// Mints the executor-backend pool key for each manager: backend worker
+/// processes are keyed by `(pool_id, slot)`, so two managers sharing one
+/// [`WorkerExecutor`] never collide on slot indices.
+static NEXT_POOL_ID: AtomicU64 = AtomicU64::new(1);
+
 struct Shared {
+    /// Executor-backend key of this manager's pool.
+    pool_id: u64,
     /// Tasks are shared handles: the queue holds the same allocation the
     /// forwarder cached and the link carried — no per-hop record clone.
     queue: Mutex<VecDeque<Arc<Task>>>,
@@ -37,6 +44,9 @@ struct Shared {
     /// Completed results, buffered and flushed in batches (§4.6 on the
     /// return path) instead of one channel send per result.
     results: ResultBuffer,
+    /// Transient acquire failures that parked a worker on the condvar
+    /// (oversubscribed pool); a healthy manager keeps this near zero.
+    acquire_retries: AtomicU64,
     shutdown: AtomicBool,
 }
 
@@ -48,12 +58,22 @@ pub struct Manager {
     /// Endpoint whose data-fabric store is local to this manager
     /// (advertised in [`ManagerView`] for locality-aware routing).
     endpoint: Option<EndpointId>,
+    /// Backend handle kept for out-of-band slot lifecycle (prewarm and
+    /// reap run on the agent's tick thread, not in a worker).
+    executor: Arc<dyn WorkerExecutor>,
+    /// Cold-start estimate advertised before any start has been
+    /// observed: the Table-3 model mean, scaled like the charged cost.
+    cold_start_fallback_s: f64,
 }
 
 /// Everything a worker needs, bundled to keep spawn() readable.
 #[derive(Clone)]
 pub struct ManagerCtx {
-    pub executor: Arc<PayloadExecutor>,
+    /// Worker backend the manager runs tasks through: in-process
+    /// ([`crate::runtime::PayloadExecutor`], modeled start costs) or
+    /// forked worker children ([`crate::runtime::ProcessExecutor`],
+    /// measured start costs).
+    pub executor: Arc<dyn WorkerExecutor>,
     /// Receives *batches* of results (size/idle/straggler-flushed by the
     /// manager's [`ResultBuffer`]).
     pub results: Sender<Vec<TaskResult>>,
@@ -91,18 +111,36 @@ pub struct ManagerCtx {
 
 impl Manager {
     pub fn spawn(workers: usize, idle_timeout_s: f64, ctx: ManagerCtx, seed: u64) -> Self {
+        Self::spawn_oversubscribed(workers, workers, idle_timeout_s, ctx, seed)
+    }
+
+    /// Like [`Manager::spawn`] but with container `slots` decoupled from
+    /// worker threads. With `slots < workers`, transient acquire
+    /// failures are the norm, not the exception — the configuration
+    /// that exercises the bounded condvar park in `worker_loop`.
+    pub fn spawn_oversubscribed(
+        workers: usize,
+        slots: usize,
+        idle_timeout_s: f64,
+        ctx: ManagerCtx,
+        seed: u64,
+    ) -> Self {
         let id = ManagerId::new();
         let endpoint = ctx.endpoint;
+        let executor = ctx.executor.clone();
+        let cold_start_fallback_s = ctx.start_model.mean() * ctx.cold_start_scale;
         let shared = Arc::new(Shared {
+            pool_id: NEXT_POOL_ID.fetch_add(1, Ordering::Relaxed),
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
-            pool: Mutex::new(WarmPool::new(workers, idle_timeout_s)),
+            pool: Mutex::new(WarmPool::new(slots, idle_timeout_s)),
             results: ResultBuffer::new(
                 ctx.result_batch,
                 ctx.results.clone(),
                 ctx.wake.clone(),
                 ctx.clock.clone(),
             ),
+            acquire_retries: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
         });
         let handles = (0..workers)
@@ -116,7 +154,7 @@ impl Manager {
                     .expect("spawn worker")
             })
             .collect();
-        Manager { id, shared, workers: handles, endpoint }
+        Manager { id, shared, workers: handles, endpoint, executor, cold_start_fallback_s }
     }
 
     /// Enqueue routed tasks (the agent's dispatch; §6.2). Takes shared
@@ -139,6 +177,7 @@ impl Manager {
     pub fn view(&self) -> ManagerView {
         let pool = self.shared.pool.lock().unwrap();
         let queued = self.shared.queue.lock().unwrap().len();
+        let fallback = self.cold_start_fallback_s;
         ManagerView {
             id: self.id,
             deployed: pool.deployed_census(),
@@ -147,6 +186,7 @@ impl Manager {
             total_slots: pool.capacity(),
             queued,
             endpoint: self.endpoint,
+            cold_start_est_s: pool.start_cost_estimate().unwrap_or(fallback),
         }
     }
 
@@ -157,9 +197,72 @@ impl Manager {
     }
 
     /// Reap idle containers past their timeout (§6.1); agent calls this
-    /// on its strategy tick.
+    /// on its strategy tick. Backend workers behind reaped slots are
+    /// stopped.
     pub fn reap_idle(&self, now: Time) -> usize {
-        self.shared.pool.lock().unwrap().reap_idle(now)
+        let reaped = self.shared.pool.lock().unwrap().reap_idle_slots(now);
+        for (slot, _) in &reaped {
+            self.executor.stop_slot(self.shared.pool_id, *slot);
+        }
+        reaped.len()
+    }
+
+    /// Apply a predictive warm plan (the agent's EWMA pool sizing, see
+    /// `docs/containers.md`): warm empty slots up to each type's floor —
+    /// starting backend workers eagerly, off the task critical path —
+    /// then reap warm-idle slots above the floors that have been idle
+    /// longer than `grace_s`. Returns `(warmed, reaped)` slot counts.
+    pub fn apply_warm_plan(
+        &self,
+        floors: &HashMap<ContainerId, usize>,
+        grace_s: f64,
+        now: Time,
+    ) -> (usize, usize) {
+        let mut warmed = 0usize;
+        for (&ctype, &floor) in floors {
+            loop {
+                let slot = {
+                    let mut pool = self.shared.pool.lock().unwrap();
+                    // Deployed (busy + idle) counts toward the floor: a
+                    // busy slot is warm again the moment its task ends.
+                    let have = pool.deployed_census().get(&ctype).copied().unwrap_or(0);
+                    if have >= floor {
+                        break;
+                    }
+                    match pool.warm_slot(ctype, now) {
+                        Some(s) => s,
+                        None => break, // no empty slot left
+                    }
+                };
+                // Start the backend outside the pool lock: a real
+                // process spawn takes milliseconds, and workers must
+                // keep acquiring while it forks.
+                match self.executor.start_slot(self.shared.pool_id, slot) {
+                    Ok(Some(measured)) => {
+                        self.shared.pool.lock().unwrap().note_start_cost(measured);
+                    }
+                    Ok(None) => {}
+                    Err(_) => {
+                        // The slot never hosted a container; undo the
+                        // warm marking and stop trying this tick.
+                        self.shared.pool.lock().unwrap().vacate(slot);
+                        break;
+                    }
+                }
+                warmed += 1;
+            }
+        }
+        if warmed > 0 {
+            // Prewarmed slots can satisfy parked acquires.
+            self.shared.cv.notify_all();
+        }
+        let mut pool = self.shared.pool.lock().unwrap();
+        let reaped = pool.reap_excess(floors, grace_s, now);
+        drop(pool);
+        for (slot, _) in &reaped {
+            self.executor.stop_slot(self.shared.pool_id, *slot);
+        }
+        (warmed, reaped.len())
     }
 
     pub fn cold_starts(&self) -> u64 {
@@ -168,6 +271,17 @@ impl Manager {
 
     pub fn warm_hits(&self) -> u64 {
         self.shared.pool.lock().unwrap().warm_hits()
+    }
+
+    /// Slots warmed ahead of demand (prewarm + predictive sizing).
+    pub fn prewarmed(&self) -> u64 {
+        self.shared.pool.lock().unwrap().prewarmed()
+    }
+
+    /// Transient acquire failures that parked a worker (see the bounded
+    /// condvar wait in `worker_loop`).
+    pub fn acquire_retries(&self) -> u64 {
+        self.shared.acquire_retries.load(Ordering::Relaxed)
     }
 
     /// Stop workers and join them.
@@ -181,6 +295,7 @@ impl Manager {
 }
 
 fn worker_loop(shared: Arc<Shared>, ctx: ManagerCtx, rng: &mut Rng) {
+    let executor = ctx.executor.clone();
     loop {
         // Blocking wait for a task (workers have a single responsibility
         // and use blocking communication; §4.3).
@@ -217,26 +332,62 @@ fn worker_loop(shared: Arc<Shared>, ctx: ManagerCtx, rng: &mut Rng) {
             task.container.unwrap_or(crate::common::ids::ContainerId(crate::Uuid::NIL));
         let (slot, cold) = {
             let mut pool = shared.pool.lock().unwrap();
-            // With workers == slots this can only fail transiently; retry.
+            // With workers == slots this can only fail transiently; an
+            // oversubscribed pool (slots < workers) saturates for real.
             match pool.acquire_with_origin(container_key, now) {
                 Some(x) => x,
                 None => {
-                    // Put the task back and block (bounded) until a slot
-                    // release notifies the condvar — no spin-sleep.
+                    // Put the task back and park on the condvar until a
+                    // release (or prewarm) notifies. The old 5 ms wait
+                    // degenerated into a ~200 Hz spin under a saturated
+                    // pool; 500 ms is only the shutdown-safety backstop.
                     drop(pool);
+                    shared.acquire_retries.fetch_add(1, Ordering::Relaxed);
                     let mut q = shared.queue.lock().unwrap();
                     q.push_front(task);
                     let (q, _timed_out) =
-                        shared.cv.wait_timeout(q, Duration::from_millis(5)).unwrap();
+                        shared.cv.wait_timeout(q, Duration::from_millis(500)).unwrap();
                     drop(q);
                     continue;
                 }
             }
         };
         if cold {
-            let cost = ctx.start_model.sample(rng) * ctx.cold_start_scale;
-            if cost > 0.0 {
-                std::thread::sleep(Duration::from_secs_f64(cost));
+            // Cold slot: clear any previous tenant (eviction), then
+            // start the backend container. A measured backend (process
+            // executor) reports the real spawn cost; a modeled one
+            // returns None and the Table-3 sample is charged as
+            // wall-clock sleep. Either way the observed cost feeds the
+            // pool's EWMA so predictive sizing and warming-aware routing
+            // work off what starts actually cost here (§6.1 economics).
+            executor.stop_slot(shared.pool_id, slot);
+            let (seconds, measured) = match executor.start_slot(shared.pool_id, slot) {
+                Ok(Some(s)) => (s, true),
+                Ok(None) => {
+                    let cost = ctx.start_model.sample(rng) * ctx.cold_start_scale;
+                    if cost > 0.0 {
+                        std::thread::sleep(Duration::from_secs_f64(cost));
+                    }
+                    (cost, false)
+                }
+                Err(e) => {
+                    // The container never started: free the slot,
+                    // wake a sibling, fail the task typed.
+                    shared.pool.lock().unwrap().vacate(slot);
+                    shared.cv.notify_all();
+                    finish_failed(&shared, &ctx, &task, &e, true);
+                    continue;
+                }
+            };
+            shared.pool.lock().unwrap().note_start_cost(seconds);
+            if ctx.recorder.enabled() {
+                ctx.recorder.record(
+                    &format!("endpoint-{}", task.endpoint),
+                    task.trace,
+                    Some(task.id),
+                    ctx.clock.now(),
+                    TraceKind::ColdStart { endpoint: task.endpoint, seconds, measured },
+                );
             }
         }
 
@@ -291,7 +442,7 @@ fn worker_loop(shared: Arc<Shared>, ctx: ManagerCtx, rng: &mut Rng) {
                 } else {
                     Value::Null
                 };
-                match ctx.executor.execute(&task.payload, &input) {
+                match executor.execute_in(shared.pool_id, slot, &task.payload, &input) {
                     Ok((out, t)) => match crate::serialize::pack(&out, 0) {
                         Ok(buf) => (TaskState::Success, buf, t),
                         Err(e) => fail(&e),
@@ -316,7 +467,8 @@ fn worker_loop(shared: Arc<Shared>, ctx: ManagerCtx, rng: &mut Rng) {
                 },
             );
         }
-        shared.pool.lock().unwrap().release(slot, done);
+        let released = shared.pool.lock().unwrap().release(slot, done);
+        released.expect("worker holds this slot busy; release must succeed");
         // Wake siblings blocked on a transient acquire failure.
         shared.cv.notify_all();
 
@@ -354,6 +506,43 @@ fn worker_loop(shared: Arc<Shared>, ctx: ManagerCtx, rng: &mut Rng) {
     }
 }
 
+/// Fail a task that never reached execution (backend start failure):
+/// typed terminal trace + `Failed` result, mirroring the post-execution
+/// failure path so the flight-recorder trace still closes.
+fn finish_failed(shared: &Shared, ctx: &ManagerCtx, task: &Arc<Task>, e: &Error, cold: bool) {
+    let done = ctx.clock.now();
+    ctx.latency.on_finished(task.id, done);
+    if ctx.recorder.enabled() {
+        let component = format!("endpoint-{}", task.endpoint);
+        ctx.recorder.record(
+            &component,
+            task.trace,
+            Some(task.id),
+            done,
+            TraceKind::TaskFailed { error: e.kind() },
+        );
+        ctx.recorder.record(
+            &component,
+            task.trace,
+            Some(task.id),
+            done,
+            TraceKind::WorkerFinished { endpoint: task.endpoint, success: false },
+        );
+    }
+    let idle = shared.queue.lock().unwrap().is_empty();
+    shared.results.push(
+        TaskResult {
+            task: task.id,
+            state: TaskState::Failed,
+            output: crate::serialize::pack(&Value::Str(e.to_string()), 0).unwrap(),
+            output_ref: None,
+            exec_time_s: 0.0,
+            cold_start: cold,
+        },
+        idle,
+    );
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -361,6 +550,7 @@ mod tests {
     use crate::common::task::Payload;
     use crate::common::time::WallClock;
     use crate::containers::{ContainerTech, SystemProfile, TABLE3_MODELS};
+    use crate::runtime::PayloadExecutor;
     use crate::serialize::Buffer;
     use std::sync::mpsc::{channel, Receiver};
 
@@ -626,5 +816,89 @@ mod tests {
         recv_n(&rx, 1);
         m.shutdown();
         assert_eq!(Arc::strong_count(&task), 1, "handle released after completion");
+    }
+
+    /// Satellite of the pool-accounting fixes: a saturated pool parks
+    /// workers on the condvar instead of hot-looping. Four workers
+    /// contending for one slot drain a serial backlog with only a
+    /// handful of acquire retries; the old 5 ms spin burned hundreds
+    /// over the same window.
+    #[test]
+    fn saturated_pool_parks_instead_of_spinning() {
+        let (tx, rx) = channel();
+        let m = Manager::spawn_oversubscribed(4, 1, 600.0, ctx(tx, 1), 12);
+        m.enqueue((0..4).map(|_| mk_task(Payload::Sleep(0.15))).collect());
+        let got = recv_n(&rx, 4);
+        assert!(got.iter().all(|r| r.state == TaskState::Success));
+        let retries = m.acquire_retries();
+        assert!(retries > 0, "one slot vs four workers must contend at least once");
+        assert!(retries < 40, "workers spun on acquire: {retries} retries");
+        m.shutdown();
+    }
+
+    /// Predictive plan: floors warm empty slots ahead of demand (the
+    /// next task hits warm — zero cold starts) and the reap half tears
+    /// down warm slots above the floor once past the grace window.
+    #[test]
+    fn warm_plan_prewarms_and_reaps() {
+        let (tx, rx) = channel();
+        let m = Manager::spawn(2, 600.0, ctx(tx, 1), 13);
+        let nil = ContainerId(crate::Uuid::NIL);
+        let mut floors = HashMap::new();
+        floors.insert(nil, 2);
+        let (warmed, reaped) = m.apply_warm_plan(&floors, 0.0, 0.0);
+        assert_eq!(warmed, 2);
+        assert_eq!(reaped, 0);
+        assert_eq!(m.prewarmed(), 2);
+        // Re-applying the same plan is idempotent: the floor is met.
+        let (warmed, _) = m.apply_warm_plan(&floors, 0.0, 0.5);
+        assert_eq!(warmed, 0);
+        m.enqueue(vec![mk_task(Payload::Noop)]);
+        let r = recv_n(&rx, 1).pop().unwrap();
+        assert!(!r.cold_start, "prewarmed slot serves the task warm");
+        assert_eq!(m.cold_starts(), 0);
+        // Dropping the floors reaps every warm slot once past grace.
+        // The worker pushes its result before releasing the slot, so
+        // poll until both slots have gone idle and been reaped.
+        let mut reaped_total = 0;
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while reaped_total < 2 && std::time::Instant::now() < deadline {
+            let (_, reaped) = m.apply_warm_plan(&HashMap::new(), 0.0, 1.0e9);
+            reaped_total += reaped;
+            if reaped_total < 2 {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+        assert_eq!(reaped_total, 2);
+        m.shutdown();
+    }
+
+    /// The advertised view carries a cold-start estimate: the scaled
+    /// model mean before any start is observed, the pool's EWMA of
+    /// charged costs after.
+    #[test]
+    fn view_advertises_cold_start_estimate() {
+        let (tx, rx) = channel();
+        let m = Manager::spawn(1, 600.0, ctx(tx, 1), 14);
+        let v0 = m.view();
+        assert!(v0.cold_start_est_s > 0.0, "fallback is the scaled model mean");
+        m.enqueue(vec![mk_task(Payload::Noop)]);
+        recv_n(&rx, 1);
+        let v1 = m.view();
+        assert!(v1.cold_start_est_s > 0.0, "observed EWMA after a cold start");
+        m.shutdown();
+    }
+
+    /// Fault payloads through the default in-process backend surface as
+    /// typed failures (the process backend kills a real child; the
+    /// modeled one returns the same error kinds).
+    #[test]
+    fn fault_payloads_fail_typed() {
+        let (tx, rx) = channel();
+        let m = Manager::spawn(1, 600.0, ctx(tx, 1), 15);
+        m.enqueue(vec![mk_task(Payload::Exit(3)), mk_task(Payload::Abort)]);
+        let got = recv_n(&rx, 2);
+        assert!(got.iter().all(|r| r.state == TaskState::Failed));
+        m.shutdown();
     }
 }

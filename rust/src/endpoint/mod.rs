@@ -23,7 +23,7 @@ use crate::datastore::DataFabric;
 use crate::metrics::{FlightRecorder, LatencyBreakdown};
 use crate::provider::{Provider, SimProvider};
 use crate::routing::{Scheduler, WarmingAware};
-use crate::runtime::{PayloadExecutor, PjrtRuntime};
+use crate::runtime::{PayloadExecutor, PjrtRuntime, WorkerExecutor};
 
 /// Builder for a live endpoint.
 pub struct EndpointBuilder {
@@ -32,6 +32,7 @@ pub struct EndpointBuilder {
     tech: ContainerTech,
     provider: Option<Box<dyn Provider>>,
     scheduler: Option<Box<dyn Scheduler>>,
+    executor: Option<Arc<dyn WorkerExecutor>>,
     runtime: Option<Arc<PjrtRuntime>>,
     channel: Option<Arc<dyn DataChannel>>,
     fabric: Option<Arc<DataFabric>>,
@@ -57,6 +58,7 @@ impl EndpointBuilder {
             tech: ContainerTech::None,
             provider: None,
             scheduler: None,
+            executor: None,
             runtime: None,
             channel: None,
             fabric: None,
@@ -87,6 +89,15 @@ impl EndpointBuilder {
 
     pub fn scheduler(mut self, s: Box<dyn Scheduler>) -> Self {
         self.scheduler = Some(s);
+        self
+    }
+
+    /// Override the worker backend (e.g. a
+    /// [`crate::runtime::ProcessExecutor`] running tasks in forked
+    /// worker children with measured start costs). Defaults to the
+    /// in-process [`PayloadExecutor`] with modeled start costs.
+    pub fn executor(mut self, e: Arc<dyn WorkerExecutor>) -> Self {
+        self.executor = Some(e);
         self
     }
 
@@ -161,7 +172,10 @@ impl EndpointBuilder {
                 fabric.local().with_recorder(recorder.clone(), clock.clone());
             }
         }
-        let executor = Arc::new(PayloadExecutor::new(self.runtime, self.channel));
+        let executor: Arc<dyn WorkerExecutor> = match self.executor {
+            Some(e) => e,
+            None => Arc::new(PayloadExecutor::new(self.runtime, self.channel)),
+        };
         let config = AgentConfig {
             start_model: TABLE3_MODELS.lookup(self.system, self.tech),
             provider: self.provider.unwrap_or_else(|| Box::new(SimProvider::local(7))),

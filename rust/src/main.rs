@@ -43,6 +43,9 @@ fn main() {
         "bench-routing" => bench_routing(),
         "bench-batching" => bench_batching(),
         "artifacts" => artifacts(),
+        // Internal: the process-executor child entrypoint. Parents
+        // spawn `funcx worker-child` and speak frames over its pipes.
+        "worker-child" => funcx::runtime::run_worker_child(),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             0
@@ -71,6 +74,7 @@ COMMANDS:
   bench-routing      Figs. 6-7 warming-aware vs random routing
   bench-batching     §7.5 internal batching ablation
   artifacts          list AOT artifacts loadable by the PJRT runtime
+  worker-child       (internal) process-executor worker child
   help               this message
 ";
 

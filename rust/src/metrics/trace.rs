@@ -89,6 +89,12 @@ pub enum TraceKind {
     AgentDispatched { endpoint: EndpointId },
     /// A worker began executing (start of `t_w`).
     WorkerStarted { endpoint: EndpointId },
+    /// The task's container slot was started cold before execution.
+    /// `measured` distinguishes real executor-measured start costs from
+    /// modeled (Table-3 sampled) ones.
+    ColdStart { endpoint: EndpointId, seconds: f64, measured: bool },
+    /// Predictive sizing warmed slots ahead of routed load.
+    Prewarmed { endpoint: EndpointId, count: u32 },
     /// The worker finished (success or typed failure already decided).
     WorkerFinished { endpoint: EndpointId, success: bool },
     /// A data-ref resolve was satisfied, and where.
@@ -125,6 +131,8 @@ impl TraceKind {
             TraceKind::Forwarded { .. } => "Forwarded",
             TraceKind::AgentDispatched { .. } => "AgentDispatched",
             TraceKind::WorkerStarted { .. } => "WorkerStarted",
+            TraceKind::ColdStart { .. } => "ColdStart",
+            TraceKind::Prewarmed { .. } => "Prewarmed",
             TraceKind::WorkerFinished { .. } => "WorkerFinished",
             TraceKind::RefResolved { .. } => "RefResolved",
             TraceKind::PeerRetry { .. } => "PeerRetry",
@@ -167,6 +175,12 @@ impl TraceKind {
             TraceKind::Forwarded { endpoint } => format!("endpoint={endpoint}"),
             TraceKind::AgentDispatched { endpoint } => format!("endpoint={endpoint}"),
             TraceKind::WorkerStarted { endpoint } => format!("endpoint={endpoint}"),
+            TraceKind::ColdStart { endpoint, seconds, measured } => {
+                format!("endpoint={endpoint} seconds={seconds:.3} measured={measured}")
+            }
+            TraceKind::Prewarmed { endpoint, count } => {
+                format!("endpoint={endpoint} count={count}")
+            }
             TraceKind::WorkerFinished { endpoint, success } => {
                 format!("endpoint={endpoint} success={success}")
             }

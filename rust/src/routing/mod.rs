@@ -76,6 +76,11 @@ pub struct ManagerView {
     /// the local store instead of a cross-endpoint fetch (the FDN
     /// "data-aware delivery" signal).
     pub endpoint: Option<EndpointId>,
+    /// The manager's estimated cold-start cost in seconds (measured
+    /// EWMA from its pool when available, else the profile model's
+    /// mean; 0.0 = unknown). Tier-3 placement — where every candidate
+    /// cold-starts — prefers cheaper starters.
+    pub cold_start_est_s: f64,
 }
 
 /// Max replica endpoints carried as routing hints (keeps `RouteHints`
@@ -244,13 +249,25 @@ fn hash_probe(c: ContainerId, managers: &[ManagerView], prefetch: usize) -> Opti
     }
     let h = (c.0 .0 as u64) ^ ((c.0 .0 >> 64) as u64);
     let start = (h % managers.len() as u64) as usize;
+    // Every candidate here cold-starts the type, so managers advertising
+    // a cheaper (measured) start cost win; quantizing to whole
+    // milliseconds keeps the ordering stable against estimate jitter,
+    // and probe order breaks ties so placement stays type-consistent.
+    // With no estimates advertised (all 0.0) this degenerates to the
+    // plain first-fit probe.
+    let mut best: Option<(u64, ManagerId)> = None;
     for i in 0..managers.len() {
         let m = &managers[(start + i) % managers.len()];
-        if m.has_capacity(prefetch) {
-            return Some(m.id);
+        if !m.has_capacity(prefetch) {
+            continue;
+        }
+        let est_ms = (m.cold_start_est_s.max(0.0) * 1000.0).round() as u64;
+        match &best {
+            Some((b, _)) if est_ms >= *b => {}
+            _ => best = Some((est_ms, m.id)),
         }
     }
-    None
+    best.map(|(_, id)| id)
 }
 
 impl Scheduler for WarmingAware {
@@ -1129,6 +1146,7 @@ mod tests {
             available_slots: avail,
             total_slots: total,
             queued: 0,
+            cold_start_est_s: 0.0,
             endpoint: None,
         }
     }
@@ -1531,6 +1549,7 @@ mod proptests {
                     total_slots: total,
                     queued: 0,
                     endpoint: None,
+                    cold_start_est_s: 0.0,
                 }
             })
             .collect()
@@ -1602,6 +1621,7 @@ mod proptests {
                     total_slots: total,
                     queued,
                     endpoint,
+                    cold_start_est_s: 0.0,
                 }
             })
             .collect()

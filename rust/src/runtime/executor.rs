@@ -1,0 +1,98 @@
+//! The worker-executor abstraction: how a manager's workers actually
+//! run task payloads inside a "container" slot.
+//!
+//! Two backends implement it:
+//!
+//! - [`PayloadExecutor`](crate::runtime::PayloadExecutor): in-process
+//!   execution (the original behavior). Slot lifecycle is a no-op and
+//!   cold-start costs are *modeled* — `start_slot` returns `Ok(None)`,
+//!   telling the manager to sample its [`StartCostModel`] and sleep.
+//! - [`ProcessExecutor`](crate::runtime::ProcessExecutor): each slot is
+//!   a real forked child process speaking length-prefixed wire frames
+//!   over stdin/stdout. `start_slot` returns `Ok(Some(seconds))` — the
+//!   *measured* spawn-plus-handshake cost — which the manager feeds
+//!   into the pool's start-cost EWMA so routing and predictive sizing
+//!   operate on observed numbers instead of Table-3 samples.
+//!
+//! Slots are keyed `(pool, slot)`: `pool` is a process-wide unique id
+//! minted per manager, so one executor instance can safely back many
+//! managers without slot-index collisions.
+
+use crate::common::error::Result;
+use crate::common::task::Payload;
+use crate::serialize::Value;
+
+/// Executes payloads in (real or virtual) container slots. Implementors
+/// must be `Send + Sync`: one executor is shared by every worker thread
+/// on an endpoint.
+pub trait WorkerExecutor: Send + Sync {
+    /// Bring the slot's execution environment up (cold start). Returns
+    /// `Ok(Some(seconds))` when the backend *measured* the start cost,
+    /// `Ok(None)` when the backend has no real environment to start and
+    /// the caller should model the cost instead.
+    fn start_slot(&self, pool: u64, slot: usize) -> Result<Option<f64>>;
+
+    /// Tear the slot's environment down (reap/evict). Idempotent; a
+    /// slot that was never started is a no-op.
+    fn stop_slot(&self, pool: u64, slot: usize);
+
+    /// Run one payload in the slot; returns (output, exec_seconds).
+    /// The slot must have been started (backends may lazily start it).
+    fn execute_in(
+        &self,
+        pool: u64,
+        slot: usize,
+        payload: &Payload,
+        input: &Value,
+    ) -> Result<(Value, f64)>;
+
+    /// Backend name for metrics/introspection.
+    fn backend(&self) -> &'static str;
+}
+
+impl WorkerExecutor for crate::runtime::PayloadExecutor {
+    fn start_slot(&self, _pool: u64, _slot: usize) -> Result<Option<f64>> {
+        Ok(None) // nothing real to start: caller models the cold cost
+    }
+
+    fn stop_slot(&self, _pool: u64, _slot: usize) {}
+
+    fn execute_in(
+        &self,
+        _pool: u64,
+        _slot: usize,
+        payload: &Payload,
+        input: &Value,
+    ) -> Result<(Value, f64)> {
+        self.execute(payload, input)
+    }
+
+    fn backend(&self) -> &'static str {
+        "in-process"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::PayloadExecutor;
+
+    #[test]
+    fn in_process_backend_models_start_cost() {
+        let ex = PayloadExecutor::bare();
+        assert_eq!(ex.start_slot(1, 0).unwrap(), None);
+        ex.stop_slot(1, 0);
+        let (out, _) = ex.execute_in(1, 0, &Payload::Noop, &Value::Null).unwrap();
+        assert_eq!(out, Value::Null);
+        assert_eq!(WorkerExecutor::backend(&ex), "in-process");
+    }
+
+    #[test]
+    fn in_process_backend_types_fault_payloads() {
+        let ex = PayloadExecutor::bare();
+        let err = ex.execute_in(1, 0, &Payload::Exit(3), &Value::Null).unwrap_err();
+        assert_eq!(err.kind(), "WorkerExited");
+        let err = ex.execute_in(1, 0, &Payload::Abort, &Value::Null).unwrap_err();
+        assert_eq!(err.kind(), "WorkerSignaled");
+    }
+}

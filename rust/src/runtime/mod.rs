@@ -7,8 +7,14 @@
 
 mod artifacts;
 mod engine;
+mod executor;
 mod payload;
+mod process;
 
 pub use artifacts::{spec, ArtifactSpec, ElemType, Manifest, ParamSpec, ARTIFACT_SPECS};
 pub use engine::{PjrtRuntime, TensorArg};
+pub use executor::WorkerExecutor;
 pub use payload::PayloadExecutor;
+pub use process::{
+    read_frame, run_worker_child, write_frame, ProcessExecutor, ProcessExecutorConfig,
+};

@@ -61,6 +61,12 @@ impl PayloadExecutor {
             Payload::Simulated { .. } => Err(Error::InvalidArgument(
                 "simulated payloads only run in the discrete-event simulator".into(),
             )),
+            // Fault-injection payloads are meant to kill a worker
+            // *process*. Running in-process, we surface the same typed
+            // error the process executor would have produced instead of
+            // taking the host down with us.
+            Payload::Exit(code) => Err(Error::WorkerExited { code: *code }),
+            Payload::Abort => Err(Error::WorkerSignaled { signal: 6 }),
             Payload::DataOp => {
                 let ch = self
                     .channel

@@ -1,0 +1,441 @@
+//! The process-executor backend: every container slot is a real forked
+//! child process (`funcx worker-child`) speaking length-prefixed,
+//! facade-packed [`Value`] frames over stdin/stdout.
+//!
+//! Protocol (all frames are `u32` little-endian length + packed body):
+//!
+//! - child → parent on boot: `{ready: true, pid}` — the parent measures
+//!   spawn → ready as the slot's cold-start cost.
+//! - parent → child per task: `{payload, input}`.
+//! - child → parent per task: `{ok: true, out, exec_s}` on success,
+//!   `{ok: false, err, exec_s}` when the payload itself failed.
+//!
+//! A child that exits or is killed mid-task surfaces as a typed
+//! [`Error::WorkerExited`] / [`Error::WorkerSignaled`]; a task that
+//! overruns the configured timeout kills the child and surfaces
+//! [`Error::Timeout`]. Children are killed on drop, so reaping a slot
+//! (or dropping the executor) never leaks processes or pipe fds.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::process::{Child, ChildStdin, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::common::error::{Error, Result};
+use crate::common::task::Payload;
+use crate::runtime::executor::WorkerExecutor;
+use crate::serialize::{pack, unpack, Buffer, Value, Wire};
+
+/// Upper bound on a single frame body; a parent/child that claims more
+/// is desynced and gets treated as a protocol error.
+const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Write one length-prefixed frame.
+pub fn write_frame<W: Write>(w: &mut W, v: &Value) -> std::io::Result<()> {
+    let body = pack(v, 0)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
+    let bytes = body.as_slice();
+    w.write_all(&(bytes.len() as u32).to_le_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()
+}
+
+/// Read one length-prefixed frame. `Ok(None)` on clean EOF at a frame
+/// boundary; errors on truncation, oversized claims, or decode failure.
+pub fn read_frame<R: Read>(r: &mut R) -> std::io::Result<Option<Value>> {
+    let mut len = [0u8; 4];
+    let mut filled = 0;
+    while filled < 4 {
+        match r.read(&mut len[filled..])? {
+            0 if filled == 0 => return Ok(None), // clean EOF
+            0 => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "eof inside frame length",
+                ))
+            }
+            n => filled += n,
+        }
+    }
+    let n = u32::from_le_bytes(len) as usize;
+    if n > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame of {n} bytes exceeds cap"),
+        ));
+    }
+    let mut body = vec![0u8; n];
+    r.read_exact(&mut body)?;
+    unpack(&Buffer::from_vec(body))
+        .map(Some)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+}
+
+/// The `funcx worker-child` entrypoint: frame loop on stdin/stdout with
+/// a bare in-process payload executor. Returns the process exit code.
+/// Fault-injection payloads really do take the process down — that is
+/// their point.
+pub fn run_worker_child() -> i32 {
+    let executor = crate::runtime::PayloadExecutor::bare();
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut input = stdin.lock();
+    let mut output = stdout.lock();
+
+    let ready = Value::map([
+        ("ready", Value::Bool(true)),
+        ("pid", Value::Int(std::process::id() as i64)),
+    ]);
+    if write_frame(&mut output, &ready).is_err() {
+        return 1;
+    }
+
+    loop {
+        let frame = match read_frame(&mut input) {
+            Ok(Some(v)) => v,
+            Ok(None) => return 0, // parent closed stdin: clean shutdown
+            Err(_) => return 1,
+        };
+        let payload = match frame.get("payload").map(Payload::from_value) {
+            Some(Ok(p)) => p,
+            _ => return 1,
+        };
+        let task_input = frame.get("input").cloned().unwrap_or(Value::Null);
+        match payload {
+            Payload::Exit(code) => std::process::exit(code),
+            Payload::Abort => std::process::abort(),
+            p => {
+                let reply = match executor.execute(&p, &task_input) {
+                    Ok((out, exec_s)) => Value::map([
+                        ("ok", Value::Bool(true)),
+                        ("out", out),
+                        ("exec_s", Value::Float(exec_s)),
+                    ]),
+                    Err(e) => Value::map([
+                        ("ok", Value::Bool(false)),
+                        ("err", Value::Str(e.to_string())),
+                        ("exec_s", Value::Float(0.0)),
+                    ]),
+                };
+                if write_frame(&mut output, &reply).is_err() {
+                    return 1;
+                }
+            }
+        }
+    }
+}
+
+/// Map a reaped child's exit status to the typed worker error.
+fn status_error(status: std::process::ExitStatus) -> Error {
+    #[cfg(unix)]
+    {
+        use std::os::unix::process::ExitStatusExt;
+        if let Some(signal) = status.signal() {
+            return Error::WorkerSignaled { signal };
+        }
+    }
+    Error::WorkerExited { code: status.code().unwrap_or(-1) }
+}
+
+/// One live worker child: the process, its stdin, and a reader thread
+/// draining stdout frames into a channel (so the parent can wait with a
+/// timeout — blocking reads on pipes have none).
+struct WorkerChild {
+    child: Child,
+    stdin: ChildStdin,
+    frames: mpsc::Receiver<Value>,
+}
+
+impl WorkerChild {
+    /// Kill and reap, returning the typed error for the exit status.
+    fn reap(mut self) -> Error {
+        let _ = self.child.kill();
+        match self.child.wait() {
+            Ok(status) => status_error(status),
+            Err(e) => Error::Io(e),
+        }
+    }
+}
+
+impl Drop for WorkerChild {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Configuration for the process executor.
+#[derive(Clone, Debug)]
+pub struct ProcessExecutorConfig {
+    /// Binary to spawn with the `worker-child` argument. Tests and
+    /// benches pass `env!("CARGO_BIN_EXE_funcx")`; embedders default to
+    /// the current executable.
+    pub binary: std::path::PathBuf,
+    /// Per-task wall-clock budget; an overrun kills the child.
+    pub task_timeout_s: f64,
+    /// Spawn → ready-frame handshake budget.
+    pub start_timeout_s: f64,
+}
+
+impl ProcessExecutorConfig {
+    pub fn new(binary: impl Into<std::path::PathBuf>) -> Self {
+        ProcessExecutorConfig {
+            binary: binary.into(),
+            task_timeout_s: 300.0,
+            start_timeout_s: 30.0,
+        }
+    }
+
+    /// Spawn children from the currently running executable.
+    pub fn current_exe() -> Result<Self> {
+        Ok(Self::new(std::env::current_exe()?))
+    }
+}
+
+/// The process-backed [`WorkerExecutor`]: one child process per started
+/// `(pool, slot)` key, measured cold starts, kill-on-drop.
+pub struct ProcessExecutor {
+    cfg: ProcessExecutorConfig,
+    workers: Mutex<HashMap<(u64, usize), WorkerChild>>,
+    spawned: AtomicU64,
+    stopped: AtomicU64,
+    timeouts: AtomicU64,
+    worker_faults: AtomicU64,
+}
+
+impl ProcessExecutor {
+    pub fn new(cfg: ProcessExecutorConfig) -> Self {
+        ProcessExecutor {
+            cfg,
+            workers: Mutex::new(HashMap::new()),
+            spawned: AtomicU64::new(0),
+            stopped: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
+            worker_faults: AtomicU64::new(0),
+        }
+    }
+
+    /// Total children forked over the executor's lifetime.
+    pub fn spawned(&self) -> u64 {
+        self.spawned.load(Ordering::Relaxed)
+    }
+
+    /// Slots explicitly stopped (reaped) over the lifetime.
+    pub fn stopped(&self) -> u64 {
+        self.stopped.load(Ordering::Relaxed)
+    }
+
+    /// Tasks killed for overrunning the task timeout.
+    pub fn timeouts(&self) -> u64 {
+        self.timeouts.load(Ordering::Relaxed)
+    }
+
+    /// Children that died mid-task (exit or signal).
+    pub fn worker_faults(&self) -> u64 {
+        self.worker_faults.load(Ordering::Relaxed)
+    }
+
+    /// Currently live children.
+    pub fn active_workers(&self) -> usize {
+        self.workers.lock().unwrap().len()
+    }
+
+    /// Fork a child and wait for its ready frame; returns the child and
+    /// the measured spawn-plus-handshake seconds.
+    fn spawn_child(&self) -> Result<(WorkerChild, f64)> {
+        let t0 = Instant::now();
+        let mut child = Command::new(&self.cfg.binary)
+            .arg("worker-child")
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()?;
+        let stdin = child.stdin.take().expect("stdin piped");
+        let mut stdout = child.stdout.take().expect("stdout piped");
+        let (tx, rx) = mpsc::channel();
+        std::thread::spawn(move || {
+            // Drain frames until EOF/error; dropping `tx` disconnects
+            // the receiver, which the parent reads as "child is gone".
+            while let Ok(Some(v)) = read_frame(&mut stdout) {
+                if tx.send(v).is_err() {
+                    break;
+                }
+            }
+        });
+        let worker = WorkerChild { child, stdin, frames: rx };
+        let start_budget = Duration::from_secs_f64(self.cfg.start_timeout_s.max(0.001));
+        match worker.frames.recv_timeout(start_budget) {
+            Ok(ready) if ready.get("ready").is_some() => {
+                self.spawned.fetch_add(1, Ordering::Relaxed);
+                Ok((worker, t0.elapsed().as_secs_f64()))
+            }
+            Ok(_) => {
+                worker.reap();
+                Err(Error::Runtime("worker child sent a non-ready first frame".into()))
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                worker.reap();
+                Err(Error::Timeout(format!(
+                    "worker child not ready within {:.1}s",
+                    self.cfg.start_timeout_s
+                )))
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(worker.reap()),
+        }
+    }
+
+    /// Run one framed request/response exchange against a live child.
+    fn exchange(&self, worker: &mut WorkerChild, req: &Value) -> Result<Value> {
+        if let Err(e) = write_frame(&mut worker.stdin, req) {
+            // Write failure means the child is dead or dying; reaping
+            // happens in the caller (which owns the worker).
+            return Err(Error::Io(e));
+        }
+        let budget = Duration::from_secs_f64(self.cfg.task_timeout_s.max(0.001));
+        match worker.frames.recv_timeout(budget) {
+            Ok(v) => Ok(v),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                self.timeouts.fetch_add(1, Ordering::Relaxed);
+                Err(Error::Timeout(format!(
+                    "task exceeded {:.1}s in worker child",
+                    self.cfg.task_timeout_s
+                )))
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // Child closed stdout: it exited or was killed. The
+                // caller reaps it for the precise typed status.
+                Err(Error::Shutdown("worker child closed its pipe".into()))
+            }
+        }
+    }
+}
+
+impl WorkerExecutor for ProcessExecutor {
+    fn start_slot(&self, pool: u64, slot: usize) -> Result<Option<f64>> {
+        let (worker, seconds) = self.spawn_child()?;
+        let prev = self.workers.lock().unwrap().insert((pool, slot), worker);
+        drop(prev); // kill any forgotten predecessor for this slot
+        Ok(Some(seconds))
+    }
+
+    fn stop_slot(&self, pool: u64, slot: usize) {
+        if self.workers.lock().unwrap().remove(&(pool, slot)).is_some() {
+            self.stopped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn execute_in(
+        &self,
+        pool: u64,
+        slot: usize,
+        payload: &Payload,
+        input: &Value,
+    ) -> Result<(Value, f64)> {
+        // Take the child out of the map for the duration of the task so
+        // one slow task never serializes the other workers.
+        let mut worker = match self.workers.lock().unwrap().remove(&(pool, slot)) {
+            Some(w) => w,
+            None => {
+                // Lazily started slot: pay (and report via the typed
+                // path below, not here) the spawn cost.
+                self.spawn_child()?.0
+            }
+        };
+        let req = Value::map([("payload", payload.to_value()), ("input", input.clone())]);
+        match self.exchange(&mut worker, &req) {
+            Ok(reply) => {
+                // Healthy exchange: return the slot to the map.
+                self.workers.lock().unwrap().insert((pool, slot), worker);
+                let ok = matches!(reply.get("ok"), Some(Value::Bool(true)));
+                let exec_s = reply.get("exec_s").and_then(Value::as_float).unwrap_or(0.0);
+                if ok {
+                    Ok((reply.get("out").cloned().unwrap_or(Value::Null), exec_s))
+                } else {
+                    let msg = reply
+                        .get("err")
+                        .and_then(Value::as_str)
+                        .unwrap_or("unknown worker error")
+                        .to_string();
+                    Err(Error::TaskFailed(msg))
+                }
+            }
+            Err(Error::Timeout(m)) => {
+                // Kill the overrunning child; the slot is poisoned.
+                worker.reap();
+                Err(Error::Timeout(m))
+            }
+            Err(_) => {
+                // Pipe-level failure: reap for the precise exit status.
+                self.worker_faults.fetch_add(1, Ordering::Relaxed);
+                Err(worker.reap())
+            }
+        }
+    }
+
+    fn backend(&self) -> &'static str {
+        "process"
+    }
+}
+
+impl Drop for ProcessExecutor {
+    fn drop(&mut self) {
+        // WorkerChild::drop kills each remaining child.
+        self.workers.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_roundtrip() {
+        let v = Value::map([
+            ("payload", Payload::Sleep(0.25).to_value()),
+            ("input", Value::Int(42)),
+        ]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &v).unwrap();
+        let mut r = Cursor::new(buf);
+        let back = read_frame(&mut r).unwrap().expect("one frame");
+        let p = Payload::from_value(back.get("payload").unwrap()).unwrap();
+        assert_eq!(p, Payload::Sleep(0.25));
+        assert_eq!(back.get("input"), Some(&Value::Int(42)));
+        // Clean EOF after the frame.
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn frame_rejects_truncation_and_oversize() {
+        // Truncated length prefix.
+        let mut r = Cursor::new(vec![1u8, 0]);
+        assert!(read_frame(&mut r).is_err());
+        // Truncated body.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Value::Int(7)).unwrap();
+        buf.truncate(buf.len() - 1);
+        let mut r = Cursor::new(buf);
+        assert!(read_frame(&mut r).is_err());
+        // Oversized claim.
+        let mut r = Cursor::new(((MAX_FRAME_BYTES + 1) as u32).to_le_bytes().to_vec());
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn status_error_types_exits_and_signals() {
+        use std::os::unix::process::ExitStatusExt;
+        // Raw wait status: exit code in bits 8..16, signal in bits 0..7.
+        let exited = std::process::ExitStatus::from_raw(3 << 8);
+        assert_eq!(status_error(exited).kind(), "WorkerExited");
+        let signaled = std::process::ExitStatus::from_raw(9);
+        match status_error(signaled) {
+            Error::WorkerSignaled { signal } => assert_eq!(signal, 9),
+            e => panic!("expected WorkerSignaled, got {e}"),
+        }
+    }
+}

@@ -163,6 +163,7 @@ impl SimEndpoint {
                 total_slots: m.pool.capacity(),
                 queued: 0,
                 endpoint: None,
+                cold_start_est_s: m.pool.start_cost_estimate().unwrap_or(0.0),
             })
             .collect();
         let index_of = views
@@ -214,6 +215,7 @@ impl SimEndpoint {
                 total_slots: m.pool.capacity(),
                 queued,
                 endpoint: None,
+                cold_start_est_s: m.pool.start_cost_estimate().unwrap_or(0.0),
             });
         }
     }
@@ -459,7 +461,7 @@ impl SimEndpoint {
                 Event::WorkerDone { manager, slot, task } => {
                     let pool = &mut self.managers[manager].pool;
                     let ctype = pool.slot_type(slot).expect("busy slot has a type");
-                    pool.release(slot, now);
+                    pool.release(slot, now).expect("sim marked this slot busy");
                     self.table.update(sim_mid(manager), |v| {
                         v.available_slots += 1;
                         *v.warm_idle.entry(ctype).or_insert(0) += 1;

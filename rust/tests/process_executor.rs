@@ -1,0 +1,272 @@
+//! Process-executor backend end to end: real forked `funcx worker-child`
+//! processes behind the executor abstraction. Crash, abort, and timeout
+//! tasks must fail *typed* (`WorkerExited` / `WorkerSignaled` /
+//! `Timeout`) with closed flight-recorder traces; healthy slots reuse
+//! one child per slot with a measured (not sampled) start cost; and the
+//! backend never leaks child processes or pipe fds.
+
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use funcx::common::config::EndpointConfig;
+use funcx::common::ids::{EndpointId, FunctionId, UserId};
+use funcx::common::sync::Notify;
+use funcx::common::task::{Payload, Task, TaskResult, TaskState};
+use funcx::common::time::WallClock;
+use funcx::containers::{ContainerTech, SystemProfile, TABLE3_MODELS};
+use funcx::endpoint::{Manager, ManagerCtx};
+use funcx::metrics::{FlightRecorder, LatencyBreakdown, TraceKind};
+use funcx::runtime::{ProcessExecutor, ProcessExecutorConfig, WorkerExecutor};
+use funcx::serialize::{pack, unpack, Buffer, Value};
+use funcx::Error;
+
+/// Serialize the tests in this binary: the fd-leak test counts
+/// /proc/self/fd entries and concurrent children would skew it.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn exec_config() -> ProcessExecutorConfig {
+    ProcessExecutorConfig::new(env!("CARGO_BIN_EXE_funcx"))
+}
+
+#[test]
+fn child_runs_payloads_and_measures_start() {
+    let _g = lock();
+    let ex = ProcessExecutor::new(exec_config());
+    assert_eq!(ex.backend(), "process");
+    let started = ex.start_slot(1, 0).unwrap();
+    let measured = started.expect("process backend measures starts");
+    assert!(measured > 0.0, "spawn + handshake takes real time: {measured}");
+    let (out, _exec_s) = ex.execute_in(1, 0, &Payload::Echo, &Value::Int(42)).unwrap();
+    assert_eq!(out, Value::Int(42));
+    // Same slot, same child: no second fork.
+    let second = Value::Str("x".into());
+    let (out, _) = ex.execute_in(1, 0, &Payload::Echo, &second).unwrap();
+    assert_eq!(out, second);
+    assert_eq!(ex.spawned(), 1);
+    assert_eq!(ex.active_workers(), 1);
+    ex.stop_slot(1, 0);
+    assert_eq!(ex.active_workers(), 0);
+    assert_eq!(ex.stopped(), 1);
+}
+
+#[test]
+fn lazy_slot_spawns_on_first_execute() {
+    let _g = lock();
+    let ex = ProcessExecutor::new(exec_config());
+    // No start_slot: execute_in forks on demand.
+    let (out, _) = ex.execute_in(2, 7, &Payload::Echo, &Value::Int(7)).unwrap();
+    assert_eq!(out, Value::Int(7));
+    assert_eq!(ex.spawned(), 1);
+}
+
+#[test]
+fn exit_task_fails_worker_exited() {
+    let _g = lock();
+    let ex = ProcessExecutor::new(exec_config());
+    ex.start_slot(3, 0).unwrap();
+    match ex.execute_in(3, 0, &Payload::Exit(3), &Value::Null) {
+        Err(Error::WorkerExited { code }) => assert_eq!(code, 3),
+        other => panic!("expected WorkerExited, got {other:?}"),
+    }
+    assert_eq!(ex.worker_faults(), 1);
+    assert_eq!(ex.active_workers(), 0, "crashed slot must not return to the map");
+    // The slot recovers: the next task on it forks a fresh child.
+    let (out, _) = ex.execute_in(3, 0, &Payload::Echo, &Value::Int(1)).unwrap();
+    assert_eq!(out, Value::Int(1));
+}
+
+#[cfg(unix)]
+#[test]
+fn abort_task_fails_worker_signaled() {
+    let _g = lock();
+    let ex = ProcessExecutor::new(exec_config());
+    ex.start_slot(4, 0).unwrap();
+    match ex.execute_in(4, 0, &Payload::Abort, &Value::Null) {
+        Err(Error::WorkerSignaled { signal }) => assert_eq!(signal, 6, "SIGABRT"),
+        other => panic!("expected WorkerSignaled, got {other:?}"),
+    }
+    assert_eq!(ex.worker_faults(), 1);
+}
+
+#[test]
+fn overrunning_task_times_out_and_kills_child() {
+    let _g = lock();
+    let mut cfg = exec_config();
+    cfg.task_timeout_s = 0.2;
+    let ex = ProcessExecutor::new(cfg);
+    ex.start_slot(5, 0).unwrap();
+    let t0 = std::time::Instant::now();
+    match ex.execute_in(5, 0, &Payload::Sleep(30.0), &Value::Null) {
+        Err(Error::Timeout(_)) => {}
+        other => panic!("expected Timeout, got {other:?}"),
+    }
+    assert!(t0.elapsed() < Duration::from_secs(5), "timeout must not wait the sleep out");
+    assert_eq!(ex.timeouts(), 1);
+    assert_eq!(ex.active_workers(), 0, "the overrunning child is killed, not reused");
+}
+
+/// The backend never leaks pipe fds: after spawning, crashing, timing
+/// out, and stopping children, /proc/self/fd returns to its baseline.
+#[cfg(target_os = "linux")]
+#[test]
+fn no_fd_leak_across_worker_lifecycles() {
+    let _g = lock();
+    let open_fds = || std::fs::read_dir("/proc/self/fd").unwrap().count();
+    // One warm-up lifecycle so lazily-initialized runtime fds (stdio
+    // locks, thread spawns) don't count against the baseline.
+    {
+        let ex = ProcessExecutor::new(exec_config());
+        ex.start_slot(0, 0).unwrap();
+        ex.execute_in(0, 0, &Payload::Echo, &Value::Int(0)).unwrap();
+    }
+    let baseline = open_fds();
+    {
+        let mut cfg = exec_config();
+        cfg.task_timeout_s = 0.2;
+        let ex = ProcessExecutor::new(cfg);
+        for slot in 0..4 {
+            ex.start_slot(9, slot).unwrap();
+            let input = Value::Int(slot as i64);
+            ex.execute_in(9, slot, &Payload::Echo, &input).unwrap();
+        }
+        // Crash one, time one out, stop one, leave one for Drop.
+        let _ = ex.execute_in(9, 0, &Payload::Exit(2), &Value::Null);
+        let _ = ex.execute_in(9, 1, &Payload::Sleep(30.0), &Value::Null);
+        ex.stop_slot(9, 2);
+    }
+    // Reader threads close their pipe ends asynchronously after the
+    // children die; poll briefly instead of asserting instantly.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let mut now_fds = open_fds();
+    while now_fds > baseline && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(50));
+        now_fds = open_fds();
+    }
+    assert!(
+        now_fds <= baseline,
+        "fd leak: {now_fds} open fds after lifecycle, baseline {baseline}"
+    );
+}
+
+fn process_ctx(
+    results: std::sync::mpsc::Sender<Vec<TaskResult>>,
+    recorder: Arc<FlightRecorder>,
+) -> (ManagerCtx, Arc<ProcessExecutor>) {
+    let ex = Arc::new(ProcessExecutor::new(exec_config()));
+    let ctx = ManagerCtx {
+        executor: ex.clone(),
+        results,
+        wake: Arc::new(Notify::new()),
+        result_batch: 1,
+        fabric: None,
+        endpoint: None,
+        max_result_bytes: EndpointConfig::default().max_result_bytes,
+        clock: Arc::new(WallClock::new()),
+        latency: Arc::new(LatencyBreakdown::new()),
+        recorder,
+        start_model: TABLE3_MODELS.lookup(SystemProfile::Local, ContainerTech::None),
+        cold_start_scale: 0.001,
+    };
+    (ctx, ex)
+}
+
+fn mk_task(payload: Payload, input: Buffer) -> Task {
+    Task::new(FunctionId::new(), EndpointId::new(), UserId::new(), None, payload, input)
+}
+
+/// A manager running on the process backend: tasks execute in real
+/// children, the first start is cold with a *measured* cost (ColdStart
+/// trace with `measured: true`), and the warm second task reuses the
+/// same child.
+#[test]
+fn manager_on_process_backend_measures_cold_starts() {
+    let _g = lock();
+    let recorder = Arc::new(FlightRecorder::default());
+    let (tx, rx) = channel();
+    let (ctx, ex) = process_ctx(tx, recorder.clone());
+    let m = Manager::spawn(1, 600.0, ctx, 21);
+
+    let input = Value::Int(99);
+    let mut task = mk_task(Payload::Echo, pack(&input, 0).unwrap());
+    task.trace = Some(recorder.mint(task.id));
+    let id = task.id;
+    m.enqueue(vec![Arc::new(task)]);
+    let r = rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("task result")
+        .pop()
+        .unwrap();
+    assert_eq!(r.state, TaskState::Success);
+    assert!(r.cold_start);
+    assert_eq!(unpack(&r.output).unwrap(), input);
+
+    let trace = recorder.assemble(id).expect("traced task assembles");
+    let cold = trace
+        .events
+        .iter()
+        .find_map(|e| match &e.kind {
+            TraceKind::ColdStart { seconds, measured, .. } => Some((*seconds, *measured)),
+            _ => None,
+        })
+        .expect("cold start recorded");
+    assert!(cold.1, "process backend reports measured starts");
+    assert!(cold.0 > 0.0);
+    assert!(m.view().cold_start_est_s > 0.0, "view advertises the measured EWMA");
+
+    // Warm reuse: same child, no new fork.
+    let task = mk_task(Payload::Echo, pack(&Value::Int(1), 0).unwrap());
+    m.enqueue(vec![Arc::new(task)]);
+    let r = rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("second result")
+        .pop()
+        .unwrap();
+    assert!(!r.cold_start);
+    assert_eq!(ex.spawned(), 1, "warm task reuses the child");
+    m.shutdown();
+}
+
+/// A crashing task through a real manager fails typed and its
+/// flight-recorder trace closes with the matching terminal.
+#[test]
+fn crashing_task_closes_trace_with_typed_terminal() {
+    let _g = lock();
+    let recorder = Arc::new(FlightRecorder::default());
+    let (tx, rx) = channel();
+    let (ctx, _ex) = process_ctx(tx, recorder.clone());
+    let m = Manager::spawn(1, 600.0, ctx, 22);
+
+    for (payload, kind, needle) in [
+        (Payload::Exit(3), "WorkerExited", "exited with status 3"),
+        (Payload::Abort, "WorkerSignaled", "killed by signal"),
+    ] {
+        let mut task = mk_task(payload, Buffer::empty());
+        task.trace = Some(recorder.mint(task.id));
+        let id = task.id;
+        m.enqueue(vec![Arc::new(task)]);
+        let r = rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("crashed task must produce a result, not hang")
+            .pop()
+            .unwrap();
+        assert_eq!(r.state, TaskState::Failed);
+        let msg = unpack(&r.output).unwrap();
+        assert!(
+            msg.as_str().unwrap_or("").contains(needle),
+            "failure names the exit status: {msg:?}"
+        );
+        let trace = recorder.assemble(id).expect("trace assembles");
+        match &trace.terminal().expect("crashed task's trace must close").kind {
+            TraceKind::TaskFailed { error } => {
+                assert_eq!(*error, kind, "typed terminal\n{}", trace.render())
+            }
+            other => panic!("terminal must be TaskFailed, got {other:?}"),
+        }
+    }
+    m.shutdown();
+}
