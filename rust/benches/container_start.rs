@@ -1,17 +1,52 @@
 //! E8 / Table 3 — cold container instantiation across (system, tech)
-//! pairs, live warm-pool micro-benches, and the process-executor
-//! measured-cold-start section: real forked worker children feed their
+//! pairs, live warm-pool micro-benches, the process-executor
+//! measured-cold-start section (real forked worker children feed their
 //! spawn cost into the routing comparison, and warming-aware routing
-//! must beat random on that measured cost (asserted in-bench).
+//! must beat random on that measured cost), and the worker-IPC section:
+//! pipelined v2 frame dispatch must be ≥2x serial request/reply on
+//! no-op payloads, with parent-side per-exchange allocations flat in
+//! input size. All pins asserted in-bench.
 
 mod harness;
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use funcx::common::ids::{ContainerId, ManagerId};
 use funcx::common::rng::Rng;
+use funcx::common::task::Payload;
 use funcx::containers::{WarmPool, TABLE3_MODELS};
 use funcx::experiments as exp;
 use funcx::routing::{ManagerView, Randomized, Scheduler, WarmingAware};
-use funcx::runtime::{ProcessExecutor, ProcessExecutorConfig, WorkerExecutor};
+use funcx::runtime::{BatchItem, ProcessExecutor, ProcessExecutorConfig, WorkerExecutor};
+use funcx::serialize::Buffer;
+
+/// Byte-counting allocator for the IPC zero-clone pin: dispatch writes
+/// each input trailer straight from the task's buffer, so what the
+/// parent allocates per exchange must be protocol overhead only —
+/// independent of input size.
+struct CountingAlloc;
+
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(l.size() as u64, Ordering::Relaxed);
+        System.alloc(l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
 
 /// Cold-start outcome of one routed 3000-task workload.
 struct RunStats {
@@ -145,6 +180,85 @@ fn main() {
     assert!(wa_s < rnd_s, "warming-aware must beat random: {wa_s} s vs {rnd_s} s");
     let saved = 100.0 * (rnd_s - wa_s) / rnd_s;
     println!("  warming-aware saves {saved:.1}% of the measured cold-start cost");
+
+    harness::section("worker IPC — pipelined v2 frames vs serial request/reply");
+    const IPC_TASKS: usize = 600;
+    let noop_items = |n: usize, input_bytes: usize| -> Vec<BatchItem> {
+        (0..n)
+            .map(|_| BatchItem {
+                payload: Payload::Noop,
+                input: if input_bytes == 0 {
+                    Buffer::empty()
+                } else {
+                    Buffer::from_vec(vec![0x5A; input_bytes])
+                },
+            })
+            .collect()
+    };
+    let throughput = |depth: usize| -> f64 {
+        let mut cfg = ProcessExecutorConfig::new(env!("CARGO_BIN_EXE_funcx"));
+        cfg.pipeline_depth = depth;
+        let ex = ProcessExecutor::new(cfg);
+        ex.start_slot(2, 0).unwrap();
+        // One warm-up window outside the clock.
+        ex.execute_batch(2, 0, &noop_items(16, 0), &mut |_, r| {
+            r.unwrap();
+        });
+        let items = noop_items(IPC_TASKS, 0);
+        let t0 = std::time::Instant::now();
+        ex.execute_batch(2, 0, &items, &mut |_, r| {
+            r.unwrap();
+        });
+        let rate = IPC_TASKS as f64 / t0.elapsed().as_secs_f64();
+        ex.stop_slot(2, 0);
+        rate
+    };
+    let serial = throughput(1);
+    let pipelined = throughput(4);
+    let speedup = pipelined / serial;
+    println!("  serial depth-1:    {serial:>9.0} tasks/s");
+    println!("  pipelined depth-4: {pipelined:>9.0} tasks/s   ({speedup:.2}x)");
+    harness::record("IPC serial tasks/s", serial, "tasks/s");
+    harness::record("IPC pipelined depth-4 tasks/s", pipelined, "tasks/s");
+    harness::record("IPC pipelined speedup", speedup, "ratio");
+    assert!(
+        pipelined >= 2.0 * serial,
+        "pipelined depth-4 must be >= 2x serial on no-op payloads: \
+         {pipelined:.0} vs {serial:.0} tasks/s"
+    );
+
+    harness::section("worker IPC — zero-clone dispatch (parent allocations vs input size)");
+    // Noop never reads its input, so the trailer rides the wire untouched
+    // and every reply stays tiny regardless of input size: the bytes the
+    // parent allocates per exchange are pure protocol overhead. Inputs
+    // themselves are built before the measurement window.
+    let alloc_per_exchange = |input_bytes: usize| -> f64 {
+        const EXCHANGES: usize = 200;
+        let ex = ProcessExecutor::new(ProcessExecutorConfig::new(env!("CARGO_BIN_EXE_funcx")));
+        ex.start_slot(3, 0).unwrap();
+        // Warm up the channel, demux map, and write path first.
+        ex.execute_batch(3, 0, &noop_items(16, input_bytes), &mut |_, r| {
+            r.unwrap();
+        });
+        let items = noop_items(EXCHANGES, input_bytes);
+        let before = ALLOC_BYTES.load(Ordering::SeqCst);
+        ex.execute_batch(3, 0, &items, &mut |_, r| {
+            r.unwrap();
+        });
+        let grew = ALLOC_BYTES.load(Ordering::SeqCst) - before;
+        ex.stop_slot(3, 0);
+        grew as f64 / EXCHANGES as f64
+    };
+    let small = alloc_per_exchange(1024);
+    let big = alloc_per_exchange(256 * 1024);
+    println!("  parent allocations/exchange: {small:>7.0} B @ 1 KB inputs, {big:>7.0} B @ 256 KB");
+    harness::record("IPC alloc/exchange @1KB input", small, "bytes");
+    harness::record("IPC alloc/exchange @256KB input", big, "bytes");
+    assert!(
+        big <= small + 16.0 * 1024.0,
+        "parent-side allocations must not scale with input size: \
+         {small:.0} B/exchange at 1 KB vs {big:.0} B/exchange at 256 KB"
+    );
 
     harness::write_json("BENCH_container.json");
 }

@@ -110,6 +110,14 @@ pub struct EndpointConfig {
     /// backend; an overrunning task gets its worker child killed and
     /// fails with [`crate::common::error::Error::Timeout`].
     pub task_timeout_s: f64,
+    /// In-flight task frames one worker may pipeline into a single
+    /// container slot (the frame-multiplexed v2 child protocol; see
+    /// `docs/containers.md`). A worker claims up to this many queued
+    /// same-type tasks per dispatch — each holding one lease on the
+    /// busy slot — and the process backend keeps that many request
+    /// frames outstanding per child, completing replies out of order
+    /// by frame id. 1 restores strict one-task-per-slot request/reply.
+    pub worker_pipeline_depth: usize,
     /// Predictive warm-pool sizing (see `docs/containers.md`): the
     /// agent keeps a per-container-type arrival-rate EWMA and prewarms
     /// slots ahead of the predicted load / reaps idle slots above the
@@ -144,6 +152,7 @@ impl Default for EndpointConfig {
             result_batch: 32,
             max_result_bytes: 10 * 1024 * 1024,
             task_timeout_s: 300.0,
+            worker_pipeline_depth: 4,
             predictive_sizing: true,
             arrival_ewma_alpha: 0.3,
             warm_floor_safety: 1.5,

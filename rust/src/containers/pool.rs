@@ -44,6 +44,11 @@ pub enum SlotState {
 struct Slot {
     ctype: Option<ContainerId>,
     state: SlotState,
+    /// Outstanding task leases while busy: batched dispatch claims K
+    /// queued tasks for one slot ([`WarmPool::add_lease`]) and releases
+    /// one lease per completed task; the slot turns warm-idle only when
+    /// the last lease is released.
+    leases: usize,
 }
 
 /// Warm-container bookkeeping for one manager.
@@ -68,7 +73,7 @@ pub struct WarmPool {
 impl WarmPool {
     pub fn new(capacity: usize, idle_timeout_s: f64) -> Self {
         WarmPool {
-            slots: vec![Slot { ctype: None, state: SlotState::Empty }; capacity],
+            slots: vec![Slot { ctype: None, state: SlotState::Empty, leases: 0 }; capacity],
             idle_timeout_s,
             cold_starts: 0,
             warm_hits: 0,
@@ -178,12 +183,13 @@ impl WarmPool {
             s.ctype == Some(ctype) && matches!(s.state, SlotState::WarmIdle { .. })
         }) {
             self.slots[i].state = SlotState::Busy;
+            self.slots[i].leases = 1;
             self.warm_hits += 1;
             return Some(Acquire { slot: i, cold: false, evicted: None });
         }
         // 2. Otherwise take an empty slot (cold start).
         if let Some(i) = self.slots.iter().position(|s| s.state == SlotState::Empty) {
-            self.slots[i] = Slot { ctype: Some(ctype), state: SlotState::Busy };
+            self.slots[i] = Slot { ctype: Some(ctype), state: SlotState::Busy, leases: 1 };
             self.cold_starts += 1;
             return Some(Acquire { slot: i, cold: true, evicted: None });
         }
@@ -206,7 +212,7 @@ impl WarmPool {
         if let Some((i, _)) = lru {
             self.evictions += 1;
             let evicted = self.slots[i].ctype;
-            self.slots[i] = Slot { ctype: Some(ctype), state: SlotState::Busy };
+            self.slots[i] = Slot { ctype: Some(ctype), state: SlotState::Busy, leases: 1 };
             self.cold_starts += 1;
             return Some(Acquire { slot: i, cold: true, evicted });
         }
@@ -235,6 +241,7 @@ impl WarmPool {
                 *s = Slot {
                     ctype: Some(types[filled % types.len()]),
                     state: SlotState::WarmIdle { since: now },
+                    leases: 0,
                 };
                 filled += 1;
             }
@@ -246,7 +253,8 @@ impl WarmPool {
     /// prewarm). Returns the slot, or `None` when no slot is empty.
     pub fn warm_slot(&mut self, ctype: ContainerId, now: Time) -> Option<ContainerSlot> {
         let i = self.slots.iter().position(|s| s.state == SlotState::Empty)?;
-        self.slots[i] = Slot { ctype: Some(ctype), state: SlotState::WarmIdle { since: now } };
+        self.slots[i] =
+            Slot { ctype: Some(ctype), state: SlotState::WarmIdle { since: now }, leases: 0 };
         self.prewarmed += 1;
         Some(i)
     }
@@ -256,11 +264,40 @@ impl WarmPool {
     /// failed (the slot never actually hosted a container).
     pub fn vacate(&mut self, slot: ContainerSlot) {
         if let Some(s) = self.slots.get_mut(slot) {
-            *s = Slot { ctype: None, state: SlotState::Empty };
+            *s = Slot { ctype: None, state: SlotState::Empty, leases: 0 };
         }
     }
 
-    /// Mark a slot's task finished; the container stays warm (§6.1).
+    /// Stack one more task lease onto an already-busy slot: batched
+    /// dispatch claims several queued tasks for one slot and flushes
+    /// them down the backend's pipeline, releasing one lease per
+    /// completed task. Leasing a non-busy or out-of-range slot is a
+    /// typed refusal — the pool's state machine only pipelines on top
+    /// of a legitimately acquired slot.
+    pub fn add_lease(&mut self, slot: ContainerSlot) -> Result<()> {
+        match self.slots.get_mut(slot) {
+            Some(s) if s.state == SlotState::Busy => {
+                s.leases += 1;
+                Ok(())
+            }
+            Some(s) => Err(Error::InvalidArgument(format!(
+                "lease on non-busy slot {slot} (state {:?})",
+                s.state
+            ))),
+            None => Err(Error::InvalidArgument(format!(
+                "lease on out-of-range slot {slot} (capacity {})",
+                self.slots.len()
+            ))),
+        }
+    }
+
+    /// Outstanding task leases on a slot (0 when idle or empty).
+    pub fn slot_leases(&self, slot: ContainerSlot) -> usize {
+        self.slots.get(slot).map_or(0, |s| s.leases)
+    }
+
+    /// Mark one of a slot's tasks finished (drop one lease); the
+    /// container turns warm-idle when its last lease is released (§6.1).
     ///
     /// Releasing a slot that is not busy is a hard, typed error — the
     /// seed's `debug_assert_eq!` compiled out in release builds, so a
@@ -271,7 +308,10 @@ impl WarmPool {
     pub fn release(&mut self, slot: ContainerSlot, now: Time) -> Result<()> {
         match self.slots.get_mut(slot) {
             Some(s) if s.state == SlotState::Busy => {
-                s.state = SlotState::WarmIdle { since: now };
+                s.leases = s.leases.saturating_sub(1);
+                if s.leases == 0 {
+                    s.state = SlotState::WarmIdle { since: now };
+                }
                 Ok(())
             }
             Some(s) => {
@@ -306,7 +346,7 @@ impl WarmPool {
         for (i, s) in self.slots.iter_mut().enumerate() {
             if let (Some(c), SlotState::WarmIdle { since }) = (s.ctype, s.state) {
                 if now - since >= timeout {
-                    *s = Slot { ctype: None, state: SlotState::Empty };
+                    *s = Slot { ctype: None, state: SlotState::Empty, leases: 0 };
                     reaped.push((i, c));
                 }
             }
@@ -350,7 +390,7 @@ impl WarmPool {
             let floor = floors.get(&c).copied().unwrap_or(0);
             let have = keep.get(&c).copied().unwrap_or(0);
             if have > floor {
-                self.slots[i] = Slot { ctype: None, state: SlotState::Empty };
+                self.slots[i] = Slot { ctype: None, state: SlotState::Empty, leases: 0 };
                 *keep.get_mut(&c).unwrap() -= 1;
                 reaped.push((i, c));
             }
@@ -625,6 +665,36 @@ mod tests {
         assert_eq!(p.warm_idle_count(ct(1)), 1, "first empty slot warms type 1");
         assert_eq!(p.warm_idle_count(ct(2)), 1, "second empty slot warms type 2");
         assert!(p.prewarmed() >= 2);
+    }
+
+    /// Lease stacking (batched dispatch): K leases keep the slot busy
+    /// through K-1 releases, the last release turns it warm-idle, and
+    /// leasing non-busy or out-of-range slots is a typed refusal.
+    #[test]
+    fn lease_stacking_keeps_slot_busy_until_last_release() {
+        let mut p = WarmPool::new(1, 600.0);
+        let s = p.acquire(ct(1), 0.0).unwrap();
+        assert_eq!(p.slot_leases(s), 1, "acquire grants the first lease");
+        p.add_lease(s).unwrap();
+        p.add_lease(s).unwrap();
+        assert_eq!(p.slot_leases(s), 3);
+        p.release(s, 1.0).unwrap();
+        p.release(s, 1.1).unwrap();
+        assert_eq!(p.busy_slots(), vec![s], "still busy with one lease left");
+        assert!(p.acquire(ct(1), 1.2).is_none(), "leased slot is not acquirable");
+        p.release(s, 1.3).unwrap();
+        assert_eq!(p.warm_idle_count(ct(1)), 1, "last release turns warm-idle");
+        assert_eq!(p.slot_leases(s), 0);
+        // A fourth release is a bad release, exactly as before leases.
+        assert!(p.release(s, 1.4).is_err());
+        // Leases only stack on busy slots.
+        assert_eq!(p.add_lease(s).unwrap_err().kind(), "InvalidArgument");
+        assert_eq!(p.add_lease(9).unwrap_err().kind(), "InvalidArgument");
+        // Vacate clears leases outright.
+        let s = p.acquire(ct(1), 2.0).unwrap();
+        p.add_lease(s).unwrap();
+        p.vacate(s);
+        assert_eq!(p.slot_leases(s), 0);
     }
 
     #[test]

@@ -63,6 +63,10 @@ pub struct FabricStats {
     /// jittered backoff) instead of surfacing — a flapping link is not
     /// a missing frame.
     pub peer_retries: AtomicU64,
+    /// Peers connected lazily on first fabric miss via the registry
+    /// peer source (see [`DataFabric::with_registry`]) instead of
+    /// hand-wired `connect_peer` calls.
+    pub lazy_peers: AtomicU64,
 }
 
 impl FabricStats {
@@ -97,6 +101,11 @@ impl FabricStats {
             "funcx_fabric_peer_retries_total",
             dims,
             self.peer_retries.load(Ordering::Relaxed),
+        );
+        b.counter(
+            "funcx_fabric_lazy_peers_total",
+            dims,
+            self.lazy_peers.load(Ordering::Relaxed),
         );
     }
 }
@@ -161,6 +170,12 @@ struct CacheMap {
     bytes: usize,
 }
 
+/// Lazily supplies a peer endpoint's store on first fabric miss — the
+/// registry-backed alternative to hand-wiring every peer up front with
+/// [`DataFabric::connect_peer`]. Returns `None` for owners with no
+/// advertised store (dead, decommissioned, never registered).
+pub type PeerSource = Box<dyn Fn(EndpointId) -> Option<Arc<TieredStore>> + Send + Sync>;
+
 /// The per-endpoint resolver handle. Share via `Arc`; workers resolve
 /// through it, the service submits through it.
 pub struct DataFabric {
@@ -169,6 +184,10 @@ pub struct DataFabric {
     /// Monotone stamp source for the cache's LRU order.
     cache_seq: AtomicU64,
     peers: Mutex<HashMap<EndpointId, Arc<TieredStore>>>,
+    /// Lazy peering fallback consulted when `peers` misses an owner;
+    /// a hit is connected into `peers` (and counted in `lazy_peers`)
+    /// so subsequent resolves take the fast path.
+    peer_source: OnceLock<PeerSource>,
     wide_area: Mutex<Option<WideArea>>,
     /// Deployment-wide metrics sink (failover resolutions, shed puts):
     /// endpoint-side fabric events land in the same `Counters` the
@@ -193,6 +212,7 @@ impl DataFabric {
             cache: Mutex::new(CacheMap { entries: HashMap::new(), bytes: 0 }),
             cache_seq: AtomicU64::new(0),
             peers: Mutex::new(HashMap::new()),
+            peer_source: OnceLock::new(),
             wide_area: Mutex::new(None),
             counters: OnceLock::new(),
             recorder: OnceLock::new(),
@@ -229,6 +249,36 @@ impl DataFabric {
     /// endpoint-to-endpoint forwarding path).
     pub fn connect_peer(&self, owner: EndpointId, store: Arc<TieredStore>) {
         self.peers.lock().expect("fabric peers poisoned").insert(owner, store);
+    }
+
+    /// Install a lazy peer source: on the first fabric miss for a
+    /// foreign owner, the source is asked for that owner's store and a
+    /// hit is connected as a peer — no hand-wired `connect_peer` mesh
+    /// required. First call wins.
+    pub fn with_peer_source(&self, source: PeerSource) {
+        let _ = self.peer_source.set(source);
+    }
+
+    /// Lazy peering backed by the service registry: foreign owners
+    /// resolve through their last advertised store
+    /// ([`crate::registry::Registry::advertise_store`]), discovered on
+    /// first miss. A decommissioned endpoint withdraws its
+    /// advertisement before its peers disconnect, so the source never
+    /// revives a retired store. First call wins.
+    pub fn with_registry(&self, registry: crate::registry::Registry) {
+        self.with_peer_source(Box::new(move |owner| registry.advertised_store(owner)));
+    }
+
+    /// The owner's peer store: connected peers first, then the lazy
+    /// peer source (a hit is connected for next time and counted).
+    fn peer_of(&self, owner: EndpointId) -> Option<Arc<TieredStore>> {
+        if let Some(p) = self.peers.lock().expect("fabric peers poisoned").get(&owner) {
+            return Some(p.clone());
+        }
+        let store = self.peer_source.get().and_then(|source| source(owner))?;
+        self.stats.lazy_peers.fetch_add(1, Ordering::Relaxed);
+        self.peers.lock().expect("fabric peers poisoned").insert(owner, store.clone());
+        Some(store)
     }
 
     /// Sever a peer (endpoint lost/disconnected): refs owned there
@@ -311,8 +361,10 @@ impl DataFabric {
             );
             return Ok(frame);
         }
-        // 3. Peer forward (raw frame handle) / 4. Globus model.
-        let peer = self.peers.lock().expect("fabric peers poisoned").get(&r.owner).cloned();
+        // 3. Peer forward (raw frame handle) / 4. Globus model. A
+        // first miss on a foreign owner may connect the peer lazily
+        // from the registry's advertised store (see `with_registry`).
+        let peer = self.peer_of(r.owner);
         if let Some(peer) = peer {
             let frame = match self.peer_fetch_with_retry(&peer, r, now) {
                 Ok(f) => f,
@@ -413,8 +465,7 @@ impl DataFabric {
                     break;
                 }
             } else {
-                let peer =
-                    self.peers.lock().expect("fabric peers poisoned").get(rep).cloned();
+                let peer = self.peer_of(*rep);
                 if let Some(p) = peer {
                     if let Some(f) = fetch(&p) {
                         hit = Some((Some(*rep), f));
@@ -483,7 +534,7 @@ impl DataFabric {
         let removed = if r.owner == self.local.owner() && r.epoch == self.local.epoch() {
             self.local.remove(&r.key).unwrap_or(false)
         } else {
-            let peer = self.peers.lock().expect("fabric peers poisoned").get(&r.owner).cloned();
+            let peer = self.peer_of(r.owner);
             match peer {
                 Some(p) if p.epoch() == r.epoch => p.remove(&r.key).unwrap_or(false),
                 _ => false,
@@ -516,7 +567,11 @@ impl DataFabric {
         {
             return FetchPlan::Cache;
         }
-        if self.peers.lock().expect("fabric peers poisoned").contains_key(&r.owner) {
+        // Read-only reachability: a connected peer, or an owner the
+        // lazy source could supply — `plan` never connects anything.
+        let reachable = self.peers.lock().expect("fabric peers poisoned").contains_key(&r.owner)
+            || self.peer_source.get().is_some_and(|source| source(r.owner).is_some());
+        if reachable {
             if let Some(est_s) = self.estimate_globus(r) {
                 return FetchPlan::Globus { est_s };
             }
@@ -670,6 +725,43 @@ mod tests {
         assert_eq!(fab.stats.cache_hits.load(Relaxed), 1);
         assert_eq!(fab.cache_hits_of(&r), 1);
         assert_eq!(fab.stats.frames_forwarded.load(Relaxed), 1, "no re-fetch");
+    }
+
+    /// Lazy peering: no hand-wired `connect_peer` — the first miss on a
+    /// foreign owner pulls the store from the peer source, counts the
+    /// lazy connect, and later resolves ride the connected peer.
+    #[test]
+    fn first_miss_connects_peer_from_source() {
+        let owner = store();
+        let fab = DataFabric::new(store());
+        let supply = owner.clone();
+        let asked = Arc::new(AtomicU64::new(0));
+        let asked_in = asked.clone();
+        fab.with_peer_source(Box::new(move |id| {
+            asked_in.fetch_add(1, Relaxed);
+            (id == supply.owner()).then(|| supply.clone())
+        }));
+        let f = frame(1024);
+        let r = owner.put("k", f.clone(), 0.0).unwrap();
+        // plan() sees reachability without connecting anything.
+        assert_eq!(fab.plan(&r, 0.0), FetchPlan::PeerForward);
+        assert_eq!(fab.stats.lazy_peers.load(Relaxed), 0, "plan is read-only");
+        let got = fab.resolve(&r, 0.0).unwrap();
+        assert!(got.same_allocation(&f), "lazy peer still forwards the raw frame");
+        assert_eq!(fab.stats.lazy_peers.load(Relaxed), 1);
+        assert_eq!(fab.stats.frames_forwarded.load(Relaxed), 1);
+        // The peer is connected now: a cache-missed re-resolve must not
+        // consult the source again.
+        let before = asked.load(Relaxed);
+        fab.reclaim(&r); // drops the cached copy
+        let r2 = owner.put("k", f.clone(), 0.0).unwrap();
+        fab.resolve(&r2, 0.0).unwrap();
+        assert_eq!(asked.load(Relaxed), before, "second resolve rides the connected peer");
+        assert_eq!(fab.stats.lazy_peers.load(Relaxed), 1);
+        // An owner the source cannot supply still types NotFound.
+        let dead = store().put("x", frame(16), 0.0).unwrap();
+        assert!(matches!(fab.resolve(&dead, 0.0), Err(Error::NotFound(_))));
+        assert_eq!(fab.plan(&dead, 0.0), FetchPlan::Unavailable);
     }
 
     #[test]

@@ -34,5 +34,5 @@ mod tiered;
 
 pub use backend::{DiskBackend, MemoryBackend, SpoolEntry, SpoolStore, StoreBackend};
 pub use dataref::{checksum, DataRef, SERVICE_OWNER};
-pub use fabric::{DataFabric, FabricStats, FetchPlan};
+pub use fabric::{DataFabric, FabricStats, FetchPlan, PeerSource};
 pub use tiered::{EntryState, Tier, TierStats, TieredConfig, TieredStore};

@@ -322,6 +322,7 @@ fn agent_loop(link: AgentSide, mut config: AgentConfig, stats: Arc<AgentStats>) 
                 recorder: config.recorder.clone(),
                 start_model: config.start_model,
                 cold_start_scale: config.cold_start_scale,
+                pipeline_depth: config.cfg.worker_pipeline_depth,
             };
             let m = Manager::spawn(
                 config.cfg.workers_per_node,

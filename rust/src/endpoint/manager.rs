@@ -25,7 +25,7 @@ use crate::containers::{StartCostModel, WarmPool};
 use crate::datastore::DataFabric;
 use crate::metrics::{FlightRecorder, LatencyBreakdown, TraceCtx, TraceKind};
 use crate::routing::ManagerView;
-use crate::runtime::WorkerExecutor;
+use crate::runtime::{BatchItem, WorkerExecutor};
 use crate::serialize::{unpack, Buffer, Value};
 
 /// Mints the executor-backend pool key for each manager: backend worker
@@ -107,6 +107,12 @@ pub struct ManagerCtx {
     /// Multiplier on sampled cold-start times (1.0 = Table-3 realism;
     /// examples/tests use ~0.001 to keep wall-clock short).
     pub cold_start_scale: f64,
+    /// How many queued same-container-type tasks one worker may claim
+    /// for a single slot and flush to the backend as one pipelined
+    /// batch, completing results out of order as replies land
+    /// ([`crate::common::config::EndpointConfig::worker_pipeline_depth`]).
+    /// 1 disables batching (strict one-task-per-dispatch).
+    pub pipeline_depth: usize,
 }
 
 impl Manager {
@@ -352,6 +358,43 @@ fn worker_loop(shared: Arc<Shared>, ctx: ManagerCtx, rng: &mut Rng) {
                 }
             }
         };
+        // Pipelined claim: with the slot held, grab up to depth-1 more
+        // queued tasks bound for the same container type, each stacking
+        // one lease on the busy slot (`ContainerPool::add_lease`). The
+        // whole batch then flushes to the backend as one dispatch with
+        // `depth` request frames in flight; depth 1 reproduces strict
+        // one-task-per-dispatch. Lock order is pool → queue, matching
+        // `view`/`is_idle`.
+        let depth = ctx.pipeline_depth.max(1);
+        let mut batch: Vec<Arc<Task>> = vec![task];
+        if depth > 1 {
+            let mut pool = shared.pool.lock().unwrap();
+            let mut q = shared.queue.lock().unwrap();
+            while batch.len() < depth {
+                let same_type = q.front().is_some_and(|t| {
+                    t.container.unwrap_or(crate::common::ids::ContainerId(crate::Uuid::NIL))
+                        == container_key
+                });
+                if !same_type || pool.add_lease(slot).is_err() {
+                    break;
+                }
+                batch.push(q.pop_front().expect("front() was Some"));
+            }
+        }
+        for extra in &batch[1..] {
+            let t = ctx.clock.now();
+            ctx.latency.on_started(extra.id, t);
+            if ctx.recorder.enabled() {
+                ctx.recorder.record(
+                    &format!("endpoint-{}", extra.endpoint),
+                    extra.trace,
+                    Some(extra.id),
+                    t,
+                    TraceKind::WorkerStarted { endpoint: extra.endpoint },
+                );
+            }
+        }
+
         if cold {
             // Cold slot: clear any previous tenant (eviction), then
             // start the backend container. A measured backend (process
@@ -372,137 +415,186 @@ fn worker_loop(shared: Arc<Shared>, ctx: ManagerCtx, rng: &mut Rng) {
                 }
                 Err(e) => {
                     // The container never started: free the slot,
-                    // wake a sibling, fail the task typed.
+                    // wake a sibling, fail every claimed task typed.
                     shared.pool.lock().unwrap().vacate(slot);
                     shared.cv.notify_all();
-                    finish_failed(&shared, &ctx, &task, &e, true);
+                    for t in &batch {
+                        finish_failed(&shared, &ctx, t, &e, true);
+                    }
                     continue;
                 }
             };
             shared.pool.lock().unwrap().note_start_cost(seconds);
             if ctx.recorder.enabled() {
+                let first = &batch[0];
                 ctx.recorder.record(
-                    &format!("endpoint-{}", task.endpoint),
-                    task.trace,
-                    Some(task.id),
+                    &format!("endpoint-{}", first.endpoint),
+                    first.trace,
+                    Some(first.id),
                     ctx.clock.now(),
-                    TraceKind::ColdStart { endpoint: task.endpoint, seconds, measured },
+                    TraceKind::ColdStart { endpoint: first.endpoint, seconds, measured },
                 );
             }
         }
+        // Exactly one result of this dispatch is charged the cold start
+        // (the first to finish — with the old serial loop that was the
+        // only task; pipelined, the claim rode the same start).
+        let mut cold_credit = cold;
 
-        // Materialize the input frame: inline tasks already carry it
-        // (a borrowed view of the queue frame); by-ref tasks resolve
-        // their DataRef through the endpoint's data fabric (§5). An
-        // unresolvable ref — evicted, expired, stale epoch, or no
-        // fabric attached — fails the task cleanly, never panics.
-        let input_frame: Result<Buffer, Error> = if !task.payload.reads_input() {
-            Ok(Buffer::empty())
-        } else {
-            // Scope the trace context over the resolve so fabric-level
-            // events (hit tier, peer retries, replica failover) land in
-            // this task's trace instead of as anonymous background noise.
-            let _trc = TraceCtx::enter(task.trace, task.id);
-            match (&task.input_ref, ctx.fabric.as_ref()) {
-                (Some(r), Some(fabric)) => fabric.resolve(r, ctx.clock.now()),
-                (Some(r), None) => Err(Error::Data(format!(
-                    "ref {} undeliverable: no data fabric attached to this endpoint",
-                    r.key
-                ))),
-                (None, _) => Ok(task.input.clone()),
-            }
-        };
-
-        // Deserialize input (borrowing the body from the shared frame —
-        // and only when the payload actually reads it), execute,
-        // serialize output (§4.3 worker).
-        let fail = |e: &Error| {
-            // Worker-side typed terminal: the concrete error kind
-            // (NotFound, Corrupt, Data, ...) is only known here, before
-            // the result is flattened into a Failed state + message.
-            if ctx.recorder.enabled() {
-                ctx.recorder.record(
-                    &format!("endpoint-{}", task.endpoint),
-                    task.trace,
-                    Some(task.id),
-                    ctx.clock.now(),
-                    TraceKind::TaskFailed { error: e.kind() },
-                );
-            }
-            (
-                TaskState::Failed,
-                crate::serialize::pack(&Value::Str(e.to_string()), 0).unwrap(),
-                0.0,
-            )
-        };
-        let (state, output, exec_s) = match &input_frame {
-            Ok(frame) => {
-                let input: Value = if task.payload.reads_input() {
-                    unpack(frame).unwrap_or(Value::Null)
-                } else {
-                    Value::Null
-                };
-                match executor.execute_in(shared.pool_id, slot, &task.payload, &input) {
-                    Ok((out, t)) => match crate::serialize::pack(&out, 0) {
-                        Ok(buf) => (TaskState::Success, buf, t),
-                        Err(e) => fail(&e),
-                    },
-                    Err(e) => fail(&e),
-                }
-            }
-            Err(e) => fail(e),
-        };
-
-        let done = ctx.clock.now();
-        ctx.latency.on_finished(task.id, done);
-        if ctx.recorder.enabled() {
-            ctx.recorder.record(
-                &format!("endpoint-{}", task.endpoint),
-                task.trace,
-                Some(task.id),
-                done,
-                TraceKind::WorkerFinished {
-                    endpoint: task.endpoint,
-                    success: state == TaskState::Success,
-                },
-            );
-        }
-        let released = shared.pool.lock().unwrap().release(slot, done);
-        released.expect("worker holds this slot busy; release must succeed");
-        // Wake siblings blocked on a transient acquire failure.
-        shared.cv.notify_all();
-
-        // §5 result offload (return-path mirror of ref dispatch): a
-        // successful output above the inline result cap is stored in the
-        // endpoint's fabric and returned as a compact `DataRef`
-        // (`"rref"`), keeping the bytes out of the result queues. No
-        // fabric, or a store failure on an already-successful execution,
-        // falls back to inline rather than failing the task.
-        let (output, output_ref) = match (&ctx.fabric, state) {
-            (Some(fabric), TaskState::Success) if output.len() > ctx.max_result_bytes => {
+        // Materialize each task's input frame: inline tasks already
+        // carry it (a borrowed view of the queue frame); by-ref tasks
+        // resolve their DataRef through the endpoint's data fabric (§5).
+        // An unresolvable ref — evicted, expired, stale epoch, or no
+        // fabric attached — fails that task cleanly (typed terminal,
+        // lease released) before the batch flushes, never panics.
+        let mut items: Vec<BatchItem> = Vec::with_capacity(batch.len());
+        let mut item_tasks: Vec<Arc<Task>> = Vec::with_capacity(batch.len());
+        for task in batch {
+            let input_frame: Result<Buffer, Error> = if !task.payload.reads_input() {
+                Ok(Buffer::empty())
+            } else {
+                // Scope the trace context over the resolve so fabric
+                // events (hit tier, peer retries, replica failover) land
+                // in this task's trace, not as anonymous background.
                 let _trc = TraceCtx::enter(task.trace, task.id);
-                match fabric.put(&format!("task-result:{}", task.id), output.clone(), done) {
-                    Ok(r) => (Buffer::empty(), Some(r)),
-                    Err(_) => (output, None),
+                match (&task.input_ref, ctx.fabric.as_ref()) {
+                    (Some(r), Some(fabric)) => fabric.resolve(r, ctx.clock.now()),
+                    (Some(r), None) => Err(Error::Data(format!(
+                        "ref {} undeliverable: no data fabric attached to this endpoint",
+                        r.key
+                    ))),
+                    (None, _) => Ok(task.input.clone()),
+                }
+            };
+            match input_frame {
+                Ok(frame) => {
+                    items.push(BatchItem { payload: task.payload.clone(), input: frame });
+                    item_tasks.push(task);
+                }
+                Err(e) => {
+                    let was_cold = std::mem::take(&mut cold_credit);
+                    finish_failed(&shared, &ctx, &task, &e, was_cold);
+                    let done = ctx.clock.now();
+                    shared
+                        .pool
+                        .lock()
+                        .unwrap()
+                        .release(slot, done)
+                        .expect("worker holds a lease on this slot; release must succeed");
+                    shared.cv.notify_all();
                 }
             }
-            _ => (output, None),
-        };
+        }
 
-        // Idle flush when the queue looks drained: nothing else is
-        // finishing soon, so don't sit on the tail of a burst.
-        let idle = shared.queue.lock().unwrap().is_empty();
-        shared.results.push(
-            TaskResult {
-                task: task.id,
-                state,
-                output,
-                output_ref,
-                exec_time_s: exec_s,
-                cold_start: cold,
+        if items.is_empty() {
+            continue;
+        }
+
+        // One flush, out-of-order completion: the backend invokes the
+        // closure once per item as replies land (a pipelined backend
+        // demuxes by frame id; the default impl degrades to serial
+        // execute_in). Successes arrive as *packed* output frames, so
+        // the return path has no re-serialization hop (§4.3 worker).
+        executor.execute_batch(
+            shared.pool_id,
+            slot,
+            &items,
+            &mut |i: usize, result: Result<(Buffer, f64)>| {
+                let task = &item_tasks[i];
+                let (state, output, exec_s) = match result {
+                    Ok((frame, t)) => (TaskState::Success, frame, t),
+                    Err(e) => {
+                        // Worker-side typed terminal: the concrete error
+                        // kind (WorkerExited, Timeout, ...) is only known
+                        // here, before the result is flattened into a
+                        // Failed state + message.
+                        if ctx.recorder.enabled() {
+                            ctx.recorder.record(
+                                &format!("endpoint-{}", task.endpoint),
+                                task.trace,
+                                Some(task.id),
+                                ctx.clock.now(),
+                                TraceKind::TaskFailed { error: e.kind() },
+                            );
+                        }
+                        (
+                            TaskState::Failed,
+                            crate::serialize::pack(&Value::Str(e.to_string()), 0).unwrap(),
+                            0.0,
+                        )
+                    }
+                };
+
+                let done = ctx.clock.now();
+                ctx.latency.on_finished(task.id, done);
+                if ctx.recorder.enabled() {
+                    ctx.recorder.record(
+                        &format!("endpoint-{}", task.endpoint),
+                        task.trace,
+                        Some(task.id),
+                        done,
+                        TraceKind::WorkerFinished {
+                            endpoint: task.endpoint,
+                            success: state == TaskState::Success,
+                        },
+                    );
+                }
+                shared
+                    .pool
+                    .lock()
+                    .unwrap()
+                    .release(slot, done)
+                    .expect("worker holds a lease on this slot; release must succeed");
+                // Wake siblings blocked on a transient acquire failure.
+                shared.cv.notify_all();
+
+                // §5 result offload (return-path mirror of ref dispatch):
+                // a successful output above the inline result cap is
+                // stored in the endpoint's fabric and returned as a
+                // compact `DataRef` (`"rref"`), keeping the bytes out of
+                // the result queues. No fabric, or a store failure on an
+                // already-successful execution, falls back to inline
+                // rather than failing the task.
+                let (output, output_ref) = match (&ctx.fabric, state) {
+                    (Some(fabric), TaskState::Success)
+                        if output.len() > ctx.max_result_bytes =>
+                    {
+                        let _trc = TraceCtx::enter(task.trace, task.id);
+                        match fabric.put(
+                            &format!("task-result:{}", task.id),
+                            output.clone(),
+                            done,
+                        ) {
+                            Ok(r) => (Buffer::empty(), Some(r)),
+                            Err(_) => (output, None),
+                        }
+                    }
+                    _ => (output, None),
+                };
+
+                // Idle flush when the queue looks drained: nothing else
+                // is finishing soon, so don't sit on the tail of a burst.
+                let idle = shared.queue.lock().unwrap().is_empty();
+                shared.results.push(
+                    TaskResult {
+                        task: task.id,
+                        state,
+                        output,
+                        output_ref,
+                        exec_time_s: exec_s,
+                        cold_start: std::mem::take(&mut cold_credit),
+                    },
+                    idle,
+                );
             },
-            idle,
         );
+
+        // Out-of-band start costs (lazily spawned or in-place restarted
+        // children) feed the same EWMA as measured `start_slot` costs,
+        // so predictive sizing sees every real spawn.
+        for seconds in executor.drain_start_costs(shared.pool_id) {
+            shared.pool.lock().unwrap().note_start_cost(seconds);
+        }
     }
 }
 
@@ -568,6 +660,9 @@ mod tests {
             recorder: FlightRecorder::disabled(),
             start_model: TABLE3_MODELS.lookup(SystemProfile::Local, ContainerTech::None),
             cold_start_scale: 0.001,
+            // Depth 1 keeps the timing-sensitive tests (e.g. 4 parallel
+            // sleeps across 4 workers) on strict task-per-dispatch.
+            pipeline_depth: 1,
         }
     }
 
@@ -603,6 +698,31 @@ mod tests {
         for r in recv_n(&rx, 2) {
             assert_eq!(r.state, TaskState::Success);
         }
+        m.shutdown();
+    }
+
+    /// Pipelined claim: one worker on one slot with depth 4 drains a
+    /// same-type burst by stacking leases, completes every task, and
+    /// charges exactly one cold start for the whole run.
+    #[test]
+    fn batch_claim_completes_all_tasks() {
+        let (tx, rx) = channel();
+        let mut c = ctx(tx, 32);
+        c.pipeline_depth = 4;
+        let m = Manager::spawn(1, 600.0, c, 14);
+        m.enqueue((0..8).map(|_| mk_task(Payload::Noop)).collect());
+        let results = recv_n(&rx, 8);
+        for r in &results {
+            assert_eq!(r.state, TaskState::Success);
+        }
+        assert_eq!(
+            results.iter().filter(|r| r.cold_start).count(),
+            1,
+            "one cold start charged across the batched run"
+        );
+        assert_eq!(m.cold_starts(), 1);
+        let v = m.view();
+        assert_eq!(v.available_slots, 1, "all leases released after the drain");
         m.shutdown();
     }
 

@@ -44,7 +44,9 @@ fn main() {
         "bench-batching" => bench_batching(),
         "artifacts" => artifacts(),
         // Internal: the process-executor child entrypoint. Parents
-        // spawn `funcx worker-child` and speak frames over its pipes.
+        // spawn `funcx worker-child` and speak v2 multiplexed frames
+        // (u32 len | u64 frame id | u8 kind) over its pipes, keeping
+        // up to `worker_pipeline_depth` requests in flight.
         "worker-child" => funcx::runtime::run_worker_child(),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);

@@ -20,7 +20,18 @@
 
 use crate::common::error::Result;
 use crate::common::task::Payload;
-use crate::serialize::Value;
+use crate::serialize::{pack, unpack, Buffer, Value};
+
+/// One unit of batched dispatch: the payload plus its already-packed
+/// input frame (empty when the payload reads no input). Carrying the
+/// packed [`Buffer`] — an O(1) refcounted view of the task's frame —
+/// keeps batch dispatch allocation-clean: no `Value` clone of the
+/// input, no intermediate map, no re-serialization on the way out.
+#[derive(Clone, Debug)]
+pub struct BatchItem {
+    pub payload: Payload,
+    pub input: Buffer,
+}
 
 /// Executes payloads in (real or virtual) container slots. Implementors
 /// must be `Send + Sync`: one executor is shared by every worker thread
@@ -45,6 +56,45 @@ pub trait WorkerExecutor: Send + Sync {
         payload: &Payload,
         input: &Value,
     ) -> Result<(Value, f64)>;
+
+    /// Run a batch of payloads in one slot, invoking `complete(index,
+    /// result)` exactly once per item — possibly out of submission
+    /// order (a pipelined backend demuxes replies by frame id). Each
+    /// success is the *packed* output frame plus exec seconds, so
+    /// callers forward results without a re-serialization hop.
+    ///
+    /// The default implementation degrades to serial [`execute_in`]
+    /// calls, which keeps single-exchange backends (the in-process
+    /// [`PayloadExecutor`](crate::runtime::PayloadExecutor), the sim)
+    /// working unchanged.
+    ///
+    /// [`execute_in`]: WorkerExecutor::execute_in
+    fn execute_batch(
+        &self,
+        pool: u64,
+        slot: usize,
+        items: &[BatchItem],
+        complete: &mut dyn FnMut(usize, Result<(Buffer, f64)>),
+    ) {
+        for (i, item) in items.iter().enumerate() {
+            let input = if item.payload.reads_input() && !item.input.is_empty() {
+                unpack(&item.input).unwrap_or(Value::Null)
+            } else {
+                Value::Null
+            };
+            let r = self
+                .execute_in(pool, slot, &item.payload, &input)
+                .and_then(|(out, exec_s)| Ok((pack(&out, 0)?, exec_s)));
+            complete(i, r);
+        }
+    }
+
+    /// Start costs the backend measured out of band — lazily spawned or
+    /// restarted children — since the last drain, for the caller's
+    /// warm-pool EWMA. Backends with no out-of-band spawns return none.
+    fn drain_start_costs(&self, _pool: u64) -> Vec<f64> {
+        Vec::new()
+    }
 
     /// Backend name for metrics/introspection.
     fn backend(&self) -> &'static str;
@@ -85,6 +135,30 @@ mod tests {
         let (out, _) = ex.execute_in(1, 0, &Payload::Noop, &Value::Null).unwrap();
         assert_eq!(out, Value::Null);
         assert_eq!(WorkerExecutor::backend(&ex), "in-process");
+    }
+
+    /// The default batch path degrades to serial execute_in calls and
+    /// hands back *packed* output frames, so single-exchange backends
+    /// ride the batched manager unchanged.
+    #[test]
+    fn default_batch_impl_serializes_and_completes_every_item() {
+        let ex = PayloadExecutor::bare();
+        let items: Vec<BatchItem> = (0..4)
+            .map(|i| BatchItem {
+                payload: Payload::Echo,
+                input: pack(&Value::Int(i), 0).unwrap(),
+            })
+            .collect();
+        let mut seen = Vec::new();
+        ex.execute_batch(1, 0, &items, &mut |i, r| {
+            let (frame, _) = r.unwrap();
+            seen.push((i, unpack(&frame).unwrap()));
+        });
+        assert_eq!(
+            seen,
+            (0..4).map(|i| (i as usize, Value::Int(i))).collect::<Vec<_>>()
+        );
+        assert!(ex.drain_start_costs(1).is_empty(), "no out-of-band spawns in-process");
     }
 
     #[test]

@@ -13,8 +13,10 @@ mod process;
 
 pub use artifacts::{spec, ArtifactSpec, ElemType, Manifest, ParamSpec, ARTIFACT_SPECS};
 pub use engine::{PjrtRuntime, TensorArg};
-pub use executor::WorkerExecutor;
+pub use executor::{BatchItem, WorkerExecutor};
 pub use payload::PayloadExecutor;
 pub use process::{
-    read_frame, run_worker_child, write_frame, ProcessExecutor, ProcessExecutorConfig,
+    match_reply, read_frame, run_worker_child, write_frame, write_frames, FrameOut, InFlight,
+    ProcessExecutor, ProcessExecutorConfig, KIND_READY, KIND_REPLY, KIND_REQUEST,
+    MAX_FRAME_BYTES,
 };

@@ -1,23 +1,43 @@
 //! The process-executor backend: every container slot is a real forked
-//! child process (`funcx worker-child`) speaking length-prefixed,
-//! facade-packed [`Value`] frames over stdin/stdout.
+//! child process (`funcx worker-child`) speaking frame-multiplexed v2
+//! wire frames over stdin/stdout.
 //!
-//! Protocol (all frames are `u32` little-endian length + packed body):
+//! v2 frame layout (all integers little-endian):
 //!
-//! - child → parent on boot: `{ready: true, pid}` — the parent measures
-//!   spawn → ready as the slot's cold-start cost.
-//! - parent → child per task: `{payload, input}`.
-//! - child → parent per task: `{ok: true, out, exec_s}` on success,
-//!   `{ok: false, err, exec_s}` when the payload itself failed.
+//! ```text
+//! u32 length | u64 frame id | u8 kind | body[length - 9]
+//! ```
 //!
-//! A child that exits or is killed mid-task surfaces as a typed
-//! [`Error::WorkerExited`] / [`Error::WorkerSignaled`]; a task that
-//! overruns the configured timeout kills the child and surfaces
-//! [`Error::Timeout`]. Children are killed on drop, so reaping a slot
-//! (or dropping the executor) never leaks processes or pipe fds.
+//! The length covers the id, kind, and body. Kinds:
+//!
+//! - `KIND_READY` (child → parent on boot): body is the packed
+//!   `{ready: true, pid}` map — the parent measures spawn → ready as the
+//!   slot's cold-start cost.
+//! - `KIND_REQUEST` (parent → child): body is the packed
+//!   `{payload}` meta immediately followed by the task's input frame as
+//!   a raw trailer (empty when the payload reads no input). Because the
+//!   facade header carries its own body length, the concatenation is
+//!   exactly the trailer codec's layout: the child splits it back with
+//!   one zero-copy [`unpack_with_trailer`](crate::serialize::unpack_with_trailer).
+//! - `KIND_REPLY` (child → parent): body is the packed
+//!   `{ok, err?, exec_s}` meta followed by the packed output frame as
+//!   the trailer (empty on failure). The reply echoes the request's
+//!   frame id, which is how the parent demuxes pipelined completions.
+//!
+//! A per-child writer keeps up to `pipeline_depth` request frames in
+//! flight, flushed as one vectored write straight from the caller's
+//! buffers — the parent never copies an input into an intermediate
+//! buffer or `Value`. Replies may complete out of order; a timeout fires
+//! only when the *oldest* outstanding frame exceeds the task budget. A
+//! child that exits, is killed, or desyncs fails exactly its in-flight
+//! frames typed ([`Error::WorkerExited`] / [`Error::WorkerSignaled`] /
+//! [`Error::Timeout`]) and is restarted in place — counted in
+//! `slot_restarts` — so a crash never poisons the slot. Children are
+//! killed on drop, so reaping a slot (or dropping the executor) never
+//! leaks processes or pipe fds.
 
 use std::collections::HashMap;
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::process::{Child, ChildStdin, Command, Stdio};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
@@ -26,26 +46,79 @@ use std::time::{Duration, Instant};
 
 use crate::common::error::{Error, Result};
 use crate::common::task::Payload;
-use crate::runtime::executor::WorkerExecutor;
-use crate::serialize::{pack, unpack, Buffer, Value, Wire};
+use crate::runtime::executor::{BatchItem, WorkerExecutor};
+use crate::serialize::{pack, unpack, unpack_with_trailer, Buffer, Value, Wire};
 
-/// Upper bound on a single frame body; a parent/child that claims more
-/// is desynced and gets treated as a protocol error.
-const MAX_FRAME_BYTES: usize = 64 << 20;
+/// Upper bound on a single frame; a parent/child that claims more is
+/// desynced and gets treated as a protocol error.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
 
-/// Write one length-prefixed frame.
-pub fn write_frame<W: Write>(w: &mut W, v: &Value) -> std::io::Result<()> {
-    let body = pack(v, 0)
-        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
-    let bytes = body.as_slice();
-    w.write_all(&(bytes.len() as u32).to_le_bytes())?;
-    w.write_all(bytes)?;
+/// Child → parent boot handshake frame.
+pub const KIND_READY: u8 = 0;
+/// Parent → child task request frame.
+pub const KIND_REQUEST: u8 = 1;
+/// Child → parent task reply frame (echoes the request's id).
+pub const KIND_REPLY: u8 = 2;
+
+/// One outbound frame: (frame id, kind, packed meta, raw trailer). The
+/// meta and trailer are written back to back as the frame body.
+pub type FrameOut<'a> = (u64, u8, &'a [u8], &'a [u8]);
+
+/// Write a batch of v2 frames with ONE vectored write: per frame a
+/// 13-byte header (length, id, kind), the packed meta, and the raw
+/// trailer straight from the caller's buffer — input bytes never pass
+/// through an intermediate copy on the way to the pipe.
+pub fn write_frames<W: Write>(w: &mut W, frames: &[FrameOut<'_>]) -> std::io::Result<()> {
+    if frames.is_empty() {
+        return Ok(());
+    }
+    let mut headers = Vec::with_capacity(frames.len());
+    for (id, kind, meta, trailer) in frames {
+        let n = 9 + meta.len() + trailer.len();
+        if n > MAX_FRAME_BYTES {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("frame of {n} bytes exceeds cap"),
+            ));
+        }
+        let mut h = [0u8; 13];
+        h[..4].copy_from_slice(&(n as u32).to_le_bytes());
+        h[4..12].copy_from_slice(&id.to_le_bytes());
+        h[12] = *kind;
+        headers.push(h);
+    }
+    let mut slices = Vec::with_capacity(frames.len() * 3);
+    for ((_, _, meta, trailer), h) in frames.iter().zip(&headers) {
+        slices.push(IoSlice::new(h));
+        slices.push(IoSlice::new(meta));
+        if !trailer.is_empty() {
+            slices.push(IoSlice::new(trailer));
+        }
+    }
+    // Manual write_all_vectored (the std one is unstable): one writev
+    // covers the common case; a short write falls back to write_all on
+    // the remaining tail.
+    let mut skip = w.write_vectored(&slices)?;
+    for s in &slices {
+        if skip >= s.len() {
+            skip -= s.len();
+            continue;
+        }
+        w.write_all(&s[skip..])?;
+        skip = 0;
+    }
     w.flush()
 }
 
-/// Read one length-prefixed frame. `Ok(None)` on clean EOF at a frame
-/// boundary; errors on truncation, oversized claims, or decode failure.
-pub fn read_frame<R: Read>(r: &mut R) -> std::io::Result<Option<Value>> {
+/// Write one v2 frame (see [`write_frames`] for the batched form).
+pub fn write_frame<W: Write>(w: &mut W, id: u64, kind: u8, body: &[u8]) -> std::io::Result<()> {
+    write_frames(w, &[(id, kind, body, &[])])
+}
+
+/// Read one v2 frame as `(id, kind, body)`. `Ok(None)` on clean EOF at
+/// a frame boundary; errors on truncated length prefixes, truncated
+/// bodies, oversized claims, or frames too short to carry an id + kind.
+pub fn read_frame<R: Read>(r: &mut R) -> std::io::Result<Option<(u64, u8, Buffer)>> {
     let mut len = [0u8; 4];
     let mut filled = 0;
     while filled < 4 {
@@ -67,17 +140,52 @@ pub fn read_frame<R: Read>(r: &mut R) -> std::io::Result<Option<Value>> {
             format!("frame of {n} bytes exceeds cap"),
         ));
     }
+    if n < 9 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame of {n} bytes too short for id and kind"),
+        ));
+    }
     let mut body = vec![0u8; n];
     r.read_exact(&mut body)?;
-    unpack(&Buffer::from_vec(body))
-        .map(Some)
-        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+    let id = u64::from_le_bytes(body[..8].try_into().expect("8 length bytes"));
+    let kind = body[8];
+    Ok(Some((id, kind, Buffer::from_vec(body).slice(9, n - 9))))
 }
 
-/// The `funcx worker-child` entrypoint: frame loop on stdin/stdout with
-/// a bare in-process payload executor. Returns the process exit code.
-/// Fault-injection payloads really do take the process down — that is
-/// their point.
+/// One outstanding request frame in a child's pipeline window.
+#[derive(Clone, Copy, Debug)]
+pub struct InFlight {
+    /// Index into the batch the frame belongs to.
+    pub item: usize,
+    /// The frame id the reply must echo.
+    pub id: u64,
+    /// When the request was flushed (per-frame deadline anchor).
+    pub sent: Instant,
+}
+
+/// Demux one received frame against the in-flight window: the position
+/// of the matching outstanding frame, or a typed protocol error for a
+/// non-reply kind or an unknown id. A duplicate reply is unknown by
+/// construction — an id leaves the window the moment it completes — so
+/// duplicates fail the same typed way instead of corrupting a slot.
+pub fn match_reply(pending: &[InFlight], id: u64, kind: u8) -> Result<usize> {
+    if kind != KIND_REPLY {
+        return Err(Error::Runtime(format!(
+            "worker protocol desync: unexpected frame kind {kind}"
+        )));
+    }
+    pending.iter().position(|f| f.id == id).ok_or_else(|| {
+        Error::Runtime(format!(
+            "worker protocol desync: reply for unknown or duplicate frame id {id}"
+        ))
+    })
+}
+
+/// The `funcx worker-child` entrypoint: v2 frame loop on stdin/stdout
+/// with a bare in-process payload executor. Returns the process exit
+/// code. Fault-injection payloads really do take the process down —
+/// that is their point.
 pub fn run_worker_child() -> i32 {
     let executor = crate::runtime::PayloadExecutor::bare();
     let stdin = std::io::stdin();
@@ -89,38 +197,64 @@ pub fn run_worker_child() -> i32 {
         ("ready", Value::Bool(true)),
         ("pid", Value::Int(std::process::id() as i64)),
     ]);
-    if write_frame(&mut output, &ready).is_err() {
+    let Ok(ready) = pack(&ready, 0) else { return 1 };
+    if write_frame(&mut output, 0, KIND_READY, ready.as_slice()).is_err() {
         return 1;
     }
 
     loop {
-        let frame = match read_frame(&mut input) {
-            Ok(Some(v)) => v,
+        let (id, kind, body) = match read_frame(&mut input) {
+            Ok(Some(f)) => f,
             Ok(None) => return 0, // parent closed stdin: clean shutdown
             Err(_) => return 1,
         };
-        let payload = match frame.get("payload").map(Payload::from_value) {
+        if kind != KIND_REQUEST {
+            return 1; // desynced parent: bail so it reaps a typed status
+        }
+        let Ok((meta, trailer)) = unpack_with_trailer(&body) else { return 1 };
+        let payload = match meta.get("payload").map(Payload::from_value) {
             Some(Ok(p)) => p,
             _ => return 1,
         };
-        let task_input = frame.get("input").cloned().unwrap_or(Value::Null);
         match payload {
             Payload::Exit(code) => std::process::exit(code),
             Payload::Abort => std::process::abort(),
             p => {
-                let reply = match executor.execute(&p, &task_input) {
-                    Ok((out, exec_s)) => Value::map([
-                        ("ok", Value::Bool(true)),
-                        ("out", out),
-                        ("exec_s", Value::Float(exec_s)),
-                    ]),
-                    Err(e) => Value::map([
-                        ("ok", Value::Bool(false)),
-                        ("err", Value::Str(e.to_string())),
-                        ("exec_s", Value::Float(0.0)),
-                    ]),
+                let task_input = if trailer.is_empty() {
+                    Value::Null
+                } else {
+                    unpack(&trailer).unwrap_or(Value::Null)
                 };
-                if write_frame(&mut output, &reply).is_err() {
+                let (meta, out_frame) = match executor.execute(&p, &task_input) {
+                    Ok((out, exec_s)) => match pack(&out, 0) {
+                        Ok(frame) => (
+                            Value::map([
+                                ("ok", Value::Bool(true)),
+                                ("exec_s", Value::Float(exec_s)),
+                            ]),
+                            frame,
+                        ),
+                        Err(e) => (
+                            Value::map([
+                                ("ok", Value::Bool(false)),
+                                ("err", Value::Str(e.to_string())),
+                                ("exec_s", Value::Float(0.0)),
+                            ]),
+                            Buffer::empty(),
+                        ),
+                    },
+                    Err(e) => (
+                        Value::map([
+                            ("ok", Value::Bool(false)),
+                            ("err", Value::Str(e.to_string())),
+                            ("exec_s", Value::Float(0.0)),
+                        ]),
+                        Buffer::empty(),
+                    ),
+                };
+                let Ok(meta) = pack(&meta, 0) else { return 1 };
+                let reply = [(id, KIND_REPLY, meta.as_slice(), out_frame.as_slice())];
+                if write_frames(&mut output, &reply).is_err() {
                     return 1;
                 }
             }
@@ -140,13 +274,44 @@ fn status_error(status: std::process::ExitStatus) -> Error {
     Error::WorkerExited { code: status.code().unwrap_or(-1) }
 }
 
+/// Re-materialize a typed worker error for each additional in-flight
+/// frame that died with the child ([`Error`] is not `Clone`).
+fn replicate(e: &Error) -> Error {
+    match e {
+        Error::WorkerExited { code } => Error::WorkerExited { code: *code },
+        Error::WorkerSignaled { signal } => Error::WorkerSignaled { signal: *signal },
+        Error::Timeout(m) => Error::Timeout(m.clone()),
+        Error::Runtime(m) => Error::Runtime(m.clone()),
+        other => Error::Shutdown(other.to_string()),
+    }
+}
+
+/// Parse a reply body (`{ok, err?, exec_s}` meta + packed output
+/// trailer). `None` means the body did not parse — a protocol desync —
+/// unlike a well-formed `{ok: false}`, which is a healthy task-level
+/// failure.
+fn parse_reply(body: &Buffer) -> Option<Result<(Buffer, f64)>> {
+    let (meta, out) = unpack_with_trailer(body).ok()?;
+    let exec_s = meta.get("exec_s").and_then(Value::as_float).unwrap_or(0.0);
+    if matches!(meta.get("ok"), Some(Value::Bool(true))) {
+        Some(Ok((out, exec_s)))
+    } else {
+        let msg = meta
+            .get("err")
+            .and_then(Value::as_str)
+            .unwrap_or("unknown worker error")
+            .to_string();
+        Some(Err(Error::TaskFailed(msg)))
+    }
+}
+
 /// One live worker child: the process, its stdin, and a reader thread
 /// draining stdout frames into a channel (so the parent can wait with a
 /// timeout — blocking reads on pipes have none).
 struct WorkerChild {
     child: Child,
     stdin: ChildStdin,
-    frames: mpsc::Receiver<Value>,
+    frames: mpsc::Receiver<(u64, u8, Buffer)>,
 }
 
 impl WorkerChild {
@@ -174,10 +339,14 @@ pub struct ProcessExecutorConfig {
     /// benches pass `env!("CARGO_BIN_EXE_funcx")`; embedders default to
     /// the current executable.
     pub binary: std::path::PathBuf,
-    /// Per-task wall-clock budget; an overrun kills the child.
+    /// Per-task wall-clock budget, measured per frame from its flush; an
+    /// overrun by the *oldest* outstanding frame kills the child.
     pub task_timeout_s: f64,
     /// Spawn → ready-frame handshake budget.
     pub start_timeout_s: f64,
+    /// In-flight request frames the per-child writer keeps outstanding
+    /// (the v2 pipeline window). 1 restores strict request/reply.
+    pub pipeline_depth: usize,
 }
 
 impl ProcessExecutorConfig {
@@ -186,6 +355,7 @@ impl ProcessExecutorConfig {
             binary: binary.into(),
             task_timeout_s: 300.0,
             start_timeout_s: 30.0,
+            pipeline_depth: 4,
         }
     }
 
@@ -196,7 +366,8 @@ impl ProcessExecutorConfig {
 }
 
 /// The process-backed [`WorkerExecutor`]: one child process per started
-/// `(pool, slot)` key, measured cold starts, kill-on-drop.
+/// `(pool, slot)` key, measured cold starts, pipelined v2 exchanges,
+/// restart-in-place on faults, kill-on-drop.
 pub struct ProcessExecutor {
     cfg: ProcessExecutorConfig,
     workers: Mutex<HashMap<(u64, usize), WorkerChild>>,
@@ -204,6 +375,12 @@ pub struct ProcessExecutor {
     stopped: AtomicU64,
     timeouts: AtomicU64,
     worker_faults: AtomicU64,
+    slot_restarts: AtomicU64,
+    next_frame_id: AtomicU64,
+    /// Start costs measured outside `start_slot` (lazy spawns and
+    /// in-place restarts), parked per pool until the manager drains
+    /// them into its warm-pool EWMA via `drain_start_costs`.
+    lazy_costs: Mutex<HashMap<u64, Vec<f64>>>,
 }
 
 impl ProcessExecutor {
@@ -215,6 +392,9 @@ impl ProcessExecutor {
             stopped: AtomicU64::new(0),
             timeouts: AtomicU64::new(0),
             worker_faults: AtomicU64::new(0),
+            slot_restarts: AtomicU64::new(0),
+            next_frame_id: AtomicU64::new(1),
+            lazy_costs: Mutex::new(HashMap::new()),
         }
     }
 
@@ -238,9 +418,19 @@ impl ProcessExecutor {
         self.worker_faults.load(Ordering::Relaxed)
     }
 
+    /// Children restarted in place after a timeout kill, crash, or
+    /// protocol desync — the slot keeps serving instead of going cold.
+    pub fn slot_restarts(&self) -> u64 {
+        self.slot_restarts.load(Ordering::Relaxed)
+    }
+
     /// Currently live children.
     pub fn active_workers(&self) -> usize {
         self.workers.lock().unwrap().len()
+    }
+
+    fn note_lazy_cost(&self, pool: u64, seconds: f64) {
+        self.lazy_costs.lock().unwrap().entry(pool).or_default().push(seconds);
     }
 
     /// Fork a child and wait for its ready frame; returns the child and
@@ -259,8 +449,8 @@ impl ProcessExecutor {
         std::thread::spawn(move || {
             // Drain frames until EOF/error; dropping `tx` disconnects
             // the receiver, which the parent reads as "child is gone".
-            while let Ok(Some(v)) = read_frame(&mut stdout) {
-                if tx.send(v).is_err() {
+            while let Ok(Some(frame)) = read_frame(&mut stdout) {
+                if tx.send(frame).is_err() {
                     break;
                 }
             }
@@ -268,7 +458,10 @@ impl ProcessExecutor {
         let worker = WorkerChild { child, stdin, frames: rx };
         let start_budget = Duration::from_secs_f64(self.cfg.start_timeout_s.max(0.001));
         match worker.frames.recv_timeout(start_budget) {
-            Ok(ready) if ready.get("ready").is_some() => {
+            Ok((_, kind, body))
+                if kind == KIND_READY
+                    && unpack(&body).is_ok_and(|v| v.get("ready").is_some()) =>
+            {
                 self.spawned.fetch_add(1, Ordering::Relaxed);
                 Ok((worker, t0.elapsed().as_secs_f64()))
             }
@@ -287,29 +480,36 @@ impl ProcessExecutor {
         }
     }
 
-    /// Run one framed request/response exchange against a live child.
-    fn exchange(&self, worker: &mut WorkerChild, req: &Value) -> Result<Value> {
-        if let Err(e) = write_frame(&mut worker.stdin, req) {
-            // Write failure means the child is dead or dying; reaping
-            // happens in the caller (which owns the worker).
-            return Err(Error::Io(e));
-        }
-        let budget = Duration::from_secs_f64(self.cfg.task_timeout_s.max(0.001));
-        match worker.frames.recv_timeout(budget) {
-            Ok(v) => Ok(v),
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                self.timeouts.fetch_add(1, Ordering::Relaxed);
-                Err(Error::Timeout(format!(
-                    "task exceeded {:.1}s in worker child",
-                    self.cfg.task_timeout_s
-                )))
+    /// Restart a slot's child in place after a kill: the replacement is
+    /// live before the next task arrives, so a crash or timeout never
+    /// poisons the slot. Counted in `slot_restarts`; the measured
+    /// respawn cost is surfaced via `drain_start_costs`. `None` when the
+    /// respawn itself failed (the slot then goes cold and the next
+    /// acquire re-forks lazily).
+    fn respawn(&self, pool: u64) -> Option<WorkerChild> {
+        match self.spawn_child() {
+            Ok((w, seconds)) => {
+                self.slot_restarts.fetch_add(1, Ordering::Relaxed);
+                self.note_lazy_cost(pool, seconds);
+                Some(w)
             }
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                // Child closed stdout: it exited or was killed. The
-                // caller reaps it for the precise typed status.
-                Err(Error::Shutdown("worker child closed its pipe".into()))
-            }
+            Err(_) => None,
         }
+    }
+
+    /// Fail every in-flight frame with the dead child's typed status,
+    /// then restart the slot in place. `None` when the respawn failed.
+    fn restart_slot(
+        &self,
+        pool: u64,
+        status: &Error,
+        pending: &mut Vec<InFlight>,
+        complete: &mut dyn FnMut(usize, Result<(Buffer, f64)>),
+    ) -> Option<WorkerChild> {
+        for f in pending.drain(..) {
+            complete(f.item, Err(replicate(status)));
+        }
+        self.respawn(pool)
     }
 }
 
@@ -334,45 +534,235 @@ impl WorkerExecutor for ProcessExecutor {
         payload: &Payload,
         input: &Value,
     ) -> Result<(Value, f64)> {
-        // Take the child out of the map for the duration of the task so
-        // one slow task never serializes the other workers.
-        let mut worker = match self.workers.lock().unwrap().remove(&(pool, slot)) {
+        let input_frame =
+            if payload.reads_input() { pack(input, 0)? } else { Buffer::empty() };
+        let items = [BatchItem { payload: payload.clone(), input: input_frame }];
+        let mut out = None;
+        self.execute_batch(pool, slot, &items, &mut |_, r| out = Some(r));
+        match out.expect("a single-item batch always completes its item") {
+            Ok((frame, exec_s)) => Ok((unpack(&frame)?, exec_s)),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// The pipelined engine. Claims the slot's child for the duration of
+    /// the batch, keeps up to `pipeline_depth` request frames in flight
+    /// (flushed as one vectored write each round), and completes items
+    /// out of order as replies land. The timeout clock always runs
+    /// against the oldest outstanding frame; any kill restarts the child
+    /// in place and the unsent remainder continues on the replacement.
+    fn execute_batch(
+        &self,
+        pool: u64,
+        slot: usize,
+        items: &[BatchItem],
+        complete: &mut dyn FnMut(usize, Result<(Buffer, f64)>),
+    ) {
+        if items.is_empty() {
+            return;
+        }
+        let key = (pool, slot);
+        let depth = self.cfg.pipeline_depth.max(1);
+        let budget = Duration::from_secs_f64(self.cfg.task_timeout_s.max(0.001));
+        let existing = self.workers.lock().unwrap().remove(&key);
+        let mut worker = match existing {
             Some(w) => w,
-            None => {
-                // Lazily started slot: pay (and report via the typed
-                // path below, not here) the spawn cost.
-                self.spawn_child()?.0
-            }
+            None => match self.spawn_child() {
+                Ok((w, seconds)) => {
+                    // Lazily started slot: the measured cost feeds the
+                    // caller's warm-pool EWMA via drain_start_costs.
+                    self.note_lazy_cost(pool, seconds);
+                    w
+                }
+                Err(e) => {
+                    let mut first = Some(e);
+                    for i in 0..items.len() {
+                        let err = match first.take() {
+                            Some(e) => e,
+                            None => Error::Shutdown("worker child failed to spawn".into()),
+                        };
+                        complete(i, Err(err));
+                    }
+                    return;
+                }
+            },
         };
-        let req = Value::map([("payload", payload.to_value()), ("input", input.clone())]);
-        match self.exchange(&mut worker, &req) {
-            Ok(reply) => {
-                // Healthy exchange: return the slot to the map.
-                self.workers.lock().unwrap().insert((pool, slot), worker);
-                let ok = matches!(reply.get("ok"), Some(Value::Bool(true)));
-                let exec_s = reply.get("exec_s").and_then(Value::as_float).unwrap_or(0.0);
-                if ok {
-                    Ok((reply.get("out").cloned().unwrap_or(Value::Null), exec_s))
-                } else {
-                    let msg = reply
-                        .get("err")
-                        .and_then(Value::as_str)
-                        .unwrap_or("unknown worker error")
-                        .to_string();
-                    Err(Error::TaskFailed(msg))
+
+        let mut next = 0usize; // first item not yet flushed
+        let mut pending: Vec<InFlight> = Vec::with_capacity(depth);
+        let mut intact = true; // stdin still writable
+        'drive: while next < items.len() || !pending.is_empty() {
+            // Fill the window and flush it as ONE vectored write: each
+            // frame body is the packed {payload} meta followed by the
+            // task's input buffer as a raw trailer.
+            if intact && next < items.len() && pending.len() < depth {
+                let n = (depth - pending.len()).min(items.len() - next);
+                let mut metas: Vec<(usize, u64, Buffer)> = Vec::with_capacity(n);
+                for (k, item) in items[next..next + n].iter().enumerate() {
+                    let meta = Value::map([("payload", item.payload.to_value())]);
+                    match pack(&meta, 0) {
+                        Ok(frame) => {
+                            let id = self.next_frame_id.fetch_add(1, Ordering::Relaxed);
+                            metas.push((next + k, id, frame));
+                        }
+                        Err(e) => complete(next + k, Err(e)),
+                    }
+                }
+                next += n;
+                let frames: Vec<FrameOut<'_>> = metas
+                    .iter()
+                    .map(|(idx, id, meta)| {
+                        (*id, KIND_REQUEST, meta.as_slice(), items[*idx].input.as_slice())
+                    })
+                    .collect();
+                intact = write_frames(&mut worker.stdin, &frames).is_ok();
+                let sent = Instant::now();
+                for (idx, id, _) in &metas {
+                    // A failed write still enqueues the frames: the
+                    // child is dead or dying, and the reply loop below
+                    // surfaces its precise typed status (any buffered
+                    // replies drain first, then the disconnect).
+                    pending.push(InFlight { item: *idx, id: *id, sent });
                 }
             }
-            Err(Error::Timeout(m)) => {
-                // Kill the overrunning child; the slot is poisoned.
-                worker.reap();
-                Err(Error::Timeout(m))
-            }
-            Err(_) => {
-                // Pipe-level failure: reap for the precise exit status.
+
+            let Some(&InFlight { item: oldest, sent, .. }) = pending.first() else {
+                if intact {
+                    continue 'drive; // nothing in flight; next round flushes more
+                }
+                // Broken stdin with nothing in flight: reap the typed
+                // status and restart before sending the remainder.
                 self.worker_faults.fetch_add(1, Ordering::Relaxed);
-                Err(worker.reap())
+                let status = worker.reap();
+                match self.restart_slot(pool, &status, &mut pending, complete) {
+                    Some(w) => {
+                        worker = w;
+                        intact = true;
+                        continue 'drive;
+                    }
+                    None => {
+                        for i in next..items.len() {
+                            complete(i, Err(replicate(&status)));
+                        }
+                        return;
+                    }
+                }
+            };
+
+            let elapsed = sent.elapsed();
+            if elapsed >= budget {
+                // The oldest frame overran its budget: kill the child,
+                // fail the overrunner as Timeout and every other
+                // in-flight frame with the reaped typed status, then
+                // restart the slot in place.
+                self.timeouts.fetch_add(1, Ordering::Relaxed);
+                pending.remove(0);
+                complete(
+                    oldest,
+                    Err(Error::Timeout(format!(
+                        "task exceeded {:.1}s in worker child",
+                        self.cfg.task_timeout_s
+                    ))),
+                );
+                let status = worker.reap();
+                match self.restart_slot(pool, &status, &mut pending, complete) {
+                    Some(w) => {
+                        worker = w;
+                        intact = true;
+                        continue 'drive;
+                    }
+                    None => {
+                        for i in next..items.len() {
+                            complete(i, Err(replicate(&status)));
+                        }
+                        return;
+                    }
+                }
+            }
+
+            let received = worker.frames.recv_timeout(budget - elapsed);
+            match received {
+                Ok((id, kind, body)) => match match_reply(&pending, id, kind) {
+                    Ok(pos) => {
+                        let InFlight { item, .. } = pending.remove(pos);
+                        match parse_reply(&body) {
+                            Some(result) => complete(item, result),
+                            None => {
+                                // The reply matched an in-flight id but
+                                // its body didn't parse: the stream is
+                                // desynced beyond recovery.
+                                let status = Error::Runtime(
+                                    "worker protocol desync: unparseable reply body".into(),
+                                );
+                                complete(item, Err(replicate(&status)));
+                                self.worker_faults.fetch_add(1, Ordering::Relaxed);
+                                let _ = worker.reap();
+                                match self.restart_slot(pool, &status, &mut pending, complete)
+                                {
+                                    Some(w) => {
+                                        worker = w;
+                                        intact = true;
+                                    }
+                                    None => {
+                                        for i in next..items.len() {
+                                            complete(i, Err(replicate(&status)));
+                                        }
+                                        return;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    Err(status) => {
+                        // Unknown id, duplicate id, or non-reply kind:
+                        // a desynced child cannot be trusted with the
+                        // rest of the window.
+                        self.worker_faults.fetch_add(1, Ordering::Relaxed);
+                        let _ = worker.reap();
+                        match self.restart_slot(pool, &status, &mut pending, complete) {
+                            Some(w) => {
+                                worker = w;
+                                intact = true;
+                            }
+                            None => {
+                                for i in next..items.len() {
+                                    complete(i, Err(replicate(&status)));
+                                }
+                                return;
+                            }
+                        }
+                    }
+                },
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    // Loop re-checks the oldest frame's deadline.
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    // Child exited or was killed mid-flight: reap the
+                    // precise typed status, fail exactly the in-flight
+                    // frames, restart the slot in place.
+                    self.worker_faults.fetch_add(1, Ordering::Relaxed);
+                    let status = worker.reap();
+                    match self.restart_slot(pool, &status, &mut pending, complete) {
+                        Some(w) => {
+                            worker = w;
+                            intact = true;
+                        }
+                        None => {
+                            for i in next..items.len() {
+                                complete(i, Err(replicate(&status)));
+                            }
+                            return;
+                        }
+                    }
+                }
             }
         }
+        // Healthy end of batch: the live child returns to the slot map.
+        self.workers.lock().unwrap().insert(key, worker);
+    }
+
+    fn drain_start_costs(&self, pool: u64) -> Vec<f64> {
+        self.lazy_costs.lock().unwrap().remove(&pool).unwrap_or_default()
     }
 
     fn backend(&self) -> &'static str {
@@ -393,35 +783,66 @@ mod tests {
     use std::io::Cursor;
 
     #[test]
-    fn frame_roundtrip() {
-        let v = Value::map([
-            ("payload", Payload::Sleep(0.25).to_value()),
-            ("input", Value::Int(42)),
-        ]);
+    fn frame_roundtrip_carries_id_kind_and_trailer() {
+        let meta =
+            pack(&Value::map([("payload", Payload::Sleep(0.25).to_value())]), 0).unwrap();
+        let input = pack(&Value::Int(42), 0).unwrap();
         let mut buf = Vec::new();
-        write_frame(&mut buf, &v).unwrap();
+        write_frames(&mut buf, &[(7, KIND_REQUEST, meta.as_slice(), input.as_slice())])
+            .unwrap();
         let mut r = Cursor::new(buf);
-        let back = read_frame(&mut r).unwrap().expect("one frame");
+        let (id, kind, body) = read_frame(&mut r).unwrap().expect("one frame");
+        assert_eq!((id, kind), (7, KIND_REQUEST));
+        // The meta ‖ trailer concatenation is exactly the trailer
+        // codec's layout: one zero-copy split recovers both halves.
+        let (back, trailer) = unpack_with_trailer(&body).unwrap();
         let p = Payload::from_value(back.get("payload").unwrap()).unwrap();
         assert_eq!(p, Payload::Sleep(0.25));
-        assert_eq!(back.get("input"), Some(&Value::Int(42)));
+        assert_eq!(unpack(&trailer).unwrap(), Value::Int(42));
+        assert!(trailer.same_allocation(&body), "trailer is a view, not a copy");
         // Clean EOF after the frame.
         assert!(read_frame(&mut r).unwrap().is_none());
     }
 
     #[test]
-    fn frame_rejects_truncation_and_oversize() {
+    fn batched_frames_arrive_in_order_and_intact() {
+        let metas: Vec<Buffer> =
+            (0..3).map(|i| pack(&Value::Int(i), 0).unwrap()).collect();
+        let frames: Vec<FrameOut<'_>> = metas
+            .iter()
+            .enumerate()
+            .map(|(i, m)| (10 + i as u64, KIND_REQUEST, m.as_slice(), &[] as &[u8]))
+            .collect();
+        let mut buf = Vec::new();
+        write_frames(&mut buf, &frames).unwrap();
+        let mut r = Cursor::new(buf);
+        for i in 0..3u64 {
+            let (id, kind, body) = read_frame(&mut r).unwrap().expect("frame");
+            assert_eq!((id, kind), (10 + i, KIND_REQUEST));
+            assert_eq!(unpack(&body).unwrap(), Value::Int(i as i64));
+        }
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn frame_rejects_truncation_oversize_and_short_claims() {
         // Truncated length prefix.
         let mut r = Cursor::new(vec![1u8, 0]);
         assert!(read_frame(&mut r).is_err());
         // Truncated body.
+        let body = pack(&Value::Int(7), 0).unwrap();
         let mut buf = Vec::new();
-        write_frame(&mut buf, &Value::Int(7)).unwrap();
+        write_frame(&mut buf, 1, KIND_REPLY, body.as_slice()).unwrap();
         buf.truncate(buf.len() - 1);
         let mut r = Cursor::new(buf);
         assert!(read_frame(&mut r).is_err());
         // Oversized claim.
         let mut r = Cursor::new(((MAX_FRAME_BYTES + 1) as u32).to_le_bytes().to_vec());
+        assert!(read_frame(&mut r).is_err());
+        // Too short to carry a frame id and kind.
+        let mut short = 5u32.to_le_bytes().to_vec();
+        short.extend_from_slice(&[0u8; 5]);
+        let mut r = Cursor::new(short);
         assert!(read_frame(&mut r).is_err());
     }
 

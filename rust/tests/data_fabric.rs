@@ -274,7 +274,10 @@ fn cross_shard_chain_moves_zero_payload_bytes_through_the_service() {
     let store_consumer =
         Arc::new(TieredStore::new(e_consumer, TieredConfig::default()).unwrap());
     let fabric_consumer = Arc::new(DataFabric::new(store_consumer.clone()));
-    fabric_consumer.connect_peer(e_owner, store_owner.clone());
+    // No hand-wired peer mesh: the consumer discovers the owner's store
+    // lazily from the registry on its first fabric miss (ROADMAP item:
+    // endpoint-to-endpoint peering without manual connect_peer calls).
+    fabric_consumer.with_registry(svc.registry.clone());
     let (fwd2, agent2) = link();
     let h2 = EndpointBuilder::new()
         .config(EndpointConfig {
@@ -323,6 +326,10 @@ fn cross_shard_chain_moves_zero_payload_bytes_through_the_service() {
     assert!(
         fabric_consumer.stats.local_hits.load(Relaxed) >= 1,
         "C's input must be a local hit in the consumer's store"
+    );
+    assert!(
+        fabric_consumer.stats.lazy_peers.load(Relaxed) >= 1,
+        "the owner's store was discovered lazily through the registry"
     );
 
     // Eager result GC still closes the loop across shards: A's and B's

@@ -63,6 +63,7 @@ fn run_ref_task_traced(
         recorder: recorder.clone(),
         start_model: TABLE3_MODELS.lookup(SystemProfile::Local, ContainerTech::None),
         cold_start_scale: 0.001,
+        pipeline_depth: 1,
     };
     let m = Manager::spawn(1, 600.0, ctx, 1);
     let mut task = Task::new(

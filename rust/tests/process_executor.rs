@@ -5,9 +5,10 @@
 //! one child per slot with a measured (not sampled) start cost; and the
 //! backend never leaks child processes or pipe fds.
 
+use std::io::Cursor;
 use std::sync::mpsc::channel;
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use funcx::common::config::EndpointConfig;
 use funcx::common::ids::{EndpointId, FunctionId, UserId};
@@ -17,7 +18,10 @@ use funcx::common::time::WallClock;
 use funcx::containers::{ContainerTech, SystemProfile, TABLE3_MODELS};
 use funcx::endpoint::{Manager, ManagerCtx};
 use funcx::metrics::{FlightRecorder, LatencyBreakdown, TraceKind};
-use funcx::runtime::{ProcessExecutor, ProcessExecutorConfig, WorkerExecutor};
+use funcx::runtime::{
+    match_reply, read_frame, write_frames, BatchItem, FrameOut, InFlight, ProcessExecutor,
+    ProcessExecutorConfig, WorkerExecutor, KIND_REPLY, KIND_REQUEST, MAX_FRAME_BYTES,
+};
 use funcx::serialize::{pack, unpack, Buffer, Value};
 use funcx::Error;
 
@@ -74,10 +78,14 @@ fn exit_task_fails_worker_exited() {
         other => panic!("expected WorkerExited, got {other:?}"),
     }
     assert_eq!(ex.worker_faults(), 1);
-    assert_eq!(ex.active_workers(), 0, "crashed slot must not return to the map");
-    // The slot recovers: the next task on it forks a fresh child.
+    // The poisoned slot is restarted in place, not abandoned: a fresh
+    // child already sits in the map, counted as a restart.
+    assert_eq!(ex.active_workers(), 1, "crashed slot restarts in place");
+    assert_eq!(ex.slot_restarts(), 1);
+    // The restarted child serves the next task without another fork.
     let (out, _) = ex.execute_in(3, 0, &Payload::Echo, &Value::Int(1)).unwrap();
     assert_eq!(out, Value::Int(1));
+    assert_eq!(ex.spawned(), 2, "one original fork + one in-place restart");
 }
 
 #[cfg(unix)]
@@ -107,7 +115,10 @@ fn overrunning_task_times_out_and_kills_child() {
     }
     assert!(t0.elapsed() < Duration::from_secs(5), "timeout must not wait the sleep out");
     assert_eq!(ex.timeouts(), 1);
-    assert_eq!(ex.active_workers(), 0, "the overrunning child is killed, not reused");
+    // The overrunning child is killed, and the slot restarts in place
+    // rather than leaking out of the worker map poisoned.
+    assert_eq!(ex.active_workers(), 1, "killed slot restarts in place");
+    assert_eq!(ex.slot_restarts(), 1);
 }
 
 /// The backend never leaks pipe fds: after spawning, crashing, timing
@@ -153,6 +164,182 @@ fn no_fd_leak_across_worker_lifecycles() {
     );
 }
 
+/// Hostile v2 frames fail typed, never hang: truncated length
+/// prefixes, truncated bodies, oversize claims, and frames too short
+/// to carry a frame id + kind.
+#[test]
+fn hostile_frames_fail_typed_never_hang() {
+    // Truncated length prefix (2 of 4 bytes).
+    assert!(read_frame(&mut Cursor::new(vec![9u8, 0])).is_err());
+    // Truncated body: claims 100 bytes, carries 10.
+    let mut buf = 100u32.to_le_bytes().to_vec();
+    buf.extend_from_slice(&[0u8; 10]);
+    assert!(read_frame(&mut Cursor::new(buf)).is_err());
+    // Oversize claim fails before anything that size is read.
+    let claim = ((MAX_FRAME_BYTES + 1) as u32).to_le_bytes().to_vec();
+    assert!(read_frame(&mut Cursor::new(claim)).is_err());
+    // Too short to carry the u64 id + u8 kind.
+    let mut short = 8u32.to_le_bytes().to_vec();
+    short.extend_from_slice(&[0u8; 8]);
+    assert!(read_frame(&mut Cursor::new(short)).is_err());
+}
+
+/// Reply demux against the in-flight window: out-of-order completion
+/// is the normal case; unknown ids, duplicate ids (already completed),
+/// and non-reply kinds all fail typed instead of corrupting a slot.
+#[test]
+fn reply_demux_rejects_unknown_duplicate_and_bad_kind() {
+    let t = Instant::now();
+    let mut pending = vec![
+        InFlight { item: 0, id: 5, sent: t },
+        InFlight { item: 1, id: 6, sent: t },
+        InFlight { item: 2, id: 7, sent: t },
+    ];
+    // Newest-first reply: out of order is fine.
+    let pos = match_reply(&pending, 7, KIND_REPLY).unwrap();
+    assert_eq!(pending.remove(pos).item, 2);
+    // Unknown id.
+    match match_reply(&pending, 99, KIND_REPLY) {
+        Err(Error::Runtime(m)) => assert!(m.contains("unknown or duplicate"), "{m}"),
+        other => panic!("expected typed desync, got {other:?}"),
+    }
+    // Duplicate: id 7 already left the window when it completed.
+    match match_reply(&pending, 7, KIND_REPLY) {
+        Err(Error::Runtime(m)) => assert!(m.contains("unknown or duplicate"), "{m}"),
+        other => panic!("expected typed desync, got {other:?}"),
+    }
+    // Non-reply kind.
+    match match_reply(&pending, 5, KIND_REQUEST) {
+        Err(Error::Runtime(m)) => assert!(m.contains("unexpected frame kind"), "{m}"),
+        other => panic!("expected typed desync, got {other:?}"),
+    }
+    // The survivors still demux at their positions.
+    assert_eq!(match_reply(&pending, 5, KIND_REPLY).unwrap(), 0);
+    assert_eq!(match_reply(&pending, 6, KIND_REPLY).unwrap(), 1);
+}
+
+/// Interleaved out-of-order replies over the real codec: two frames
+/// written as one vectored batch, read back newest-first, each landing
+/// on the item its frame id belongs to.
+#[test]
+fn interleaved_replies_route_to_their_frames() {
+    let meta_a = pack(&Value::Int(1), 0).unwrap();
+    let meta_b = pack(&Value::Int(2), 0).unwrap();
+    let frames: [FrameOut<'_>; 2] = [
+        (102, KIND_REPLY, meta_b.as_slice(), &[] as &[u8]),
+        (101, KIND_REPLY, meta_a.as_slice(), &[] as &[u8]),
+    ];
+    let mut buf = Vec::new();
+    write_frames(&mut buf, &frames).unwrap();
+
+    let t = Instant::now();
+    let mut pending = vec![
+        InFlight { item: 0, id: 101, sent: t },
+        InFlight { item: 1, id: 102, sent: t },
+    ];
+    let mut completed = Vec::new();
+    let mut r = Cursor::new(buf);
+    while let Some((id, kind, body)) = read_frame(&mut r).unwrap() {
+        let pos = match_reply(&pending, id, kind).unwrap();
+        let f = pending.remove(pos);
+        completed.push((f.item, unpack(&body).unwrap()));
+    }
+    assert_eq!(completed, vec![(1, Value::Int(2)), (0, Value::Int(1))]);
+    assert!(pending.is_empty(), "every in-flight frame found its reply");
+}
+
+/// Eight echoes through one child with the default depth-4 window:
+/// every item completes Ok with its own output, on a single fork.
+#[test]
+fn pipelined_batch_completes_every_item_on_one_child() {
+    let _g = lock();
+    let ex = ProcessExecutor::new(exec_config());
+    ex.start_slot(10, 0).unwrap();
+    let items: Vec<BatchItem> = (0..8)
+        .map(|i| BatchItem { payload: Payload::Echo, input: pack(&Value::Int(i), 0).unwrap() })
+        .collect();
+    // `vec![None; n]` needs Clone, which `Error` deliberately lacks.
+    let mut done: Vec<Option<funcx::Result<(Buffer, f64)>>> =
+        (0..items.len()).map(|_| None).collect();
+    ex.execute_batch(10, 0, &items, &mut |i, r| done[i] = Some(r));
+    for (i, slot) in done.iter().enumerate() {
+        let result = slot.as_ref().expect("every item completes exactly once");
+        let (frame, _) = result.as_ref().expect("echo succeeds");
+        assert_eq!(unpack(frame).unwrap(), Value::Int(i as i64));
+    }
+    assert_eq!(ex.spawned(), 1, "one child served the whole window");
+    assert_eq!(ex.active_workers(), 1);
+    assert_eq!(ex.worker_faults(), 0);
+}
+
+/// Acceptance: a child crash with three frames in flight fails exactly
+/// those three tasks typed, restarts the slot in place, and the
+/// replacement serves subsequent tasks.
+#[test]
+fn crash_mid_window_fails_in_flight_typed_and_restarts_slot() {
+    let _g = lock();
+    let ex = ProcessExecutor::new(exec_config());
+    ex.start_slot(12, 0).unwrap();
+    let items = vec![
+        BatchItem { payload: Payload::Exit(7), input: Buffer::empty() },
+        BatchItem { payload: Payload::Echo, input: pack(&Value::Int(1), 0).unwrap() },
+        BatchItem { payload: Payload::Echo, input: pack(&Value::Int(2), 0).unwrap() },
+    ];
+    let mut errs: Vec<Option<funcx::Result<(Buffer, f64)>>> = (0..3).map(|_| None).collect();
+    ex.execute_batch(12, 0, &items, &mut |i, r| errs[i] = Some(r));
+    for e in &errs {
+        match e.as_ref().expect("all three in-flight frames complete") {
+            Err(Error::WorkerExited { code }) => assert_eq!(*code, 7),
+            other => panic!("expected WorkerExited(7), got {other:?}"),
+        }
+    }
+    assert_eq!(ex.worker_faults(), 1);
+    assert_eq!(ex.slot_restarts(), 1);
+    assert_eq!(ex.active_workers(), 1, "slot restarted in place");
+    let (out, _) = ex.execute_in(12, 0, &Payload::Echo, &Value::Int(3)).unwrap();
+    assert_eq!(out, Value::Int(3));
+    assert_eq!(ex.spawned(), 2, "original child + one in-place restart only");
+}
+
+/// A binary that is not a worker child (prints text, exits) fails the
+/// spawn typed — never hangs — and leaves no live worker behind.
+#[test]
+fn hostile_child_binary_fails_spawn_typed() {
+    let _g = lock();
+    let mut cfg = exec_config();
+    cfg.binary = "/bin/echo".into();
+    let ex = ProcessExecutor::new(cfg);
+    let t0 = Instant::now();
+    match ex.start_slot(13, 0) {
+        Err(Error::WorkerExited { .. }) => {}
+        other => panic!("expected typed WorkerExited, got {other:?}"),
+    }
+    assert!(t0.elapsed() < Duration::from_secs(10), "hostile child must fail fast");
+    assert_eq!(ex.active_workers(), 0);
+    // The lazy-spawn path types the same failure instead of hanging.
+    match ex.execute_in(13, 0, &Payload::Echo, &Value::Int(1)) {
+        Err(Error::WorkerExited { .. }) => {}
+        other => panic!("expected typed WorkerExited, got {other:?}"),
+    }
+}
+
+/// Lazily spawned children report their measured start cost through
+/// `drain_start_costs` instead of discarding it.
+#[test]
+fn lazy_spawn_costs_are_drained_not_discarded() {
+    let _g = lock();
+    let ex = ProcessExecutor::new(exec_config());
+    let (out, _) = ex.execute_in(14, 0, &Payload::Echo, &Value::Int(9)).unwrap();
+    assert_eq!(out, Value::Int(9));
+    let costs = ex.drain_start_costs(14);
+    assert_eq!(costs.len(), 1, "one lazy spawn parks one measured cost");
+    assert!(costs[0] > 0.0);
+    assert!(ex.drain_start_costs(14).is_empty(), "drain consumes");
+    // start_slot costs are returned directly to the caller, not parked.
+    ex.start_slot(14, 1).unwrap();
+    assert!(ex.drain_start_costs(14).is_empty());
+}
+
 fn process_ctx(
     results: std::sync::mpsc::Sender<Vec<TaskResult>>,
     recorder: Arc<FlightRecorder>,
@@ -171,6 +358,7 @@ fn process_ctx(
         recorder,
         start_model: TABLE3_MODELS.lookup(SystemProfile::Local, ContainerTech::None),
         cold_start_scale: 0.001,
+        pipeline_depth: EndpointConfig::default().worker_pipeline_depth,
     };
     (ctx, ex)
 }
@@ -268,5 +456,73 @@ fn crashing_task_closes_trace_with_typed_terminal() {
             other => panic!("terminal must be TaskFailed, got {other:?}"),
         }
     }
+    m.shutdown();
+}
+
+/// Acceptance, manager level: a crash with three frames in flight fails
+/// exactly the in-flight tasks typed, closes all three flight-recorder
+/// traces, and the restarted slot serves subsequent tasks.
+#[test]
+fn manager_crash_with_three_in_flight_closes_traces_and_recovers() {
+    let _g = lock();
+    let recorder = Arc::new(FlightRecorder::default());
+    let (tx, rx) = channel();
+    let (ctx, ex) = process_ctx(tx, recorder.clone());
+    let m = Manager::spawn(1, 600.0, ctx, 23);
+
+    let mut ids = Vec::new();
+    let batch: Vec<Arc<Task>> = [Payload::Exit(7), Payload::Echo, Payload::Echo]
+        .into_iter()
+        .map(|p| {
+            let input = if p == Payload::Echo {
+                pack(&Value::Int(1), 0).unwrap()
+            } else {
+                Buffer::empty()
+            };
+            let mut t = mk_task(p, input);
+            t.trace = Some(recorder.mint(t.id));
+            ids.push(t.id);
+            Arc::new(t)
+        })
+        .collect();
+    m.enqueue(batch);
+
+    let mut results = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while results.len() < 3 && Instant::now() < deadline {
+        if let Ok(b) = rx.recv_timeout(Duration::from_millis(100)) {
+            results.extend(b);
+        }
+    }
+    assert_eq!(results.len(), 3, "every in-flight task produces a result");
+    for r in &results {
+        assert_eq!(r.state, TaskState::Failed);
+        let msg = unpack(&r.output).unwrap();
+        assert!(
+            msg.as_str().unwrap_or("").contains("exited with status 7"),
+            "failure carries the child's typed status: {msg:?}"
+        );
+    }
+    for id in &ids {
+        let trace = recorder.assemble(*id).expect("trace assembles");
+        match &trace.terminal().expect("in-flight task's trace must close").kind {
+            TraceKind::TaskFailed { error } => {
+                assert_eq!(*error, "WorkerExited", "typed terminal\n{}", trace.render())
+            }
+            other => panic!("terminal must be TaskFailed, got {other:?}"),
+        }
+    }
+    assert_eq!(ex.slot_restarts(), 1);
+
+    // The restarted slot keeps serving.
+    let task = mk_task(Payload::Echo, pack(&Value::Int(5), 0).unwrap());
+    m.enqueue(vec![Arc::new(task)]);
+    let r = rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("post-crash task completes")
+        .pop()
+        .unwrap();
+    assert_eq!(r.state, TaskState::Success);
+    assert_eq!(ex.spawned(), 2, "original child + one in-place restart only");
     m.shutdown();
 }

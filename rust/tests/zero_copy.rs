@@ -163,6 +163,7 @@ fn dispatch_forwarder_link_manager_is_zero_copy() {
         recorder: funcx::metrics::FlightRecorder::disabled(),
         start_model: TABLE3_MODELS.lookup(SystemProfile::Local, ContainerTech::None),
         cold_start_scale: 0.001,
+        pipeline_depth: 1,
     };
     let m = Manager::spawn(1, 600.0, ctx, 1);
     m.enqueue(vec![received]);
